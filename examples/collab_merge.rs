@@ -1,0 +1,75 @@
+//! Collaboration: two users edit one model concurrently; MGit's `merge`
+//! primitive (Figure 2) classifies the combination.
+//!
+//! * Alice finetunes only the classification head (frozen backbone);
+//! * Bob BitFit-tunes the bias/LN vectors of the backbone;
+//! * a third user edits the same head as Alice → hard conflict.
+//!
+//! Run: `cargo run --release --example collab_merge`
+
+use std::path::Path;
+
+use mgit::checkpoint::Checkpoint;
+use mgit::merge::{merge, MergeOutcome};
+use mgit::modeldag::ModelDag;
+use mgit::registry::{CreationSpec, FreezeSpec, Objective};
+use mgit::runtime::Runtime;
+use mgit::train::Trainer;
+use mgit::update::CreationExecutor;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new(Path::new("artifacts"))?;
+    let arch = "tx-tiny";
+    let spec = rt.zoo().arch(arch)?;
+    let dag = ModelDag::from_arch(spec, None)?;
+    let mut trainer = Trainer::new(&rt);
+
+    // Shared starting point.
+    let base = trainer.execute(
+        &CreationSpec::Pretrain { corpus_seed: 9, steps: 30, lr: 0.02 },
+        arch,
+        &[Checkpoint::init(spec, 9)],
+    )?;
+
+    let finetune = |task: &str, freeze: FreezeSpec, seed: u64| CreationSpec::Finetune {
+        task: task.into(),
+        objective: Objective::Cls,
+        steps: 25,
+        lr: 0.02,
+        seed,
+        freeze,
+        perturb: None,
+    };
+
+    // Alice: heads only. Bob: biases only (BitFit). Carol: heads again.
+    let alice = trainer.execute(&finetune("task1", FreezeSpec::Backbone, 1), arch, &[base.clone()])?;
+    let bob = trainer.execute(&finetune("task2", FreezeSpec::BiasOnly, 2), arch, &[base.clone()])?;
+    let carol = trainer.execute(&finetune("task3", FreezeSpec::Backbone, 3), arch, &[base.clone()])?;
+
+    // Alice + Bob: disjoint layers, but biases feed the heads → the
+    // decision tree lands on "possible conflict" and asks for tests.
+    let out = merge(spec, &dag, &base, &alice, &bob)?;
+    println!("alice + bob   -> {}", out.verdict());
+    if let MergeOutcome::PossibleConflict { merged, dependent_pairs } = &out {
+        println!("  dependent pairs (first 3): {:?}", &dependent_pairs[..dependent_pairs.len().min(3)]);
+        // Verify with tests: merged model must still do both tasks.
+        for task in ["task1", "task2"] {
+            let (_, acc) = rt.eval_many(arch, Objective::Cls, &merged.flat, task, 0, 2)?;
+            let (_, base_acc) = rt.eval_many(arch, Objective::Cls, &base.flat, task, 0, 2)?;
+            println!("  merged accuracy on {task}: {acc:.3} (base was {base_acc:.3})");
+        }
+    }
+
+    // Alice + Carol: both touched the classification head → conflict.
+    let out = merge(spec, &dag, &base, &alice, &carol)?;
+    println!("alice + carol -> {}", out.verdict());
+    if let MergeOutcome::Conflict { overlapping } = &out {
+        println!("  overlapping layers: {overlapping:?}");
+        println!("  manual resolution required (as in a git merge conflict)");
+    }
+
+    // Alice + base (no second edit): trivially clean.
+    let out = merge(spec, &dag, &base, &alice, &base)?;
+    println!("alice + noop  -> {}", out.verdict());
+    Ok(())
+}

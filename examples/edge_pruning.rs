@@ -1,0 +1,92 @@
+//! G4: specialization to edge devices via progressive magnitude pruning.
+//!
+//! For three architectures (the ResNet/DenseNet/MobileNet analogs of the
+//! zoo), trains a dense task model, prunes it to increasing sparsities
+//! with recovery finetuning (the paper's two-step G4 process), stores the
+//! chain with sparsity-preserving pre-quantized deltas, and verifies the
+//! sparsity invariant through a registered test.
+//!
+//! Run: `cargo run --release --example edge_pruning [small]`
+
+use std::path::Path;
+
+use mgit::delta::{Codec, CompressConfig};
+use mgit::registry::{run_test, Objective, TestSpec};
+use mgit::runtime::Runtime;
+use mgit::store::Store;
+use mgit::util::human_bytes;
+use mgit::workloads::{self, PersistMode, Scale};
+
+fn main() -> anyhow::Result<()> {
+    let small = std::env::args().any(|a| a == "small");
+    let mut scale = if small { Scale::small() } else { Scale::paper() };
+    if small {
+        scale.sparsities = vec![0.5, 0.8];
+    }
+    let rt = Runtime::new(Path::new("artifacts"))?;
+    let zoo = rt.zoo().clone();
+
+    let mut wl = workloads::build_g4(&rt, &scale)?;
+    println!("built G4: {} nodes", wl.graph.len());
+
+    // Report accuracy + sparsity along each pruning chain.
+    println!("\n{:<28} {:>9} {:>9}", "model", "sparsity", "accuracy");
+    for node in &wl.graph.nodes {
+        let ck = wl.ck(&node.name)?;
+        let task = node
+            .creation
+            .as_ref()
+            .and_then(|c| match c {
+                mgit::registry::CreationSpec::Finetune { task, .. }
+                | mgit::registry::CreationSpec::Prune { task, .. } => Some(task.clone()),
+                _ => None,
+            })
+            .unwrap_or_else(|| "task1".into());
+        let (_, acc) = rt.eval_many(&ck.arch, Objective::Cls, &ck.flat, &task, 0, 2)?;
+        println!("{:<28} {:>8.1}% {:>9.3}", node.name, ck.sparsity() * 100.0, acc);
+    }
+
+    // Persist with the G4 config: pre-quantized deltas preserve sparsity.
+    let store = Store::in_memory();
+    let cfg = CompressConfig { eps: 1e-4, codec: Codec::Deflate, prequantize: true };
+    let report = workloads::persist(
+        &mut wl,
+        &store,
+        &zoo,
+        &rt,
+        PersistMode::Delta(cfg),
+        |_, _| Ok(true),
+    )?;
+    println!(
+        "\nstored {} models: {} -> {} ({:.2}x)",
+        report.n_models,
+        human_bytes(report.raw_bytes),
+        human_bytes(report.stored_bytes),
+        report.ratio()
+    );
+
+    // Verify sparsity survives the storage round-trip (paper's G4 check).
+    for node in &wl.graph.nodes {
+        if !node.name.contains("sparse") {
+            continue;
+        }
+        let sm = node.stored.as_ref().unwrap();
+        let loaded = mgit::delta::load(&store, &zoo, sm, &rt)?;
+        let want = wl.ck(&node.name)?.sparsity();
+        let got = loaded.sparsity();
+        let (pass, metric) = run_test(
+            &TestSpec::SparsityAtLeast { min: want - 1e-6 },
+            &loaded,
+            &rt,
+        )?;
+        println!(
+            "sparsity roundtrip {:<26} built {:.3} loaded {:.3} -> {}",
+            node.name,
+            want,
+            metric.max(got),
+            if pass { "PRESERVED" } else { "LOST" }
+        );
+        assert!(pass, "sparsity lost for {}", node.name);
+    }
+    Ok(())
+}

@@ -1,0 +1,116 @@
+//! Quickstart: the MGit lifecycle in one file.
+//!
+//! Creates a repository, trains a small MLM base model and a finetuned
+//! child through the AOT-compiled runtime, registers both in the lineage
+//! graph, diffs them, delta-compresses the child against the parent, and
+//! registers + runs a test — everything a downstream user touches first.
+//!
+//! Run: `cargo run --release --example quickstart` (needs `make artifacts`)
+
+use std::path::Path;
+
+use mgit::checkpoint::Checkpoint;
+use mgit::cli::Repo;
+use mgit::delta::{self, CompressConfig};
+use mgit::diff::divergence_scores;
+use mgit::modeldag::ModelDag;
+use mgit::registry::{CreationSpec, FreezeSpec, Objective, TestScope, TestSpec};
+use mgit::runtime::Runtime;
+use mgit::train::Trainer;
+use mgit::update::CreationExecutor;
+use mgit::util::human_bytes;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new(Path::new("artifacts"))?;
+    let zoo = rt.zoo();
+    let dir = std::env::temp_dir().join("mgit-quickstart");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir)?;
+    let mut repo = Repo::init(&dir)?;
+    println!("== initialized repo at {}", dir.display());
+
+    // 1. Train a base model (MLM pretraining) and register it.
+    let arch = "tx-tiny";
+    let spec = zoo.arch(arch)?;
+    let mut trainer = Trainer::new(&rt);
+    let base_cr = CreationSpec::Pretrain { corpus_seed: 1, steps: 40, lr: 0.02 };
+    let base_ck = trainer.execute(&base_cr, arch, &[Checkpoint::init(spec, 1)])?;
+    let (base_sm, _) = delta::store_raw(&repo.store, spec, &base_ck)?;
+    let base = repo.graph.add_node("base", arch)?;
+    repo.graph.node_mut(base).stored = Some(base_sm.clone());
+    repo.graph.register_creation_function(base, base_cr)?;
+    println!("== trained + registered `base` ({} params)", spec.param_count);
+
+    // 2. Finetune a child on a classification task.
+    let child_cr = CreationSpec::Finetune {
+        task: "task4".into(),
+        objective: Objective::Cls,
+        steps: 200,
+        lr: 0.02,
+        seed: 2,
+        freeze: FreezeSpec::None,
+        perturb: None,
+    };
+    let child_ck = trainer.execute(&child_cr, arch, &[base_ck.clone()])?;
+    let child = repo.graph.add_node("task4-model", arch)?;
+    repo.graph.register_creation_function(child, child_cr)?;
+    repo.graph.add_edge(base, child)?;
+
+    // 3. Diff parent vs child.
+    let parent_dag = ModelDag::from_arch(spec, Some(&base_sm))?;
+
+    // 4. Delta-compress the child against the parent (Algorithm 1) —
+    //    accepted only if it saves space AND accuracy survives.
+    let (child_sm, stored_ck, report, accepted) = delta::delta_compress_checked(
+        &repo.store,
+        spec,
+        &child_ck,
+        spec,
+        &base_ck,
+        &base_sm,
+        CompressConfig::default(),
+        &rt,
+        |rec| {
+            let (_, acc_rec) = rt.eval_many(arch, Objective::Cls, &rec.flat, "task4", 0, 2)?;
+            let (_, acc_org) =
+                rt.eval_many(arch, Objective::Cls, &child_ck.flat, "task4", 0, 2)?;
+            Ok(acc_org - acc_rec <= 0.01)
+        },
+    )?;
+    repo.graph.node_mut(child).stored = Some(child_sm.clone());
+    println!(
+        "== delta compression {}: {} raw -> {} stored ({:.2}x), max |err| {:.2e}",
+        if accepted { "ACCEPTED" } else { "rejected" },
+        human_bytes(report.raw_bytes),
+        human_bytes(report.stored_bytes),
+        report.raw_bytes as f64 / report.stored_bytes.max(1) as f64,
+        report.max_abs_err,
+    );
+    let child_dag = ModelDag::from_arch(spec, Some(&child_sm))?;
+    let (ds, dc) = divergence_scores(&parent_dag, &child_dag);
+    println!("== diff(base, task4-model): structural {ds:.3}, contextual {dc:.3}");
+
+    // 5. Register a test + run it over the graph.
+    repo.graph.tests.register(
+        "acc/task4",
+        TestScope::Node("task4-model".into()),
+        TestSpec::EvalAccuracy {
+            task: "task4".into(),
+            objective: Objective::Cls,
+            batches: 3,
+            split_seed: 0,
+            min_acc: 0.5,
+        },
+    )?;
+    let (pass, metric) = mgit::registry::run_test(
+        &repo.graph.tests.tests[0].spec,
+        &stored_ck,
+        &rt,
+    )?;
+    println!("== test acc/task4: {} (accuracy {metric:.3})", if pass { "PASS" } else { "FAIL" });
+
+    repo.save()?;
+    println!("== saved lineage graph to {}", Repo::graph_path(&dir).display());
+    println!("try: target/release/mgit log --dir {}", dir.display());
+    Ok(())
+}

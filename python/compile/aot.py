@@ -1,0 +1,105 @@
+"""AOT compile path: lower every (arch × objective × step) + delta kernels
+to HLO **text** artifacts, and write the manifest the Rust runtime loads.
+
+HLO text — not ``lowered.compile().serialize()`` and not the serialized
+HloModuleProto — is the interchange format: jax >= 0.5 emits protos with
+64-bit instruction ids that the pinned xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Run once via ``make artifacts``; Python never appears on the request path.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import archs as A
+from . import model as M
+from . import kernels
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _write(out_dir: str, fname: str, text: str) -> None:
+    path = os.path.join(out_dir, fname)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {fname} ({len(text) / 1e6:.2f} MB)", flush=True)
+
+
+def lower_arch(arch: A.Arch, out_dir: str) -> None:
+    n = arch.param_count()
+    b, t = A.BATCH, arch.max_seq
+    flat = jax.ShapeDtypeStruct((n,), jnp.float32)
+    tokens = jax.ShapeDtypeStruct((b, t), jnp.int32)
+    mlm_labels = jax.ShapeDtypeStruct((b, t), jnp.int32)
+    cls_labels = jax.ShapeDtypeStruct((b,), jnp.int32)
+    lr = jax.ShapeDtypeStruct((), jnp.float32)
+
+    for obj, labels in (("mlm", mlm_labels), ("cls", cls_labels)):
+        train = M.make_train_step(arch, obj)
+        # donate_argnums lets XLA alias the params/momentum buffers so the
+        # training loop updates in place instead of copying N floats/step.
+        lowered = jax.jit(train, donate_argnums=(0, 1)).lower(
+            flat, flat, tokens, labels, lr
+        )
+        _write(out_dir, f"{arch.name}_{obj}_train.hlo.txt", to_hlo_text(lowered))
+
+        ev = M.make_eval_step(arch, obj)
+        lowered = jax.jit(ev).lower(flat, tokens, labels)
+        _write(out_dir, f"{arch.name}_{obj}_eval.hlo.txt", to_hlo_text(lowered))
+
+
+def lower_delta_kernels(out_dir: str) -> None:
+    c = A.DELTA_CHUNK
+    fa = jax.ShapeDtypeStruct((c,), jnp.float32)
+    qi = jax.ShapeDtypeStruct((c,), jnp.int32)
+    eps = jax.ShapeDtypeStruct((1,), jnp.float32)
+
+    lowered = jax.jit(lambda a, b, e: kernels.delta_quant(a, b, e)).lower(
+        fa, fa, eps
+    )
+    _write(out_dir, f"delta_quant_c{c}.hlo.txt", to_hlo_text(lowered))
+
+    lowered = jax.jit(lambda a, q, e: kernels.delta_dequant(a, q, e)).lower(
+        fa, qi, eps
+    )
+    _write(out_dir, f"delta_dequant_c{c}.hlo.txt", to_hlo_text(lowered))
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts", help="output directory")
+    p.add_argument(
+        "--arch", default=None, help="only lower one architecture (debugging)"
+    )
+    args = p.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    names = [args.arch] if args.arch else list(A.ARCHS)
+    for name in names:
+        arch = A.ARCHS[name]
+        print(f"lowering {name} ({arch.param_count():,} params)", flush=True)
+        lower_arch(arch, args.out)
+    print("lowering delta kernels", flush=True)
+    lower_delta_kernels(args.out)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(A.manifest(), f, indent=1)
+    print("wrote manifest.json", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,246 @@
+"""Architecture descriptors for the MGit transformer zoo.
+
+This file is the single source of truth for:
+  * the model family's hyperparameters (the BERT/RoBERTa/... analog zoo),
+  * the *flat parameter layout* — the ordered list of named tensors that is
+    packed into one f32 vector, which is the ABI between the AOT-compiled
+    HLO artifacts and the Rust runtime,
+  * the layer DAG used by MGit's structural `diff` (Algorithm 3).
+
+Everything here is mirrored into `artifacts/manifest.json` by `aot.py`; the
+Rust side never re-derives layouts on its own.
+"""
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+VOCAB = 256          # token ids 0..253 data, 254 = CLS, 255 = MASK
+MAX_SEQ = 32         # fixed sequence length (synthetic data is unpadded)
+NUM_CLASSES = 4      # classification head width shared by all tasks
+BATCH = 32           # fixed train/eval batch size
+DELTA_CHUNK = 65536  # element count per delta_quant/dequant kernel call
+
+
+@dataclass(frozen=True)
+class Arch:
+    """A transformer-encoder architecture in the zoo."""
+
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    vocab: int = VOCAB
+    max_seq: int = MAX_SEQ
+    n_classes: int = NUM_CLASSES
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    # ------------------------------------------------------------------
+    # Flat parameter layout
+    # ------------------------------------------------------------------
+    def param_spec(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        """Ordered (name, shape) list defining the flat f32 vector layout.
+
+        Both heads (MLM and classification) are always present so that a
+        fine-tuned child shares its parent's layout exactly — this is what
+        makes LCS delta matching between parent and child trivial for
+        same-arch pairs and keeps a single ABI per architecture.
+        """
+        d, ff = self.d_model, self.d_ff
+        spec: List[Tuple[str, Tuple[int, ...]]] = [
+            ("embed.tok", (self.vocab, d)),
+            ("embed.pos", (self.max_seq, d)),
+        ]
+        for i in range(self.n_layers):
+            p = f"block{i}."
+            spec += [
+                (p + "ln1.g", (d,)),
+                (p + "ln1.b", (d,)),
+                (p + "attn.wq", (d, d)),
+                (p + "attn.bq", (d,)),
+                (p + "attn.wk", (d, d)),
+                (p + "attn.bk", (d,)),
+                (p + "attn.wv", (d, d)),
+                (p + "attn.bv", (d,)),
+                (p + "attn.wo", (d, d)),
+                (p + "attn.bo", (d,)),
+                (p + "ln2.g", (d,)),
+                (p + "ln2.b", (d,)),
+                (p + "ff.w1", (d, ff)),
+                (p + "ff.b1", (ff,)),
+                (p + "ff.w2", (ff, d)),
+                (p + "ff.b2", (d,)),
+            ]
+        spec += [
+            ("final_ln.g", (d,)),
+            ("final_ln.b", (d,)),
+            ("mlm_head.w", (d, self.vocab)),
+            ("mlm_head.b", (self.vocab,)),
+            ("cls_head.w", (d, self.n_classes)),
+            ("cls_head.b", (self.n_classes,)),
+        ]
+        return spec
+
+    def param_count(self) -> int:
+        total = 0
+        for _, shape in self.param_spec():
+            n = 1
+            for s in shape:
+                n *= s
+            total += n
+        return total
+
+    def layout(self) -> List[Dict]:
+        """Manifest entries: name, shape, offset, size, init kind.
+
+        The init kind tells the Rust side how to initialize fresh models
+        (it never calls back into Python): 'normal' = N(0, 0.02²),
+        'ones' = layernorm gains, 'zeros' = biases / layernorm shifts.
+        """
+        out, off = [], 0
+        for name, shape in self.param_spec():
+            n = 1
+            for s in shape:
+                n *= s
+            if name.endswith(".g"):
+                init = "ones"
+            elif name.endswith((".b", ".bq", ".bk", ".bv", ".bo", ".b1", ".b2")):
+                init = "zeros"
+            else:
+                init = "normal"
+            out.append(
+                {
+                    "name": name,
+                    "shape": list(shape),
+                    "offset": off,
+                    "size": n,
+                    "init": init,
+                }
+            )
+            off += n
+        return out
+
+    # ------------------------------------------------------------------
+    # Layer DAG (for MGit's structural diff)
+    # ------------------------------------------------------------------
+    def layer_dag(self) -> Dict:
+        """Explicit dataflow DAG over *layers* (not tensors).
+
+        Node attrs: id, op type, attribute string (shape signature), list of
+        parameter tensor names owned by the layer. Edges are dataflow.
+        This substitutes for the paper's torch.fx capture.
+        """
+        nodes: List[Dict] = []
+        edges: List[List[str]] = []
+
+        def node(nid: str, op: str, attrs: str, params: List[str]):
+            nodes.append({"id": nid, "op": op, "attrs": attrs, "params": params})
+
+        d, ff = self.d_model, self.d_ff
+        node("embed.tok", "embedding", f"{self.vocab}x{d}", ["embed.tok"])
+        node("embed.pos", "pos_embedding", f"{self.max_seq}x{d}", ["embed.pos"])
+        node("embed.add", "add", f"{d}", [])
+        edges += [["embed.tok", "embed.add"], ["embed.pos", "embed.add"]]
+        prev = "embed.add"
+        for i in range(self.n_layers):
+            p = f"block{i}."
+            node(p + "ln1", "layernorm", f"{d}", [p + "ln1.g", p + "ln1.b"])
+            node(
+                p + "attn",
+                "attention",
+                f"h{self.n_heads}x{self.d_head}",
+                [
+                    p + "attn.wq", p + "attn.bq", p + "attn.wk", p + "attn.bk",
+                    p + "attn.wv", p + "attn.bv", p + "attn.wo", p + "attn.bo",
+                ],
+            )
+            node(p + "add1", "add", f"{d}", [])
+            node(p + "ln2", "layernorm", f"{d}", [p + "ln2.g", p + "ln2.b"])
+            node(p + "ff1", "linear", f"{d}x{ff}", [p + "ff.w1", p + "ff.b1"])
+            node(p + "gelu", "gelu", f"{ff}", [])
+            node(p + "ff2", "linear", f"{ff}x{d}", [p + "ff.w2", p + "ff.b2"])
+            node(p + "add2", "add", f"{d}", [])
+            edges += [
+                [prev, p + "ln1"],
+                [p + "ln1", p + "attn"],
+                [p + "attn", p + "add1"],
+                [prev, p + "add1"],
+                [p + "add1", p + "ln2"],
+                [p + "ln2", p + "ff1"],
+                [p + "ff1", p + "gelu"],
+                [p + "gelu", p + "ff2"],
+                [p + "ff2", p + "add2"],
+                [p + "add1", p + "add2"],
+            ]
+            prev = p + "add2"
+        node("final_ln", "layernorm", f"{d}", ["final_ln.g", "final_ln.b"])
+        edges.append([prev, "final_ln"])
+        node("mlm_head", "linear", f"{d}x{self.vocab}", ["mlm_head.w", "mlm_head.b"])
+        node("cls_pool", "mean_pool", f"{d}", [])
+        node("cls_head", "linear", f"{d}x{self.n_classes}",
+             ["cls_head.w", "cls_head.b"])
+        edges += [
+            ["final_ln", "mlm_head"],
+            ["final_ln", "cls_pool"],
+            ["cls_pool", "cls_head"],
+        ]
+        return {"nodes": nodes, "edges": edges}
+
+
+# The zoo. tx-tiny / tx-small / tx-base stand in for the small / base /
+# large model families of the paper's G1 (see DESIGN.md §2 substitutions).
+ARCHS: Dict[str, Arch] = {
+    a.name: a
+    for a in [
+        Arch("tx-tiny", d_model=64, n_layers=2, n_heads=2, d_ff=128),
+        Arch("tx-small", d_model=96, n_layers=4, n_heads=3, d_ff=192),
+        Arch("tx-base", d_model=192, n_layers=6, n_heads=6, d_ff=384),
+    ]
+}
+
+
+def manifest() -> Dict:
+    """The full manifest mirrored to artifacts/manifest.json."""
+    return {
+        "abi_version": 1,
+        "vocab": VOCAB,
+        "max_seq": MAX_SEQ,
+        "n_classes": NUM_CLASSES,
+        "batch": BATCH,
+        "delta_chunk": DELTA_CHUNK,
+        "special_tokens": {"cls": 254, "mask": 255, "ignore_label": -100},
+        "archs": {
+            name: {
+                "d_model": a.d_model,
+                "n_layers": a.n_layers,
+                "n_heads": a.n_heads,
+                "d_ff": a.d_ff,
+                "param_count": a.param_count(),
+                "layout": a.layout(),
+                "dag": a.layer_dag(),
+            }
+            for name, a in ARCHS.items()
+        },
+        "artifacts": {
+            name: {
+                "mlm_train": f"{name}_mlm_train.hlo.txt",
+                "mlm_eval": f"{name}_mlm_eval.hlo.txt",
+                "cls_train": f"{name}_cls_train.hlo.txt",
+                "cls_eval": f"{name}_cls_eval.hlo.txt",
+            }
+            for name in ARCHS
+        },
+        "delta_kernels": {
+            "quant": f"delta_quant_c{DELTA_CHUNK}.hlo.txt",
+            "dequant": f"delta_dequant_c{DELTA_CHUNK}.hlo.txt",
+        },
+    }
+
+
+if __name__ == "__main__":
+    for name, a in ARCHS.items():
+        print(f"{name}: {a.param_count():,} params")

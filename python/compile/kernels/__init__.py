@@ -1,0 +1,7 @@
+"""L1 Pallas kernels: MGit's compute hot-spots (see DESIGN.md §1)."""
+
+from .attention import attention
+from .delta import delta_dequant, delta_quant
+from .layernorm import layernorm
+
+__all__ = ["attention", "delta_quant", "delta_dequant", "layernorm"]

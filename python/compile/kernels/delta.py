@@ -1,0 +1,96 @@
+"""Pallas kernels for MGit's delta quantization (Algorithm 1 hot-spot).
+
+The storage path computes, for every pair of matched parameter tensors
+(p_parent, p_child), the error-bounded quantized delta
+
+    q = floor((p_parent - p_child) / (2 * ln(1 + eps)) + 0.5)        (i32)
+
+and its inverse
+
+    p_child' = p_parent - q * (2 * ln(1 + eps))
+
+These are bandwidth-bound elementwise kernels over flat f32 vectors. They
+are tiled with a 1-D grid so each block (BLOCK elements, 256 KiB per f32
+operand at the default) fits comfortably in TPU VMEM; on CPU they run via
+``interpret=True`` (Mosaic custom-calls are not executable on the CPU PJRT
+plugin — see DESIGN.md §Hardware-Adaptation).
+
+The quantizer guarantees |delta - dequant(quant(delta))| <= ln(1+eps),
+which is what MGit's accept/reject accuracy check relies on.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 8192
+
+
+def _quant_kernel(eps_ref, a_ref, b_ref, q_ref):
+    step = 2.0 * jnp.log1p(eps_ref[0])
+    d = (a_ref[...] - b_ref[...]) / step
+    q_ref[...] = jnp.floor(d + 0.5).astype(jnp.int32)
+
+
+def _dequant_kernel(eps_ref, a_ref, q_ref, b_ref):
+    step = 2.0 * jnp.log1p(eps_ref[0])
+    b_ref[...] = a_ref[...] - q_ref[...].astype(jnp.float32) * step
+
+
+def _pick_block(n: int, block: int) -> int:
+    """Largest power-of-two block <= ``block`` that divides ``n``.
+
+    Falls back to n itself for small/odd sizes so arbitrary test shapes work.
+    """
+    b = min(block, n)
+    while b > 1 and n % b != 0:
+        b //= 2
+    return max(b, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def delta_quant(a, b, eps, block: int = DEFAULT_BLOCK):
+    """Quantize the delta ``a - b`` into i32 steps of ``2*ln(1+eps)``.
+
+    a, b: f32[N] (same shape); eps: f32[1]. Returns i32[N].
+    """
+    (n,) = a.shape
+    blk = _pick_block(n, block)
+    grid = (n // blk,)
+    return pl.pallas_call(
+        _quant_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=True,
+    )(eps, a, b)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def delta_dequant(a, q, eps, block: int = DEFAULT_BLOCK):
+    """Reconstruct ``b' = a - q * 2*ln(1+eps)`` from the quantized delta.
+
+    a: f32[N]; q: i32[N]; eps: f32[1]. Returns f32[N].
+    """
+    (n,) = a.shape
+    blk = _pick_block(n, block)
+    grid = (n // blk,)
+    return pl.pallas_call(
+        _dequant_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(eps, a, q)

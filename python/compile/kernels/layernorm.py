@@ -1,0 +1,93 @@
+"""Fused LayerNorm as a Pallas kernel.
+
+Forward and the input-gradient backward are Pallas kernels gridded over the
+batch dimension (one (T, D) tile per cell — a few KiB, VMEM-resident).
+The tiny parameter gradients (dg, db: reductions over B*T rows) are plain
+jnp reductions; they are O(D) outputs and not a hot-spot.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EPS = 1e-5
+
+
+def _fwd_kernel(x_ref, g_ref, b_ref, y_ref):
+    x = x_ref[0]                                   # (T, D)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    xhat = (x - mu) * jax.lax.rsqrt(var + EPS)
+    y_ref[0] = xhat * g_ref[...] + b_ref[...]
+
+
+def _bwd_dx_kernel(x_ref, g_ref, dy_ref, dx_ref):
+    x = x_ref[0]
+    dy = dy_ref[0]
+    g = g_ref[...]
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    rstd = jax.lax.rsqrt(var + EPS)
+    xhat = (x - mu) * rstd
+    dyg = dy * g
+    m1 = jnp.mean(dyg, axis=-1, keepdims=True)
+    m2 = jnp.mean(dyg * xhat, axis=-1, keepdims=True)
+    dx_ref[0] = (dyg - m1 - xhat * m2) * rstd
+
+
+def _x_spec(t, d):
+    return pl.BlockSpec((1, t, d), lambda i: (i, 0, 0))
+
+
+def _p_spec(d):
+    return pl.BlockSpec((d,), lambda i: (0,))
+
+
+def _layernorm_fwd_impl(x, g, b):
+    bs, t, d = x.shape
+    return pl.pallas_call(
+        _fwd_kernel,
+        grid=(bs,),
+        in_specs=[_x_spec(t, d), _p_spec(d), _p_spec(d)],
+        out_specs=_x_spec(t, d),
+        out_shape=jax.ShapeDtypeStruct((bs, t, d), x.dtype),
+        interpret=True,
+    )(x, g, b)
+
+
+def _layernorm_bwd_dx(x, g, dy):
+    bs, t, d = x.shape
+    return pl.pallas_call(
+        _bwd_dx_kernel,
+        grid=(bs,),
+        in_specs=[_x_spec(t, d), _p_spec(d), _x_spec(t, d)],
+        out_specs=_x_spec(t, d),
+        out_shape=jax.ShapeDtypeStruct((bs, t, d), x.dtype),
+        interpret=True,
+    )(x, g, dy)
+
+
+@jax.custom_vjp
+def layernorm(x, g, b):
+    """LayerNorm over the last dim of x:(B,T,D) with affine (g, b):(D,)."""
+    return _layernorm_fwd_impl(x, g, b)
+
+
+def _fwd(x, g, b):
+    return _layernorm_fwd_impl(x, g, b), (x, g)
+
+
+def _bwd(res, dy):
+    x, g = res
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    xhat = (x - mu) * jax.lax.rsqrt(var + EPS)
+    dg = jnp.sum(dy * xhat, axis=(0, 1))
+    db = jnp.sum(dy, axis=(0, 1))
+    dx = _layernorm_bwd_dx(x, g, dy)
+    return dx, dg, db
+
+
+layernorm.defvjp(_fwd, _bwd)

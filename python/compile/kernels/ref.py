@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+The pytest suite (python/tests/) asserts `assert_allclose` between each
+kernel and its oracle across hypothesis-driven shape/value sweeps, and the
+L2 model can be built entirely on these references (``use_pallas=False``)
+to cross-check the whole network.
+"""
+
+import jax
+import jax.numpy as jnp
+
+LN_EPS = 1e-5
+
+
+def delta_quant_ref(a, b, eps):
+    step = 2.0 * jnp.log1p(eps[0])
+    return jnp.floor((a - b) / step + 0.5).astype(jnp.int32)
+
+
+def delta_dequant_ref(a, q, eps):
+    step = 2.0 * jnp.log1p(eps[0])
+    return a - q.astype(jnp.float32) * step
+
+
+def attention_ref(q, k, v):
+    dh = q.shape[-1]
+    s = jnp.einsum("bhtd,bhsd->bhts", q, k) / jnp.sqrt(jnp.float32(dh))
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhts,bhsd->bhtd", p, v)
+
+
+def layernorm_ref(x, g, b):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    xhat = (x - mu) * jax.lax.rsqrt(var + LN_EPS)
+    return xhat * g + b

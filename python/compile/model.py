@@ -1,0 +1,183 @@
+"""L2: the transformer-encoder family (fwd/bwd) over a flat parameter vector.
+
+This is the JAX compute graph that MGit's creation functions (finetune,
+MLM pretrain, FL local steps, MTL, prune-recovery) and test functions
+(accuracy evaluation) execute. It calls the L1 Pallas kernels
+(attention, layernorm) so they lower into the same HLO artifact.
+
+ABI (all artifacts; see aot.py):
+    <arch>_mlm_train : (params f32[N], mom f32[N], tokens i32[B,T],
+                        labels i32[B,T], lr f32[])
+                       -> (params' f32[N], mom' f32[N], loss f32[])
+    <arch>_cls_train : same but labels i32[B]
+    <arch>_mlm_eval  : (params, tokens, labels[B,T]) -> (loss, acc)
+    <arch>_cls_eval  : (params, tokens, labels[B])   -> (loss, acc)
+
+The flat vector layout is defined by ``archs.Arch.param_spec`` and is the
+same for MLM and CLS objectives (both heads always present), so parent and
+child models in a lineage share layouts exactly. MLM labels use -100 as
+the ignore marker (only masked positions contribute to loss/accuracy).
+
+Optimizer: SGD with momentum 0.9 (stateless apart from the caller-held
+momentum vector, which keeps the ABI to plain arrays).
+"""
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+from .archs import Arch
+from .kernels import ref
+
+MOMENTUM = 0.9
+IGNORE_LABEL = -100
+
+
+# ---------------------------------------------------------------------------
+# Flat vector <-> named parameters
+# ---------------------------------------------------------------------------
+def unflatten(arch: Arch, flat: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """Slice the flat f32[N] vector into named tensors (static offsets)."""
+    params = {}
+    off = 0
+    for name, shape in arch.param_spec():
+        n = 1
+        for s in shape:
+            n *= s
+        params[name] = flat[off:off + n].reshape(shape)
+        off += n
+    return params
+
+
+def flatten(arch: Arch, params: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    return jnp.concatenate(
+        [params[name].reshape(-1) for name, _ in arch.param_spec()]
+    )
+
+
+def init_params(arch: Arch, seed: int = 0) -> jnp.ndarray:
+    """Reference initializer (the Rust side mirrors this from the manifest)."""
+    key = jax.random.PRNGKey(seed)
+    chunks = []
+    for entry in arch.layout():
+        n, init = entry["size"], entry["init"]
+        if init == "ones":
+            chunks.append(jnp.ones((n,), jnp.float32))
+        elif init == "zeros":
+            chunks.append(jnp.zeros((n,), jnp.float32))
+        else:
+            key, sub = jax.random.split(key)
+            chunks.append(0.02 * jax.random.normal(sub, (n,), jnp.float32))
+    return jnp.concatenate(chunks)
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+def _attn_block(arch: Arch, p: Dict, prefix: str, x, use_pallas: bool):
+    b, t, d = x.shape
+    h, dh = arch.n_heads, arch.d_head
+
+    def proj(w, bias):
+        y = jnp.einsum("btd,de->bte", x, w) + bias
+        return y.reshape(b, t, h, dh).transpose(0, 2, 1, 3)  # (B,H,T,Dh)
+
+    q = proj(p[prefix + "attn.wq"], p[prefix + "attn.bq"])
+    k = proj(p[prefix + "attn.wk"], p[prefix + "attn.bk"])
+    v = proj(p[prefix + "attn.wv"], p[prefix + "attn.bv"])
+    attn = kernels.attention if use_pallas else ref.attention_ref
+    o = attn(q, k, v)                                        # (B,H,T,Dh)
+    o = o.transpose(0, 2, 1, 3).reshape(b, t, d)
+    return jnp.einsum("btd,de->bte", o, p[prefix + "attn.wo"]) \
+        + p[prefix + "attn.bo"]
+
+
+def encode(arch: Arch, flat, tokens, use_pallas: bool = True):
+    """tokens i32[B,T] -> final hidden states f32[B,T,D]."""
+    p = unflatten(arch, flat)
+    ln = kernels.layernorm if use_pallas else ref.layernorm_ref
+    x = p["embed.tok"][tokens] + p["embed.pos"][None, :, :]
+    for i in range(arch.n_layers):
+        pref = f"block{i}."
+        hx = ln(x, p[pref + "ln1.g"], p[pref + "ln1.b"])
+        x = x + _attn_block(arch, p, pref, hx, use_pallas)
+        hx = ln(x, p[pref + "ln2.g"], p[pref + "ln2.b"])
+        hx = jnp.einsum("btd,df->btf", hx, p[pref + "ff.w1"]) + p[pref + "ff.b1"]
+        hx = jax.nn.gelu(hx)
+        hx = jnp.einsum("btf,fd->btd", hx, p[pref + "ff.w2"]) + p[pref + "ff.b2"]
+        x = x + hx
+    return ln(x, p["final_ln.g"], p["final_ln.b"])
+
+
+def mlm_logits(arch: Arch, flat, tokens, use_pallas: bool = True):
+    h = encode(arch, flat, tokens, use_pallas)
+    p = unflatten(arch, flat)
+    return jnp.einsum("btd,dv->btv", h, p["mlm_head.w"]) + p["mlm_head.b"]
+
+
+def cls_logits(arch: Arch, flat, tokens, use_pallas: bool = True):
+    h = encode(arch, flat, tokens, use_pallas)
+    p = unflatten(arch, flat)
+    pooled = jnp.mean(h, axis=1)                             # (B, D)
+    return pooled @ p["cls_head.w"] + p["cls_head.b"]
+
+
+# ---------------------------------------------------------------------------
+# Losses / metrics
+# ---------------------------------------------------------------------------
+def _ce(logits, labels):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+
+
+def mlm_loss_acc(arch: Arch, flat, tokens, labels, use_pallas: bool = True):
+    """Masked-LM loss/accuracy; positions with label == -100 are ignored."""
+    logits = mlm_logits(arch, flat, tokens, use_pallas)      # (B,T,V)
+    valid = labels != IGNORE_LABEL
+    safe = jnp.where(valid, labels, 0)
+    ce = _ce(logits, safe)
+    count = jnp.maximum(jnp.sum(valid), 1)
+    loss = jnp.sum(jnp.where(valid, ce, 0.0)) / count
+    pred = jnp.argmax(logits, axis=-1)
+    acc = jnp.sum(jnp.where(valid, pred == safe, False)) / count
+    return loss, acc.astype(jnp.float32)
+
+
+def cls_loss_acc(arch: Arch, flat, tokens, labels, use_pallas: bool = True):
+    logits = cls_logits(arch, flat, tokens, use_pallas)      # (B,C)
+    loss = jnp.mean(_ce(logits, labels))
+    acc = jnp.mean(jnp.argmax(logits, axis=-1) == labels)
+    return loss, acc.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Train / eval steps (the AOT entry points)
+# ---------------------------------------------------------------------------
+def _sgd(flat, mom, grad, lr):
+    mom = MOMENTUM * mom + grad
+    return flat - lr * mom, mom
+
+
+def make_train_step(arch: Arch, objective: str, use_pallas: bool = True):
+    loss_fn = mlm_loss_acc if objective == "mlm" else cls_loss_acc
+
+    def step(flat, mom, tokens, labels, lr):
+        loss, grad = jax.value_and_grad(
+            lambda f: loss_fn(arch, f, tokens, labels, use_pallas)[0]
+        )(flat)
+        flat2, mom2 = _sgd(flat, mom, grad, lr)
+        return flat2, mom2, loss
+
+    return step
+
+
+def make_eval_step(arch: Arch, objective: str, use_pallas: bool = True):
+    loss_fn = mlm_loss_acc if objective == "mlm" else cls_loss_acc
+
+    def step(flat, tokens, labels):
+        loss, acc = loss_fn(arch, flat, tokens, labels, use_pallas)
+        return loss, acc
+
+    return step

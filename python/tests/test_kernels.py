@@ -1,0 +1,156 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle, across
+hypothesis-driven shape/value sweeps. This is the core correctness signal
+for the compiled artifacts (interpret=True lowers to the same HLO the
+Rust runtime executes)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+# ---------------------------------------------------------------------------
+# delta quant / dequant
+# ---------------------------------------------------------------------------
+@given(
+    n=st.integers(min_value=1, max_value=5000),
+    eps=st.sampled_from([1e-5, 1e-4, 1e-3]),
+    scale=st.floats(min_value=1e-5, max_value=0.1),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_delta_quant_matches_ref(n, eps, scale, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    b = a + jnp.asarray(scale * rng.standard_normal(n), jnp.float32)
+    e = jnp.asarray([eps], jnp.float32)
+    q = np.asarray(kernels.delta_quant(a, b, e))
+    qr = np.asarray(ref.delta_quant_ref(a, b, e))
+    # XLA may compile x/s as x*(1/s); allow off-by-one on a <0.1% sliver of
+    # elements sitting exactly on quantization-bucket boundaries.
+    diff = np.abs(q - qr)
+    assert diff.max() <= 1
+    assert (diff != 0).sum() <= max(1, n // 500)
+    q = jnp.asarray(q)
+    back = kernels.delta_dequant(a, q, e)
+    np.testing.assert_allclose(
+        np.asarray(back),
+        np.asarray(ref.delta_dequant_ref(a, q, e)),
+        rtol=1e-5,
+        atol=1e-6,  # fma vs mul+sub fusion differences, ~1 ulp
+    )
+
+
+@given(
+    n=st.integers(min_value=8, max_value=4096),
+    eps=st.sampled_from([1e-5, 1e-4, 1e-3]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_delta_error_bound(n, eps, seed):
+    """|b − dequant(quant(a,b))| <= ln(1+eps): Algorithm 1's guarantee."""
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    b = a + jnp.asarray(1e-3 * rng.standard_normal(n), jnp.float32)
+    e = jnp.asarray([eps], jnp.float32)
+    q = kernels.delta_quant(a, b, e)
+    rec = kernels.delta_dequant(a, q, e)
+    bound = float(np.log1p(eps)) * (1 + 1e-2)  # f32 divide/multiply slack
+    assert float(jnp.max(jnp.abs(rec - b))) <= bound
+
+
+def test_delta_quant_block_boundaries():
+    """Exercise block sizes around the BlockSpec tiling edges."""
+    e = jnp.asarray([1e-4], jnp.float32)
+    for n in [1, 7, 8192, 8193, 16384]:
+        a = jnp.arange(n, dtype=jnp.float32) / max(n, 1)
+        b = a + 0.001
+        q = kernels.delta_quant(a, b, e)
+        qr = ref.delta_quant_ref(a, b, e)
+        np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+@given(
+    b=st.integers(min_value=1, max_value=4),
+    h=st.integers(min_value=1, max_value=4),
+    t=st.sampled_from([4, 8, 16, 32]),
+    dh=st.sampled_from([8, 16, 32]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_attention_matches_ref(b, h, t, dh, seed):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((b, h, t, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, h, t, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, h, t, dh)), jnp.float32)
+    out = kernels.attention(q, k, v)
+    want = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+def test_attention_gradients_match_ref():
+    """The custom_vjp backward (Pallas) vs jax.grad through the oracle."""
+    rng = np.random.default_rng(0)
+    shape = (2, 2, 8, 16)
+    q = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+    k = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+    v = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+    def loss_k(f):
+        return lambda q, k, v: jnp.sum(jnp.sin(f(q, k, v)))
+
+    g_kernel = jax.grad(loss_k(kernels.attention), argnums=(0, 1, 2))(q, k, v)
+    g_ref = jax.grad(loss_k(ref.attention_ref), argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g_kernel, g_ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-4, rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# layernorm
+# ---------------------------------------------------------------------------
+@given(
+    b=st.integers(min_value=1, max_value=4),
+    t=st.sampled_from([2, 8, 32]),
+    d=st.sampled_from([8, 64, 96]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_layernorm_matches_ref(b, t, d, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((b, t, d)), jnp.float32)
+    g = jnp.asarray(rng.standard_normal(d), jnp.float32)
+    bb = jnp.asarray(rng.standard_normal(d), jnp.float32)
+    out = kernels.layernorm(x, g, bb)
+    want = ref.layernorm_ref(x, g, bb)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5, rtol=1e-5)
+
+
+def test_layernorm_gradients_match_ref():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((3, 4, 16)), jnp.float32)
+    g = jnp.asarray(1.0 + 0.1 * rng.standard_normal(16), jnp.float32)
+    b = jnp.asarray(0.1 * rng.standard_normal(16), jnp.float32)
+
+    def loss(f):
+        return lambda x, g, b: jnp.sum(f(x, g, b) ** 2)
+
+    got = jax.grad(loss(kernels.layernorm), argnums=(0, 1, 2))(x, g, b)
+    want = jax.grad(loss(ref.layernorm_ref), argnums=(0, 1, 2))(x, g, b)
+    for a, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(w), atol=2e-4, rtol=2e-4)
+
+
+def test_layernorm_output_is_normalized():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(5.0 + 3.0 * rng.standard_normal((2, 4, 64)), jnp.float32)
+    y = kernels.layernorm(x, jnp.ones(64), jnp.zeros(64))
+    mu = np.asarray(jnp.mean(y, axis=-1))
+    sd = np.asarray(jnp.std(y, axis=-1))
+    np.testing.assert_allclose(mu, 0.0, atol=1e-5)
+    np.testing.assert_allclose(sd, 1.0, atol=1e-2)

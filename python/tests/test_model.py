@@ -1,0 +1,152 @@
+"""L2 correctness: the transformer over flat params — shapes, pallas-vs-ref
+equivalence of the full network, gradient sanity, training-step behavior,
+and manifest consistency (the Rust-side ABI)."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import archs as A
+from compile import model as M
+
+TINY = A.ARCHS["tx-tiny"]
+
+
+def rand_batch(seed=0, b=A.BATCH, t=A.MAX_SEQ):
+    rng = np.random.default_rng(seed)
+    tokens = jnp.asarray(rng.integers(0, 254, (b, t)), jnp.int32)
+    cls_labels = jnp.asarray(rng.integers(0, A.NUM_CLASSES, (b,)), jnp.int32)
+    mlm_labels = np.full((b, t), M.IGNORE_LABEL, np.int32)
+    mask = rng.random((b, t)) < 0.15
+    mlm_labels[mask] = rng.integers(0, 254, mask.sum())
+    return tokens, cls_labels, jnp.asarray(mlm_labels)
+
+
+def test_param_count_matches_layout():
+    for arch in A.ARCHS.values():
+        total = sum(e["size"] for e in arch.layout())
+        assert arch.param_count() == total
+        # offsets are contiguous
+        off = 0
+        for e in arch.layout():
+            assert e["offset"] == off
+            off += e["size"]
+
+
+def test_flatten_unflatten_roundtrip():
+    flat = M.init_params(TINY, 0)
+    params = M.unflatten(TINY, flat)
+    assert set(params) == {name for name, _ in TINY.param_spec()}
+    back = M.flatten(TINY, params)
+    np.testing.assert_array_equal(np.asarray(flat), np.asarray(back))
+
+
+def test_forward_shapes():
+    flat = M.init_params(TINY, 0)
+    tokens, _, _ = rand_batch()
+    h = M.encode(TINY, flat, tokens)
+    assert h.shape == (A.BATCH, A.MAX_SEQ, TINY.d_model)
+    assert M.mlm_logits(TINY, flat, tokens).shape == (A.BATCH, A.MAX_SEQ, A.VOCAB)
+    assert M.cls_logits(TINY, flat, tokens).shape == (A.BATCH, A.NUM_CLASSES)
+
+
+def test_pallas_and_ref_paths_agree():
+    flat = M.init_params(TINY, 1)
+    tokens, cls_labels, mlm_labels = rand_batch(1)
+    lp, ap = M.cls_loss_acc(TINY, flat, tokens, cls_labels, use_pallas=True)
+    lr, ar = M.cls_loss_acc(TINY, flat, tokens, cls_labels, use_pallas=False)
+    np.testing.assert_allclose(float(lp), float(lr), rtol=1e-4)
+    assert float(ap) == float(ar)
+    lp, _ = M.mlm_loss_acc(TINY, flat, tokens, mlm_labels, use_pallas=True)
+    lr, _ = M.mlm_loss_acc(TINY, flat, tokens, mlm_labels, use_pallas=False)
+    np.testing.assert_allclose(float(lp), float(lr), rtol=1e-4)
+
+
+def test_gradients_flow_to_all_params_cls():
+    """Every tensor except the unused MLM head gets gradient signal."""
+    flat = M.init_params(TINY, 2)
+    tokens, cls_labels, _ = rand_batch(2)
+    g = jax.grad(lambda f: M.cls_loss_acc(TINY, f, tokens, cls_labels)[0])(flat)
+    gp = M.unflatten(TINY, g)
+    for name, _ in TINY.param_spec():
+        norm = float(jnp.linalg.norm(gp[name]))
+        if name.startswith("mlm_head"):
+            assert norm == 0.0, f"{name} should be untouched by cls loss"
+        else:
+            assert norm > 0.0, f"no gradient reaches {name}"
+
+
+def test_train_step_reduces_loss():
+    step = jax.jit(M.make_train_step(TINY, "cls"))
+    flat = M.init_params(TINY, 3)
+    mom = jnp.zeros_like(flat)
+    tokens, labels, _ = rand_batch(3)
+    losses = []
+    for _ in range(20):
+        flat, mom, loss = step(flat, mom, tokens, labels, jnp.float32(0.1))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0]
+    assert all(np.isfinite(losses))
+
+
+def test_eval_step_accuracy_range():
+    ev = jax.jit(M.make_eval_step(TINY, "cls"))
+    flat = M.init_params(TINY, 4)
+    tokens, labels, _ = rand_batch(4)
+    loss, acc = ev(flat, tokens, labels)
+    assert 0.0 <= float(acc) <= 1.0
+    assert float(loss) > 0.0
+
+
+def test_mlm_ignore_labels_respected():
+    flat = M.init_params(TINY, 5)
+    tokens, _, _ = rand_batch(5)
+    all_ignored = jnp.full((A.BATCH, A.MAX_SEQ), M.IGNORE_LABEL, jnp.int32)
+    loss, acc = M.mlm_loss_acc(TINY, flat, tokens, all_ignored)
+    assert float(loss) == 0.0
+    assert float(acc) == 0.0
+
+
+def test_manifest_schema():
+    m = A.manifest()
+    assert m["abi_version"] == 1
+    for name, arch in m["archs"].items():
+        assert arch["param_count"] > 0
+        dag = arch["dag"]
+        ids = {n["id"] for n in dag["nodes"]}
+        assert len(ids) == len(dag["nodes"]), f"duplicate layer ids in {name}"
+        for src, dst in dag["edges"]:
+            assert src in ids and dst in ids
+        # every layout tensor is owned by exactly one dag node
+        owned = [p for n in dag["nodes"] for p in n["params"]]
+        assert sorted(owned) == sorted(e["name"] for e in arch["layout"])
+        # init kinds sane
+        for e in arch["layout"]:
+            assert e["init"] in ("normal", "ones", "zeros")
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")),
+    reason="artifacts not built",
+)
+def test_written_manifest_matches_source():
+    path = os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")
+    with open(path) as f:
+        written = json.load(f)
+    assert written == A.manifest()
+
+
+def test_init_params_layout_matches_manifest_init():
+    flat = np.asarray(M.init_params(TINY, 0))
+    for e in TINY.layout():
+        sl = flat[e["offset"]:e["offset"] + e["size"]]
+        if e["init"] == "ones":
+            assert (sl == 1.0).all(), e["name"]
+        elif e["init"] == "zeros":
+            assert (sl == 0.0).all(), e["name"]
+        else:
+            assert sl.std() > 0.001, e["name"]

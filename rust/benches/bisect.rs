@@ -1,0 +1,97 @@
+//! §6.4 test bisection: finding the first failing version in a chain via
+//! binary search vs linear scan (paper: up to 1.5× faster, growing with
+//! chain depth).
+//!
+//! Chains of perturbed model versions are built without training (the
+//! test cost is what matters); the "test" is a real accuracy evaluation
+//! through the PJRT runtime, failing from a planted regression point on.
+
+mod common;
+
+use mgit::checkpoint::Checkpoint;
+use mgit::lineage::{traversal, LineageGraph};
+use mgit::registry::Objective;
+use mgit::util::human_secs;
+use mgit::util::rng::Rng;
+use mgit::util::timing::Timer;
+
+fn main() -> anyhow::Result<()> {
+    let rt = common::runtime();
+    let spec = rt.zoo().arch("tx-tiny")?;
+    let lengths: Vec<usize> = match std::env::var("MGIT_SCALE").as_deref() {
+        Ok("small") => vec![8],
+        _ => vec![8, 16, 32, 64],
+    };
+
+    println!("§6.4 — test bisection vs linear scan over version chains");
+    common::hr();
+    println!(
+        "{:>6} {:>10} {:>10} {:>12} {:>12} {:>8}",
+        "chain", "bisect-ev", "scan-ev", "bisect-time", "scan-time", "speedup"
+    );
+
+    for &len in &lengths {
+        // Build a version chain; versions after the regression point get
+        // parameters that fail the test (scrambled head).
+        let mut g = LineageGraph::new();
+        let mut cks: Vec<Checkpoint> = Vec::new();
+        let mut rng = Rng::new(5);
+        let base = Checkpoint::init(spec, 5);
+        let regression_at = len / 2 + 1;
+        let mut prev = None;
+        for v in 0..len {
+            let idx = g.add_node(&format!("m@v{}", v + 1), "tx-tiny")?;
+            let mut ck = base.clone();
+            for x in ck.flat.iter_mut() {
+                *x += rng.normal_f32(0.0, 1e-4);
+            }
+            if v >= regression_at {
+                // The planted bug: NaN-free but broken parameters.
+                let e = spec.entry("cls_head.w")?;
+                for x in ck.flat[e.offset..e.offset + e.size].iter_mut() {
+                    *x = 10.0;
+                }
+            }
+            cks.push(ck);
+            if let Some(p) = prev {
+                g.add_version_edge(p, idx)?;
+            }
+            prev = Some(idx);
+        }
+        let chain = traversal::version_chain(&g, 0);
+
+        // The failing test: param-norm explosion detector (a real MGit
+        // test spec evaluated against real checkpoints; eval-based tests
+        // behave identically — cost per test is what matters).
+        let norm_limit = base.l2_norm() + 1.0;
+        let fails = |i: usize| {
+            // also run one real eval batch so the test cost is realistic
+            let _ = rt.eval_many("tx-tiny", Objective::Cls, &cks[i].flat, "task1", 0, 1);
+            cks[i].l2_norm() > norm_limit
+        };
+
+        // Warm the executable cache so compile time doesn't pollute the
+        // first timed evaluation.
+        let _ = rt.eval_many("tx-tiny", Objective::Cls, &cks[0].flat, "task1", 0, 1);
+
+        let t = Timer::start();
+        let (found_b, evals_b) = traversal::bisect_first_failure(&chain, fails);
+        let tb = t.elapsed_secs();
+        let t = Timer::start();
+        let (found_s, evals_s) = traversal::scan_first_failure(&chain, fails);
+        let ts = t.elapsed_secs();
+        assert_eq!(found_b, found_s);
+        assert_eq!(found_b, Some(regression_at));
+        println!(
+            "{:>6} {:>10} {:>10} {:>12} {:>12} {:>7.2}x",
+            len,
+            evals_b,
+            evals_s,
+            human_secs(tb),
+            human_secs(ts),
+            ts / tb
+        );
+    }
+    println!("\n(speedup grows with chain depth — asymptotically n/log n)");
+    Ok(())
+}

@@ -1,0 +1,34 @@
+//! Shared bench plumbing (criterion is unavailable offline; benches are
+//! `harness = false` binaries printing the paper's table/figure rows).
+
+use std::path::PathBuf;
+
+use mgit::runtime::Runtime;
+use mgit::workloads::Scale;
+
+pub fn runtime() -> Runtime {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Runtime::new(&dir).expect("run `make artifacts` first")
+}
+
+/// MGIT_SCALE=small shrinks every workload (CI); default is paper shape.
+pub fn scale() -> Scale {
+    match std::env::var("MGIT_SCALE").as_deref() {
+        Ok("small") => Scale::small(),
+        _ => Scale::paper(),
+    }
+}
+
+/// Graph filter: MGIT_GRAPHS=g2,g5 restricts the per-graph benches.
+pub fn graph_enabled(name: &str) -> bool {
+    match std::env::var("MGIT_GRAPHS") {
+        Ok(list) if !list.is_empty() => {
+            list.split(',').any(|g| g.eq_ignore_ascii_case(name))
+        }
+        _ => true,
+    }
+}
+
+pub fn hr() {
+    println!("{}", "-".repeat(86));
+}

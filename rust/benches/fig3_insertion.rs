@@ -1,0 +1,88 @@
+//! Figure 3: average per-model auto-insertion time vs lineage-graph size.
+//!
+//! Insertion is pairwise comparison against every present model, so the
+//! per-model cost grows linearly with graph size. As in the paper, larger
+//! pools are made by replicating the G2 model pool ×{1,2,4,8}; models are
+//! synthesized (root + finetune-like perturbations) rather than trained —
+//! auto-insertion only reads parameters, so training is irrelevant here.
+
+mod common;
+
+use std::collections::HashMap;
+
+use mgit::checkpoint::Checkpoint;
+use mgit::store::Store;
+use mgit::util::human_secs;
+use mgit::util::rng::Rng;
+use mgit::workloads;
+
+fn main() -> anyhow::Result<()> {
+    let rt = common::runtime();
+    let zoo = rt.zoo();
+    let arch = "tx-tiny";
+    let spec = zoo.arch(arch)?;
+
+    let replications: Vec<usize> = match std::env::var("MGIT_SCALE").as_deref() {
+        Ok("small") => vec![1, 2],
+        _ => vec![1, 2, 4, 8],
+    };
+    println!("Figure 3 — avg per-model insertion time vs graph size (linear growth expected)");
+    common::hr();
+
+    for &k in &replications {
+        // Synthesize a G2-shaped pool replicated k times: per replica, one
+        // root + 9 task children + 2 versions each (perturbed copies).
+        let mut order: Vec<(String, String, Option<String>)> = Vec::new();
+        let mut cks: HashMap<String, Checkpoint> = HashMap::new();
+        for rep in 0..k {
+            let mut rng = Rng::new(900 + rep as u64);
+            let root_name = format!("r{rep}/base");
+            let root = Checkpoint::init(spec, 900 + rep as u64);
+            cks.insert(root_name.clone(), root.clone());
+            order.push((root_name.clone(), arch.into(), None));
+            for t in 0..9 {
+                let child_name = format!("r{rep}/task{t}");
+                let mut ck = root.clone();
+                for x in ck.flat.iter_mut() {
+                    *x += rng.normal_f32(0.0, 0.003);
+                }
+                cks.insert(child_name.clone(), ck.clone());
+                order.push((child_name.clone(), arch.into(), Some(root_name.clone())));
+                let mut prev_name = child_name;
+                let mut prev = ck;
+                for v in 0..2 {
+                    let vname = format!("r{rep}/task{t}@v{}", v + 2);
+                    let mut vck = prev.clone();
+                    for x in vck.flat.iter_mut() {
+                        *x += rng.normal_f32(0.0, 0.001);
+                    }
+                    cks.insert(vname.clone(), vck.clone());
+                    order.push((vname.clone(), arch.into(), Some(prev_name.clone())));
+                    prev_name = vname;
+                    prev = vck;
+                }
+            }
+        }
+        let store = Store::in_memory();
+        let (_g, correct, times) = workloads::auto_construct(
+            &rt,
+            &store,
+            &order,
+            &cks,
+            &mgit::autoconstruct::AutoConfig::default(),
+        )?;
+        let avg = times.iter().sum::<f64>() / times.len() as f64;
+        let last10: f64 =
+            times[times.len().saturating_sub(10)..].iter().sum::<f64>() / 10f64.min(times.len() as f64);
+        println!(
+            "{:>4} models: avg insert {:>10}   tail-10 avg {:>10}   parents correct {}/{}",
+            order.len(),
+            human_secs(avg),
+            human_secs(last10),
+            correct,
+            order.len()
+        );
+    }
+    println!("\n(per-model time should grow ~linearly with pool size — pairwise diffs)");
+    Ok(())
+}

@@ -1,0 +1,124 @@
+//! Figure 4: accuracy difference between cascaded children (m1'…mN') and
+//! their originals (m1…mN) per (task × perturbation).
+//!
+//! Protocol (paper §6.4): the base MLM model m is re-pretrained on a
+//! *perturbed* corpus → m'; `run_update_cascade` regenerates children
+//! whose creation functions never see perturbed data — robustness must be
+//! inherited from m'. Positive Δacc on perturbed eval sets = the paper's
+//! "superior performance (accuracy difference > 0) for most
+//! perturbations".
+
+mod common;
+
+use mgit::delta::NativeKernel;
+use mgit::registry::{CreationSpec, Objective};
+use mgit::store::Store;
+use mgit::train::{CasCheckpointStore, Trainer};
+use mgit::update::{self, CheckpointStore, CreationExecutor};
+use mgit::workloads::{self, PersistMode, Scale};
+
+fn main() -> anyhow::Result<()> {
+    let rt = common::runtime();
+    let zoo = rt.zoo().clone();
+    let small = matches!(std::env::var("MGIT_SCALE").as_deref(), Ok("small"));
+    let scale = if small {
+        Scale::small()
+    } else {
+        Scale { n_tasks: 4, versions_per_task: 2, ..Scale::paper() }
+    };
+    let perturbations: &[&str] = if small {
+        &["swap", "uniform_noise"]
+    } else {
+        &["swap", "drop", "remap", "uniform_noise", "shift"]
+    };
+
+    // Build + persist G2.
+    let store = Store::in_memory();
+    let mut wl = workloads::build_g2(&rt, &scale)?;
+    workloads::persist(&mut wl, &store, &zoo, &rt, PersistMode::Delta(Default::default()), |_, _| {
+        Ok(true)
+    })?;
+
+    // Old children's perturbed-eval accuracies.
+    let tasks: Vec<String> = (0..scale.n_tasks).map(|t| format!("task{}", t + 1)).collect();
+    let mut old_acc = vec![vec![0f32; perturbations.len()]; tasks.len()];
+    for (ti, task) in tasks.iter().enumerate() {
+        let node = wl.graph.idx(&format!("g2/{task}"))?;
+        let latest = wl.graph.latest_version(node);
+        let ck = wl.ck(&wl.graph.node(latest).name.clone())?;
+        for (pi, p) in perturbations.iter().enumerate() {
+            old_acc[ti][pi] = rt
+                .eval_many_perturbed("tx-tiny", Objective::Cls, &ck.flat, task, 0, 3, Some((p, 0.3)))?
+                .1;
+        }
+    }
+
+    // Update the root on perturbed corpus, cascade.
+    let mut trainer = Trainer::new(&rt);
+    let mut ckstore = CasCheckpointStore {
+        store: &store,
+        zoo: &zoo,
+        kernel: &NativeKernel,
+        compress: Some(Default::default()),
+    };
+    let m = wl.graph.idx("g2/base-mlm")?;
+    let base_ck = wl.ck("g2/base-mlm")?.clone();
+    let new_ck = trainer.execute(
+        &CreationSpec::Pretrain { corpus_seed: 999, steps: scale.pretrain_steps * 2, lr: scale.lr },
+        "tx-tiny",
+        &[base_ck],
+    )?;
+    let sm = ckstore.save(&new_ck, None)?;
+    let m_new = wl.graph.add_node("g2/base-mlm@v2", "tx-tiny")?;
+    wl.graph.node_mut(m_new).stored = Some(sm);
+    wl.graph.add_version_edge(m, m_new)?;
+    let report = update::run_update_cascade(
+        &mut wl.graph,
+        &mut ckstore,
+        &mut trainer,
+        m,
+        m_new,
+        |_, _| false,
+        |_, _| false,
+    )?;
+    println!(
+        "cascade regenerated {} children (skipped {} without cr)\n",
+        report.new_versions.len(),
+        report.skipped_no_cr.len()
+    );
+
+    // New children's accuracies; print the Figure-4 matrix.
+    print!("{:<8}", "task");
+    for p in perturbations {
+        print!(" {:>14}", p);
+    }
+    println!();
+    common::hr();
+    let mut positive = 0;
+    let mut total = 0;
+    for (ti, task) in tasks.iter().enumerate() {
+        let node = wl.graph.idx(&format!("g2/{task}"))?;
+        let latest = wl.graph.latest_version(node);
+        let sm = wl.graph.node(latest).stored.clone().unwrap();
+        let ck = ckstore.load(&sm)?;
+        print!("{:<8}", task);
+        for (pi, p) in perturbations.iter().enumerate() {
+            let acc = rt
+                .eval_many_perturbed("tx-tiny", Objective::Cls, &ck.flat, task, 0, 3, Some((p, 0.3)))?
+                .1;
+            let d = acc - old_acc[ti][pi];
+            if d >= 0.0 {
+                positive += 1;
+            }
+            total += 1;
+            print!(" {:>+14.3}", d);
+        }
+        println!();
+    }
+    common::hr();
+    println!(
+        "Δacc ≥ 0 in {positive}/{total} (task, perturbation) cells \
+         (paper: positive for most perturbations and tasks)"
+    );
+    Ok(())
+}

@@ -1,0 +1,74 @@
+//! Runtime hot-path latencies (the §Perf baseline of EXPERIMENTS.md):
+//! train/eval step per architecture, and the PJRT Pallas delta kernels vs
+//! the native oracle.
+
+mod common;
+
+use mgit::checkpoint::Checkpoint;
+use mgit::data;
+use mgit::delta::quant::{DeltaKernel, NativeKernel};
+use mgit::registry::Objective;
+use mgit::util::human_secs;
+use mgit::util::rng::Rng;
+use mgit::util::timing::BenchStats;
+
+fn main() -> anyhow::Result<()> {
+    let rt = common::runtime();
+    let zoo = rt.zoo().clone();
+    let small = matches!(std::env::var("MGIT_SCALE").as_deref(), Ok("small"));
+    let iters = if small { 5 } else { 20 };
+
+    println!("L3/L2 hot path: train & eval step latency per architecture");
+    common::hr();
+    let archs: Vec<&str> =
+        if small { vec!["tx-tiny"] } else { vec!["tx-tiny", "tx-small", "tx-base"] };
+    for arch in archs {
+        let spec = zoo.arch(arch)?;
+        let mut params = Checkpoint::init(spec, 1).flat;
+        let mut mom = vec![0f32; params.len()];
+        let batch = data::cls_batch("task1", zoo.batch, zoo.max_seq, 0, 0, None)?;
+        let ts = BenchStats::measure(&format!("{arch} train"), 2, iters, || {
+            rt.train_step(arch, Objective::Cls, &mut params, &mut mom, &batch, 0.01)
+                .unwrap();
+        });
+        let es = BenchStats::measure(&format!("{arch} eval"), 2, iters, || {
+            rt.eval_step(arch, Objective::Cls, &params, &batch).unwrap();
+        });
+        println!("{}", ts.report());
+        println!("{}", es.report());
+        println!(
+            "   ({} params; train moves {:.1} MB of params per step host<->device)",
+            spec.param_count,
+            2.0 * 2.0 * spec.param_count as f64 * 4.0 / 1e6
+        );
+    }
+
+    println!("\nL1 hot path: delta kernels, PJRT (AOT Pallas) vs native");
+    common::hr();
+    let n = 1 << 20;
+    let mut rng = Rng::new(2);
+    let parent: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let child: Vec<f32> = parent.iter().map(|&p| p + rng.normal_f32(0.0, 3e-4)).collect();
+    let q = NativeKernel.quantize(&parent, &child, 1e-4)?;
+
+    let s = BenchStats::measure("quantize   pjrt", 1, iters.min(10), || {
+        let _ = rt.quantize(&parent, &child, 1e-4).unwrap();
+    });
+    println!("{}   ({:.0} M elem/s)", s.report(), n as f64 / s.mean() / 1e6);
+    let s = BenchStats::measure("quantize   native", 1, iters.min(10), || {
+        let _ = NativeKernel.quantize(&parent, &child, 1e-4).unwrap();
+    });
+    println!("{}   ({:.0} M elem/s)", s.report(), n as f64 / s.mean() / 1e6);
+    let s = BenchStats::measure("dequantize pjrt", 1, iters.min(10), || {
+        let _ = rt.dequantize(&parent, &q, 1e-4).unwrap();
+    });
+    println!("{}   ({:.0} M elem/s)", s.report(), n as f64 / s.mean() / 1e6);
+    let s = BenchStats::measure("dequantize native", 1, iters.min(10), || {
+        let _ = NativeKernel.dequantize(&parent, &q, 1e-4).unwrap();
+    });
+    println!("{}   ({:.0} M elem/s)", s.report(), n as f64 / s.mean() / 1e6);
+
+    println!("\nexecutable cache: {} compiles for all of the above",
+        rt.stats.compile_count.load(std::sync::atomic::Ordering::Relaxed));
+    Ok(())
+}

@@ -1,0 +1,103 @@
+//! Ablations behind Table 4: codec ratio/throughput on realistic delta
+//! payloads, the ε sweep (error bound vs compression ratio), and SHA-256
+//! hashing throughput (the content-addressing cost).
+
+mod common;
+
+use mgit::delta::quant::{DeltaKernel, NativeKernel};
+use mgit::delta::Codec;
+use mgit::store::hash_bytes;
+use mgit::tensor::i32_to_bytes;
+use mgit::util::rng::Rng;
+use mgit::util::timing::BenchStats;
+use mgit::util::{human_bytes, human_secs};
+
+fn main() -> anyhow::Result<()> {
+    let n = 1 << 20; // 4 MiB of f32 — a mid-sized model's worth of deltas
+    let mut rng = Rng::new(1);
+    let parent: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    // Finetune-like child: small, sparse-ish drift.
+    let child: Vec<f32> = parent
+        .iter()
+        .map(|&p| if rng.bool_with(0.3) { p + rng.normal_f32(0.0, 3e-4) } else { p })
+        .collect();
+
+    println!("Codec ablation on quantized finetune deltas ({} elements)", n);
+    common::hr();
+    println!(
+        "{:<10} {:>9} {:>14} {:>14}",
+        "codec", "ratio", "compress", "decompress"
+    );
+    let q = NativeKernel.quantize(&parent, &child, 1e-4)?;
+    let payload = i32_to_bytes(&q);
+    for codec in [Codec::Rle, Codec::Deflate, Codec::Zstd] {
+        let enc = codec.compress(&payload)?;
+        let cs = BenchStats::measure("c", 1, 5, || {
+            let _ = codec.compress(&payload).unwrap();
+        });
+        let ds = BenchStats::measure("d", 1, 5, || {
+            let _ = codec.decompress(&enc, payload.len()).unwrap();
+        });
+        println!(
+            "{:<10} {:>8.2}x {:>11}/s {:>11}/s",
+            codec.name(),
+            payload.len() as f64 / enc.len() as f64,
+            human_bytes((payload.len() as f64 / cs.mean()) as u64),
+            human_bytes((payload.len() as f64 / ds.mean()) as u64),
+        );
+    }
+
+    println!("\nε sweep (ratio vs error bound; paper default ε=1e-4)");
+    common::hr();
+    println!("{:<10} {:>9} {:>14} {:>12}", "eps", "ratio", "max |err|", "zeros");
+    for eps in [1e-5f32, 1e-4, 1e-3, 1e-2] {
+        let q = NativeKernel.quantize(&parent, &child, eps)?;
+        let rec = NativeKernel.dequantize(&parent, &q, eps)?;
+        let max_err = rec
+            .iter()
+            .zip(&child)
+            .map(|(r, c)| (r - c).abs())
+            .fold(0f32, f32::max);
+        let zeros = q.iter().filter(|&&x| x == 0).count();
+        let enc = Codec::Deflate.compress(&i32_to_bytes(&q))?;
+        println!(
+            "{:<10.0e} {:>8.2}x {:>14.3e} {:>11.1}%",
+            eps,
+            payload.len() as f64 / enc.len() as f64,
+            max_err,
+            100.0 * zeros as f64 / q.len() as f64
+        );
+    }
+
+    println!("\nSHA-256 content hashing throughput (the 'Hash' config's cost)");
+    common::hr();
+    let bytes = mgit::tensor::f32_to_bytes(&parent);
+    let hs = BenchStats::measure("hash", 1, 5, || {
+        let _ = hash_bytes(&bytes);
+    });
+    println!(
+        "hash {:>10} per 4 MiB tensor  ({}/s)",
+        human_secs(hs.mean()),
+        human_bytes((bytes.len() as f64 / hs.mean()) as u64)
+    );
+
+    println!("\nquantize/dequantize kernel throughput (native oracle)");
+    common::hr();
+    let qs = BenchStats::measure("q", 1, 5, || {
+        let _ = NativeKernel.quantize(&parent, &child, 1e-4).unwrap();
+    });
+    let dsv = BenchStats::measure("dq", 1, 5, || {
+        let _ = NativeKernel.dequantize(&parent, &q, 1e-4).unwrap();
+    });
+    println!(
+        "quantize   {:>10}  ({} elem/s)",
+        human_secs(qs.mean()),
+        human_bytes((n as f64 / qs.mean()) as u64)
+    );
+    println!(
+        "dequantize {:>10}  ({} elem/s)",
+        human_secs(dsv.mean()),
+        human_bytes((n as f64 / dsv.mean()) as u64)
+    );
+    Ok(())
+}

@@ -1,0 +1,104 @@
+//! Table 3: the five lineage graphs — node/edge counts, build times, plus
+//! the §6.1 G1 auto-insertion accuracy and the §6.4 G5 parameter-sharing
+//! fraction.
+
+mod common;
+
+use mgit::autoconstruct::AutoConfig;
+use mgit::store::Store;
+use mgit::util::human_secs;
+use mgit::util::timing::Timer;
+use mgit::workloads::{self, Workload};
+
+fn row(name: &str, desc: &str, wl: &Workload, secs: f64) {
+    let (prov, ver) = wl.graph.edge_counts();
+    println!(
+        "{:<4} {:<28} {:>5} nodes / {:>5} edges ({} prov + {} ver)   built in {}",
+        name,
+        desc,
+        wl.graph.len(),
+        prov + ver,
+        prov,
+        ver,
+        human_secs(secs)
+    );
+    wl.graph.integrity_check().expect("graph invariants");
+}
+
+fn main() -> anyhow::Result<()> {
+    let rt = common::runtime();
+    let scale = common::scale();
+    println!("Table 3 — lineage graphs (paper: G1 23/21, G2 91/171, G3 60/95, G5 10/9)");
+    common::hr();
+
+    if common::graph_enabled("g1") {
+        let t = Timer::start();
+        let wl = workloads::build_g1(&rt, &scale)?;
+        row("G1", "HuggingFace-zoo analog", &wl, t.elapsed_secs());
+
+        // §6.1: auto-construction vs gold (paper: 22/23 correct).
+        let gold = workloads::g1_gold();
+        let order: Vec<_> = gold
+            .iter()
+            .map(|(n, a, p)| (n.to_string(), a.to_string(), p.map(String::from)))
+            .collect();
+        let store = Store::in_memory();
+        let (_, correct, times) = workloads::auto_construct(
+            &rt,
+            &store,
+            &order,
+            &wl.checkpoints,
+            &AutoConfig::default(),
+        )?;
+        let avg = times.iter().sum::<f64>() / times.len() as f64;
+        println!(
+            "     auto-insertion: {}/{} parents correct (paper 22/23); avg insert {}",
+            correct,
+            gold.len(),
+            human_secs(avg)
+        );
+    }
+    if common::graph_enabled("g2") {
+        let t = Timer::start();
+        let wl = workloads::build_g2(&rt, &scale)?;
+        row("G2", "adaptation + versions", &wl, t.elapsed_secs());
+    }
+    if common::graph_enabled("g3") {
+        let t = Timer::start();
+        let wl = workloads::build_g3(&rt, &scale)?;
+        row("G3", "federated learning", &wl, t.elapsed_secs());
+    }
+    if common::graph_enabled("g4") {
+        let t = Timer::start();
+        let wl = workloads::build_g4(&rt, &scale)?;
+        row("G4", "edge pruning", &wl, t.elapsed_secs());
+        for node in &wl.graph.nodes {
+            let ck = wl.ck(&node.name)?;
+            println!("     {:<32} sparsity {:>5.1}%", node.name, ck.sparsity() * 100.0);
+        }
+    }
+    if common::graph_enabled("g5") {
+        let t = Timer::start();
+        let wl = workloads::build_g5(&rt, &scale)?;
+        row("G5", "multi-task learning", &wl, t.elapsed_secs());
+
+        // §6.4: fraction of parameters shared across MTL siblings
+        // (paper: 98%, only head parameters are task-local).
+        let names: Vec<&String> = wl.checkpoints.keys().filter(|n| n.contains("mtl")).collect();
+        if names.len() >= 2 {
+            let a = wl.ck(names[0])?;
+            let b = wl.ck(names[1])?;
+            let shared = a
+                .flat
+                .iter()
+                .zip(&b.flat)
+                .filter(|(x, y)| x == y)
+                .count();
+            println!(
+                "     MTL parameter sharing: {:.1}% identical across siblings (paper: 98%)",
+                100.0 * shared as f64 / a.flat.len() as f64
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,214 @@
+//! Table 4: compression ratio, max/avg accuracy delta and per-model
+//! runtime for every compression configuration × lineage graph.
+//!
+//! Configurations (paper names; DEFLATE substitutes LZMA — DESIGN.md §2):
+//!   MGit (LZMA + Hash)      delta-compressed, dictionary codec
+//!   MGit (RLE + Hash)       delta-compressed, run-length codec
+//!   MGit (Hash)             content hashing only (lossless)
+//!   Full                    quantize whole model + dictionary codec
+//!   Full w/o quantization   dictionary codec on raw parameters
+
+mod common;
+
+use std::collections::HashMap;
+
+use mgit::checkpoint::Checkpoint;
+use mgit::delta::{self, Codec, CompressConfig};
+use mgit::registry::{CreationSpec, Objective};
+use mgit::runtime::Runtime;
+use mgit::store::Store;
+use mgit::util::timing::Timer;
+use mgit::workloads::{self, PersistMode, Scale, Workload};
+
+/// The task a node is evaluated on (from its creation spec).
+fn eval_task(wl: &Workload, name: &str) -> Option<(String, Objective)> {
+    let node = wl.graph.by_name(name).ok()?;
+    match node.creation.as_ref()? {
+        CreationSpec::Finetune { task, objective, .. } => Some((task.clone(), *objective)),
+        CreationSpec::Prune { task, .. } => Some((task.clone(), Objective::Cls)),
+        CreationSpec::Mtl { task, .. } => Some((task.clone(), Objective::Cls)),
+        CreationSpec::Pretrain { corpus_seed, .. } => {
+            Some((format!("{corpus_seed}"), Objective::Mlm))
+        }
+        _ => None,
+    }
+}
+
+fn accuracy(rt: &Runtime, ck: &Checkpoint, task: &str, obj: Objective) -> anyhow::Result<f32> {
+    let (seed, name): (u64, &str) = match obj {
+        Objective::Mlm => (task.parse().unwrap_or(0), "corpus"),
+        Objective::Cls => (0, task),
+    };
+    Ok(rt.eval_many(&ck.arch, obj, &ck.flat, name, seed, 2)?.1)
+}
+
+struct ConfigRow {
+    label: &'static str,
+    mode: Mode,
+}
+
+enum Mode {
+    Delta(CompressConfig),
+    HashOnly,
+    Full { quantize: bool },
+}
+
+fn main() -> anyhow::Result<()> {
+    let rt = common::runtime();
+    let scale = common::scale();
+    let zoo = rt.zoo().clone();
+
+    println!("Table 4 — compression ratio / accuracy Δ / per-model runtime");
+    println!("(dictionary codec = DEFLATE standing in for LZMA; see DESIGN.md §2)");
+    common::hr();
+    println!(
+        "{:<6} {:<26} {:>8} {:>9} {:>9} {:>12}",
+        "graph", "technique", "ratio", "maxΔacc", "avgΔacc", "per-model"
+    );
+    common::hr();
+
+    let builders: Vec<(&str, Box<dyn Fn() -> anyhow::Result<Workload>>)> = vec![
+        ("G1", Box::new(|| workloads::build_g1(&rt, &scale))),
+        ("G2", Box::new(|| workloads::build_g2(&rt, &scale))),
+        ("G3", Box::new(|| workloads::build_g3(&rt, &scale))),
+        ("G4", Box::new(|| workloads::build_g4(&rt, &scale))),
+        ("G5", Box::new(|| workloads::build_g5(&rt, &scale))),
+    ];
+
+    for (gname, build) in builders {
+        if !common::graph_enabled(gname) {
+            continue;
+        }
+        let wl0 = build()?;
+        // G4 uses pre-quantized deltas (sparsity preservation, paper §6.3).
+        let preq = gname == "G4";
+        // Baseline accuracies.
+        let mut base_acc: HashMap<String, f32> = HashMap::new();
+        for name in wl0.checkpoints.keys() {
+            if let Some((task, obj)) = eval_task(&wl0, name) {
+                base_acc.insert(name.clone(), accuracy(&rt, wl0.ck(name)?, &task, obj)?);
+            }
+        }
+
+        let configs = vec![
+            ConfigRow {
+                label: "MGit (LZMA* + Hash)",
+                mode: Mode::Delta(CompressConfig {
+                    eps: 1e-4,
+                    codec: Codec::Deflate,
+                    prequantize: preq,
+                }),
+            },
+            ConfigRow {
+                label: "MGit (RLE + Hash)",
+                mode: Mode::Delta(CompressConfig {
+                    eps: 1e-4,
+                    codec: Codec::Rle,
+                    prequantize: preq,
+                }),
+            },
+            ConfigRow { label: "MGit (Hash)", mode: Mode::HashOnly },
+            ConfigRow { label: "Full", mode: Mode::Full { quantize: true } },
+            ConfigRow {
+                label: "Full w/o quantization",
+                mode: Mode::Full { quantize: false },
+            },
+        ];
+
+        for cfg in configs {
+            let t = Timer::start();
+            let (ratio, max_d, avg_d, n_models) = match cfg.mode {
+                Mode::Delta(c) => {
+                    let mut wl = clone_workload(&wl0);
+                    let store = Store::in_memory();
+                    let report = workloads::persist(
+                        &mut wl,
+                        &store,
+                        &zoo,
+                        &rt,
+                        PersistMode::Delta(c),
+                        |_, _| Ok(true),
+                    )?;
+                    // Accuracy of reconstructed models.
+                    let (mut max_d, mut sum_d, mut n) = (0f32, 0f32, 0usize);
+                    for node in &wl.graph.nodes {
+                        let Some(base) = base_acc.get(&node.name) else { continue };
+                        let sm = node.stored.as_ref().unwrap();
+                        let ck = delta::load(&store, &zoo, sm, &rt)?;
+                        let (task, obj) = eval_task(&wl, &node.name).unwrap();
+                        let acc = accuracy(&rt, &ck, &task, obj)?;
+                        let d = (base - acc).max(0.0);
+                        max_d = max_d.max(d);
+                        sum_d += d;
+                        n += 1;
+                    }
+                    (report.ratio(), max_d, sum_d / n.max(1) as f32, report.n_models)
+                }
+                Mode::HashOnly => {
+                    let mut wl = clone_workload(&wl0);
+                    let store = Store::in_memory();
+                    let report = workloads::persist(
+                        &mut wl,
+                        &store,
+                        &zoo,
+                        &rt,
+                        PersistMode::HashOnly,
+                        |_, _| Ok(true),
+                    )?;
+                    (report.ratio(), 0.0, 0.0, report.n_models)
+                }
+                Mode::Full { quantize } => {
+                    // Paper baseline: each model compressed independently.
+                    let (mut raw, mut stored) = (0u64, 0u64);
+                    let (mut max_d, mut sum_d, mut n) = (0f32, 0f32, 0usize);
+                    for (name, ck) in &wl0.checkpoints {
+                        raw += (ck.flat.len() * 4) as u64;
+                        let (size, rec) = delta::full_model_compressed_size(
+                            ck,
+                            Codec::Deflate,
+                            1e-4,
+                            quantize,
+                        )?;
+                        stored += size as u64;
+                        if quantize {
+                            if let Some(base) = base_acc.get(name) {
+                                let (task, obj) = eval_task(&wl0, name).unwrap();
+                                let acc = accuracy(&rt, &rec, &task, obj)?;
+                                let d = (base - acc).max(0.0);
+                                max_d = max_d.max(d);
+                                sum_d += d;
+                                n += 1;
+                            }
+                        }
+                    }
+                    (
+                        raw as f64 / stored.max(1) as f64,
+                        max_d,
+                        sum_d / n.max(1) as f32,
+                        wl0.checkpoints.len(),
+                    )
+                }
+            };
+            let per_model = t.elapsed_secs() / n_models.max(1) as f64;
+            println!(
+                "{:<6} {:<26} {:>7.2}x {:>9.3} {:>9.3} {:>12}",
+                gname,
+                cfg.label,
+                ratio,
+                max_d,
+                avg_d,
+                mgit::util::human_secs(per_model)
+            );
+        }
+        common::hr();
+    }
+    Ok(())
+}
+
+fn clone_workload(wl: &Workload) -> Workload {
+    Workload {
+        name: wl.name.clone(),
+        graph: wl.graph.clone(),
+        checkpoints: wl.checkpoints.clone(),
+    }
+}

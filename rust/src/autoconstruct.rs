@@ -1,0 +1,200 @@
+//! Automated lineage-graph construction (paper §3.2).
+//!
+//! Given a pool of models created *outside* MGit (e.g. downloaded
+//! checkpoints), insert each into the lineage graph by pairwise diffing
+//! against all present models: "MGit locates the model in the graph that
+//! has the smallest contextual and then structural divergence score; this
+//! node is chosen as the parent. If no model is sufficiently contextually
+//! or structurally similar, x is added as a root."
+//!
+//! Exact-hash contextual divergence alone cannot rank fully-finetuned
+//! children (they share no tensor hashes with their parent), so the
+//! contextual signal is refined with the normalized parameter-value
+//! distance of [`crate::diff::value_distance`] — this is the "comparing
+//! attributes or also parameter values" in the paper's description of
+//! contextual diffs, and is what lets frozen-weight *and* fully-finetuned
+//! children find their parents (22/23 on G1).
+
+use anyhow::Result;
+
+use crate::checkpoint::{ArchSpec, Checkpoint};
+use crate::diff::{divergence_scores, value_distance};
+use crate::modeldag::ModelDag;
+
+/// A candidate model for insertion / comparison.
+pub struct PoolModel<'a> {
+    pub name: String,
+    pub spec: &'a ArchSpec,
+    pub dag: ModelDag,
+    pub ck: Checkpoint,
+}
+
+/// Divergence triple for one candidate parent.
+#[derive(Debug, Clone, Copy)]
+pub struct Scores {
+    pub structural: f64,
+    pub contextual: f64,
+    pub value: f64,
+}
+
+impl Scores {
+    /// Lexicographic-ish ranking key: hash-contextual first (exact shared
+    /// tensors dominate), then value distance, then structure.
+    fn key(&self) -> (u64, u64, u64) {
+        let q = |x: f64| (x * 1e9) as u64;
+        (q(self.contextual), q(self.value), q(self.structural))
+    }
+}
+
+/// Insertion thresholds (defaults tuned on the G1-style zoo).
+#[derive(Debug, Clone, Copy)]
+pub struct AutoConfig {
+    /// Accept a parent when contextual (hash) divergence is below this…
+    pub ctx_threshold: f64,
+    /// …or when value distance is below this (finetuned children).
+    pub value_threshold: f64,
+    /// Structural divergence above this disqualifies a candidate outright
+    /// (completely different architectures).
+    pub max_structural: f64,
+}
+
+impl Default for AutoConfig {
+    fn default() -> Self {
+        AutoConfig { ctx_threshold: 0.999, value_threshold: 0.45, max_structural: 0.5 }
+    }
+}
+
+/// Score `child` against one candidate `parent`.
+pub fn score_pair(parent: &PoolModel<'_>, child: &PoolModel<'_>) -> Result<Scores> {
+    let (structural, contextual) = divergence_scores(&parent.dag, &child.dag);
+    let value = if structural <= 0.9999 {
+        value_distance(
+            &parent.dag, parent.spec, &parent.ck, &child.dag, child.spec, &child.ck,
+        )?
+    } else {
+        1.0
+    };
+    Ok(Scores { structural, contextual, value })
+}
+
+/// Choose the best parent for `child` among `pool`, or `None` → root.
+/// Returns (pool index, scores).
+pub fn choose_parent(
+    pool: &[PoolModel<'_>],
+    child: &PoolModel<'_>,
+    cfg: &AutoConfig,
+) -> Result<Option<(usize, Scores)>> {
+    let mut best: Option<(usize, Scores)> = None;
+    for (i, cand) in pool.iter().enumerate() {
+        let s = score_pair(cand, child)?;
+        if s.structural > cfg.max_structural {
+            continue;
+        }
+        let sufficiently_similar = s.contextual < cfg.ctx_threshold
+            || s.value < cfg.value_threshold;
+        if !sufficiently_similar {
+            continue;
+        }
+        match &best {
+            None => best = Some((i, s)),
+            Some((_, bs)) if s.key() < bs.key() => best = Some((i, s)),
+            _ => {}
+        }
+    }
+    Ok(best)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::testutil::normal_zoo;
+    use crate::delta::store_raw;
+    use crate::store::Store;
+
+    fn pool_model<'a>(
+        zoo: &'a crate::checkpoint::ModelZoo,
+        store: &Store,
+        name: &str,
+        arch: &str,
+        ck: Checkpoint,
+    ) -> PoolModel<'a> {
+        let spec = zoo.arch(arch).unwrap();
+        let (sm, _) = store_raw(store, spec, &ck).unwrap();
+        PoolModel {
+            name: name.to_string(),
+            spec,
+            dag: ModelDag::from_arch(spec, Some(&sm)).unwrap(),
+            ck,
+        }
+    }
+
+    #[test]
+    fn finetuned_child_finds_parent() {
+        let zoo = normal_zoo();
+        let store = Store::in_memory();
+        let spec = zoo.arch("n0").unwrap();
+        let root_ck = Checkpoint::init(spec, 1);
+        let mut child_ck = root_ck.clone();
+        for x in child_ck.flat.iter_mut() {
+            *x += 0.002;
+        }
+        let unrelated_ck = Checkpoint::init(spec, 77);
+
+        let pool = vec![
+            pool_model(&zoo, &store, "root", "n0", root_ck),
+            pool_model(&zoo, &store, "unrelated", "n0", unrelated_ck),
+        ];
+        let child = pool_model(&zoo, &store, "child", "n0", child_ck);
+        let got = choose_parent(&pool, &child, &AutoConfig::default()).unwrap();
+        let (idx, scores) = got.expect("should find a parent");
+        assert_eq!(pool[idx].name, "root");
+        assert!(scores.value < 0.1);
+    }
+
+    #[test]
+    fn frozen_weight_child_prefers_exact_sharer() {
+        let zoo = normal_zoo();
+        let store = Store::in_memory();
+        let spec = zoo.arch("n0").unwrap();
+        let root_ck = Checkpoint::init(spec, 1);
+        // Child shares w.a exactly (frozen), head differs.
+        let mut child_ck = root_ck.clone();
+        for x in child_ck.param_mut(spec, "w.head").unwrap().iter_mut() { *x = 3.0; }
+        // Decoy: close in values overall but shares no exact tensor.
+        let mut decoy_ck = root_ck.clone();
+        for x in decoy_ck.flat.iter_mut() {
+            *x += 1e-3;
+        }
+        let pool = vec![
+            pool_model(&zoo, &store, "root", "n0", root_ck),
+            pool_model(&zoo, &store, "decoy", "n0", decoy_ck),
+        ];
+        let child = pool_model(&zoo, &store, "child", "n0", child_ck);
+        let (idx, scores) =
+            choose_parent(&pool, &child, &AutoConfig::default()).unwrap().unwrap();
+        assert_eq!(pool[idx].name, "root");
+        assert!(scores.contextual < 1.0, "shared frozen tensor not seen");
+    }
+
+    #[test]
+    fn dissimilar_model_becomes_root() {
+        let zoo = normal_zoo();
+        let store = Store::in_memory();
+        let pool = vec![pool_model(
+            &zoo,
+            &store,
+            "a",
+            "n0",
+            Checkpoint::init(zoo.arch("n0").unwrap(), 1),
+        )];
+        let child = pool_model(
+            &zoo,
+            &store,
+            "b",
+            "n0",
+            Checkpoint::init(zoo.arch("n0").unwrap(), 999),
+        );
+        let got = choose_parent(&pool, &child, &AutoConfig::default()).unwrap();
+        assert!(got.is_none(), "independently-initialized model must be a root");
+    }
+}

@@ -1,0 +1,381 @@
+//! Model checkpoints: architecture specs (from the AOT manifest) and flat
+//! parameter vectors.
+//!
+//! The L2/L1 Python layer fixes a *flat f32 layout* per architecture (see
+//! `python/compile/archs.py`); `artifacts/manifest.json` mirrors it here.
+//! A [`Checkpoint`] is one model's parameters as that flat vector; named
+//! per-layer tensors are views sliced out by the [`ArchSpec`] layout —
+//! these per-tensor slices are what the content-addressed store hashes.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::tensor::Tensor;
+use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
+
+/// How a parameter tensor is initialized for a fresh model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InitKind {
+    Normal,
+    Ones,
+    Zeros,
+}
+
+/// One named parameter tensor inside the flat layout.
+#[derive(Debug, Clone)]
+pub struct ParamEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+    pub init: InitKind,
+}
+
+/// One architecture of the model zoo.
+#[derive(Debug, Clone)]
+pub struct ArchSpec {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub param_count: usize,
+    pub layout: Vec<ParamEntry>,
+    by_name: HashMap<String, usize>,
+    /// Raw layer DAG JSON (consumed by `modeldag`).
+    pub dag: Json,
+}
+
+impl ArchSpec {
+    fn from_json(name: &str, j: &Json) -> Result<ArchSpec> {
+        let mut layout = Vec::new();
+        for entry in j.req_arr("layout")? {
+            let shape = entry
+                .req_arr("shape")?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad shape dim")))
+                .collect::<Result<Vec<_>>>()?;
+            let init = match entry.req_str("init")? {
+                "normal" => InitKind::Normal,
+                "ones" => InitKind::Ones,
+                "zeros" => InitKind::Zeros,
+                other => bail!("unknown init kind `{other}`"),
+            };
+            layout.push(ParamEntry {
+                name: entry.req_str("name")?.to_string(),
+                shape,
+                offset: entry.req_usize("offset")?,
+                size: entry.req_usize("size")?,
+                init,
+            });
+        }
+        let by_name = layout
+            .iter()
+            .enumerate()
+            .map(|(i, e)| (e.name.clone(), i))
+            .collect();
+        Ok(ArchSpec {
+            name: name.to_string(),
+            d_model: j.req_usize("d_model")?,
+            n_layers: j.req_usize("n_layers")?,
+            n_heads: j.req_usize("n_heads")?,
+            d_ff: j.req_usize("d_ff")?,
+            param_count: j.req_usize("param_count")?,
+            layout,
+            by_name,
+            dag: j.req("dag")?.clone(),
+        })
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&ParamEntry> {
+        self.by_name
+            .get(name)
+            .map(|&i| &self.layout[i])
+            .ok_or_else(|| anyhow!("arch {} has no parameter `{name}`", self.name))
+    }
+
+    pub fn param_names(&self) -> impl Iterator<Item = &str> {
+        self.layout.iter().map(|e| e.name.as_str())
+    }
+}
+
+/// The whole manifest: globals + every architecture.
+#[derive(Debug, Clone)]
+pub struct ModelZoo {
+    pub vocab: usize,
+    pub max_seq: usize,
+    pub n_classes: usize,
+    pub batch: usize,
+    pub delta_chunk: usize,
+    pub mask_token: i32,
+    pub ignore_label: i32,
+    pub archs: HashMap<String, ArchSpec>,
+    /// artifact file names: arch -> kind -> file
+    pub artifacts: HashMap<String, HashMap<String, String>>,
+    pub delta_quant_artifact: String,
+    pub delta_dequant_artifact: String,
+}
+
+impl ModelZoo {
+    pub fn load(manifest_path: &Path) -> Result<ModelZoo> {
+        let text = std::fs::read_to_string(manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        Self::from_json(&json::parse(&text)?)
+    }
+
+    pub fn from_json(j: &Json) -> Result<ModelZoo> {
+        let mut archs = HashMap::new();
+        for (name, aj) in j.req("archs")?.as_obj().unwrap_or(&[]) {
+            archs.insert(name.clone(), ArchSpec::from_json(name, aj)?);
+        }
+        let mut artifacts = HashMap::new();
+        for (name, aj) in j.req("artifacts")?.as_obj().unwrap_or(&[]) {
+            let mut kinds = HashMap::new();
+            for (kind, file) in aj.as_obj().unwrap_or(&[]) {
+                kinds.insert(kind.clone(), file.as_str().unwrap_or_default().to_string());
+            }
+            artifacts.insert(name.clone(), kinds);
+        }
+        let special = j.req("special_tokens")?;
+        let dk = j.req("delta_kernels")?;
+        Ok(ModelZoo {
+            vocab: j.req_usize("vocab")?,
+            max_seq: j.req_usize("max_seq")?,
+            n_classes: j.req_usize("n_classes")?,
+            batch: j.req_usize("batch")?,
+            delta_chunk: j.req_usize("delta_chunk")?,
+            mask_token: special.req_f64("mask")? as i32,
+            ignore_label: special.req_f64("ignore_label")? as i32,
+            archs,
+            artifacts,
+            delta_quant_artifact: dk.req_str("quant")?.to_string(),
+            delta_dequant_artifact: dk.req_str("dequant")?.to_string(),
+        })
+    }
+
+    pub fn arch(&self, name: &str) -> Result<&ArchSpec> {
+        self.archs
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown architecture `{name}`"))
+    }
+}
+
+/// A model's parameters as one flat f32 vector in the arch's layout.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub arch: String,
+    pub flat: Vec<f32>,
+}
+
+impl Checkpoint {
+    /// Fresh initialization per the manifest init kinds (N(0, 0.02²) for
+    /// weights, ones for LN gains, zeros for biases). Each tensor gets its
+    /// own RNG stream so layouts with equal prefixes share prefixes of
+    /// randomness (useful for tests), keyed by (seed, tensor index).
+    pub fn init(spec: &ArchSpec, seed: u64) -> Checkpoint {
+        let mut flat = vec![0f32; spec.param_count];
+        let mut root = Rng::new(seed);
+        for (i, e) in spec.layout.iter().enumerate() {
+            let dst = &mut flat[e.offset..e.offset + e.size];
+            match e.init {
+                InitKind::Zeros => {}
+                InitKind::Ones => dst.fill(1.0),
+                InitKind::Normal => {
+                    let mut rng = root.split(i as u64);
+                    for x in dst {
+                        *x = rng.normal_f32(0.0, 0.02);
+                    }
+                }
+            }
+        }
+        Checkpoint { arch: spec.name.clone(), flat }
+    }
+
+    pub fn check_arch(&self, spec: &ArchSpec) -> Result<()> {
+        if self.arch != spec.name {
+            bail!("checkpoint arch {} != spec {}", self.arch, spec.name);
+        }
+        if self.flat.len() != spec.param_count {
+            bail!(
+                "checkpoint has {} params, arch {} wants {}",
+                self.flat.len(),
+                spec.name,
+                spec.param_count
+            );
+        }
+        Ok(())
+    }
+
+    pub fn param(&self, spec: &ArchSpec, name: &str) -> Result<&[f32]> {
+        let e = spec.entry(name)?;
+        Ok(&self.flat[e.offset..e.offset + e.size])
+    }
+
+    pub fn param_mut(&mut self, spec: &ArchSpec, name: &str) -> Result<&mut [f32]> {
+        let e = spec.entry(name)?;
+        Ok(&mut self.flat[e.offset..e.offset + e.size])
+    }
+
+    /// Materialize one named tensor (copying the slice).
+    pub fn tensor(&self, spec: &ArchSpec, name: &str) -> Result<Tensor> {
+        let e = spec.entry(name)?;
+        Ok(Tensor::f32(
+            e.shape.clone(),
+            self.flat[e.offset..e.offset + e.size].to_vec(),
+        ))
+    }
+
+    /// Iterate (entry, slice) pairs in layout order.
+    pub fn iter_params<'a>(
+        &'a self,
+        spec: &'a ArchSpec,
+    ) -> impl Iterator<Item = (&'a ParamEntry, &'a [f32])> {
+        spec.layout
+            .iter()
+            .map(move |e| (e, &self.flat[e.offset..e.offset + e.size]))
+    }
+
+    /// Overall fraction of zero parameters (pruning diagnostics).
+    pub fn sparsity(&self) -> f64 {
+        if self.flat.is_empty() {
+            return 0.0;
+        }
+        self.flat.iter().filter(|&&x| x == 0.0).count() as f64 / self.flat.len() as f64
+    }
+
+    pub fn l2_norm(&self) -> f64 {
+        self.flat.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+}
+
+#[cfg(test)]
+pub mod testutil {
+    //! Tiny in-code manifests so unit tests don't depend on artifacts/.
+    use super::*;
+
+    /// All-`normal` init zoo (no deterministic ones/zeros tensors): the
+    /// realistic case for diff/autoconstruct tests — trained models never
+    /// share exactly-equal LN/bias tensors by accident, and deterministic
+    /// inits would otherwise hash-collide across unrelated fresh models.
+    pub fn normal_zoo() -> ModelZoo {
+        let text = r#"{
+          "vocab": 16, "max_seq": 4, "n_classes": 2, "batch": 2,
+          "delta_chunk": 8,
+          "special_tokens": {"cls": 14, "mask": 15, "ignore_label": -100},
+          "archs": {"n0": {
+              "d_model": 4, "n_layers": 2, "n_heads": 1, "d_ff": 8,
+              "param_count": 160,
+              "layout": [
+                {"name":"w.emb","shape":[16,4],"offset":0,"size":64,"init":"normal"},
+                {"name":"w.mid","shape":[4,16],"offset":64,"size":64,"init":"normal"},
+                {"name":"w.head","shape":[16,2],"offset":128,"size":32,"init":"normal"}
+              ],
+              "dag": {"nodes": [
+                  {"id":"emb","op":"embedding","attrs":"16x4","params":["w.emb"]},
+                  {"id":"mid","op":"linear","attrs":"4x16","params":["w.mid"]},
+                  {"id":"head","op":"linear","attrs":"16x2","params":["w.head"]}
+                ], "edges": [["emb","mid"],["mid","head"]]}
+          }},
+          "artifacts": {"n0": {}},
+          "delta_kernels": {"quant": "q", "dequant": "d"}
+        }"#;
+        ModelZoo::from_json(&json::parse(text).unwrap()).unwrap()
+    }
+
+    pub fn tiny_zoo() -> ModelZoo {
+        let text = r#"{
+          "vocab": 16, "max_seq": 4, "n_classes": 2, "batch": 2,
+          "delta_chunk": 8,
+          "special_tokens": {"cls": 14, "mask": 15, "ignore_label": -100},
+          "archs": {
+            "t0": {
+              "d_model": 2, "n_layers": 1, "n_heads": 1, "d_ff": 4,
+              "param_count": 14,
+              "layout": [
+                {"name":"w.a","shape":[2,3],"offset":0,"size":6,"init":"normal"},
+                {"name":"w.b","shape":[4],"offset":6,"size":4,"init":"zeros"},
+                {"name":"w.g","shape":[4],"offset":10,"size":4,"init":"ones"}
+              ],
+              "dag": {"nodes": [
+                  {"id":"a","op":"linear","attrs":"2x3","params":["w.a"]},
+                  {"id":"b","op":"bias","attrs":"4","params":["w.b","w.g"]}
+                ], "edges": [["a","b"]]}
+            },
+            "t1": {
+              "d_model": 2, "n_layers": 2, "n_heads": 1, "d_ff": 4,
+              "param_count": 12,
+              "layout": [
+                {"name":"w.a","shape":[2,3],"offset":0,"size":6,"init":"normal"},
+                {"name":"w.c","shape":[6],"offset":6,"size":6,"init":"normal"}
+              ],
+              "dag": {"nodes": [
+                  {"id":"a","op":"linear","attrs":"2x3","params":["w.a"]},
+                  {"id":"c","op":"linear","attrs":"6","params":["w.c"]}
+                ], "edges": [["a","c"]]}
+            }
+          },
+          "artifacts": {"t0": {}, "t1": {}},
+          "delta_kernels": {"quant": "q.hlo.txt", "dequant": "d.hlo.txt"}
+        }"#;
+        ModelZoo::from_json(&json::parse(text).unwrap()).unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_parses() {
+        let zoo = testutil::tiny_zoo();
+        assert_eq!(zoo.vocab, 16);
+        let t0 = zoo.arch("t0").unwrap();
+        assert_eq!(t0.param_count, 14);
+        assert_eq!(t0.layout.len(), 3);
+        assert!(zoo.arch("nope").is_err());
+    }
+
+    #[test]
+    fn init_respects_kinds() {
+        let zoo = testutil::tiny_zoo();
+        let spec = zoo.arch("t0").unwrap();
+        let ck = Checkpoint::init(spec, 1);
+        assert_eq!(ck.flat.len(), 14);
+        assert!(ck.param(spec, "w.a").unwrap().iter().any(|&x| x != 0.0));
+        assert!(ck.param(spec, "w.b").unwrap().iter().all(|&x| x == 0.0));
+        assert!(ck.param(spec, "w.g").unwrap().iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn init_deterministic_and_seed_sensitive() {
+        let zoo = testutil::tiny_zoo();
+        let spec = zoo.arch("t0").unwrap();
+        assert_eq!(Checkpoint::init(spec, 5).flat, Checkpoint::init(spec, 5).flat);
+        assert_ne!(Checkpoint::init(spec, 5).flat, Checkpoint::init(spec, 6).flat);
+    }
+
+    #[test]
+    fn tensor_views() {
+        let zoo = testutil::tiny_zoo();
+        let spec = zoo.arch("t0").unwrap();
+        let mut ck = Checkpoint::init(spec, 0);
+        ck.param_mut(spec, "w.b").unwrap()[2] = 9.0;
+        let t = ck.tensor(spec, "w.b").unwrap();
+        assert_eq!(t.shape, vec![4]);
+        assert_eq!(t.as_f32().unwrap()[2], 9.0);
+        assert!(ck.tensor(spec, "missing").is_err());
+    }
+
+    #[test]
+    fn arch_mismatch_detected() {
+        let zoo = testutil::tiny_zoo();
+        let t0 = zoo.arch("t0").unwrap();
+        let t1 = zoo.arch("t1").unwrap();
+        let ck = Checkpoint::init(t0, 0);
+        assert!(ck.check_arch(t1).is_err());
+        assert!(ck.check_arch(t0).is_ok());
+    }
+}

@@ -1,0 +1,154 @@
+//! Lossless codecs for quantized deltas.
+//!
+//! The paper evaluates RLE and LZMA; LZMA is not in the offline crate set,
+//! so DEFLATE (zlib) stands in as the "slow, high-ratio dictionary codec"
+//! and zstd is provided as an ablation point (see DESIGN.md §2). Codec ids
+//! are persisted inside MGTF objects — do not renumber.
+
+use std::io::{Read, Write};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::rle;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Codec {
+    /// PackBits run-length coding (paper's RLE).
+    Rle,
+    /// DEFLATE/zlib (stands in for the paper's LZMA).
+    Deflate,
+    /// zstd (ablation).
+    Zstd,
+}
+
+impl Codec {
+    pub fn code(self) -> u8 {
+        match self {
+            Codec::Rle => 0,
+            Codec::Deflate => 1,
+            Codec::Zstd => 2,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Result<Codec> {
+        match c {
+            0 => Ok(Codec::Rle),
+            1 => Ok(Codec::Deflate),
+            2 => Ok(Codec::Zstd),
+            _ => bail!("unknown codec code {c}"),
+        }
+    }
+
+    /// Parse a user-facing name. `lzma` is accepted as an alias for the
+    /// dictionary codec to keep the paper's configuration names usable.
+    pub fn parse(name: &str) -> Result<Codec> {
+        match name.to_ascii_lowercase().as_str() {
+            "rle" => Ok(Codec::Rle),
+            "deflate" | "zlib" | "lzma" => Ok(Codec::Deflate),
+            "zstd" => Ok(Codec::Zstd),
+            other => Err(anyhow!("unknown codec `{other}` (rle|deflate|zstd)")),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Codec::Rle => "rle",
+            Codec::Deflate => "deflate",
+            Codec::Zstd => "zstd",
+        }
+    }
+
+    pub fn compress(self, data: &[u8]) -> Result<Vec<u8>> {
+        match self {
+            Codec::Rle => Ok(rle::encode(data)),
+            Codec::Deflate => {
+                let mut enc = flate2::write::ZlibEncoder::new(
+                    Vec::new(),
+                    flate2::Compression::new(6),
+                );
+                enc.write_all(data)?;
+                Ok(enc.finish()?)
+            }
+            Codec::Zstd => Ok(zstd::bulk::compress(data, 6)?),
+        }
+    }
+
+    /// `expected_len` is the decompressed size (known from the MGTF header).
+    pub fn decompress(self, data: &[u8], expected_len: usize) -> Result<Vec<u8>> {
+        let out = match self {
+            Codec::Rle => rle::decode(data)?,
+            Codec::Deflate => {
+                let mut dec = flate2::read::ZlibDecoder::new(data);
+                let mut out = Vec::with_capacity(expected_len);
+                dec.read_to_end(&mut out)?;
+                out
+            }
+            Codec::Zstd => zstd::bulk::decompress(data, expected_len.max(1))?,
+        };
+        if out.len() != expected_len {
+            bail!(
+                "codec {} produced {} bytes, expected {}",
+                self.name(),
+                out.len(),
+                expected_len
+            );
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, gen, prop_assert};
+
+    const ALL: [Codec; 3] = [Codec::Rle, Codec::Deflate, Codec::Zstd];
+
+    #[test]
+    fn codes_roundtrip() {
+        for c in ALL {
+            assert_eq!(Codec::from_code(c.code()).unwrap(), c);
+            assert_eq!(Codec::parse(c.name()).unwrap(), c);
+        }
+        assert_eq!(Codec::parse("LZMA").unwrap(), Codec::Deflate);
+        assert!(Codec::parse("brotli").is_err());
+        assert!(Codec::from_code(9).is_err());
+    }
+
+    #[test]
+    fn all_codecs_roundtrip_sparse_deltas() {
+        // Typical payload: i32 deltas, mostly zero.
+        let mut data = vec![0u8; 64 * 1024];
+        for i in (0..data.len()).step_by(97) {
+            data[i] = (i % 251) as u8;
+        }
+        for c in ALL {
+            let enc = c.compress(&data).unwrap();
+            assert!(enc.len() < data.len(), "{} did not compress", c.name());
+            assert_eq!(c.decompress(&enc, data.len()).unwrap(), data);
+        }
+    }
+
+    #[test]
+    fn wrong_expected_len_detected() {
+        let data = vec![7u8; 100];
+        for c in ALL {
+            let enc = c.compress(&data).unwrap();
+            assert!(c.decompress(&enc, 99).is_err());
+        }
+    }
+
+    #[test]
+    fn prop_all_codecs_roundtrip() {
+        check("codec roundtrip", 60, |rng, b| {
+            let n = gen::len(rng, b);
+            let data = gen::vec_u8_runs(rng, n);
+            for c in ALL {
+                let enc = c.compress(&data).map_err(|e| e.to_string())?;
+                let dec = c.decompress(&enc, data.len()).map_err(|e| e.to_string())?;
+                prop_assert(dec == data, format!("{} roundtrip", c.name()))?;
+            }
+            Ok(())
+        });
+    }
+}

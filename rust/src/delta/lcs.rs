@@ -1,0 +1,141 @@
+//! Longest-common-subsequence matching between two models' parameter
+//! layouts (paper §4): parent and child may have *different architectures*,
+//! so deltas are only computed between parameters matched by an LCS over
+//! their shape sequences. For identical architectures this reduces to the
+//! identity mapping of corresponding layers.
+
+use crate::checkpoint::ParamEntry;
+
+/// Matched (parent_index, child_index) pairs, strictly increasing in both
+/// coordinates, with equal shapes within each pair.
+pub fn match_params(parent: &[ParamEntry], child: &[ParamEntry]) -> Vec<(usize, usize)> {
+    lcs_pairs(
+        &parent.iter().map(|e| shape_key(e)).collect::<Vec<_>>(),
+        &child.iter().map(|e| shape_key(e)).collect::<Vec<_>>(),
+    )
+}
+
+fn shape_key(e: &ParamEntry) -> String {
+    format!("{:?}", e.shape)
+}
+
+/// Classic O(n·m) DP LCS over arbitrary equatable keys, returning the
+/// matched index pairs.
+pub fn lcs_pairs<T: PartialEq>(a: &[T], b: &[T]) -> Vec<(usize, usize)> {
+    let (n, m) = (a.len(), b.len());
+    if n == 0 || m == 0 {
+        return Vec::new();
+    }
+    // dp[i][j] = LCS length of a[i..], b[j..]
+    let mut dp = vec![vec![0u32; m + 1]; n + 1];
+    for i in (0..n).rev() {
+        for j in (0..m).rev() {
+            dp[i][j] = if a[i] == b[j] {
+                dp[i + 1][j + 1] + 1
+            } else {
+                dp[i + 1][j].max(dp[i][j + 1])
+            };
+        }
+    }
+    let mut out = Vec::with_capacity(dp[0][0] as usize);
+    let (mut i, mut j) = (0, 0);
+    while i < n && j < m {
+        if a[i] == b[j] {
+            out.push((i, j));
+            i += 1;
+            j += 1;
+        } else if dp[i + 1][j] >= dp[i][j + 1] {
+            i += 1;
+        } else {
+            j += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, gen, prop_assert};
+
+    #[test]
+    fn identical_sequences_match_fully() {
+        let a = vec!["x", "y", "z"];
+        let pairs = lcs_pairs(&a, &a);
+        assert_eq!(pairs, vec![(0, 0), (1, 1), (2, 2)]);
+    }
+
+    #[test]
+    fn classic_example() {
+        let a: Vec<char> = "ABCBDAB".chars().collect();
+        let b: Vec<char> = "BDCABA".chars().collect();
+        let pairs = lcs_pairs(&a, &b);
+        assert_eq!(pairs.len(), 4); // e.g. BCAB / BDAB
+        for w in pairs.windows(2) {
+            assert!(w[0].0 < w[1].0 && w[0].1 < w[1].1);
+        }
+        for &(i, j) in &pairs {
+            assert_eq!(a[i], b[j]);
+        }
+    }
+
+    #[test]
+    fn empty_inputs() {
+        let empty: Vec<u8> = vec![];
+        assert!(lcs_pairs(&empty, &[1u8, 2]).is_empty());
+        assert!(lcs_pairs(&[1u8, 2], &empty).is_empty());
+    }
+
+    /// Oracle: LCS length via a second, recursive implementation on tiny
+    /// inputs.
+    fn lcs_len_oracle<T: PartialEq>(a: &[T], b: &[T]) -> usize {
+        if a.is_empty() || b.is_empty() {
+            0
+        } else if a[0] == b[0] {
+            1 + lcs_len_oracle(&a[1..], &b[1..])
+        } else {
+            lcs_len_oracle(&a[1..], b).max(lcs_len_oracle(a, &b[1..]))
+        }
+    }
+
+    #[test]
+    fn prop_valid_and_maximal() {
+        check("lcs valid & maximal", 120, |rng, _b| {
+            let n = rng.usize_below(9);
+            let m = rng.usize_below(9);
+            let a = gen::vec_u8(rng, n).iter().map(|x| x % 4).collect::<Vec<_>>();
+            let b = gen::vec_u8(rng, m).iter().map(|x| x % 4).collect::<Vec<_>>();
+            let pairs = lcs_pairs(&a, &b);
+            // valid: strictly increasing and equal elements
+            for w in pairs.windows(2) {
+                prop_assert(w[0].0 < w[1].0 && w[0].1 < w[1].1, "not increasing")?;
+            }
+            for &(i, j) in &pairs {
+                prop_assert(a[i] == b[j], "pair elements differ")?;
+            }
+            // maximal: matches the oracle length
+            prop_assert(
+                pairs.len() == lcs_len_oracle(&a, &b),
+                format!("len {} != oracle", pairs.len()),
+            )
+        });
+    }
+
+    #[test]
+    fn param_matching_same_arch_is_identity() {
+        let zoo = crate::checkpoint::testutil::tiny_zoo();
+        let spec = zoo.arch("t0").unwrap();
+        let pairs = match_params(&spec.layout, &spec.layout);
+        assert_eq!(pairs.len(), spec.layout.len());
+        assert!(pairs.iter().all(|&(i, j)| i == j));
+    }
+
+    #[test]
+    fn param_matching_cross_arch_uses_shapes() {
+        let zoo = crate::checkpoint::testutil::tiny_zoo();
+        let t0 = zoo.arch("t0").unwrap(); // shapes [2,3],[4],[4]
+        let t1 = zoo.arch("t1").unwrap(); // shapes [2,3],[6]
+        let pairs = match_params(&t0.layout, &t1.layout);
+        assert_eq!(pairs, vec![(0, 0)]); // only the [2,3] tensors match
+    }
+}

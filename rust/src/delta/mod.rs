@@ -1,0 +1,581 @@
+//! Delta compression pipeline (paper §4, Algorithm 1).
+//!
+//! Storing a child model against its parent:
+//! 1. LCS-match parameters of equal shape between the two layouts
+//!    ([`lcs`]) — identity mapping for same-architecture pairs;
+//! 2. quantize each matched delta with the error-bounded quantizer
+//!    ([`quant`], the Pallas kernel on the hot path);
+//! 3. losslessly compress the quantized delta ([`codec`]);
+//! 4. accept per-tensor only if the encoded object is smaller than raw;
+//! 5. accept the *model* only if the reconstructed checkpoint passes the
+//!    caller's accuracy check (MGit rejects compression whose test-accuracy
+//!    drop exceeds the configured threshold) — hence the two-phase
+//!    [`prepare_delta`] / [`commit`] API: candidates are built in memory,
+//!    tested, and only then written to the store.
+//!
+//! Chains are recursive: a parent may itself be delta-compressed; loading
+//! resolves the chain up to the first raw ancestor ([`load`]).
+
+pub mod codec;
+pub mod lcs;
+pub mod quant;
+pub mod rle;
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+pub use codec::Codec;
+pub use quant::{DeltaKernel, NativeKernel};
+
+use crate::checkpoint::{ArchSpec, Checkpoint, ModelZoo};
+use crate::store::format::TensorObject;
+use crate::store::{hash_tensor, ObjectId, Store};
+use crate::tensor::{bytes_to_i32, f32_to_bytes, i32_to_bytes, DType};
+use crate::util::json::Json;
+
+/// A model as stored in the CAS: arch + per-parameter content ids.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StoredModel {
+    pub arch: String,
+    pub params: Vec<(String, ObjectId)>,
+}
+
+impl StoredModel {
+    pub fn to_json(&self) -> Json {
+        Json::obj().set("arch", self.arch.as_str()).set(
+            "params",
+            Json::Arr(
+                self.params
+                    .iter()
+                    .map(|(n, id)| Json::obj().set("name", n.as_str()).set("id", id.hex()))
+                    .collect(),
+            ),
+        )
+    }
+
+    pub fn from_json(j: &Json) -> Result<StoredModel> {
+        let mut params = Vec::new();
+        for p in j.req_arr("params")? {
+            params.push((
+                p.req_str("name")?.to_string(),
+                ObjectId::from_hex(p.req_str("id")?)?,
+            ));
+        }
+        Ok(StoredModel { arch: j.req_str("arch")?.to_string(), params })
+    }
+
+    pub fn param_id(&self, name: &str) -> Option<ObjectId> {
+        self.params.iter().find(|(n, _)| n == name).map(|(_, id)| *id)
+    }
+
+    /// All referenced tensor objects (GC roots contribution).
+    pub fn refs(&self) -> Vec<ObjectId> {
+        self.params.iter().map(|(_, id)| *id).collect()
+    }
+}
+
+/// Configuration for delta compression.
+#[derive(Debug, Clone, Copy)]
+pub struct CompressConfig {
+    /// Quantization error bound ε (paper default 1e-4).
+    pub eps: f32,
+    pub codec: Codec,
+    /// Snap child values onto the quantization grid *before* computing
+    /// deltas (the paper's G4 trick: "we quantize parameters before
+    /// calculating deltas so that the sparsity is preserved" — exact
+    /// zeros stay exact zeros through the delta chain).
+    pub prequantize: bool,
+}
+
+impl Default for CompressConfig {
+    fn default() -> Self {
+        CompressConfig { eps: 1e-4, codec: Codec::Deflate, prequantize: false }
+    }
+}
+
+/// Per-model compression outcome (feeds the Table-4 bench).
+#[derive(Debug, Clone, Default)]
+pub struct CompressReport {
+    /// Raw f32 payload bytes of the model.
+    pub raw_bytes: u64,
+    /// Bytes of objects newly written for this model (dedup hits cost 0).
+    pub stored_bytes: u64,
+    pub n_params: usize,
+    pub n_delta: usize,
+    pub n_raw: usize,
+    pub n_dedup: usize,
+    /// Max |reconstructed − original| over all delta-encoded elements.
+    pub max_abs_err: f64,
+}
+
+/// A prepared (not yet committed) compressed encoding of one model.
+pub struct Candidate {
+    pub model: StoredModel,
+    /// (id, encoded object) pairs that `commit` will put.
+    pub objects: Vec<(ObjectId, Vec<u8>)>,
+    /// The reconstructed checkpoint m2' (what tests must be run against).
+    pub checkpoint: Checkpoint,
+    pub report: CompressReport,
+}
+
+/// Store a checkpoint without delta compression (content hashing only —
+/// the paper's "Hash" configuration; identical tensors dedup across
+/// models automatically).
+pub fn store_raw(store: &Store, spec: &ArchSpec, ck: &Checkpoint) -> Result<(StoredModel, CompressReport)> {
+    ck.check_arch(spec)?;
+    let mut params = Vec::with_capacity(spec.layout.len());
+    let mut report = CompressReport { n_params: spec.layout.len(), ..Default::default() };
+    for (entry, slice) in ck.iter_params(spec) {
+        let payload = f32_to_bytes(slice);
+        report.raw_bytes += payload.len() as u64;
+        let id = hash_tensor(DType::F32, &entry.shape, &payload);
+        let obj = TensorObject::Raw { dtype: DType::F32, shape: entry.shape.clone(), payload };
+        let encoded = obj.encode();
+        if store.put(id, &encoded)? {
+            report.stored_bytes += encoded.len() as u64;
+            report.n_raw += 1;
+        } else {
+            report.n_dedup += 1;
+        }
+        params.push((entry.name.clone(), id));
+    }
+    Ok((StoredModel { arch: spec.name.clone(), params }, report))
+}
+
+/// Build a delta-compressed candidate of `child` against `parent`.
+///
+/// `parent_model` supplies the content ids the delta objects point at; the
+/// parent checkpoint must be the *reconstructed* parent (i.e. what `load`
+/// returns), so chains stay consistent.
+#[allow(clippy::too_many_arguments)]
+pub fn prepare_delta(
+    store: &Store,
+    child_spec: &ArchSpec,
+    child: &Checkpoint,
+    parent_spec: &ArchSpec,
+    parent: &Checkpoint,
+    parent_model: &StoredModel,
+    cfg: CompressConfig,
+    kernel: &dyn DeltaKernel,
+) -> Result<Candidate> {
+    child.check_arch(child_spec)?;
+    parent.check_arch(parent_spec)?;
+    let matches = lcs::match_params(&parent_spec.layout, &child_spec.layout);
+    let matched_child: HashMap<usize, usize> =
+        matches.iter().map(|&(pi, ci)| (ci, pi)).collect();
+
+    let mut report = CompressReport { n_params: child_spec.layout.len(), ..Default::default() };
+    let mut params = Vec::with_capacity(child_spec.layout.len());
+    let mut objects = Vec::new();
+    let mut flat = child.flat.clone();
+
+    let grid = quant::step(cfg.eps);
+    let snap = |c: f32| if c == 0.0 { 0.0 } else { (c / grid + 0.5).floor() * grid };
+    for (ci, entry) in child_spec.layout.iter().enumerate() {
+        let raw_child = &child.flat[entry.offset..entry.offset + entry.size];
+        let snapped: Vec<f32>;
+        let child_slice: &[f32] = if cfg.prequantize {
+            snapped = raw_child.iter().map(|&c| snap(c)).collect();
+            &snapped
+        } else {
+            raw_child
+        };
+        report.raw_bytes += (entry.size * 4) as u64;
+
+        // Try delta encoding for LCS-matched tensors.
+        let mut done = false;
+        if let Some(&pi) = matched_child.get(&ci) {
+            let pentry = &parent_spec.layout[pi];
+            let parent_slice = &parent.flat[pentry.offset..pentry.offset + pentry.size];
+            let parent_id = parent_model
+                .param_id(&pentry.name)
+                .ok_or_else(|| anyhow!("parent model missing param {}", pentry.name))?;
+            let q = if cfg.prequantize {
+                // Integer grid deltas: kp - kc, exact for grid parents.
+                parent_slice
+                    .iter()
+                    .zip(child_slice)
+                    .map(|(&p, &c)| {
+                        ((p / grid + 0.5).floor() - (c / grid + 0.5).floor()) as i32
+                    })
+                    .collect::<Vec<i32>>()
+            } else {
+                kernel.quantize(parent_slice, child_slice, cfg.eps)?
+            };
+            let compressed = cfg.codec.compress(&i32_to_bytes(&q))?;
+            let raw_len = entry.size * 4;
+            // Per-tensor acceptance: encoded object must beat raw storage.
+            if compressed.len() + 64 < raw_len {
+                let rec = if cfg.prequantize {
+                    parent_slice
+                        .iter()
+                        .zip(&q)
+                        .map(|(&p, &qi)| ((p / grid + 0.5).floor() - qi as f32) * grid)
+                        .collect::<Vec<f32>>()
+                } else {
+                    kernel.dequantize(parent_slice, &q, cfg.eps)?
+                };
+                for (r, c) in rec.iter().zip(child_slice) {
+                    report.max_abs_err = report.max_abs_err.max((r - c).abs() as f64);
+                }
+                let payload = f32_to_bytes(&rec);
+                let id = hash_tensor(DType::F32, &entry.shape, &payload);
+                let obj = TensorObject::Delta {
+                    dtype: DType::F32,
+                    shape: entry.shape.clone(),
+                    parent: parent_id,
+                    eps: cfg.eps,
+                    codec: cfg.codec.code(),
+                    n_quant: entry.size,
+                    grid: cfg.prequantize,
+                    payload: compressed,
+                };
+                let encoded = obj.encode();
+                if store.has(&id) {
+                    report.n_dedup += 1;
+                } else {
+                    report.stored_bytes += encoded.len() as u64;
+                    report.n_delta += 1;
+                    objects.push((id, encoded));
+                }
+                flat[entry.offset..entry.offset + entry.size].copy_from_slice(&rec);
+                params.push((entry.name.clone(), id));
+                done = true;
+            }
+        }
+        if !done {
+            // Store raw (unmatched shape, or delta didn't save space).
+            let payload = f32_to_bytes(child_slice);
+            let id = hash_tensor(DType::F32, &entry.shape, &payload);
+            let obj =
+                TensorObject::Raw { dtype: DType::F32, shape: entry.shape.clone(), payload };
+            let encoded = obj.encode();
+            if store.has(&id) {
+                report.n_dedup += 1;
+            } else {
+                report.stored_bytes += encoded.len() as u64;
+                report.n_raw += 1;
+                objects.push((id, encoded));
+            }
+            params.push((entry.name.clone(), id));
+        }
+    }
+
+    Ok(Candidate {
+        model: StoredModel { arch: child_spec.name.clone(), params },
+        objects,
+        checkpoint: Checkpoint { arch: child_spec.name.clone(), flat },
+        report,
+    })
+}
+
+/// Write a prepared candidate's objects into the store.
+pub fn commit(store: &Store, candidate: &Candidate) -> Result<()> {
+    for (id, bytes) in &candidate.objects {
+        store.put(*id, bytes)?;
+    }
+    Ok(())
+}
+
+/// Algorithm 1 end-to-end: try delta compression; accept only if it saves
+/// space *and* the reconstructed model passes `check` (accuracy threshold);
+/// otherwise store raw. Returns (stored model, the checkpoint that should
+/// be considered the model's content from now on, report, accepted?).
+#[allow(clippy::too_many_arguments)]
+pub fn delta_compress_checked(
+    store: &Store,
+    child_spec: &ArchSpec,
+    child: &Checkpoint,
+    parent_spec: &ArchSpec,
+    parent: &Checkpoint,
+    parent_model: &StoredModel,
+    cfg: CompressConfig,
+    kernel: &dyn DeltaKernel,
+    check: impl FnOnce(&Checkpoint) -> Result<bool>,
+) -> Result<(StoredModel, Checkpoint, CompressReport, bool)> {
+    let cand = prepare_delta(
+        store, child_spec, child, parent_spec, parent, parent_model, cfg, kernel,
+    )?;
+    let saves_space = cand.report.stored_bytes < cand.report.raw_bytes;
+    if saves_space && check(&cand.checkpoint)? {
+        commit(store, &cand)?;
+        let Candidate { model, checkpoint, report, .. } = cand;
+        Ok((model, checkpoint, report, true))
+    } else {
+        let (model, report) = store_raw(store, child_spec, child)?;
+        Ok((model, child.clone(), report, false))
+    }
+}
+
+/// Load a stored model, resolving delta chains recursively.
+pub fn load(
+    store: &Store,
+    zoo: &ModelZoo,
+    model: &StoredModel,
+    kernel: &dyn DeltaKernel,
+) -> Result<Checkpoint> {
+    let spec = zoo.arch(&model.arch)?;
+    let mut cache: HashMap<ObjectId, Vec<f32>> = HashMap::new();
+    let mut flat = vec![0f32; spec.param_count];
+    for (name, id) in &model.params {
+        let entry = spec.entry(name)?;
+        let values = resolve_tensor(store, *id, kernel, &mut cache, 0)?;
+        if values.len() != entry.size {
+            bail!(
+                "stored tensor {} has {} elements, layout wants {}",
+                name,
+                values.len(),
+                entry.size
+            );
+        }
+        flat[entry.offset..entry.offset + entry.size].copy_from_slice(&values);
+    }
+    Ok(Checkpoint { arch: model.arch.clone(), flat })
+}
+
+/// Resolve one tensor object to f32 values, following parent pointers.
+pub fn resolve_tensor(
+    store: &Store,
+    id: ObjectId,
+    kernel: &dyn DeltaKernel,
+    cache: &mut HashMap<ObjectId, Vec<f32>>,
+    depth: usize,
+) -> Result<Vec<f32>> {
+    if let Some(v) = cache.get(&id) {
+        return Ok(v.clone());
+    }
+    if depth > 10_000 {
+        bail!("delta chain too deep (cycle?) at {}", id.short());
+    }
+    let obj = TensorObject::decode(&store.get(&id)?)?;
+    let values = match obj {
+        TensorObject::Raw { dtype, payload, .. } => {
+            if dtype != DType::F32 {
+                bail!("expected f32 tensor object");
+            }
+            crate::tensor::bytes_to_f32(&payload)
+        }
+        TensorObject::Delta { parent, eps, codec, n_quant, grid, payload, .. } => {
+            let parent_vals = resolve_tensor(store, parent, kernel, cache, depth + 1)?;
+            let codec = Codec::from_code(codec)?;
+            let qbytes = codec.decompress(&payload, n_quant * 4)?;
+            let q = bytes_to_i32(&qbytes);
+            if grid {
+                // Exact grid reconstruction (sparsity-preserving):
+                // rec = (round(parent/step) − q) · step.
+                let step = quant::step(eps);
+                parent_vals
+                    .iter()
+                    .zip(&q)
+                    .map(|(&p, &qi)| ((p / step + 0.5).floor() - qi as f32) * step)
+                    .collect()
+            } else {
+                kernel.dequantize(&parent_vals, &q, eps)?
+            }
+        }
+    };
+    cache.insert(id, values.clone());
+    Ok(values)
+}
+
+/// Length of the delta chain from `id` up to its first raw ancestor.
+pub fn chain_depth(store: &Store, id: ObjectId) -> Result<usize> {
+    let mut depth = 0;
+    let mut cur = id;
+    loop {
+        match TensorObject::decode(&store.get(&cur)?)? {
+            TensorObject::Raw { .. } => return Ok(depth),
+            TensorObject::Delta { parent, .. } => {
+                depth += 1;
+                cur = parent;
+                if depth > 10_000 {
+                    bail!("delta chain too deep (cycle?)");
+                }
+            }
+        }
+    }
+}
+
+/// Size of the "Full" baseline encodings of Table 4: the whole model's
+/// values quantized (optionally) and compressed with `codec`, independent
+/// of any parent.
+pub fn full_model_compressed_size(
+    ck: &Checkpoint,
+    codec: Codec,
+    eps: f32,
+    quantize: bool,
+) -> Result<(usize, Checkpoint)> {
+    let raw = if quantize {
+        let s = quant::step(eps);
+        let q: Vec<i32> = ck.flat.iter().map(|&p| (p / s + 0.5).floor() as i32).collect();
+        let rec: Vec<f32> = q.iter().map(|&qi| qi as f32 * s).collect();
+        let bytes = i32_to_bytes(&q);
+        let rec_ck = Checkpoint { arch: ck.arch.clone(), flat: rec };
+        return Ok((codec.compress(&bytes)?.len(), rec_ck));
+    } else {
+        f32_to_bytes(&ck.flat)
+    };
+    Ok((codec.compress(&raw)?.len(), ck.clone()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::testutil::tiny_zoo;
+    use crate::util::rng::Rng;
+
+    fn perturbed(ck: &Checkpoint, scale: f32, seed: u64) -> Checkpoint {
+        let mut rng = Rng::new(seed);
+        let flat = ck.flat.iter().map(|&x| x + rng.normal_f32(0.0, scale)).collect();
+        Checkpoint { arch: ck.arch.clone(), flat }
+    }
+
+    #[test]
+    fn raw_store_dedups_identical_models() {
+        let zoo = tiny_zoo();
+        let spec = zoo.arch("t0").unwrap();
+        let store = Store::in_memory();
+        let ck = Checkpoint::init(spec, 1);
+        let (m1, r1) = store_raw(&store, spec, &ck).unwrap();
+        let (m2, r2) = store_raw(&store, spec, &ck).unwrap();
+        assert_eq!(m1, m2);
+        assert_eq!(r1.n_raw, 3);
+        assert_eq!(r2.n_dedup, 3);
+        assert_eq!(r2.stored_bytes, 0);
+        let loaded = load(&store, &zoo, &m1, &NativeKernel).unwrap();
+        assert_eq!(loaded.flat, ck.flat);
+    }
+
+    /// Build a larger fake spec so the per-tensor size test is meaningful.
+    fn big_zoo() -> ModelZoo {
+        let text = r#"{
+          "vocab": 16, "max_seq": 4, "n_classes": 2, "batch": 2,
+          "delta_chunk": 64,
+          "special_tokens": {"cls": 14, "mask": 15, "ignore_label": -100},
+          "archs": {"big": {
+              "d_model": 2, "n_layers": 1, "n_heads": 1, "d_ff": 4,
+              "param_count": 4096,
+              "layout": [
+                {"name":"w.a","shape":[32,64],"offset":0,"size":2048,"init":"normal"},
+                {"name":"w.b","shape":[2048],"offset":2048,"size":2048,"init":"normal"}
+              ],
+              "dag": {"nodes": [{"id":"a","op":"linear","attrs":"x","params":["w.a"]},
+                                {"id":"b","op":"linear","attrs":"y","params":["w.b"]}],
+                      "edges": [["a","b"]]}
+          }},
+          "artifacts": {"big": {}},
+          "delta_kernels": {"quant": "q", "dequant": "d"}
+        }"#;
+        ModelZoo::from_json(&crate::util::json::parse(text).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn delta_roundtrip_within_bound() {
+        let zoo = big_zoo();
+        let spec = zoo.arch("big").unwrap();
+        let store = Store::in_memory();
+        let parent = Checkpoint::init(spec, 1);
+        let child = perturbed(&parent, 5e-5, 2);
+        let (pm, _) = store_raw(&store, spec, &parent).unwrap();
+        let cfg = CompressConfig::default();
+        let cand =
+            prepare_delta(&store, spec, &child, spec, &parent, &pm, cfg, &NativeKernel).unwrap();
+        assert!(cand.report.n_delta > 0, "report: {:?}", cand.report);
+        assert!(cand.report.stored_bytes < cand.report.raw_bytes);
+        assert!(cand.report.max_abs_err <= quant::step(cfg.eps) as f64 * 1.001);
+        commit(&store, &cand).unwrap();
+        let loaded = load(&store, &zoo, &cand.model, &NativeKernel).unwrap();
+        assert_eq!(loaded.flat, cand.checkpoint.flat); // bit-exact after commit
+        // and close to the original child
+        for (a, b) in loaded.flat.iter().zip(&child.flat) {
+            assert!((a - b).abs() <= quant::step(cfg.eps) * 1.001);
+        }
+    }
+
+    #[test]
+    fn rejects_when_check_fails() {
+        let zoo = big_zoo();
+        let spec = zoo.arch("big").unwrap();
+        let store = Store::in_memory();
+        let parent = Checkpoint::init(spec, 1);
+        let child = perturbed(&parent, 5e-5, 2);
+        let (pm, _) = store_raw(&store, spec, &parent).unwrap();
+        let (model, ck, _report, accepted) = delta_compress_checked(
+            &store, spec, &child, spec, &parent, &pm,
+            CompressConfig::default(), &NativeKernel,
+            |_rec| Ok(false), // accuracy check fails -> must store raw
+        )
+        .unwrap();
+        assert!(!accepted);
+        assert_eq!(ck.flat, child.flat);
+        let loaded = load(&store, &zoo, &model, &NativeKernel).unwrap();
+        assert_eq!(loaded.flat, child.flat); // lossless path
+    }
+
+    #[test]
+    fn recursive_chain_resolves() {
+        let zoo = big_zoo();
+        let spec = zoo.arch("big").unwrap();
+        let store = Store::in_memory();
+        let cfg = CompressConfig::default();
+
+        let v0 = Checkpoint::init(spec, 1);
+        let (m0, _) = store_raw(&store, spec, &v0).unwrap();
+        let mut prev_ck = v0;
+        let mut prev_m = m0;
+        let mut originals = Vec::new();
+        // Noise well above the quantization step so every version's
+        // reconstruction differs from its parent (distinct content hashes,
+        // hence a real 5-deep chain).
+        for ver in 0..5u64 {
+            let child = perturbed(&prev_ck, 3e-4, 10 + ver);
+            originals.push(child.clone());
+            let cand = prepare_delta(
+                &store, spec, &child, spec, &prev_ck, &prev_m, cfg, &NativeKernel,
+            )
+            .unwrap();
+            commit(&store, &cand).unwrap();
+            prev_ck = cand.checkpoint;
+            prev_m = cand.model;
+        }
+        // Depth of the last version's first param should be 5.
+        let id = prev_m.param_id("w.a").unwrap();
+        assert_eq!(chain_depth(&store, id).unwrap(), 5);
+        let loaded = load(&store, &zoo, &prev_m, &NativeKernel).unwrap();
+        // Error accumulates but stays bounded by 5 * step.
+        let bound = 5.0 * quant::step(cfg.eps) * 1.01;
+        for (a, b) in loaded.flat.iter().zip(&originals.last().unwrap().flat) {
+            assert!((a - b).abs() <= bound);
+        }
+    }
+
+    #[test]
+    fn stored_model_json_roundtrip() {
+        let zoo = tiny_zoo();
+        let spec = zoo.arch("t0").unwrap();
+        let store = Store::in_memory();
+        let (m, _) = store_raw(&store, spec, &Checkpoint::init(spec, 0)).unwrap();
+        let j = m.to_json();
+        let back = StoredModel::from_json(&j).unwrap();
+        assert_eq!(m, back);
+        assert_eq!(m.refs().len(), 3);
+    }
+
+    #[test]
+    fn full_baseline_sizes() {
+        let zoo = big_zoo();
+        let spec = zoo.arch("big").unwrap();
+        let ck = Checkpoint::init(spec, 3);
+        let (q_size, rec) =
+            full_model_compressed_size(&ck, Codec::Deflate, 1e-4, true).unwrap();
+        let (nq_size, same) =
+            full_model_compressed_size(&ck, Codec::Deflate, 1e-4, false).unwrap();
+        assert!(q_size > 0 && nq_size > 0);
+        assert_eq!(same.flat, ck.flat);
+        // quantized reconstruction within bound
+        for (a, b) in rec.flat.iter().zip(&ck.flat) {
+            assert!((a - b).abs() <= quant::step(1e-4) * 1.001);
+        }
+    }
+}

@@ -1,0 +1,120 @@
+//! Native (CPU) reference implementation of the delta quantizer.
+//!
+//! The formula is the paper's (§4, following Hu et al. 2020):
+//!
+//! ```text
+//! Δp = p_parent − p_child
+//! Δp_quantized = floor(Δp / (2·ln(1+ε)) + 0.5)
+//! ```
+//!
+//! The hot path runs the AOT-compiled Pallas kernel through PJRT
+//! ([`crate::runtime::Runtime`] implements [`DeltaKernel`] too); this
+//! native version is the oracle and the fallback when no artifacts are
+//! present (pure-storage unit tests, property tests).
+//!
+//! Guarantee: `|Δp − q·step| ≤ step/2 = ln(1+ε)` for all finite inputs
+//! within i32 range, which bounds the per-element reconstruction error.
+
+use anyhow::Result;
+
+/// Backend-agnostic quantization interface (native or PJRT kernel).
+pub trait DeltaKernel {
+    fn quantize(&self, parent: &[f32], child: &[f32], eps: f32) -> Result<Vec<i32>>;
+    fn dequantize(&self, parent: &[f32], q: &[i32], eps: f32) -> Result<Vec<f32>>;
+}
+
+/// Quantization step for a given error bound.
+pub fn step(eps: f32) -> f32 {
+    2.0 * (1.0 + eps).ln()
+}
+
+/// Pure-Rust kernel (bit-compatible with the Pallas kernel's math).
+pub struct NativeKernel;
+
+impl DeltaKernel for NativeKernel {
+    fn quantize(&self, parent: &[f32], child: &[f32], eps: f32) -> Result<Vec<i32>> {
+        anyhow::ensure!(parent.len() == child.len(), "length mismatch");
+        let s = step(eps);
+        Ok(parent
+            .iter()
+            .zip(child)
+            .map(|(&p, &c)| ((p - c) / s + 0.5).floor() as i32)
+            .collect())
+    }
+
+    fn dequantize(&self, parent: &[f32], q: &[i32], eps: f32) -> Result<Vec<f32>> {
+        anyhow::ensure!(parent.len() == q.len(), "length mismatch");
+        let s = step(eps);
+        Ok(parent
+            .iter()
+            .zip(q)
+            .map(|(&p, &qi)| p - qi as f32 * s)
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, gen, prop_assert};
+
+    #[test]
+    fn zero_delta_quantizes_to_zero() {
+        let v = vec![1.0f32, -2.0, 0.0, 3.5];
+        let q = NativeKernel.quantize(&v, &v, 1e-4).unwrap();
+        assert!(q.iter().all(|&x| x == 0));
+        let back = NativeKernel.dequantize(&v, &q, 1e-4).unwrap();
+        assert_eq!(back, v);
+    }
+
+    #[test]
+    fn error_bound_holds() {
+        let eps = 1e-4f32;
+        let parent = vec![0.5f32, -0.25, 1.0, 2.0];
+        let child = vec![0.5003f32, -0.2504, 0.9991, 2.0002];
+        let q = NativeKernel.quantize(&parent, &child, eps).unwrap();
+        let rec = NativeKernel.dequantize(&parent, &q, eps).unwrap();
+        for (r, c) in rec.iter().zip(&child) {
+            assert!((r - c).abs() <= step(eps), "err {}", (r - c).abs());
+        }
+    }
+
+    #[test]
+    fn larger_eps_zeroes_more() {
+        let mut rng = crate::util::rng::Rng::new(3);
+        let parent: Vec<f32> = (0..1000).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let child: Vec<f32> = parent.iter().map(|&p| p + rng.normal_f32(0.0, 1e-4)).collect();
+        let q_small = NativeKernel.quantize(&parent, &child, 1e-5).unwrap();
+        let q_large = NativeKernel.quantize(&parent, &child, 1e-3).unwrap();
+        let nz = |q: &[i32]| q.iter().filter(|&&x| x != 0).count();
+        assert!(nz(&q_large) < nz(&q_small));
+    }
+
+    #[test]
+    fn length_mismatch_rejected() {
+        assert!(NativeKernel.quantize(&[1.0], &[1.0, 2.0], 1e-4).is_err());
+        assert!(NativeKernel.dequantize(&[1.0], &[1, 2], 1e-4).is_err());
+    }
+
+    #[test]
+    fn prop_error_bound() {
+        check("quantize error bound", 100, |rng, b| {
+            let n = 1 + gen::len(rng, b);
+            let eps = [1e-5f32, 1e-4, 1e-3][rng.usize_below(3)];
+            let parent = gen::vec_f32(rng, n, 1.0);
+            let noise = gen::vec_f32(rng, n, 0.01);
+            let child: Vec<f32> =
+                parent.iter().zip(&noise).map(|(&p, &d)| p + d).collect();
+            let q = NativeKernel.quantize(&parent, &child, eps).unwrap();
+            let rec = NativeKernel.dequantize(&parent, &q, eps).unwrap();
+            let bound = step(eps) * (1.0 + 1e-4); // small f32 slack
+            for (r, c) in rec.iter().zip(&child) {
+                prop_assert(
+                    (r - c).abs() <= bound,
+                    format!("err {} > bound {}", (r - c).abs(), bound),
+                )?;
+            }
+            Ok(())
+        });
+    }
+}

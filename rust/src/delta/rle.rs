@@ -1,0 +1,131 @@
+//! Byte-oriented run-length coding (PackBits-style), the paper's "RLE"
+//! lossless codec option (Robinson & Cherry, 1967).
+//!
+//! Control byte `c`:
+//! * `c < 128`  — literal run: copy the next `c + 1` bytes verbatim,
+//! * `c >= 128` — repeat run: repeat the next byte `c - 126` times
+//!   (runs of 2..=129).
+//!
+//! Quantized deltas are dominated by zero bytes, RLE's best case; worst
+//! case expansion on incompressible data is 1/128 overhead.
+
+use anyhow::{bail, Result};
+
+pub fn encode(data: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(data.len() / 4 + 16);
+    let mut i = 0;
+    while i < data.len() {
+        // Measure the run starting at i.
+        let b = data[i];
+        let mut run = 1;
+        while i + run < data.len() && data[i + run] == b && run < 129 {
+            run += 1;
+        }
+        if run >= 2 {
+            out.push(126 + run as u8); // 128..=255 encodes runs 2..=129
+            out.push(b);
+            i += run;
+        } else {
+            // Collect literals until the next run of >= 3 (a run of 2 is
+            // not worth breaking a literal for) or the 128-byte cap.
+            let start = i;
+            i += 1;
+            while i < data.len() && (i - start) < 128 {
+                let b = data[i];
+                let mut r = 1;
+                while i + r < data.len() && data[i + r] == b && r < 3 {
+                    r += 1;
+                }
+                if r >= 3 {
+                    break;
+                }
+                i += 1;
+            }
+            let len = i - start;
+            out.push((len - 1) as u8);
+            out.extend_from_slice(&data[start..i]);
+        }
+    }
+    out
+}
+
+pub fn decode(data: &[u8]) -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(data.len() * 2);
+    let mut i = 0;
+    while i < data.len() {
+        let c = data[i];
+        i += 1;
+        if c < 128 {
+            let n = c as usize + 1;
+            if i + n > data.len() {
+                bail!("truncated RLE literal run");
+            }
+            out.extend_from_slice(&data[i..i + n]);
+            i += n;
+        } else {
+            if i >= data.len() {
+                bail!("truncated RLE repeat run");
+            }
+            let n = c as usize - 126;
+            let b = data[i];
+            i += 1;
+            out.resize(out.len() + n, b);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, gen, prop_assert};
+
+    #[test]
+    fn empty() {
+        assert_eq!(encode(&[]), Vec::<u8>::new());
+        assert_eq!(decode(&[]).unwrap(), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn zeros_compress_well() {
+        let data = vec![0u8; 10_000];
+        let enc = encode(&data);
+        assert!(enc.len() < data.len() / 50, "enc={}", enc.len());
+        assert_eq!(decode(&enc).unwrap(), data);
+    }
+
+    #[test]
+    fn worst_case_bounded() {
+        let data: Vec<u8> = (0..=255u8).cycle().take(4096).collect();
+        let enc = encode(&data);
+        assert!(enc.len() <= data.len() + data.len() / 128 + 2);
+        assert_eq!(decode(&enc).unwrap(), data);
+    }
+
+    #[test]
+    fn truncated_input_rejected() {
+        assert!(decode(&[5, 1, 2]).is_err()); // literal run of 6, only 2 bytes
+        assert!(decode(&[200]).is_err()); // repeat run missing its byte
+    }
+
+    #[test]
+    fn prop_roundtrip_random() {
+        check("rle roundtrip random bytes", 150, |rng, b| {
+            let n = gen::len(rng, b);
+            let data = gen::vec_u8(rng, n);
+            let back = decode(&encode(&data)).map_err(|e| e.to_string())?;
+            prop_assert(back == data, "roundtrip mismatch")
+        });
+    }
+
+    #[test]
+    fn prop_roundtrip_runs() {
+        check("rle roundtrip runny bytes", 150, |rng, b| {
+            let n = gen::len(rng, b);
+            let data = gen::vec_u8_runs(rng, n);
+            let enc = encode(&data);
+            let back = decode(&enc).map_err(|e| e.to_string())?;
+            prop_assert(back == data, "roundtrip mismatch")
+        });
+    }
+}

@@ -1,0 +1,373 @@
+//! The `diff` primitive (paper §3.2 + Appendix A, Algorithm 3).
+//!
+//! Computes the node/edge additions and deletions that transform model A
+//! into model B, via hash-table bucketed greedy matching:
+//!
+//! 1. bucket both models' layers and edges by key hash (structural key =
+//!    op/attrs; contextual key additionally includes parameter content
+//!    hashes);
+//! 2. greedily match edges bucket-by-bucket, committing a pair only when
+//!    both endpoints' matched-status is consistent (a node may match at
+//!    most one node);
+//! 3. match leftover nodes by node-hash buckets in order;
+//! 4. sort matches by A's topological order and drop *inverse* matches
+//!    (pairs that go backwards in B's order), keeping a monotone matching;
+//! 5. report unmatched nodes/edges of B as additions and of A as
+//!    deletions.
+//!
+//! The divergence scores of §3.2 are `|edge diff| / (|E_A| + |E_B|)` under
+//! the structural and contextual key respectively; [`value_distance`]
+//! refines the contextual signal with a normalized parameter distance
+//! (hash equality is too coarse for fully-finetuned children, which share
+//! structure but no exact tensor values).
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::checkpoint::{ArchSpec, Checkpoint};
+use crate::modeldag::ModelDag;
+
+/// Which key the matching uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DiffMode {
+    Structural,
+    Contextual,
+}
+
+/// Output of `module_diff`: everything needed to turn A into B.
+#[derive(Debug, Clone, Default)]
+pub struct DiffResult {
+    /// Matched layer pairs (index in A, index in B).
+    pub matched_nodes: Vec<(usize, usize)>,
+    /// Matched edge pairs (edge index in A, edge index in B).
+    pub matched_edges: Vec<(usize, usize)>,
+    /// Layer indices of B not present in A.
+    pub add_nodes: Vec<usize>,
+    /// Layer indices of A not present in B.
+    pub del_nodes: Vec<usize>,
+    /// Edge indices of B to add.
+    pub add_edges: Vec<usize>,
+    /// Edge indices of A to delete.
+    pub del_edges: Vec<usize>,
+}
+
+impl DiffResult {
+    pub fn is_empty(&self) -> bool {
+        self.add_nodes.is_empty()
+            && self.del_nodes.is_empty()
+            && self.add_edges.is_empty()
+            && self.del_edges.is_empty()
+    }
+
+    /// §3.2 divergence score: |edge diff| / (|E_A| + |E_B|).
+    pub fn divergence(&self, a: &ModelDag, b: &ModelDag) -> f64 {
+        let denom = (a.n_edges() + b.n_edges()) as f64;
+        if denom == 0.0 {
+            return 0.0;
+        }
+        (self.add_edges.len() + self.del_edges.len()) as f64 / denom
+    }
+}
+
+/// Algorithm 3.
+pub fn module_diff(a: &ModelDag, b: &ModelDag, mode: DiffMode) -> DiffResult {
+    let contextual = mode == DiffMode::Contextual;
+    let akeys: Vec<u64> = a.layers.iter().map(|l| l.key_hash(contextual)).collect();
+    let bkeys: Vec<u64> = b.layers.iter().map(|l| l.key_hash(contextual)).collect();
+
+    // Edge hash = (key of src, key of dst).
+    let edge_key = |keys: &[u64], (s, d): (usize, usize)| -> (u64, u64) { (keys[s], keys[d]) };
+
+    // Bucket B's edges by hash (value: edge indices, topological order —
+    // edges are emitted in topo order by construction).
+    let mut b_edge_buckets: HashMap<(u64, u64), Vec<usize>> = HashMap::new();
+    for (ei, &e) in b.edges.iter().enumerate() {
+        b_edge_buckets.entry(edge_key(&bkeys, e)).or_default().push(ei);
+    }
+
+    // matched_a[i] = Some(j) when A.layer i is matched to B.layer j.
+    let mut matched_a: Vec<Option<usize>> = vec![None; a.n_layers()];
+    let mut matched_b: Vec<Option<usize>> = vec![None; b.n_layers()];
+    let mut matched_edges: Vec<(usize, usize)> = Vec::new();
+
+    // Pass 1: greedy edge matching.
+    for (aei, &ae) in a.edges.iter().enumerate() {
+        let key = edge_key(&akeys, ae);
+        let Some(bucket) = b_edge_buckets.get_mut(&key) else { continue };
+        let mut chosen: Option<usize> = None;
+        for (slot, &bei) in bucket.iter().enumerate() {
+            let be = b.edges[bei];
+            // check(e1, e2): endpoints must have consistent matched status.
+            let src_ok = match matched_a[ae.0] {
+                Some(j) => j == be.0,
+                None => matched_b[be.0].is_none(),
+            };
+            let dst_ok = match matched_a[ae.1] {
+                Some(j) => j == be.1,
+                None => matched_b[be.1].is_none(),
+            };
+            if src_ok && dst_ok {
+                chosen = Some(slot);
+                break;
+            }
+        }
+        if let Some(slot) = chosen {
+            let bei = bucket.remove(slot);
+            let be = b.edges[bei];
+            matched_a[ae.0] = Some(be.0);
+            matched_b[be.0] = Some(ae.0);
+            matched_a[ae.1] = Some(be.1);
+            matched_b[be.1] = Some(ae.1);
+            matched_edges.push((aei, bei));
+        }
+    }
+
+    // Pass 2: match leftover nodes by node-key buckets, in order.
+    let mut b_node_buckets: HashMap<u64, Vec<usize>> = HashMap::new();
+    for (j, &k) in bkeys.iter().enumerate() {
+        if matched_b[j].is_none() {
+            b_node_buckets.entry(k).or_default().push(j);
+        }
+    }
+    for (i, &k) in akeys.iter().enumerate() {
+        if matched_a[i].is_some() {
+            continue;
+        }
+        if let Some(bucket) = b_node_buckets.get_mut(&k) {
+            if let Some(j) = bucket.first().copied() {
+                bucket.remove(0);
+                matched_a[i] = Some(j);
+                matched_b[j] = Some(i);
+            }
+        }
+    }
+
+    // Pass 3: drop inverse matches — keep node pairs monotone in B when
+    // scanned in A's topological order (A-B-A-C vs A-B-C-A example).
+    let mut last_b: isize = -1;
+    let mut kept_nodes: Vec<(usize, usize)> = Vec::new();
+    for i in 0..a.n_layers() {
+        if let Some(j) = matched_a[i] {
+            if (j as isize) > last_b {
+                kept_nodes.push((i, j));
+                last_b = j as isize;
+            } else {
+                matched_a[i] = None;
+                matched_b[j] = None;
+            }
+        }
+    }
+    // Re-filter edge matches whose endpoints got dropped.
+    matched_edges.retain(|&(aei, bei)| {
+        let ae = a.edges[aei];
+        let be = b.edges[bei];
+        matched_a[ae.0] == Some(be.0) && matched_a[ae.1] == Some(be.1)
+    });
+
+    // Matched edge set for add/del computation: an A-edge survives if both
+    // endpoints map and the corresponding B edge exists.
+    let b_edge_set: HashMap<(usize, usize), usize> = b
+        .edges
+        .iter()
+        .enumerate()
+        .map(|(ei, &e)| (e, ei))
+        .collect();
+    let mut b_edge_matched = vec![false; b.edges.len()];
+    let mut del_edges = Vec::new();
+    for (aei, &(s, d)) in a.edges.iter().enumerate() {
+        let mapped = match (matched_a[s], matched_a[d]) {
+            (Some(ms), Some(md)) => b_edge_set.get(&(ms, md)).copied(),
+            _ => None,
+        };
+        match mapped {
+            Some(bei) => b_edge_matched[bei] = true,
+            None => del_edges.push(aei),
+        }
+    }
+    let add_edges: Vec<usize> =
+        (0..b.edges.len()).filter(|&ei| !b_edge_matched[ei]).collect();
+
+    DiffResult {
+        add_nodes: (0..b.n_layers()).filter(|&j| matched_b[j].is_none()).collect(),
+        del_nodes: (0..a.n_layers()).filter(|&i| matched_a[i].is_none()).collect(),
+        add_edges,
+        del_edges,
+        matched_nodes: kept_nodes,
+        matched_edges,
+    }
+}
+
+/// Both §3.2 divergence scores at once.
+pub fn divergence_scores(a: &ModelDag, b: &ModelDag) -> (f64, f64) {
+    let ds = module_diff(a, b, DiffMode::Structural).divergence(a, b);
+    let dc = module_diff(a, b, DiffMode::Contextual).divergence(a, b);
+    (ds, dc)
+}
+
+/// Normalized parameter-value distance over structurally matched layers:
+/// `||A − B|| / (||A|| + ||B||)` summed over matched, shape-equal tensors
+/// (1.0 when nothing matches). ≈0 for finetuned children, ≈0.7 for
+/// independently initialized models of the same architecture.
+pub fn value_distance(
+    a_dag: &ModelDag,
+    a_spec: &ArchSpec,
+    a_ck: &Checkpoint,
+    b_dag: &ModelDag,
+    b_spec: &ArchSpec,
+    b_ck: &Checkpoint,
+) -> Result<f64> {
+    let diff = module_diff(a_dag, b_dag, DiffMode::Structural);
+    let mut num = 0.0f64;
+    let (mut na, mut nb) = (0.0f64, 0.0f64);
+    let mut any = false;
+    for &(i, j) in &diff.matched_nodes {
+        let la = &a_dag.layers[i];
+        let lb = &b_dag.layers[j];
+        for (pa, pb) in la.params.iter().zip(&lb.params) {
+            let (ea, eb) = (a_spec.entry(pa)?, b_spec.entry(pb)?);
+            if ea.shape != eb.shape {
+                continue;
+            }
+            let va = &a_ck.flat[ea.offset..ea.offset + ea.size];
+            let vb = &b_ck.flat[eb.offset..eb.offset + eb.size];
+            for (x, y) in va.iter().zip(vb) {
+                let (x, y) = (*x as f64, *y as f64);
+                num += (x - y) * (x - y);
+                na += x * x;
+                nb += y * y;
+            }
+            any = true;
+        }
+    }
+    if !any {
+        return Ok(1.0);
+    }
+    let denom = na.sqrt() + nb.sqrt();
+    if denom == 0.0 {
+        return Ok(0.0);
+    }
+    Ok((num.sqrt() / denom).min(1.0))
+}
+
+/// Layers of `other` whose parameters differ from `base` despite matching
+/// structurally — the "changed layers" input of the merge decision tree.
+pub fn changed_layers(base: &ModelDag, other: &ModelDag) -> Vec<usize> {
+    let diff = module_diff(base, other, DiffMode::Structural);
+    let mut changed: Vec<usize> = diff
+        .matched_nodes
+        .iter()
+        .filter(|&&(i, j)| base.layers[i].contextual_key() != other.layers[j].contextual_key())
+        .map(|&(i, _)| i)
+        .collect();
+    // Structurally new layers count as changed too (indices in base space
+    // don't exist; report via sentinel usize::MAX offsets appended after).
+    changed.sort_unstable();
+    changed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::testutil::tiny_zoo;
+    use crate::checkpoint::Checkpoint;
+    use crate::delta::store_raw;
+    use crate::store::Store;
+
+    fn dag_of(seed: u64, arch: &str) -> (ModelDag, Checkpoint) {
+        let zoo = tiny_zoo();
+        let spec = zoo.arch(arch).unwrap();
+        let store = Store::in_memory();
+        let ck = Checkpoint::init(spec, seed);
+        let (sm, _) = store_raw(&store, spec, &ck).unwrap();
+        (ModelDag::from_arch(spec, Some(&sm)).unwrap(), ck)
+    }
+
+    #[test]
+    fn diff_self_is_empty() {
+        let (dag, _) = dag_of(1, "t0");
+        for mode in [DiffMode::Structural, DiffMode::Contextual] {
+            let d = module_diff(&dag, &dag, mode);
+            assert!(d.is_empty(), "mode {mode:?}: {d:?}");
+            assert_eq!(d.matched_nodes.len(), dag.n_layers());
+            assert_eq!(d.divergence(&dag, &dag), 0.0);
+        }
+    }
+
+    #[test]
+    fn same_arch_different_values() {
+        let (a, _) = dag_of(1, "t0");
+        let (b, _) = dag_of(2, "t0");
+        // Structurally identical…
+        let ds = module_diff(&a, &b, DiffMode::Structural);
+        assert!(ds.is_empty());
+        // …contextually disjoint (no shared tensors).
+        let dc = module_diff(&a, &b, DiffMode::Contextual);
+        assert!(!dc.is_empty());
+        assert_eq!(dc.divergence(&a, &b), 1.0);
+    }
+
+    #[test]
+    fn cross_arch_structural_overlap() {
+        let (a, _) = dag_of(1, "t0"); // linear + bias layers
+        let (b, _) = dag_of(1, "t1"); // linear + linear (different attrs)
+        let ds = module_diff(&a, &b, DiffMode::Structural);
+        // The shared `linear 2x3` layer matches; the others don't.
+        assert_eq!(ds.matched_nodes.len(), 1);
+        let d = ds.divergence(&a, &b);
+        assert!(d > 0.0 && d <= 1.0, "d={d}");
+    }
+
+    #[test]
+    fn divergence_scores_ordering() {
+        // finetuned-like pair: same structure, one tensor changed.
+        let zoo = crate::checkpoint::testutil::normal_zoo();
+        let spec = zoo.arch("n0").unwrap();
+        let store = Store::in_memory();
+        let parent = Checkpoint::init(spec, 1);
+        let mut child = parent.clone();
+        child.param_mut(spec, "w.head").unwrap()[0] = 42.0;
+        let (pm, _) = store_raw(&store, spec, &parent).unwrap();
+        let (cm, _) = store_raw(&store, spec, &child).unwrap();
+        let pd = ModelDag::from_arch(spec, Some(&pm)).unwrap();
+        let cd = ModelDag::from_arch(spec, Some(&cm)).unwrap();
+        let (ds, dc) = divergence_scores(&pd, &cd);
+        assert_eq!(ds, 0.0);
+        assert!(dc > 0.0 && dc < 1.0, "dc={dc}");
+    }
+
+    #[test]
+    fn value_distance_separates_finetune_from_reinit() {
+        let zoo = crate::checkpoint::testutil::normal_zoo();
+        let spec = zoo.arch("n0").unwrap();
+        let parent = Checkpoint::init(spec, 1);
+        let mut finetuned = parent.clone();
+        for x in finetuned.flat.iter_mut() {
+            *x += 0.001;
+        }
+        let reinit = Checkpoint::init(spec, 99);
+        let dag = ModelDag::from_arch(spec, None).unwrap();
+        let d_ft =
+            value_distance(&dag, spec, &parent, &dag, spec, &finetuned).unwrap();
+        let d_re = value_distance(&dag, spec, &parent, &dag, spec, &reinit).unwrap();
+        assert!(d_ft < 0.1, "finetune distance {d_ft}");
+        assert!(d_re > 0.4, "reinit distance {d_re}");
+        assert!(d_ft < d_re);
+    }
+
+    #[test]
+    fn changed_layers_detects_edits() {
+        let zoo = tiny_zoo();
+        let spec = zoo.arch("t0").unwrap();
+        let store = Store::in_memory();
+        let base = Checkpoint::init(spec, 1);
+        let mut edited = base.clone();
+        edited.param_mut(spec, "w.a").unwrap()[0] += 1.0;
+        let (bm, _) = store_raw(&store, spec, &base).unwrap();
+        let (em, _) = store_raw(&store, spec, &edited).unwrap();
+        let bd = ModelDag::from_arch(spec, Some(&bm)).unwrap();
+        let ed = ModelDag::from_arch(spec, Some(&em)).unwrap();
+        let changed = changed_layers(&bd, &ed);
+        assert_eq!(changed, vec![bd.layer_index("a").unwrap()]);
+    }
+}

@@ -1,0 +1,42 @@
+//! # MGit — a model versioning and management system
+//!
+//! Reproduction of *MGit: A Model Versioning and Management System*
+//! (ICML 2024) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the paper's contribution: the [`lineage`] graph,
+//!   the content-addressed [`store`] with [`delta`] compression
+//!   (Algorithm 1), the structural/contextual [`diff`] primitive
+//!   (Algorithm 3), [`autoconstruct`]-ed graphs (§3.2), the [`merge`]
+//!   decision tree (Figure 2), test/creation-function [`registry`]
+//!   machinery, and the [`update`] cascade (Algorithm 2).
+//! * **L2/L1 (build-time Python, `python/compile/`)** — the transformer
+//!   model family and Pallas kernels, AOT-lowered to HLO text artifacts
+//!   that the [`runtime`] executes through the PJRT CPU client. Python is
+//!   never on the request path.
+//!
+//! Supporting substrates (everything the paper depends on, built here):
+//! synthetic [`data`] tasks, [`train`]-ing creation functions, a federated
+//! learning controller ([`fl`]), model [`workloads`] G1–G5, and
+//! dependency-free [`util`] (JSON, PRNG, CLI parsing, property testing).
+
+pub mod autoconstruct;
+pub mod checkpoint;
+pub mod cli;
+pub mod data;
+pub mod delta;
+pub mod diff;
+pub mod fl;
+pub mod lineage;
+pub mod merge;
+pub mod modeldag;
+pub mod registry;
+pub mod runtime;
+pub mod store;
+pub mod tensor;
+pub mod train;
+pub mod update;
+pub mod util;
+pub mod workloads;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,685 @@
+//! The lineage graph (paper §3): nodes are models, edges are provenance
+//! ("derived from") or versioning ("next version of") relations, stored as
+//! adjacency lists. Nodes carry optional creation functions (declarative
+//! [`CreationSpec`]s), a [`StoredModel`] pointer into the CAS, a model
+//! type, and free-form metadata.
+//!
+//! Matching the paper's design, "changes to metadata are serialized to
+//! disk at the end of every operation, and de-serialized at the start of
+//! every operation" — [`LineageGraph::save`]/[`LineageGraph::load`]
+//! round-trip the whole graph (including the test registry) as JSON at
+//! `.mgit/graph.json`; the repository wrapper in [`crate::cli`] does the
+//! per-operation save/load.
+
+pub mod traversal;
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::delta::StoredModel;
+use crate::registry::{CreationSpec, TestRegistry};
+use crate::util::json::{self, Json};
+
+/// Index of a node inside a [`LineageGraph`].
+pub type NodeIdx = usize;
+
+/// Which edge relation (paper Table 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EdgeType {
+    Provenance,
+    Versioning,
+}
+
+/// A model node.
+#[derive(Debug, Clone)]
+pub struct Node {
+    /// Unique name (paper: nodes have unique names).
+    pub name: String,
+    /// Model type — we use the architecture name + optional role, e.g.
+    /// `tx-tiny`; type-scoped tests match on this.
+    pub model_type: String,
+    /// Pointer to the model's parameters in the CAS (None while a cascade
+    /// has created the node but not yet trained it).
+    pub stored: Option<StoredModel>,
+    /// Optional creation function.
+    pub creation: Option<CreationSpec>,
+    /// Free-form metadata (task name, seeds, notes…).
+    pub metadata: Json,
+    pub prov_parents: Vec<NodeIdx>,
+    pub prov_children: Vec<NodeIdx>,
+    pub ver_parents: Vec<NodeIdx>,
+    pub ver_children: Vec<NodeIdx>,
+}
+
+impl Node {
+    fn new(name: &str, model_type: &str) -> Node {
+        Node {
+            name: name.to_string(),
+            model_type: model_type.to_string(),
+            stored: None,
+            creation: None,
+            metadata: Json::obj(),
+            prov_parents: Vec::new(),
+            prov_children: Vec::new(),
+            ver_parents: Vec::new(),
+            ver_children: Vec::new(),
+        }
+    }
+}
+
+/// The lineage graph.
+#[derive(Debug, Clone, Default)]
+pub struct LineageGraph {
+    pub nodes: Vec<Node>,
+    by_name: HashMap<String, NodeIdx>,
+    /// Registered test functions (serialized with the graph).
+    pub tests: TestRegistry,
+}
+
+impl LineageGraph {
+    pub fn new() -> LineageGraph {
+        LineageGraph::default()
+    }
+
+    // ------------------------------------------------------------------
+    // Node / edge addition (paper API: add_node, add_edge,
+    // add_version_edge, register_creation_function)
+    // ------------------------------------------------------------------
+    pub fn add_node(&mut self, name: &str, model_type: &str) -> Result<NodeIdx> {
+        if self.by_name.contains_key(name) {
+            bail!("node `{name}` already exists");
+        }
+        let idx = self.nodes.len();
+        self.nodes.push(Node::new(name, model_type));
+        self.by_name.insert(name.to_string(), idx);
+        Ok(idx)
+    }
+
+    /// add_node if missing; returns the index either way (paper's add_edge
+    /// "calls add_node if nodes do not already exist").
+    pub fn ensure_node(&mut self, name: &str, model_type: &str) -> NodeIdx {
+        match self.by_name.get(name) {
+            Some(&i) => i,
+            None => self.add_node(name, model_type).expect("checked missing"),
+        }
+    }
+
+    pub fn idx(&self, name: &str) -> Result<NodeIdx> {
+        self.by_name
+            .get(name)
+            .copied()
+            .ok_or_else(|| anyhow!("no node named `{name}`"))
+    }
+
+    pub fn node(&self, idx: NodeIdx) -> &Node {
+        &self.nodes[idx]
+    }
+
+    pub fn node_mut(&mut self, idx: NodeIdx) -> &mut Node {
+        &mut self.nodes[idx]
+    }
+
+    pub fn by_name(&self, name: &str) -> Result<&Node> {
+        Ok(&self.nodes[self.idx(name)?])
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Add a provenance edge `parent -> child`.
+    pub fn add_edge(&mut self, parent: NodeIdx, child: NodeIdx) -> Result<()> {
+        self.check_idx(parent)?;
+        self.check_idx(child)?;
+        if parent == child {
+            bail!("self-provenance is not allowed");
+        }
+        if self.nodes[parent].prov_children.contains(&child) {
+            bail!(
+                "provenance edge {} -> {} already exists",
+                self.nodes[parent].name,
+                self.nodes[child].name
+            );
+        }
+        // Reject cycles: child must not already be an ancestor of parent.
+        if self.is_provenance_ancestor(child, parent) {
+            bail!(
+                "adding {} -> {} would create a provenance cycle",
+                self.nodes[parent].name,
+                self.nodes[child].name
+            );
+        }
+        self.nodes[parent].prov_children.push(child);
+        self.nodes[child].prov_parents.push(parent);
+        Ok(())
+    }
+
+    /// Add a versioning edge `old -> new`. Both nodes must have the same
+    /// model type (paper API). A node has at most one *previous* version,
+    /// but may grow several next versions over time (e.g. a manual update
+    /// plus an Algorithm-2 cascade): versions form a tree, and
+    /// [`LineageGraph::next_version`] returns the most recent branch.
+    pub fn add_version_edge(&mut self, old: NodeIdx, new: NodeIdx) -> Result<()> {
+        self.check_idx(old)?;
+        self.check_idx(new)?;
+        if old == new {
+            bail!("self-version is not allowed");
+        }
+        if self.nodes[old].model_type != self.nodes[new].model_type {
+            bail!(
+                "version edge requires same model type ({} vs {})",
+                self.nodes[old].model_type,
+                self.nodes[new].model_type
+            );
+        }
+        if !self.nodes[new].ver_parents.is_empty() {
+            bail!("{} already has a previous version", self.nodes[new].name);
+        }
+        if self.version_chain_contains(new, old) {
+            bail!("version edge would create a cycle");
+        }
+        self.nodes[old].ver_children.push(new);
+        self.nodes[new].ver_parents.push(old);
+        Ok(())
+    }
+
+    pub fn register_creation_function(&mut self, idx: NodeIdx, cr: CreationSpec) -> Result<()> {
+        self.check_idx(idx)?;
+        self.nodes[idx].creation = Some(cr);
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Removal (paper API: remove_edge, remove_node)
+    // ------------------------------------------------------------------
+    pub fn remove_edge(&mut self, parent: NodeIdx, child: NodeIdx, ty: EdgeType) -> Result<()> {
+        self.check_idx(parent)?;
+        self.check_idx(child)?;
+        // Edges never self-loop (enforced at insertion).
+        if parent == child {
+            bail!("no such edge");
+        }
+        let removed = match ty {
+            EdgeType::Provenance => {
+                let pc = &mut self.nodes[parent].prov_children;
+                let before = pc.len();
+                pc.retain(|&i| i != child);
+                let removed = pc.len() != before;
+                self.nodes[child].prov_parents.retain(|&i| i != parent);
+                removed
+            }
+            EdgeType::Versioning => {
+                let pc = &mut self.nodes[parent].ver_children;
+                let before = pc.len();
+                pc.retain(|&i| i != child);
+                let removed = pc.len() != before;
+                self.nodes[child].ver_parents.retain(|&i| i != parent);
+                removed
+            }
+        };
+        if !removed {
+            bail!("no such edge");
+        }
+        Ok(())
+    }
+
+    /// Remove `idx` and its provenance sub-tree (paper: "removes node x
+    /// and its sub-tree"). Returns the names of removed nodes.
+    pub fn remove_node(&mut self, idx: NodeIdx) -> Result<Vec<String>> {
+        self.check_idx(idx)?;
+        // Collect the provenance-descendant closure of idx.
+        let mut doomed = vec![false; self.nodes.len()];
+        let mut stack = vec![idx];
+        while let Some(i) = stack.pop() {
+            if doomed[i] {
+                continue;
+            }
+            doomed[i] = true;
+            stack.extend(self.nodes[i].prov_children.iter().copied());
+            // Versions of a doomed model are doomed too.
+            stack.extend(self.nodes[i].ver_children.iter().copied());
+        }
+        let removed: Vec<String> = self
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| doomed[*i])
+            .map(|(_, n)| n.name.clone())
+            .collect();
+        // Rebuild with surviving nodes, remapping indices.
+        let mut remap = vec![usize::MAX; self.nodes.len()];
+        let mut kept = Vec::new();
+        for (i, node) in self.nodes.drain(..).enumerate() {
+            if !doomed[i] {
+                remap[i] = kept.len();
+                kept.push(node);
+            }
+        }
+        for node in &mut kept {
+            let fix = |v: &mut Vec<NodeIdx>| {
+                v.retain(|&i| remap[i] != usize::MAX);
+                for i in v.iter_mut() {
+                    *i = remap[*i];
+                }
+            };
+            fix(&mut node.prov_parents);
+            fix(&mut node.prov_children);
+            fix(&mut node.ver_parents);
+            fix(&mut node.ver_children);
+        }
+        self.nodes = kept;
+        self.by_name = self
+            .nodes
+            .iter()
+            .enumerate()
+            .map(|(i, n)| (n.name.clone(), i))
+            .collect();
+        Ok(removed)
+    }
+
+    // ------------------------------------------------------------------
+    // Queries
+    // ------------------------------------------------------------------
+    /// Nodes with no provenance parents.
+    pub fn roots(&self) -> Vec<NodeIdx> {
+        (0..self.nodes.len())
+            .filter(|&i| self.nodes[i].prov_parents.is_empty() && self.nodes[i].ver_parents.is_empty())
+            .collect()
+    }
+
+    /// get_next_version(x) (paper API). With branching versions, the most
+    /// recently added branch is "the" next version.
+    pub fn next_version(&self, idx: NodeIdx) -> Option<NodeIdx> {
+        self.nodes[idx].ver_children.last().copied()
+    }
+
+    pub fn prev_version(&self, idx: NodeIdx) -> Option<NodeIdx> {
+        self.nodes[idx].ver_parents.first().copied()
+    }
+
+    /// Latest version reachable from `idx` along versioning edges.
+    pub fn latest_version(&self, idx: NodeIdx) -> NodeIdx {
+        let mut cur = idx;
+        while let Some(next) = self.next_version(cur) {
+            cur = next;
+        }
+        cur
+    }
+
+    fn version_chain_contains(&self, start: NodeIdx, needle: NodeIdx) -> bool {
+        let mut cur = Some(start);
+        while let Some(i) = cur {
+            if i == needle {
+                return true;
+            }
+            cur = self.next_version(i);
+        }
+        false
+    }
+
+    pub fn is_provenance_ancestor(&self, anc: NodeIdx, of: NodeIdx) -> bool {
+        let mut stack = vec![of];
+        let mut seen = vec![false; self.nodes.len()];
+        while let Some(i) = stack.pop() {
+            if i == anc {
+                return true;
+            }
+            if seen[i] {
+                continue;
+            }
+            seen[i] = true;
+            stack.extend(self.nodes[i].prov_parents.iter().copied());
+        }
+        false
+    }
+
+    /// Closest common provenance ancestor of two nodes (used by `merge`).
+    pub fn common_ancestor(&self, a: NodeIdx, b: NodeIdx) -> Option<NodeIdx> {
+        // BFS ancestor sets with depth; pick the common one minimizing
+        // max(depth_a, depth_b).
+        let depths = |start: NodeIdx| {
+            let mut d: HashMap<NodeIdx, usize> = HashMap::new();
+            let mut queue = std::collections::VecDeque::from([(start, 0usize)]);
+            while let Some((i, dep)) = queue.pop_front() {
+                if d.contains_key(&i) {
+                    continue;
+                }
+                d.insert(i, dep);
+                for &p in &self.nodes[i].prov_parents {
+                    queue.push_back((p, dep + 1));
+                }
+            }
+            d
+        };
+        let da = depths(a);
+        let db = depths(b);
+        da.iter()
+            .filter_map(|(i, &x)| db.get(i).map(|&y| (*i, x.max(y))))
+            .min_by_key(|&(_, d)| d)
+            .map(|(i, _)| i)
+    }
+
+    fn check_idx(&self, idx: NodeIdx) -> Result<()> {
+        if idx >= self.nodes.len() {
+            bail!("node index {idx} out of range");
+        }
+        Ok(())
+    }
+
+    /// Count edges of each type (Table 3 reporting).
+    pub fn edge_counts(&self) -> (usize, usize) {
+        let prov = self.nodes.iter().map(|n| n.prov_children.len()).sum();
+        let ver = self.nodes.iter().map(|n| n.ver_children.len()).sum();
+        (prov, ver)
+    }
+
+    // ------------------------------------------------------------------
+    // Integrity
+    // ------------------------------------------------------------------
+    /// Verify structural invariants; returns an error describing the first
+    /// violation. Run by `mgit fsck` and by property tests.
+    pub fn integrity_check(&self) -> Result<()> {
+        if self.by_name.len() != self.nodes.len() {
+            bail!("name index size mismatch");
+        }
+        for (name, &i) in &self.by_name {
+            if self.nodes.get(i).map(|n| &n.name) != Some(name) {
+                bail!("name index points to wrong node for `{name}`");
+            }
+        }
+        for (i, n) in self.nodes.iter().enumerate() {
+            for &c in &n.prov_children {
+                if !self.nodes[c].prov_parents.contains(&i) {
+                    bail!("asymmetric provenance edge {} -> {}", n.name, self.nodes[c].name);
+                }
+            }
+            for &p in &n.prov_parents {
+                if !self.nodes[p].prov_children.contains(&i) {
+                    bail!("asymmetric provenance back-edge at {}", n.name);
+                }
+            }
+            for &c in &n.ver_children {
+                if !self.nodes[c].ver_parents.contains(&i) {
+                    bail!("asymmetric version edge at {}", n.name);
+                }
+                if self.nodes[c].model_type != n.model_type {
+                    bail!("version edge across model types at {}", n.name);
+                }
+            }
+            if n.ver_parents.len() > 1 {
+                bail!("node {} has multiple previous versions", n.name);
+            }
+        }
+        // Provenance acyclicity via Kahn's algorithm.
+        let mut indeg: Vec<usize> = self.nodes.iter().map(|n| n.prov_parents.len()).collect();
+        let mut queue: Vec<NodeIdx> =
+            (0..self.nodes.len()).filter(|&i| indeg[i] == 0).collect();
+        let mut seen = 0;
+        while let Some(i) = queue.pop() {
+            seen += 1;
+            for &c in &self.nodes[i].prov_children {
+                indeg[c] -= 1;
+                if indeg[c] == 0 {
+                    queue.push(c);
+                }
+            }
+        }
+        if seen != self.nodes.len() {
+            bail!("provenance cycle detected");
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Serialization
+    // ------------------------------------------------------------------
+    pub fn to_json(&self) -> Json {
+        let nodes: Vec<Json> = self
+            .nodes
+            .iter()
+            .map(|n| {
+                let mut j = Json::obj()
+                    .set("name", n.name.as_str())
+                    .set("model_type", n.model_type.as_str())
+                    .set(
+                        "prov_parents",
+                        Json::Arr(n.prov_parents.iter().map(|&i| Json::from(i)).collect()),
+                    )
+                    .set(
+                        "ver_parents",
+                        Json::Arr(n.ver_parents.iter().map(|&i| Json::from(i)).collect()),
+                    )
+                    .set("metadata", n.metadata.clone());
+                if let Some(s) = &n.stored {
+                    j = j.set("stored", s.to_json());
+                }
+                if let Some(c) = &n.creation {
+                    j = j.set("creation", c.to_json());
+                }
+                j
+            })
+            .collect();
+        Json::obj()
+            .set("version", 1usize)
+            .set("nodes", Json::Arr(nodes))
+            .set("tests", self.tests.to_json())
+    }
+
+    pub fn from_json(j: &Json) -> Result<LineageGraph> {
+        let mut g = LineageGraph::new();
+        let nodes = j.req_arr("nodes")?;
+        // First pass: create nodes.
+        for nj in nodes {
+            let idx = g.add_node(nj.req_str("name")?, nj.req_str("model_type")?)?;
+            let node = &mut g.nodes[idx];
+            node.metadata = nj.get("metadata").cloned().unwrap_or_else(Json::obj);
+            if let Some(s) = nj.get("stored") {
+                node.stored = Some(StoredModel::from_json(s)?);
+            }
+            if let Some(c) = nj.get("creation") {
+                node.creation = Some(CreationSpec::from_json(c)?);
+            }
+        }
+        // Second pass: edges (parent lists drive both directions).
+        for (child, nj) in nodes.iter().enumerate() {
+            for p in nj.req_arr("prov_parents")? {
+                let p = p.as_usize().ok_or_else(|| anyhow!("bad parent index"))?;
+                g.add_edge(p, child)?;
+            }
+            for p in nj.req_arr("ver_parents")? {
+                let p = p.as_usize().ok_or_else(|| anyhow!("bad version parent index"))?;
+                g.add_version_edge(p, child)?;
+            }
+        }
+        if let Some(t) = j.get("tests") {
+            g.tests = TestRegistry::from_json(t)?;
+        }
+        g.integrity_check()?;
+        Ok(g)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let text = self.to_json().to_string_pretty();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, text)?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<LineageGraph> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading lineage graph {}", path.display()))?;
+        Self::from_json(&json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+pub mod testutil {
+    use super::*;
+
+    /// a -> b -> c, a -> d; b has versions b, b2.
+    pub fn diamondish() -> LineageGraph {
+        let mut g = LineageGraph::new();
+        let a = g.add_node("a", "tx").unwrap();
+        let b = g.add_node("b", "tx").unwrap();
+        let c = g.add_node("c", "tx").unwrap();
+        let d = g.add_node("d", "tx").unwrap();
+        let b2 = g.add_node("b2", "tx").unwrap();
+        g.add_edge(a, b).unwrap();
+        g.add_edge(b, c).unwrap();
+        g.add_edge(a, d).unwrap();
+        g.add_version_edge(b, b2).unwrap();
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_and_query() {
+        let g = testutil::diamondish();
+        assert_eq!(g.len(), 5);
+        let (prov, ver) = g.edge_counts();
+        assert_eq!((prov, ver), (3, 1));
+        let a = g.idx("a").unwrap();
+        let b = g.idx("b").unwrap();
+        assert_eq!(g.roots(), vec![a]);
+        assert_eq!(g.next_version(b), Some(g.idx("b2").unwrap()));
+        assert_eq!(g.latest_version(b), g.idx("b2").unwrap());
+        assert!(g.is_provenance_ancestor(a, g.idx("c").unwrap()));
+        assert!(!g.is_provenance_ancestor(g.idx("c").unwrap(), a));
+        g.integrity_check().unwrap();
+    }
+
+    #[test]
+    fn duplicate_names_rejected() {
+        let mut g = LineageGraph::new();
+        g.add_node("x", "t").unwrap();
+        assert!(g.add_node("x", "t").is_err());
+        assert_eq!(g.ensure_node("x", "t"), 0);
+    }
+
+    #[test]
+    fn cycles_rejected() {
+        let mut g = LineageGraph::new();
+        let a = g.add_node("a", "t").unwrap();
+        let b = g.add_node("b", "t").unwrap();
+        let c = g.add_node("c", "t").unwrap();
+        g.add_edge(a, b).unwrap();
+        g.add_edge(b, c).unwrap();
+        assert!(g.add_edge(c, a).is_err());
+        assert!(g.add_edge(a, a).is_err());
+        assert!(g.add_edge(a, b).is_err()); // duplicate
+    }
+
+    #[test]
+    fn version_chain_constraints() {
+        let mut g = LineageGraph::new();
+        let v1 = g.add_node("m_v1", "tx").unwrap();
+        let v2 = g.add_node("m_v2", "tx").unwrap();
+        let v3 = g.add_node("m_v3", "tx").unwrap();
+        let other = g.add_node("o", "resnet").unwrap();
+        g.add_version_edge(v1, v2).unwrap();
+        g.add_version_edge(v2, v3).unwrap();
+        assert!(g.add_version_edge(v2, v3).is_err()); // v3 already has prev
+        assert!(g.add_version_edge(v3, other).is_err()); // type mismatch
+        assert!(g.add_version_edge(v3, v1).is_err()); // cycle
+        assert_eq!(g.latest_version(v1), v3);
+        // Branching: v1 may grow a second next version (cascade + manual);
+        // next_version picks the most recent branch.
+        let v2b = g.add_node("m_v2b", "tx").unwrap();
+        g.add_version_edge(v1, v2b).unwrap();
+        assert_eq!(g.next_version(v1), Some(v2b));
+        g.integrity_check().unwrap();
+    }
+
+    #[test]
+    fn remove_edge_and_subtree() {
+        let mut g = testutil::diamondish();
+        let a = g.idx("a").unwrap();
+        let d = g.idx("d").unwrap();
+        g.remove_edge(a, d, EdgeType::Provenance).unwrap();
+        assert!(g.remove_edge(a, d, EdgeType::Provenance).is_err());
+        g.integrity_check().unwrap();
+
+        // Removing b takes its subtree (c) and its versions (b2) with it.
+        let b = g.idx("b").unwrap();
+        let mut removed = g.remove_node(b).unwrap();
+        removed.sort();
+        assert_eq!(removed, vec!["b", "b2", "c"]);
+        assert_eq!(g.len(), 2);
+        assert!(g.idx("a").is_ok() && g.idx("d").is_ok());
+        g.integrity_check().unwrap();
+    }
+
+    #[test]
+    fn common_ancestor_diamond() {
+        let mut g = LineageGraph::new();
+        let root = g.add_node("root", "t").unwrap();
+        let l = g.add_node("l", "t").unwrap();
+        let r = g.add_node("r", "t").unwrap();
+        let ll = g.add_node("ll", "t").unwrap();
+        g.add_edge(root, l).unwrap();
+        g.add_edge(root, r).unwrap();
+        g.add_edge(l, ll).unwrap();
+        assert_eq!(g.common_ancestor(ll, r), Some(root));
+        assert_eq!(g.common_ancestor(ll, l), Some(l));
+        let lone = g.add_node("lone", "t").unwrap();
+        assert_eq!(g.common_ancestor(ll, lone), None);
+    }
+
+    #[test]
+    fn json_roundtrip_with_payloads() {
+        let mut g = testutil::diamondish();
+        let b = g.idx("b").unwrap();
+        g.register_creation_function(
+            b,
+            CreationSpec::Finetune {
+                task: "task1".into(),
+                objective: crate::registry::Objective::Cls,
+                steps: 10,
+                lr: 0.1,
+                seed: 1,
+                freeze: crate::registry::FreezeSpec::None,
+                perturb: None,
+            },
+        )
+        .unwrap();
+        g.nodes[b].metadata = Json::obj().set("note", "hello");
+        g.tests
+            .register(
+                "finite",
+                crate::registry::TestScope::ModelType("tx".into()),
+                crate::registry::TestSpec::FiniteParams,
+            )
+            .unwrap();
+        let j = g.to_json();
+        let back = LineageGraph::from_json(&j).unwrap();
+        assert_eq!(back.len(), g.len());
+        assert_eq!(back.by_name("b").unwrap().creation, g.nodes[b].creation);
+        assert_eq!(back.by_name("b").unwrap().metadata.req_str("note").unwrap(), "hello");
+        assert_eq!(back.tests.tests.len(), 1);
+        assert_eq!(back.edge_counts(), g.edge_counts());
+    }
+
+    #[test]
+    fn save_load_disk() {
+        let g = testutil::diamondish();
+        let path = std::env::temp_dir().join(format!("mgit-graph-{}.json", std::process::id()));
+        g.save(&path).unwrap();
+        let back = LineageGraph::load(&path).unwrap();
+        assert_eq!(back.len(), g.len());
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -1,0 +1,356 @@
+//! Traversals over the lineage graph (paper §3.1.4).
+//!
+//! Traversals are iterators over node indices. They take edge-type
+//! filters plus the `skip_fn` / `terminate_fn` hooks of the paper's
+//! `run_update_cascade` API: a *skipped* node is not yielded (but its
+//! edges are still followed); a *terminated* node cuts traversal below it.
+//!
+//! `all_parents_first` is the modified BFS of Algorithm 2 — a node is
+//! yielded only once **all** of its in-scope provenance parents have been
+//! yielded. `bisect` implements the §6.4 test-bisection over a version
+//! chain.
+
+use super::{EdgeType, LineageGraph, NodeIdx};
+
+/// Which outgoing edges a traversal follows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EdgeFilter {
+    Provenance,
+    Versioning,
+    Both,
+}
+
+impl EdgeFilter {
+    fn children<'a>(&self, g: &'a LineageGraph, i: NodeIdx) -> Vec<NodeIdx> {
+        let n = &g.nodes[i];
+        match self {
+            EdgeFilter::Provenance => n.prov_children.clone(),
+            EdgeFilter::Versioning => n.ver_children.clone(),
+            EdgeFilter::Both => {
+                let mut v = n.prov_children.clone();
+                v.extend_from_slice(&n.ver_children);
+                v
+            }
+        }
+    }
+}
+
+impl From<EdgeType> for EdgeFilter {
+    fn from(t: EdgeType) -> EdgeFilter {
+        match t {
+            EdgeType::Provenance => EdgeFilter::Provenance,
+            EdgeType::Versioning => EdgeFilter::Versioning,
+        }
+    }
+}
+
+/// Breadth-first traversal from `start` (yields `start` unless skipped).
+pub fn bfs(
+    g: &LineageGraph,
+    start: NodeIdx,
+    filter: EdgeFilter,
+    skip: impl Fn(&LineageGraph, NodeIdx) -> bool,
+    terminate: impl Fn(&LineageGraph, NodeIdx) -> bool,
+) -> Vec<NodeIdx> {
+    let mut out = Vec::new();
+    let mut seen = vec![false; g.len()];
+    let mut queue = std::collections::VecDeque::from([start]);
+    while let Some(i) = queue.pop_front() {
+        if seen[i] {
+            continue;
+        }
+        seen[i] = true;
+        if !skip(g, i) {
+            out.push(i);
+        }
+        if terminate(g, i) {
+            continue;
+        }
+        for c in filter.children(g, i) {
+            if !seen[c] {
+                queue.push_back(c);
+            }
+        }
+    }
+    out
+}
+
+/// Depth-first (pre-order) traversal from `start`.
+pub fn dfs(
+    g: &LineageGraph,
+    start: NodeIdx,
+    filter: EdgeFilter,
+    skip: impl Fn(&LineageGraph, NodeIdx) -> bool,
+    terminate: impl Fn(&LineageGraph, NodeIdx) -> bool,
+) -> Vec<NodeIdx> {
+    let mut out = Vec::new();
+    let mut seen = vec![false; g.len()];
+    let mut stack = vec![start];
+    while let Some(i) = stack.pop() {
+        if seen[i] {
+            continue;
+        }
+        seen[i] = true;
+        if !skip(g, i) {
+            out.push(i);
+        }
+        if terminate(g, i) {
+            continue;
+        }
+        let mut kids = filter.children(g, i);
+        kids.reverse(); // keep natural child order in pre-order output
+        for c in kids {
+            if !seen[c] {
+                stack.push(c);
+            }
+        }
+    }
+    out
+}
+
+/// The full version chain containing `idx`, from first to last version.
+pub fn version_chain(g: &LineageGraph, idx: NodeIdx) -> Vec<NodeIdx> {
+    let mut first = idx;
+    while let Some(p) = g.prev_version(first) {
+        first = p;
+    }
+    let mut out = vec![first];
+    let mut cur = first;
+    while let Some(n) = g.next_version(cur) {
+        out.push(n);
+        cur = n;
+    }
+    out
+}
+
+/// Modified BFS of Algorithm 2: yield provenance descendants of `start`
+/// (excluding `start` itself) such that a node appears only after all of
+/// its in-scope provenance parents. Parents outside the descendant set of
+/// `start` are treated as already satisfied (they are not being updated).
+pub fn all_parents_first(
+    g: &LineageGraph,
+    start: NodeIdx,
+    skip: impl Fn(&LineageGraph, NodeIdx) -> bool,
+    terminate: impl Fn(&LineageGraph, NodeIdx) -> bool,
+) -> Vec<NodeIdx> {
+    // Scope = provenance descendants of start (minus terminated subtrees).
+    let mut in_scope = vec![false; g.len()];
+    let mut stack = vec![start];
+    while let Some(i) = stack.pop() {
+        if in_scope[i] {
+            continue;
+        }
+        in_scope[i] = true;
+        if terminate(g, i) {
+            continue;
+        }
+        stack.extend(g.nodes[i].prov_children.iter().copied());
+    }
+    // Kahn over the induced sub-DAG.
+    let mut indeg = vec![0usize; g.len()];
+    for i in 0..g.len() {
+        if !in_scope[i] || i == start {
+            continue;
+        }
+        indeg[i] = g.nodes[i]
+            .prov_parents
+            .iter()
+            .filter(|&&p| in_scope[p] && p != start)
+            .count();
+    }
+    let mut queue: std::collections::VecDeque<NodeIdx> = (0..g.len())
+        .filter(|&i| in_scope[i] && i != start && indeg[i] == 0)
+        .collect();
+    let mut out = Vec::new();
+    while let Some(i) = queue.pop_front() {
+        if !skip(g, i) {
+            out.push(i);
+        }
+        for &c in &g.nodes[i].prov_children {
+            if in_scope[c] && c != start {
+                indeg[c] -= 1;
+                if indeg[c] == 0 {
+                    queue.push_back(c);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Test bisection over a version chain (§6.4): assuming versions go
+/// good → … → bad monotonically under `fails`, find the *first failing*
+/// version with O(log n) test evaluations. Returns `(index_into_chain,
+/// number_of_test_evaluations)`, or None if no version fails.
+pub fn bisect_first_failure(
+    chain: &[NodeIdx],
+    mut fails: impl FnMut(NodeIdx) -> bool,
+) -> (Option<usize>, usize) {
+    if chain.is_empty() {
+        return (None, 0);
+    }
+    let mut evals = 0;
+    // Check the last version first: if it passes, nothing fails.
+    evals += 1;
+    if !fails(chain[chain.len() - 1]) {
+        return (None, evals);
+    }
+    let (mut lo, mut hi) = (0usize, chain.len() - 1); // hi is known-failing
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        evals += 1;
+        if fails(chain[mid]) {
+            hi = mid;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    (Some(hi), evals)
+}
+
+/// Linear scan baseline for the bisection comparison.
+pub fn scan_first_failure(
+    chain: &[NodeIdx],
+    mut fails: impl FnMut(NodeIdx) -> bool,
+) -> (Option<usize>, usize) {
+    let mut evals = 0;
+    for (k, &n) in chain.iter().enumerate() {
+        evals += 1;
+        if fails(n) {
+            return (Some(k), evals);
+        }
+    }
+    (None, evals)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lineage::testutil::diamondish;
+    use crate::lineage::LineageGraph;
+
+    fn no_skip(_: &LineageGraph, _: NodeIdx) -> bool {
+        false
+    }
+
+    #[test]
+    fn bfs_visits_descendants_once() {
+        let g = diamondish();
+        let a = g.idx("a").unwrap();
+        let names: Vec<_> = bfs(&g, a, EdgeFilter::Provenance, no_skip, no_skip)
+            .into_iter()
+            .map(|i| g.nodes[i].name.clone())
+            .collect();
+        assert_eq!(names, vec!["a", "b", "d", "c"]);
+    }
+
+    #[test]
+    fn bfs_both_follows_versions() {
+        let g = diamondish();
+        let a = g.idx("a").unwrap();
+        let visited = bfs(&g, a, EdgeFilter::Both, no_skip, no_skip);
+        assert!(visited.contains(&g.idx("b2").unwrap()));
+    }
+
+    #[test]
+    fn dfs_preorder() {
+        let g = diamondish();
+        let a = g.idx("a").unwrap();
+        let names: Vec<_> = dfs(&g, a, EdgeFilter::Provenance, no_skip, no_skip)
+            .into_iter()
+            .map(|i| g.nodes[i].name.clone())
+            .collect();
+        assert_eq!(names, vec!["a", "b", "c", "d"]);
+    }
+
+    #[test]
+    fn skip_and_terminate() {
+        let g = diamondish();
+        let a = g.idx("a").unwrap();
+        let b = g.idx("b").unwrap();
+        // Skip b: not yielded but children still traversed.
+        let names: Vec<_> =
+            bfs(&g, a, EdgeFilter::Provenance, |_, i| i == b, no_skip)
+                .into_iter()
+                .map(|i| g.nodes[i].name.clone())
+                .collect();
+        assert_eq!(names, vec!["a", "d", "c"]);
+        // Terminate at b: c not reached.
+        let names: Vec<_> =
+            bfs(&g, a, EdgeFilter::Provenance, no_skip, |_, i| i == b)
+                .into_iter()
+                .map(|i| g.nodes[i].name.clone())
+                .collect();
+        assert_eq!(names, vec!["a", "b", "d"]);
+    }
+
+    #[test]
+    fn version_chain_from_middle() {
+        let mut g = LineageGraph::new();
+        let v1 = g.add_node("v1", "t").unwrap();
+        let v2 = g.add_node("v2", "t").unwrap();
+        let v3 = g.add_node("v3", "t").unwrap();
+        g.add_version_edge(v1, v2).unwrap();
+        g.add_version_edge(v2, v3).unwrap();
+        assert_eq!(version_chain(&g, v2), vec![v1, v2, v3]);
+        assert_eq!(version_chain(&g, v1), vec![v1, v2, v3]);
+        assert_eq!(version_chain(&g, v3), vec![v1, v2, v3]);
+    }
+
+    #[test]
+    fn all_parents_first_respects_diamond() {
+        // root -> l, root -> r, l -> sink, r -> sink
+        let mut g = LineageGraph::new();
+        let root = g.add_node("root", "t").unwrap();
+        let l = g.add_node("l", "t").unwrap();
+        let r = g.add_node("r", "t").unwrap();
+        let sink = g.add_node("sink", "t").unwrap();
+        g.add_edge(root, l).unwrap();
+        g.add_edge(root, r).unwrap();
+        g.add_edge(l, sink).unwrap();
+        g.add_edge(r, sink).unwrap();
+        let order = all_parents_first(&g, root, |_, _| false, |_, _| false);
+        let pos = |n: NodeIdx| order.iter().position(|&x| x == n).unwrap();
+        assert_eq!(order.len(), 3); // root excluded
+        assert!(pos(sink) > pos(l) && pos(sink) > pos(r));
+    }
+
+    #[test]
+    fn all_parents_first_external_parents_dont_block() {
+        // start -> child, but child also has an unrelated parent outside
+        // the start's descendant scope — it must still be yielded.
+        let mut g = LineageGraph::new();
+        let start = g.add_node("start", "t").unwrap();
+        let outside = g.add_node("outside", "t").unwrap();
+        let child = g.add_node("child", "t").unwrap();
+        g.add_edge(start, child).unwrap();
+        g.add_edge(outside, child).unwrap();
+        let order = all_parents_first(&g, start, |_, _| false, |_, _| false);
+        assert_eq!(order, vec![child]);
+    }
+
+    #[test]
+    fn bisect_matches_scan_and_is_cheaper() {
+        let chain: Vec<NodeIdx> = (0..32).collect();
+        for first_bad in 0..32 {
+            let fails = |i: NodeIdx| i >= first_bad;
+            let (b, be) = bisect_first_failure(&chain, fails);
+            let (s, _se) = scan_first_failure(&chain, fails);
+            assert_eq!(b, s, "first_bad={first_bad}");
+            assert!(be <= 7, "bisect used {be} evals"); // 1 + ceil(log2 32)
+        }
+        // No failure at all.
+        let (b, be) = bisect_first_failure(&chain, |_| false);
+        assert_eq!(b, None);
+        assert_eq!(be, 1);
+        let (s, se) = scan_first_failure(&chain, |_| false);
+        assert_eq!(s, None);
+        assert_eq!(se, 32);
+    }
+
+    #[test]
+    fn bisect_empty_chain() {
+        let (r, e) = bisect_first_failure(&[], |_| true);
+        assert_eq!((r, e), (None, 0));
+    }
+}

@@ -1,0 +1,9 @@
+//! `mgit` — the command-line front end (see `mgit help`).
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = mgit::cli::run(argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

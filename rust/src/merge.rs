@@ -1,0 +1,265 @@
+//! The `merge` primitive (paper §5, Figure 2): combine two concurrent
+//! edits of the same model.
+//!
+//! Given the closest common ancestor `base` and the two edited models
+//! `m1`, `m2` (same architecture — they are edits of one model):
+//!
+//! * **Conflict** — some layer changed in both edits → manual resolution;
+//! * **Possible conflict** — disjoint changed layers, but a dataflow
+//!   dependency exists between a layer changed by one user and a layer
+//!   changed by the other (directly or through a common downstream
+//!   consumer) → merge is produced but must be verified by tests;
+//! * **No conflict** — disjoint and independent → auto-merge.
+//!
+//! The merged checkpoint starts from `base` and applies each side's
+//! changed layers.
+
+use std::collections::BTreeSet;
+
+use anyhow::Result;
+
+use crate::checkpoint::{ArchSpec, Checkpoint};
+use crate::modeldag::ModelDag;
+
+/// Merge verdict + artifacts.
+#[derive(Debug)]
+pub enum MergeOutcome {
+    /// Same layer edited on both sides; manual intervention required.
+    Conflict { overlapping: Vec<String> },
+    /// Disjoint edits with a dependency — run tests before accepting.
+    PossibleConflict {
+        merged: Checkpoint,
+        dependent_pairs: Vec<(String, String)>,
+    },
+    /// Independent edits — merged automatically.
+    Clean { merged: Checkpoint },
+}
+
+impl MergeOutcome {
+    pub fn verdict(&self) -> &'static str {
+        match self {
+            MergeOutcome::Conflict { .. } => "conflict",
+            MergeOutcome::PossibleConflict { .. } => "possible-conflict",
+            MergeOutcome::Clean { .. } => "no-conflict",
+        }
+    }
+
+    pub fn merged(&self) -> Option<&Checkpoint> {
+        match self {
+            MergeOutcome::Conflict { .. } => None,
+            MergeOutcome::PossibleConflict { merged, .. }
+            | MergeOutcome::Clean { merged } => Some(merged),
+        }
+    }
+}
+
+/// Layers (dag indices) whose parameters differ between `base` and `m`.
+fn changed_layer_indices(
+    dag: &ModelDag,
+    spec: &ArchSpec,
+    base: &Checkpoint,
+    m: &Checkpoint,
+) -> Result<Vec<usize>> {
+    let mut out = Vec::new();
+    for (li, layer) in dag.layers.iter().enumerate() {
+        let mut changed = false;
+        for p in &layer.params {
+            let e = spec.entry(p)?;
+            if base.flat[e.offset..e.offset + e.size] != m.flat[e.offset..e.offset + e.size] {
+                changed = true;
+                break;
+            }
+        }
+        if changed {
+            out.push(li);
+        }
+    }
+    Ok(out)
+}
+
+/// Apply `src`'s parameters for the given layers onto `dst`.
+fn apply_layers(
+    dag: &ModelDag,
+    spec: &ArchSpec,
+    dst: &mut Checkpoint,
+    src: &Checkpoint,
+    layers: &[usize],
+) -> Result<()> {
+    for &li in layers {
+        for p in &dag.layers[li].params {
+            let e = spec.entry(p)?;
+            dst.flat[e.offset..e.offset + e.size]
+                .copy_from_slice(&src.flat[e.offset..e.offset + e.size]);
+        }
+    }
+    Ok(())
+}
+
+/// Figure-2 decision tree.
+pub fn merge(
+    spec: &ArchSpec,
+    dag: &ModelDag,
+    base: &Checkpoint,
+    m1: &Checkpoint,
+    m2: &Checkpoint,
+) -> Result<MergeOutcome> {
+    base.check_arch(spec)?;
+    m1.check_arch(spec)?;
+    m2.check_arch(spec)?;
+    let c1 = changed_layer_indices(dag, spec, base, m1)?;
+    let c2 = changed_layer_indices(dag, spec, base, m2)?;
+
+    // 1) Same layer changed by both users → conflict.
+    let s1: BTreeSet<usize> = c1.iter().copied().collect();
+    let overlapping: Vec<String> = c2
+        .iter()
+        .filter(|li| s1.contains(li))
+        .map(|&li| dag.layers[li].id.clone())
+        .collect();
+    if !overlapping.is_empty() {
+        return Ok(MergeOutcome::Conflict { overlapping });
+    }
+
+    // Merge = base + m1's layers + m2's layers (disjoint by construction).
+    let mut merged = base.clone();
+    apply_layers(dag, spec, &mut merged, m1, &c1)?;
+    apply_layers(dag, spec, &mut merged, m2, &c2)?;
+
+    // 2) Dependency between a layer changed by one user and a layer
+    //    changed by the other → possible conflict (verify with tests).
+    let mut dependent_pairs = Vec::new();
+    for &x in &c1 {
+        for &y in &c2 {
+            let dep = dag.reaches(x, y)
+                || dag.reaches(y, x)
+                || (0..dag.layers.len()).any(|j| dag.reaches(x, j) && dag.reaches(y, j));
+            if dep {
+                dependent_pairs.push((dag.layers[x].id.clone(), dag.layers[y].id.clone()));
+            }
+        }
+    }
+    if !dependent_pairs.is_empty() {
+        return Ok(MergeOutcome::PossibleConflict { merged, dependent_pairs });
+    }
+
+    // 3) Independent → clean.
+    Ok(MergeOutcome::Clean { merged })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::ModelZoo;
+    use crate::util::json;
+
+    /// Zoo with a 3-layer chain a->b->c plus a parallel layer p (p->c) so
+    /// we can exercise every branch of the decision tree.
+    fn merge_zoo() -> ModelZoo {
+        let text = r#"{
+          "vocab": 16, "max_seq": 4, "n_classes": 2, "batch": 2,
+          "delta_chunk": 8,
+          "special_tokens": {"cls": 14, "mask": 15, "ignore_label": -100},
+          "archs": {"m": {
+            "d_model": 2, "n_layers": 1, "n_heads": 1, "d_ff": 4,
+            "param_count": 16,
+            "layout": [
+              {"name":"pa","shape":[4],"offset":0,"size":4,"init":"normal"},
+              {"name":"pb","shape":[4],"offset":4,"size":4,"init":"normal"},
+              {"name":"pc","shape":[4],"offset":8,"size":4,"init":"normal"},
+              {"name":"pp","shape":[4],"offset":12,"size":4,"init":"normal"}
+            ],
+            "dag": {"nodes": [
+              {"id":"a","op":"linear","attrs":"4","params":["pa"]},
+              {"id":"b","op":"linear","attrs":"4","params":["pb"]},
+              {"id":"c","op":"linear","attrs":"4","params":["pc"]},
+              {"id":"p","op":"linear","attrs":"4","params":["pp"]}
+            ], "edges": [["a","b"],["b","c"],["p","c"]]}
+          }},
+          "artifacts": {"m": {}},
+          "delta_kernels": {"quant": "q", "dequant": "d"}
+        }"#;
+        ModelZoo::from_json(&json::parse(text).unwrap()).unwrap()
+    }
+
+    fn setup() -> (ModelZoo, Checkpoint) {
+        let zoo = merge_zoo();
+        let base = Checkpoint::init(zoo.arch("m").unwrap(), 1);
+        (zoo, base)
+    }
+
+    fn edit(base: &Checkpoint, spec: &ArchSpec, param: &str, val: f32) -> Checkpoint {
+        let mut m = base.clone();
+        m.param_mut(spec, param).unwrap().fill(val);
+        m
+    }
+
+    #[test]
+    fn same_layer_conflicts() {
+        let (zoo, base) = setup();
+        let spec = zoo.arch("m").unwrap();
+        let dag = ModelDag::from_arch(spec, None).unwrap();
+        let m1 = edit(&base, spec, "pa", 1.0);
+        let m2 = edit(&base, spec, "pa", 2.0);
+        let out = merge(spec, &dag, &base, &m1, &m2).unwrap();
+        match out {
+            MergeOutcome::Conflict { overlapping } => assert_eq!(overlapping, vec!["a"]),
+            other => panic!("expected conflict, got {}", other.verdict()),
+        }
+    }
+
+    #[test]
+    fn dependent_layers_possible_conflict() {
+        let (zoo, base) = setup();
+        let spec = zoo.arch("m").unwrap();
+        let dag = ModelDag::from_arch(spec, None).unwrap();
+        // a feeds b (a -> b edge): dependency.
+        let m1 = edit(&base, spec, "pa", 1.0);
+        let m2 = edit(&base, spec, "pb", 2.0);
+        let out = merge(spec, &dag, &base, &m1, &m2).unwrap();
+        match &out {
+            MergeOutcome::PossibleConflict { merged, dependent_pairs } => {
+                assert!(!dependent_pairs.is_empty());
+                // merged has both edits
+                assert!(merged.param(spec, "pa").unwrap().iter().all(|&x| x == 1.0));
+                assert!(merged.param(spec, "pb").unwrap().iter().all(|&x| x == 2.0));
+                // untouched layers from base
+                assert_eq!(merged.param(spec, "pc").unwrap(), base.param(spec, "pc").unwrap());
+            }
+            other => panic!("expected possible conflict, got {}", other.verdict()),
+        }
+    }
+
+    #[test]
+    fn independent_layers_clean() {
+        let (zoo, base) = setup();
+        let spec = zoo.arch("m").unwrap();
+        let dag = ModelDag::from_arch(spec, None).unwrap();
+        // c is downstream of everything; p is a source feeding only c.
+        // Disjoint heads: edit c on one side and nothing dependent on the
+        // other — use p vs nothing? p and c ARE dependent (p -> c).
+        // Truly independent pair in this dag: none with a shared consumer…
+        // so craft: m1 edits c (sink), m2 edits nothing → clean trivially.
+        let m1 = edit(&base, spec, "pc", 3.0);
+        let m2 = base.clone();
+        let out = merge(spec, &dag, &base, &m1, &m2).unwrap();
+        match &out {
+            MergeOutcome::Clean { merged } => {
+                assert!(merged.param(spec, "pc").unwrap().iter().all(|&x| x == 3.0));
+            }
+            other => panic!("expected clean, got {}", other.verdict()),
+        }
+    }
+
+    #[test]
+    fn identical_edits_to_same_layer_still_conflict() {
+        // Paper semantics: same layer touched by both -> manual, even if
+        // the values happen to agree (we keep it strict).
+        let (zoo, base) = setup();
+        let spec = zoo.arch("m").unwrap();
+        let dag = ModelDag::from_arch(spec, None).unwrap();
+        let m1 = edit(&base, spec, "pp", 5.0);
+        let m2 = edit(&base, spec, "pp", 5.0);
+        let out = merge(spec, &dag, &base, &m1, &m2).unwrap();
+        assert_eq!(out.verdict(), "conflict");
+    }
+}

@@ -1,0 +1,260 @@
+//! DAG representation of a model's layers (the torch.fx substitute).
+//!
+//! MGit's `diff` (Algorithm 3) operates on "DAG representations … DAG
+//! nodes are layers, an edge indicates dataflow". Architecture descriptors
+//! in the AOT manifest carry exactly that graph; this module materializes
+//! it, optionally annotated with per-layer *parameter content hashes*
+//! (from a [`StoredModel`]) so contextual diffs can compare values.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::checkpoint::ArchSpec;
+use crate::delta::StoredModel;
+use crate::store::{hash_bytes, ObjectId};
+use crate::util::json::Json;
+
+/// One layer.
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub id: String,
+    pub op: String,
+    /// Shape signature / hyperparameters (e.g. `"64x128"`, `"h2x32"`).
+    pub attrs: String,
+    /// Names of parameter tensors owned by this layer.
+    pub params: Vec<String>,
+    /// Content ids of those tensors (empty when no model is attached).
+    pub param_ids: Vec<ObjectId>,
+}
+
+impl Layer {
+    /// Structural identity: op + attrs (+ param count).
+    pub fn structural_key(&self) -> String {
+        format!("{}|{}|{}", self.op, self.attrs, self.params.len())
+    }
+
+    /// Contextual identity: structural key + parameter content hashes.
+    pub fn contextual_key(&self) -> String {
+        let mut k = self.structural_key();
+        for id in &self.param_ids {
+            k.push('|');
+            k.push_str(&id.short());
+        }
+        k
+    }
+
+    /// A compact hash of either key (bucket key for Algorithm 3).
+    pub fn key_hash(&self, contextual: bool) -> u64 {
+        let k = if contextual { self.contextual_key() } else { self.structural_key() };
+        let h = hash_bytes(k.as_bytes());
+        u64::from_le_bytes(h.0[..8].try_into().unwrap())
+    }
+}
+
+/// The layer DAG, in topological order (guaranteed by construction).
+#[derive(Debug, Clone)]
+pub struct ModelDag {
+    pub layers: Vec<Layer>,
+    /// Edges as (src_index, dst_index).
+    pub edges: Vec<(usize, usize)>,
+    by_id: HashMap<String, usize>,
+}
+
+impl ModelDag {
+    /// Build from an arch descriptor; if `stored` is given, annotate each
+    /// layer with its parameters' content ids.
+    pub fn from_arch(spec: &ArchSpec, stored: Option<&StoredModel>) -> Result<ModelDag> {
+        let mut layers = Vec::new();
+        let mut by_id = HashMap::new();
+        for nj in spec.dag.req_arr("nodes")? {
+            let id = nj.req_str("id")?.to_string();
+            let params: Vec<String> = nj
+                .req_arr("params")?
+                .iter()
+                .map(|p| p.as_str().unwrap_or_default().to_string())
+                .collect();
+            let param_ids = match stored {
+                None => Vec::new(),
+                Some(sm) => params
+                    .iter()
+                    .map(|p| {
+                        sm.param_id(p)
+                            .ok_or_else(|| anyhow!("stored model missing param `{p}`"))
+                    })
+                    .collect::<Result<Vec<_>>>()?,
+            };
+            by_id.insert(id.clone(), layers.len());
+            layers.push(Layer {
+                id,
+                op: nj.req_str("op")?.to_string(),
+                attrs: nj.req_str("attrs")?.to_string(),
+                params,
+                param_ids,
+            });
+        }
+        let mut edges = Vec::new();
+        for ej in spec.dag.req_arr("edges")? {
+            let pair = ej.as_arr().ok_or_else(|| anyhow!("edge is not a pair"))?;
+            let src = pair[0].as_str().and_then(|s| by_id.get(s)).copied();
+            let dst = pair[1].as_str().and_then(|s| by_id.get(s)).copied();
+            match (src, dst) {
+                (Some(s), Some(d)) => edges.push((s, d)),
+                _ => return Err(anyhow!("edge references unknown layer")),
+            }
+        }
+        Ok(ModelDag { layers, edges, by_id })
+    }
+
+    pub fn layer_index(&self, id: &str) -> Option<usize> {
+        self.by_id.get(id).copied()
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn n_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Successor layer indices.
+    pub fn successors(&self, i: usize) -> impl Iterator<Item = usize> + '_ {
+        self.edges.iter().filter(move |(s, _)| *s == i).map(|(_, d)| *d)
+    }
+
+    /// Is there a dataflow path from `a` to `b` (a strictly before b)?
+    pub fn reaches(&self, a: usize, b: usize) -> bool {
+        if a == b {
+            return false;
+        }
+        let mut seen = vec![false; self.layers.len()];
+        let mut stack: Vec<usize> = self.successors(a).collect();
+        while let Some(i) = stack.pop() {
+            if i == b {
+                return true;
+            }
+            if seen[i] {
+                continue;
+            }
+            seen[i] = true;
+            stack.extend(self.successors(i));
+        }
+        false
+    }
+
+    /// Do two layer sets have a dataflow dependency (either direction),
+    /// or does some downstream layer consume both? In a connected
+    /// feed-forward network the former implies the latter check is mainly
+    /// for parallel branches joining later.
+    pub fn sets_dependent(&self, xs: &[usize], ys: &[usize]) -> bool {
+        for &x in xs {
+            for &y in ys {
+                if self.reaches(x, y) || self.reaches(y, x) {
+                    return true;
+                }
+                // Common downstream consumer.
+                for j in 0..self.layers.len() {
+                    if self.reaches(x, j) && self.reaches(y, j) {
+                        return true;
+                    }
+                }
+            }
+        }
+        false
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set(
+                "nodes",
+                Json::Arr(
+                    self.layers
+                        .iter()
+                        .map(|l| {
+                            Json::obj()
+                                .set("id", l.id.as_str())
+                                .set("op", l.op.as_str())
+                                .set("attrs", l.attrs.as_str())
+                                .set(
+                                    "params",
+                                    l.params.iter().map(|p| p.as_str()).collect::<Vec<_>>(),
+                                )
+                        })
+                        .collect(),
+                ),
+            )
+            .set(
+                "edges",
+                Json::Arr(
+                    self.edges
+                        .iter()
+                        .map(|(s, d)| {
+                            Json::Arr(vec![
+                                Json::from(self.layers[*s].id.as_str()),
+                                Json::from(self.layers[*d].id.as_str()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::testutil::tiny_zoo;
+    use crate::checkpoint::Checkpoint;
+    use crate::delta::store_raw;
+    use crate::store::Store;
+
+    #[test]
+    fn builds_from_arch() {
+        let zoo = tiny_zoo();
+        let spec = zoo.arch("t0").unwrap();
+        let dag = ModelDag::from_arch(spec, None).unwrap();
+        assert_eq!(dag.n_layers(), 2);
+        assert_eq!(dag.n_edges(), 1);
+        assert_eq!(dag.layers[0].op, "linear");
+        assert!(dag.layers[0].param_ids.is_empty());
+    }
+
+    #[test]
+    fn annotates_param_hashes() {
+        let zoo = tiny_zoo();
+        let spec = zoo.arch("t0").unwrap();
+        let store = Store::in_memory();
+        let ck = Checkpoint::init(spec, 1);
+        let (sm, _) = store_raw(&store, spec, &ck).unwrap();
+        let dag = ModelDag::from_arch(spec, Some(&sm)).unwrap();
+        assert_eq!(dag.layers[0].param_ids.len(), 1);
+        assert_eq!(dag.layers[1].param_ids.len(), 2);
+        // Same params -> same contextual key; different seed -> different.
+        let dag2 = ModelDag::from_arch(
+            spec,
+            Some(&store_raw(&store, spec, &Checkpoint::init(spec, 1)).unwrap().0),
+        )
+        .unwrap();
+        assert_eq!(dag.layers[0].contextual_key(), dag2.layers[0].contextual_key());
+        let dag3 = ModelDag::from_arch(
+            spec,
+            Some(&store_raw(&store, spec, &Checkpoint::init(spec, 9)).unwrap().0),
+        )
+        .unwrap();
+        assert_ne!(dag.layers[0].contextual_key(), dag3.layers[0].contextual_key());
+        // structural keys agree regardless of values
+        assert_eq!(dag.layers[0].structural_key(), dag3.layers[0].structural_key());
+    }
+
+    #[test]
+    fn reachability() {
+        let zoo = tiny_zoo();
+        let spec = zoo.arch("t0").unwrap();
+        let dag = ModelDag::from_arch(spec, None).unwrap();
+        assert!(dag.reaches(0, 1));
+        assert!(!dag.reaches(1, 0));
+        assert!(!dag.reaches(0, 0));
+        assert!(dag.sets_dependent(&[0], &[1]));
+    }
+}

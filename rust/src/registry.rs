@@ -1,0 +1,588 @@
+//! Creation functions and test functions (paper §3.1.2–§3.1.3).
+//!
+//! The paper registers arbitrary Python callables per node. In an AOT
+//! world there is no Python on the request path, so MGit's creation and
+//! test functions are *declarative specs* interpreted by the Rust
+//! coordinator against the compiled artifacts: a [`CreationSpec`] says how
+//! to produce a model from its provenance parents (finetune N steps on
+//! task T, prune to sparsity s, federated-average, …) and a [`TestSpec`]
+//! says how to score a model. This is exactly what makes the update
+//! cascade (Algorithm 2) replayable: specs are stored in the lineage graph
+//! and re-executed with *new* parents when an upstream model changes.
+//!
+//! Execution of the specs lives in [`crate::train`] (creation) and in
+//! [`run_test`] below against an [`EvalBackend`] (implemented by the PJRT
+//! runtime, and by mocks in tests).
+
+use anyhow::{anyhow, bail, Result};
+use regex::Regex;
+
+use crate::checkpoint::Checkpoint;
+use crate::util::json::Json;
+
+/// Training objective, selecting which head/artifact is used.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Objective {
+    Mlm,
+    Cls,
+}
+
+impl Objective {
+    pub fn name(self) -> &'static str {
+        match self {
+            Objective::Mlm => "mlm",
+            Objective::Cls => "cls",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Objective> {
+        match s {
+            "mlm" => Ok(Objective::Mlm),
+            "cls" => Ok(Objective::Cls),
+            other => Err(anyhow!("unknown objective `{other}`")),
+        }
+    }
+}
+
+/// Which parameters a finetune updates (full / frozen-backbone / BitFit).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FreezeSpec {
+    /// Update everything.
+    None,
+    /// Freeze the backbone, train only the heads (adapter-style children
+    /// share backbone tensors with their parent — big dedup wins).
+    Backbone,
+    /// BitFit: train bias/LN vectors + heads only.
+    BiasOnly,
+}
+
+impl FreezeSpec {
+    pub fn name(self) -> &'static str {
+        match self {
+            FreezeSpec::None => "none",
+            FreezeSpec::Backbone => "backbone",
+            FreezeSpec::BiasOnly => "bias_only",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<FreezeSpec> {
+        match s {
+            "none" => Ok(FreezeSpec::None),
+            "backbone" => Ok(FreezeSpec::Backbone),
+            "bias_only" => Ok(FreezeSpec::BiasOnly),
+            other => Err(anyhow!("unknown freeze spec `{other}`")),
+        }
+    }
+}
+
+/// A perturbation family applied to training data (G2's "perturbed data";
+/// the Moradi & Samwald analog — see `data::perturb`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PerturbSpec {
+    pub kind: String,
+    pub strength: f64,
+}
+
+/// How a model is created from its provenance parents.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CreationSpec {
+    /// Initialize from parents[0], train `steps` on `task`.
+    Finetune {
+        task: String,
+        objective: Objective,
+        steps: usize,
+        lr: f32,
+        seed: u64,
+        freeze: FreezeSpec,
+        perturb: Option<PerturbSpec>,
+    },
+    /// MLM pretraining from scratch-initialized or parent weights.
+    Pretrain { corpus_seed: u64, steps: usize, lr: f32 },
+    /// Magnitude-prune parents[0] to `sparsity`, then recover-finetune.
+    Prune {
+        sparsity: f32,
+        task: String,
+        recover_steps: usize,
+        lr: f32,
+        seed: u64,
+    },
+    /// Federated averaging of all parents (same arch).
+    FedAvg,
+    /// Plain parameter average of all parents.
+    Average,
+    /// Multi-task group member: trained jointly with siblings, sharing the
+    /// backbone (heads are task-local). `group` lists all member tasks.
+    Mtl {
+        task: String,
+        group: Vec<String>,
+        steps: usize,
+        lr: f32,
+        seed: u64,
+    },
+}
+
+impl CreationSpec {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            CreationSpec::Finetune { .. } => "finetune",
+            CreationSpec::Pretrain { .. } => "pretrain",
+            CreationSpec::Prune { .. } => "prune",
+            CreationSpec::FedAvg => "fedavg",
+            CreationSpec::Average => "average",
+            CreationSpec::Mtl { .. } => "mtl",
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            CreationSpec::Finetune { task, objective, steps, lr, seed, freeze, perturb } => {
+                let mut j = Json::obj()
+                    .set("kind", "finetune")
+                    .set("task", task.as_str())
+                    .set("objective", objective.name())
+                    .set("steps", *steps)
+                    .set("lr", *lr as f64)
+                    .set("seed", *seed)
+                    .set("freeze", freeze.name());
+                if let Some(p) = perturb {
+                    j = j.set(
+                        "perturb",
+                        Json::obj().set("kind", p.kind.as_str()).set("strength", p.strength),
+                    );
+                }
+                j
+            }
+            CreationSpec::Pretrain { corpus_seed, steps, lr } => Json::obj()
+                .set("kind", "pretrain")
+                .set("corpus_seed", *corpus_seed)
+                .set("steps", *steps)
+                .set("lr", *lr as f64),
+            CreationSpec::Prune { sparsity, task, recover_steps, lr, seed } => Json::obj()
+                .set("kind", "prune")
+                .set("sparsity", *sparsity as f64)
+                .set("task", task.as_str())
+                .set("recover_steps", *recover_steps)
+                .set("lr", *lr as f64)
+                .set("seed", *seed),
+            CreationSpec::FedAvg => Json::obj().set("kind", "fedavg"),
+            CreationSpec::Average => Json::obj().set("kind", "average"),
+            CreationSpec::Mtl { task, group, steps, lr, seed } => Json::obj()
+                .set("kind", "mtl")
+                .set("task", task.as_str())
+                .set("group", group.iter().map(|s| s.as_str()).collect::<Vec<_>>())
+                .set("steps", *steps)
+                .set("lr", *lr as f64)
+                .set("seed", *seed),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<CreationSpec> {
+        Ok(match j.req_str("kind")? {
+            "finetune" => CreationSpec::Finetune {
+                task: j.req_str("task")?.to_string(),
+                objective: Objective::parse(j.req_str("objective")?)?,
+                steps: j.req_usize("steps")?,
+                lr: j.req_f64("lr")? as f32,
+                seed: j.req_f64("seed")? as u64,
+                freeze: FreezeSpec::parse(j.req_str("freeze")?)?,
+                perturb: match j.get("perturb") {
+                    None | Some(Json::Null) => None,
+                    Some(p) => Some(PerturbSpec {
+                        kind: p.req_str("kind")?.to_string(),
+                        strength: p.req_f64("strength")?,
+                    }),
+                },
+            },
+            "pretrain" => CreationSpec::Pretrain {
+                corpus_seed: j.req_f64("corpus_seed")? as u64,
+                steps: j.req_usize("steps")?,
+                lr: j.req_f64("lr")? as f32,
+            },
+            "prune" => CreationSpec::Prune {
+                sparsity: j.req_f64("sparsity")? as f32,
+                task: j.req_str("task")?.to_string(),
+                recover_steps: j.req_usize("recover_steps")?,
+                lr: j.req_f64("lr")? as f32,
+                seed: j.req_f64("seed")? as u64,
+            },
+            "fedavg" => CreationSpec::FedAvg,
+            "average" => CreationSpec::Average,
+            "mtl" => CreationSpec::Mtl {
+                task: j.req_str("task")?.to_string(),
+                group: j
+                    .req_arr("group")?
+                    .iter()
+                    .map(|g| g.as_str().unwrap_or_default().to_string())
+                    .collect(),
+                steps: j.req_usize("steps")?,
+                lr: j.req_f64("lr")? as f32,
+                seed: j.req_f64("seed")? as u64,
+            },
+            other => bail!("unknown creation kind `{other}`"),
+        })
+    }
+}
+
+/// A test over one model.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TestSpec {
+    /// Evaluate accuracy on a task's held-out split; pass iff >= min_acc.
+    EvalAccuracy {
+        task: String,
+        objective: Objective,
+        batches: usize,
+        split_seed: u64,
+        min_acc: f32,
+    },
+    /// Pass iff the parameter L2 norm is <= max (explosion detector).
+    ParamNormBelow { max: f64 },
+    /// Pass iff overall sparsity >= min (pruning invariant).
+    SparsityAtLeast { min: f64 },
+    /// Pass iff all parameters are finite.
+    FiniteParams,
+}
+
+impl TestSpec {
+    pub fn to_json(&self) -> Json {
+        match self {
+            TestSpec::EvalAccuracy { task, objective, batches, split_seed, min_acc } => {
+                Json::obj()
+                    .set("kind", "eval_accuracy")
+                    .set("task", task.as_str())
+                    .set("objective", objective.name())
+                    .set("batches", *batches)
+                    .set("split_seed", *split_seed)
+                    .set("min_acc", *min_acc as f64)
+            }
+            TestSpec::ParamNormBelow { max } => {
+                Json::obj().set("kind", "param_norm_below").set("max", *max)
+            }
+            TestSpec::SparsityAtLeast { min } => {
+                Json::obj().set("kind", "sparsity_at_least").set("min", *min)
+            }
+            TestSpec::FiniteParams => Json::obj().set("kind", "finite_params"),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<TestSpec> {
+        Ok(match j.req_str("kind")? {
+            "eval_accuracy" => TestSpec::EvalAccuracy {
+                task: j.req_str("task")?.to_string(),
+                objective: Objective::parse(j.req_str("objective")?)?,
+                batches: j.req_usize("batches")?,
+                split_seed: j.req_f64("split_seed")? as u64,
+                min_acc: j.req_f64("min_acc")? as f32,
+            },
+            "param_norm_below" => TestSpec::ParamNormBelow { max: j.req_f64("max")? },
+            "sparsity_at_least" => TestSpec::SparsityAtLeast { min: j.req_f64("min")? },
+            "finite_params" => TestSpec::FiniteParams,
+            other => bail!("unknown test kind `{other}`"),
+        })
+    }
+}
+
+/// What a registered test applies to (paper: a node, or all of a type).
+#[derive(Debug, Clone, PartialEq)]
+pub enum TestScope {
+    Node(String),
+    ModelType(String),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegisteredTest {
+    pub name: String,
+    pub scope: TestScope,
+    pub spec: TestSpec,
+}
+
+/// Accuracy evaluation backend: the PJRT runtime in production, mocks in
+/// unit tests.
+pub trait EvalBackend {
+    /// Returns (loss, accuracy) of `ck` on `batches` batches of `task`.
+    fn eval(
+        &self,
+        ck: &Checkpoint,
+        task: &str,
+        objective: Objective,
+        batches: usize,
+        split_seed: u64,
+    ) -> Result<(f32, f32)>;
+}
+
+/// Result of one test run.
+#[derive(Debug, Clone)]
+pub struct TestOutcome {
+    pub test_name: String,
+    pub node: String,
+    pub passed: bool,
+    /// Primary metric (accuracy, norm, sparsity…), for diagnostics.
+    pub metric: f64,
+}
+
+/// Execute one test spec against a checkpoint.
+pub fn run_test(
+    spec: &TestSpec,
+    ck: &Checkpoint,
+    backend: &dyn EvalBackend,
+) -> Result<(bool, f64)> {
+    Ok(match spec {
+        TestSpec::EvalAccuracy { task, objective, batches, split_seed, min_acc } => {
+            let (_loss, acc) = backend.eval(ck, task, *objective, *batches, *split_seed)?;
+            (acc >= *min_acc, acc as f64)
+        }
+        TestSpec::ParamNormBelow { max } => {
+            let norm = ck.l2_norm();
+            (norm <= *max, norm)
+        }
+        TestSpec::SparsityAtLeast { min } => {
+            let s = ck.sparsity();
+            (s >= *min, s)
+        }
+        TestSpec::FiniteParams => {
+            let ok = ck.flat.iter().all(|x| x.is_finite());
+            (ok, if ok { 1.0 } else { 0.0 })
+        }
+    })
+}
+
+/// The test registry: register / deregister / select by node + regex
+/// (paper API: `register_test_function`, `deregister_test_function`,
+/// `run_tests(i, re)`).
+#[derive(Debug, Clone, Default)]
+pub struct TestRegistry {
+    pub tests: Vec<RegisteredTest>,
+}
+
+impl TestRegistry {
+    pub fn register(&mut self, name: &str, scope: TestScope, spec: TestSpec) -> Result<()> {
+        if self.tests.iter().any(|t| t.name == name && t.scope == scope) {
+            bail!("test `{name}` already registered for this scope");
+        }
+        self.tests.push(RegisteredTest { name: name.to_string(), scope, spec });
+        Ok(())
+    }
+
+    pub fn deregister(&mut self, name: &str, scope: Option<&TestScope>) -> usize {
+        let before = self.tests.len();
+        self.tests.retain(|t| {
+            !(t.name == name && scope.map(|s| *s == t.scope).unwrap_or(true))
+        });
+        before - self.tests.len()
+    }
+
+    /// Tests applying to a node of the given name/type whose test-name
+    /// matches `re` (None = all).
+    pub fn matching<'a>(
+        &'a self,
+        node_name: &'a str,
+        model_type: &'a str,
+        re: Option<&'a Regex>,
+    ) -> impl Iterator<Item = &'a RegisteredTest> {
+        self.tests.iter().filter(move |t| {
+            let scope_ok = match &t.scope {
+                TestScope::Node(n) => n == node_name,
+                TestScope::ModelType(mt) => mt == model_type,
+            };
+            scope_ok && re.map(|r| r.is_match(&t.name)).unwrap_or(true)
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.tests
+                .iter()
+                .map(|t| {
+                    let (scope_kind, scope_val) = match &t.scope {
+                        TestScope::Node(n) => ("node", n.as_str()),
+                        TestScope::ModelType(m) => ("type", m.as_str()),
+                    };
+                    Json::obj()
+                        .set("name", t.name.as_str())
+                        .set("scope_kind", scope_kind)
+                        .set("scope", scope_val)
+                        .set("spec", t.spec.to_json())
+                })
+                .collect(),
+        )
+    }
+
+    pub fn from_json(j: &Json) -> Result<TestRegistry> {
+        let mut reg = TestRegistry::default();
+        for t in j.as_arr().unwrap_or(&[]) {
+            let scope = match t.req_str("scope_kind")? {
+                "node" => TestScope::Node(t.req_str("scope")?.to_string()),
+                "type" => TestScope::ModelType(t.req_str("scope")?.to_string()),
+                other => bail!("bad scope kind `{other}`"),
+            };
+            reg.tests.push(RegisteredTest {
+                name: t.req_str("name")?.to_string(),
+                scope,
+                spec: TestSpec::from_json(t.req("spec")?)?,
+            });
+        }
+        Ok(reg)
+    }
+}
+
+#[cfg(test)]
+pub mod testutil {
+    use super::*;
+    use std::collections::HashMap;
+
+    /// Mock backend with per-task fixed accuracies.
+    pub struct MockEval {
+        pub acc: HashMap<String, f32>,
+    }
+
+    impl EvalBackend for MockEval {
+        fn eval(
+            &self,
+            _ck: &Checkpoint,
+            task: &str,
+            _obj: Objective,
+            _batches: usize,
+            _seed: u64,
+        ) -> Result<(f32, f32)> {
+            Ok((0.0, *self.acc.get(task).unwrap_or(&0.0)))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    fn specs() -> Vec<CreationSpec> {
+        vec![
+            CreationSpec::Finetune {
+                task: "task3".into(),
+                objective: Objective::Cls,
+                steps: 100,
+                lr: 0.05,
+                seed: 7,
+                freeze: FreezeSpec::Backbone,
+                perturb: Some(PerturbSpec { kind: "swap".into(), strength: 0.1 }),
+            },
+            CreationSpec::Pretrain { corpus_seed: 1, steps: 500, lr: 0.1 },
+            CreationSpec::Prune {
+                sparsity: 0.5,
+                task: "task1".into(),
+                recover_steps: 50,
+                lr: 0.01,
+                seed: 3,
+            },
+            CreationSpec::FedAvg,
+            CreationSpec::Average,
+            CreationSpec::Mtl {
+                task: "task2".into(),
+                group: vec!["task1".into(), "task2".into()],
+                steps: 10,
+                lr: 0.1,
+                seed: 0,
+            },
+        ]
+    }
+
+    #[test]
+    fn creation_spec_json_roundtrip() {
+        for spec in specs() {
+            let back = CreationSpec::from_json(&spec.to_json()).unwrap();
+            assert_eq!(spec, back, "spec kind {}", spec.kind());
+        }
+    }
+
+    #[test]
+    fn test_spec_json_roundtrip() {
+        let all = vec![
+            TestSpec::EvalAccuracy {
+                task: "t".into(),
+                objective: Objective::Cls,
+                batches: 4,
+                split_seed: 9,
+                min_acc: 0.7,
+            },
+            TestSpec::ParamNormBelow { max: 100.0 },
+            TestSpec::SparsityAtLeast { min: 0.5 },
+            TestSpec::FiniteParams,
+        ];
+        for spec in all {
+            assert_eq!(TestSpec::from_json(&spec.to_json()).unwrap(), spec);
+        }
+    }
+
+    #[test]
+    fn registry_register_matching_deregister() {
+        let mut reg = TestRegistry::default();
+        reg.register("acc/task1", TestScope::Node("m1".into()), TestSpec::FiniteParams)
+            .unwrap();
+        reg.register(
+            "acc/all",
+            TestScope::ModelType("tx-tiny".into()),
+            TestSpec::FiniteParams,
+        )
+        .unwrap();
+        // duplicate rejected
+        assert!(reg
+            .register("acc/task1", TestScope::Node("m1".into()), TestSpec::FiniteParams)
+            .is_err());
+        let re = Regex::new("^acc/").unwrap();
+        let got: Vec<_> =
+            reg.matching("m1", "tx-tiny", Some(&re)).map(|t| t.name.clone()).collect();
+        assert_eq!(got, vec!["acc/task1", "acc/all"]);
+        let got: Vec<_> =
+            reg.matching("m2", "tx-tiny", None).map(|t| t.name.clone()).collect();
+        assert_eq!(got, vec!["acc/all"]);
+        assert_eq!(reg.deregister("acc/all", None), 1);
+        assert!(reg.matching("m2", "tx-tiny", None).next().is_none());
+    }
+
+    #[test]
+    fn registry_json_roundtrip() {
+        let mut reg = TestRegistry::default();
+        reg.register(
+            "a",
+            TestScope::Node("n".into()),
+            TestSpec::ParamNormBelow { max: 5.0 },
+        )
+        .unwrap();
+        reg.register(
+            "b",
+            TestScope::ModelType("t".into()),
+            TestSpec::SparsityAtLeast { min: 0.9 },
+        )
+        .unwrap();
+        let back = TestRegistry::from_json(&reg.to_json()).unwrap();
+        assert_eq!(reg.tests, back.tests);
+    }
+
+    #[test]
+    fn run_test_variants() {
+        let zoo = crate::checkpoint::testutil::tiny_zoo();
+        let spec = zoo.arch("t0").unwrap();
+        let ck = crate::checkpoint::Checkpoint::init(spec, 0);
+        let backend = testutil::MockEval {
+            acc: HashMap::from([("task1".to_string(), 0.9f32)]),
+        };
+        let (pass, metric) = run_test(
+            &TestSpec::EvalAccuracy {
+                task: "task1".into(),
+                objective: Objective::Cls,
+                batches: 1,
+                split_seed: 0,
+                min_acc: 0.8,
+            },
+            &ck,
+            &backend,
+        )
+        .unwrap();
+        assert!(pass && (metric - 0.9).abs() < 1e-6);
+        let (pass, _) = run_test(&TestSpec::ParamNormBelow { max: 1e9 }, &ck, &backend).unwrap();
+        assert!(pass);
+        let (pass, _) =
+            run_test(&TestSpec::SparsityAtLeast { min: 0.99 }, &ck, &backend).unwrap();
+        assert!(!pass);
+        let (pass, _) = run_test(&TestSpec::FiniteParams, &ck, &backend).unwrap();
+        assert!(pass);
+    }
+}

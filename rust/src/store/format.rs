@@ -1,0 +1,232 @@
+//! MGTF — the self-describing binary object format for stored tensors.
+//!
+//! ```text
+//! magic  "MGTF"                      4 bytes
+//! version u8 = 1
+//! enc     u8   0 = raw, 1 = delta
+//! dtype   u8   tensor::DType code
+//! ndim    u8
+//! dims    u64 LE × ndim
+//! -- if enc == delta --
+//! parent  ObjectId                   32 bytes (logical hash of parent tensor)
+//! eps     f32 LE                     quantization error bound
+//! codec   u8                         delta::Codec code
+//! nquant  u64 LE                     quantized element count (== numel)
+//! -- payload --
+//! raw:   dtype data, little-endian
+//! delta: codec-compressed bytes of the i32 quantized delta
+//! ```
+//!
+//! Each delta-compressed parameter is stored "as the compressed delta along
+//! with a pointer to the parent layer" (paper §4); chains are resolved
+//! recursively by [`crate::delta::Pipeline::load_tensor`].
+
+use anyhow::{bail, Result};
+
+use super::ObjectId;
+use crate::tensor::DType;
+
+pub const MAGIC: &[u8; 4] = b"MGTF";
+pub const VERSION: u8 = 1;
+
+/// Parsed object header + payload.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorObject {
+    Raw {
+        dtype: DType,
+        shape: Vec<usize>,
+        payload: Vec<u8>,
+    },
+    Delta {
+        dtype: DType,
+        shape: Vec<usize>,
+        parent: ObjectId,
+        eps: f32,
+        codec: u8,
+        n_quant: usize,
+        /// Grid mode (enc byte 2): parent and child both live on the
+        /// quantization grid k·step; the payload stores integer grid
+        /// deltas and reconstruction is (round(parent/step) − q)·step —
+        /// exact for zeros on any backend (G4 sparsity preservation).
+        grid: bool,
+        payload: Vec<u8>,
+    },
+}
+
+impl TensorObject {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            TensorObject::Raw { shape, .. } | TensorObject::Delta { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            TensorObject::Raw { dtype, .. } | TensorObject::Delta { dtype, .. } => *dtype,
+        }
+    }
+
+    /// Serialized on-disk size in bytes.
+    pub fn encoded_len(&self) -> usize {
+        self.encode().len()
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.push(VERSION);
+        match self {
+            TensorObject::Raw { dtype, shape, payload } => {
+                out.push(0);
+                out.push(dtype.code());
+                out.push(shape.len() as u8);
+                for d in shape {
+                    out.extend_from_slice(&(*d as u64).to_le_bytes());
+                }
+                out.extend_from_slice(payload);
+            }
+            TensorObject::Delta { dtype, shape, parent, eps, codec, n_quant, grid, payload } => {
+                out.push(if *grid { 2 } else { 1 });
+                out.push(dtype.code());
+                out.push(shape.len() as u8);
+                for d in shape {
+                    out.extend_from_slice(&(*d as u64).to_le_bytes());
+                }
+                out.extend_from_slice(&parent.0);
+                out.extend_from_slice(&eps.to_le_bytes());
+                out.push(*codec);
+                out.extend_from_slice(&(*n_quant as u64).to_le_bytes());
+                out.extend_from_slice(payload);
+            }
+        }
+        out
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<TensorObject> {
+        let mut r = Reader { b: bytes, pos: 0 };
+        if r.take(4)? != MAGIC {
+            bail!("not an MGTF object");
+        }
+        let version = r.u8()?;
+        if version != VERSION {
+            bail!("unsupported MGTF version {version}");
+        }
+        let enc = r.u8()?;
+        let dtype = DType::from_code(r.u8()?)?;
+        let ndim = r.u8()? as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(r.u64()? as usize);
+        }
+        match enc {
+            0 => Ok(TensorObject::Raw { dtype, shape, payload: r.rest().to_vec() }),
+            1 | 2 => {
+                let mut parent = [0u8; 32];
+                parent.copy_from_slice(r.take(32)?);
+                let eps = f32::from_le_bytes(r.take(4)?.try_into().unwrap());
+                let codec = r.u8()?;
+                let n_quant = r.u64()? as usize;
+                Ok(TensorObject::Delta {
+                    dtype,
+                    shape,
+                    parent: ObjectId(parent),
+                    eps,
+                    codec,
+                    n_quant,
+                    grid: enc == 2,
+                    payload: r.rest().to_vec(),
+                })
+            }
+            other => bail!("unknown MGTF encoding {other}"),
+        }
+    }
+
+    /// Outgoing object references (for GC).
+    pub fn refs(&self) -> Vec<ObjectId> {
+        match self {
+            TensorObject::Raw { .. } => Vec::new(),
+            TensorObject::Delta { parent, .. } => vec![*parent],
+        }
+    }
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.b.len() {
+            bail!("truncated MGTF object");
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn rest(&self) -> &'a [u8] {
+        &self.b[self.pos..]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::hash_bytes;
+
+    #[test]
+    fn raw_roundtrip() {
+        let obj = TensorObject::Raw {
+            dtype: DType::F32,
+            shape: vec![2, 3],
+            payload: vec![1, 2, 3, 4],
+        };
+        let bytes = obj.encode();
+        assert_eq!(TensorObject::decode(&bytes).unwrap(), obj);
+        assert!(obj.refs().is_empty());
+    }
+
+    #[test]
+    fn delta_roundtrip() {
+        let parent = hash_bytes(b"parent");
+        for grid in [false, true] {
+            let obj = TensorObject::Delta {
+                dtype: DType::F32,
+                shape: vec![8],
+                parent,
+                eps: 1e-4,
+                codec: 2,
+                n_quant: 8,
+                grid,
+                payload: vec![9; 17],
+            };
+            let bytes = obj.encode();
+            let back = TensorObject::decode(&bytes).unwrap();
+            assert_eq!(back, obj);
+            assert_eq!(back.refs(), vec![parent]);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(TensorObject::decode(b"nope").is_err());
+        assert!(TensorObject::decode(b"MGTF").is_err());
+        let mut good = TensorObject::Raw {
+            dtype: DType::F32,
+            shape: vec![1],
+            payload: vec![0; 4],
+        }
+        .encode();
+        good[4] = 9; // bad version
+        assert!(TensorObject::decode(&good).is_err());
+    }
+}

@@ -1,0 +1,353 @@
+//! Content-addressed object store (§4, "content-based hashing").
+//!
+//! Every parameter tensor in every model of a lineage graph is stored at
+//! most once, keyed by the SHA-256 of its *logical content* (dtype, shape,
+//! raw values — matching the paper, which hashes tensor value and shape).
+//! The stored payload for a key may be the raw tensor bytes or a
+//! delta-compressed encoding against a parent tensor (see [`format`] and
+//! the [`crate::delta`] pipeline) — the key always names the logical
+//! content, so deduplication ("indirection") is automatic: a `put` of an
+//! already-present key is a no-op dedup hit.
+//!
+//! Backends: on-disk (`.mgit/objects/aa/…`, one file per object, git-like
+//! fan-out) and in-memory (benches, tests). Mark-and-sweep GC walks
+//! caller-provided roots with a caller-provided reference extractor (the
+//! store itself is payload-agnostic).
+
+pub mod format;
+
+use std::collections::{HashMap, HashSet};
+use std::fmt;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+use sha2::{Digest, Sha256};
+
+/// SHA-256 content id.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ObjectId(pub [u8; 32]);
+
+impl ObjectId {
+    pub fn hex(&self) -> String {
+        self.0.iter().map(|b| format!("{b:02x}")).collect()
+    }
+
+    pub fn short(&self) -> String {
+        self.hex()[..12].to_string()
+    }
+
+    pub fn from_hex(s: &str) -> Result<ObjectId> {
+        if s.len() != 64 {
+            bail!("object id must be 64 hex chars, got {}", s.len());
+        }
+        let mut out = [0u8; 32];
+        for i in 0..32 {
+            out[i] = u8::from_str_radix(&s[2 * i..2 * i + 2], 16)
+                .map_err(|_| anyhow!("bad hex in object id"))?;
+        }
+        Ok(ObjectId(out))
+    }
+}
+
+impl fmt::Debug for ObjectId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "ObjectId({})", self.short())
+    }
+}
+
+impl fmt::Display for ObjectId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.hex())
+    }
+}
+
+/// Hash arbitrary bytes.
+pub fn hash_bytes(bytes: &[u8]) -> ObjectId {
+    let mut h = Sha256::new();
+    h.update(bytes);
+    ObjectId(h.finalize().into())
+}
+
+/// Hash a logical tensor: dtype code, dims, then the raw payload.
+pub fn hash_tensor(dtype: crate::tensor::DType, shape: &[usize], payload: &[u8]) -> ObjectId {
+    let mut h = Sha256::new();
+    h.update([dtype.code(), shape.len() as u8]);
+    for d in shape {
+        h.update((*d as u64).to_le_bytes());
+    }
+    h.update(payload);
+    ObjectId(h.finalize().into())
+}
+
+enum Backend {
+    Disk { root: PathBuf },
+    Mem { map: Mutex<HashMap<ObjectId, Vec<u8>>> },
+}
+
+/// Cumulative store statistics (for the Table-4/ablation benches).
+#[derive(Debug, Default)]
+pub struct StoreStats {
+    pub puts: AtomicU64,
+    pub dedup_hits: AtomicU64,
+    pub bytes_written: AtomicU64,
+}
+
+pub struct Store {
+    backend: Backend,
+    pub stats: StoreStats,
+}
+
+impl Store {
+    /// Open (creating if needed) an on-disk store rooted at `dir`.
+    pub fn open(dir: &Path) -> Result<Store> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating object store at {}", dir.display()))?;
+        Ok(Store {
+            backend: Backend::Disk { root: dir.to_path_buf() },
+            stats: StoreStats::default(),
+        })
+    }
+
+    /// Volatile in-memory store (tests, benches).
+    pub fn in_memory() -> Store {
+        Store {
+            backend: Backend::Mem { map: Mutex::new(HashMap::new()) },
+            stats: StoreStats::default(),
+        }
+    }
+
+    fn path_for(root: &Path, id: &ObjectId) -> PathBuf {
+        let hex = id.hex();
+        root.join(&hex[..2]).join(&hex[2..])
+    }
+
+    /// Store `bytes` under `id`. Returns `true` if newly written, `false`
+    /// on a dedup hit (content already present).
+    pub fn put(&self, id: ObjectId, bytes: &[u8]) -> Result<bool> {
+        self.stats.puts.fetch_add(1, Ordering::Relaxed);
+        if self.has(&id) {
+            self.stats.dedup_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(false);
+        }
+        self.stats
+            .bytes_written
+            .fetch_add(bytes.len() as u64, Ordering::Relaxed);
+        match &self.backend {
+            Backend::Disk { root } => {
+                let path = Self::path_for(root, &id);
+                std::fs::create_dir_all(path.parent().unwrap())?;
+                // Write-then-rename for atomicity.
+                let tmp = path.with_extension("tmp");
+                std::fs::write(&tmp, bytes)?;
+                std::fs::rename(&tmp, &path)?;
+            }
+            Backend::Mem { map } => {
+                map.lock().unwrap().insert(id, bytes.to_vec());
+            }
+        }
+        Ok(true)
+    }
+
+    /// Convenience: hash bytes and store them under their own hash.
+    pub fn put_blob(&self, bytes: &[u8]) -> Result<ObjectId> {
+        let id = hash_bytes(bytes);
+        self.put(id, bytes)?;
+        Ok(id)
+    }
+
+    pub fn get(&self, id: &ObjectId) -> Result<Vec<u8>> {
+        match &self.backend {
+            Backend::Disk { root } => {
+                let path = Self::path_for(root, id);
+                std::fs::read(&path)
+                    .with_context(|| format!("object {} not found", id.short()))
+            }
+            Backend::Mem { map } => map
+                .lock()
+                .unwrap()
+                .get(id)
+                .cloned()
+                .ok_or_else(|| anyhow!("object {} not found", id.short())),
+        }
+    }
+
+    pub fn has(&self, id: &ObjectId) -> bool {
+        match &self.backend {
+            Backend::Disk { root } => Self::path_for(root, id).exists(),
+            Backend::Mem { map } => map.lock().unwrap().contains_key(id),
+        }
+    }
+
+    pub fn remove(&self, id: &ObjectId) -> Result<()> {
+        match &self.backend {
+            Backend::Disk { root } => {
+                let path = Self::path_for(root, id);
+                if path.exists() {
+                    std::fs::remove_file(path)?;
+                }
+            }
+            Backend::Mem { map } => {
+                map.lock().unwrap().remove(id);
+            }
+        }
+        Ok(())
+    }
+
+    pub fn list(&self) -> Result<Vec<ObjectId>> {
+        match &self.backend {
+            Backend::Disk { root } => {
+                let mut out = Vec::new();
+                if !root.exists() {
+                    return Ok(out);
+                }
+                for fan in std::fs::read_dir(root)? {
+                    let fan = fan?;
+                    if !fan.file_type()?.is_dir() {
+                        continue;
+                    }
+                    let prefix = fan.file_name().to_string_lossy().to_string();
+                    for obj in std::fs::read_dir(fan.path())? {
+                        let name = obj?.file_name().to_string_lossy().to_string();
+                        if name.ends_with(".tmp") {
+                            continue;
+                        }
+                        if let Ok(id) = ObjectId::from_hex(&format!("{prefix}{name}")) {
+                            out.push(id);
+                        }
+                    }
+                }
+                Ok(out)
+            }
+            Backend::Mem { map } => Ok(map.lock().unwrap().keys().copied().collect()),
+        }
+    }
+
+    /// Total stored payload bytes (the numerator of compression ratios).
+    pub fn stored_bytes(&self) -> Result<u64> {
+        match &self.backend {
+            Backend::Disk { root } => {
+                let mut total = 0;
+                for id in self.list()? {
+                    total += std::fs::metadata(Self::path_for(root, &id))?.len();
+                }
+                Ok(total)
+            }
+            Backend::Mem { map } => {
+                Ok(map.lock().unwrap().values().map(|v| v.len() as u64).sum())
+            }
+        }
+    }
+
+    /// Mark-and-sweep GC: keep everything reachable from `roots` through
+    /// `refs` (which extracts outgoing ObjectIds from an object's payload).
+    /// Returns the ids that were swept.
+    pub fn gc(
+        &self,
+        roots: &[ObjectId],
+        refs: impl Fn(&[u8]) -> Vec<ObjectId>,
+    ) -> Result<Vec<ObjectId>> {
+        let mut live: HashSet<ObjectId> = HashSet::new();
+        let mut stack: Vec<ObjectId> = roots.to_vec();
+        while let Some(id) = stack.pop() {
+            if !live.insert(id) {
+                continue;
+            }
+            if let Ok(bytes) = self.get(&id) {
+                for r in refs(&bytes) {
+                    if !live.contains(&r) {
+                        stack.push(r);
+                    }
+                }
+            }
+        }
+        let mut swept = Vec::new();
+        for id in self.list()? {
+            if !live.contains(&id) {
+                self.remove(&id)?;
+                swept.push(id);
+            }
+        }
+        Ok(swept)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::DType;
+
+    #[test]
+    fn hex_roundtrip() {
+        let id = hash_bytes(b"hello");
+        let back = ObjectId::from_hex(&id.hex()).unwrap();
+        assert_eq!(id, back);
+        assert!(ObjectId::from_hex("zz").is_err());
+    }
+
+    #[test]
+    fn tensor_hash_depends_on_shape_and_dtype() {
+        let payload = vec![0u8; 16];
+        let a = hash_tensor(DType::F32, &[4], &payload);
+        let b = hash_tensor(DType::F32, &[2, 2], &payload);
+        let c = hash_tensor(DType::I32, &[4], &payload);
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a, hash_tensor(DType::F32, &[4], &payload));
+    }
+
+    fn exercise(store: &Store) {
+        let id = store.put_blob(b"abc").unwrap();
+        assert!(store.has(&id));
+        assert_eq!(store.get(&id).unwrap(), b"abc");
+        // dedup
+        assert!(!store.put(id, b"abc").unwrap());
+        assert_eq!(store.stats.dedup_hits.load(Ordering::Relaxed), 1);
+        let id2 = store.put_blob(b"defg").unwrap();
+        let mut listed = store.list().unwrap();
+        listed.sort();
+        let mut want = vec![id, id2];
+        want.sort();
+        assert_eq!(listed, want);
+        assert_eq!(store.stored_bytes().unwrap(), 7);
+        store.remove(&id).unwrap();
+        assert!(!store.has(&id));
+        assert!(store.get(&id).is_err());
+    }
+
+    #[test]
+    fn memory_backend() {
+        exercise(&Store::in_memory());
+    }
+
+    #[test]
+    fn disk_backend() {
+        let dir = std::env::temp_dir().join(format!("mgit-store-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        exercise(&Store::open(&dir).unwrap());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn gc_keeps_reachable_chain() {
+        let store = Store::in_memory();
+        // c <- b <- a (a references b, b references c) plus unreachable d.
+        let c = store.put_blob(b"c-payload").unwrap();
+        let b = store.put_blob(c.hex().as_bytes()).unwrap();
+        let a = store.put_blob(b.hex().as_bytes()).unwrap();
+        let d = store.put_blob(b"garbage").unwrap();
+        let swept = store
+            .gc(&[a], |bytes| {
+                std::str::from_utf8(bytes)
+                    .ok()
+                    .and_then(|s| ObjectId::from_hex(s).ok())
+                    .into_iter()
+                    .collect()
+            })
+            .unwrap();
+        assert_eq!(swept, vec![d]);
+        assert!(store.has(&a) && store.has(&b) && store.has(&c));
+        assert!(!store.has(&d));
+    }
+}

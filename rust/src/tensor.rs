@@ -1,0 +1,243 @@
+//! Dense tensors (f32 / i32) with the small set of operations MGit's
+//! storage and diagnostics paths need: byte (de)serialization, norms,
+//! sparsity accounting and magnitude masking (for the pruning creation
+//! functions of G4).
+
+use anyhow::{bail, Result};
+
+/// Element type of a stored tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn code(self) -> u8 {
+        match self {
+            DType::F32 => 0,
+            DType::I32 => 1,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Result<DType> {
+        match c {
+            0 => Ok(DType::F32),
+            1 => Ok(DType::I32),
+            _ => bail!("unknown dtype code {c}"),
+        }
+    }
+
+    pub fn size_of(self) -> usize {
+        4
+    }
+}
+
+/// Tensor payload.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// A dense tensor: shape + data.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl Tensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data: TensorData::F32(data) }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data: TensorData::I32(data) }
+    }
+
+    pub fn zeros_f32(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor::f32(shape, vec![0.0; n])
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self.data {
+            TensorData::F32(_) => DType::F32,
+            TensorData::I32(_) => DType::I32,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut Vec<f32>> {
+        match &mut self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Byte serialization (little-endian, matching PJRT host layout)
+    // ------------------------------------------------------------------
+    pub fn payload_bytes(&self) -> Vec<u8> {
+        match &self.data {
+            TensorData::F32(v) => f32_to_bytes(v),
+            TensorData::I32(v) => i32_to_bytes(v),
+        }
+    }
+
+    pub fn from_payload(dtype: DType, shape: Vec<usize>, bytes: &[u8]) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if bytes.len() != n * dtype.size_of() {
+            bail!(
+                "payload size mismatch: shape {:?} wants {} bytes, got {}",
+                shape,
+                n * dtype.size_of(),
+                bytes.len()
+            );
+        }
+        Ok(match dtype {
+            DType::F32 => Tensor::f32(shape, bytes_to_f32(bytes)),
+            DType::I32 => Tensor::i32(shape, bytes_to_i32(bytes)),
+        })
+    }
+
+    // ------------------------------------------------------------------
+    // Diagnostics / math
+    // ------------------------------------------------------------------
+    pub fn l2_norm(&self) -> f64 {
+        match &self.data {
+            TensorData::F32(v) => v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt(),
+            TensorData::I32(v) => v.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt(),
+        }
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor) -> Result<f64> {
+        let (a, b) = (self.as_f32()?, other.as_f32()?);
+        if a.len() != b.len() {
+            bail!("shape mismatch in max_abs_diff");
+        }
+        Ok(a.iter()
+            .zip(b)
+            .map(|(&x, &y)| ((x - y).abs()) as f64)
+            .fold(0.0, f64::max))
+    }
+
+    /// Fraction of exactly-zero elements.
+    pub fn sparsity(&self) -> f64 {
+        let n = self.numel();
+        if n == 0 {
+            return 0.0;
+        }
+        let zeros = match &self.data {
+            TensorData::F32(v) => v.iter().filter(|&&x| x == 0.0).count(),
+            TensorData::I32(v) => v.iter().filter(|&&x| x == 0).count(),
+        };
+        zeros as f64 / n as f64
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Flat slice helpers (the runtime works on flat f32 vectors)
+// ---------------------------------------------------------------------------
+pub fn f32_to_bytes(v: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(v.len() * 4);
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+pub fn bytes_to_f32(b: &[u8]) -> Vec<f32> {
+    b.chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+pub fn i32_to_bytes(v: &[i32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(v.len() * 4);
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+pub fn bytes_to_i32(b: &[u8]) -> Vec<i32> {
+    b.chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+/// Indices of the `k` smallest-magnitude *non-zero* elements (G4's L1
+/// magnitude pruning step).
+pub fn smallest_magnitude_nonzero(v: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..v.len()).filter(|&i| v[i] != 0.0).collect();
+    idx.sort_by(|&a, &b| v[a].abs().partial_cmp(&v[b].abs()).unwrap());
+    idx.truncate(k);
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn payload_roundtrip_f32() {
+        let t = Tensor::f32(vec![2, 3], vec![1.0, -2.5, 0.0, 3.25, f32::MIN, f32::MAX]);
+        let bytes = t.payload_bytes();
+        let back = Tensor::from_payload(DType::F32, vec![2, 3], &bytes).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn payload_roundtrip_i32() {
+        let t = Tensor::i32(vec![4], vec![i32::MIN, -1, 0, i32::MAX]);
+        let back = Tensor::from_payload(DType::I32, vec![4], &t.payload_bytes()).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn payload_size_checked() {
+        assert!(Tensor::from_payload(DType::F32, vec![3], &[0u8; 8]).is_err());
+    }
+
+    #[test]
+    fn norms_and_sparsity() {
+        let t = Tensor::f32(vec![4], vec![3.0, 0.0, 4.0, 0.0]);
+        assert!((t.l2_norm() - 5.0).abs() < 1e-12);
+        assert!((t.sparsity() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn magnitude_selection_skips_zeros() {
+        let v = vec![0.0, -0.1, 5.0, 0.01, 0.0, -2.0];
+        let idx = smallest_magnitude_nonzero(&v, 2);
+        assert_eq!(idx, vec![3, 1]);
+    }
+
+    #[test]
+    fn max_abs_diff_works() {
+        let a = Tensor::f32(vec![3], vec![1.0, 2.0, 3.0]);
+        let b = Tensor::f32(vec![3], vec![1.0, 2.5, 2.0]);
+        assert!((a.max_abs_diff(&b).unwrap() - 1.0).abs() < 1e-12);
+    }
+}

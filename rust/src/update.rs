@@ -1,0 +1,498 @@
+//! Automated model updating — `run_update_cascade` (paper §5, Algorithm 2).
+//!
+//! Given an update `m → m'` (the user registered a new version `m'` of
+//! model `m`), create new versions of every provenance descendant of `m`
+//! and re-execute their creation functions against the updated parents:
+//!
+//! * **Phase A** — BFS over `m`'s descendants (respecting skip/terminate):
+//!   for each node `x`, create an empty node `x'`, link provenance edges
+//!   from the *next versions* of `x`'s parents (falling back to current
+//!   versions for parents outside the cascade), add the version edge
+//!   `x → x'`, and copy the creation function.
+//! * **Phase B** — all-parents-first traversal from `m'`: materialize each
+//!   `x'` by running its creation spec with its parents' checkpoints. MTL
+//!   groups are gathered and executed once per group through
+//!   [`CreationExecutor::execute_mtl_group`] (the merged `cr'`).
+//!
+//! MGit never overwrites existing models: the old versions stay loadable,
+//! and the storage layer delta-compresses `x'` against `x`.
+
+use std::collections::{HashMap, HashSet};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::checkpoint::Checkpoint;
+use crate::delta::StoredModel;
+use crate::lineage::{traversal, LineageGraph, NodeIdx};
+use crate::registry::CreationSpec;
+
+/// Executes creation specs (implemented over the PJRT runtime in
+/// [`crate::train`], mocked in tests).
+pub trait CreationExecutor {
+    /// Create a model from its parents per `spec`. `arch` is the target
+    /// node's architecture (model_type).
+    fn execute(
+        &mut self,
+        spec: &CreationSpec,
+        arch: &str,
+        parents: &[Checkpoint],
+    ) -> Result<Checkpoint>;
+
+    /// Merged-cr execution of an MTL group (paper §5): all members are
+    /// trained jointly with shared backbone weights. Returns one
+    /// checkpoint per member, in `specs` order.
+    fn execute_mtl_group(
+        &mut self,
+        specs: &[&CreationSpec],
+        arch: &str,
+        parents: &[Checkpoint],
+    ) -> Result<Vec<Checkpoint>>;
+}
+
+/// Persists checkpoints into the CAS (with delta compression against the
+/// previous version when available).
+pub trait CheckpointStore {
+    fn load(&self, stored: &StoredModel) -> Result<Checkpoint>;
+    /// `prev` is the node's previous version (delta-compression parent).
+    fn save(
+        &mut self,
+        ck: &Checkpoint,
+        prev: Option<(&StoredModel, &Checkpoint)>,
+    ) -> Result<StoredModel>;
+}
+
+/// Next-version name: `foo` → `foo@v2`, `foo@v2` → `foo@v3`; appends a
+/// disambiguating suffix if the name is somehow taken.
+pub fn next_version_name(g: &LineageGraph, name: &str) -> String {
+    let (stem, n) = match name.rsplit_once("@v") {
+        Some((stem, v)) => match v.parse::<u64>() {
+            Ok(k) => (stem.to_string(), k + 1),
+            Err(_) => (name.to_string(), 2),
+        },
+        None => (name.to_string(), 2),
+    };
+    let mut k = n;
+    loop {
+        let cand = format!("{stem}@v{k}");
+        if g.idx(&cand).is_err() {
+            return cand;
+        }
+        k += 1;
+    }
+}
+
+/// Outcome of one cascade.
+#[derive(Debug, Default)]
+pub struct CascadeReport {
+    /// (old node, new node) pairs, in creation order.
+    pub new_versions: Vec<(NodeIdx, NodeIdx)>,
+    /// Nodes skipped because they had no creation function.
+    pub skipped_no_cr: Vec<NodeIdx>,
+}
+
+/// Algorithm 2. `m` is the updated model's old version, `m_new` the user's
+/// new version (already a node, with `stored` populated and a version edge
+/// m → m_new in place — use [`prepare_manual_update`] for that).
+pub fn run_update_cascade(
+    g: &mut LineageGraph,
+    ckstore: &mut dyn CheckpointStore,
+    exec: &mut dyn CreationExecutor,
+    m: NodeIdx,
+    m_new: NodeIdx,
+    skip: impl Fn(&LineageGraph, NodeIdx) -> bool,
+    terminate: impl Fn(&LineageGraph, NodeIdx) -> bool,
+) -> Result<CascadeReport> {
+    if g.next_version(m) != Some(m_new) {
+        bail!("m' must be the registered next version of m");
+    }
+    let mut report = CascadeReport::default();
+
+    // ---------------- Phase A: create empty next versions ----------------
+    let descendants = traversal::bfs(
+        g,
+        m,
+        traversal::EdgeFilter::Provenance,
+        |g2, i| i == m || skip(g2, i),
+        &terminate,
+    );
+    let mut next_of: HashMap<NodeIdx, NodeIdx> = HashMap::from([(m, m_new)]);
+    for &x in &descendants {
+        if g.node(x).creation.is_none() {
+            report.skipped_no_cr.push(x);
+            continue;
+        }
+        let name = next_version_name(g, &g.node(x).name);
+        let model_type = g.node(x).model_type.clone();
+        let x_new = g.add_node(&name, &model_type)?;
+        g.node_mut(x_new).creation = g.node(x).creation.clone();
+        g.node_mut(x_new).metadata = g.node(x).metadata.clone();
+        g.add_version_edge(x, x_new)?;
+        next_of.insert(x, x_new);
+    }
+    // Provenance edges: from next version of each parent if it exists,
+    // otherwise from the current parent.
+    for (&x, &x_new) in next_of.iter() {
+        if x == m {
+            continue;
+        }
+        let parents = g.node(x).prov_parents.clone();
+        for p in parents {
+            let p_eff = next_of.get(&p).copied().unwrap_or(p);
+            g.add_edge(p_eff, x_new)?;
+        }
+    }
+
+    // ---------------- Phase B: train in all-parents-first order ----------
+    // Order the *created* nodes so each trains only after every created
+    // parent is materialized (parents outside the created set — including
+    // skipped nodes' old versions — are already stored). This is the
+    // traversal_all_parents_first of Algorithm 2 restricted to the new
+    // version set, which also covers children whose path from m' was cut
+    // by a skip.
+    let created: HashSet<NodeIdx> =
+        next_of.values().copied().filter(|&i| i != m_new).collect();
+    let mut indeg: HashMap<NodeIdx, usize> = created
+        .iter()
+        .map(|&i| {
+            let d = g
+                .node(i)
+                .prov_parents
+                .iter()
+                .filter(|p| created.contains(p))
+                .count();
+            (i, d)
+        })
+        .collect();
+    let mut queue: std::collections::VecDeque<NodeIdx> = {
+        let mut q: Vec<NodeIdx> = created
+            .iter()
+            .copied()
+            .filter(|i| indeg[i] == 0)
+            .collect();
+        q.sort_unstable();
+        q.into()
+    };
+    let mut order = Vec::with_capacity(created.len());
+    while let Some(i) = queue.pop_front() {
+        order.push(i);
+        for &c in &g.node(i).prov_children {
+            if let Some(d) = indeg.get_mut(&c) {
+                *d -= 1;
+                if *d == 0 {
+                    queue.push_back(c);
+                }
+            }
+        }
+    }
+    let mut done: HashSet<NodeIdx> = HashSet::new();
+    for x_new in order {
+        if done.contains(&x_new) || g.node(x_new).stored.is_some() {
+            continue;
+        }
+        let Some(spec) = g.node(x_new).creation.clone() else { continue };
+
+        // Gather parents' checkpoints.
+        let load_parents = |g: &LineageGraph, idx: NodeIdx| -> Result<Vec<Checkpoint>> {
+            g.node(idx)
+                .prov_parents
+                .iter()
+                .map(|&p| {
+                    let sm = g
+                        .node(p)
+                        .stored
+                        .as_ref()
+                        .ok_or_else(|| anyhow!("parent {} has no checkpoint", g.node(p).name))?;
+                    ckstore.load(sm)
+                })
+                .collect()
+        };
+
+        if let CreationSpec::Mtl { group, .. } = &spec {
+            // Gather the whole group among pending new versions.
+            let group_tasks: HashSet<&String> = group.iter().collect();
+            let mut members: Vec<NodeIdx> = vec![x_new];
+            for (&_old, &cand) in next_of.iter() {
+                if cand == x_new || done.contains(&cand) {
+                    continue;
+                }
+                if let Some(CreationSpec::Mtl { task, .. }) = &g.node(cand).creation {
+                    if group_tasks.contains(task) {
+                        members.push(cand);
+                    }
+                }
+            }
+            members.sort_by_key(|&i| g.node(i).name.clone());
+            let parents = load_parents(g, x_new)?;
+            let specs: Vec<CreationSpec> = members
+                .iter()
+                .map(|&i| g.node(i).creation.clone().unwrap())
+                .collect();
+            let spec_refs: Vec<&CreationSpec> = specs.iter().collect();
+            let arch = g.node(x_new).model_type.clone();
+            let cks = exec.execute_mtl_group(&spec_refs, &arch, &parents)?;
+            if cks.len() != members.len() {
+                bail!("MTL executor returned {} models for {} members", cks.len(), members.len());
+            }
+            for (&member, ck) in members.iter().zip(&cks) {
+                let prev = g.prev_version(member);
+                let prev_data = match prev {
+                    Some(p) => {
+                        let sm = g.node(p).stored.clone();
+                        match sm {
+                            Some(sm) => Some((sm.clone(), ckstore.load(&sm)?)),
+                            None => None,
+                        }
+                    }
+                    None => None,
+                };
+                let stored = ckstore
+                    .save(ck, prev_data.as_ref().map(|(s, c)| (s, c)))?;
+                g.node_mut(member).stored = Some(stored);
+                done.insert(member);
+                if let Some(p) = prev {
+                    report.new_versions.push((p, member));
+                }
+            }
+        } else {
+            let parents = load_parents(g, x_new)?;
+            let arch = g.node(x_new).model_type.clone();
+            let ck = exec.execute(&spec, &arch, &parents)?;
+            let prev = g.prev_version(x_new);
+            let prev_data = match prev {
+                Some(p) => match g.node(p).stored.clone() {
+                    Some(sm) => Some((sm.clone(), ckstore.load(&sm)?)),
+                    None => None,
+                },
+                None => None,
+            };
+            let stored = ckstore.save(&ck, prev_data.as_ref().map(|(s, c)| (s, c)))?;
+            g.node_mut(x_new).stored = Some(stored);
+            done.insert(x_new);
+            if let Some(p) = prev {
+                report.new_versions.push((p, x_new));
+            }
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::registry::{FreezeSpec, Objective};
+
+    /// Executor that records calls and returns parents[0] + 1.0.
+    struct MockExec {
+        calls: Vec<String>,
+    }
+
+    impl CreationExecutor for MockExec {
+        fn execute(
+            &mut self,
+            spec: &CreationSpec,
+            _arch: &str,
+            parents: &[Checkpoint],
+        ) -> Result<Checkpoint> {
+            self.calls.push(format!("{}", spec.kind()));
+            let mut ck = parents[0].clone();
+            for x in ck.flat.iter_mut() {
+                *x += 1.0;
+            }
+            Ok(ck)
+        }
+
+        fn execute_mtl_group(
+            &mut self,
+            specs: &[&CreationSpec],
+            _arch: &str,
+            parents: &[Checkpoint],
+        ) -> Result<Vec<Checkpoint>> {
+            self.calls.push(format!("mtl_group x{}", specs.len()));
+            Ok(specs.iter().map(|_| parents[0].clone()).collect())
+        }
+    }
+
+    /// In-memory checkpoint "store" that just clones.
+    struct MockStore {
+        saved: Vec<Checkpoint>,
+    }
+
+    impl CheckpointStore for MockStore {
+        fn load(&self, stored: &StoredModel) -> Result<Checkpoint> {
+            // Index is smuggled through the arch field suffix.
+            let idx: usize = stored.arch.rsplit('#').next().unwrap().parse()?;
+            Ok(self.saved[idx].clone())
+        }
+
+        fn save(
+            &mut self,
+            ck: &Checkpoint,
+            _prev: Option<(&StoredModel, &Checkpoint)>,
+        ) -> Result<StoredModel> {
+            self.saved.push(ck.clone());
+            Ok(StoredModel {
+                arch: format!("{}#{}", ck.arch, self.saved.len() - 1),
+                params: vec![],
+            })
+        }
+    }
+
+    fn ck(v: f32) -> Checkpoint {
+        Checkpoint { arch: "t".into(), flat: vec![v; 4] }
+    }
+
+    fn finetune_spec(task: &str) -> CreationSpec {
+        CreationSpec::Finetune {
+            task: task.into(),
+            objective: Objective::Cls,
+            steps: 1,
+            lr: 0.1,
+            seed: 0,
+            freeze: FreezeSpec::None,
+            perturb: None,
+        }
+    }
+
+    /// root(m) -> a -> b ; root -> c(no cr)
+    fn setup() -> (LineageGraph, MockStore) {
+        let mut g = LineageGraph::new();
+        let mut st = MockStore { saved: vec![] };
+        let m = g.add_node("m", "t").unwrap();
+        let a = g.add_node("a", "t").unwrap();
+        let b = g.add_node("b", "t").unwrap();
+        let c = g.add_node("c", "t").unwrap();
+        g.add_edge(m, a).unwrap();
+        g.add_edge(a, b).unwrap();
+        g.add_edge(m, c).unwrap();
+        for (i, idx) in [m, a, b, c].into_iter().enumerate() {
+            let stored = st.save(&ck(i as f32), None).unwrap();
+            g.node_mut(idx).stored = Some(stored);
+        }
+        g.register_creation_function(a, finetune_spec("t1")).unwrap();
+        g.register_creation_function(b, finetune_spec("t2")).unwrap();
+        // c intentionally has no creation function.
+        (g, st)
+    }
+
+    fn register_update(g: &mut LineageGraph, st: &mut MockStore, m: NodeIdx) -> NodeIdx {
+        let name = next_version_name(g, &g.node(m).name);
+        let mt = g.node(m).model_type.clone();
+        let m2 = g.add_node(&name, &mt).unwrap();
+        let stored = st.save(&ck(100.0), None).unwrap();
+        g.node_mut(m2).stored = Some(stored);
+        g.add_version_edge(m, m2).unwrap();
+        m2
+    }
+
+    #[test]
+    fn cascade_creates_and_trains_descendants() {
+        let (mut g, mut st) = setup();
+        let m = g.idx("m").unwrap();
+        let m2 = register_update(&mut g, &mut st, m);
+        let mut exec = MockExec { calls: vec![] };
+        let report = run_update_cascade(
+            &mut g, &mut st, &mut exec, m, m2,
+            |_, _| false, |_, _| false,
+        )
+        .unwrap();
+        // a and b get new versions; c skipped (no cr).
+        assert_eq!(report.new_versions.len(), 2);
+        assert_eq!(report.skipped_no_cr.len(), 1);
+        let a2 = g.idx("a@v2").unwrap();
+        let b2 = g.idx("b@v2").unwrap();
+        // a@v2's parent is m@v2; b@v2's parent is a@v2.
+        assert_eq!(g.node(a2).prov_parents, vec![m2]);
+        assert_eq!(g.node(b2).prov_parents, vec![a2]);
+        // Trained values flow: m2=100 -> a2=101 -> b2=102.
+        let a2_ck = st.load(g.node(a2).stored.as_ref().unwrap()).unwrap();
+        assert_eq!(a2_ck.flat[0], 101.0);
+        let b2_ck = st.load(g.node(b2).stored.as_ref().unwrap()).unwrap();
+        assert_eq!(b2_ck.flat[0], 102.0);
+        g.integrity_check().unwrap();
+        // Old versions untouched.
+        assert!(g.node(g.idx("a").unwrap()).stored.is_some());
+    }
+
+    #[test]
+    fn cascade_respects_skip() {
+        let (mut g, mut st) = setup();
+        let m = g.idx("m").unwrap();
+        let a = g.idx("a").unwrap();
+        let m2 = register_update(&mut g, &mut st, m);
+        let mut exec = MockExec { calls: vec![] };
+        // Skip a: only b would remain, but its parent a has no new version,
+        // so b@v2 trains against the OLD a (parent fallback).
+        let report = run_update_cascade(
+            &mut g, &mut st, &mut exec, m, m2,
+            move |_, i| i == a, |_, _| false,
+        )
+        .unwrap();
+        assert!(g.idx("a@v2").is_err());
+        assert!(g.idx("b@v2").is_ok());
+        assert_eq!(report.new_versions.len(), 1);
+        let b2 = g.idx("b@v2").unwrap();
+        let b2_ck = st.load(g.node(b2).stored.as_ref().unwrap()).unwrap();
+        assert_eq!(b2_ck.flat[0], 2.0); // old a (=1.0) + 1
+    }
+
+    #[test]
+    fn cascade_requires_version_edge() {
+        let (mut g, mut st) = setup();
+        let m = g.idx("m").unwrap();
+        let a = g.idx("a").unwrap();
+        let mut exec = MockExec { calls: vec![] };
+        assert!(run_update_cascade(
+            &mut g, &mut st, &mut exec, m, a,
+            |_, _| false, |_, _| false
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn version_names_increment() {
+        let mut g = LineageGraph::new();
+        g.add_node("x", "t").unwrap();
+        assert_eq!(next_version_name(&g, "x"), "x@v2");
+        g.add_node("x@v2", "t").unwrap();
+        assert_eq!(next_version_name(&g, "x@v2"), "x@v3");
+        g.add_node("x@v3", "t").unwrap();
+        assert_eq!(next_version_name(&g, "x@v2"), "x@v4");
+    }
+
+    #[test]
+    fn mtl_group_trains_once() {
+        let mut g = LineageGraph::new();
+        let mut st = MockStore { saved: vec![] };
+        let m = g.add_node("m", "t").unwrap();
+        let t1 = g.add_node("t1", "t").unwrap();
+        let t2 = g.add_node("t2", "t").unwrap();
+        g.add_edge(m, t1).unwrap();
+        g.add_edge(m, t2).unwrap();
+        for idx in [m, t1, t2] {
+            let s = st.save(&ck(0.0), None).unwrap();
+            g.node_mut(idx).stored = Some(s);
+        }
+        let mtl = |task: &str| CreationSpec::Mtl {
+            task: task.into(),
+            group: vec!["t1".into(), "t2".into()],
+            steps: 1,
+            lr: 0.1,
+            seed: 0,
+        };
+        g.register_creation_function(t1, mtl("t1")).unwrap();
+        g.register_creation_function(t2, mtl("t2")).unwrap();
+        let m2 = register_update(&mut g, &mut st, m);
+        let mut exec = MockExec { calls: vec![] };
+        let report = run_update_cascade(
+            &mut g, &mut st, &mut exec, m, m2,
+            |_, _| false, |_, _| false,
+        )
+        .unwrap();
+        assert_eq!(report.new_versions.len(), 2);
+        // The group executed exactly once.
+        assert_eq!(
+            exec.calls.iter().filter(|c| c.starts_with("mtl_group")).count(),
+            1
+        );
+    }
+}

@@ -1,0 +1,118 @@
+//! Git-style command-line parsing (`mgit <command> [positional…] [--flags]`).
+//!
+//! `clap` is unavailable offline; this covers what the MGit CLI needs:
+//! one subcommand, positional arguments, `--key value` / `--key=value`
+//! flags, and bare boolean flags. A bare flag followed by a positional
+//! would consume it greedily, so boolean flags go last or use `--flag=true`.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    pub flags: HashMap<String, String>,
+}
+
+impl Args {
+    /// Parse `argv` (without the program name).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut it = argv.into_iter().peekable();
+        let command = it.next().unwrap_or_default();
+        let mut args = Args { command, ..Default::default() };
+        while let Some(tok) = it.next() {
+            if let Some(flag) = tok.strip_prefix("--") {
+                if flag.is_empty() {
+                    bail!("bare `--` is not supported");
+                }
+                if let Some((k, v)) = flag.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    args.flags.insert(flag.to_string(), it.next().unwrap());
+                } else {
+                    args.flags.insert(flag.to_string(), "true".to_string());
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn pos(&self, i: usize, what: &str) -> Result<&str> {
+        self.positional
+            .get(i)
+            .map(|s| s.as_str())
+            .ok_or_else(|| anyhow!("missing argument <{what}> (position {i})"))
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    pub fn flag_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.flag(name).unwrap_or(default)
+    }
+
+    pub fn flag_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("flag --{name} expects an integer, got `{v}`")),
+        }
+    }
+
+    pub fn flag_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("flag --{name} expects a number, got `{v}`")),
+        }
+    }
+
+    pub fn flag_u64(&self, name: &str, default: u64) -> Result<u64> {
+        Ok(self.flag_usize(name, default as usize)? as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_positionals() {
+        let a = parse("diff modelA modelB");
+        assert_eq!(a.command, "diff");
+        assert_eq!(a.pos(0, "a").unwrap(), "modelA");
+        assert_eq!(a.pos(1, "b").unwrap(), "modelB");
+        assert!(a.pos(2, "c").is_err());
+    }
+
+    #[test]
+    fn flags_all_forms() {
+        let a = parse("compress g2 --codec lzma --eps=1e-4 --verbose");
+        assert_eq!(a.flag("codec"), Some("lzma"));
+        assert_eq!(a.flag_f64("eps", 0.0).unwrap(), 1e-4);
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["g2"]);
+        assert_eq!(a.flag_usize("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let a = parse("x --n abc");
+        assert!(a.flag_usize("n", 0).is_err());
+    }
+}

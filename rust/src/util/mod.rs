@@ -1,0 +1,63 @@
+//! Dependency-free utility substrates.
+//!
+//! The offline crate set has no `serde`/`serde_json`, no `rand`, no `clap`
+//! and no `criterion`, so MGit carries its own minimal implementations:
+//! a JSON value model + parser + writer ([`json`]), a splittable PRNG
+//! ([`rng`]), a git-style argument parser ([`argparse`]), wall-clock
+//! timing and bench statistics ([`timing`]), and a small property-testing
+//! harness ([`proptest`]).
+
+pub mod argparse;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod timing;
+
+/// Format a byte count human-readably (e.g. `1.50 MiB`).
+pub fn human_bytes(n: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{} B", n)
+    } else {
+        format!("{:.2} {}", v, UNITS[u])
+    }
+}
+
+/// Format a duration in seconds human-readably (`430 ms`, `2.1 s`, `3.5 min`).
+pub fn human_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.1} ms", s * 1e3)
+    } else if s < 120.0 {
+        format!("{:.2} s", s)
+    } else {
+        format!("{:.1} min", s / 60.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(human_bytes(17), "17 B");
+        assert_eq!(human_bytes(1536), "1.50 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn secs_formatting() {
+        assert_eq!(human_secs(0.0000005), "0.5 µs");
+        assert_eq!(human_secs(0.043), "43.0 ms");
+        assert_eq!(human_secs(2.5), "2.50 s");
+        assert_eq!(human_secs(300.0), "5.0 min");
+    }
+}

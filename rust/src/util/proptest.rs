@@ -1,0 +1,154 @@
+//! Minimal property-based testing harness (the `proptest` crate is not in
+//! the offline set).
+//!
+//! Usage:
+//! ```ignore
+//! check("rle roundtrip", 200, |rng, case| {
+//!     let data = gen::vec_u8(rng, 0..2048);
+//!     let enc = rle_encode(&data);
+//!     prop_assert(rle_decode(&enc)? == data, "roundtrip mismatch")
+//! });
+//! ```
+//! Each case gets a deterministic per-case RNG derived from the property
+//! name, so failures print a reproducible `(name, case)` pair. On failure
+//! the harness retries with the *smallest* generator budget ("shrink-lite"):
+//! generators consult [`Budget`] so a failing property is re-searched at
+//! smaller sizes first and the minimal failing size is reported.
+
+use super::rng::Rng;
+
+/// Generator size budget: generators should scale their output by `size`.
+#[derive(Debug, Clone, Copy)]
+pub struct Budget {
+    pub size: usize,
+}
+
+pub type PropResult = Result<(), String>;
+
+pub fn prop_assert(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+fn seed_for(name: &str, case: usize) -> u64 {
+    // FNV-1a over the name, mixed with the case index.
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15)
+}
+
+/// Run `cases` random cases of the property; panic with a reproducible
+/// report on the first failure, after re-searching smaller sizes.
+pub fn check(name: &str, cases: usize, prop: impl Fn(&mut Rng, Budget) -> PropResult) {
+    let mut failure: Option<(usize, usize, String)> = None;
+    'outer: for case in 0..cases {
+        let size = 4 + (case * 64) / cases.max(1); // grow sizes over the run
+        let mut rng = Rng::new(seed_for(name, case));
+        if let Err(msg) = prop(&mut rng, Budget { size }) {
+            // Shrink-lite: retry the same case seed at smaller sizes and
+            // report the smallest size that still fails.
+            let mut min_fail = (size, msg);
+            for s in (1..size).rev() {
+                let mut rng = Rng::new(seed_for(name, case));
+                match prop(&mut rng, Budget { size: s }) {
+                    Err(m) => min_fail = (s, m),
+                    Ok(()) => break,
+                }
+            }
+            failure = Some((case, min_fail.0, min_fail.1));
+            break 'outer;
+        }
+    }
+    if let Some((case, size, msg)) = failure {
+        panic!(
+            "property `{name}` failed (case {case}, minimal size {size}): {msg}\n\
+             reproduce with seed_for(\"{name}\", {case})"
+        );
+    }
+}
+
+/// Common generators.
+pub mod gen {
+    use super::{Budget, Rng};
+
+    pub fn usize_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        lo + rng.usize_below((hi - lo).max(1))
+    }
+
+    /// Length scaled by the budget, in [0, 32*size).
+    pub fn len(rng: &mut Rng, b: Budget) -> usize {
+        rng.usize_below(32 * b.size.max(1))
+    }
+
+    pub fn vec_u8(rng: &mut Rng, n: usize) -> Vec<u8> {
+        (0..n).map(|_| rng.below(256) as u8).collect()
+    }
+
+    /// Bytes with long runs (exercises RLE's best case).
+    pub fn vec_u8_runs(rng: &mut Rng, n: usize) -> Vec<u8> {
+        let mut out = Vec::with_capacity(n);
+        while out.len() < n {
+            let byte = rng.below(4) as u8;
+            let run = 1 + rng.usize_below(64);
+            for _ in 0..run.min(n - out.len()) {
+                out.push(byte);
+            }
+        }
+        out
+    }
+
+    pub fn vec_f32(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32(0.0, scale)).collect()
+    }
+
+    pub fn vec_i32(rng: &mut Rng, n: usize, max_abs: i32) -> Vec<i32> {
+        (0..n)
+            .map(|_| rng.below((2 * max_abs + 1) as u64) as i32 - max_abs)
+            .collect()
+    }
+
+    pub fn ident(rng: &mut Rng) -> String {
+        let n = 1 + rng.usize_below(12);
+        (0..n)
+            .map(|_| (b'a' + rng.below(26) as u8) as char)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("reverse twice is identity", 50, |rng, b| {
+            let n = gen::len(rng, b);
+            let v = gen::vec_u8(rng, n);
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            prop_assert(v == w, "reverse^2 != id")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always fails`")]
+    fn failing_property_panics_with_name() {
+        check("always fails", 10, |_rng, _b| Err("nope".to_string()));
+    }
+
+    #[test]
+    fn deterministic_seeds() {
+        let a = seed_for("x", 3);
+        let b = seed_for("x", 3);
+        assert_eq!(a, b);
+        assert_ne!(seed_for("x", 3), seed_for("x", 4));
+        assert_ne!(seed_for("x", 3), seed_for("y", 3));
+    }
+}

@@ -1,0 +1,138 @@
+//! Wall-clock timing, counters and bench statistics.
+//!
+//! `criterion` is unavailable offline, so the bench harness (rust/benches)
+//! is built on [`BenchStats`]: warmup + N timed iterations, reporting
+//! mean / median / p95 / stddev, matching the methodology we describe in
+//! EXPERIMENTS.md.
+
+use std::time::Instant;
+
+/// A simple scope timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Timer::start();
+    let out = f();
+    (out, t.elapsed_secs())
+}
+
+/// Statistics over repeated timed runs of an operation.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub samples: Vec<f64>,
+}
+
+impl BenchStats {
+    /// Run `f` for `warmup` untimed + `iters` timed iterations.
+    pub fn measure(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> BenchStats {
+        for _ in 0..warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t = Timer::start();
+            f();
+            samples.push(t.elapsed_secs());
+        }
+        BenchStats { name: name.to_string(), samples }
+    }
+
+    pub fn from_samples(name: &str, samples: Vec<f64>) -> BenchStats {
+        BenchStats { name: name.to_string(), samples }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn stddev(&self) -> f64 {
+        if self.samples.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.samples.iter().map(|s| (s - m) * (s - m)).sum::<f64>()
+            / (self.samples.len() - 1) as f64)
+            .sqrt()
+    }
+
+    fn sorted(&self) -> Vec<f64> {
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s
+    }
+
+    pub fn median(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn percentile(&self, p: f64) -> f64 {
+        let s = self.sorted();
+        if s.is_empty() {
+            return 0.0;
+        }
+        let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
+        s[idx.min(s.len() - 1)]
+    }
+
+    /// One-line report: `name  mean ± σ  (median, p95, n)`.
+    pub fn report(&self) -> String {
+        format!(
+            "{:<42} {:>10} ± {:>9}  (median {:>10}, p95 {:>10}, n={})",
+            self.name,
+            super::human_secs(self.mean()),
+            super::human_secs(self.stddev()),
+            super::human_secs(self.median()),
+            super::human_secs(self.percentile(95.0)),
+            self.samples.len()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_math() {
+        let s = BenchStats::from_samples("t", vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert!((s.mean() - 3.0).abs() < 1e-12);
+        assert!((s.median() - 3.0).abs() < 1e-12);
+        assert!((s.stddev() - (2.5f64).sqrt()).abs() < 1e-12);
+        assert_eq!(s.percentile(100.0), 5.0);
+        assert_eq!(s.percentile(0.0), 1.0);
+    }
+
+    #[test]
+    fn measure_runs_closure() {
+        let mut count = 0;
+        let s = BenchStats::measure("c", 2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(s.samples.len(), 5);
+        assert!(s.mean() >= 0.0);
+    }
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::start();
+        let a = t.elapsed_secs();
+        let b = t.elapsed_secs();
+        assert!(b >= a);
+    }
+}

@@ -1,0 +1,602 @@
+//! Workload builders for the paper's five lineage graphs (Table 3) and
+//! the persistence pass that feeds Table 4.
+//!
+//! Builders *train real models* through the PJRT runtime and return the
+//! lineage graph (with creation specs + metadata) plus every checkpoint
+//! in memory; [`persist`] then stores them under a given compression
+//! configuration — separating the two lets the Table-4 bench compress one
+//! build under five configurations.
+//!
+//! | Graph | Paper                       | Here                               |
+//! |-------|-----------------------------|------------------------------------|
+//! | G1    | 23 HuggingFace NLP models   | transformer zoo: 10 "pretrained" roots + 13 finetuned/frozen children, gold parent map |
+//! | G2    | RoBERTa + 9 GLUE tasks × 10 perturbed versions (91/171) | MLM root + n tasks × (1 + versions) |
+//! | G3    | ResNet-50 FL, 40 silos, 10 rounds, 5 sampled (60/95)    | [`crate::fl`] controller           |
+//! | G4    | 3 pruned vision models      | 3 archs × progressive sparsities    |
+//! | G5    | MTL RoBERTa, 10/9           | MTL group with shared backbone      |
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::autoconstruct::{self, AutoConfig, PoolModel};
+use crate::checkpoint::Checkpoint;
+use crate::delta::{self, CompressConfig, CompressReport, DeltaKernel, StoredModel};
+use crate::fl::{run_federated, FlConfig};
+use crate::lineage::{traversal, LineageGraph, NodeIdx};
+use crate::modeldag::ModelDag;
+use crate::registry::{CreationSpec, FreezeSpec, Objective, PerturbSpec};
+use crate::runtime::Runtime;
+use crate::store::Store;
+use crate::train::{CasCheckpointStore, Trainer};
+use crate::update::{CheckpointStore, CreationExecutor};
+use crate::data;
+
+/// A built workload: lineage graph (stored=None) + in-memory checkpoints.
+pub struct Workload {
+    pub name: String,
+    pub graph: LineageGraph,
+    pub checkpoints: HashMap<String, Checkpoint>,
+}
+
+impl Workload {
+    pub fn ck(&self, name: &str) -> Result<&Checkpoint> {
+        self.checkpoints
+            .get(name)
+            .ok_or_else(|| anyhow!("workload has no checkpoint for `{name}`"))
+    }
+}
+
+/// Scale knobs (paper-shape vs test-size).
+#[derive(Debug, Clone)]
+pub struct Scale {
+    pub n_tasks: usize,
+    pub task_steps: usize,
+    pub versions_per_task: usize,
+    pub version_steps: usize,
+    pub pretrain_steps: usize,
+    pub lr: f32,
+    pub fl: FlConfig,
+    pub sparsities: Vec<f32>,
+    pub prune_recover_steps: usize,
+    pub mtl_steps: usize,
+    pub g1_child_steps: usize,
+}
+
+impl Scale {
+    /// Paper-shaped (node/edge counts match Table 3; step counts sized
+    /// for a single-core CPU testbed).
+    pub fn paper() -> Scale {
+        Scale {
+            n_tasks: 9,
+            task_steps: 60,
+            versions_per_task: 9, // + the original = 10 versions
+            version_steps: 20,
+            pretrain_steps: 60,
+            lr: 0.02,
+            fl: FlConfig {
+                n_silos: 40,
+                workers_per_round: 5,
+                rounds: 10,
+                local_steps: 3,
+                ..FlConfig::default()
+            },
+            sparsities: vec![0.5, 0.7, 0.9],
+            prune_recover_steps: 15,
+            mtl_steps: 40,
+            g1_child_steps: 30,
+        }
+    }
+
+    /// Small (CI-sized) variant.
+    pub fn small() -> Scale {
+        Scale {
+            n_tasks: 3,
+            task_steps: 10,
+            versions_per_task: 2,
+            version_steps: 5,
+            pretrain_steps: 10,
+            lr: 0.02,
+            fl: FlConfig {
+                n_silos: 8,
+                workers_per_round: 3,
+                rounds: 2,
+                local_steps: 2,
+                ..FlConfig::default()
+            },
+            sparsities: vec![0.5, 0.8],
+            prune_recover_steps: 4,
+            mtl_steps: 8,
+            g1_child_steps: 8,
+        }
+    }
+}
+
+fn task_name(i: usize) -> String {
+    format!("task{}", i + 1)
+}
+
+// ---------------------------------------------------------------------------
+// G2 — adaptation (MLM root -> task models -> perturbed versions)
+// ---------------------------------------------------------------------------
+pub fn build_g2(rt: &Runtime, scale: &Scale) -> Result<Workload> {
+    let arch = "tx-tiny";
+    let mut g = LineageGraph::new();
+    let mut cks = HashMap::new();
+    let mut trainer = Trainer::new(rt);
+
+    // Root: MLM-pretrained base model.
+    let root_spec = CreationSpec::Pretrain {
+        corpus_seed: 42,
+        steps: scale.pretrain_steps,
+        lr: scale.lr,
+    };
+    let root_ck = trainer.execute(&root_spec, arch, &[])?;
+    let root = g.add_node("g2/base-mlm", arch)?;
+    g.register_creation_function(root, root_spec)?;
+    cks.insert("g2/base-mlm".to_string(), root_ck.clone());
+
+    for t in 0..scale.n_tasks {
+        let task = task_name(t);
+        let spec = CreationSpec::Finetune {
+            task: task.clone(),
+            objective: Objective::Cls,
+            steps: scale.task_steps,
+            lr: scale.lr,
+            seed: 100 + t as u64,
+            freeze: FreezeSpec::None,
+            perturb: None,
+        };
+        let ck = trainer.execute(&spec, arch, &[root_ck.clone()])?;
+        let name = format!("g2/{task}");
+        let node = g.add_node(&name, arch)?;
+        g.register_creation_function(node, spec)?;
+        g.add_edge(root, node)?;
+        cks.insert(name.clone(), ck.clone());
+
+        // Versions: finetune the previous version on perturbed data.
+        let mut prev_node = node;
+        let mut prev_ck = ck;
+        for v in 0..scale.versions_per_task {
+            let kind = data::PERTURBATIONS[v % data::PERTURBATIONS.len()];
+            let spec = CreationSpec::Finetune {
+                task: task.clone(),
+                objective: Objective::Cls,
+                steps: scale.version_steps,
+                lr: scale.lr,
+                seed: 1000 + (t * 100 + v) as u64,
+                freeze: FreezeSpec::None,
+                perturb: Some(PerturbSpec { kind: kind.into(), strength: 0.3 }),
+            };
+            let vck = trainer.execute(&spec, arch, &[prev_ck.clone()])?;
+            let vname = format!("g2/{task}@v{}", v + 2);
+            let vnode = g.add_node(&vname, arch)?;
+            g.register_creation_function(vnode, spec)?;
+            // Both provenance and versioning edges (paper Fig. 1b).
+            g.add_edge(prev_node, vnode)?;
+            g.add_version_edge(prev_node, vnode)?;
+            cks.insert(vname, vck.clone());
+            prev_node = vnode;
+            prev_ck = vck;
+        }
+    }
+    Ok(Workload { name: "G2".into(), graph: g, checkpoints: cks })
+}
+
+// ---------------------------------------------------------------------------
+// G3 — federated learning
+// ---------------------------------------------------------------------------
+pub fn build_g3(rt: &Runtime, scale: &Scale) -> Result<Workload> {
+    // FL registers lineage itself; capture checkpoints through a
+    // collecting CheckpointStore.
+    struct Collect<'a> {
+        inner: CasCheckpointStore<'a>,
+        seen: Vec<(StoredModel, Checkpoint)>,
+    }
+    impl<'a> CheckpointStore for Collect<'a> {
+        fn load(&self, sm: &StoredModel) -> Result<Checkpoint> {
+            self.inner.load(sm)
+        }
+        fn save(
+            &mut self,
+            ck: &Checkpoint,
+            prev: Option<(&StoredModel, &Checkpoint)>,
+        ) -> Result<StoredModel> {
+            let sm = self.inner.save(ck, prev)?;
+            self.seen.push((sm.clone(), ck.clone()));
+            Ok(sm)
+        }
+    }
+    let scratch = Store::in_memory();
+    let mut collect = Collect {
+        inner: CasCheckpointStore {
+            store: &scratch,
+            zoo: rt.zoo(),
+            kernel: &crate::delta::NativeKernel,
+            compress: None,
+        },
+        seen: Vec::new(),
+    };
+    let mut g = LineageGraph::new();
+    let cfg = FlConfig { ..scale.fl.clone() };
+    run_federated(rt, &mut g, &mut collect, &cfg)?;
+    // Map stored models back to node names.
+    let mut cks = HashMap::new();
+    let by_params: HashMap<String, Checkpoint> = collect
+        .seen
+        .iter()
+        .map(|(sm, ck)| (sm.to_json().to_string_compact(), ck.clone()))
+        .collect();
+    for node in &g.nodes {
+        if let Some(sm) = &node.stored {
+            if let Some(ck) = by_params.get(&sm.to_json().to_string_compact()) {
+                cks.insert(node.name.clone(), ck.clone());
+            }
+        }
+    }
+    // Strip stored pointers (persist() will re-store under each config).
+    for node in g.nodes.iter_mut() {
+        node.stored = None;
+    }
+    Ok(Workload { name: "G3".into(), graph: g, checkpoints: cks })
+}
+
+// ---------------------------------------------------------------------------
+// G4 — edge specialization (progressive magnitude pruning, 3 archs)
+// ---------------------------------------------------------------------------
+pub fn build_g4(rt: &Runtime, scale: &Scale) -> Result<Workload> {
+    let mut g = LineageGraph::new();
+    let mut cks = HashMap::new();
+    let mut trainer = Trainer::new(rt);
+    // The 3 architectures stand in for ResNet-50 / DenseNet121 / MobileNet.
+    for (ai, arch) in ["tx-tiny", "tx-small", "tx-base"].into_iter().enumerate() {
+        let task = task_name(ai % scale.n_tasks.max(1));
+        let root_spec = CreationSpec::Finetune {
+            task: task.clone(),
+            objective: Objective::Cls,
+            steps: scale.task_steps,
+            lr: scale.lr,
+            seed: 7 + ai as u64,
+            freeze: FreezeSpec::None,
+            perturb: None,
+        };
+        let spec = rt.zoo().arch(arch)?;
+        let base = Checkpoint::init(spec, 7 + ai as u64);
+        let root_ck = trainer.execute(&root_spec, arch, &[base])?;
+        let root_name = format!("g4/{arch}/dense");
+        let root = g.add_node(&root_name, arch)?;
+        g.register_creation_function(root, root_spec)?;
+        cks.insert(root_name, root_ck.clone());
+
+        let mut prev_node = root;
+        let mut prev_ck = root_ck;
+        for &s in &scale.sparsities {
+            let spec = CreationSpec::Prune {
+                sparsity: s,
+                task: task.clone(),
+                recover_steps: scale.prune_recover_steps,
+                lr: scale.lr,
+                seed: 50 + ai as u64,
+            };
+            let ck = trainer.execute(&spec, arch, &[prev_ck.clone()])?;
+            let name = format!("g4/{arch}/sparse{:.0}", s * 100.0);
+            let node = g.add_node(&name, arch)?;
+            g.register_creation_function(node, spec)?;
+            g.add_edge(prev_node, node)?;
+            cks.insert(name, ck.clone());
+            prev_node = node;
+            prev_ck = ck;
+        }
+    }
+    Ok(Workload { name: "G4".into(), graph: g, checkpoints: cks })
+}
+
+// ---------------------------------------------------------------------------
+// G5 — multi-task learning (shared backbone)
+// ---------------------------------------------------------------------------
+pub fn build_g5(rt: &Runtime, scale: &Scale) -> Result<Workload> {
+    let arch = "tx-tiny";
+    let mut g = LineageGraph::new();
+    let mut cks = HashMap::new();
+    let mut trainer = Trainer::new(rt);
+
+    let root_spec = CreationSpec::Pretrain {
+        corpus_seed: 5,
+        steps: scale.pretrain_steps,
+        lr: scale.lr,
+    };
+    let root_ck = trainer.execute(&root_spec, arch, &[])?;
+    let root = g.add_node("g5/base-mlm", arch)?;
+    g.register_creation_function(root, root_spec)?;
+    cks.insert("g5/base-mlm".to_string(), root_ck.clone());
+
+    let group: Vec<String> = (0..scale.n_tasks).map(task_name).collect();
+    let specs: Vec<CreationSpec> = group
+        .iter()
+        .map(|task| CreationSpec::Mtl {
+            task: task.clone(),
+            group: group.clone(),
+            steps: scale.mtl_steps,
+            lr: scale.lr,
+            seed: 3,
+        })
+        .collect();
+    let spec_refs: Vec<&CreationSpec> = specs.iter().collect();
+    let outs = trainer.execute_mtl_group(&spec_refs, arch, &[root_ck])?;
+    for (task, (spec, ck)) in group.iter().zip(specs.iter().zip(outs)) {
+        let name = format!("g5/mtl-{task}");
+        let node = g.add_node(&name, arch)?;
+        g.register_creation_function(node, spec.clone())?;
+        g.add_edge(root, node)?;
+        cks.insert(name, ck);
+    }
+    Ok(Workload { name: "G5".into(), graph: g, checkpoints: cks })
+}
+
+// ---------------------------------------------------------------------------
+// G1 — model-hub zoo + automated construction
+// ---------------------------------------------------------------------------
+/// The 23-model zoo with its gold parent map (None = root). Mirrors the
+/// paper's HuggingFace list: 10 independently "pretrained" roots and 13
+/// derived models, including frozen-backbone children.
+pub fn g1_gold() -> Vec<(&'static str, &'static str, Option<&'static str>)> {
+    // (name, arch, gold parent)
+    vec![
+        ("bert-base-cased", "tx-small", None),
+        ("bert-base-uncased", "tx-small", None),
+        ("bert-base-mnli", "tx-small", Some("bert-base-cased")),
+        ("bert-base-uncased-squad-frozen", "tx-small", Some("bert-base-uncased")),
+        ("bert-base-uncased-squad2", "tx-small", Some("bert-base-uncased")),
+        ("bert-large-uncased", "tx-base", None),
+        ("bert-large-cased", "tx-base", None),
+        ("bert-large-mnli", "tx-base", Some("bert-large-uncased")),
+        ("roberta-base", "tx-small", None),
+        ("roberta-base-squad2", "tx-small", Some("roberta-base")),
+        ("roberta-base-mnli", "tx-small", Some("roberta-base")),
+        ("roberta-large", "tx-base", None),
+        ("roberta-large-mnli", "tx-base", Some("roberta-large")),
+        ("roberta-large-squad2", "tx-base", Some("roberta-large")),
+        ("albert-base-v2", "tx-tiny", None),
+        ("albert-base-v2-squad2", "tx-tiny", Some("albert-base-v2")),
+        ("albert-base-v2-mnli", "tx-tiny", Some("albert-base-v2")),
+        ("distilbert-base-uncased", "tx-tiny", None),
+        ("distilbert-base-cased", "tx-tiny", None),
+        ("distilbert-base-uncased-squad2", "tx-tiny", Some("distilbert-base-uncased")),
+        ("distilbert-base-uncased-squad-frozen", "tx-tiny", Some("distilbert-base-uncased")),
+        ("electra-small-generator", "tx-tiny", None),
+        ("electra-small-mnli", "tx-tiny", Some("electra-small-generator")),
+    ]
+}
+
+/// Build the G1 zoo by actually pretraining roots and finetuning children.
+/// Tasks: "mnli" → task1, "squad" → task2 analogs; "frozen" children use
+/// FreezeSpec::Backbone (the paper's frozen-weight models).
+pub fn build_g1(rt: &Runtime, scale: &Scale) -> Result<Workload> {
+    let gold = g1_gold();
+    let mut g = LineageGraph::new();
+    let mut cks: HashMap<String, Checkpoint> = HashMap::new();
+    let mut trainer = Trainer::new(rt);
+
+    for (i, (name, arch, parent)) in gold.iter().enumerate() {
+        let (ck, spec) = match parent {
+            None => {
+                let spec = CreationSpec::Pretrain {
+                    corpus_seed: 1000 + i as u64,
+                    steps: scale.pretrain_steps,
+                    lr: scale.lr,
+                };
+                (trainer.execute(&spec, arch, &[])?, spec)
+            }
+            Some(p) => {
+                let task = if name.contains("mnli") { "task1" } else { "task2" };
+                let freeze = if name.contains("frozen") {
+                    FreezeSpec::Backbone
+                } else {
+                    FreezeSpec::None
+                };
+                let spec = CreationSpec::Finetune {
+                    task: task.into(),
+                    objective: Objective::Cls,
+                    steps: scale.g1_child_steps,
+                    lr: scale.lr,
+                    seed: 2000 + i as u64,
+                    freeze,
+                    perturb: None,
+                };
+                let pck = cks
+                    .get(*p)
+                    .ok_or_else(|| anyhow!("gold parent {p} not built yet"))?
+                    .clone();
+                (trainer.execute(&spec, arch, &[pck])?, spec)
+            }
+        };
+        let node = g.add_node(name, arch)?;
+        g.register_creation_function(node, spec)?;
+        if let Some(p) = parent {
+            let pidx = g.idx(p)?;
+            g.add_edge(pidx, node)?;
+        }
+        cks.insert(name.to_string(), ck);
+    }
+    Ok(Workload { name: "G1".into(), graph: g, checkpoints: cks })
+}
+
+/// §3.2 automated construction over a G1-style pool: insert models one by
+/// one, scoring against everything already inserted. Returns
+/// (constructed graph, #correct parent choices, per-model insert seconds).
+pub fn auto_construct(
+    rt: &Runtime,
+    store: &Store,
+    pool_order: &[(String, String, Option<String>)],
+    checkpoints: &HashMap<String, Checkpoint>,
+    cfg: &AutoConfig,
+) -> Result<(LineageGraph, usize, Vec<f64>)> {
+    let zoo = rt.zoo();
+    let mut g = LineageGraph::new();
+    let mut inserted: Vec<PoolModel<'_>> = Vec::new();
+    let mut correct = 0;
+    let mut times = Vec::new();
+
+    for (name, arch, gold_parent) in pool_order {
+        let spec = zoo.arch(arch)?;
+        let ck = checkpoints
+            .get(name)
+            .ok_or_else(|| anyhow!("missing checkpoint {name}"))?
+            .clone();
+        let (sm, _) = delta::store_raw(store, spec, &ck)?;
+        let pm = PoolModel {
+            name: name.clone(),
+            spec,
+            dag: ModelDag::from_arch(spec, Some(&sm))?,
+            ck,
+        };
+        let timer = crate::util::timing::Timer::start();
+        let choice = autoconstruct::choose_parent(&inserted, &pm, cfg)?;
+        times.push(timer.elapsed_secs());
+        let node = g.add_node(name, arch)?;
+        let chosen = match choice {
+            Some((pi, _)) => {
+                let pname = inserted[pi].name.clone();
+                let pidx = g.idx(&pname)?;
+                g.add_edge(pidx, node)?;
+                Some(pname)
+            }
+            None => None,
+        };
+        if chosen.as_deref() == gold_parent.as_deref() {
+            correct += 1;
+        }
+        inserted.push(pm);
+    }
+    Ok((g, correct, times))
+}
+
+// ---------------------------------------------------------------------------
+// Persistence (feeds Table 4)
+// ---------------------------------------------------------------------------
+/// How a workload is persisted.
+#[derive(Debug, Clone, Copy)]
+pub enum PersistMode {
+    /// Content hashing only (paper "MGit (Hash)").
+    HashOnly,
+    /// Hash + delta compression (paper "MGit (<codec> + Hash)").
+    Delta(CompressConfig),
+}
+
+/// Aggregate result of persisting one workload.
+#[derive(Debug, Clone, Default)]
+pub struct PersistReport {
+    pub raw_bytes: u64,
+    pub stored_bytes: u64,
+    pub n_models: usize,
+    pub per_model: Vec<(String, CompressReport)>,
+}
+
+impl PersistReport {
+    pub fn ratio(&self) -> f64 {
+        if self.stored_bytes == 0 {
+            return 0.0;
+        }
+        self.raw_bytes as f64 / self.stored_bytes as f64
+    }
+}
+
+/// Store every checkpoint of a workload, parents before children;
+/// children delta-compress against their version parent (preferred) or
+/// first provenance parent. Updates `graph` nodes' `stored` pointers.
+/// `check` (node name, reconstructed ck) gates lossy acceptance.
+pub fn persist(
+    wl: &mut Workload,
+    store: &Store,
+    zoo: &crate::checkpoint::ModelZoo,
+    kernel: &dyn DeltaKernel,
+    mode: PersistMode,
+    mut check: impl FnMut(&str, &Checkpoint) -> Result<bool>,
+) -> Result<PersistReport> {
+    let mut report = PersistReport::default();
+    // Persisted (possibly reconstructed) checkpoints by node index.
+    let mut stored_cks: HashMap<NodeIdx, Checkpoint> = HashMap::new();
+
+    // Roots-first order over provenance edges; version edges follow
+    // provenance structure in all our workloads.
+    let order = {
+        let g = &wl.graph;
+        let mut indeg: Vec<usize> =
+            g.nodes.iter().map(|n| n.prov_parents.len()).collect();
+        let mut queue: std::collections::VecDeque<NodeIdx> =
+            (0..g.len()).filter(|&i| indeg[i] == 0).collect();
+        let mut order = Vec::with_capacity(g.len());
+        while let Some(i) = queue.pop_front() {
+            order.push(i);
+            for &c in &g.nodes[i].prov_children {
+                indeg[c] -= 1;
+                if indeg[c] == 0 {
+                    queue.push_back(c);
+                }
+            }
+        }
+        order
+    };
+
+    for idx in order {
+        let name = wl.graph.node(idx).name.clone();
+        let mut ck = wl
+            .checkpoints
+            .get(&name)
+            .ok_or_else(|| anyhow!("no checkpoint for node {name}"))?
+            .clone();
+        // G4 mode: quantize parameters to the grid BEFORE deltas, roots
+        // included, so exact zeros survive the whole chain (paper §6.3).
+        if let PersistMode::Delta(cfg) = mode {
+            if cfg.prequantize {
+                let grid = crate::delta::quant::step(cfg.eps);
+                for x in ck.flat.iter_mut() {
+                    if *x != 0.0 {
+                        *x = (*x / grid + 0.5).floor() * grid;
+                    }
+                }
+            }
+        }
+        let spec = zoo.arch(&ck.arch)?;
+        report.n_models += 1;
+
+        // Pick the compression parent.
+        let parent_idx = wl
+            .graph
+            .node(idx)
+            .ver_parents
+            .first()
+            .or_else(|| wl.graph.node(idx).prov_parents.first())
+            .copied();
+
+        let (sm, final_ck, rep) = match (mode, parent_idx) {
+            (PersistMode::Delta(cfg), Some(p)) if wl.graph.node(p).stored.is_some() => {
+                let pck = stored_cks
+                    .get(&p)
+                    .ok_or_else(|| anyhow!("parent checkpoint missing"))?;
+                if pck.arch == ck.arch {
+                    let pm = wl.graph.node(p).stored.clone().unwrap();
+                    let pspec = zoo.arch(&pck.arch)?;
+                    let (sm, final_ck, rep, _accepted) = delta::delta_compress_checked(
+                        store, spec, &ck, pspec, pck, &pm, cfg, kernel,
+                        |rec| check(&name, rec),
+                    )?;
+                    (sm, final_ck, rep)
+                } else {
+                    let (sm, rep) = delta::store_raw(store, spec, &ck)?;
+                    (sm, ck.clone(), rep)
+                }
+            }
+            _ => {
+                let (sm, rep) = delta::store_raw(store, spec, &ck)?;
+                (sm, ck.clone(), rep)
+            }
+        };
+        report.raw_bytes += rep.raw_bytes;
+        report.stored_bytes += rep.stored_bytes;
+        report.per_model.push((name.clone(), rep));
+        wl.graph.node_mut(idx).stored = Some(sm);
+        stored_cks.insert(idx, final_ck);
+    }
+    Ok(report)
+}

@@ -1,0 +1,64 @@
+//! Integration: the `mgit` CLI surface against a temp repository.
+
+use std::path::PathBuf;
+
+fn run(args: &[&str]) -> anyhow::Result<()> {
+    mgit::cli::run(args.iter().map(|s| s.to_string()).collect())
+}
+
+fn tmp_repo(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("mgit-cli-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn artifacts() -> String {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts")
+        .to_string_lossy()
+        .into_owned()
+}
+
+#[test]
+fn init_log_fsck_stats_gc() {
+    let dir = tmp_repo("basic");
+    let d = dir.to_str().unwrap();
+    run(&["init", "--dir", d]).unwrap();
+    // double init fails
+    assert!(run(&["init", "--dir", d]).is_err());
+    run(&["log", "--dir", d]).unwrap();
+    run(&["fsck", "--dir", d]).unwrap();
+    run(&["stats", "--dir", d]).unwrap();
+    run(&["gc", "--dir", d]).unwrap();
+    assert!(run(&["nonsense", "--dir", d]).is_err());
+    run(&["help"]).unwrap();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn build_compress_test_cascade_flow() {
+    let dir = tmp_repo("flow");
+    let d = dir.to_str().unwrap();
+    let a = artifacts();
+    run(&["init", "--dir", d]).unwrap();
+    // Build a small G5 (fast) and G3.
+    run(&["build", "g5", "--dir", d, "--artifacts", &a, "--small"]).unwrap();
+    run(&["fsck", "--dir", d]).unwrap();
+    run(&["log", "--dir", d]).unwrap();
+    // show a node
+    run(&["show", "g5/base-mlm", "--dir", d]).unwrap();
+    assert!(run(&["show", "missing-node", "--dir", d]).is_err());
+    // diff two nodes
+    run(&["diff", "g5/mtl-task1", "g5/mtl-task2", "--dir", d, "--artifacts", &a]).unwrap();
+    // compress everything with deltas
+    run(&["compress", "--dir", d, "--artifacts", &a, "--codec", "lzma"]).unwrap();
+    run(&["fsck", "--dir", d]).unwrap();
+    // cascade on the MLM root
+    run(&["cascade", "g5/base-mlm", "--dir", d, "--artifacts", &a, "--steps", "3"]).unwrap();
+    run(&["fsck", "--dir", d]).unwrap();
+    // the cascade created a @v2 of the root
+    let repo = mgit::cli::Repo::open(&dir).unwrap();
+    assert!(repo.graph.idx("g5/base-mlm@v2").is_ok());
+    std::fs::remove_dir_all(&dir).unwrap();
+}

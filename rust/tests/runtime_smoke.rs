@@ -1,0 +1,156 @@
+//! Integration: the PJRT runtime executes the AOT artifacts correctly —
+//! training reduces loss and improves accuracy, evaluation is
+//! deterministic, and the compiled Pallas delta kernels agree with the
+//! native oracle. Requires `make artifacts`.
+
+use std::path::PathBuf;
+
+use mgit::checkpoint::Checkpoint;
+use mgit::data;
+use mgit::delta::quant::{DeltaKernel, NativeKernel};
+use mgit::registry::Objective;
+use mgit::runtime::Runtime;
+use mgit::util::rng::Rng;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn runtime() -> Runtime {
+    Runtime::new(&artifacts_dir()).expect(
+        "runtime init failed — did you run `make artifacts`?",
+    )
+}
+
+#[test]
+fn training_reduces_loss_and_learns() {
+    let rt = runtime();
+    let spec = rt.zoo().arch("tx-tiny").unwrap();
+    let ck = Checkpoint::init(spec, 7);
+    let mut params = ck.flat.clone();
+    let mut mom = vec![0f32; params.len()];
+
+    let (_, acc_before) = rt
+        .eval_many("tx-tiny", Objective::Cls, &params, "task4", 0, 4)
+        .unwrap();
+
+    let mut first_losses = 0.0;
+    let mut last_losses = 0.0;
+    let steps = 80;
+    for step in 0..steps {
+        let batch =
+            data::cls_batch("task4", rt.zoo().batch, rt.zoo().max_seq, 0, step as u64, None)
+                .unwrap();
+        let loss = rt
+            .train_step("tx-tiny", Objective::Cls, &mut params, &mut mom, &batch, 0.02)
+            .unwrap();
+        assert!(loss.is_finite(), "loss diverged at step {step}");
+        if step < 10 {
+            first_losses += loss;
+        }
+        if step >= steps - 10 {
+            last_losses += loss;
+        }
+    }
+    assert!(
+        last_losses < first_losses,
+        "loss did not decrease: first {first_losses}, last {last_losses}"
+    );
+
+    let (_, acc_after) = rt
+        .eval_many("tx-tiny", Objective::Cls, &params, "task4", 0, 4)
+        .unwrap();
+    assert!(
+        acc_after > acc_before + 0.1,
+        "no learning: before {acc_before}, after {acc_after}"
+    );
+}
+
+#[test]
+fn mlm_objective_trains() {
+    let rt = runtime();
+    let spec = rt.zoo().arch("tx-tiny").unwrap();
+    let mut params = Checkpoint::init(spec, 3).flat;
+    let mut mom = vec![0f32; params.len()];
+    let mut losses = Vec::new();
+    for step in 0..120 {
+        let batch =
+            data::mlm_batch(1, rt.zoo().batch, rt.zoo().max_seq, step as u64, None).unwrap();
+        let loss = rt
+            .train_step("tx-tiny", Objective::Mlm, &mut params, &mut mom, &batch, 0.05)
+            .unwrap();
+        losses.push(loss);
+    }
+    assert!(losses.last().unwrap() < losses.first().unwrap());
+    // MLM accuracy above the ~1/254 chance level after a few steps.
+    let (_, acc) = rt
+        .eval_many("tx-tiny", Objective::Mlm, &params, "corpus", 1, 2)
+        .unwrap();
+    assert!(acc > 0.008, "mlm acc {acc}"); // ≥2× the 1/254 chance level
+}
+
+#[test]
+fn eval_is_deterministic() {
+    let rt = runtime();
+    let spec = rt.zoo().arch("tx-tiny").unwrap();
+    let params = Checkpoint::init(spec, 5).flat;
+    let a = rt.eval_many("tx-tiny", Objective::Cls, &params, "task1", 9, 3).unwrap();
+    let b = rt.eval_many("tx-tiny", Objective::Cls, &params, "task1", 9, 3).unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn pjrt_delta_kernels_match_native_oracle() {
+    let rt = runtime();
+    let mut rng = Rng::new(11);
+    // Cover: shorter than one chunk, exact chunk, chunk + tail.
+    let chunk = rt.zoo().delta_chunk;
+    for n in [1000usize, chunk, chunk + 1234] {
+        let parent: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let child: Vec<f32> =
+            parent.iter().map(|&p| p + rng.normal_f32(0.0, 3e-4)).collect();
+        let eps = 1e-4f32;
+        let q_pjrt = rt.quantize(&parent, &child, eps).unwrap();
+        let q_native = NativeKernel.quantize(&parent, &child, eps).unwrap();
+        let same = q_pjrt
+            .iter()
+            .zip(&q_native)
+            .filter(|(a, b)| a == b)
+            .count();
+        // f32 rounding at bucket boundaries may differ on a few elements.
+        assert!(
+            same as f64 / n as f64 > 0.999,
+            "n={n}: only {same}/{n} quantized values agree"
+        );
+        let d_pjrt = rt.dequantize(&parent, &q_pjrt, eps).unwrap();
+        let d_native = NativeKernel.dequantize(&parent, &q_pjrt, eps).unwrap();
+        for (a, b) in d_pjrt.iter().zip(&d_native) {
+            assert!((a - b).abs() < 1e-6);
+        }
+        // Error bound vs the original child.
+        let bound = mgit::runtime::quant_step(eps) * 1.001;
+        for (r, c) in d_pjrt.iter().zip(&child) {
+            assert!((r - c).abs() <= bound, "bound violated: {}", (r - c).abs());
+        }
+    }
+}
+
+#[test]
+fn batch_shape_validation() {
+    let rt = runtime();
+    let spec = rt.zoo().arch("tx-tiny").unwrap();
+    let mut params = Checkpoint::init(spec, 0).flat;
+    let mut mom = vec![0f32; params.len()];
+    let bad = data::Batch { tokens: vec![0; 8], labels: vec![0; 2], batch: 2, seq: 4 };
+    assert!(rt
+        .train_step("tx-tiny", Objective::Cls, &mut params, &mut mom, &bad, 0.1)
+        .is_err());
+    // Wrong param length.
+    let mut short = vec![0f32; 10];
+    let mut short_m = vec![0f32; 10];
+    let good =
+        data::cls_batch("task1", rt.zoo().batch, rt.zoo().max_seq, 0, 0, None).unwrap();
+    assert!(rt
+        .train_step("tx-tiny", Objective::Cls, &mut short, &mut short_m, &good, 0.1)
+        .is_err());
+}
