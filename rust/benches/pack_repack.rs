@@ -1,0 +1,180 @@
+//! Packfile bench: loose vs packed cold-load of a full lineage graph,
+//! and repack throughput (including chain re-basing).
+//!
+//! No runtime/artifacts needed: the lineage graph is synthesized from an
+//! inline manifest — 4 pretrained roots, each with a 15-deep chain of
+//! delta-compressed versions (64 models, ~512 tensor objects) — exactly
+//! the shape `mgit repack` is built for. "Cold" here means fresh store
+//! handles and full file reads each iteration (the OS page cache stays
+//! warm, so the numbers isolate per-object open/seek overhead, which is
+//! what packs eliminate).
+
+mod common;
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use mgit::checkpoint::{Checkpoint, ModelZoo};
+use mgit::delta::{self, CompressConfig, NativeKernel, StoredModel};
+use mgit::store::pack::{chain_depths, repack, RepackConfig};
+use mgit::store::{ObjectId, Store};
+use mgit::util::json;
+use mgit::util::rng::Rng;
+use mgit::util::timing::BenchStats;
+use mgit::util::{human_bytes, human_secs};
+
+/// 8 × 16 Ki-f32 tensors = 512 KiB of parameters per model.
+fn manifest() -> String {
+    let n_tensors = 8usize;
+    let size = 16 * 1024usize;
+    let layout: Vec<String> = (0..n_tensors)
+        .map(|i| {
+            format!(
+                r#"{{"name":"w.t{i}","shape":[{size}],"offset":{},"size":{size},"init":"normal"}}"#,
+                i * size
+            )
+        })
+        .collect();
+    format!(
+        r#"{{
+          "vocab": 16, "max_seq": 4, "n_classes": 2, "batch": 2,
+          "delta_chunk": 4096,
+          "special_tokens": {{"cls": 14, "mask": 15, "ignore_label": -100}},
+          "archs": {{"bench": {{
+              "d_model": 8, "n_layers": 1, "n_heads": 1, "d_ff": 16,
+              "param_count": {},
+              "layout": [{}],
+              "dag": {{"nodes": [], "edges": []}}
+          }}}},
+          "artifacts": {{"bench": {{}}}},
+          "delta_kernels": {{"quant": "q", "dequant": "d"}}
+        }}"#,
+        n_tensors * size,
+        layout.join(",")
+    )
+}
+
+fn perturbed(ck: &Checkpoint, seed: u64) -> Checkpoint {
+    let mut rng = Rng::new(seed);
+    let flat = ck.flat.iter().map(|&x| x + rng.normal_f32(0.0, 3e-4)).collect();
+    Checkpoint { arch: ck.arch.clone(), flat }
+}
+
+fn load_all(dir: &PathBuf, zoo: &ModelZoo, models: &[StoredModel]) -> Vec<Checkpoint> {
+    // Fresh handle each time: indexes re-load, every object re-reads.
+    let store = Store::open_packed(dir).expect("open store");
+    models
+        .iter()
+        .map(|m| delta::load(&store, zoo, m, &NativeKernel).expect("load model"))
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let zoo = ModelZoo::from_json(&json::parse(&manifest())?)?;
+    let spec = zoo.arch("bench")?;
+    let dir = std::env::temp_dir().join(format!("mgit-bench-pack-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = Store::open_packed(&dir)?;
+
+    // ------------------------------------------------------------------
+    // Build the lineage graph: 4 roots × (1 + 15 versions).
+    // ------------------------------------------------------------------
+    let (n_roots, n_versions) = (4usize, 15usize);
+    let cfg = CompressConfig::default();
+    let mut models: Vec<StoredModel> = Vec::new();
+    let t_build = mgit::util::timing::Timer::start();
+    for r in 0..n_roots {
+        let root = Checkpoint::init(spec, r as u64);
+        let (sm, _) = delta::store_raw(&store, spec, &root)?;
+        let mut prev = (root, sm.clone());
+        models.push(sm);
+        for v in 0..n_versions {
+            let child = perturbed(&prev.0, (r * 1000 + v) as u64 + 7);
+            let cand = delta::prepare_delta(
+                &store, spec, &child, spec, &prev.0, &prev.1, cfg, &NativeKernel,
+            )?;
+            delta::commit(&store, &cand)?;
+            prev = (cand.checkpoint, cand.model.clone());
+            models.push(cand.model);
+        }
+    }
+    let n_objects = store.list()?.len();
+    let loose_bytes = store.stored_bytes()?;
+    println!(
+        "lineage graph: {} models / {} objects / {} loose, built in {}",
+        models.len(),
+        n_objects,
+        human_bytes(loose_bytes),
+        human_secs(t_build.elapsed_secs())
+    );
+    let depths = chain_depths(&store)?;
+    let max_before = depths.values().copied().max().unwrap_or(0);
+    drop(store);
+
+    // ------------------------------------------------------------------
+    // Loose cold-load baseline.
+    // ------------------------------------------------------------------
+    common::hr();
+    let reference = load_all(&dir, &zoo, &models);
+    let loose = BenchStats::measure("loose cold-load (full graph)", 1, 5, || {
+        let _ = load_all(&dir, &zoo, &models);
+    });
+    println!("{}", loose.report());
+
+    // ------------------------------------------------------------------
+    // Repack (with chain re-basing) — throughput.
+    // ------------------------------------------------------------------
+    common::hr();
+    let roots: Vec<ObjectId> = models.iter().flat_map(|m| m.refs()).collect();
+    let rcfg = RepackConfig { max_chain_depth: 8, prune: true };
+    let mut store = Store::open_packed(&dir)?;
+    let t_repack = mgit::util::timing::Timer::start();
+    let report = repack(&mut store, &roots, &rcfg, &NativeKernel)?;
+    let secs = t_repack.elapsed_secs();
+    println!(
+        "repack: {} objects in {}  ({:.0} obj/s, {}/s)",
+        report.packed,
+        human_secs(secs),
+        report.packed as f64 / secs,
+        human_bytes((report.bytes_before as f64 / secs) as u64)
+    );
+    println!(
+        "chains: max depth {} -> {} ({} re-based, {} new bases); bytes {} -> {}",
+        report.max_depth_before,
+        report.max_depth_after,
+        report.rebased_delta,
+        report.new_bases,
+        human_bytes(report.bytes_before),
+        human_bytes(report.bytes_after)
+    );
+    assert_eq!(max_before, report.max_depth_before);
+    assert!(report.max_depth_after <= rcfg.max_chain_depth);
+    drop(store);
+
+    // ------------------------------------------------------------------
+    // Packed cold-load + integrity.
+    // ------------------------------------------------------------------
+    common::hr();
+    let packed_loaded = load_all(&dir, &zoo, &models);
+    for (a, b) in reference.iter().zip(&packed_loaded) {
+        assert_eq!(a.flat.len(), b.flat.len());
+        for (x, y) in a.flat.iter().zip(&b.flat) {
+            assert_eq!(x.to_bits(), y.to_bits(), "repack changed model content");
+        }
+    }
+    let packed = BenchStats::measure("packed cold-load (full graph)", 1, 5, || {
+        let _ = load_all(&dir, &zoo, &models);
+    });
+    println!("{}", packed.report());
+    common::hr();
+    let speedup = loose.mean() / packed.mean();
+    println!(
+        "packed cold-load is {speedup:.2}x {} than loose ({} vs {})",
+        if speedup >= 1.0 { "faster" } else { "slower" },
+        human_secs(packed.mean()),
+        human_secs(loose.mean())
+    );
+
+    std::fs::remove_dir_all(&dir)?;
+    Ok(())
+}

@@ -3,22 +3,26 @@
 //!
 //! A repository is a directory containing `.mgit/graph.json` (lineage
 //! graph + test registry, re-serialized after every mutating operation,
-//! matching §3.1) and `.mgit/objects/` (the content-addressed store).
+//! matching §3.1) and `.mgit/objects/` (the content-addressed store:
+//! loose staging fan-out plus `pack/*.pack` pack files — see
+//! `docs/STORAGE.md`).
 //!
 //! Commands:
 //! ```text
 //! mgit init [--dir D]
 //! mgit log                       # nodes, edges, versions
 //! mgit show <node>
-//! mgit fsck                      # structural integrity + object presence
+//! mgit fsck                      # graph + object + cross-pack integrity
 //! mgit diff <a> <b>              # structural/contextual divergence
 //! mgit merge <base> <m1> <m2> [--out name]
-//! mgit gc                        # sweep unreachable objects
+//! mgit gc                        # sweep unreachable loose objects
+//! mgit repack [--max-chain-depth N] [--prune]  # compact into a pack
+//! mgit verify-pack               # pack checksums + content hashes
 //! mgit build <g1|g2|g3|g4|g5>    # train + register a workload graph
 //! mgit compress --codec <rle|lzma|zstd> [--eps E]  # re-store with deltas
 //! mgit test [--re REGEX]         # run registered tests over the graph
 //! mgit cascade <node> [--steps N]# perturb-retrain node, cascade children
-//! mgit stats                     # store/dedup statistics
+//! mgit stats                     # store/dedup/chain-depth statistics
 //! ```
 
 use std::path::{Path, PathBuf};
@@ -58,28 +62,81 @@ impl Repo {
         Self::mgit_dir(root).join("graph.json")
     }
 
+    fn stats_path(root: &Path) -> PathBuf {
+        Self::mgit_dir(root).join("stats.json")
+    }
+
     pub fn init(root: &Path) -> Result<Repo> {
         let dir = Self::mgit_dir(root);
         if Self::graph_path(root).exists() {
             bail!("repository already initialized at {}", dir.display());
         }
         std::fs::create_dir_all(&dir)?;
-        let store = Store::open(&dir.join("objects"))?;
+        let store = Store::open_packed(&dir.join("objects"))?;
         let graph = LineageGraph::new();
         graph.save(&Self::graph_path(root))?;
         Ok(Repo { root: root.to_path_buf(), graph, store })
     }
 
-    /// De-serialize at the start of an operation (paper §3.1).
+    /// De-serialize at the start of an operation (paper §3.1). The store
+    /// is pack-capable: loose staging first, then pack indexes.
     pub fn open(root: &Path) -> Result<Repo> {
         let graph = LineageGraph::load(&Self::graph_path(root))?;
-        let store = Store::open(&Self::mgit_dir(root).join("objects"))?;
+        let store = Store::open_packed(&Self::mgit_dir(root).join("objects"))?;
         Ok(Repo { root: root.to_path_buf(), graph, store })
     }
 
-    /// Serialize at the end of every operation (paper §3.1).
+    /// Serialize at the end of every operation (paper §3.1); also folds
+    /// this process's store counters into the persistent cumulative
+    /// stats that `mgit stats` reports.
     pub fn save(&self) -> Result<()> {
-        self.graph.save(&Self::graph_path(&self.root))
+        self.graph.save(&Self::graph_path(&self.root))?;
+        self.persist_stats()
+    }
+
+    /// Cumulative (puts, dedup_hits, bytes_written) since `init`.
+    pub fn load_stats(root: &Path) -> (u64, u64, u64) {
+        let read = || -> Result<(u64, u64, u64)> {
+            let text = std::fs::read_to_string(Self::stats_path(root))?;
+            let j = crate::util::json::parse(&text)?;
+            Ok((
+                j.req_usize("puts")? as u64,
+                j.req_usize("dedup_hits")? as u64,
+                j.req_usize("bytes_written")? as u64,
+            ))
+        };
+        read().unwrap_or((0, 0, 0))
+    }
+
+    /// Drain the in-process store counters into `.mgit/stats.json`.
+    /// Single-writer, like `graph.json`: operations are per-invocation.
+    pub fn persist_stats(&self) -> Result<()> {
+        let (puts, dedup, written) = self.store.stats.take();
+        if puts == 0 && dedup == 0 && written == 0 {
+            return Ok(());
+        }
+        let (p0, d0, w0) = Self::load_stats(&self.root);
+        let j = crate::util::json::Json::obj()
+            .set("puts", (p0 + puts) as usize)
+            .set("dedup_hits", (d0 + dedup) as usize)
+            .set("bytes_written", (w0 + written) as usize);
+        let path = Self::stats_path(&self.root);
+        let write = || -> Result<()> {
+            let tmp = path.with_extension("json.tmp");
+            std::fs::write(&tmp, j.to_string_pretty())?;
+            std::fs::rename(&tmp, &path)?;
+            Ok(())
+        };
+        let res = write();
+        if res.is_err() {
+            // Don't lose the drained counts on a failed write; they'll
+            // ride along with the next successful persist.
+            use std::sync::atomic::Ordering;
+            self.store.stats.puts.fetch_add(puts, Ordering::Relaxed);
+            self.store.stats.dedup_hits.fetch_add(dedup, Ordering::Relaxed);
+            self.store.stats.bytes_written.fetch_add(written, Ordering::Relaxed);
+        }
+        res
     }
 
     pub fn load_checkpoint(&self, node: &str, kernel: &dyn DeltaKernel, zoo: &crate::checkpoint::ModelZoo) -> Result<Checkpoint> {
@@ -91,14 +148,11 @@ impl Repo {
         delta::load(&self.store, zoo, sm, kernel)
     }
 
-    /// GC roots: every stored model referenced by the graph.
+    /// GC roots: every stored model referenced by the graph. Delta-parent
+    /// references are strong and walked transitively; GC aborts rather
+    /// than sweep if a live object is unreadable.
     pub fn gc(&self) -> Result<Vec<ObjectId>> {
-        let mut roots = Vec::new();
-        for n in &self.graph.nodes {
-            if let Some(sm) = &n.stored {
-                roots.extend(sm.refs());
-            }
-        }
+        let roots = self.graph.object_roots();
         self.store.gc(&roots, |bytes| {
             crate::store::format::TensorObject::decode(bytes)
                 .map(|o| o.refs())
@@ -126,6 +180,8 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         "show" => cmd_show(&root, &args),
         "fsck" => cmd_fsck(&root),
         "stats" => cmd_stats(&root),
+        "repack" => cmd_repack(&root, &args),
+        "verify-pack" => cmd_verify_pack(&root),
         "gc" => {
             let repo = Repo::open(&root)?;
             let swept = repo.gc()?;
@@ -151,9 +207,14 @@ usage: mgit <command> [args] [--flags]
   init                       create .mgit/ in --dir (default .)
   log                        list nodes with edges and versions
   show <node>                node details (type, creation fn, params)
-  fsck                       check graph invariants + object presence
-  stats                      object store statistics
-  gc                         sweep unreachable objects
+  fsck                       check graph invariants, object presence and
+                             cross-pack delta-chain integrity
+  stats                      object store statistics (loose vs packed,
+                             dedup counters, chain-depth histogram)
+  gc                         sweep unreachable loose objects
+  repack                     compact live objects into a pack, shortening
+                             delta chains [--max-chain-depth 8] [--prune]
+  verify-pack                verify pack checksums + object content hashes
   diff <a> <b>               divergence scores between two models
   merge <base> <m1> <m2>     figure-2 merge (conflict detection)
   build <g1|g2|g3|g4|g5>     train + register a workload graph [--small]
@@ -220,22 +281,60 @@ fn cmd_show(root: &Path, args: &Args) -> Result<()> {
 fn cmd_fsck(root: &Path) -> Result<()> {
     let repo = Repo::open(root)?;
     repo.graph.integrity_check()?;
-    let mut missing = 0;
+    let mut problems = 0;
+    // Every model parameter must be present (loose or packed).
     for node in &repo.graph.nodes {
         if let Some(sm) = &node.stored {
             for (pname, id) in &sm.params {
                 if !repo.store.has(id) {
                     println!("MISSING object {} ({}:{})", id.short(), node.name, pname);
-                    missing += 1;
+                    problems += 1;
                 }
             }
         }
     }
-    if missing == 0 {
+    // Cross-pack delta-chain integrity: every delta parent must resolve
+    // somewhere in the store, whichever pack (or loose file) holds it.
+    // Unreadable objects are recorded and the scan continues — fsck must
+    // report corruption, not die on it.
+    for id in repo.store.list()? {
+        let bytes = match repo.store.get(&id) {
+            Ok(b) => b,
+            Err(e) => {
+                println!("UNREADABLE object {}: {e:#}", id.short());
+                problems += 1;
+                continue;
+            }
+        };
+        if let Ok(obj) = crate::store::format::TensorObject::decode(&bytes) {
+            for parent in obj.refs() {
+                if !repo.store.has(&parent) {
+                    println!(
+                        "DANGLING delta parent {} (referenced by {})",
+                        parent.short(),
+                        id.short()
+                    );
+                    problems += 1;
+                }
+            }
+        }
+    }
+    // Pack structure (checksums, index/offset agreement).
+    if let Some(ps) = repo.store.as_packed() {
+        for p in ps.packs() {
+            if let Err(e) = p.verify() {
+                println!("BAD PACK {}: {e:#}", p.path.display());
+                problems += 1;
+            }
+        }
+        let (loose, packed) = ps.counts()?;
+        println!("objects: {loose} loose / {packed} packed in {} packs", ps.packs().len());
+    }
+    if problems == 0 {
         println!("ok: {} nodes, all invariants hold, all objects present", repo.graph.len());
         Ok(())
     } else {
-        bail!("{missing} missing objects")
+        bail!("{problems} fsck problems")
     }
 }
 
@@ -245,22 +344,175 @@ fn cmd_stats(root: &Path) -> Result<()> {
     let bytes = repo.store.stored_bytes()?;
     let mut raw_bytes: u64 = 0;
     let mut delta_objs = 0usize;
+    // One decode pass feeds both the byte accounting and (via the parent
+    // map) the chain-depth histogram below.
+    let mut parents: std::collections::HashMap<ObjectId, Option<ObjectId>> =
+        Default::default();
     for id in &objects {
+        let mut parent = None;
         if let Ok(obj) = crate::store::format::TensorObject::decode(&repo.store.get(id)?) {
             let numel: usize = obj.shape().iter().product();
             raw_bytes += (numel * 4) as u64;
-            if matches!(obj, crate::store::format::TensorObject::Delta { .. }) {
+            if let crate::store::format::TensorObject::Delta { parent: p, .. } = obj {
                 delta_objs += 1;
+                parent = Some(p);
             }
         }
+        parents.insert(*id, parent);
     }
-    println!("objects:        {}", objects.len());
+    let (loose, packed) = match repo.store.as_packed() {
+        Some(ps) => ps.counts()?,
+        None => (objects.len(), 0),
+    };
+    println!("objects:        {} ({loose} loose, {packed} packed)", objects.len());
     println!("delta-encoded:  {delta_objs}");
     println!("stored bytes:   {}", human_bytes(bytes));
     println!("logical bytes:  {}", human_bytes(raw_bytes));
     if bytes > 0 {
         println!("object-level compression ratio: {:.2}x", raw_bytes as f64 / bytes as f64);
     }
+    // Cumulative dedup counters (persisted across invocations).
+    let (puts, dedup, written) = Repo::load_stats(root);
+    println!(
+        "puts:           {puts} total, {dedup} dedup hits ({:.1}% hit rate)",
+        if puts > 0 { 100.0 * dedup as f64 / puts as f64 } else { 0.0 }
+    );
+    println!("bytes written:  {}", human_bytes(written));
+    // Delta-chain depths (reconstruction cost driver; see docs/STORAGE.md).
+    let depths = crate::store::pack::chain_depths_from_parents(&parents)?;
+    let max_depth = depths.values().copied().max().unwrap_or(0);
+    let chain_lens: Vec<usize> = depths.values().copied().filter(|&d| d > 0).collect();
+    let mean_depth = if chain_lens.is_empty() {
+        0.0
+    } else {
+        chain_lens.iter().sum::<usize>() as f64 / chain_lens.len() as f64
+    };
+    println!("chain depth:    max {max_depth}, mean {mean_depth:.2} (over delta objects)");
+    let buckets: [(usize, usize, &str); 6] = [
+        (0, 0, "0 (base)"),
+        (1, 2, "1-2"),
+        (3, 4, "3-4"),
+        (5, 8, "5-8"),
+        (9, 16, "9-16"),
+        (17, usize::MAX, "17+"),
+    ];
+    for (lo, hi, label) in buckets {
+        let n = depths.values().filter(|&&d| d >= lo && d <= hi).count();
+        if n > 0 {
+            println!("  depth {label:<9} {n}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_repack(root: &Path, args: &Args) -> Result<()> {
+    let mut repo = Repo::open(root)?;
+    let cfg = crate::store::pack::RepackConfig {
+        max_chain_depth: args.flag_usize("max-chain-depth", 8)?,
+        prune: args.has("prune"),
+    };
+    let roots = repo.graph.object_roots();
+    let t = crate::util::timing::Timer::start();
+    // NativeKernel is the bit-compatible oracle of the Pallas kernel, so
+    // re-based encodings agree across runtime backends.
+    let report = crate::store::pack::repack(&mut repo.store, &roots, &cfg, &NativeKernel)?;
+    repo.save()?;
+    println!(
+        "repacked {} objects ({} carried dead) in {}",
+        report.packed,
+        report.carried_dead,
+        human_secs(t.elapsed_secs())
+    );
+    println!(
+        "chains: max depth {} -> {} ({} re-based onto nearer ancestors, {} new bases)",
+        report.max_depth_before,
+        report.max_depth_after,
+        report.rebased_delta,
+        report.new_bases
+    );
+    println!(
+        "store:  {} -> {} ({} loose demoted, {} pruned)",
+        human_bytes(report.bytes_before),
+        human_bytes(report.bytes_after),
+        report.loose_demoted,
+        report.pruned_loose
+    );
+    if let Some(p) = &report.pack_path {
+        println!("pack:   {}", p.display());
+    }
+    Ok(())
+}
+
+fn cmd_verify_pack(root: &Path) -> Result<()> {
+    let repo = Repo::open(root)?;
+    let Some(ps) = repo.store.as_packed() else {
+        bail!("object store is not pack-capable");
+    };
+    if ps.packs().is_empty() {
+        println!("no packs to verify");
+        return Ok(());
+    }
+    // Structure first: checksums, counts, offset/length agreement.
+    let mut total = 0usize;
+    for p in ps.packs() {
+        p.verify()?;
+        total += p.object_count();
+        println!("pack {}: {} objects, structure ok", p.path.display(), p.object_count());
+    }
+    // Content second: each pack's *own copy* of every object (ids may be
+    // duplicated across packs after a crash) must still hash to its id
+    // once its delta chain — possibly crossing packs / loose staging —
+    // is resolved.
+    let mut cache: std::collections::HashMap<ObjectId, Vec<f32>> = Default::default();
+    let mut checked = 0usize;
+    let mut opaque = 0usize;
+    for p in ps.packs() {
+        for id in p.index.ids().collect::<Vec<_>>() {
+            let bytes = p
+                .get(&id)?
+                .ok_or_else(|| anyhow!("index lists {} but pack lacks it", id.short()))?;
+            let obj = match crate::store::format::TensorObject::decode(&bytes) {
+                Ok(o) => o,
+                Err(_) => {
+                    opaque += 1; // non-MGTF blob: structure-only
+                    continue;
+                }
+            };
+            let shape = obj.shape().to_vec();
+            let want = match &obj {
+                crate::store::format::TensorObject::Raw { dtype, payload, .. } => {
+                    crate::store::hash_tensor(*dtype, &shape, payload)
+                }
+                crate::store::format::TensorObject::Delta { .. } => {
+                    let values =
+                        delta::resolve_object(&repo.store, &obj, &NativeKernel, &mut cache, 0)?;
+                    crate::store::hash_tensor(
+                        crate::tensor::DType::F32,
+                        &shape,
+                        &crate::tensor::f32_to_bytes(&values),
+                    )
+                }
+            };
+            if want != id {
+                bail!(
+                    "object {} in pack {} does not hash to its id",
+                    id.short(),
+                    p.path.display()
+                );
+            }
+            checked += 1;
+            // Ancestor values only help while verifying nearby chain
+            // links; keep peak memory bounded on huge stores.
+            if cache.len() > 4096 {
+                cache.clear();
+            }
+        }
+    }
+    println!(
+        "verify-pack ok: {total} objects in {} packs, {checked} content hashes verified, \
+         {opaque} opaque blobs",
+        ps.packs().len()
+    );
     Ok(())
 }
 

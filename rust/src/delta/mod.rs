@@ -349,34 +349,115 @@ pub fn resolve_tensor(
         bail!("delta chain too deep (cycle?) at {}", id.short());
     }
     let obj = TensorObject::decode(&store.get(&id)?)?;
-    let values = match obj {
+    let values = resolve_object(store, &obj, kernel, cache, depth)?;
+    cache.insert(id, values.clone());
+    Ok(values)
+}
+
+/// Resolve an already-decoded object's values, following its parent chain
+/// through `store`. Lets callers resolve a *specific physical copy* of an
+/// object (e.g. the bytes inside one pack during `verify-pack`) while the
+/// ancestors — value-identical by content addressing — come from wherever
+/// the store finds them.
+pub fn resolve_object(
+    store: &Store,
+    obj: &TensorObject,
+    kernel: &dyn DeltaKernel,
+    cache: &mut HashMap<ObjectId, Vec<f32>>,
+    depth: usize,
+) -> Result<Vec<f32>> {
+    match obj {
         TensorObject::Raw { dtype, payload, .. } => {
-            if dtype != DType::F32 {
+            if *dtype != DType::F32 {
                 bail!("expected f32 tensor object");
             }
-            crate::tensor::bytes_to_f32(&payload)
+            Ok(crate::tensor::bytes_to_f32(payload))
         }
         TensorObject::Delta { parent, eps, codec, n_quant, grid, payload, .. } => {
-            let parent_vals = resolve_tensor(store, parent, kernel, cache, depth + 1)?;
-            let codec = Codec::from_code(codec)?;
-            let qbytes = codec.decompress(&payload, n_quant * 4)?;
+            let parent_vals = resolve_tensor(store, *parent, kernel, cache, depth + 1)?;
+            let codec = Codec::from_code(*codec)?;
+            let qbytes = codec.decompress(payload, n_quant * 4)?;
             let q = bytes_to_i32(&qbytes);
-            if grid {
+            if *grid {
                 // Exact grid reconstruction (sparsity-preserving):
                 // rec = (round(parent/step) − q) · step.
-                let step = quant::step(eps);
-                parent_vals
+                let step = quant::step(*eps);
+                Ok(parent_vals
                     .iter()
                     .zip(&q)
                     .map(|(&p, &qi)| ((p / step + 0.5).floor() - qi as f32) * step)
-                    .collect()
+                    .collect())
             } else {
-                kernel.dequantize(&parent_vals, &q, eps)?
+                kernel.dequantize(&parent_vals, &q, *eps)
             }
         }
+    }
+}
+
+/// Re-encode a tensor's resolved values as a delta against a (usually
+/// nearer) ancestor — the repacker's chain re-basing hook
+/// ([`crate::store::pack::repack`]).
+///
+/// Object ids name *logical content*, so a re-encoding is only usable if
+/// reconstruction is **bit-exact** (the id keeps matching its content)
+/// and the encoded object still beats raw storage. Returns `None` when
+/// either condition fails; the caller then falls back to a new raw base,
+/// which preserves the id by construction.
+#[allow(clippy::too_many_arguments)]
+pub fn reencode_exact(
+    child_vals: &[f32],
+    parent_vals: &[f32],
+    parent_id: ObjectId,
+    shape: &[usize],
+    eps: f32,
+    codec: Codec,
+    grid: bool,
+    kernel: &dyn DeltaKernel,
+) -> Result<Option<TensorObject>> {
+    if parent_vals.len() != child_vals.len() {
+        return Ok(None);
+    }
+    let (q, rec): (Vec<i32>, Vec<f32>) = if grid {
+        // Integer grid deltas (G4 mode): both tensors live on the k·step
+        // grid, so the delta is exact integers and reconstruction is
+        // (round(parent/step) − q)·step.
+        let s = quant::step(eps);
+        let q: Vec<i32> = parent_vals
+            .iter()
+            .zip(child_vals)
+            .map(|(&p, &c)| ((p / s + 0.5).floor() - (c / s + 0.5).floor()) as i32)
+            .collect();
+        let rec = parent_vals
+            .iter()
+            .zip(&q)
+            .map(|(&p, &qi)| ((p / s + 0.5).floor() - qi as f32) * s)
+            .collect();
+        (q, rec)
+    } else {
+        let q = kernel.quantize(parent_vals, child_vals, eps)?;
+        let rec = kernel.dequantize(parent_vals, &q, eps)?;
+        (q, rec)
     };
-    cache.insert(id, values.clone());
-    Ok(values)
+    // Bit-exactness (not mere f32 equality: -0.0 == 0.0 but the bytes —
+    // and hence the content hash — would differ).
+    if !rec.iter().zip(child_vals).all(|(a, b)| a.to_bits() == b.to_bits()) {
+        return Ok(None);
+    }
+    let compressed = codec.compress(&i32_to_bytes(&q))?;
+    // Same per-tensor acceptance rule as prepare_delta.
+    if compressed.len() + 64 >= child_vals.len() * 4 {
+        return Ok(None);
+    }
+    Ok(Some(TensorObject::Delta {
+        dtype: DType::F32,
+        shape: shape.to_vec(),
+        parent: parent_id,
+        eps,
+        codec: codec.code(),
+        n_quant: child_vals.len(),
+        grid,
+        payload: compressed,
+    }))
 }
 
 /// Length of the delta chain from `id` up to its first raw ancestor.
@@ -548,6 +629,119 @@ mod tests {
         for (a, b) in loaded.flat.iter().zip(&originals.last().unwrap().flat) {
             assert!((a - b).abs() <= bound);
         }
+    }
+
+    #[test]
+    fn chain_depth_zero_for_raw_and_counts_links() {
+        let zoo = big_zoo();
+        let spec = zoo.arch("big").unwrap();
+        let store = Store::in_memory();
+        let cfg = CompressConfig::default();
+        let v0 = Checkpoint::init(spec, 9);
+        let (m0, _) = store_raw(&store, spec, &v0).unwrap();
+        for (_, id) in &m0.params {
+            assert_eq!(chain_depth(&store, *id).unwrap(), 0);
+        }
+        // One delta hop -> depth 1 for delta-encoded params.
+        let child = perturbed(&v0, 5e-5, 10);
+        let cand =
+            prepare_delta(&store, spec, &child, spec, &v0, &m0, cfg, &NativeKernel).unwrap();
+        assert!(cand.report.n_delta > 0);
+        commit(&store, &cand).unwrap();
+        let id = cand.model.param_id("w.a").unwrap();
+        assert_eq!(chain_depth(&store, id).unwrap(), 1);
+        // Missing object is an error, not depth 0.
+        assert!(chain_depth(&store, crate::store::hash_bytes(b"absent")).is_err());
+    }
+
+    /// Two children delta-compressed against the *same* raw ancestor: the
+    /// chain branches, both branches resolve independently, and the
+    /// shared ancestor is stored once.
+    #[test]
+    fn branching_chains_share_one_raw_ancestor() {
+        let zoo = big_zoo();
+        let spec = zoo.arch("big").unwrap();
+        let store = Store::in_memory();
+        let cfg = CompressConfig::default();
+        let root = Checkpoint::init(spec, 21);
+        let (rm, _) = store_raw(&store, spec, &root).unwrap();
+
+        let mut children = Vec::new();
+        for seed in [100u64, 200u64] {
+            let child = perturbed(&root, 3e-4, seed);
+            let cand =
+                prepare_delta(&store, spec, &child, spec, &root, &rm, cfg, &NativeKernel)
+                    .unwrap();
+            assert!(cand.report.n_delta > 0);
+            commit(&store, &cand).unwrap();
+            children.push((child, cand.model));
+        }
+        // Both branch tips hang off the same raw ancestor object.
+        let parent_of = |id: ObjectId| match TensorObject::decode(&store.get(&id).unwrap())
+            .unwrap()
+        {
+            TensorObject::Delta { parent, .. } => parent,
+            TensorObject::Raw { .. } => panic!("expected delta"),
+        };
+        let a = children[0].1.param_id("w.a").unwrap();
+        let b = children[1].1.param_id("w.a").unwrap();
+        assert_ne!(a, b, "distinct children must have distinct content");
+        assert_eq!(parent_of(a), parent_of(b));
+        assert_eq!(parent_of(a), rm.param_id("w.a").unwrap());
+        assert_eq!(chain_depth(&store, a).unwrap(), 1);
+        assert_eq!(chain_depth(&store, b).unwrap(), 1);
+        // Recursive load resolves each branch to its own content.
+        for (child, model) in &children {
+            let loaded = load(&store, &zoo, model, &NativeKernel).unwrap();
+            for (x, y) in loaded.flat.iter().zip(&child.flat) {
+                assert!((x - y).abs() <= quant::step(cfg.eps) * 1.001);
+            }
+        }
+    }
+
+    #[test]
+    fn reencode_exact_respects_bit_exactness_and_size() {
+        let mut rng = crate::util::rng::Rng::new(5);
+        let n = 512usize;
+        let parent: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let eps = 1e-4f32;
+        // A child that IS a quantized delta of parent reconstructs
+        // bit-exactly, so re-encoding against the same parent succeeds.
+        let q: Vec<i32> = (0..n as i32).map(|i| (i % 7) - 3).collect();
+        let child = NativeKernel.dequantize(&parent, &q, eps).unwrap();
+        let pid = crate::store::hash_bytes(b"parent");
+        let obj = reencode_exact(
+            &child, &parent, pid, &[n], eps, Codec::Deflate, false, &NativeKernel,
+        )
+        .unwrap()
+        .expect("exact re-encoding must be accepted");
+        match obj {
+            TensorObject::Delta { parent: p, n_quant, .. } => {
+                assert_eq!(p, pid);
+                assert_eq!(n_quant, n);
+            }
+            _ => panic!("expected delta"),
+        }
+        // An unrelated child almost never reconstructs bit-exactly.
+        let unrelated: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let r = reencode_exact(
+            &unrelated, &parent, pid, &[n], eps, Codec::Deflate, false, &NativeKernel,
+        )
+        .unwrap();
+        assert!(r.is_none(), "inexact re-encoding must be rejected");
+        // Length mismatch is rejected, not an error.
+        assert!(reencode_exact(
+            &child[..10],
+            &parent,
+            pid,
+            &[10],
+            eps,
+            Codec::Deflate,
+            false,
+            &NativeKernel
+        )
+        .unwrap()
+        .is_none());
     }
 
     #[test]

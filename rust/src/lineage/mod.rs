@@ -286,6 +286,20 @@ impl LineageGraph {
     // ------------------------------------------------------------------
     // Queries
     // ------------------------------------------------------------------
+    /// Every CAS object directly referenced by a stored model anywhere in
+    /// the graph: the root set for GC marking and for pack repacking
+    /// (delta-parent references are then walked transitively by the
+    /// store layer).
+    pub fn object_roots(&self) -> Vec<crate::store::ObjectId> {
+        let mut out = Vec::new();
+        for n in &self.nodes {
+            if let Some(sm) = &n.stored {
+                out.extend(sm.refs());
+            }
+        }
+        out
+    }
+
     /// Nodes with no provenance parents.
     pub fn roots(&self) -> Vec<NodeIdx> {
         (0..self.nodes.len())

@@ -1,0 +1,130 @@
+//! Native fallback runtime backend (compiled without the `pjrt` feature).
+//!
+//! Presents the exact `Runtime` API of the PJRT backend so every caller
+//! (trainer, workloads, CLI, benches) compiles unchanged:
+//!
+//! * the manifest/zoo loads identically;
+//! * the delta kernels run the bit-compatible native oracle
+//!   ([`NativeKernel`]), so storage, compression, repack and diff paths
+//!   are fully functional and produce the same objects the PJRT build
+//!   would (the quantizer formula is shared);
+//! * `train_step`/`eval_step` cannot execute HLO without PJRT and return
+//!   a descriptive error telling the user to rebuild with
+//!   `--features pjrt` after `make artifacts`.
+
+use std::path::Path;
+use std::sync::atomic::Ordering;
+
+use anyhow::{anyhow, Result};
+
+use super::RuntimeStats;
+use crate::checkpoint::{Checkpoint, ModelZoo};
+use crate::data;
+use crate::delta::quant::{DeltaKernel, NativeKernel};
+use crate::registry::{EvalBackend, Objective};
+
+pub struct Runtime {
+    zoo: ModelZoo,
+    pub stats: RuntimeStats,
+}
+
+impl Runtime {
+    /// Load the manifest from `artifacts_dir`. No PJRT client is created;
+    /// only the zoo metadata is needed for the storage/lineage paths.
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let zoo = ModelZoo::load(&artifacts_dir.join("manifest.json"))?;
+        Ok(Runtime { zoo, stats: RuntimeStats::default() })
+    }
+
+    pub fn zoo(&self) -> &ModelZoo {
+        &self.zoo
+    }
+
+    fn needs_pjrt(&self, what: &str) -> anyhow::Error {
+        anyhow!(
+            "{what} needs the PJRT execution backend; this binary was built \
+             without the `pjrt` feature (rebuild with `cargo build --features pjrt` \
+             after `make artifacts`)"
+        )
+    }
+
+    /// One SGD-momentum step (PJRT only).
+    pub fn train_step(
+        &self,
+        _arch: &str,
+        _obj: Objective,
+        _params: &mut Vec<f32>,
+        _mom: &mut Vec<f32>,
+        _batch: &data::Batch,
+        _lr: f32,
+    ) -> Result<f32> {
+        Err(self.needs_pjrt("train_step"))
+    }
+
+    /// Evaluate (loss, accuracy) on one batch (PJRT only).
+    pub fn eval_step(
+        &self,
+        _arch: &str,
+        _obj: Objective,
+        _params: &[f32],
+        _batch: &data::Batch,
+    ) -> Result<(f32, f32)> {
+        Err(self.needs_pjrt("eval_step"))
+    }
+
+    /// Averaged evaluation over `batches` held-out batches (PJRT only).
+    pub fn eval_many(
+        &self,
+        arch: &str,
+        obj: Objective,
+        params: &[f32],
+        task_or_corpus: &str,
+        split_seed: u64,
+        batches: usize,
+    ) -> Result<(f32, f32)> {
+        self.eval_many_perturbed(arch, obj, params, task_or_corpus, split_seed, batches, None)
+    }
+
+    /// Like [`Runtime::eval_many`] with an input perturbation (PJRT only).
+    #[allow(clippy::too_many_arguments)]
+    pub fn eval_many_perturbed(
+        &self,
+        _arch: &str,
+        _obj: Objective,
+        _params: &[f32],
+        _task_or_corpus: &str,
+        _split_seed: u64,
+        _batches: usize,
+        _perturb: Option<(&str, f64)>,
+    ) -> Result<(f32, f32)> {
+        Err(self.needs_pjrt("eval"))
+    }
+}
+
+impl EvalBackend for Runtime {
+    fn eval(
+        &self,
+        ck: &Checkpoint,
+        task: &str,
+        objective: Objective,
+        batches: usize,
+        split_seed: u64,
+    ) -> Result<(f32, f32)> {
+        self.eval_many(&ck.arch, objective, &ck.flat, task, split_seed, batches)
+    }
+}
+
+// The delta kernels are pure arithmetic; the native oracle is
+// bit-compatible with the Pallas kernel, so the storage path is identical
+// across backends.
+impl DeltaKernel for Runtime {
+    fn quantize(&self, parent: &[f32], child: &[f32], eps: f32) -> Result<Vec<i32>> {
+        self.stats.quant_calls.fetch_add(1, Ordering::Relaxed);
+        NativeKernel.quantize(parent, child, eps)
+    }
+
+    fn dequantize(&self, parent: &[f32], q: &[i32], eps: f32) -> Result<Vec<f32>> {
+        self.stats.dequant_calls.fetch_add(1, Ordering::Relaxed);
+        NativeKernel.dequantize(parent, q, eps)
+    }
+}

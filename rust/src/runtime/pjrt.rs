@@ -1,0 +1,334 @@
+//! PJRT runtime backend: loads the AOT-compiled HLO artifacts (L2 model
+//! steps + L1 Pallas delta kernels) and executes them on the CPU PJRT
+//! client.
+//!
+//! * One `PjRtClient` per process; executables are compiled once per
+//!   artifact file and cached.
+//! * The ABI is the flat-parameter convention of `python/compile/model.py`
+//!   (see the manifest loaded into [`ModelZoo`]).
+//! * [`Runtime`] implements [`DeltaKernel`] by chunking flat vectors
+//!   through the AOT `delta_quant`/`delta_dequant` kernels, so the
+//!   storage path's hot loop runs the same compiled code the paper's
+//!   GPU implementation would.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::sync::atomic::Ordering;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::RuntimeStats;
+use crate::checkpoint::{Checkpoint, ModelZoo};
+use crate::data;
+use crate::delta::quant::DeltaKernel;
+use crate::registry::{EvalBackend, Objective};
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    zoo: ModelZoo,
+    dir: PathBuf,
+    exes: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    pub stats: RuntimeStats,
+}
+
+impl Runtime {
+    /// Load the manifest from `artifacts_dir` and create a CPU client.
+    /// Executables compile lazily on first use.
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let zoo = ModelZoo::load(&artifacts_dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("creating PJRT CPU client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            zoo,
+            dir: artifacts_dir.to_path_buf(),
+            exes: RefCell::new(HashMap::new()),
+            stats: RuntimeStats::default(),
+        })
+    }
+
+    pub fn zoo(&self) -> &ModelZoo {
+        &self.zoo
+    }
+
+    fn exe(&self, file: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.exes.borrow().get(file) {
+            return Ok(e.clone());
+        }
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .map_err(|e| anyhow!("parsing HLO text {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
+        self.stats.compile_count.fetch_add(1, Ordering::Relaxed);
+        let exe = Rc::new(exe);
+        self.exes.borrow_mut().insert(file.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    fn artifact(&self, arch: &str, kind: &str) -> Result<String> {
+        self.zoo
+            .artifacts
+            .get(arch)
+            .and_then(|m| m.get(kind))
+            .cloned()
+            .ok_or_else(|| anyhow!("no artifact `{kind}` for arch `{arch}`"))
+    }
+
+    // ------------------------------------------------------------------
+    // Training / evaluation steps
+    // ------------------------------------------------------------------
+    fn check_batch(&self, arch: &str, obj: Objective, b: &data::Batch) -> Result<()> {
+        let spec = self.zoo.arch(arch)?;
+        if b.seq != self.zoo.max_seq || b.batch != self.zoo.batch {
+            bail!(
+                "batch shape ({}, {}) != compiled ({}, {})",
+                b.batch,
+                b.seq,
+                self.zoo.batch,
+                self.zoo.max_seq
+            );
+        }
+        let want_labels = match obj {
+            Objective::Mlm => b.batch * b.seq,
+            Objective::Cls => b.batch,
+        };
+        if b.labels.len() != want_labels || b.tokens.len() != b.batch * b.seq {
+            bail!("batch payload sizes wrong for {}", spec.name);
+        }
+        Ok(())
+    }
+
+    /// One SGD-momentum step; updates `params`/`mom` in place, returns loss.
+    pub fn train_step(
+        &self,
+        arch: &str,
+        obj: Objective,
+        params: &mut Vec<f32>,
+        mom: &mut Vec<f32>,
+        batch: &data::Batch,
+        lr: f32,
+    ) -> Result<f32> {
+        self.check_batch(arch, obj, batch)?;
+        let spec = self.zoo.arch(arch)?;
+        if params.len() != spec.param_count || mom.len() != spec.param_count {
+            bail!("flat param length mismatch for {}", arch);
+        }
+        let file = self.artifact(arch, &format!("{}_train", obj.name()))?;
+        let exe = self.exe(&file)?;
+
+        let b = batch.batch as i64;
+        let t = batch.seq as i64;
+        let p_lit = xla::Literal::vec1(params.as_slice());
+        let m_lit = xla::Literal::vec1(mom.as_slice());
+        let tok_lit = xla::Literal::vec1(batch.tokens.as_slice()).reshape(&[b, t])
+            .map_err(|e| anyhow!("tokens reshape: {e:?}"))?;
+        let lab_lit = match obj {
+            Objective::Mlm => xla::Literal::vec1(batch.labels.as_slice())
+                .reshape(&[b, t])
+                .map_err(|e| anyhow!("labels reshape: {e:?}"))?,
+            Objective::Cls => xla::Literal::vec1(batch.labels.as_slice()),
+        };
+        let lr_lit = xla::Literal::from(lr);
+
+        let result = exe
+            .execute::<xla::Literal>(&[p_lit, m_lit, tok_lit, lab_lit, lr_lit])
+            .map_err(|e| anyhow!("train step exec: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let parts = result.to_tuple().map_err(|e| anyhow!("tuple: {e:?}"))?;
+        if parts.len() != 3 {
+            bail!("train artifact returned {} outputs, want 3", parts.len());
+        }
+        parts[0]
+            .copy_raw_to(params.as_mut_slice())
+            .map_err(|e| anyhow!("params out: {e:?}"))?;
+        parts[1]
+            .copy_raw_to(mom.as_mut_slice())
+            .map_err(|e| anyhow!("momentum out: {e:?}"))?;
+        let loss = parts[2]
+            .get_first_element::<f32>()
+            .map_err(|e| anyhow!("loss out: {e:?}"))?;
+        self.stats.train_steps.fetch_add(1, Ordering::Relaxed);
+        Ok(loss)
+    }
+
+    /// Evaluate (loss, accuracy) on one batch.
+    pub fn eval_step(
+        &self,
+        arch: &str,
+        obj: Objective,
+        params: &[f32],
+        batch: &data::Batch,
+    ) -> Result<(f32, f32)> {
+        self.check_batch(arch, obj, batch)?;
+        let spec = self.zoo.arch(arch)?;
+        if params.len() != spec.param_count {
+            bail!("flat param length mismatch for {}", arch);
+        }
+        let file = self.artifact(arch, &format!("{}_eval", obj.name()))?;
+        let exe = self.exe(&file)?;
+        let b = batch.batch as i64;
+        let t = batch.seq as i64;
+        let p_lit = xla::Literal::vec1(params);
+        let tok_lit = xla::Literal::vec1(batch.tokens.as_slice())
+            .reshape(&[b, t])
+            .map_err(|e| anyhow!("tokens reshape: {e:?}"))?;
+        let lab_lit = match obj {
+            Objective::Mlm => xla::Literal::vec1(batch.labels.as_slice())
+                .reshape(&[b, t])
+                .map_err(|e| anyhow!("labels reshape: {e:?}"))?,
+            Objective::Cls => xla::Literal::vec1(batch.labels.as_slice()),
+        };
+        let result = exe
+            .execute::<xla::Literal>(&[p_lit, tok_lit, lab_lit])
+            .map_err(|e| anyhow!("eval exec: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let (loss_l, acc_l) = result.to_tuple2().map_err(|e| anyhow!("tuple2: {e:?}"))?;
+        let loss = loss_l.get_first_element::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let acc = acc_l.get_first_element::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        self.stats.eval_steps.fetch_add(1, Ordering::Relaxed);
+        Ok((loss, acc))
+    }
+
+    /// Averaged evaluation over `batches` held-out batches.
+    pub fn eval_many(
+        &self,
+        arch: &str,
+        obj: Objective,
+        params: &[f32],
+        task_or_corpus: &str,
+        split_seed: u64,
+        batches: usize,
+    ) -> Result<(f32, f32)> {
+        self.eval_many_perturbed(arch, obj, params, task_or_corpus, split_seed, batches, None)
+    }
+
+    /// Like [`Runtime::eval_many`] but with an input perturbation applied
+    /// to the held-out batches (robustness evaluation — Figure 4).
+    #[allow(clippy::too_many_arguments)]
+    pub fn eval_many_perturbed(
+        &self,
+        arch: &str,
+        obj: Objective,
+        params: &[f32],
+        task_or_corpus: &str,
+        split_seed: u64,
+        batches: usize,
+        perturb: Option<(&str, f64)>,
+    ) -> Result<(f32, f32)> {
+        let (mut loss, mut acc) = (0f32, 0f32);
+        for i in 0..batches {
+            let batch = match obj {
+                Objective::Cls => data::cls_batch(
+                    task_or_corpus,
+                    self.zoo.batch,
+                    self.zoo.max_seq,
+                    split_seed,
+                    // held-out batches live in a high index range
+                    1_000_000 + i as u64,
+                    perturb,
+                )?,
+                Objective::Mlm => data::mlm_batch(
+                    split_seed,
+                    self.zoo.batch,
+                    self.zoo.max_seq,
+                    1_000_000 + i as u64,
+                    perturb,
+                )?,
+            };
+            let (l, a) = self.eval_step(arch, obj, params, &batch)?;
+            loss += l;
+            acc += a;
+        }
+        Ok((loss / batches as f32, acc / batches as f32))
+    }
+}
+
+impl EvalBackend for Runtime {
+    fn eval(
+        &self,
+        ck: &Checkpoint,
+        task: &str,
+        objective: Objective,
+        batches: usize,
+        split_seed: u64,
+    ) -> Result<(f32, f32)> {
+        self.eval_many(&ck.arch, objective, &ck.flat, task, split_seed, batches)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Delta kernels via PJRT (chunked)
+// ---------------------------------------------------------------------------
+impl DeltaKernel for Runtime {
+    fn quantize(&self, parent: &[f32], child: &[f32], eps: f32) -> Result<Vec<i32>> {
+        anyhow::ensure!(parent.len() == child.len(), "length mismatch");
+        let chunk = self.zoo.delta_chunk;
+        let exe = self.exe(&self.zoo.delta_quant_artifact.clone())?;
+        let eps_lit = xla::Literal::vec1(&[eps]);
+        let mut out = Vec::with_capacity(parent.len());
+        let mut buf_a = vec![0f32; chunk];
+        let mut buf_b = vec![0f32; chunk];
+        for (pa, ch) in parent.chunks(chunk).zip(child.chunks(chunk)) {
+            let (a_lit, b_lit) = if pa.len() == chunk {
+                (xla::Literal::vec1(pa), xla::Literal::vec1(ch))
+            } else {
+                buf_a[..pa.len()].copy_from_slice(pa);
+                buf_a[pa.len()..].fill(0.0);
+                buf_b[..ch.len()].copy_from_slice(ch);
+                buf_b[ch.len()..].fill(0.0);
+                (xla::Literal::vec1(&buf_a), xla::Literal::vec1(&buf_b))
+            };
+            let result = exe
+                .execute::<xla::Literal>(&[a_lit, b_lit, eps_lit.clone()])
+                .map_err(|e| anyhow!("quant exec: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("{e:?}"))?;
+            let q = result.to_tuple1().map_err(|e| anyhow!("{e:?}"))?;
+            let v: Vec<i32> = q.to_vec().map_err(|e| anyhow!("{e:?}"))?;
+            out.extend_from_slice(&v[..pa.len()]);
+            self.stats.quant_calls.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(out)
+    }
+
+    fn dequantize(&self, parent: &[f32], q: &[i32], eps: f32) -> Result<Vec<f32>> {
+        anyhow::ensure!(parent.len() == q.len(), "length mismatch");
+        let chunk = self.zoo.delta_chunk;
+        let exe = self.exe(&self.zoo.delta_dequant_artifact.clone())?;
+        let eps_lit = xla::Literal::vec1(&[eps]);
+        let mut out = Vec::with_capacity(parent.len());
+        let mut buf_a = vec![0f32; chunk];
+        let mut buf_q = vec![0i32; chunk];
+        for (pa, qa) in parent.chunks(chunk).zip(q.chunks(chunk)) {
+            let (a_lit, q_lit) = if pa.len() == chunk {
+                (xla::Literal::vec1(pa), xla::Literal::vec1(qa))
+            } else {
+                buf_a[..pa.len()].copy_from_slice(pa);
+                buf_a[pa.len()..].fill(0.0);
+                buf_q[..qa.len()].copy_from_slice(qa);
+                buf_q[qa.len()..].fill(0);
+                (xla::Literal::vec1(&buf_a), xla::Literal::vec1(&buf_q))
+            };
+            let result = exe
+                .execute::<xla::Literal>(&[a_lit, q_lit, eps_lit.clone()])
+                .map_err(|e| anyhow!("dequant exec: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("{e:?}"))?;
+            let b = result.to_tuple1().map_err(|e| anyhow!("{e:?}"))?;
+            let v: Vec<f32> = b.to_vec().map_err(|e| anyhow!("{e:?}"))?;
+            out.extend_from_slice(&v[..pa.len()]);
+            self.stats.dequant_calls.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(out)
+    }
+}

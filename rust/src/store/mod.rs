@@ -9,12 +9,27 @@
 //! content, so deduplication ("indirection") is automatic: a `put` of an
 //! already-present key is a no-op dedup hit.
 //!
-//! Backends: on-disk (`.mgit/objects/aa/…`, one file per object, git-like
-//! fan-out) and in-memory (benches, tests). Mark-and-sweep GC walks
-//! caller-provided roots with a caller-provided reference extractor (the
-//! store itself is payload-agnostic).
+//! Backends implement the [`ObjectStore`] trait:
+//!
+//! * [`MemStore`] — volatile map (benches, tests);
+//! * [`DiskStore`] — loose objects, one file per object in a git-like
+//!   fan-out (`.mgit/objects/aa/…`);
+//! * [`PackedStore`] — loose staging directory + any number of
+//!   append-only [`pack`] files with binary-searchable indexes. Lookups
+//!   are loose-first, then across packs (duplicate ids across packs are
+//!   value-identical by content addressing); writes always land loose
+//!   (packs are produced by [`pack::repack`]).
+//!
+//! The [`Store`] façade wraps one backend behind a stable API so the
+//! `lineage`, `delta`, `checkpoint` and `workloads` layers are
+//! backend-agnostic. Mark-and-sweep GC walks caller-provided roots with a
+//! caller-provided reference extractor (the store itself is
+//! payload-agnostic); delta-parent references are strong: GC *aborts*
+//! rather than sweep when a live object is unreadable, because sweeping
+//! around a missing mid-chain object would corrupt every chain below it.
 
 pub mod format;
+pub mod pack;
 
 use std::collections::{HashMap, HashSet};
 use std::fmt;
@@ -81,12 +96,320 @@ pub fn hash_tensor(dtype: crate::tensor::DType, shape: &[usize], payload: &[u8])
     ObjectId(h.finalize().into())
 }
 
-enum Backend {
-    Disk { root: PathBuf },
-    Mem { map: Mutex<HashMap<ObjectId, Vec<u8>>> },
+// ---------------------------------------------------------------------------
+// The backend trait
+// ---------------------------------------------------------------------------
+
+/// Uniform object-storage interface implemented by every backend.
+///
+/// Ids name *logical* content; `put` of an existing id is a dedup no-op.
+pub trait ObjectStore {
+    fn get(&self, id: &ObjectId) -> Result<Vec<u8>>;
+    /// Store `bytes` under `id`; `true` if newly written, `false` on a
+    /// dedup hit.
+    fn put(&self, id: ObjectId, bytes: &[u8]) -> Result<bool>;
+    fn contains(&self, id: &ObjectId) -> bool;
+    fn list(&self) -> Result<Vec<ObjectId>>;
+    fn len(&self) -> Result<usize> {
+        Ok(self.list()?.len())
+    }
+    /// Remove the mutable copy of `id` if one exists; `true` if something
+    /// was deleted. Backends with immutable segments (packs) return
+    /// `false` for ids that only live there — compaction reclaims those.
+    fn remove(&self, id: &ObjectId) -> Result<bool>;
+    /// Total stored payload bytes (the numerator of compression ratios).
+    fn stored_bytes(&self) -> Result<u64>;
 }
 
-/// Cumulative store statistics (for the Table-4/ablation benches).
+// ---------------------------------------------------------------------------
+// MemStore
+// ---------------------------------------------------------------------------
+
+/// Volatile in-memory backend (tests, benches).
+#[derive(Default)]
+pub struct MemStore {
+    map: Mutex<HashMap<ObjectId, Vec<u8>>>,
+}
+
+impl MemStore {
+    pub fn new() -> MemStore {
+        MemStore::default()
+    }
+}
+
+impl ObjectStore for MemStore {
+    fn get(&self, id: &ObjectId) -> Result<Vec<u8>> {
+        self.map
+            .lock()
+            .unwrap()
+            .get(id)
+            .cloned()
+            .ok_or_else(|| anyhow!("object {} not found", id.short()))
+    }
+
+    fn put(&self, id: ObjectId, bytes: &[u8]) -> Result<bool> {
+        let mut map = self.map.lock().unwrap();
+        if map.contains_key(&id) {
+            return Ok(false);
+        }
+        map.insert(id, bytes.to_vec());
+        Ok(true)
+    }
+
+    fn contains(&self, id: &ObjectId) -> bool {
+        self.map.lock().unwrap().contains_key(id)
+    }
+
+    fn list(&self) -> Result<Vec<ObjectId>> {
+        Ok(self.map.lock().unwrap().keys().copied().collect())
+    }
+
+    fn remove(&self, id: &ObjectId) -> Result<bool> {
+        Ok(self.map.lock().unwrap().remove(id).is_some())
+    }
+
+    fn stored_bytes(&self) -> Result<u64> {
+        Ok(self.map.lock().unwrap().values().map(|v| v.len() as u64).sum())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DiskStore (loose objects)
+// ---------------------------------------------------------------------------
+
+/// Loose on-disk backend: one file per object under a two-hex-char
+/// fan-out directory (`root/aa/bbbb…`). The reserved `root/pack/`
+/// subdirectory (used by [`PackedStore`]) is ignored here.
+pub struct DiskStore {
+    root: PathBuf,
+}
+
+impl DiskStore {
+    pub fn open(dir: &Path) -> Result<DiskStore> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating object store at {}", dir.display()))?;
+        Ok(DiskStore { root: dir.to_path_buf() })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn path_for(&self, id: &ObjectId) -> PathBuf {
+        let hex = id.hex();
+        self.root.join(&hex[..2]).join(&hex[2..])
+    }
+}
+
+impl ObjectStore for DiskStore {
+    fn get(&self, id: &ObjectId) -> Result<Vec<u8>> {
+        std::fs::read(self.path_for(id))
+            .with_context(|| format!("object {} not found", id.short()))
+    }
+
+    fn put(&self, id: ObjectId, bytes: &[u8]) -> Result<bool> {
+        if self.contains(&id) {
+            return Ok(false);
+        }
+        let path = self.path_for(&id);
+        std::fs::create_dir_all(path.parent().unwrap())?;
+        // Write-then-rename for atomicity.
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, bytes)?;
+        std::fs::rename(&tmp, &path)?;
+        Ok(true)
+    }
+
+    fn contains(&self, id: &ObjectId) -> bool {
+        self.path_for(id).exists()
+    }
+
+    fn list(&self) -> Result<Vec<ObjectId>> {
+        let mut out = Vec::new();
+        if !self.root.exists() {
+            return Ok(out);
+        }
+        for fan in std::fs::read_dir(&self.root)? {
+            let fan = fan?;
+            if !fan.file_type()?.is_dir() {
+                continue;
+            }
+            let prefix = fan.file_name().to_string_lossy().to_string();
+            if prefix.len() != 2 {
+                continue; // reserved dirs ("pack"), strays
+            }
+            for obj in std::fs::read_dir(fan.path())? {
+                let name = obj?.file_name().to_string_lossy().to_string();
+                if name.ends_with(".tmp") {
+                    continue;
+                }
+                if let Ok(id) = ObjectId::from_hex(&format!("{prefix}{name}")) {
+                    out.push(id);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    fn remove(&self, id: &ObjectId) -> Result<bool> {
+        let path = self.path_for(id);
+        if path.exists() {
+            std::fs::remove_file(path)?;
+            return Ok(true);
+        }
+        Ok(false)
+    }
+
+    fn stored_bytes(&self) -> Result<u64> {
+        let mut total = 0;
+        for id in self.list()? {
+            total += std::fs::metadata(self.path_for(&id))?.len();
+        }
+        Ok(total)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PackedStore (loose staging + pack files)
+// ---------------------------------------------------------------------------
+
+/// Loose-first backend with pack files: reads check the loose staging
+/// area, then every pack index (deterministic content-hash filename
+/// order — ids name identical logical content, so any copy serves);
+/// writes always land loose. [`pack::repack`] migrates loose objects
+/// into packs.
+pub struct PackedStore {
+    loose: DiskStore,
+    packs: Vec<pack::PackFile>,
+    root: PathBuf,
+}
+
+impl PackedStore {
+    /// Open `dir` as a packed store, loading every `pack/*.pack` index.
+    pub fn open(dir: &Path) -> Result<PackedStore> {
+        let loose = DiskStore::open(dir)?;
+        let pack_dir = dir.join("pack");
+        let mut packs = Vec::new();
+        if pack_dir.exists() {
+            let mut paths: Vec<PathBuf> = std::fs::read_dir(&pack_dir)?
+                .filter_map(|e| e.ok())
+                .map(|e| e.path())
+                .filter(|p| {
+                    p.extension().map(|x| x == "pack").unwrap_or(false)
+                        // Belt and braces: never load half-written packs.
+                        && !p
+                            .file_name()
+                            .map(|n| n.to_string_lossy().starts_with("tmp-"))
+                            .unwrap_or(true)
+                })
+                .collect();
+            paths.sort();
+            for p in paths {
+                packs.push(
+                    pack::PackFile::open(&p)
+                        .with_context(|| format!("loading pack {}", p.display()))?,
+                );
+            }
+        }
+        Ok(PackedStore { loose, packs, root: dir.to_path_buf() })
+    }
+
+    pub fn pack_dir(&self) -> PathBuf {
+        self.root.join("pack")
+    }
+
+    pub fn loose(&self) -> &DiskStore {
+        &self.loose
+    }
+
+    pub fn packs(&self) -> &[pack::PackFile] {
+        &self.packs
+    }
+
+    /// (loose object count, packed object count). Objects staged loose
+    /// *and* present in a pack count once, as packed.
+    pub fn counts(&self) -> Result<(usize, usize)> {
+        let mut packed: HashSet<ObjectId> = HashSet::new();
+        for p in &self.packs {
+            packed.extend(p.index.ids());
+        }
+        let loose = self
+            .loose
+            .list()?
+            .into_iter()
+            .filter(|id| !packed.contains(id))
+            .count();
+        Ok((loose, packed.len()))
+    }
+
+    pub(crate) fn replace_packs(&mut self, packs: Vec<pack::PackFile>) {
+        self.packs = packs;
+    }
+}
+
+impl ObjectStore for PackedStore {
+    fn get(&self, id: &ObjectId) -> Result<Vec<u8>> {
+        if self.loose.contains(id) {
+            return self.loose.get(id);
+        }
+        for p in self.packs.iter().rev() {
+            if let Some(bytes) = p.get(id)? {
+                return Ok(bytes);
+            }
+        }
+        bail!("object {} not found (loose or packed)", id.short())
+    }
+
+    fn put(&self, id: ObjectId, bytes: &[u8]) -> Result<bool> {
+        if self.contains(&id) {
+            return Ok(false);
+        }
+        self.loose.put(id, bytes)
+    }
+
+    fn contains(&self, id: &ObjectId) -> bool {
+        self.loose.contains(id) || self.packs.iter().any(|p| p.contains(id))
+    }
+
+    fn list(&self) -> Result<Vec<ObjectId>> {
+        let mut seen: HashSet<ObjectId> = self.loose.list()?.into_iter().collect();
+        for p in &self.packs {
+            seen.extend(p.index.ids());
+        }
+        Ok(seen.into_iter().collect())
+    }
+
+    fn remove(&self, id: &ObjectId) -> Result<bool> {
+        // Only the loose copy is mutable; packed objects are reclaimed by
+        // `repack --prune`.
+        self.loose.remove(id)
+    }
+
+    fn stored_bytes(&self) -> Result<u64> {
+        let mut total = 0u64;
+        let mut packed: HashSet<ObjectId> = HashSet::new();
+        for p in &self.packs {
+            for e in &p.index.entries {
+                if packed.insert(e.id) {
+                    total += e.len;
+                }
+            }
+        }
+        for id in self.loose.list()? {
+            if !packed.contains(&id) {
+                total += std::fs::metadata(self.loose.path_for(&id))?.len();
+            }
+        }
+        Ok(total)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Store façade
+// ---------------------------------------------------------------------------
+
+/// Cumulative store statistics (for the Table-4/ablation benches and
+/// `mgit stats`; the CLI persists these across invocations).
 #[derive(Debug, Default)]
 pub struct StoreStats {
     pub puts: AtomicU64,
@@ -94,60 +417,87 @@ pub struct StoreStats {
     pub bytes_written: AtomicU64,
 }
 
+impl StoreStats {
+    /// Drain the counters (used when persisting cumulative stats).
+    pub fn take(&self) -> (u64, u64, u64) {
+        (
+            self.puts.swap(0, Ordering::Relaxed),
+            self.dedup_hits.swap(0, Ordering::Relaxed),
+            self.bytes_written.swap(0, Ordering::Relaxed),
+        )
+    }
+}
+
+enum BackendImpl {
+    Mem(MemStore),
+    Disk(DiskStore),
+    Packed(PackedStore),
+}
+
+/// Backend-agnostic handle used by all higher layers.
 pub struct Store {
-    backend: Backend,
+    backend: BackendImpl,
     pub stats: StoreStats,
 }
 
 impl Store {
-    /// Open (creating if needed) an on-disk store rooted at `dir`.
+    /// Open (creating if needed) a loose-only on-disk store at `dir`.
     pub fn open(dir: &Path) -> Result<Store> {
-        std::fs::create_dir_all(dir)
-            .with_context(|| format!("creating object store at {}", dir.display()))?;
         Ok(Store {
-            backend: Backend::Disk { root: dir.to_path_buf() },
+            backend: BackendImpl::Disk(DiskStore::open(dir)?),
+            stats: StoreStats::default(),
+        })
+    }
+
+    /// Open (creating if needed) a pack-capable on-disk store at `dir`:
+    /// loose staging plus every existing `pack/*.pack`.
+    pub fn open_packed(dir: &Path) -> Result<Store> {
+        Ok(Store {
+            backend: BackendImpl::Packed(PackedStore::open(dir)?),
             stats: StoreStats::default(),
         })
     }
 
     /// Volatile in-memory store (tests, benches).
     pub fn in_memory() -> Store {
-        Store {
-            backend: Backend::Mem { map: Mutex::new(HashMap::new()) },
-            stats: StoreStats::default(),
+        Store { backend: BackendImpl::Mem(MemStore::new()), stats: StoreStats::default() }
+    }
+
+    fn obj(&self) -> &dyn ObjectStore {
+        match &self.backend {
+            BackendImpl::Mem(s) => s,
+            BackendImpl::Disk(s) => s,
+            BackendImpl::Packed(s) => s,
         }
     }
 
-    fn path_for(root: &Path, id: &ObjectId) -> PathBuf {
-        let hex = id.hex();
-        root.join(&hex[..2]).join(&hex[2..])
+    pub fn as_packed(&self) -> Option<&PackedStore> {
+        match &self.backend {
+            BackendImpl::Packed(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub(crate) fn as_packed_mut(&mut self) -> Option<&mut PackedStore> {
+        match &mut self.backend {
+            BackendImpl::Packed(s) => Some(s),
+            _ => None,
+        }
     }
 
     /// Store `bytes` under `id`. Returns `true` if newly written, `false`
     /// on a dedup hit (content already present).
     pub fn put(&self, id: ObjectId, bytes: &[u8]) -> Result<bool> {
         self.stats.puts.fetch_add(1, Ordering::Relaxed);
-        if self.has(&id) {
+        let wrote = self.obj().put(id, bytes)?;
+        if wrote {
+            self.stats
+                .bytes_written
+                .fetch_add(bytes.len() as u64, Ordering::Relaxed);
+        } else {
             self.stats.dedup_hits.fetch_add(1, Ordering::Relaxed);
-            return Ok(false);
         }
-        self.stats
-            .bytes_written
-            .fetch_add(bytes.len() as u64, Ordering::Relaxed);
-        match &self.backend {
-            Backend::Disk { root } => {
-                let path = Self::path_for(root, &id);
-                std::fs::create_dir_all(path.parent().unwrap())?;
-                // Write-then-rename for atomicity.
-                let tmp = path.with_extension("tmp");
-                std::fs::write(&tmp, bytes)?;
-                std::fs::rename(&tmp, &path)?;
-            }
-            Backend::Mem { map } => {
-                map.lock().unwrap().insert(id, bytes.to_vec());
-            }
-        }
-        Ok(true)
+        Ok(wrote)
     }
 
     /// Convenience: hash bytes and store them under their own hash.
@@ -158,91 +508,35 @@ impl Store {
     }
 
     pub fn get(&self, id: &ObjectId) -> Result<Vec<u8>> {
-        match &self.backend {
-            Backend::Disk { root } => {
-                let path = Self::path_for(root, id);
-                std::fs::read(&path)
-                    .with_context(|| format!("object {} not found", id.short()))
-            }
-            Backend::Mem { map } => map
-                .lock()
-                .unwrap()
-                .get(id)
-                .cloned()
-                .ok_or_else(|| anyhow!("object {} not found", id.short())),
-        }
+        self.obj().get(id)
     }
 
     pub fn has(&self, id: &ObjectId) -> bool {
-        match &self.backend {
-            Backend::Disk { root } => Self::path_for(root, id).exists(),
-            Backend::Mem { map } => map.lock().unwrap().contains_key(id),
-        }
+        self.obj().contains(id)
     }
 
     pub fn remove(&self, id: &ObjectId) -> Result<()> {
-        match &self.backend {
-            Backend::Disk { root } => {
-                let path = Self::path_for(root, id);
-                if path.exists() {
-                    std::fs::remove_file(path)?;
-                }
-            }
-            Backend::Mem { map } => {
-                map.lock().unwrap().remove(id);
-            }
-        }
+        self.obj().remove(id)?;
         Ok(())
     }
 
     pub fn list(&self) -> Result<Vec<ObjectId>> {
-        match &self.backend {
-            Backend::Disk { root } => {
-                let mut out = Vec::new();
-                if !root.exists() {
-                    return Ok(out);
-                }
-                for fan in std::fs::read_dir(root)? {
-                    let fan = fan?;
-                    if !fan.file_type()?.is_dir() {
-                        continue;
-                    }
-                    let prefix = fan.file_name().to_string_lossy().to_string();
-                    for obj in std::fs::read_dir(fan.path())? {
-                        let name = obj?.file_name().to_string_lossy().to_string();
-                        if name.ends_with(".tmp") {
-                            continue;
-                        }
-                        if let Ok(id) = ObjectId::from_hex(&format!("{prefix}{name}")) {
-                            out.push(id);
-                        }
-                    }
-                }
-                Ok(out)
-            }
-            Backend::Mem { map } => Ok(map.lock().unwrap().keys().copied().collect()),
-        }
+        self.obj().list()
     }
 
     /// Total stored payload bytes (the numerator of compression ratios).
     pub fn stored_bytes(&self) -> Result<u64> {
-        match &self.backend {
-            Backend::Disk { root } => {
-                let mut total = 0;
-                for id in self.list()? {
-                    total += std::fs::metadata(Self::path_for(root, &id))?.len();
-                }
-                Ok(total)
-            }
-            Backend::Mem { map } => {
-                Ok(map.lock().unwrap().values().map(|v| v.len() as u64).sum())
-            }
-        }
+        self.obj().stored_bytes()
     }
 
     /// Mark-and-sweep GC: keep everything reachable from `roots` through
-    /// `refs` (which extracts outgoing ObjectIds from an object's payload).
-    /// Returns the ids that were swept.
+    /// `refs` (which extracts outgoing ObjectIds from an object's
+    /// payload — delta-parent pointers are walked transitively, so a
+    /// whole live chain is strong). Returns the ids that were swept.
+    ///
+    /// Aborts with an error (sweeping nothing) if any *live* object is
+    /// unreadable: proceeding would drop the unreadable object's own
+    /// parents and corrupt every chain hanging off them.
     pub fn gc(
         &self,
         roots: &[ObjectId],
@@ -254,18 +548,23 @@ impl Store {
             if !live.insert(id) {
                 continue;
             }
-            if let Ok(bytes) = self.get(&id) {
-                for r in refs(&bytes) {
-                    if !live.contains(&r) {
-                        stack.push(r);
-                    }
+            let bytes = self.get(&id).with_context(|| {
+                format!(
+                    "gc: live object {} is unreadable; aborting before the sweep \
+                     (sweeping around a missing chain object would corrupt live \
+                     delta chains — run `mgit fsck`)",
+                    id.short()
+                )
+            })?;
+            for r in refs(&bytes) {
+                if !live.contains(&r) {
+                    stack.push(r);
                 }
             }
         }
         let mut swept = Vec::new();
         for id in self.list()? {
-            if !live.contains(&id) {
-                self.remove(&id)?;
+            if !live.contains(&id) && self.obj().remove(&id)? {
                 swept.push(id);
             }
         }
@@ -276,6 +575,7 @@ impl Store {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::store::format::TensorObject;
     use crate::tensor::DType;
 
     #[test]
@@ -330,6 +630,74 @@ mod tests {
     }
 
     #[test]
+    fn packed_backend_facade() {
+        let dir =
+            std::env::temp_dir().join(format!("mgit-store-packed-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        exercise(&Store::open_packed(&dir).unwrap());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// ObjectStore-trait conformance, run against all three backends.
+    fn conformance(s: &dyn ObjectStore) {
+        let a = hash_bytes(b"conf-a");
+        let b = hash_bytes(b"conf-b");
+        assert!(!s.contains(&a));
+        assert!(s.get(&a).is_err());
+        assert!(s.put(a, b"conf-a").unwrap());
+        assert!(!s.put(a, b"conf-a").unwrap()); // dedup
+        assert!(s.put(b, b"conf-b!").unwrap());
+        assert!(s.contains(&a) && s.contains(&b));
+        assert_eq!(s.get(&b).unwrap(), b"conf-b!");
+        let mut ids = s.list().unwrap();
+        ids.sort();
+        let mut want = vec![a, b];
+        want.sort();
+        assert_eq!(ids, want);
+        assert_eq!(s.len().unwrap(), 2);
+        assert_eq!(s.stored_bytes().unwrap(), 6 + 7);
+        assert!(s.remove(&a).unwrap());
+        assert!(!s.remove(&a).unwrap());
+        assert!(!s.contains(&a));
+        assert_eq!(s.len().unwrap(), 1);
+    }
+
+    #[test]
+    fn object_store_trait_conformance_all_backends() {
+        conformance(&MemStore::new());
+
+        let base =
+            std::env::temp_dir().join(format!("mgit-conformance-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&base);
+        conformance(&DiskStore::open(&base.join("disk")).unwrap());
+        conformance(&PackedStore::open(&base.join("packed")).unwrap());
+
+        // PackedStore with an actual pack file behind it: packed objects
+        // are visible through every read path, writes stage loose, and
+        // remove only touches the staging copy.
+        let pdir = base.join("with-pack");
+        let packed_id = hash_bytes(b"packed-payload");
+        {
+            let ps = PackedStore::open(&pdir).unwrap();
+            let mut w = pack::PackWriter::create(&ps.pack_dir()).unwrap();
+            w.add(packed_id, b"packed-payload").unwrap();
+            w.finish().unwrap();
+        }
+        let ps = PackedStore::open(&pdir).unwrap();
+        assert!(ps.contains(&packed_id));
+        assert_eq!(ps.get(&packed_id).unwrap(), b"packed-payload");
+        assert!(!ps.put(packed_id, b"packed-payload").unwrap()); // dedup vs pack
+        assert!(!ps.remove(&packed_id).unwrap()); // immutable in pack
+        assert!(ps.contains(&packed_id));
+        assert_eq!(ps.counts().unwrap(), (0, 1));
+        let loose_id = hash_bytes(b"loose-payload");
+        assert!(ps.put(loose_id, b"loose-payload").unwrap());
+        assert_eq!(ps.counts().unwrap(), (1, 1));
+        assert_eq!(ps.len().unwrap(), 2);
+        std::fs::remove_dir_all(&base).unwrap();
+    }
+
+    #[test]
     fn gc_keeps_reachable_chain() {
         let store = Store::in_memory();
         // c <- b <- a (a references b, b references c) plus unreachable d.
@@ -349,5 +717,66 @@ mod tests {
         assert_eq!(swept, vec![d]);
         assert!(store.has(&a) && store.has(&b) && store.has(&c));
         assert!(!store.has(&d));
+    }
+
+    /// Extract MGTF delta-parent references (what `Repo::gc` does).
+    fn tensor_refs(bytes: &[u8]) -> Vec<ObjectId> {
+        TensorObject::decode(bytes).map(|o| o.refs()).unwrap_or_default()
+    }
+
+    /// Build a 3-deep MGTF chain raw <- d1 <- d2 under made-up ids and
+    /// return (raw, d1, d2).
+    fn mgtf_chain(store: &Store) -> (ObjectId, ObjectId, ObjectId) {
+        let raw_id = hash_bytes(b"chain-raw");
+        let d1_id = hash_bytes(b"chain-d1");
+        let d2_id = hash_bytes(b"chain-d2");
+        let raw = TensorObject::Raw {
+            dtype: DType::F32,
+            shape: vec![2],
+            payload: vec![0u8; 8],
+        };
+        let mk_delta = |parent: ObjectId| TensorObject::Delta {
+            dtype: DType::F32,
+            shape: vec![2],
+            parent,
+            eps: 1e-4,
+            codec: 1,
+            n_quant: 2,
+            grid: false,
+            payload: vec![1, 2, 3],
+        };
+        store.put(raw_id, &raw.encode()).unwrap();
+        store.put(d1_id, &mk_delta(raw_id).encode()).unwrap();
+        store.put(d2_id, &mk_delta(d1_id).encode()).unwrap();
+        (raw_id, d1_id, d2_id)
+    }
+
+    /// Regression: only the chain *tip* is a root, yet the mid-chain and
+    /// base objects must survive GC — delta parents are strong refs,
+    /// transitively.
+    #[test]
+    fn gc_transitively_keeps_delta_parents() {
+        let store = Store::in_memory();
+        let (raw_id, d1_id, d2_id) = mgtf_chain(&store);
+        let junk = store.put_blob(b"junk-object").unwrap();
+        let swept = store.gc(&[d2_id], tensor_refs).unwrap();
+        assert_eq!(swept, vec![junk]);
+        assert!(store.has(&raw_id) && store.has(&d1_id) && store.has(&d2_id));
+    }
+
+    /// Regression: a live mid-chain object going missing used to be
+    /// silently treated as a leaf, so its parents were swept and the
+    /// chain corrupted. GC must abort instead and sweep nothing.
+    #[test]
+    fn gc_aborts_on_unreadable_live_object() {
+        let store = Store::in_memory();
+        let (raw_id, d1_id, d2_id) = mgtf_chain(&store);
+        let junk = store.put_blob(b"junk-object").unwrap();
+        store.remove(&d1_id).unwrap(); // simulate loss/corruption
+        let res = store.gc(&[d2_id], tensor_refs);
+        assert!(res.is_err(), "gc must abort on an unreadable live object");
+        // Nothing was swept — the chain base is still intact.
+        assert!(store.has(&raw_id));
+        assert!(store.has(&junk));
     }
 }

@@ -1,0 +1,423 @@
+//! Pack files: many objects in one append-only file + a sidecar index.
+//!
+//! A loose store keeps one file per object — simple, but at production
+//! scale (millions of tensors) directory fan-out breaks down: every cold
+//! read is an `open()`, GC rewrites the whole tree, and small objects
+//! waste a filesystem block each. Packs are git's answer, adapted to the
+//! MGTF object model.
+//!
+//! ## On-disk formats (all integers little-endian)
+//!
+//! `pack-<sha256-hex>.pack`:
+//!
+//! ```text
+//! magic   "MGPK"                          4 bytes
+//! version u8 = 1
+//! entries count ×:
+//!     len u64                             object byte length
+//!     bytes [len]                         MGTF object (or opaque blob)
+//! count   u64                             entry count (trailer)
+//! sha     32 bytes                        SHA-256 of everything above
+//! ```
+//!
+//! `pack-<sha256-hex>.idx` (loadable without touching the pack):
+//!
+//! ```text
+//! magic   "MGPI"                          4 bytes
+//! version u8 = 1
+//! count   u64
+//! fanout  256 × u32                       cumulative count by id[0]
+//! entries count × (sorted by id):
+//!     id     32 bytes
+//!     offset u64                          file offset of object bytes
+//!     len    u64
+//! sha     32 bytes                        the pack's trailer SHA-256
+//! ```
+//!
+//! Lookup is fanout-bucketed binary search ([`PackIndex::lookup`]);
+//! object reads are a single seek+read ([`PackFile::get`]). Packs are
+//! immutable once finished: [`PackWriter`] streams objects into a temp
+//! file, then renames it to its content hash. Compaction/chain re-basing
+//! lives in [`repack`].
+
+mod repack;
+mod writer;
+
+pub use repack::{
+    chain_depths, chain_depths_from_parents, repack, RepackConfig, RepackReport,
+};
+pub use writer::PackWriter;
+
+use std::fs::File;
+use std::io::{Read, Seek, SeekFrom};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+use sha2::{Digest, Sha256};
+
+use super::ObjectId;
+
+pub const PACK_MAGIC: &[u8; 4] = b"MGPK";
+pub const IDX_MAGIC: &[u8; 4] = b"MGPI";
+pub const VERSION: u8 = 1;
+/// Pack header length (magic + version): the first valid object offset
+/// is `HEADER_LEN + 8` (past the first length prefix).
+pub const HEADER_LEN: u64 = 5;
+/// Pack trailer length (count + sha256).
+pub const TRAILER_LEN: u64 = 8 + 32;
+
+/// One object's position inside a pack.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IdxEntry {
+    pub id: ObjectId,
+    /// Absolute file offset of the object bytes (past the len prefix).
+    pub offset: u64,
+    pub len: u64,
+}
+
+/// Sorted fan-out table over a pack's objects.
+pub struct PackIndex {
+    /// Sorted by id.
+    pub entries: Vec<IdxEntry>,
+    fanout: [u32; 256],
+    /// The paired pack's trailer checksum.
+    pub pack_sha: [u8; 32],
+}
+
+impl PackIndex {
+    pub fn from_entries(mut entries: Vec<IdxEntry>, pack_sha: [u8; 32]) -> Result<PackIndex> {
+        entries.sort_by(|a, b| a.id.cmp(&b.id));
+        for w in entries.windows(2) {
+            if w[0].id == w[1].id {
+                bail!("duplicate object {} in pack index", w[0].id.short());
+            }
+        }
+        let mut fanout = [0u32; 256];
+        for e in &entries {
+            fanout[e.id.0[0] as usize] += 1;
+        }
+        let mut acc = 0u32;
+        for f in fanout.iter_mut() {
+            acc += *f;
+            *f = acc;
+        }
+        Ok(PackIndex { entries, fanout, pack_sha })
+    }
+
+    pub fn ids(&self) -> impl Iterator<Item = ObjectId> + '_ {
+        self.entries.iter().map(|e| e.id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Binary search within the id's fan-out bucket.
+    pub fn lookup(&self, id: &ObjectId) -> Option<(u64, u64)> {
+        let b = id.0[0] as usize;
+        let lo = if b == 0 { 0 } else { self.fanout[b - 1] as usize };
+        let hi = self.fanout[b] as usize;
+        let seg = &self.entries[lo..hi];
+        seg.binary_search_by(|e| e.id.cmp(id))
+            .ok()
+            .map(|i| (seg[i].offset, seg[i].len))
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(4 + 1 + 8 + 256 * 4 + self.entries.len() * 48 + 32);
+        out.extend_from_slice(IDX_MAGIC);
+        out.push(VERSION);
+        out.extend_from_slice(&(self.entries.len() as u64).to_le_bytes());
+        for f in &self.fanout {
+            out.extend_from_slice(&f.to_le_bytes());
+        }
+        for e in &self.entries {
+            out.extend_from_slice(&e.id.0);
+            out.extend_from_slice(&e.offset.to_le_bytes());
+            out.extend_from_slice(&e.len.to_le_bytes());
+        }
+        out.extend_from_slice(&self.pack_sha);
+        out
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<PackIndex> {
+        let mut r = ByteReader { b: bytes, pos: 0 };
+        if r.take(4)? != IDX_MAGIC {
+            bail!("not an MGPI pack index");
+        }
+        let version = r.u8()?;
+        if version != VERSION {
+            bail!("unsupported pack index version {version}");
+        }
+        let count = r.u64()? as usize;
+        for _ in 0..256 {
+            r.u32()?; // fanout is re-derived from the entries below
+        }
+        let mut entries = Vec::with_capacity(count);
+        for _ in 0..count {
+            let mut id = [0u8; 32];
+            id.copy_from_slice(r.take(32)?);
+            let offset = r.u64()?;
+            let len = r.u64()?;
+            entries.push(IdxEntry { id: ObjectId(id), offset, len });
+        }
+        let mut pack_sha = [0u8; 32];
+        pack_sha.copy_from_slice(r.take(32)?);
+        if r.pos != bytes.len() {
+            bail!("trailing bytes in pack index");
+        }
+        Self::from_entries(entries, pack_sha)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let tmp = path.with_extension("idx.tmp");
+        std::fs::write(&tmp, self.encode())?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<PackIndex> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading pack index {}", path.display()))?;
+        Self::decode(&bytes)
+    }
+}
+
+/// An open pack: its index plus a shared read handle.
+pub struct PackFile {
+    pub path: PathBuf,
+    pub index: PackIndex,
+    file: Mutex<File>,
+}
+
+impl PackFile {
+    /// The sidecar index path for a `.pack` path.
+    pub fn idx_path(pack_path: &Path) -> PathBuf {
+        pack_path.with_extension("idx")
+    }
+
+    pub fn open(pack_path: &Path) -> Result<PackFile> {
+        let index = PackIndex::load(&Self::idx_path(pack_path))?;
+        let mut file = File::open(pack_path)
+            .with_context(|| format!("opening pack {}", pack_path.display()))?;
+        let mut header = [0u8; 5];
+        file.read_exact(&mut header)
+            .with_context(|| format!("reading pack header {}", pack_path.display()))?;
+        if &header[..4] != PACK_MAGIC {
+            bail!("{} is not an MGPK pack", pack_path.display());
+        }
+        if header[4] != VERSION {
+            bail!("unsupported pack version {}", header[4]);
+        }
+        Ok(PackFile { path: pack_path.to_path_buf(), index, file: Mutex::new(file) })
+    }
+
+    pub fn contains(&self, id: &ObjectId) -> bool {
+        self.index.lookup(id).is_some()
+    }
+
+    /// Read one object; `Ok(None)` if this pack doesn't hold `id`.
+    pub fn get(&self, id: &ObjectId) -> Result<Option<Vec<u8>>> {
+        let Some((offset, len)) = self.index.lookup(id) else {
+            return Ok(None);
+        };
+        let mut f = self.file.lock().unwrap();
+        f.seek(SeekFrom::Start(offset))?;
+        let mut buf = vec![0u8; len as usize];
+        f.read_exact(&mut buf)
+            .with_context(|| format!("short read in pack {}", self.path.display()))?;
+        Ok(Some(buf))
+    }
+
+    pub fn object_count(&self) -> usize {
+        self.index.len()
+    }
+
+    /// Structural verification: trailer checksum, entry count, and that
+    /// every index entry points at a properly length-prefixed byte range.
+    /// (Content-level verification — decoding objects and re-hashing
+    /// resolved tensors — is `mgit verify-pack`'s job, since it needs
+    /// chain resolution across the whole store.)
+    pub fn verify(&self) -> Result<()> {
+        let bytes = std::fs::read(&self.path)
+            .with_context(|| format!("reading pack {}", self.path.display()))?;
+        let total = bytes.len() as u64;
+        if total < HEADER_LEN + TRAILER_LEN {
+            bail!("pack {} truncated", self.path.display());
+        }
+        if &bytes[..4] != PACK_MAGIC || bytes[4] != VERSION {
+            bail!("pack {} has a bad header", self.path.display());
+        }
+        let body_end = (total - 32) as usize;
+        let mut h = Sha256::new();
+        h.update(&bytes[..body_end]);
+        let sha: [u8; 32] = h.finalize().into();
+        if sha != bytes[body_end..] {
+            bail!("pack {} checksum mismatch", self.path.display());
+        }
+        if sha != self.index.pack_sha {
+            bail!("index/pack checksum mismatch for {}", self.path.display());
+        }
+        let count_off = (total - TRAILER_LEN) as usize;
+        let count =
+            u64::from_le_bytes(bytes[count_off..count_off + 8].try_into().unwrap()) as usize;
+        if count != self.index.len() {
+            bail!(
+                "pack {} holds {} objects, index says {}",
+                self.path.display(),
+                count,
+                self.index.len()
+            );
+        }
+        for e in &self.index.entries {
+            if e.offset < HEADER_LEN + 8 || e.offset + e.len > total - TRAILER_LEN {
+                bail!("index entry {} out of pack bounds", e.id.short());
+            }
+            let lp = (e.offset - 8) as usize;
+            let len = u64::from_le_bytes(bytes[lp..lp + 8].try_into().unwrap());
+            if len != e.len {
+                bail!(
+                    "length prefix mismatch for {} ({} vs {})",
+                    e.id.short(),
+                    len,
+                    e.len
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+struct ByteReader<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.b.len() {
+            bail!("truncated pack data");
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::hash_bytes;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("mgit-pack-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn write_read_verify_roundtrip() {
+        let dir = tmp_dir("roundtrip");
+        let mut w = PackWriter::create(&dir).unwrap();
+        let payloads: Vec<Vec<u8>> = (0..50u8)
+            .map(|i| vec![i; 16 + (i as usize * 7) % 64])
+            .collect();
+        let ids: Vec<ObjectId> = payloads.iter().map(|p| hash_bytes(p)).collect();
+        for (id, p) in ids.iter().zip(&payloads) {
+            w.add(*id, p).unwrap();
+        }
+        let pack = w.finish().unwrap();
+        assert_eq!(pack.object_count(), 50);
+        pack.verify().unwrap();
+        for (id, p) in ids.iter().zip(&payloads) {
+            assert!(pack.contains(id));
+            assert_eq!(pack.get(id).unwrap().unwrap(), *p);
+        }
+        assert!(pack.get(&hash_bytes(b"absent")).unwrap().is_none());
+
+        // Re-open from disk (index loads without reading the pack body).
+        let reopened = PackFile::open(&pack.path).unwrap();
+        assert_eq!(reopened.object_count(), 50);
+        reopened.verify().unwrap();
+        for (id, p) in ids.iter().zip(&payloads) {
+            assert_eq!(reopened.get(id).unwrap().unwrap(), *p);
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn index_roundtrip_and_lookup() {
+        let entries: Vec<IdxEntry> = (0..200u32)
+            .map(|i| IdxEntry {
+                id: hash_bytes(&i.to_le_bytes()),
+                offset: 13 + i as u64 * 100,
+                len: i as u64 + 1,
+            })
+            .collect();
+        let idx = PackIndex::from_entries(entries.clone(), [7u8; 32]).unwrap();
+        let back = PackIndex::decode(&idx.encode()).unwrap();
+        assert_eq!(back.len(), 200);
+        assert_eq!(back.pack_sha, [7u8; 32]);
+        for e in &entries {
+            assert_eq!(back.lookup(&e.id), Some((e.offset, e.len)));
+        }
+        assert_eq!(back.lookup(&hash_bytes(b"missing")), None);
+    }
+
+    #[test]
+    fn duplicate_ids_rejected() {
+        let id = hash_bytes(b"dup");
+        let entries = vec![
+            IdxEntry { id, offset: 13, len: 4 },
+            IdxEntry { id, offset: 30, len: 4 },
+        ];
+        assert!(PackIndex::from_entries(entries, [0u8; 32]).is_err());
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let dir = tmp_dir("corrupt");
+        let mut w = PackWriter::create(&dir).unwrap();
+        let id = hash_bytes(b"x");
+        w.add(id, b"payload-bytes").unwrap();
+        let pack = w.finish().unwrap();
+        pack.verify().unwrap();
+        // Flip one payload byte.
+        let mut bytes = std::fs::read(&pack.path).unwrap();
+        bytes[(HEADER_LEN + 8) as usize] ^= 0xff;
+        std::fs::write(&pack.path, &bytes).unwrap();
+        let reopened = PackFile::open(&pack.path).unwrap();
+        assert!(reopened.verify().is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn abort_leaves_no_pack() {
+        let dir = tmp_dir("abort");
+        let mut w = PackWriter::create(&dir).unwrap();
+        w.add(hash_bytes(b"y"), b"yy").unwrap();
+        w.abort().unwrap();
+        let left: Vec<_> = std::fs::read_dir(&dir).unwrap().collect();
+        assert!(left.is_empty(), "abort must remove the temp pack");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

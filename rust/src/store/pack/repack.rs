@@ -1,0 +1,561 @@
+//! Repacking: migrate live objects into a single compact pack, re-basing
+//! over-deep delta chains on the way.
+//!
+//! Liveness is defined by the lineage graph: the caller passes every
+//! object id referenced by a stored model (see
+//! `LineageGraph::object_roots`), and the repacker walks delta-parent
+//! references transitively, exactly like GC marking.
+//!
+//! ## Chain re-basing
+//!
+//! Reconstruction cost grows linearly with chain depth (the chain-depth
+//! guidance in SNIPPETS.md: depth ≲10 reconstructs fast, deeper chains
+//! pay diminishing returns), so chains longer than
+//! [`RepackConfig::max_chain_depth`] are shortened. Object ids name
+//! *logical tensor content*, so re-encoding must be value-exact or the
+//! id would no longer match its content. Two-tier policy, applied
+//! parents-first:
+//!
+//! 1. **Re-base onto a nearer ancestor**: re-quantize the object's
+//!    resolved values against the nearest ancestor whose (new) depth
+//!    still admits a child. Accepted only if reconstruction is
+//!    *bit-exact* and the encoding still beats raw storage.
+//! 2. **New base**: otherwise the object is stored raw (its payload *is*
+//!    its logical content, so the id is preserved by construction) —
+//!    MediaGit's "gc creates new bases" policy.
+//!
+//! Either way every previously readable id stays readable and resolves
+//! to identical bytes, and no live chain exceeds `max_chain_depth`.
+//!
+//! After the new pack is sealed, old packs are deleted, loose copies of
+//! packed objects are removed (the loose directory becomes a pure
+//! write-staging area), and with [`RepackConfig::prune`] unreachable
+//! objects are dropped entirely; without it, dead packed objects are
+//! carried over verbatim and dead loose objects are left in place.
+
+use std::collections::{HashMap, HashSet};
+use std::path::PathBuf;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::{PackFile, PackWriter};
+use crate::delta::{self, Codec, DeltaKernel};
+use crate::store::format::TensorObject;
+use crate::store::{ObjectId, ObjectStore, Store};
+use crate::tensor::f32_to_bytes;
+
+#[derive(Debug, Clone, Copy)]
+pub struct RepackConfig {
+    /// Longest allowed delta chain after repacking (≥ 1).
+    pub max_chain_depth: usize,
+    /// Drop unreachable objects instead of carrying them over.
+    pub prune: bool,
+}
+
+impl Default for RepackConfig {
+    fn default() -> Self {
+        // SNIPPETS.md chain-depth guidance: 1–10 reconstructs fast.
+        RepackConfig { max_chain_depth: 8, prune: false }
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct RepackReport {
+    /// Live objects written into the new pack.
+    pub packed: usize,
+    /// Unreachable packed objects carried over (prune off).
+    pub carried_dead: usize,
+    /// Chains re-based onto a nearer ancestor (still delta-encoded).
+    pub rebased_delta: usize,
+    /// Chains cut by promoting an object to a new raw base.
+    pub new_bases: usize,
+    /// Loose files deleted because the object is now packed.
+    pub loose_demoted: usize,
+    /// Unreachable loose objects deleted (prune on).
+    pub pruned_loose: usize,
+    pub bytes_before: u64,
+    pub bytes_after: u64,
+    /// Longest live chain before / after.
+    pub max_depth_before: usize,
+    pub max_depth_after: usize,
+    pub pack_path: Option<PathBuf>,
+}
+
+/// Chain depth of every object in the store (0 = raw/opaque base).
+/// Dangling parents are treated as bases so depths stay defined; `fsck`
+/// reports the dangling reference itself.
+pub fn chain_depths(store: &Store) -> Result<HashMap<ObjectId, usize>> {
+    let ids = store.list()?;
+    let mut parent: HashMap<ObjectId, Option<ObjectId>> = HashMap::with_capacity(ids.len());
+    for id in &ids {
+        let p = match TensorObject::decode(&store.get(id)?) {
+            Ok(TensorObject::Delta { parent, .. }) => Some(parent),
+            _ => None,
+        };
+        parent.insert(*id, p);
+    }
+    chain_depths_from_parents(&parent)
+}
+
+/// [`chain_depths`] from a prebuilt parent map (`None` = raw/opaque
+/// base), for callers that already decoded every object once.
+pub fn chain_depths_from_parents(
+    parent: &HashMap<ObjectId, Option<ObjectId>>,
+) -> Result<HashMap<ObjectId, usize>> {
+    let mut depth: HashMap<ObjectId, usize> = HashMap::with_capacity(parent.len());
+    for &start in parent.keys() {
+        if depth.contains_key(&start) {
+            continue;
+        }
+        let mut chain: Vec<ObjectId> = Vec::new();
+        let mut cur = start;
+        let base_depth = loop {
+            if let Some(&d) = depth.get(&cur) {
+                break d;
+            }
+            match parent.get(&cur) {
+                Some(Some(p)) => {
+                    chain.push(cur);
+                    if chain.len() > parent.len() {
+                        bail!("delta chain cycle detected at {}", cur.short());
+                    }
+                    let p = *p;
+                    if !parent.contains_key(&p) {
+                        break 0; // dangling parent: treat as a base
+                    }
+                    cur = p;
+                }
+                Some(None) => {
+                    depth.insert(cur, 0);
+                    break 0;
+                }
+                None => break 0,
+            }
+        };
+        let mut d = base_depth;
+        for &c in chain.iter().rev() {
+            d += 1;
+            depth.insert(c, d);
+        }
+    }
+    Ok(depth)
+}
+
+/// Repack `store` (must be pack-capable): walk live objects from
+/// `roots`, re-base over-deep chains, and emit one compacted pack. See
+/// the module docs for the full policy.
+pub fn repack(
+    store: &mut Store,
+    roots: &[ObjectId],
+    cfg: &RepackConfig,
+    kernel: &dyn DeltaKernel,
+) -> Result<RepackReport> {
+    if cfg.max_chain_depth == 0 {
+        bail!("max_chain_depth must be >= 1");
+    }
+    let packed = store
+        .as_packed()
+        .ok_or_else(|| anyhow!("repack needs a pack-capable store (Store::open_packed)"))?;
+    let pack_dir = packed.pack_dir();
+    let old_pack_paths: Vec<PathBuf> = packed.packs().iter().map(|p| p.path.clone()).collect();
+
+    let mut report = RepackReport { bytes_before: store.stored_bytes()?, ..Default::default() };
+
+    // ------------------------------------------------------------------
+    // 1. Mark live objects (delta parents are strong, transitive refs)
+    //    and record each live object's parent pointer.
+    // ------------------------------------------------------------------
+    let mut live: HashSet<ObjectId> = HashSet::new();
+    let mut parent_of: HashMap<ObjectId, Option<ObjectId>> = HashMap::new();
+    let mut stack: Vec<ObjectId> = roots.to_vec();
+    while let Some(id) = stack.pop() {
+        if !live.insert(id) {
+            continue;
+        }
+        let bytes = store
+            .get(&id)
+            .with_context(|| format!("repack: live object {} unreadable", id.short()))?;
+        match TensorObject::decode(&bytes) {
+            Ok(TensorObject::Delta { parent, .. }) => {
+                parent_of.insert(id, Some(parent));
+                if !live.contains(&parent) {
+                    stack.push(parent);
+                }
+            }
+            _ => {
+                parent_of.insert(id, None);
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // 2. Original chain depths; process parents before children so a
+    //    child always knows its (possibly re-based) parent's new depth.
+    // ------------------------------------------------------------------
+    let mut old_depth: HashMap<ObjectId, usize> = HashMap::with_capacity(live.len());
+    for &id in &live {
+        if old_depth.contains_key(&id) {
+            continue;
+        }
+        let mut chain = Vec::new();
+        let mut cur = id;
+        let base = loop {
+            if let Some(&d) = old_depth.get(&cur) {
+                break d;
+            }
+            match parent_of.get(&cur).copied().flatten() {
+                Some(p) => {
+                    chain.push(cur);
+                    if chain.len() > live.len() {
+                        bail!("delta chain cycle detected at {}", cur.short());
+                    }
+                    cur = p;
+                }
+                None => {
+                    old_depth.insert(cur, 0);
+                    break 0;
+                }
+            }
+        };
+        let mut d = base;
+        for &c in chain.iter().rev() {
+            d += 1;
+            old_depth.insert(c, d);
+        }
+    }
+    report.max_depth_before = old_depth.values().copied().max().unwrap_or(0);
+
+    let mut order: Vec<ObjectId> = live.iter().copied().collect();
+    order.sort_by_key(|id| (old_depth[id], id.0));
+
+    // ------------------------------------------------------------------
+    // 3. Re-encode over-deep chains (id-preserving; see module docs).
+    // ------------------------------------------------------------------
+    let mut new_bytes: HashMap<ObjectId, Vec<u8>> = HashMap::with_capacity(order.len());
+    let mut new_depth: HashMap<ObjectId, usize> = HashMap::with_capacity(order.len());
+    let mut resolve_cache: HashMap<ObjectId, Vec<f32>> = HashMap::new();
+    for &id in &order {
+        let bytes = store.get(&id)?;
+        let obj = match TensorObject::decode(&bytes) {
+            Err(_) => {
+                // Opaque (non-MGTF) blob: copy verbatim.
+                new_depth.insert(id, 0);
+                new_bytes.insert(id, bytes);
+                continue;
+            }
+            Ok(o) => o,
+        };
+        match obj {
+            TensorObject::Raw { .. } => {
+                new_depth.insert(id, 0);
+                new_bytes.insert(id, bytes);
+            }
+            TensorObject::Delta { dtype, shape, parent, eps, codec, grid, .. } => {
+                let pd = *new_depth.get(&parent).ok_or_else(|| {
+                    anyhow!(
+                        "repack: parent {} of {} not processed — liveness walk inconsistent",
+                        parent.short(),
+                        id.short()
+                    )
+                })?;
+                if pd + 1 <= cfg.max_chain_depth {
+                    // Parent kept (or re-based value-exactly): the stored
+                    // delta still reconstructs the identical content.
+                    new_depth.insert(id, pd + 1);
+                    new_bytes.insert(id, bytes);
+                    continue;
+                }
+                // Chain too deep: re-base against the nearest ancestor
+                // that can still take a child without busting the limit.
+                let values = delta::resolve_tensor(store, id, kernel, &mut resolve_cache, 0)?;
+                let mut anc = parent;
+                loop {
+                    if new_depth[&anc] + 1 <= cfg.max_chain_depth {
+                        break;
+                    }
+                    match parent_of.get(&anc).copied().flatten() {
+                        Some(p) => anc = p,
+                        None => break, // raw base (depth 0) — always admits a child
+                    }
+                }
+                let anc_values =
+                    delta::resolve_tensor(store, anc, kernel, &mut resolve_cache, 0)?;
+                let rebased = delta::reencode_exact(
+                    &values,
+                    &anc_values,
+                    anc,
+                    &shape,
+                    eps,
+                    Codec::from_code(codec)?,
+                    grid,
+                    kernel,
+                )?;
+                match rebased {
+                    Some(obj) => {
+                        report.rebased_delta += 1;
+                        new_depth.insert(id, new_depth[&anc] + 1);
+                        new_bytes.insert(id, obj.encode());
+                    }
+                    None => {
+                        // Promote to a new raw base: the payload *is* the
+                        // logical content, so the id is unchanged.
+                        report.new_bases += 1;
+                        let raw = TensorObject::Raw {
+                            dtype,
+                            shape,
+                            payload: f32_to_bytes(&values),
+                        };
+                        new_depth.insert(id, 0);
+                        new_bytes.insert(id, raw.encode());
+                    }
+                }
+            }
+        }
+    }
+    report.max_depth_after = new_depth.values().copied().max().unwrap_or(0);
+
+    // ------------------------------------------------------------------
+    // 4. Partition dead objects: packed ones are carried (unless prune),
+    //    loose-only ones stay loose (or are pruned).
+    // ------------------------------------------------------------------
+    let packed_ref = store.as_packed().unwrap();
+    let mut dead_carry: Vec<ObjectId> = Vec::new();
+    let mut dead_loose: Vec<ObjectId> = Vec::new();
+    for id in store.list()? {
+        if live.contains(&id) {
+            continue;
+        }
+        if packed_ref.packs().iter().any(|p| p.contains(&id)) {
+            if !cfg.prune {
+                dead_carry.push(id);
+            }
+        } else {
+            dead_loose.push(id);
+        }
+    }
+    dead_carry.sort();
+    dead_loose.sort();
+
+    // ------------------------------------------------------------------
+    // 5. Write the new pack (before touching anything existing).
+    // ------------------------------------------------------------------
+    let mut writer = PackWriter::create(&pack_dir)?;
+    for &id in &order {
+        writer.add(id, &new_bytes[&id])?;
+        report.packed += 1;
+    }
+    for &id in &dead_carry {
+        writer.add(id, &store.get(&id)?)?;
+        report.carried_dead += 1;
+    }
+    let new_pack: Option<PackFile> = if writer.object_count() > 0 {
+        Some(writer.finish()?)
+    } else {
+        writer.abort()?;
+        None
+    };
+    report.pack_path = new_pack.as_ref().map(|p| p.path.clone());
+
+    // ------------------------------------------------------------------
+    // 6. Swap packs in, demote loose copies, prune if asked.
+    // ------------------------------------------------------------------
+    let ps = store.as_packed_mut().unwrap();
+    ps.replace_packs(new_pack.into_iter().collect());
+    for p in &old_pack_paths {
+        // Pack names are content-derived: an identical repack re-creates
+        // the very same filename, which must not be deleted as "old".
+        if report.pack_path.as_ref() == Some(p) {
+            continue;
+        }
+        let _ = std::fs::remove_file(PackFile::idx_path(p));
+        let _ = std::fs::remove_file(p);
+    }
+    for id in order.iter().chain(&dead_carry) {
+        if ps.loose().remove(id)? {
+            report.loose_demoted += 1;
+        }
+    }
+    if cfg.prune {
+        for id in &dead_loose {
+            if ps.loose().remove(id)? {
+                report.pruned_loose += 1;
+            }
+        }
+    }
+    report.bytes_after = store.stored_bytes()?;
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::delta::NativeKernel;
+    use crate::store::hash_bytes;
+
+    fn tmp_store(tag: &str) -> (std::path::PathBuf, Store) {
+        let dir =
+            std::env::temp_dir().join(format!("mgit-repack-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = Store::open_packed(&dir).unwrap();
+        (dir, store)
+    }
+
+    /// Build a delta chain of `n` links over a raw base, storing real
+    /// quantized deltas so chains resolve. Returns ids base-first.
+    fn build_chain(store: &Store, n: usize, seed: u64) -> Vec<ObjectId> {
+        use crate::store::hash_tensor;
+        use crate::tensor::{i32_to_bytes, DType};
+        use crate::util::rng::Rng;
+
+        let mut rng = Rng::new(seed);
+        let len = 256usize;
+        let eps = 1e-4f32;
+        let codec = Codec::Deflate;
+        let base: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut ids = Vec::new();
+        let base_payload = f32_to_bytes(&base);
+        let base_id = hash_tensor(DType::F32, &[len], &base_payload);
+        store
+            .put(
+                base_id,
+                &TensorObject::Raw { dtype: DType::F32, shape: vec![len], payload: base_payload }
+                    .encode(),
+            )
+            .unwrap();
+        ids.push(base_id);
+        let mut prev = base;
+        let mut prev_id = base_id;
+        for _ in 0..n {
+            let child: Vec<f32> =
+                prev.iter().map(|&p| p + rng.normal_f32(0.0, 3e-4)).collect();
+            let q = NativeKernel.quantize(&prev, &child, eps).unwrap();
+            let rec = NativeKernel.dequantize(&prev, &q, eps).unwrap();
+            let payload = f32_to_bytes(&rec);
+            let id = hash_tensor(DType::F32, &[len], &payload);
+            let obj = TensorObject::Delta {
+                dtype: DType::F32,
+                shape: vec![len],
+                parent: prev_id,
+                eps,
+                codec: codec.code(),
+                n_quant: len,
+                grid: false,
+                payload: codec.compress(&i32_to_bytes(&q)).unwrap(),
+            };
+            store.put(id, &obj.encode()).unwrap();
+            ids.push(id);
+            prev = rec;
+            prev_id = id;
+        }
+        ids
+    }
+
+    fn resolve_all(store: &Store, ids: &[ObjectId]) -> Vec<Vec<f32>> {
+        let mut cache = HashMap::new();
+        ids.iter()
+            .map(|id| {
+                delta::resolve_tensor(store, *id, &NativeKernel, &mut cache, 0).unwrap()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn repack_preserves_content_and_caps_depth() {
+        let (dir, mut store) = tmp_store("cap");
+        let ids = build_chain(&store, 12, 1);
+        let junk = store.put_blob(b"unreachable-junk").unwrap();
+        let before = resolve_all(&store, &ids);
+
+        let cfg = RepackConfig { max_chain_depth: 4, prune: false };
+        let roots = vec![*ids.last().unwrap()];
+        let report = repack(&mut store, &roots, &cfg, &NativeKernel).unwrap();
+        assert_eq!(report.packed, ids.len());
+        assert!(report.max_depth_before > cfg.max_chain_depth);
+        assert!(report.max_depth_after <= cfg.max_chain_depth);
+        assert!(report.rebased_delta + report.new_bases > 0);
+        assert!(report.pack_path.is_some());
+
+        // Every id still readable with identical resolved content.
+        let after = resolve_all(&store, &ids);
+        for (b, a) in before.iter().zip(&after) {
+            assert_eq!(b.len(), a.len());
+            for (x, y) in b.iter().zip(a) {
+                assert_eq!(x.to_bits(), y.to_bits(), "content changed by repack");
+            }
+        }
+        // Depths really are capped on disk, not just in the report.
+        let depths = chain_depths(&store).unwrap();
+        for id in &ids {
+            assert!(depths[id] <= cfg.max_chain_depth);
+        }
+        // Loose dir demoted; junk survived (no prune).
+        assert!(store.has(&junk));
+        let ps = store.as_packed().unwrap();
+        let (loose, packed) = ps.counts().unwrap();
+        assert_eq!(packed, ids.len());
+        assert_eq!(loose, 1, "only the junk blob stays loose");
+        ps.packs()[0].verify().unwrap();
+
+        // Re-open from disk: packs load from their indexes.
+        let store2 = Store::open_packed(&dir).unwrap();
+        let again = resolve_all(&store2, &ids);
+        for (b, a) in before.iter().zip(&again) {
+            for (x, y) in b.iter().zip(a) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn repack_prune_drops_unreachable() {
+        let (dir, mut store) = tmp_store("prune");
+        let ids = build_chain(&store, 3, 2);
+        let junk = store.put_blob(b"dead-blob").unwrap();
+        let cfg = RepackConfig { max_chain_depth: 8, prune: true };
+        let roots = vec![*ids.last().unwrap()];
+        let report = repack(&mut store, &roots, &cfg, &NativeKernel).unwrap();
+        assert_eq!(report.pruned_loose, 1);
+        assert!(!store.has(&junk));
+        assert!(store.has(ids.last().unwrap()));
+        assert!(report.bytes_after <= report.bytes_before);
+
+        // A second repack with everything already packed produces the
+        // same content-derived pack name and must NOT delete it as an
+        // "old" pack — everything stays readable from disk.
+        let report2 = repack(&mut store, &roots, &cfg, &NativeKernel).unwrap();
+        assert_eq!(report2.packed, ids.len());
+        assert_eq!(report2.carried_dead, 0);
+        let store2 = Store::open_packed(&dir).unwrap();
+        for id in &ids {
+            assert!(store2.has(id), "object lost by idempotent repack");
+            store2.get(id).unwrap();
+        }
+        store2.as_packed().unwrap().packs()[0].verify().unwrap();
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn repack_without_prune_carries_dead_packed_objects() {
+        let (dir, mut store) = tmp_store("carry");
+        let ids = build_chain(&store, 2, 3);
+        let cfg = RepackConfig { max_chain_depth: 8, prune: false };
+        // First repack with the tip as root packs the whole chain.
+        let tip = *ids.last().unwrap();
+        repack(&mut store, &[tip], &cfg, &NativeKernel).unwrap();
+        // Now repack rooted at the *base* only: the two deltas are dead
+        // but packed, so they are carried over and stay readable.
+        let report = repack(&mut store, &[ids[0]], &cfg, &NativeKernel).unwrap();
+        assert_eq!(report.packed, 1);
+        assert_eq!(report.carried_dead, 2);
+        assert!(store.has(&tip));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn repack_requires_packed_backend() {
+        let mut store = Store::in_memory();
+        let id = hash_bytes(b"x");
+        assert!(repack(&mut store, &[id], &RepackConfig::default(), &NativeKernel).is_err());
+    }
+}

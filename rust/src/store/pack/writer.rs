@@ -1,0 +1,99 @@
+//! Streaming pack writer: objects are appended to a temp file with a
+//! running SHA-256; `finish` seals the trailer, renames the pack to its
+//! content hash, and writes the sidecar index.
+
+use std::fs::File;
+use std::io::Write;
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+use sha2::{Digest, Sha256};
+
+use super::{IdxEntry, PackFile, PackIndex, PACK_MAGIC, VERSION};
+use crate::store::ObjectId;
+
+pub struct PackWriter {
+    dir: PathBuf,
+    tmp_path: PathBuf,
+    file: File,
+    hasher: Sha256,
+    entries: Vec<IdxEntry>,
+    offset: u64,
+}
+
+impl PackWriter {
+    /// Start a new pack in `pack_dir` (created if needed). The file stays
+    /// a `tmp-*.pack` until [`PackWriter::finish`] renames it.
+    pub fn create(pack_dir: &std::path::Path) -> Result<PackWriter> {
+        std::fs::create_dir_all(pack_dir)
+            .with_context(|| format!("creating pack dir {}", pack_dir.display()))?;
+        // Not `.pack`: a crash must not leave something PackedStore::open
+        // would try to load as a sealed pack.
+        let tmp_path = pack_dir.join(format!("tmp-{}.packtmp", std::process::id()));
+        let file = File::create(&tmp_path)
+            .with_context(|| format!("creating {}", tmp_path.display()))?;
+        let mut w = PackWriter {
+            dir: pack_dir.to_path_buf(),
+            tmp_path,
+            file,
+            hasher: Sha256::new(),
+            entries: Vec::new(),
+            offset: 0,
+        };
+        w.write_hashed(PACK_MAGIC)?;
+        w.write_hashed(&[VERSION])?;
+        Ok(w)
+    }
+
+    fn write_hashed(&mut self, bytes: &[u8]) -> Result<()> {
+        self.file.write_all(bytes)?;
+        self.hasher.update(bytes);
+        self.offset += bytes.len() as u64;
+        Ok(())
+    }
+
+    /// Append one object. Ids must be unique within a pack (checked at
+    /// `finish` when the index is built).
+    pub fn add(&mut self, id: ObjectId, bytes: &[u8]) -> Result<()> {
+        self.write_hashed(&(bytes.len() as u64).to_le_bytes())?;
+        let offset = self.offset;
+        self.write_hashed(bytes)?;
+        self.entries.push(IdxEntry { id, offset, len: bytes.len() as u64 });
+        Ok(())
+    }
+
+    pub fn object_count(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Seal the pack: write the count trailer + checksum, rename to
+    /// `pack-<sha256>.pack`, and write the sidecar `.idx`.
+    pub fn finish(mut self) -> Result<PackFile> {
+        let count = self.entries.len() as u64;
+        self.write_hashed(&count.to_le_bytes())?;
+        let PackWriter { dir, tmp_path, mut file, hasher, entries, .. } = self;
+        let sha: [u8; 32] = hasher.finalize().into();
+        file.write_all(&sha)?;
+        file.sync_all()?;
+        drop(file);
+
+        let hex: String = sha.iter().map(|b| format!("{b:02x}")).collect();
+        let pack_path = dir.join(format!("pack-{hex}.pack"));
+        let index = PackIndex::from_entries(entries, sha)?;
+        // Index first, then rename: the rename is the atomic commit point
+        // (an orphaned .idx is ignored by the pack scan; a sealed pack
+        // without its index would make the store unopenable).
+        index.save(&PackFile::idx_path(&pack_path))?;
+        std::fs::rename(&tmp_path, &pack_path)?;
+        PackFile::open(&pack_path)
+    }
+
+    /// Drop the partial pack without sealing it.
+    pub fn abort(self) -> Result<()> {
+        drop(self.file);
+        if self.tmp_path.exists() {
+            std::fs::remove_file(&self.tmp_path)?;
+        }
+        Ok(())
+    }
+}

@@ -13,14 +13,24 @@ use mgit::train::{CasCheckpointStore, Trainer};
 use mgit::update::{self, CheckpointStore, CreationExecutor};
 use mgit::workloads::{self, PersistMode, Scale};
 
-fn runtime() -> Runtime {
+/// `None` (skip) without AOT artifacts or the PJRT backend — the
+/// workload builders train real models through compiled HLO.
+fn runtime() -> Option<Runtime> {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    Runtime::new(&dir).expect("run `make artifacts` first")
+    if !mgit::runtime::HAS_PJRT {
+        eprintln!("skipping: built without the `pjrt` feature");
+        return None;
+    }
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::new(&dir).expect("runtime init failed"))
 }
 
 #[test]
 fn g2_build_persist_load_cascade() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let zoo = rt.zoo().clone();
     let scale = Scale::small();
     let store = Store::in_memory();
@@ -101,7 +111,7 @@ fn g2_build_persist_load_cascade() {
 
 #[test]
 fn g4_prune_chain_preserves_sparsity_through_storage() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let zoo = rt.zoo().clone();
     let mut scale = Scale::small();
     scale.sparsities = vec![0.6];
@@ -141,7 +151,7 @@ fn g4_prune_chain_preserves_sparsity_through_storage() {
 
 #[test]
 fn g5_mtl_members_share_backbone() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let scale = Scale::small();
     let wl = workloads::build_g5(&rt, &scale).unwrap();
     let names: Vec<String> = wl
@@ -172,7 +182,7 @@ fn g5_mtl_members_share_backbone() {
 
 #[test]
 fn g3_federated_improves_and_tracks_lineage() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let scale = Scale::small();
     let wl = workloads::build_g3(&rt, &scale).unwrap();
     wl.graph.integrity_check().unwrap();
@@ -192,7 +202,7 @@ fn g3_federated_improves_and_tracks_lineage() {
 
 #[test]
 fn g1_auto_construction_mostly_correct() {
-    let rt = runtime();
+    let Some(rt) = runtime() else { return };
     let mut scale = Scale::small();
     scale.pretrain_steps = 4;
     scale.g1_child_steps = 4;
