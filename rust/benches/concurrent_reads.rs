@@ -1,0 +1,245 @@
+//! Concurrent pack-read bench: multi-threaded cold chain reconstruction
+//! against one shared `PackedStore`, versus an emulated serialized
+//! baseline (every model load behind one global mutex — the shape of the
+//! pre-mmap `Mutex<File>` pack reader).
+//!
+//! No runtime/artifacts needed: the lineage graph is synthesized inline
+//! (4 pretrained roots × 8 delta-compressed versions), fully repacked,
+//! then read back cold by 1/2/4/8 reader threads splitting the model
+//! list. "Cold" means a fresh `Store` handle per iteration (indexes
+//! re-load, every chain re-resolves); the OS page cache stays warm, so
+//! the numbers isolate read-path concurrency, which is what the mmap
+//! tier changes. A final section shows the shared bounded
+//! `ResolveCache` absorbing repeated ancestor materializations.
+
+mod common;
+
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use mgit::checkpoint::{Checkpoint, ModelZoo};
+use mgit::delta::{self, CompressConfig, NativeKernel, ResolveCache, StoredModel};
+use mgit::store::pack::{repack, RepackConfig, RepackMode};
+use mgit::store::{ObjectId, Store};
+use mgit::util::json;
+use mgit::util::rng::Rng;
+use mgit::util::timing::BenchStats;
+use mgit::util::{human_bytes, human_secs};
+
+/// 8 × 16 Ki-f32 tensors = 512 KiB of parameters per model.
+fn manifest() -> String {
+    let n_tensors = 8usize;
+    let size = 16 * 1024usize;
+    let layout: Vec<String> = (0..n_tensors)
+        .map(|i| {
+            format!(
+                r#"{{"name":"w.t{i}","shape":[{size}],"offset":{},"size":{size},"init":"normal"}}"#,
+                i * size
+            )
+        })
+        .collect();
+    format!(
+        r#"{{
+          "vocab": 16, "max_seq": 4, "n_classes": 2, "batch": 2,
+          "delta_chunk": 4096,
+          "special_tokens": {{"cls": 14, "mask": 15, "ignore_label": -100}},
+          "archs": {{"bench": {{
+              "d_model": 8, "n_layers": 1, "n_heads": 1, "d_ff": 16,
+              "param_count": {},
+              "layout": [{}],
+              "dag": {{"nodes": [], "edges": []}}
+          }}}},
+          "artifacts": {{"bench": {{}}}},
+          "delta_kernels": {{"quant": "q", "dequant": "d"}}
+        }}"#,
+        n_tensors * size,
+        layout.join(",")
+    )
+}
+
+fn perturbed(ck: &Checkpoint, seed: u64) -> Checkpoint {
+    let mut rng = Rng::new(seed);
+    let flat = ck.flat.iter().map(|&x| x + rng.normal_f32(0.0, 3e-4)).collect();
+    Checkpoint { arch: ck.arch.clone(), flat }
+}
+
+/// Cold-load every model, the list split over `threads` reader threads
+/// sharing one fresh `Store`. Returns total elements loaded (sanity).
+fn load_concurrent(
+    dir: &PathBuf,
+    zoo: &ModelZoo,
+    models: &[StoredModel],
+    threads: usize,
+    serialize: Option<&Mutex<()>>,
+) -> usize {
+    let store = Store::open_packed(dir).expect("open store");
+    let chunk = (models.len() + threads - 1) / threads;
+    std::thread::scope(|s| {
+        let handles: Vec<_> = models
+            .chunks(chunk)
+            .map(|slab| {
+                let store = &store;
+                s.spawn(move || {
+                    let mut elems = 0usize;
+                    for m in slab {
+                        let _guard = serialize.map(|l| l.lock().unwrap());
+                        let ck = delta::load(store, zoo, m, &NativeKernel)
+                            .expect("load model");
+                        elems += ck.flat.len();
+                    }
+                    elems
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).sum()
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let zoo = ModelZoo::from_json(&json::parse(&manifest())?)?;
+    let spec = zoo.arch("bench")?;
+    let dir =
+        std::env::temp_dir().join(format!("mgit-bench-conc-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = Store::open_packed(&dir)?;
+
+    // ------------------------------------------------------------------
+    // Build the lineage graph and seal it into one pack.
+    // ------------------------------------------------------------------
+    let (n_roots, n_versions) = (4usize, 8usize);
+    let cfg = CompressConfig::default();
+    let mut models: Vec<StoredModel> = Vec::new();
+    for r in 0..n_roots {
+        let root = Checkpoint::init(spec, r as u64);
+        let (sm, _) = delta::store_raw(&store, spec, &root)?;
+        let mut prev = (root, sm.clone());
+        models.push(sm);
+        for v in 0..n_versions {
+            let child = perturbed(&prev.0, (r * 1000 + v) as u64 + 7);
+            let cand = delta::prepare_delta(
+                &store, spec, &child, spec, &prev.0, &prev.1, cfg, &NativeKernel,
+            )?;
+            delta::commit(&store, &cand)?;
+            prev = (cand.checkpoint, cand.model.clone());
+            models.push(cand.model);
+        }
+    }
+    let roots: Vec<ObjectId> = models.iter().flat_map(|m| m.refs()).collect();
+    let rcfg =
+        RepackConfig { max_chain_depth: 8, prune: true, mode: RepackMode::Full };
+    let mut store = store;
+    let report = repack(&mut store, &roots, &rcfg, &NativeKernel)?;
+    let reader_kind =
+        store.as_packed().unwrap().packs().first().map(|p| p.reader_kind()).unwrap_or("?");
+    println!(
+        "graph: {} models, {} packed objects ({}), pack reader: {reader_kind}",
+        models.len(),
+        report.packed,
+        human_bytes(report.bytes_after),
+    );
+    drop(store);
+
+    // Correctness first: every thread count reproduces identical bits.
+    let reference: Vec<Checkpoint> = {
+        let store = Store::open_packed(&dir)?;
+        models
+            .iter()
+            .map(|m| delta::load(&store, &zoo, m, &NativeKernel).unwrap())
+            .collect()
+    };
+    let expected_elems: usize = reference.iter().map(|c| c.flat.len()).sum();
+
+    // ------------------------------------------------------------------
+    // Scaling: 1/2/4/8 reader threads, lock-free pack reads.
+    // ------------------------------------------------------------------
+    common::hr();
+    let mut results: Vec<(usize, BenchStats)> = Vec::new();
+    for &threads in &[1usize, 2, 4, 8] {
+        assert_eq!(load_concurrent(&dir, &zoo, &models, threads, None), expected_elems);
+        let stats = BenchStats::measure(
+            &format!("cold load, {threads} reader thread(s)"),
+            1,
+            3,
+            || {
+                let _ = load_concurrent(&dir, &zoo, &models, threads, None);
+            },
+        );
+        println!("{}", stats.report());
+        results.push((threads, stats));
+    }
+
+    // ------------------------------------------------------------------
+    // Serialized baseline: one global lock around every model load.
+    // This is *stricter* than the old per-pack Mutex<File> (which only
+    // serialized the seek+read, not decompression/dequantization), so
+    // read it as an upper bound on what full serialization costs, not
+    // as an exact reproduction of the PR 1 reader.
+    // ------------------------------------------------------------------
+    common::hr();
+    let big_lock = Mutex::new(());
+    assert_eq!(
+        load_concurrent(&dir, &zoo, &models, 8, Some(&big_lock)),
+        expected_elems
+    );
+    let serialized = BenchStats::measure(
+        "cold load, 8 threads, fully serialized (upper bound)",
+        1,
+        3,
+        || {
+            let _ = load_concurrent(&dir, &zoo, &models, 8, Some(&big_lock));
+        },
+    );
+    println!("{}", serialized.report());
+
+    common::hr();
+    let base = results[0].1.mean();
+    println!("scaling vs 1 thread (lock-free pack reads):");
+    for (threads, stats) in &results {
+        println!(
+            "  {threads} thread(s): {:>10}  speedup {:.2}x",
+            human_secs(stats.mean()),
+            base / stats.mean()
+        );
+    }
+    let best = results
+        .iter()
+        .map(|(_, s)| s.mean())
+        .fold(f64::INFINITY, f64::min);
+    println!(
+        "fully-serialized upper bound: {} ({:.2}x slower than best concurrent)",
+        human_secs(serialized.mean()),
+        serialized.mean() / best
+    );
+
+    // ------------------------------------------------------------------
+    // Shared decoded-base cache: concurrent tip loads re-use ancestors.
+    // ------------------------------------------------------------------
+    common::hr();
+    let tips: Vec<&StoredModel> =
+        models.chunks(n_versions + 1).filter_map(|c| c.last()).collect();
+    let store = Store::open_packed(&dir)?;
+    let cache = ResolveCache::new(512);
+    std::thread::scope(|s| {
+        for tip in &tips {
+            let (store, zoo, cache) = (&store, &zoo, &cache);
+            s.spawn(move || {
+                let ck = delta::load_with_cache(store, zoo, tip, &NativeKernel, cache)
+                    .expect("cached load");
+                assert_eq!(ck.flat.len(), spec.param_count);
+            });
+        }
+    });
+    let (hits, misses) = cache.counters();
+    println!(
+        "shared ResolveCache over {} concurrent tip loads: {} hits / {} misses \
+         ({:.0}% hit rate), {} tensors cached",
+        tips.len(),
+        hits,
+        misses,
+        cache.hit_rate() * 100.0,
+        cache.len()
+    );
+
+    std::fs::remove_dir_all(&dir)?;
+    Ok(())
+}

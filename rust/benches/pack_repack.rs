@@ -16,7 +16,7 @@ use std::path::PathBuf;
 
 use mgit::checkpoint::{Checkpoint, ModelZoo};
 use mgit::delta::{self, CompressConfig, NativeKernel, StoredModel};
-use mgit::store::pack::{chain_depths, repack, RepackConfig};
+use mgit::store::pack::{chain_depths, repack, RepackConfig, RepackMode};
 use mgit::store::{ObjectId, Store};
 use mgit::util::json;
 use mgit::util::rng::Rng;
@@ -126,7 +126,7 @@ fn main() -> anyhow::Result<()> {
     // ------------------------------------------------------------------
     common::hr();
     let roots: Vec<ObjectId> = models.iter().flat_map(|m| m.refs()).collect();
-    let rcfg = RepackConfig { max_chain_depth: 8, prune: true };
+    let rcfg = RepackConfig { max_chain_depth: 8, prune: true, mode: RepackMode::Full };
     let mut store = Store::open_packed(&dir)?;
     let t_repack = mgit::util::timing::Timer::start();
     let report = repack(&mut store, &roots, &rcfg, &NativeKernel)?;

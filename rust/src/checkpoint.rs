@@ -19,30 +19,45 @@ use crate::util::rng::Rng;
 /// How a parameter tensor is initialized for a fresh model.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum InitKind {
+    /// N(0, 0.02²) weights.
     Normal,
+    /// All-ones (layer-norm gains).
     Ones,
+    /// All-zeros (biases).
     Zeros,
 }
 
 /// One named parameter tensor inside the flat layout.
 #[derive(Debug, Clone)]
 pub struct ParamEntry {
+    /// Parameter name (e.g. `layers.0.attn.wq`).
     pub name: String,
+    /// Logical tensor shape.
     pub shape: Vec<usize>,
+    /// Start offset inside the flat f32 vector.
     pub offset: usize,
+    /// Element count (product of `shape`).
     pub size: usize,
+    /// Fresh-model initialization for this tensor.
     pub init: InitKind,
 }
 
 /// One architecture of the model zoo.
 #[derive(Debug, Clone)]
 pub struct ArchSpec {
+    /// Architecture name (the `model_type` lineage nodes carry).
     pub name: String,
+    /// Transformer width.
     pub d_model: usize,
+    /// Transformer depth.
     pub n_layers: usize,
+    /// Attention heads per layer.
     pub n_heads: usize,
+    /// Feed-forward hidden width.
     pub d_ff: usize,
+    /// Total f32 parameter count (the flat vector's length).
     pub param_count: usize,
+    /// Named tensors in flat-vector order.
     pub layout: Vec<ParamEntry>,
     by_name: HashMap<String, usize>,
     /// Raw layer DAG JSON (consumed by `modeldag`).
@@ -90,6 +105,7 @@ impl ArchSpec {
         })
     }
 
+    /// Layout entry for the parameter named `name` (error if absent).
     pub fn entry(&self, name: &str) -> Result<&ParamEntry> {
         self.by_name
             .get(name)
@@ -97,6 +113,7 @@ impl ArchSpec {
             .ok_or_else(|| anyhow!("arch {} has no parameter `{name}`", self.name))
     }
 
+    /// All parameter names, in layout order.
     pub fn param_names(&self) -> impl Iterator<Item = &str> {
         self.layout.iter().map(|e| e.name.as_str())
     }
@@ -105,27 +122,39 @@ impl ArchSpec {
 /// The whole manifest: globals + every architecture.
 #[derive(Debug, Clone)]
 pub struct ModelZoo {
+    /// Token vocabulary size shared by all archs.
     pub vocab: usize,
+    /// Maximum sequence length.
     pub max_seq: usize,
+    /// Classification head width.
     pub n_classes: usize,
+    /// Batch size the AOT artifacts were compiled for.
     pub batch: usize,
+    /// Chunk size the delta kernels process per call.
     pub delta_chunk: usize,
+    /// MLM mask token id.
     pub mask_token: i32,
+    /// Loss-ignored label id.
     pub ignore_label: i32,
+    /// Every architecture by name.
     pub archs: HashMap<String, ArchSpec>,
     /// artifact file names: arch -> kind -> file
     pub artifacts: HashMap<String, HashMap<String, String>>,
+    /// Artifact file for the quantize kernel.
     pub delta_quant_artifact: String,
+    /// Artifact file for the dequantize kernel.
     pub delta_dequant_artifact: String,
 }
 
 impl ModelZoo {
+    /// Load `manifest.json` from disk (see `python/compile/archs.py`).
     pub fn load(manifest_path: &Path) -> Result<ModelZoo> {
         let text = std::fs::read_to_string(manifest_path)
             .with_context(|| format!("reading {}", manifest_path.display()))?;
         Self::from_json(&json::parse(&text)?)
     }
 
+    /// Parse a manifest from its JSON form.
     pub fn from_json(j: &Json) -> Result<ModelZoo> {
         let mut archs = HashMap::new();
         for (name, aj) in j.req("archs")?.as_obj().unwrap_or(&[]) {
@@ -156,6 +185,7 @@ impl ModelZoo {
         })
     }
 
+    /// The architecture named `name` (error if absent).
     pub fn arch(&self, name: &str) -> Result<&ArchSpec> {
         self.archs
             .get(name)
@@ -166,7 +196,9 @@ impl ModelZoo {
 /// A model's parameters as one flat f32 vector in the arch's layout.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Checkpoint {
+    /// Architecture name (must match an [`ArchSpec`]).
     pub arch: String,
+    /// All parameters, concatenated in layout order.
     pub flat: Vec<f32>,
 }
 
@@ -194,6 +226,7 @@ impl Checkpoint {
         Checkpoint { arch: spec.name.clone(), flat }
     }
 
+    /// Validate that this checkpoint matches `spec` (name + length).
     pub fn check_arch(&self, spec: &ArchSpec) -> Result<()> {
         if self.arch != spec.name {
             bail!("checkpoint arch {} != spec {}", self.arch, spec.name);
@@ -209,11 +242,13 @@ impl Checkpoint {
         Ok(())
     }
 
+    /// View one named tensor as a slice of the flat vector.
     pub fn param(&self, spec: &ArchSpec, name: &str) -> Result<&[f32]> {
         let e = spec.entry(name)?;
         Ok(&self.flat[e.offset..e.offset + e.size])
     }
 
+    /// Mutable view of one named tensor.
     pub fn param_mut(&mut self, spec: &ArchSpec, name: &str) -> Result<&mut [f32]> {
         let e = spec.entry(name)?;
         Ok(&mut self.flat[e.offset..e.offset + e.size])
@@ -246,6 +281,7 @@ impl Checkpoint {
         self.flat.iter().filter(|&&x| x == 0.0).count() as f64 / self.flat.len() as f64
     }
 
+    /// Euclidean norm over all parameters (drift diagnostics).
     pub fn l2_norm(&self) -> f64 {
         self.flat.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
     }

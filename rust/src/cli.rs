@@ -16,7 +16,9 @@
 //! mgit diff <a> <b>              # structural/contextual divergence
 //! mgit merge <base> <m1> <m2> [--out name]
 //! mgit gc                        # sweep unreachable loose objects
-//! mgit repack [--max-chain-depth N] [--prune]  # compact into a pack
+//! mgit repack [--max-chain-depth N] [--prune] [--full|--incremental]
+//!                                # pack new loose objects (incremental,
+//!                                # the default) or rewrite every pack
 //! mgit verify-pack               # pack checksums + content hashes
 //! mgit build <g1|g2|g3|g4|g5>    # train + register a workload graph
 //! mgit compress --codec <rle|lzma|zstd> [--eps E]  # re-store with deltas
@@ -210,10 +212,12 @@ usage: mgit <command> [args] [--flags]
   fsck                       check graph invariants, object presence and
                              cross-pack delta-chain integrity
   stats                      object store statistics (loose vs packed,
-                             dedup counters, chain-depth histogram)
+                             dedup counters, chain-depth histogram,
+                             per-pack generations)
   gc                         sweep unreachable loose objects
-  repack                     compact live objects into a pack, shortening
-                             delta chains [--max-chain-depth 8] [--prune]
+  repack                     pack new loose objects into a fresh pack
+                             (--incremental, the default; --full rewrites
+                             every pack) [--max-chain-depth 8] [--prune]
   verify-pack                verify pack checksums + object content hashes
   diff <a> <b>               divergence scores between two models
   merge <base> <m1> <m2>     figure-2 merge (conflict detection)
@@ -296,7 +300,9 @@ fn cmd_fsck(root: &Path) -> Result<()> {
     // Cross-pack delta-chain integrity: every delta parent must resolve
     // somewhere in the store, whichever pack (or loose file) holds it.
     // Unreadable objects are recorded and the scan continues — fsck must
-    // report corruption, not die on it.
+    // report corruption, not die on it. Orphaned parents are also listed
+    // together at the end so a repair pass has the full set in one place.
+    let mut orphaned: std::collections::BTreeMap<ObjectId, Vec<ObjectId>> = Default::default();
     for id in repo.store.list()? {
         let bytes = match repo.store.get(&id) {
             Ok(b) => b,
@@ -314,9 +320,17 @@ fn cmd_fsck(root: &Path) -> Result<()> {
                         parent.short(),
                         id.short()
                     );
+                    orphaned.entry(parent).or_default().push(id);
                     problems += 1;
                 }
             }
+        }
+    }
+    if !orphaned.is_empty() {
+        println!("orphaned delta parents ({}):", orphaned.len());
+        for (parent, children) in &orphaned {
+            let refs: Vec<String> = children.iter().map(|c| c.short()).collect();
+            println!("  {} <- [{}]", parent.hex(), refs.join(", "));
         }
     }
     // Pack structure (checksums, index/offset agreement).
@@ -365,6 +379,37 @@ fn cmd_stats(root: &Path) -> Result<()> {
         None => (objects.len(), 0),
     };
     println!("objects:        {} ({loose} loose, {packed} packed)", objects.len());
+    // Per-pack generation info: incremental repacks append packs over
+    // time; sort by file mtime so "gen 0" is the oldest.
+    if let Some(ps) = repo.store.as_packed() {
+        if !ps.packs().is_empty() {
+            let mut gens: Vec<_> = ps
+                .packs()
+                .iter()
+                .map(|p| {
+                    let mtime = std::fs::metadata(&p.path)
+                        .and_then(|m| m.modified())
+                        .unwrap_or(std::time::SystemTime::UNIX_EPOCH);
+                    (mtime, p)
+                })
+                .collect();
+            gens.sort_by_key(|(t, _)| *t);
+            println!("packs:          {} ({} reads)", gens.len(), gens[0].1.reader_kind());
+            for (generation, (_, p)) in gens.iter().enumerate() {
+                let name = p
+                    .path
+                    .file_name()
+                    .map(|n| n.to_string_lossy().into_owned())
+                    .unwrap_or_else(|| p.path.display().to_string());
+                println!(
+                    "  gen {generation:<3} {:<6} objects  {:>10}  {}",
+                    p.object_count(),
+                    human_bytes(p.size_bytes()),
+                    name
+                );
+            }
+        }
+    }
     println!("delta-encoded:  {delta_objs}");
     println!("stored bytes:   {}", human_bytes(bytes));
     println!("logical bytes:  {}", human_bytes(raw_bytes));
@@ -406,10 +451,16 @@ fn cmd_stats(root: &Path) -> Result<()> {
 }
 
 fn cmd_repack(root: &Path, args: &Args) -> Result<()> {
+    use crate::store::pack::RepackMode;
     let mut repo = Repo::open(root)?;
+    if args.has("full") && args.has("incremental") {
+        bail!("--full and --incremental are mutually exclusive");
+    }
+    let mode = if args.has("full") { RepackMode::Full } else { RepackMode::Incremental };
     let cfg = crate::store::pack::RepackConfig {
         max_chain_depth: args.flag_usize("max-chain-depth", 8)?,
         prune: args.has("prune"),
+        mode,
     };
     let roots = repo.graph.object_roots();
     let t = crate::util::timing::Timer::start();
@@ -418,11 +469,17 @@ fn cmd_repack(root: &Path, args: &Args) -> Result<()> {
     let report = crate::store::pack::repack(&mut repo.store, &roots, &cfg, &NativeKernel)?;
     repo.save()?;
     println!(
-        "repacked {} objects ({} carried dead) in {}",
+        "repacked {} objects ({} retained in old packs, {} carried dead) in {} [{}]",
         report.packed,
+        report.retained_packed,
         report.carried_dead,
-        human_secs(t.elapsed_secs())
+        human_secs(t.elapsed_secs()),
+        match mode {
+            RepackMode::Incremental => "incremental",
+            RepackMode::Full => "full",
+        }
     );
+    println!("packs:  {} -> {}", report.packs_before, report.packs_after);
     println!(
         "chains: max depth {} -> {} ({} re-based onto nearer ancestors, {} new bases)",
         report.max_depth_before,
@@ -452,25 +509,69 @@ fn cmd_verify_pack(root: &Path) -> Result<()> {
         println!("no packs to verify");
         return Ok(());
     }
-    // Structure first: checksums, counts, offset/length agreement.
+    // Structure first: checksums, counts, offset/length agreement. A bad
+    // pack is reported (with the failing pack named and, for entry-level
+    // problems, the offending offset) and the scan continues, so one
+    // corrupt pack doesn't mask others.
     let mut total = 0usize;
+    let mut failures: Vec<String> = Vec::new();
+    let mut structurally_ok: Vec<bool> = Vec::with_capacity(ps.packs().len());
     for p in ps.packs() {
-        p.verify()?;
-        total += p.object_count();
-        println!("pack {}: {} objects, structure ok", p.path.display(), p.object_count());
+        match p.verify() {
+            Ok(()) => {
+                total += p.object_count();
+                println!(
+                    "pack {}: {} objects, structure ok",
+                    p.path.display(),
+                    p.object_count()
+                );
+                structurally_ok.push(true);
+            }
+            Err(e) => {
+                println!("BAD PACK {}: {e:#}", p.path.display());
+                failures.push(format!("{}: {e:#}", p.path.display()));
+                structurally_ok.push(false);
+            }
+        }
     }
     // Content second: each pack's *own copy* of every object (ids may be
     // duplicated across packs after a crash) must still hash to its id
     // once its delta chain — possibly crossing packs / loose staging —
-    // is resolved.
+    // is resolved. Structurally bad packs are skipped (their offsets
+    // can't be trusted), and per-object errors are recorded rather than
+    // aborting, so one corruption never masks another.
     let mut cache: std::collections::HashMap<ObjectId, Vec<f32>> = Default::default();
     let mut checked = 0usize;
     let mut opaque = 0usize;
-    for p in ps.packs() {
+    for (p, ok) in ps.packs().iter().zip(&structurally_ok) {
+        if !ok {
+            continue;
+        }
         for id in p.index.ids().collect::<Vec<_>>() {
-            let bytes = p
-                .get(&id)?
-                .ok_or_else(|| anyhow!("index lists {} but pack lacks it", id.short()))?;
+            let offset = p.index.lookup(&id).map(|(o, _)| o).unwrap_or(0);
+            let bytes = match p.get(&id) {
+                Ok(Some(b)) => b,
+                Ok(None) => {
+                    let msg = format!(
+                        "index lists {} but pack {} lacks it",
+                        id.short(),
+                        p.path.display()
+                    );
+                    println!("BAD OBJECT {msg}");
+                    failures.push(msg);
+                    continue;
+                }
+                Err(e) => {
+                    let msg = format!(
+                        "object {} at offset {offset} in pack {} unreadable: {e:#}",
+                        id.short(),
+                        p.path.display()
+                    );
+                    println!("BAD OBJECT {msg}");
+                    failures.push(msg);
+                    continue;
+                }
+            };
             let obj = match crate::store::format::TensorObject::decode(&bytes) {
                 Ok(o) => o,
                 Err(_) => {
@@ -484,21 +585,36 @@ fn cmd_verify_pack(root: &Path) -> Result<()> {
                     crate::store::hash_tensor(*dtype, &shape, payload)
                 }
                 crate::store::format::TensorObject::Delta { .. } => {
-                    let values =
-                        delta::resolve_object(&repo.store, &obj, &NativeKernel, &mut cache, 0)?;
-                    crate::store::hash_tensor(
-                        crate::tensor::DType::F32,
-                        &shape,
-                        &crate::tensor::f32_to_bytes(&values),
-                    )
+                    match delta::resolve_object(&repo.store, &obj, &NativeKernel, &mut cache, 0)
+                    {
+                        Ok(values) => crate::store::hash_tensor(
+                            crate::tensor::DType::F32,
+                            &shape,
+                            &crate::tensor::f32_to_bytes(&values),
+                        ),
+                        Err(e) => {
+                            let msg = format!(
+                                "object {} at offset {offset} in pack {} has an \
+                                 unresolvable delta chain: {e:#}",
+                                id.short(),
+                                p.path.display()
+                            );
+                            println!("BAD OBJECT {msg}");
+                            failures.push(msg);
+                            continue;
+                        }
+                    }
                 }
             };
             if want != id {
-                bail!(
-                    "object {} in pack {} does not hash to its id",
+                let msg = format!(
+                    "object {} at offset {offset} in pack {} does not hash to its id",
                     id.short(),
                     p.path.display()
                 );
+                println!("BAD OBJECT {msg}");
+                failures.push(msg);
+                continue;
             }
             checked += 1;
             // Ancestor values only help while verifying nearby chain
@@ -507,6 +623,9 @@ fn cmd_verify_pack(root: &Path) -> Result<()> {
                 cache.clear();
             }
         }
+    }
+    if !failures.is_empty() {
+        bail!("verify-pack found {} problems:\n  {}", failures.len(), failures.join("\n  "));
     }
     println!(
         "verify-pack ok: {total} objects in {} packs, {checked} content hashes verified, \

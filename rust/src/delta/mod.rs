@@ -15,6 +15,15 @@
 //!
 //! Chains are recursive: a parent may itself be delta-compressed; loading
 //! resolves the chain up to the first raw ancestor ([`load`]).
+//!
+//! ## Concurrent reconstruction
+//!
+//! The store tier is `Send + Sync` with lock-free pack reads, so chain
+//! reconstruction can fan out across threads: [`load_parallel`] splits a
+//! model's parameters over N resolver threads, and a shared bounded
+//! [`ResolveCache`] keeps concurrent chain walks from redundantly
+//! re-materializing the same raw ancestors (branches in a lineage graph
+//! share base tensors by construction).
 
 pub mod codec;
 pub mod lcs;
@@ -22,6 +31,8 @@ pub mod quant;
 pub mod rle;
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, bail, Result};
 
@@ -37,11 +48,14 @@ use crate::util::json::Json;
 /// A model as stored in the CAS: arch + per-parameter content ids.
 #[derive(Debug, Clone, PartialEq)]
 pub struct StoredModel {
+    /// Architecture name (resolves an `ArchSpec` in the zoo).
     pub arch: String,
+    /// (parameter name, content id) pairs in layout order.
     pub params: Vec<(String, ObjectId)>,
 }
 
 impl StoredModel {
+    /// Serialize for embedding in the lineage graph JSON.
     pub fn to_json(&self) -> Json {
         Json::obj().set("arch", self.arch.as_str()).set(
             "params",
@@ -54,6 +68,7 @@ impl StoredModel {
         )
     }
 
+    /// Parse the [`StoredModel::to_json`] form.
     pub fn from_json(j: &Json) -> Result<StoredModel> {
         let mut params = Vec::new();
         for p in j.req_arr("params")? {
@@ -65,6 +80,7 @@ impl StoredModel {
         Ok(StoredModel { arch: j.req_str("arch")?.to_string(), params })
     }
 
+    /// Content id of the parameter named `name`, if present.
     pub fn param_id(&self, name: &str) -> Option<ObjectId> {
         self.params.iter().find(|(n, _)| n == name).map(|(_, id)| *id)
     }
@@ -101,9 +117,13 @@ pub struct CompressReport {
     pub raw_bytes: u64,
     /// Bytes of objects newly written for this model (dedup hits cost 0).
     pub stored_bytes: u64,
+    /// Parameters in the model's layout.
     pub n_params: usize,
+    /// Parameters stored delta-encoded.
     pub n_delta: usize,
+    /// Parameters stored raw.
     pub n_raw: usize,
+    /// Parameters that were dedup hits (already in the store).
     pub n_dedup: usize,
     /// Max |reconstructed − original| over all delta-encoded elements.
     pub max_abs_err: f64,
@@ -367,36 +387,326 @@ pub fn resolve_object(
     depth: usize,
 ) -> Result<Vec<f32>> {
     match obj {
-        TensorObject::Raw { dtype, payload, .. } => {
-            if *dtype != DType::F32 {
-                bail!("expected f32 tensor object");
-            }
-            Ok(crate::tensor::bytes_to_f32(payload))
-        }
+        TensorObject::Raw { dtype, payload, .. } => raw_values(*dtype, payload),
         TensorObject::Delta { parent, eps, codec, n_quant, grid, payload, .. } => {
             let parent_vals = resolve_tensor(store, *parent, kernel, cache, depth + 1)?;
-            let codec = Codec::from_code(*codec)?;
-            let qbytes = codec.decompress(payload, n_quant * 4)?;
-            let q = bytes_to_i32(&qbytes);
-            if *grid {
-                // Exact grid reconstruction (sparsity-preserving):
-                // rec = (round(parent/step) − q) · step.
-                let step = quant::step(*eps);
-                Ok(parent_vals
-                    .iter()
-                    .zip(&q)
-                    .map(|(&p, &qi)| ((p / step + 0.5).floor() - qi as f32) * step)
-                    .collect())
-            } else {
-                kernel.dequantize(&parent_vals, &q, *eps)
-            }
+            apply_delta(&parent_vals, *eps, *codec, *n_quant, *grid, payload, kernel)
         }
     }
 }
 
+/// Decode a `Raw` object's payload to f32 values. Shared by the serial
+/// and shared-cache resolvers so the two paths cannot drift — ids hash
+/// reconstructed values, so both must stay bit-identical.
+fn raw_values(dtype: DType, payload: &[u8]) -> Result<Vec<f32>> {
+    if dtype != DType::F32 {
+        bail!("expected f32 tensor object");
+    }
+    Ok(crate::tensor::bytes_to_f32(payload))
+}
+
+/// Reconstruct a delta object's values from its (already resolved)
+/// parent values: decompress the quantized payload, then dequantize —
+/// grid mode is the exact sparsity-preserving reconstruction, normal
+/// mode runs the kernel.
+fn apply_delta(
+    parent_vals: &[f32],
+    eps: f32,
+    codec: u8,
+    n_quant: usize,
+    grid: bool,
+    payload: &[u8],
+    kernel: &dyn DeltaKernel,
+) -> Result<Vec<f32>> {
+    let codec = Codec::from_code(codec)?;
+    let qbytes = codec.decompress(payload, n_quant * 4)?;
+    let q = bytes_to_i32(&qbytes);
+    if grid {
+        // Exact grid reconstruction (sparsity-preserving):
+        // rec = (round(parent/step) − q) · step.
+        let step = quant::step(eps);
+        Ok(parent_vals
+            .iter()
+            .zip(&q)
+            .map(|(&p, &qi)| ((p / step + 0.5).floor() - qi as f32) * step)
+            .collect())
+    } else {
+        kernel.dequantize(parent_vals, &q, eps)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Concurrent chain reconstruction
+// ---------------------------------------------------------------------------
+
+/// Bounded, thread-safe cache of resolved tensor values, shared across
+/// concurrent chain walks.
+///
+/// Delta chains in a lineage graph converge on shared ancestors (every
+/// branch of a model family bottoms out in the same pretrained bases),
+/// so concurrent readers resolving different models repeatedly need the
+/// same upstream values. Entries are `Arc`-shared — a hit costs one
+/// clone of the pointer, not of the values — and eviction is
+/// least-recently-used under two bounds: an entry capacity and an
+/// optional byte budget ([`ResolveCache::with_max_bytes`]; tensors are
+/// large, so counting entries alone would not bound peak memory). A hit
+/// refreshes the entry's recency, keeping hot shared bases resident.
+///
+/// Two threads racing to resolve the same object may both do the work
+/// once, but [`ResolveCache::insert`] keeps a single copy and both get
+/// the same `Arc` back; results are deterministic either way.
+pub struct ResolveCache {
+    inner: Mutex<ResolveCacheInner>,
+    capacity: usize,
+    max_bytes: u64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+struct ResolveCacheInner {
+    /// id -> (values, last-used stamp).
+    map: HashMap<ObjectId, (Arc<Vec<f32>>, u64)>,
+    /// Total payload bytes currently cached (4 bytes per f32).
+    bytes: u64,
+    /// Monotonic recency clock.
+    tick: u64,
+}
+
+impl ResolveCache {
+    /// A cache holding at most `capacity` resolved tensors (min 1) with
+    /// no byte budget — use [`ResolveCache::with_max_bytes`] when the
+    /// tensors are large enough that entry count alone can't bound
+    /// memory.
+    pub fn new(capacity: usize) -> ResolveCache {
+        Self::with_max_bytes(capacity, u64::MAX)
+    }
+
+    /// A cache bounded by both entry count and total payload bytes.
+    /// Eviction makes room before each insert; the freshly inserted
+    /// tensor is always kept, so a single tensor larger than the whole
+    /// budget still caches (alone) rather than thrashing.
+    pub fn with_max_bytes(capacity: usize, max_bytes: u64) -> ResolveCache {
+        ResolveCache {
+            inner: Mutex::new(ResolveCacheInner {
+                map: HashMap::new(),
+                bytes: 0,
+                tick: 0,
+            }),
+            capacity: capacity.max(1),
+            max_bytes,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Look up previously resolved values for `id` (refreshing its LRU
+    /// recency on a hit).
+    pub fn get(&self, id: &ObjectId) -> Option<Arc<Vec<f32>>> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        match inner.map.get_mut(id) {
+            Some((v, stamp)) => {
+                *stamp = tick;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(v.clone())
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert resolved values for `id`, evicting least-recently-used
+    /// entries until both the entry and byte bounds hold. If another
+    /// thread inserted `id` first, its copy wins and is returned (one
+    /// shared allocation per object).
+    pub fn insert(&self, id: ObjectId, values: Vec<f32>) -> Arc<Vec<f32>> {
+        let new_bytes = values.len() as u64 * 4;
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some((existing, stamp)) = inner.map.get_mut(&id) {
+            *stamp = tick;
+            return existing.clone();
+        }
+        while !inner.map.is_empty()
+            && (inner.map.len() >= self.capacity
+                || inner.bytes.saturating_add(new_bytes) > self.max_bytes)
+        {
+            // O(capacity) scan, but only on insert under pressure —
+            // cheap next to materializing even one tensor.
+            let oldest = inner
+                .map
+                .iter()
+                .min_by_key(|(_, (_, stamp))| *stamp)
+                .map(|(k, _)| *k);
+            match oldest {
+                Some(k) => {
+                    if let Some((v, _)) = inner.map.remove(&k) {
+                        inner.bytes -= v.len() as u64 * 4;
+                    }
+                }
+                None => break,
+            }
+        }
+        let arc = Arc::new(values);
+        inner.map.insert(id, (arc.clone(), tick));
+        inner.bytes += new_bytes;
+        arc
+    }
+
+    /// Number of currently cached tensors.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    /// Whether the cache is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Cumulative (hits, misses) since construction.
+    pub fn counters(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+
+    /// Fraction of lookups served from cache (0.0 when none happened).
+    pub fn hit_rate(&self) -> f64 {
+        let (h, m) = self.counters();
+        if h + m == 0 {
+            0.0
+        } else {
+            h as f64 / (h + m) as f64
+        }
+    }
+}
+
+/// [`resolve_tensor`] against a shared [`ResolveCache`]: safe to call
+/// from many threads at once over one `&Store`. Returns the cached
+/// `Arc` so hits don't copy tensor values.
+pub fn resolve_tensor_shared(
+    store: &Store,
+    id: ObjectId,
+    kernel: &dyn DeltaKernel,
+    cache: &ResolveCache,
+    depth: usize,
+) -> Result<Arc<Vec<f32>>> {
+    if let Some(v) = cache.get(&id) {
+        return Ok(v);
+    }
+    if depth > 10_000 {
+        bail!("delta chain too deep (cycle?) at {}", id.short());
+    }
+    let obj = TensorObject::decode(&store.get(&id)?)?;
+    let values = match &obj {
+        TensorObject::Raw { dtype, payload, .. } => raw_values(*dtype, payload)?,
+        TensorObject::Delta { parent, eps, codec, n_quant, grid, payload, .. } => {
+            let parent_vals =
+                resolve_tensor_shared(store, *parent, kernel, cache, depth + 1)?;
+            apply_delta(&parent_vals, *eps, *codec, *n_quant, *grid, payload, kernel)?
+        }
+    };
+    Ok(cache.insert(id, values))
+}
+
+/// [`load`] resolving every chain through a shared [`ResolveCache`]
+/// (single-threaded; the cache may be shared with other threads).
+pub fn load_with_cache(
+    store: &Store,
+    zoo: &ModelZoo,
+    model: &StoredModel,
+    kernel: &dyn DeltaKernel,
+    cache: &ResolveCache,
+) -> Result<Checkpoint> {
+    let spec = zoo.arch(&model.arch)?;
+    let mut flat = vec![0f32; spec.param_count];
+    for (name, id) in &model.params {
+        let entry = spec.entry(name)?;
+        let values = resolve_tensor_shared(store, *id, kernel, cache, 0)?;
+        if values.len() != entry.size {
+            bail!(
+                "stored tensor {} has {} elements, layout wants {}",
+                name,
+                values.len(),
+                entry.size
+            );
+        }
+        flat[entry.offset..entry.offset + entry.size].copy_from_slice(&values);
+    }
+    Ok(Checkpoint { arch: model.arch.clone(), flat })
+}
+
+/// Load a stored model with chain reconstruction fanned out over
+/// `threads` resolver threads sharing `cache`.
+///
+/// The parameter list is split into contiguous slabs, one per thread;
+/// each thread cold-resolves its slab's chains against the same `&Store`
+/// (lock-free pack reads) and the merged flat vector is returned. The
+/// result is bit-identical to [`load`]. The kernel must be `Sync`
+/// ([`NativeKernel`] is; pass `threads = 1` to stay single-threaded).
+pub fn load_parallel(
+    store: &Store,
+    zoo: &ModelZoo,
+    model: &StoredModel,
+    kernel: &(dyn DeltaKernel + Sync),
+    cache: &ResolveCache,
+    threads: usize,
+) -> Result<Checkpoint> {
+    let spec = zoo.arch(&model.arch)?;
+    let n = threads.max(1).min(model.params.len().max(1));
+    if n <= 1 {
+        return load_with_cache(store, zoo, model, kernel, cache);
+    }
+    let mut items = Vec::with_capacity(model.params.len());
+    for (name, id) in &model.params {
+        let entry = spec.entry(name)?;
+        items.push((entry.offset, entry.size, *id, name.as_str()));
+    }
+    let chunk = (items.len() + n - 1) / n;
+    let mut flat = vec![0f32; spec.param_count];
+    let results: Vec<Result<Vec<(usize, usize, Arc<Vec<f32>>)>>> =
+        std::thread::scope(|s| {
+            let handles: Vec<_> = items
+                .chunks(chunk)
+                .map(|slab| {
+                    s.spawn(move || -> Result<Vec<(usize, usize, Arc<Vec<f32>>)>> {
+                        slab.iter()
+                            .map(|&(offset, size, id, name)| {
+                                let v =
+                                    resolve_tensor_shared(store, id, kernel, cache, 0)?;
+                                if v.len() != size {
+                                    bail!(
+                                        "stored tensor {} has {} elements, layout \
+                                         wants {}",
+                                        name,
+                                        v.len(),
+                                        size
+                                    );
+                                }
+                                Ok((offset, size, v))
+                            })
+                            .collect()
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("resolver thread panicked"))
+                .collect()
+        });
+    for r in results {
+        for (offset, size, v) in r? {
+            flat[offset..offset + size].copy_from_slice(&v);
+        }
+    }
+    Ok(Checkpoint { arch: model.arch.clone(), flat })
+}
+
 /// Re-encode a tensor's resolved values as a delta against a (usually
 /// nearer) ancestor — the repacker's chain re-basing hook
-/// ([`crate::store::pack::repack`]).
+/// ([`crate::store::pack::repack()`]).
 ///
 /// Object ids name *logical content*, so a re-encoding is only usable if
 /// reconstruction is **bit-exact** (the id keeps matching its content)
@@ -742,6 +1052,100 @@ mod tests {
         )
         .unwrap()
         .is_none());
+    }
+
+    #[test]
+    fn resolve_cache_is_bounded_and_deduped() {
+        let cache = ResolveCache::new(4);
+        for i in 0..20u32 {
+            cache.insert(crate::store::hash_bytes(&i.to_le_bytes()), vec![i as f32]);
+        }
+        assert!(cache.len() <= 4, "cache exceeded its capacity");
+        // The most recent insert survives eviction.
+        let id = crate::store::hash_bytes(&19u32.to_le_bytes());
+        let v = cache.get(&id).expect("most recent entry evicted");
+        assert_eq!(*v, vec![19.0f32]);
+        // Re-inserting an existing id keeps the first copy.
+        let again = cache.insert(id, vec![999.0]);
+        assert_eq!(*again, vec![19.0f32]);
+        let (hits, misses) = cache.counters();
+        assert_eq!(hits, 1);
+        assert!(misses == 0 && cache.hit_rate() == 1.0);
+    }
+
+    #[test]
+    fn resolve_cache_respects_byte_budget() {
+        let id = |i: u32| crate::store::hash_bytes(&i.to_le_bytes());
+        // 100 entries allowed, but only 256 payload bytes (64 f32s).
+        let cache = ResolveCache::with_max_bytes(100, 256);
+        for i in 0..10u32 {
+            cache.insert(id(i), vec![0.0; 16]); // 64 bytes each
+        }
+        assert!(cache.len() <= 4, "byte budget must cap residency");
+        // A tensor bigger than the whole budget still caches (alone).
+        cache.insert(id(999), vec![0.0; 1024]);
+        assert!(cache.get(&id(999)).is_some());
+        assert_eq!(cache.len(), 1);
+    }
+
+    /// Eviction is LRU, not FIFO: a base tensor inserted first but hit
+    /// often must outlive colder, newer entries.
+    #[test]
+    fn resolve_cache_keeps_recently_used_over_older_inserts() {
+        let id = |i: u32| crate::store::hash_bytes(&i.to_le_bytes());
+        let cache = ResolveCache::new(4);
+        for i in 0..4u32 {
+            cache.insert(id(i), vec![i as f32]);
+        }
+        // Touch the oldest entry (a "shared base"), then overflow.
+        assert!(cache.get(&id(0)).is_some());
+        cache.insert(id(100), vec![100.0]);
+        assert!(cache.get(&id(0)).is_some(), "recently used base was evicted");
+        assert!(cache.get(&id(1)).is_none(), "LRU entry must be the one evicted");
+    }
+
+    #[test]
+    fn shared_cache_and_parallel_load_match_serial() {
+        let zoo = big_zoo();
+        let spec = zoo.arch("big").unwrap();
+        let store = Store::in_memory();
+        let cfg = CompressConfig::default();
+        let v0 = Checkpoint::init(spec, 1);
+        let (m0, _) = store_raw(&store, spec, &v0).unwrap();
+        let mut prev_ck = v0;
+        let mut prev_m = m0;
+        for ver in 0..4u64 {
+            let child = perturbed(&prev_ck, 3e-4, 50 + ver);
+            let cand = prepare_delta(
+                &store, spec, &child, spec, &prev_ck, &prev_m, cfg, &NativeKernel,
+            )
+            .unwrap();
+            commit(&store, &cand).unwrap();
+            prev_ck = cand.checkpoint;
+            prev_m = cand.model;
+        }
+        let serial = load(&store, &zoo, &prev_m, &NativeKernel).unwrap();
+        let cache = ResolveCache::new(64);
+        let cached = load_with_cache(&store, &zoo, &prev_m, &NativeKernel, &cache).unwrap();
+        assert_eq!(serial.flat, cached.flat);
+        assert!(!cache.is_empty());
+        let parallel =
+            load_parallel(&store, &zoo, &prev_m, &NativeKernel, &cache, 4).unwrap();
+        assert_eq!(serial.flat, parallel.flat);
+        let (hits, _) = cache.counters();
+        assert!(hits > 0, "second load must hit the shared cache");
+        // Threads sharing one cache resolve concurrently to identical bits.
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let (store, zoo, model, cache, want) =
+                    (&store, &zoo, &prev_m, &cache, &serial);
+                s.spawn(move || {
+                    let got =
+                        load_with_cache(store, zoo, model, &NativeKernel, cache).unwrap();
+                    assert_eq!(got.flat, want.flat);
+                });
+            }
+        });
     }
 
     #[test]

@@ -28,7 +28,9 @@ pub type NodeIdx = usize;
 /// Which edge relation (paper Table 1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum EdgeType {
+    /// "Derived from": fine-tuning, distillation, adaptation…
     Provenance,
+    /// "Next version of": same model re-trained / updated over time.
     Versioning,
 }
 
@@ -69,9 +71,28 @@ impl Node {
     }
 }
 
-/// The lineage graph.
+/// The lineage graph: models as nodes, provenance + versioning edges as
+/// adjacency lists, plus the test registry (everything `.mgit/graph.json`
+/// round-trips).
+///
+/// # Examples
+///
+/// ```
+/// use mgit::lineage::LineageGraph;
+///
+/// let mut g = LineageGraph::new();
+/// let base = g.add_node("bert-base", "tx").unwrap();
+/// let ft = g.add_node("bert-sst2", "tx").unwrap();
+/// g.add_edge(base, ft).unwrap(); // provenance: derived-from
+/// let ft2 = g.add_node("bert-sst2@v2", "tx").unwrap();
+/// g.add_version_edge(ft, ft2).unwrap(); // versioning: next-version-of
+/// assert_eq!(g.next_version(ft), Some(ft2));
+/// assert!(g.is_provenance_ancestor(base, ft));
+/// g.integrity_check().unwrap();
+/// ```
 #[derive(Debug, Clone, Default)]
 pub struct LineageGraph {
+    /// All nodes, index-addressed ([`NodeIdx`]); order is insertion order.
     pub nodes: Vec<Node>,
     by_name: HashMap<String, NodeIdx>,
     /// Registered test functions (serialized with the graph).
@@ -79,6 +100,7 @@ pub struct LineageGraph {
 }
 
 impl LineageGraph {
+    /// An empty graph.
     pub fn new() -> LineageGraph {
         LineageGraph::default()
     }
@@ -87,6 +109,7 @@ impl LineageGraph {
     // Node / edge addition (paper API: add_node, add_edge,
     // add_version_edge, register_creation_function)
     // ------------------------------------------------------------------
+    /// Add a node with a unique `name`; errors on a duplicate.
     pub fn add_node(&mut self, name: &str, model_type: &str) -> Result<NodeIdx> {
         if self.by_name.contains_key(name) {
             bail!("node `{name}` already exists");
@@ -106,6 +129,7 @@ impl LineageGraph {
         }
     }
 
+    /// Index of the node named `name` (error if absent).
     pub fn idx(&self, name: &str) -> Result<NodeIdx> {
         self.by_name
             .get(name)
@@ -113,22 +137,27 @@ impl LineageGraph {
             .ok_or_else(|| anyhow!("no node named `{name}`"))
     }
 
+    /// The node at `idx` (panics on an out-of-range index).
     pub fn node(&self, idx: NodeIdx) -> &Node {
         &self.nodes[idx]
     }
 
+    /// Mutable access to the node at `idx`.
     pub fn node_mut(&mut self, idx: NodeIdx) -> &mut Node {
         &mut self.nodes[idx]
     }
 
+    /// The node named `name` (error if absent).
     pub fn by_name(&self, name: &str) -> Result<&Node> {
         Ok(&self.nodes[self.idx(name)?])
     }
 
+    /// Number of nodes.
     pub fn len(&self) -> usize {
         self.nodes.len()
     }
 
+    /// Whether the graph has no nodes.
     pub fn is_empty(&self) -> bool {
         self.nodes.is_empty()
     }
@@ -189,6 +218,8 @@ impl LineageGraph {
         Ok(())
     }
 
+    /// Attach the declarative creation function that (re-)produces this
+    /// node from its parents (paper API; cascades re-execute it).
     pub fn register_creation_function(&mut self, idx: NodeIdx, cr: CreationSpec) -> Result<()> {
         self.check_idx(idx)?;
         self.nodes[idx].creation = Some(cr);
@@ -198,6 +229,7 @@ impl LineageGraph {
     // ------------------------------------------------------------------
     // Removal (paper API: remove_edge, remove_node)
     // ------------------------------------------------------------------
+    /// Remove the `ty` edge `parent -> child` (error if no such edge).
     pub fn remove_edge(&mut self, parent: NodeIdx, child: NodeIdx, ty: EdgeType) -> Result<()> {
         self.check_idx(parent)?;
         self.check_idx(child)?;
@@ -313,6 +345,7 @@ impl LineageGraph {
         self.nodes[idx].ver_children.last().copied()
     }
 
+    /// get_prev_version(x): the node this one is the next version of.
     pub fn prev_version(&self, idx: NodeIdx) -> Option<NodeIdx> {
         self.nodes[idx].ver_parents.first().copied()
     }
@@ -337,6 +370,7 @@ impl LineageGraph {
         false
     }
 
+    /// Whether `anc` is reachable from `of` walking provenance edges up.
     pub fn is_provenance_ancestor(&self, anc: NodeIdx, of: NodeIdx) -> bool {
         let mut stack = vec![of];
         let mut seen = vec![false; self.nodes.len()];
@@ -453,6 +487,8 @@ impl LineageGraph {
     // ------------------------------------------------------------------
     // Serialization
     // ------------------------------------------------------------------
+    /// Serialize the whole graph (nodes, edges, stored-model pointers,
+    /// creation specs, metadata, test registry) to JSON.
     pub fn to_json(&self) -> Json {
         let nodes: Vec<Json> = self
             .nodes
@@ -485,6 +521,8 @@ impl LineageGraph {
             .set("tests", self.tests.to_json())
     }
 
+    /// Rebuild a graph from [`LineageGraph::to_json`] output, re-running
+    /// the integrity check.
     pub fn from_json(j: &Json) -> Result<LineageGraph> {
         let mut g = LineageGraph::new();
         let nodes = j.req_arr("nodes")?;
@@ -518,6 +556,7 @@ impl LineageGraph {
         Ok(g)
     }
 
+    /// Serialize to `path` atomically (write-to-temp + rename).
     pub fn save(&self, path: &Path) -> Result<()> {
         let text = self.to_json().to_string_pretty();
         if let Some(parent) = path.parent() {
@@ -529,6 +568,7 @@ impl LineageGraph {
         Ok(())
     }
 
+    /// Load a graph previously [`LineageGraph::save`]d.
     pub fn load(path: &Path) -> Result<LineageGraph> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading lineage graph {}", path.display()))?;

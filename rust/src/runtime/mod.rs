@@ -2,12 +2,12 @@
 //!
 //! Two interchangeable backends expose the same `Runtime` API:
 //!
-//! * **PJRT** ([`pjrt`], behind the `pjrt` cargo feature) — loads the
+//! * **PJRT** (`pjrt.rs`, behind the `pjrt` cargo feature) — loads the
 //!   AOT-compiled HLO artifacts (L2 model steps + L1 Pallas delta
 //!   kernels) and executes them on the CPU PJRT client via the `xla`
 //!   bindings crate. This is the paper-faithful hot path; it needs
 //!   `make artifacts` and libxla.
-//! * **Native fallback** ([`native`], the default) — compiled when the
+//! * **Native fallback** (`native.rs`, the default) — compiled when the
 //!   `xla` crate is unavailable (the offline build). It loads the same
 //!   manifest and implements the delta kernels with the bit-compatible
 //!   native oracle ([`crate::delta::quant::NativeKernel`]), so every

@@ -19,7 +19,8 @@
 //!
 //! Each delta-compressed parameter is stored "as the compressed delta along
 //! with a pointer to the parent layer" (paper §4); chains are resolved
-//! recursively by [`crate::delta::Pipeline::load_tensor`].
+//! recursively by [`crate::delta::resolve_tensor`] (or its thread-safe
+//! sibling [`crate::delta::resolve_tensor_shared`]).
 
 use anyhow::{bail, Result};
 

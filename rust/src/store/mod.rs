@@ -16,9 +16,11 @@
 //!   fan-out (`.mgit/objects/aa/…`);
 //! * [`PackedStore`] — loose staging directory + any number of
 //!   append-only [`pack`] files with binary-searchable indexes. Lookups
-//!   are loose-first, then across packs (duplicate ids across packs are
-//!   value-identical by content addressing); writes always land loose
-//!   (packs are produced by [`pack::repack`]).
+//!   are loose-first, then across packs newest-first (duplicate ids
+//!   across packs are value-identical by content addressing); writes
+//!   always land loose (packs are produced by [`pack::repack()`],
+//!   incrementally by default, so a long-lived store accumulates
+//!   generations of packs).
 //!
 //! The [`Store`] façade wraps one backend behind a stable API so the
 //! `lineage`, `delta`, `checkpoint` and `workloads` layers are
@@ -27,6 +29,26 @@
 //! payload-agnostic); delta-parent references are strong: GC *aborts*
 //! rather than sweep when a live object is unreadable, because sweeping
 //! around a missing mid-chain object would corrupt every chain below it.
+//!
+//! ## Thread safety
+//!
+//! [`ObjectStore`] requires `Send + Sync`, and every backend — and the
+//! [`Store`] façade itself — satisfies it, so one store handle can be
+//! shared by reference across reader threads (chain reconstruction fans
+//! out in [`crate::delta::load_parallel`]):
+//!
+//! * [`MemStore`] serializes through an internal mutex;
+//! * [`DiskStore`] holds no mutable state (the filesystem coordinates);
+//! * [`PackedStore`] reads packs lock-free via memory-mapped
+//!   [`pack::PackMmap`] readers — concurrent pack reads never contend.
+//!
+//! Writes are safe from any thread; loose writes are atomic (each `put`
+//! stages to a private temp file, then renames), so readers never see a
+//! partial object and concurrent `put`s of the same id are
+//! content-idempotent — in a rare tie both racers may report "newly
+//! written" (overcounting the byte counters slightly) but the stored
+//! bytes are identical either way. Mutating the *pack set* (repack/GC)
+//! takes `&mut` and therefore still requires exclusive ownership.
 
 pub mod format;
 pub mod pack;
@@ -45,14 +67,17 @@ use sha2::{Digest, Sha256};
 pub struct ObjectId(pub [u8; 32]);
 
 impl ObjectId {
+    /// Full 64-char lowercase hex form.
     pub fn hex(&self) -> String {
         self.0.iter().map(|b| format!("{b:02x}")).collect()
     }
 
+    /// Abbreviated 12-char hex form (log/error messages).
     pub fn short(&self) -> String {
         self.hex()[..12].to_string()
     }
 
+    /// Parse the full 64-char hex form back into an id.
     pub fn from_hex(s: &str) -> Result<ObjectId> {
         if s.len() != 64 {
             bail!("object id must be 64 hex chars, got {}", s.len());
@@ -103,13 +128,19 @@ pub fn hash_tensor(dtype: crate::tensor::DType, shape: &[usize], payload: &[u8])
 /// Uniform object-storage interface implemented by every backend.
 ///
 /// Ids name *logical* content; `put` of an existing id is a dedup no-op.
-pub trait ObjectStore {
+/// The `Send + Sync` bound is part of the contract: any backend must be
+/// shareable by reference across threads (see the module docs).
+pub trait ObjectStore: Send + Sync {
+    /// Fetch the payload stored under `id` (error if absent).
     fn get(&self, id: &ObjectId) -> Result<Vec<u8>>;
     /// Store `bytes` under `id`; `true` if newly written, `false` on a
     /// dedup hit.
     fn put(&self, id: ObjectId, bytes: &[u8]) -> Result<bool>;
+    /// Whether `id` is present (loose or packed).
     fn contains(&self, id: &ObjectId) -> bool;
+    /// Every object id in the store (deduplicated across locations).
     fn list(&self) -> Result<Vec<ObjectId>>;
+    /// Number of distinct objects.
     fn len(&self) -> Result<usize> {
         Ok(self.list()?.len())
     }
@@ -185,10 +216,34 @@ pub struct DiskStore {
 }
 
 impl DiskStore {
+    /// Open (creating if needed) a loose store rooted at `dir`. Stale
+    /// `*.tmp*` staging files from puts that crashed mid-write are swept
+    /// here: open happens before any reader/writer threads exist, and
+    /// repository operations are per-invocation single-writer, so nothing
+    /// in-flight can own them.
     pub fn open(dir: &Path) -> Result<DiskStore> {
         std::fs::create_dir_all(dir)
             .with_context(|| format!("creating object store at {}", dir.display()))?;
-        Ok(DiskStore { root: dir.to_path_buf() })
+        let store = DiskStore { root: dir.to_path_buf() };
+        store.sweep_stale_tmp();
+        Ok(store)
+    }
+
+    /// Best-effort removal of orphaned put-staging files (crash debris).
+    fn sweep_stale_tmp(&self) {
+        let Ok(fans) = std::fs::read_dir(&self.root) else { return };
+        for fan in fans.filter_map(|e| e.ok()) {
+            let name = fan.file_name().to_string_lossy().to_string();
+            if name.len() != 2 || !fan.path().is_dir() {
+                continue; // reserved dirs ("pack"), strays
+            }
+            let Ok(objs) = std::fs::read_dir(fan.path()) else { continue };
+            for obj in objs.filter_map(|e| e.ok()) {
+                if obj.file_name().to_string_lossy().contains(".tmp") {
+                    let _ = std::fs::remove_file(obj.path());
+                }
+            }
+        }
     }
 
     pub fn root(&self) -> &Path {
@@ -213,8 +268,13 @@ impl ObjectStore for DiskStore {
         }
         let path = self.path_for(&id);
         std::fs::create_dir_all(path.parent().unwrap())?;
-        // Write-then-rename for atomicity.
-        let tmp = path.with_extension("tmp");
+        // Write-then-rename for atomicity. The temp name is unique per
+        // call: two threads putting the same id concurrently must not
+        // clobber each other's staging file (each rename is then an
+        // atomic replace of identical content — a benign last-wins).
+        static PUT_SEQ: AtomicU64 = AtomicU64::new(0);
+        let seq = PUT_SEQ.fetch_add(1, Ordering::Relaxed);
+        let tmp = path.with_extension(format!("tmp{}-{seq}", std::process::id()));
         std::fs::write(&tmp, bytes)?;
         std::fs::rename(&tmp, &path)?;
         Ok(true)
@@ -240,8 +300,8 @@ impl ObjectStore for DiskStore {
             }
             for obj in std::fs::read_dir(fan.path())? {
                 let name = obj?.file_name().to_string_lossy().to_string();
-                if name.ends_with(".tmp") {
-                    continue;
+                if name.contains(".tmp") {
+                    continue; // in-flight staging files
                 }
                 if let Ok(id) = ObjectId::from_hex(&format!("{prefix}{name}")) {
                     out.push(id);
@@ -274,10 +334,12 @@ impl ObjectStore for DiskStore {
 // ---------------------------------------------------------------------------
 
 /// Loose-first backend with pack files: reads check the loose staging
-/// area, then every pack index (deterministic content-hash filename
-/// order — ids name identical logical content, so any copy serves);
-/// writes always land loose. [`pack::repack`] migrates loose objects
-/// into packs.
+/// area, then every pack index newest-first (on open, packs load in
+/// deterministic content-hash filename order; incremental repacks append
+/// newer generations — ids name identical logical content, so any copy
+/// serves); writes always land loose. [`pack::repack()`] migrates loose
+/// objects into packs. Reads are lock-free end to end: the loose path
+/// is one `read(2)` and the pack path is a [`pack::PackMmap`] copy.
 pub struct PackedStore {
     loose: DiskStore,
     packs: Vec<pack::PackFile>,
@@ -314,14 +376,17 @@ impl PackedStore {
         Ok(PackedStore { loose, packs, root: dir.to_path_buf() })
     }
 
+    /// Directory holding `*.pack` / `*.idx` files (`<root>/pack`).
     pub fn pack_dir(&self) -> PathBuf {
         self.root.join("pack")
     }
 
+    /// The loose staging area underneath this store.
     pub fn loose(&self) -> &DiskStore {
         &self.loose
     }
 
+    /// All loaded packs, oldest generation first.
     pub fn packs(&self) -> &[pack::PackFile] {
         &self.packs
     }
@@ -345,6 +410,24 @@ impl PackedStore {
     pub(crate) fn replace_packs(&mut self, packs: Vec<pack::PackFile>) {
         self.packs = packs;
     }
+
+    /// Append a freshly sealed pack as the newest generation (incremental
+    /// repack); reads prefer newer packs, though any copy of an id is
+    /// value-identical by content addressing.
+    pub(crate) fn add_pack(&mut self, p: pack::PackFile) {
+        self.packs.push(p);
+    }
+}
+
+// Compile-time proof of the module-doc thread-safety claims: the façade
+// and every backend must be shareable across reader threads.
+#[allow(dead_code)]
+fn _assert_store_types_send_sync() {
+    fn check<T: Send + Sync>() {}
+    check::<MemStore>();
+    check::<DiskStore>();
+    check::<PackedStore>();
+    check::<Store>();
 }
 
 impl ObjectStore for PackedStore {
@@ -435,8 +518,26 @@ enum BackendImpl {
 }
 
 /// Backend-agnostic handle used by all higher layers.
+///
+/// `Store` is `Send + Sync`: share it by reference across reader threads
+/// (see the module docs for the per-backend guarantees).
+///
+/// # Examples
+///
+/// ```
+/// use mgit::store::Store;
+///
+/// let store = Store::in_memory();
+/// let id = store.put_blob(b"tensor bytes").unwrap();
+/// assert!(store.has(&id));
+/// assert_eq!(store.get(&id).unwrap(), b"tensor bytes");
+/// // A second put of identical content is a dedup hit, not a write.
+/// assert!(!store.put(id, b"tensor bytes").unwrap());
+/// ```
 pub struct Store {
     backend: BackendImpl,
+    /// In-process put/dedup/byte counters (drained by the CLI into
+    /// `.mgit/stats.json`).
     pub stats: StoreStats,
 }
 
@@ -507,19 +608,24 @@ impl Store {
         Ok(id)
     }
 
+    /// Fetch the payload stored under `id` (error if absent).
     pub fn get(&self, id: &ObjectId) -> Result<Vec<u8>> {
         self.obj().get(id)
     }
 
+    /// Whether `id` is present in the backend.
     pub fn has(&self, id: &ObjectId) -> bool {
         self.obj().contains(id)
     }
 
+    /// Remove the mutable copy of `id` if one exists (packed copies are
+    /// immutable; see [`ObjectStore::remove`]).
     pub fn remove(&self, id: &ObjectId) -> Result<()> {
         self.obj().remove(id)?;
         Ok(())
     }
 
+    /// Every object id in the store.
     pub fn list(&self) -> Result<Vec<ObjectId>> {
         self.obj().list()
     }

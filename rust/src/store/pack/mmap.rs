@@ -1,0 +1,277 @@
+//! Lock-free random-access readers over sealed pack files.
+//!
+//! PR 1 guarded every pack read with a `Mutex<File>` around `seek` +
+//! `read_exact`, which serialized all readers of a pack — exactly the
+//! wrong shape for the request-serving layer, where many threads cold-
+//! materialize checkpoints from the same shared packs. Packs are sealed
+//! and immutable once renamed to their content hash, so concurrent reads
+//! need no coordination at all; what was missing is a positionless read
+//! primitive. [`PackMmap`] provides one, picked at compile time:
+//!
+//! * **mmap** (`unix` + the default `mmap` feature) — the pack is
+//!   memory-mapped read-only once at open; a read is a bounds-checked
+//!   `memcpy` out of the mapping and the OS page cache is shared across
+//!   every open handle of the same pack.
+//! * **pread** (`unix` without the `mmap` feature) — positional
+//!   `read_exact_at` on a shared file descriptor; the kernel offset is
+//!   per-call, so readers never contend.
+//! * **locked** (non-unix) — the portable last resort: `seek` +
+//!   `read_exact` behind a mutex, i.e. the pre-concurrent behaviour.
+//!
+//! All three expose the same API and all three are `Send + Sync`, which
+//! is what lets [`super::PackFile`], `PackedStore` and the `Store` façade
+//! be shared freely across threads.
+
+use std::fs::File;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// A sealed pack's bytes, readable at arbitrary offsets without locking
+/// (memory-mapped by default; see the module docs for the fallbacks).
+pub struct PackMmap {
+    imp: imp::Reader,
+    len: u64,
+}
+
+impl PackMmap {
+    /// Open `path` for lock-free random-access reads.
+    pub fn open(path: &Path) -> Result<PackMmap> {
+        let file = File::open(path)
+            .with_context(|| format!("opening pack {}", path.display()))?;
+        let len = file
+            .metadata()
+            .with_context(|| format!("stat pack {}", path.display()))?
+            .len();
+        let imp = imp::Reader::new(file, len)
+            .with_context(|| format!("mapping pack {}", path.display()))?;
+        Ok(PackMmap { imp, len })
+    }
+
+    /// Total file length in bytes.
+    pub fn len(&self) -> u64 {
+        self.len
+    }
+
+    /// `true` for a zero-length file (never the case for a sealed pack).
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Which read strategy this build uses: `"mmap"`, `"pread"` or
+    /// `"locked"`.
+    pub fn kind(&self) -> &'static str {
+        imp::KIND
+    }
+
+    /// Read exactly `len` bytes starting at `offset`. Bounds are checked
+    /// against the file length before the backend is consulted.
+    pub fn read_at(&self, offset: u64, len: usize) -> Result<Vec<u8>> {
+        let end = offset
+            .checked_add(len as u64)
+            .ok_or_else(|| anyhow::anyhow!("pack read range overflows"))?;
+        if end > self.len {
+            bail!(
+                "pack read out of bounds: offset {offset} + len {len} > file size {}",
+                self.len
+            );
+        }
+        if len == 0 {
+            // Never reaches a backend: the mmap reader's pointer may be
+            // null for a zero-length file, and even an empty slice must
+            // not be built from a null pointer.
+            return Ok(Vec::new());
+        }
+        self.imp.read_at(offset, len)
+    }
+}
+
+#[cfg(all(unix, feature = "mmap"))]
+mod imp {
+    use std::fs::File;
+    use std::os::unix::io::AsRawFd;
+
+    use anyhow::Result;
+
+    pub const KIND: &str = "mmap";
+
+    /// Read-only `mmap(2)` of the whole pack. The mapping outlives the
+    /// file descriptor, so the `File` is dropped after mapping.
+    pub struct Reader {
+        ptr: *mut libc::c_void,
+        len: usize,
+    }
+
+    // SAFETY: the mapping is PROT_READ over a sealed, immutable file and
+    // the raw pointer is only ever read through `read_at`'s bounds-checked
+    // copies; no interior mutation exists to race on.
+    unsafe impl Send for Reader {}
+    unsafe impl Sync for Reader {}
+
+    impl Reader {
+        pub fn new(file: File, len: u64) -> Result<Reader> {
+            // Explicit conversion: on 32-bit targets a >4 GiB pack must
+            // fail loudly, not silently map a truncated prefix.
+            let len = usize::try_from(len)
+                .map_err(|_| anyhow::anyhow!("pack too large to mmap on this platform"))?;
+            if len == 0 {
+                // mmap(2) rejects zero-length maps; a null reader is fine
+                // because PackMmap bounds-checks every read first.
+                return Ok(Reader { ptr: std::ptr::null_mut(), len: 0 });
+            }
+            let ptr = unsafe {
+                libc::mmap(
+                    std::ptr::null_mut(),
+                    len,
+                    libc::PROT_READ,
+                    libc::MAP_SHARED,
+                    file.as_raw_fd(),
+                    0,
+                )
+            };
+            if ptr == libc::MAP_FAILED {
+                return Err(anyhow::anyhow!(
+                    "mmap failed: {}",
+                    std::io::Error::last_os_error()
+                ));
+            }
+            Ok(Reader { ptr, len })
+        }
+
+        pub fn read_at(&self, offset: u64, len: usize) -> Result<Vec<u8>> {
+            // Caller (PackMmap::read_at) has bounds-checked offset + len.
+            let src = unsafe {
+                std::slice::from_raw_parts(
+                    (self.ptr as *const u8).add(offset as usize),
+                    len,
+                )
+            };
+            Ok(src.to_vec())
+        }
+    }
+
+    impl Drop for Reader {
+        fn drop(&mut self) {
+            if !self.ptr.is_null() {
+                unsafe {
+                    libc::munmap(self.ptr, self.len);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(all(unix, not(feature = "mmap")))]
+mod imp {
+    use std::fs::File;
+    use std::os::unix::fs::FileExt;
+
+    use anyhow::{Context, Result};
+
+    pub const KIND: &str = "pread";
+
+    /// Positional reads (`pread(2)`): the offset travels with each call,
+    /// so a single shared descriptor serves any number of threads.
+    pub struct Reader {
+        file: File,
+    }
+
+    impl Reader {
+        pub fn new(file: File, _len: u64) -> Result<Reader> {
+            Ok(Reader { file })
+        }
+
+        pub fn read_at(&self, offset: u64, len: usize) -> Result<Vec<u8>> {
+            let mut buf = vec![0u8; len];
+            self.file
+                .read_exact_at(&mut buf, offset)
+                .context("short positional read in pack")?;
+            Ok(buf)
+        }
+    }
+}
+
+#[cfg(not(unix))]
+mod imp {
+    use std::fs::File;
+    use std::io::{Read, Seek, SeekFrom};
+    use std::sync::Mutex;
+
+    use anyhow::{Context, Result};
+
+    pub const KIND: &str = "locked";
+
+    /// Portable fallback: seek + read behind a mutex (serialized reads,
+    /// the pre-concurrent behaviour).
+    pub struct Reader {
+        file: Mutex<File>,
+    }
+
+    impl Reader {
+        pub fn new(file: File, _len: u64) -> Result<Reader> {
+            Ok(Reader { file: Mutex::new(file) })
+        }
+
+        pub fn read_at(&self, offset: u64, len: usize) -> Result<Vec<u8>> {
+            let mut f = self.file.lock().unwrap();
+            f.seek(SeekFrom::Start(offset))?;
+            let mut buf = vec![0u8; len];
+            f.read_exact(&mut buf).context("short read in pack")?;
+            Ok(buf)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn read_at_roundtrip_and_bounds() {
+        let dir = std::env::temp_dir()
+            .join(format!("mgit-mmap-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("data.bin");
+        let payload: Vec<u8> = (0..=255u8).collect();
+        std::fs::write(&path, &payload).unwrap();
+
+        let m = PackMmap::open(&path).unwrap();
+        assert_eq!(m.len(), 256);
+        assert!(!m.is_empty());
+        assert_eq!(m.read_at(0, 4).unwrap(), &payload[..4]);
+        assert_eq!(m.read_at(100, 56).unwrap(), &payload[100..156]);
+        assert_eq!(m.read_at(255, 1).unwrap(), &payload[255..]);
+        assert_eq!(m.read_at(256, 0).unwrap(), Vec::<u8>::new());
+        assert!(m.read_at(250, 7).is_err(), "read past EOF must fail");
+        assert!(m.read_at(u64::MAX, 2).is_err(), "overflow must fail");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn concurrent_readers_see_identical_bytes() {
+        let dir = std::env::temp_dir()
+            .join(format!("mgit-mmap-conc-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("data.bin");
+        let payload: Vec<u8> = (0..4096u32).flat_map(|i| i.to_le_bytes()).collect();
+        std::fs::write(&path, &payload).unwrap();
+
+        let m = PackMmap::open(&path).unwrap();
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let m = &m;
+                let payload = &payload;
+                s.spawn(move || {
+                    for i in 0..200usize {
+                        let off = ((t * 997 + i * 131) % 4000) * 4;
+                        let got = m.read_at(off as u64, 64).unwrap();
+                        assert_eq!(&got[..], &payload[off..off + 64]);
+                    }
+                });
+            }
+        });
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -35,23 +35,25 @@
 //! ```
 //!
 //! Lookup is fanout-bucketed binary search ([`PackIndex::lookup`]);
-//! object reads are a single seek+read ([`PackFile::get`]). Packs are
-//! immutable once finished: [`PackWriter`] streams objects into a temp
-//! file, then renames it to its content hash. Compaction/chain re-basing
-//! lives in [`repack`].
+//! object reads are lock-free bounds-checked copies out of a
+//! memory-mapped (or positionally-read) pack ([`PackFile::get`] over
+//! [`PackMmap`]), so any number of threads can read one pack
+//! concurrently. Packs are immutable once finished: [`PackWriter`]
+//! streams objects into a temp file, then renames it to its content
+//! hash. Compaction/chain re-basing lives in [`repack()`].
 
+mod mmap;
 mod repack;
 mod writer;
 
+pub use mmap::PackMmap;
 pub use repack::{
-    chain_depths, chain_depths_from_parents, repack, RepackConfig, RepackReport,
+    chain_depths, chain_depths_from_parents, repack, RepackConfig, RepackMode,
+    RepackReport,
 };
 pub use writer::PackWriter;
 
-use std::fs::File;
-use std::io::{Read, Seek, SeekFrom};
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
 
 use anyhow::{bail, Context, Result};
 use sha2::{Digest, Sha256};
@@ -188,11 +190,17 @@ impl PackIndex {
     }
 }
 
-/// An open pack: its index plus a shared read handle.
+/// An open pack: its index plus a lock-free reader over the pack bytes.
+///
+/// `PackFile` is `Send + Sync`: the index is immutable after load and
+/// [`PackMmap`] reads need no coordination, so one handle serves any
+/// number of concurrent reader threads without serializing them.
 pub struct PackFile {
+    /// Path of the sealed `.pack` file.
     pub path: PathBuf,
+    /// The sidecar fan-out index.
     pub index: PackIndex,
-    file: Mutex<File>,
+    data: PackMmap,
 }
 
 impl PackFile {
@@ -201,12 +209,13 @@ impl PackFile {
         pack_path.with_extension("idx")
     }
 
+    /// Open a sealed pack: load its index, map the pack bytes, and
+    /// validate the header magic + version.
     pub fn open(pack_path: &Path) -> Result<PackFile> {
         let index = PackIndex::load(&Self::idx_path(pack_path))?;
-        let mut file = File::open(pack_path)
-            .with_context(|| format!("opening pack {}", pack_path.display()))?;
-        let mut header = [0u8; 5];
-        file.read_exact(&mut header)
+        let data = PackMmap::open(pack_path)?;
+        let header = data
+            .read_at(0, HEADER_LEN as usize)
             .with_context(|| format!("reading pack header {}", pack_path.display()))?;
         if &header[..4] != PACK_MAGIC {
             bail!("{} is not an MGPK pack", pack_path.display());
@@ -214,28 +223,44 @@ impl PackFile {
         if header[4] != VERSION {
             bail!("unsupported pack version {}", header[4]);
         }
-        Ok(PackFile { path: pack_path.to_path_buf(), index, file: Mutex::new(file) })
+        Ok(PackFile { path: pack_path.to_path_buf(), index, data })
     }
 
+    /// Whether this pack holds `id` (index-only; the pack is untouched).
     pub fn contains(&self, id: &ObjectId) -> bool {
         self.index.lookup(id).is_some()
     }
 
     /// Read one object; `Ok(None)` if this pack doesn't hold `id`.
+    /// Lock-free: concurrent `get`s never wait on each other.
     pub fn get(&self, id: &ObjectId) -> Result<Option<Vec<u8>>> {
         let Some((offset, len)) = self.index.lookup(id) else {
             return Ok(None);
         };
-        let mut f = self.file.lock().unwrap();
-        f.seek(SeekFrom::Start(offset))?;
-        let mut buf = vec![0u8; len as usize];
-        f.read_exact(&mut buf)
-            .with_context(|| format!("short read in pack {}", self.path.display()))?;
+        let buf = self.data.read_at(offset, len as usize).with_context(|| {
+            format!(
+                "reading object {} at offset {offset} in pack {}",
+                id.short(),
+                self.path.display()
+            )
+        })?;
         Ok(Some(buf))
     }
 
+    /// Number of objects in this pack.
     pub fn object_count(&self) -> usize {
         self.index.len()
+    }
+
+    /// Total pack file size in bytes (header + objects + trailer).
+    pub fn size_bytes(&self) -> u64 {
+        self.data.len()
+    }
+
+    /// The read strategy backing this pack: `"mmap"`, `"pread"` or
+    /// `"locked"` (see [`PackMmap::kind`]).
+    pub fn reader_kind(&self) -> &'static str {
+        self.data.kind()
     }
 
     /// Structural verification: trailer checksum, entry count, and that
@@ -258,10 +283,18 @@ impl PackFile {
         h.update(&bytes[..body_end]);
         let sha: [u8; 32] = h.finalize().into();
         if sha != bytes[body_end..] {
-            bail!("pack {} checksum mismatch", self.path.display());
+            bail!(
+                "pack {} checksum mismatch over bytes 0..{body_end} \
+                 (trailer at offset {body_end} does not match the body)",
+                self.path.display()
+            );
         }
         if sha != self.index.pack_sha {
-            bail!("index/pack checksum mismatch for {}", self.path.display());
+            bail!(
+                "index/pack checksum mismatch for {} (the .idx sidecar was \
+                 written for a different pack body)",
+                self.path.display()
+            );
         }
         let count_off = (total - TRAILER_LEN) as usize;
         let count =
@@ -276,14 +309,23 @@ impl PackFile {
         }
         for e in &self.index.entries {
             if e.offset < HEADER_LEN + 8 || e.offset + e.len > total - TRAILER_LEN {
-                bail!("index entry {} out of pack bounds", e.id.short());
+                bail!(
+                    "index entry {} (offset {}, len {}) out of bounds in pack {}",
+                    e.id.short(),
+                    e.offset,
+                    e.len,
+                    self.path.display()
+                );
             }
             let lp = (e.offset - 8) as usize;
             let len = u64::from_le_bytes(bytes[lp..lp + 8].try_into().unwrap());
             if len != e.len {
                 bail!(
-                    "length prefix mismatch for {} ({} vs {})",
+                    "length prefix mismatch for {} at offset {} in pack {} \
+                     ({} vs {})",
                     e.id.short(),
+                    e.offset,
+                    self.path.display(),
                     len,
                     e.len
                 );
@@ -291,6 +333,17 @@ impl PackFile {
         }
         Ok(())
     }
+}
+
+// Compile-time proof that the concurrent read tier is actually shareable:
+// the whole pack layer must be Send + Sync for `PackedStore`/`Store` to
+// fan chain reconstruction out across threads.
+#[allow(dead_code)]
+fn _assert_pack_types_send_sync() {
+    fn check<T: Send + Sync>() {}
+    check::<PackMmap>();
+    check::<PackIndex>();
+    check::<PackFile>();
 }
 
 struct ByteReader<'a> {

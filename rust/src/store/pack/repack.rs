@@ -1,10 +1,27 @@
-//! Repacking: migrate live objects into a single compact pack, re-basing
-//! over-deep delta chains on the way.
+//! Repacking: migrate live objects into packs, re-basing over-deep delta
+//! chains on the way.
 //!
 //! Liveness is defined by the lineage graph: the caller passes every
 //! object id referenced by a stored model (see
 //! `LineageGraph::object_roots`), and the repacker walks delta-parent
 //! references transitively, exactly like GC marking.
+//!
+//! ## Modes
+//!
+//! * [`RepackMode::Incremental`] (the CLI default) packs **only live
+//!   loose objects** into one fresh pack and leaves every existing pack
+//!   untouched — re-encoding and pack-write cost is proportional to what
+//!   changed since the last repack, not to store size (the liveness mark
+//!   still reads each live object once to follow parent pointers; making
+//!   that walk metadata-only is a roadmap item). New deltas re-base against
+//!   already-packed ancestors exactly as in a full repack (cross-pack
+//!   parent references are first-class), so the chain-depth cap holds
+//!   for everything newly packed; chains living entirely inside old
+//!   packs keep their depth until the next full repack. Repeated
+//!   incremental repacks grow a *generation* of packs, oldest first.
+//! * [`RepackMode::Full`] rewrites the whole store into a single pack
+//!   (the original behaviour): every live chain is depth-capped, dead
+//!   packed objects are carried or pruned, and old packs are deleted.
 //!
 //! ## Chain re-basing
 //!
@@ -27,11 +44,12 @@
 //! Either way every previously readable id stays readable and resolves
 //! to identical bytes, and no live chain exceeds `max_chain_depth`.
 //!
-//! After the new pack is sealed, old packs are deleted, loose copies of
-//! packed objects are removed (the loose directory becomes a pure
-//! write-staging area), and with [`RepackConfig::prune`] unreachable
-//! objects are dropped entirely; without it, dead packed objects are
-//! carried over verbatim and dead loose objects are left in place.
+//! After the new pack is sealed, old packs are deleted (full mode only),
+//! loose copies of packed objects are removed (the loose directory
+//! becomes a pure write-staging area), and with [`RepackConfig::prune`]
+//! unreachable objects are dropped entirely; without it, dead packed
+//! objects are carried over verbatim (full mode) and dead loose objects
+//! are left in place.
 
 use std::collections::{HashMap, HashSet};
 use std::path::PathBuf;
@@ -44,26 +62,44 @@ use crate::store::format::TensorObject;
 use crate::store::{ObjectId, ObjectStore, Store};
 use crate::tensor::f32_to_bytes;
 
+/// Whether a repack rewrites everything or only packs new loose objects.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RepackMode {
+    /// Pack only live loose objects into one fresh pack; existing packs
+    /// are left untouched (cost ∝ new data).
+    Incremental,
+    /// Rewrite the whole store into a single pack (cost ∝ store size).
+    Full,
+}
+
+/// Tuning for [`repack()`].
 #[derive(Debug, Clone, Copy)]
 pub struct RepackConfig {
     /// Longest allowed delta chain after repacking (≥ 1).
     pub max_chain_depth: usize,
-    /// Drop unreachable objects instead of carrying them over.
+    /// Drop unreachable objects instead of carrying them over. In
+    /// incremental mode only unreachable *loose* objects can be dropped;
+    /// packed garbage needs a full repack to reclaim.
     pub prune: bool,
+    /// Incremental (pack only new loose objects) or full rewrite.
+    pub mode: RepackMode,
 }
 
 impl Default for RepackConfig {
     fn default() -> Self {
         // SNIPPETS.md chain-depth guidance: 1–10 reconstructs fast.
-        RepackConfig { max_chain_depth: 8, prune: false }
+        RepackConfig { max_chain_depth: 8, prune: false, mode: RepackMode::Incremental }
     }
 }
 
+/// What one [`repack()`] run did (counts, byte deltas, depth changes).
 #[derive(Debug, Default)]
 pub struct RepackReport {
     /// Live objects written into the new pack.
     pub packed: usize,
-    /// Unreachable packed objects carried over (prune off).
+    /// Live objects left in place inside existing packs (incremental).
+    pub retained_packed: usize,
+    /// Unreachable packed objects carried over (full mode, prune off).
     pub carried_dead: usize,
     /// Chains re-based onto a nearer ancestor (still delta-encoded).
     pub rebased_delta: usize,
@@ -73,11 +109,20 @@ pub struct RepackReport {
     pub loose_demoted: usize,
     /// Unreachable loose objects deleted (prune on).
     pub pruned_loose: usize,
+    /// Store payload bytes before the repack.
     pub bytes_before: u64,
+    /// Store payload bytes after the repack.
     pub bytes_after: u64,
-    /// Longest live chain before / after.
+    /// Longest live chain before the repack.
     pub max_depth_before: usize,
+    /// Longest live chain after the repack (see [`RepackMode`] for what
+    /// incremental mode guarantees).
     pub max_depth_after: usize,
+    /// Packs loaded before / after the repack.
+    pub packs_before: usize,
+    /// See [`RepackReport::packs_before`].
+    pub packs_after: usize,
+    /// Path of the freshly written pack, if any objects needed packing.
     pub pack_path: Option<PathBuf>,
 }
 
@@ -142,8 +187,9 @@ pub fn chain_depths_from_parents(
 }
 
 /// Repack `store` (must be pack-capable): walk live objects from
-/// `roots`, re-base over-deep chains, and emit one compacted pack. See
-/// the module docs for the full policy.
+/// `roots`, re-base over-deep chains, and emit one compacted pack —
+/// containing only the new loose objects in incremental mode, or the
+/// whole live set in full mode. See the module docs for the full policy.
 pub fn repack(
     store: &mut Store,
     roots: &[ObjectId],
@@ -158,8 +204,20 @@ pub fn repack(
         .ok_or_else(|| anyhow!("repack needs a pack-capable store (Store::open_packed)"))?;
     let pack_dir = packed.pack_dir();
     let old_pack_paths: Vec<PathBuf> = packed.packs().iter().map(|p| p.path.clone()).collect();
+    let incremental = cfg.mode == RepackMode::Incremental;
+    // Ids already sealed inside a pack: in incremental mode these are
+    // retained verbatim (their packs are never rewritten).
+    let in_pack: HashSet<ObjectId> = packed
+        .packs()
+        .iter()
+        .flat_map(|p| p.index.ids().collect::<Vec<_>>())
+        .collect();
 
-    let mut report = RepackReport { bytes_before: store.stored_bytes()?, ..Default::default() };
+    let mut report = RepackReport {
+        bytes_before: store.stored_bytes()?,
+        packs_before: old_pack_paths.len(),
+        ..Default::default()
+    };
 
     // ------------------------------------------------------------------
     // 1. Mark live objects (delta parents are strong, transitive refs)
@@ -235,6 +293,14 @@ pub fn repack(
     let mut new_depth: HashMap<ObjectId, usize> = HashMap::with_capacity(order.len());
     let mut resolve_cache: HashMap<ObjectId, Vec<f32>> = HashMap::new();
     for &id in &order {
+        if incremental && in_pack.contains(&id) {
+            // Already sealed in a pack: retained as-is. Its depth still
+            // feeds children's depth accounting (a new loose delta may
+            // hang off it, or re-base onto one of its ancestors).
+            new_depth.insert(id, old_depth[&id]);
+            report.retained_packed += 1;
+            continue;
+        }
         let bytes = store.get(&id)?;
         let obj = match TensorObject::decode(&bytes) {
             Err(_) => {
@@ -315,18 +381,21 @@ pub fn repack(
     report.max_depth_after = new_depth.values().copied().max().unwrap_or(0);
 
     // ------------------------------------------------------------------
-    // 4. Partition dead objects: packed ones are carried (unless prune),
+    // 4. Partition dead objects: packed ones are carried (full mode,
+    //    prune off) or stay sealed in their packs (incremental);
     //    loose-only ones stay loose (or are pruned).
     // ------------------------------------------------------------------
-    let packed_ref = store.as_packed().unwrap();
     let mut dead_carry: Vec<ObjectId> = Vec::new();
     let mut dead_loose: Vec<ObjectId> = Vec::new();
     for id in store.list()? {
         if live.contains(&id) {
             continue;
         }
-        if packed_ref.packs().iter().any(|p| p.contains(&id)) {
-            if !cfg.prune {
+        if in_pack.contains(&id) {
+            // Incremental mode never rewrites packs, so dead packed
+            // objects simply stay where they are (a full repack with
+            // --prune reclaims them).
+            if !cfg.prune && !incremental {
                 dead_carry.push(id);
             }
         } else {
@@ -337,12 +406,16 @@ pub fn repack(
     dead_loose.sort();
 
     // ------------------------------------------------------------------
-    // 5. Write the new pack (before touching anything existing).
+    // 5. Write the new pack (before touching anything existing). In
+    //    incremental mode only freshly encoded (former loose) objects
+    //    are in `new_bytes`; in full mode every live object is.
     // ------------------------------------------------------------------
     let mut writer = PackWriter::create(&pack_dir)?;
     for &id in &order {
-        writer.add(id, &new_bytes[&id])?;
-        report.packed += 1;
+        if let Some(bytes) = new_bytes.get(&id) {
+            writer.add(id, bytes)?;
+            report.packed += 1;
+        }
     }
     for &id in &dead_carry {
         writer.add(id, &store.get(&id)?)?;
@@ -360,16 +433,29 @@ pub fn repack(
     // 6. Swap packs in, demote loose copies, prune if asked.
     // ------------------------------------------------------------------
     let ps = store.as_packed_mut().unwrap();
-    ps.replace_packs(new_pack.into_iter().collect());
-    for p in &old_pack_paths {
-        // Pack names are content-derived: an identical repack re-creates
-        // the very same filename, which must not be deleted as "old".
-        if report.pack_path.as_ref() == Some(p) {
-            continue;
+    if incremental {
+        // Append the fresh pack as the newest generation; existing packs
+        // stay loaded and on disk.
+        if let Some(p) = new_pack {
+            if ps.packs().iter().all(|q| q.path != p.path) {
+                ps.add_pack(p);
+            }
         }
-        let _ = std::fs::remove_file(PackFile::idx_path(p));
-        let _ = std::fs::remove_file(p);
+    } else {
+        ps.replace_packs(new_pack.into_iter().collect());
+        for p in &old_pack_paths {
+            // Pack names are content-derived: an identical repack
+            // re-creates the very same filename, which must not be
+            // deleted as "old".
+            if report.pack_path.as_ref() == Some(p) {
+                continue;
+            }
+            let _ = std::fs::remove_file(PackFile::idx_path(p));
+            let _ = std::fs::remove_file(p);
+        }
     }
+    // Every live object is now packed (either newly written or retained
+    // in an old pack), so any loose copy is redundant staging.
     for id in order.iter().chain(&dead_carry) {
         if ps.loose().remove(id)? {
             report.loose_demoted += 1;
@@ -382,6 +468,7 @@ pub fn repack(
             }
         }
     }
+    report.packs_after = ps.packs().len();
     report.bytes_after = store.stored_bytes()?;
     Ok(report)
 }
@@ -450,6 +537,47 @@ mod tests {
         ids
     }
 
+    /// Append `n` delta links on top of `tip` (which must resolve),
+    /// storing real quantized deltas loose. Returns new ids oldest-first.
+    fn extend_chain(store: &Store, tip: ObjectId, n: usize, seed: u64) -> Vec<ObjectId> {
+        use crate::store::hash_tensor;
+        use crate::tensor::{i32_to_bytes, DType};
+        use crate::util::rng::Rng;
+
+        let mut rng = Rng::new(seed);
+        let eps = 1e-4f32;
+        let codec = Codec::Deflate;
+        let mut cache = HashMap::new();
+        let mut prev =
+            delta::resolve_tensor(store, tip, &NativeKernel, &mut cache, 0).unwrap();
+        let len = prev.len();
+        let mut prev_id = tip;
+        let mut ids = Vec::new();
+        for _ in 0..n {
+            let child: Vec<f32> =
+                prev.iter().map(|&p| p + rng.normal_f32(0.0, 3e-4)).collect();
+            let q = NativeKernel.quantize(&prev, &child, eps).unwrap();
+            let rec = NativeKernel.dequantize(&prev, &q, eps).unwrap();
+            let payload = f32_to_bytes(&rec);
+            let id = hash_tensor(DType::F32, &[len], &payload);
+            let obj = TensorObject::Delta {
+                dtype: DType::F32,
+                shape: vec![len],
+                parent: prev_id,
+                eps,
+                codec: codec.code(),
+                n_quant: len,
+                grid: false,
+                payload: codec.compress(&i32_to_bytes(&q)).unwrap(),
+            };
+            store.put(id, &obj.encode()).unwrap();
+            ids.push(id);
+            prev = rec;
+            prev_id = id;
+        }
+        ids
+    }
+
     fn resolve_all(store: &Store, ids: &[ObjectId]) -> Vec<Vec<f32>> {
         let mut cache = HashMap::new();
         ids.iter()
@@ -466,7 +594,8 @@ mod tests {
         let junk = store.put_blob(b"unreachable-junk").unwrap();
         let before = resolve_all(&store, &ids);
 
-        let cfg = RepackConfig { max_chain_depth: 4, prune: false };
+        let cfg =
+            RepackConfig { max_chain_depth: 4, prune: false, mode: RepackMode::Full };
         let roots = vec![*ids.last().unwrap()];
         let report = repack(&mut store, &roots, &cfg, &NativeKernel).unwrap();
         assert_eq!(report.packed, ids.len());
@@ -512,7 +641,7 @@ mod tests {
         let (dir, mut store) = tmp_store("prune");
         let ids = build_chain(&store, 3, 2);
         let junk = store.put_blob(b"dead-blob").unwrap();
-        let cfg = RepackConfig { max_chain_depth: 8, prune: true };
+        let cfg = RepackConfig { max_chain_depth: 8, prune: true, mode: RepackMode::Full };
         let roots = vec![*ids.last().unwrap()];
         let report = repack(&mut store, &roots, &cfg, &NativeKernel).unwrap();
         assert_eq!(report.pruned_loose, 1);
@@ -539,7 +668,8 @@ mod tests {
     fn repack_without_prune_carries_dead_packed_objects() {
         let (dir, mut store) = tmp_store("carry");
         let ids = build_chain(&store, 2, 3);
-        let cfg = RepackConfig { max_chain_depth: 8, prune: false };
+        let cfg =
+            RepackConfig { max_chain_depth: 8, prune: false, mode: RepackMode::Full };
         // First repack with the tip as root packs the whole chain.
         let tip = *ids.last().unwrap();
         repack(&mut store, &[tip], &cfg, &NativeKernel).unwrap();
@@ -549,6 +679,101 @@ mod tests {
         assert_eq!(report.packed, 1);
         assert_eq!(report.carried_dead, 2);
         assert!(store.has(&tip));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn incremental_packs_only_new_loose_objects() {
+        let (dir, mut store) = tmp_store("incr");
+        let ids = build_chain(&store, 4, 7);
+        let tip = *ids.last().unwrap();
+        let full =
+            RepackConfig { max_chain_depth: 8, prune: false, mode: RepackMode::Full };
+        let r1 = repack(&mut store, &[tip], &full, &NativeKernel).unwrap();
+        let first_pack = r1.pack_path.clone().unwrap();
+
+        // Stage new work: two more chain links plus an unreachable blob.
+        let ext = extend_chain(&store, tip, 2, 99);
+        let junk = store.put_blob(b"stays-loose").unwrap();
+        let all: Vec<ObjectId> = ids.iter().chain(&ext).copied().collect();
+        let want = resolve_all(&store, &all);
+
+        let inc = RepackConfig {
+            max_chain_depth: 8,
+            prune: false,
+            mode: RepackMode::Incremental,
+        };
+        let roots = vec![*ext.last().unwrap()];
+        let r2 = repack(&mut store, &roots, &inc, &NativeKernel).unwrap();
+        assert_eq!(r2.packed, ext.len(), "only new loose objects get packed");
+        assert_eq!(r2.retained_packed, ids.len());
+        assert_eq!(r2.carried_dead, 0);
+        assert_eq!((r2.packs_before, r2.packs_after), (1, 2));
+        assert!(first_pack.exists(), "incremental repack must keep old packs");
+        assert_ne!(r2.pack_path.as_ref(), Some(&first_pack));
+        assert!(store.has(&junk), "dead loose object survives without prune");
+        let ps = store.as_packed().unwrap();
+        let (loose, packed) = ps.counts().unwrap();
+        assert_eq!(loose, 1, "only the junk blob stays loose");
+        assert_eq!(packed, all.len());
+        for p in ps.packs() {
+            p.verify().unwrap();
+        }
+
+        // Bit-exact content through a fresh store handle.
+        let store2 = Store::open_packed(&dir).unwrap();
+        let got = resolve_all(&store2, &all);
+        for (b, a) in want.iter().zip(&got) {
+            for (x, y) in b.iter().zip(a) {
+                assert_eq!(x.to_bits(), y.to_bits(), "content changed by repack");
+            }
+        }
+
+        // A second incremental run with nothing staged is a no-op.
+        let r3 = repack(&mut store, &roots, &inc, &NativeKernel).unwrap();
+        assert_eq!(r3.packed, 0);
+        assert!(r3.pack_path.is_none());
+        assert_eq!(r3.packs_after, 2);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn incremental_rebases_against_packed_ancestors() {
+        let (dir, mut store) = tmp_store("incr-rebase");
+        let ids = build_chain(&store, 6, 11);
+        let tip = *ids.last().unwrap();
+        let full =
+            RepackConfig { max_chain_depth: 8, prune: false, mode: RepackMode::Full };
+        repack(&mut store, &[tip], &full, &NativeKernel).unwrap();
+
+        // Extend loose past the cap: tips would reach depth 11.
+        let ext = extend_chain(&store, tip, 5, 22);
+        let all: Vec<ObjectId> = ids.iter().chain(&ext).copied().collect();
+        let want = resolve_all(&store, &all);
+
+        let inc = RepackConfig {
+            max_chain_depth: 8,
+            prune: false,
+            mode: RepackMode::Incremental,
+        };
+        let report =
+            repack(&mut store, &[*ext.last().unwrap()], &inc, &NativeKernel).unwrap();
+        assert_eq!(report.packed, ext.len());
+        assert!(
+            report.rebased_delta + report.new_bases > 0,
+            "the over-deep extension must be re-based: {report:?}"
+        );
+        assert!(report.max_depth_after <= inc.max_chain_depth);
+        let depths = chain_depths(&store).unwrap();
+        for id in &all {
+            assert!(depths[id] <= inc.max_chain_depth);
+        }
+        let got = resolve_all(&store, &all);
+        for (b, a) in want.iter().zip(&got) {
+            for (x, y) in b.iter().zip(a) {
+                assert_eq!(x.to_bits(), y.to_bits(), "content changed by rebase");
+            }
+        }
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

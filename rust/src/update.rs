@@ -92,7 +92,7 @@ pub struct CascadeReport {
 
 /// Algorithm 2. `m` is the updated model's old version, `m_new` the user's
 /// new version (already a node, with `stored` populated and a version edge
-/// m → m_new in place — use [`prepare_manual_update`] for that).
+/// m → m_new in place — the CLI's `cascade` command does that setup).
 pub fn run_update_cascade(
     g: &mut LineageGraph,
     ckstore: &mut dyn CheckpointStore,

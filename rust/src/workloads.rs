@@ -479,7 +479,7 @@ pub fn auto_construct(
 pub enum PersistMode {
     /// Content hashing only (paper "MGit (Hash)").
     HashOnly,
-    /// Hash + delta compression (paper "MGit (<codec> + Hash)").
+    /// Hash + delta compression (paper "MGit (`<codec>` + Hash)").
     Delta(CompressConfig),
 }
 

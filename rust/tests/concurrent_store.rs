@@ -1,0 +1,215 @@
+//! Concurrency stress: N reader threads cold-reconstruct delta chains
+//! from one shared `PackedStore` while a writer stages loose objects.
+//! Readers must see bit-exact tensors throughout, nothing may deadlock,
+//! and an incremental repack afterwards must absorb the writer's objects
+//! without disturbing the sealed pack.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use mgit::delta::{self, Codec, DeltaKernel, NativeKernel, ResolveCache};
+use mgit::store::format::TensorObject;
+use mgit::store::pack::{repack, RepackConfig, RepackMode};
+use mgit::store::{hash_tensor, ObjectId, Store};
+use mgit::tensor::{f32_to_bytes, i32_to_bytes, DType};
+use mgit::util::rng::Rng;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("mgit-conc-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Build a delta chain of `n` links over a raw base (real quantized
+/// deltas, so chains resolve through the kernel). Returns ids base-first.
+fn build_chain(store: &Store, n: usize, seed: u64, len: usize) -> Vec<ObjectId> {
+    let mut rng = Rng::new(seed);
+    let eps = 1e-4f32;
+    let codec = Codec::Deflate;
+    let base: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let base_payload = f32_to_bytes(&base);
+    let base_id = hash_tensor(DType::F32, &[len], &base_payload);
+    store
+        .put(
+            base_id,
+            &TensorObject::Raw { dtype: DType::F32, shape: vec![len], payload: base_payload }
+                .encode(),
+        )
+        .unwrap();
+    let mut ids = vec![base_id];
+    let mut prev = base;
+    let mut prev_id = base_id;
+    for _ in 0..n {
+        let child: Vec<f32> = prev.iter().map(|&p| p + rng.normal_f32(0.0, 3e-4)).collect();
+        let q = NativeKernel.quantize(&prev, &child, eps).unwrap();
+        let rec = NativeKernel.dequantize(&prev, &q, eps).unwrap();
+        let payload = f32_to_bytes(&rec);
+        let id = hash_tensor(DType::F32, &[len], &payload);
+        let obj = TensorObject::Delta {
+            dtype: DType::F32,
+            shape: vec![len],
+            parent: prev_id,
+            eps,
+            codec: codec.code(),
+            n_quant: len,
+            grid: false,
+            payload: codec.compress(&i32_to_bytes(&q)).unwrap(),
+        };
+        store.put(id, &obj.encode()).unwrap();
+        ids.push(id);
+        prev = rec;
+        prev_id = id;
+    }
+    ids
+}
+
+#[test]
+fn concurrent_readers_with_live_writer() {
+    const N_CHAINS: usize = 4;
+    const CHAIN_LEN: usize = 6;
+    const N_READERS: usize = 4;
+    const ROUNDS: usize = 8;
+
+    let dir = tmp_dir("rw");
+    let mut store = Store::open_packed(&dir).unwrap();
+
+    // Seal N delta chains into one pack.
+    let chains: Vec<Vec<ObjectId>> = (0..N_CHAINS)
+        .map(|i| build_chain(&store, CHAIN_LEN, 100 + i as u64, 256))
+        .collect();
+    let tips: Vec<ObjectId> = chains.iter().map(|c| *c.last().unwrap()).collect();
+    let cfg = RepackConfig { max_chain_depth: 8, prune: false, mode: RepackMode::Full };
+    let report = repack(&mut store, &tips, &cfg, &NativeKernel).unwrap();
+    assert!(report.pack_path.is_some());
+
+    // Reference values for every chain link, resolved single-threaded.
+    let reference: Vec<Vec<Vec<f32>>> = chains
+        .iter()
+        .map(|chain| {
+            let mut cache = HashMap::new();
+            chain
+                .iter()
+                .map(|id| {
+                    delta::resolve_tensor(&store, *id, &NativeKernel, &mut cache, 0)
+                        .unwrap()
+                })
+                .collect()
+        })
+        .collect();
+
+    // Readers hammer cold chain reconstruction (fresh local cache per
+    // round, plus a shared bounded cache) while the writer stages new
+    // loose objects into the same store.
+    let shared_cache = ResolveCache::new(64);
+    let mismatch_count = AtomicUsize::new(0);
+    let writer_ids: Vec<ObjectId> = std::thread::scope(|s| {
+        let mismatches = &mismatch_count;
+        for r in 0..N_READERS {
+            let (store, chains, reference, shared_cache) =
+                (&store, &chains, &reference, &shared_cache);
+            s.spawn(move || {
+                for round in 0..ROUNDS {
+                    let (ci, li) = ((r + round) % N_CHAINS, round % (CHAIN_LEN + 1));
+                    let id = chains[ci][li];
+                    // Cold walk: nothing memoized between iterations.
+                    let mut local = HashMap::new();
+                    let cold =
+                        delta::resolve_tensor(store, id, &NativeKernel, &mut local, 0)
+                            .unwrap();
+                    // Shared-cache walk: memoized across threads.
+                    let shared = delta::resolve_tensor_shared(
+                        store,
+                        id,
+                        &NativeKernel,
+                        shared_cache,
+                        0,
+                    )
+                    .unwrap();
+                    let want = &reference[ci][li];
+                    let exact = cold.len() == want.len()
+                        && shared.len() == want.len()
+                        && cold
+                            .iter()
+                            .zip(shared.iter())
+                            .zip(want)
+                            .all(|((a, b), w)| {
+                                a.to_bits() == w.to_bits() && b.to_bits() == w.to_bits()
+                            });
+                    if !exact {
+                        mismatches.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            });
+        }
+        // Writer: stage fresh loose objects (new raw tensors) while the
+        // readers run. `put` is loose + atomic, so readers never observe
+        // partial objects.
+        let writer = s.spawn(|| {
+            let mut rng = Rng::new(999);
+            let mut ids = Vec::new();
+            for _ in 0..32 {
+                let vals: Vec<f32> = (0..64).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                let payload = f32_to_bytes(&vals);
+                let id = hash_tensor(DType::F32, &[64], &payload);
+                store
+                    .put(
+                        id,
+                        &TensorObject::Raw {
+                            dtype: DType::F32,
+                            shape: vec![64],
+                            payload,
+                        }
+                        .encode(),
+                    )
+                    .unwrap();
+                ids.push(id);
+            }
+            ids
+        });
+        writer.join().unwrap()
+    });
+    // All readers have joined here (scope exit); check their verdict.
+    assert_eq!(
+        mismatch_count.load(Ordering::Relaxed),
+        0,
+        "concurrent readers saw non-bit-exact tensors"
+    );
+
+    // Writer's objects all landed and are readable.
+    for id in &writer_ids {
+        assert!(store.has(id));
+        store.get(id).unwrap();
+    }
+    let (hits, misses) = shared_cache.counters();
+    assert!(hits + misses > 0);
+
+    // Incremental repack absorbs the staged objects as a new generation
+    // without touching the sealed pack.
+    let first_pack = report.pack_path.clone().unwrap();
+    let mut roots = tips.clone();
+    roots.extend(writer_ids.iter().copied());
+    let inc =
+        RepackConfig { max_chain_depth: 8, prune: false, mode: RepackMode::Incremental };
+    let r2 = repack(&mut store, &roots, &inc, &NativeKernel).unwrap();
+    assert_eq!(r2.packed, writer_ids.len());
+    assert!(first_pack.exists());
+    assert_eq!(r2.packs_after, 2);
+
+    // Every chain still resolves bit-exactly from the multi-pack store.
+    let store2 = Store::open_packed(&dir).unwrap();
+    for (chain, want_chain) in chains.iter().zip(&reference) {
+        let mut cache = HashMap::new();
+        for (id, want) in chain.iter().zip(want_chain) {
+            let got =
+                delta::resolve_tensor(&store2, *id, &NativeKernel, &mut cache, 0).unwrap();
+            assert_eq!(got.len(), want.len());
+            for (a, b) in got.iter().zip(want) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
