@@ -89,12 +89,13 @@ fn main() -> anyhow::Result<()> {
     }
 
     // ---- 3. Update the base model; cascade -----------------------------
-    let mut trainer = Trainer::new(&rt);
-    let mut ckstore = CasCheckpointStore {
+    let trainer = Trainer::new(&rt);
+    let ckstore = CasCheckpointStore {
         store: &store,
         zoo: &zoo,
         kernel: &NativeKernel,
         compress: Some(Default::default()),
+        cache: None,
     };
     let m = wl.graph.idx("g2/base-mlm")?;
     let base_ck = wl.ck("g2/base-mlm")?.clone();
@@ -120,8 +121,8 @@ fn main() -> anyhow::Result<()> {
     let t = Timer::start();
     let cascade = update::run_update_cascade(
         &mut wl.graph,
-        &mut ckstore,
-        &mut trainer,
+        &ckstore,
+        &trainer,
         m,
         m_new,
         |_, _| false,
@@ -172,7 +173,7 @@ fn main() -> anyhow::Result<()> {
 
     // Loss curves summary (first/last of each trace).
     println!("\nloss traces (first -> last):");
-    for (label, trace) in trainer.traces.iter().take(6) {
+    for (label, trace) in trainer.take_traces().iter().take(6) {
         if let (Some(f), Some(l)) = (trace.losses.first(), trace.losses.last()) {
             println!("  {label:<28} {f:.3} -> {l:.3} ({} steps)", trace.losses.len());
         }

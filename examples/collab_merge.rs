@@ -22,7 +22,7 @@ fn main() -> anyhow::Result<()> {
     let arch = "tx-tiny";
     let spec = rt.zoo().arch(arch)?;
     let dag = ModelDag::from_arch(spec, None)?;
-    let mut trainer = Trainer::new(&rt);
+    let trainer = Trainer::new(&rt);
 
     // Shared starting point.
     let base = trainer.execute(

@@ -20,11 +20,12 @@ fn main() -> anyhow::Result<()> {
     let small = std::env::args().any(|a| a == "small");
     let rt = Runtime::new(Path::new("artifacts"))?;
     let store = Store::in_memory();
-    let mut ckstore = CasCheckpointStore {
+    let ckstore = CasCheckpointStore {
         store: &store,
         zoo: rt.zoo(),
         kernel: &mgit::delta::NativeKernel,
         compress: Some(Default::default()),
+        cache: None,
     };
     let cfg = if small {
         FlConfig { n_silos: 8, workers_per_round: 3, rounds: 3, local_steps: 2, ..Default::default() }
@@ -36,7 +37,7 @@ fn main() -> anyhow::Result<()> {
         cfg.n_silos, cfg.workers_per_round, cfg.rounds, cfg.local_steps
     );
     let mut g = LineageGraph::new();
-    let rounds = run_federated(&rt, &mut g, &mut ckstore, &cfg)?;
+    let rounds = run_federated(&rt, &mut g, &ckstore, &cfg)?;
     for r in &rounds {
         println!(
             "round {:>2}: sampled silos {:?}, global accuracy {:.3}",

@@ -32,7 +32,7 @@ fn main() -> anyhow::Result<()> {
     // 1. Train a base model (MLM pretraining) and register it.
     let arch = "tx-tiny";
     let spec = zoo.arch(arch)?;
-    let mut trainer = Trainer::new(&rt);
+    let trainer = Trainer::new(&rt);
     let base_cr = CreationSpec::Pretrain { corpus_seed: 1, steps: 40, lr: 0.02 };
     let base_ck = trainer.execute(&base_cr, arch, &[Checkpoint::init(spec, 1)])?;
     let (base_sm, _) = delta::store_raw(&repo.store, spec, &base_ck)?;

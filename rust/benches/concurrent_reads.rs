@@ -125,8 +125,12 @@ fn main() -> anyhow::Result<()> {
         }
     }
     let roots: Vec<ObjectId> = models.iter().flat_map(|m| m.refs()).collect();
-    let rcfg =
-        RepackConfig { max_chain_depth: 8, prune: true, mode: RepackMode::Full };
+    let rcfg = RepackConfig {
+        max_chain_depth: 8,
+        prune: true,
+        mode: RepackMode::Full,
+        ..RepackConfig::default()
+    };
     let mut store = store;
     let report = repack(&mut store, &roots, &rcfg, &NativeKernel)?;
     let reader_kind =

@@ -72,8 +72,8 @@ fn main() -> anyhow::Result<()> {
             &mgit::autoconstruct::AutoConfig::default(),
         )?;
         let avg = times.iter().sum::<f64>() / times.len() as f64;
-        let last10: f64 =
-            times[times.len().saturating_sub(10)..].iter().sum::<f64>() / 10f64.min(times.len() as f64);
+        let last10: f64 = times[times.len().saturating_sub(10)..].iter().sum::<f64>()
+            / 10f64.min(times.len() as f64);
         println!(
             "{:>4} models: avg insert {:>10}   tail-10 avg {:>10}   parents correct {}/{}",
             order.len(),

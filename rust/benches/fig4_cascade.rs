@@ -1,23 +1,192 @@
-//! Figure 4: accuracy difference between cascaded children (m1'…mN') and
-//! their originals (m1…mN) per (task × perturbation).
+//! Figure 4 + cascade-engine scaling.
 //!
-//! Protocol (paper §6.4): the base MLM model m is re-pretrained on a
-//! *perturbed* corpus → m'; `run_update_cascade` regenerates children
-//! whose creation functions never see perturbed data — robustness must be
-//! inherited from m'. Positive Δacc on perturbed eval sets = the paper's
-//! "superior performance (accuracy difference > 0) for most
-//! perturbations".
+//! **Part 1 (always runs, no artifacts needed):** wall-clock scaling of
+//! the wavefront cascade scheduler over 1/2/4/8 jobs on a cascade of
+//! independent sibling models driven by a deterministic CPU-bound mock
+//! executor. Reports the per-job-count speedup (the `--jobs 4` ≥ 2×
+//! acceptance bar is read off this table; wall-clock is not asserted —
+//! CI machines are too noisy for that) and *asserts* the other half of
+//! the bar: results are bit-identical across job counts.
+//!
+//! **Part 2 (PJRT + artifacts):** accuracy difference between cascaded
+//! children (m1'…mN') and their originals per (task × perturbation) —
+//! the paper's Figure 4. Protocol (§6.4): the base MLM model m is
+//! re-pretrained on a *perturbed* corpus → m'; the cascade regenerates
+//! children whose creation functions never see perturbed data —
+//! robustness must be inherited from m'.
 
 mod common;
 
-use mgit::delta::NativeKernel;
-use mgit::registry::{CreationSpec, Objective};
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Result};
+use mgit::cascade::{self, CascadeOptions};
+use mgit::checkpoint::Checkpoint;
+use mgit::delta::{NativeKernel, StoredModel};
+use mgit::lineage::LineageGraph;
+use mgit::registry::{CreationSpec, FreezeSpec, Objective};
 use mgit::store::Store;
 use mgit::train::{CasCheckpointStore, Trainer};
 use mgit::update::{self, CheckpointStore, CreationExecutor};
 use mgit::workloads::{self, PersistMode, Scale};
 
-fn main() -> anyhow::Result<()> {
+// ---------------------------------------------------------------------------
+// Part 1: scheduler scaling (synthetic, deterministic)
+// ---------------------------------------------------------------------------
+
+/// CPU-bound deterministic executor: `work` rounds of fused
+/// multiply-adds over the parent checkpoint stand in for a real
+/// finetune. Identical inputs produce identical outputs regardless of
+/// scheduling, so job counts can be compared bit-for-bit.
+struct BusyExec {
+    work: usize,
+}
+
+impl CreationExecutor for BusyExec {
+    fn execute(
+        &self,
+        _spec: &CreationSpec,
+        _arch: &str,
+        parents: &[Checkpoint],
+    ) -> Result<Checkpoint> {
+        let mut ck = parents[0].clone();
+        for _ in 0..self.work {
+            for x in ck.flat.iter_mut() {
+                *x = x.mul_add(1.000_000_1, 1.0e-7);
+            }
+        }
+        std::hint::black_box(&ck.flat);
+        Ok(ck)
+    }
+
+    fn execute_mtl_group(
+        &self,
+        specs: &[&CreationSpec],
+        arch: &str,
+        parents: &[Checkpoint],
+    ) -> Result<Vec<Checkpoint>> {
+        let one = self.execute(specs[0], arch, parents)?;
+        Ok(vec![one; specs.len()])
+    }
+}
+
+/// Content-keyed in-memory store (order-independent pointers).
+struct MemCkStore {
+    saved: Mutex<HashMap<String, Checkpoint>>,
+}
+
+impl CheckpointStore for MemCkStore {
+    fn load(&self, stored: &StoredModel) -> Result<Checkpoint> {
+        self.saved
+            .lock()
+            .unwrap()
+            .get(&stored.arch)
+            .cloned()
+            .ok_or_else(|| anyhow!("missing {}", stored.arch))
+    }
+
+    fn save(
+        &self,
+        ck: &Checkpoint,
+        _prev: Option<(&StoredModel, &Checkpoint)>,
+    ) -> Result<StoredModel> {
+        let mut h: u64 = 0xcbf29ce484222325;
+        for x in &ck.flat {
+            h ^= x.to_bits() as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        let key = format!("{}#{h:016x}", ck.arch);
+        self.saved.lock().unwrap().insert(key.clone(), ck.clone());
+        Ok(StoredModel { arch: key, params: vec![] })
+    }
+}
+
+fn sibling_graph(width: usize, st: &MemCkStore) -> (LineageGraph, usize, usize) {
+    let mut g = LineageGraph::new();
+    let m = g.add_node("m", "t").unwrap();
+    let base = Checkpoint { arch: "t".into(), flat: vec![0.5; 1 << 15] };
+    g.node_mut(m).stored = Some(st.save(&base, None).unwrap());
+    for i in 0..width {
+        let c = g.add_node(&format!("c{i}"), "t").unwrap();
+        g.add_edge(m, c).unwrap();
+        g.register_creation_function(
+            c,
+            CreationSpec::Finetune {
+                task: format!("task{i}"),
+                objective: Objective::Cls,
+                steps: 1,
+                lr: 0.1,
+                seed: i as u64,
+                freeze: FreezeSpec::None,
+                perturb: None,
+            },
+        )
+        .unwrap();
+        g.node_mut(c).stored = Some(st.save(&base, None).unwrap());
+    }
+    let m2 = g.add_node("m@v2", "t").unwrap();
+    let updated = Checkpoint { arch: "t".into(), flat: vec![0.75; 1 << 15] };
+    g.node_mut(m2).stored = Some(st.save(&updated, None).unwrap());
+    g.add_version_edge(m, m2).unwrap();
+    (g, m, m2)
+}
+
+fn scheduler_scaling() -> Result<()> {
+    const WIDTH: usize = 16;
+    const WORK: usize = 400;
+    println!(
+        "wavefront scheduler scaling: {WIDTH} independent siblings, \
+         synthetic CPU-bound creations"
+    );
+    common::hr();
+    println!("{:>6} {:>12} {:>9}", "jobs", "wall-clock", "speedup");
+    let mut base_secs = 0.0f64;
+    let mut reference: Option<String> = None;
+    for &jobs in &[1usize, 2, 4, 8] {
+        let st = MemCkStore { saved: Mutex::new(HashMap::new()) };
+        let (mut g, m, m2) = sibling_graph(WIDTH, &st);
+        let exec = BusyExec { work: WORK };
+        let t = mgit::util::timing::Timer::start();
+        let report = cascade::run(
+            &mut g,
+            &st,
+            &exec,
+            m,
+            m2,
+            |_, _| false,
+            |_, _| false,
+            &CascadeOptions { jobs, journal: None },
+        )?;
+        let secs = t.elapsed_secs();
+        assert_eq!(report.new_versions.len(), WIDTH);
+        let fingerprint = g.to_json().to_string_pretty();
+        match &reference {
+            None => {
+                base_secs = secs;
+                reference = Some(fingerprint);
+            }
+            Some(want) => assert_eq!(
+                want, &fingerprint,
+                "jobs={jobs} diverged from the serial result"
+            ),
+        }
+        println!(
+            "{:>6} {:>10.1}ms {:>8.2}x",
+            jobs,
+            secs * 1e3,
+            if secs > 0.0 { base_secs / secs } else { 0.0 }
+        );
+    }
+    println!("results bit-identical across job counts: yes");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Part 2: the paper's Figure 4 (needs PJRT + artifacts)
+// ---------------------------------------------------------------------------
+
+fn figure4() -> Result<()> {
     let rt = common::runtime();
     let zoo = rt.zoo().clone();
     let small = matches!(std::env::var("MGIT_SCALE").as_deref(), Ok("small"));
@@ -48,18 +217,27 @@ fn main() -> anyhow::Result<()> {
         let ck = wl.ck(&wl.graph.node(latest).name.clone())?;
         for (pi, p) in perturbations.iter().enumerate() {
             old_acc[ti][pi] = rt
-                .eval_many_perturbed("tx-tiny", Objective::Cls, &ck.flat, task, 0, 3, Some((p, 0.3)))?
+                .eval_many_perturbed(
+                    "tx-tiny",
+                    Objective::Cls,
+                    &ck.flat,
+                    task,
+                    0,
+                    3,
+                    Some((p, 0.3)),
+                )?
                 .1;
         }
     }
 
     // Update the root on perturbed corpus, cascade.
-    let mut trainer = Trainer::new(&rt);
-    let mut ckstore = CasCheckpointStore {
+    let trainer = Trainer::new(&rt);
+    let ckstore = CasCheckpointStore {
         store: &store,
         zoo: &zoo,
         kernel: &NativeKernel,
         compress: Some(Default::default()),
+        cache: None,
     };
     let m = wl.graph.idx("g2/base-mlm")?;
     let base_ck = wl.ck("g2/base-mlm")?.clone();
@@ -74,8 +252,8 @@ fn main() -> anyhow::Result<()> {
     wl.graph.add_version_edge(m, m_new)?;
     let report = update::run_update_cascade(
         &mut wl.graph,
-        &mut ckstore,
-        &mut trainer,
+        &ckstore,
+        &trainer,
         m,
         m_new,
         |_, _| false,
@@ -104,7 +282,15 @@ fn main() -> anyhow::Result<()> {
         print!("{:<8}", task);
         for (pi, p) in perturbations.iter().enumerate() {
             let acc = rt
-                .eval_many_perturbed("tx-tiny", Objective::Cls, &ck.flat, task, 0, 3, Some((p, 0.3)))?
+                .eval_many_perturbed(
+                    "tx-tiny",
+                    Objective::Cls,
+                    &ck.flat,
+                    task,
+                    0,
+                    3,
+                    Some((p, 0.3)),
+                )?
                 .1;
             let d = acc - old_acc[ti][pi];
             if d >= 0.0 {
@@ -121,4 +307,17 @@ fn main() -> anyhow::Result<()> {
          (paper: positive for most perturbations and tasks)"
     );
     Ok(())
+}
+
+fn main() -> Result<()> {
+    scheduler_scaling()?;
+    println!();
+    if !mgit::runtime::HAS_PJRT {
+        println!(
+            "skipping Figure-4 accuracy matrix: built without the `pjrt` feature \
+             (rebuild with --features pjrt after `make artifacts`)"
+        );
+        return Ok(());
+    }
+    figure4()
 }

@@ -126,7 +126,12 @@ fn main() -> anyhow::Result<()> {
     // ------------------------------------------------------------------
     common::hr();
     let roots: Vec<ObjectId> = models.iter().flat_map(|m| m.refs()).collect();
-    let rcfg = RepackConfig { max_chain_depth: 8, prune: true, mode: RepackMode::Full };
+    let rcfg = RepackConfig {
+        max_chain_depth: 8,
+        prune: true,
+        mode: RepackMode::Full,
+        ..RepackConfig::default()
+    };
     let mut store = Store::open_packed(&dir)?;
     let t_repack = mgit::util::timing::Timer::start();
     let report = repack(&mut store, &roots, &rcfg, &NativeKernel)?;

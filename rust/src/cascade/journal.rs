@@ -1,0 +1,173 @@
+//! Journaling — crash-safe progress records for resumable cascades.
+//!
+//! A journaled cascade persists two artifacts under a directory (the CLI
+//! uses `.mgit/cascade-journal/`):
+//!
+//! * `plan.json` — the full [`CascadePlan`], written once before
+//!   execution starts (node references by *name*, so the plan re-binds
+//!   against the saved graph on resume);
+//! * `done.jsonl` — one appended, fsync'd line per completed task with
+//!   every member's [`StoredModel`]. The referenced CAS objects are
+//!   already durable when the line is written (`CheckpointStore::save`
+//!   writes through to the object store), so a replayed record is a
+//!   fully materialized model.
+//!
+//! After a crash or failure, [`load_journal`] returns the plan plus the
+//! completed-task map; the scheduler then executes exactly the
+//! unfinished suffix. A torn trailing line (crash mid-append) is
+//! ignored, which at worst re-trains the one task whose record was cut
+//! short — content addressing makes the re-store idempotent.
+
+use std::collections::HashMap;
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::delta::StoredModel;
+use crate::lineage::{LineageGraph, NodeIdx};
+use crate::util::json::{self, Json};
+
+use super::plan::CascadePlan;
+use super::schedule::DoneTasks;
+
+/// Append-only journal handle shared by the scheduler's workers.
+pub struct CascadeJournal {
+    dir: PathBuf,
+    file: std::sync::Mutex<fs::File>,
+}
+
+impl CascadeJournal {
+    /// Start a fresh journal: write `plan.json` and open `done.jsonl`.
+    /// Fails if `dir` already holds a journal (an unfinished cascade must
+    /// be resumed or explicitly abandoned first).
+    pub fn create(dir: &Path, plan: &CascadePlan, g: &LineageGraph) -> Result<CascadeJournal> {
+        if dir.join("plan.json").exists() {
+            bail!(
+                "a cascade journal already exists at {} (resume it or delete the directory)",
+                dir.display()
+            );
+        }
+        fs::create_dir_all(dir)
+            .with_context(|| format!("creating journal dir {}", dir.display()))?;
+        // Atomic plan write (temp + fsync + rename): a crash mid-create
+        // must not leave a plan.json that parses as garbage — the
+        // journal's very existence gates `mgit cascade`.
+        let tmp = dir.join("plan.json.tmp");
+        {
+            let mut f = fs::File::create(&tmp)?;
+            f.write_all(plan.to_json(g).to_string_pretty().as_bytes())?;
+            f.sync_data()?;
+        }
+        fs::rename(&tmp, dir.join("plan.json"))?;
+        let file = fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(dir.join("done.jsonl"))?;
+        Ok(CascadeJournal { dir: dir.to_path_buf(), file: std::sync::Mutex::new(file) })
+    }
+
+    /// Re-open an existing journal for appending (the resume path).
+    pub fn reopen(dir: &Path) -> Result<CascadeJournal> {
+        if !dir.join("plan.json").exists() {
+            bail!("no cascade journal at {}", dir.display());
+        }
+        let file = fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(dir.join("done.jsonl"))?;
+        Ok(CascadeJournal { dir: dir.to_path_buf(), file: std::sync::Mutex::new(file) })
+    }
+
+    /// Where this journal lives.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Append one completed task's records and flush them to disk. Safe
+    /// to call from multiple worker threads (writes are serialized).
+    pub fn record(
+        &self,
+        g: &LineageGraph,
+        task: usize,
+        results: &[(NodeIdx, StoredModel)],
+    ) -> Result<()> {
+        let arr: Vec<Json> = results
+            .iter()
+            .map(|(idx, sm)| {
+                Json::obj()
+                    .set("node", g.node(*idx).name.as_str())
+                    .set("stored", sm.to_json())
+            })
+            .collect();
+        let line = Json::obj()
+            .set("task", task)
+            .set("results", Json::Arr(arr))
+            .to_string_compact();
+        let mut f = self.file.lock().unwrap();
+        writeln!(f, "{line}")?;
+        f.sync_data()?;
+        Ok(())
+    }
+}
+
+/// The journal directory used by the CLI for a repository rooted at the
+/// given `.mgit` directory.
+pub fn journal_dir(mgit_dir: &Path) -> PathBuf {
+    mgit_dir.join("cascade-journal")
+}
+
+/// Load a journal: the persisted plan (re-bound against `g`) plus every
+/// *complete* done record. Incomplete or torn records are dropped — the
+/// scheduler simply re-runs those tasks.
+pub fn load_journal(dir: &Path, g: &LineageGraph) -> Result<(CascadePlan, DoneTasks)> {
+    let plan_text = fs::read_to_string(dir.join("plan.json"))
+        .with_context(|| format!("no cascade journal at {}", dir.display()))?;
+    let plan = CascadePlan::from_json(&json::parse(&plan_text)?, g)
+        .context("journaled plan does not match the saved graph")?;
+    let mut done: DoneTasks = HashMap::new();
+    let text = fs::read_to_string(dir.join("done.jsonl")).unwrap_or_default();
+    for line in text.lines() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let Ok(j) = json::parse(line) else {
+            // Torn tail from a crash mid-append: everything before it is
+            // intact (records are written and fsync'd in completion
+            // order), so stop replaying here.
+            break;
+        };
+        let tid = j.req_usize("task")?;
+        if tid >= plan.tasks.len() {
+            bail!("journal references unknown task {tid}");
+        }
+        let mut outs = Vec::new();
+        for r in j.req_arr("results")? {
+            let name = r.req_str("node")?;
+            let idx = g
+                .idx(name)
+                .map_err(|_| anyhow!("journaled node `{name}` missing from the graph"))?;
+            outs.push((idx, StoredModel::from_json(r.req("stored")?)?));
+        }
+        if outs.len() != plan.tasks[tid].members.len() {
+            continue; // partial record: re-run the task
+        }
+        done.insert(tid, outs);
+    }
+    Ok((plan, done))
+}
+
+/// Whether `dir` holds a journal (an interrupted cascade).
+pub fn journal_exists(dir: &Path) -> bool {
+    dir.join("plan.json").exists()
+}
+
+/// Delete a finished journal. Missing directories are fine.
+pub fn remove_journal(dir: &Path) -> Result<()> {
+    if dir.exists() {
+        fs::remove_dir_all(dir)
+            .with_context(|| format!("removing cascade journal {}", dir.display()))?;
+    }
+    Ok(())
+}

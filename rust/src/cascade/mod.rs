@@ -1,0 +1,137 @@
+//! The cascade execution tier — Algorithm 2 as plan → schedule → journal.
+//!
+//! The paper's automated update cascade (§5) used to live as one serial
+//! loop in [`crate::update`]; it is now three layers, each independently
+//! testable:
+//!
+//! 1. **Planning** ([`plan`]) — [`plan_cascade`] performs all graph
+//!    mutation up front and emits an immutable [`CascadePlan`]: per-node
+//!    parent sets, MTL groups as barrier tasks, skip/terminate decisions
+//!    — pure data.
+//! 2. **Scheduling** ([`schedule`]) — a ready-queue wavefront scheduler
+//!    executes independent plan tasks concurrently on a scoped thread
+//!    pool (`mgit cascade --jobs N`); `jobs = 1` reproduces the serial
+//!    order (and bit-identical results) of the historical
+//!    implementation.
+//! 3. **Journaling** ([`journal`]) — per-task completion records under
+//!    `.mgit/cascade-journal/` let `mgit cascade --resume` pick up an
+//!    interrupted cascade at exactly the unfinished suffix instead of
+//!    retraining finished models.
+//!
+//! Thread-safety contract: [`CreationExecutor`] and [`CheckpointStore`]
+//! are `&self + Send + Sync` — one executor and one store are shared by
+//! reference across every worker. Parent checkpoints load through the
+//! store's (optionally [`crate::delta::ResolveCache`]-backed) `load`, so
+//! concurrent workers share resolved ancestor tensors instead of
+//! re-materializing them.
+//!
+//! [`crate::update::run_update_cascade`] remains as the serial
+//! single-call convenience wrapper over this module.
+
+pub mod journal;
+pub mod plan;
+pub mod schedule;
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::delta::StoredModel;
+use crate::lineage::{LineageGraph, NodeIdx};
+use crate::update::{CascadeReport, CheckpointStore, CreationExecutor};
+
+pub use journal::{journal_dir, journal_exists, load_journal, remove_journal, CascadeJournal};
+pub use plan::{plan_cascade, CascadePlan, PlanMember, PlanTask};
+pub use schedule::{execute_plan, DoneTasks};
+
+/// Execution knobs for one cascade run.
+pub struct CascadeOptions<'a> {
+    /// Worker threads for the wavefront scheduler (1 = serial).
+    pub jobs: usize,
+    /// Journal to append completion records to (None = not resumable).
+    pub journal: Option<&'a CascadeJournal>,
+}
+
+impl Default for CascadeOptions<'_> {
+    fn default() -> Self {
+        CascadeOptions { jobs: 1, journal: None }
+    }
+}
+
+/// Plan and execute a full cascade in one call (Algorithm 2). `m_new`
+/// must already be registered as the next version of `m` with a stored
+/// checkpoint. See [`plan_cascade`] and [`execute_plan`] for the
+/// composable pieces (the CLI uses those directly so it can persist the
+/// graph and journal between phases).
+#[allow(clippy::too_many_arguments)]
+pub fn run(
+    g: &mut LineageGraph,
+    ckstore: &dyn CheckpointStore,
+    exec: &dyn CreationExecutor,
+    m: NodeIdx,
+    m_new: NodeIdx,
+    skip: impl Fn(&LineageGraph, NodeIdx) -> bool,
+    terminate: impl Fn(&LineageGraph, NodeIdx) -> bool,
+    opts: &CascadeOptions,
+) -> Result<CascadeReport> {
+    let plan = plan::plan_cascade(g, m, m_new, skip, terminate)?;
+    execute_and_apply(g, &plan, ckstore, exec, opts, &DoneTasks::new())
+}
+
+/// Execute an already-built plan and apply the results to the graph.
+/// `done` holds journal-replayed completions (empty for a fresh run).
+pub fn execute_and_apply(
+    g: &mut LineageGraph,
+    plan: &CascadePlan,
+    ckstore: &dyn CheckpointStore,
+    exec: &dyn CreationExecutor,
+    opts: &CascadeOptions,
+    done: &DoneTasks,
+) -> Result<CascadeReport> {
+    let results =
+        schedule::execute_plan(g, plan, ckstore, exec, opts.jobs, opts.journal, done)?;
+    apply_results(g, plan, &results, done.len())
+}
+
+/// Resume an interrupted, journaled cascade: load the plan and finished
+/// prefix from `journal_dir`, execute the unfinished suffix (appending
+/// to the same journal), and apply everything to the graph.
+pub fn resume(
+    g: &mut LineageGraph,
+    ckstore: &dyn CheckpointStore,
+    exec: &dyn CreationExecutor,
+    dir: &Path,
+    jobs: usize,
+) -> Result<CascadeReport> {
+    let (plan, done) = journal::load_journal(dir, g)?;
+    let j = CascadeJournal::reopen(dir)?;
+    let opts = CascadeOptions { jobs, journal: Some(&j) };
+    execute_and_apply(g, &plan, ckstore, exec, &opts, &done)
+}
+
+/// Write every completed member's stored model onto its graph node and
+/// build the report. Iterates in plan (task) order, so the report is
+/// deterministic regardless of completion order.
+pub fn apply_results(
+    g: &mut LineageGraph,
+    plan: &CascadePlan,
+    results: &HashMap<NodeIdx, StoredModel>,
+    resumed_tasks: usize,
+) -> Result<CascadeReport> {
+    let mut report = CascadeReport {
+        skipped_no_cr: plan.skipped_no_cr.clone(),
+        resumed_tasks,
+        ..Default::default()
+    };
+    for task in &plan.tasks {
+        for mb in &task.members {
+            let sm = results
+                .get(&mb.new)
+                .ok_or_else(|| anyhow!("cascade produced no result for {}", mb.name))?;
+            g.node_mut(mb.new).stored = Some(sm.clone());
+            report.new_versions.push((mb.old, mb.new));
+        }
+    }
+    Ok(report)
+}

@@ -1,0 +1,476 @@
+//! Planning — Phase A of Algorithm 2 as a pure data structure.
+//!
+//! [`plan_cascade`] performs every *graph mutation* of an update cascade
+//! up front (create the next-version nodes, wire version + provenance
+//! edges, copy creation functions) and returns an immutable
+//! [`CascadePlan`] describing the *execution* that remains: one
+//! [`PlanTask`] per creation to run, with parent sets, MTL group
+//! membership and inter-task dependencies recorded as plain data. The
+//! scheduler ([`crate::cascade::schedule`]) then executes the plan
+//! without ever touching the graph, which is what makes wavefront
+//! parallelism and crash-resume ([`crate::cascade::journal`]) possible.
+//!
+//! Determinism: provenance edges are wired in *sorted node order* (not
+//! `HashMap` iteration order as the old serial implementation did), so
+//! two cascades over identical graphs produce byte-identical graph JSON
+//! and identical plans.
+
+use std::collections::{HashMap, HashSet};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::lineage::{traversal, LineageGraph, NodeIdx};
+use crate::registry::CreationSpec;
+use crate::update::next_version_name;
+use crate::util::json::Json;
+
+/// One model to (re-)create: the new node, its previous version (the
+/// delta-compression parent), and everything the executor needs.
+#[derive(Debug, Clone)]
+pub struct PlanMember {
+    /// The existing node this is the next version of.
+    pub old: NodeIdx,
+    /// The freshly created (empty) next-version node.
+    pub new: NodeIdx,
+    /// Name of `new` (journal key; indices are not stable across repos).
+    pub name: String,
+    /// Architecture (model_type) handed to the executor.
+    pub arch: String,
+    /// The creation function to re-execute.
+    pub spec: CreationSpec,
+    /// Effective provenance parents of `new` (next versions where the
+    /// parent is inside the cascade, current versions otherwise).
+    pub parents: Vec<NodeIdx>,
+}
+
+/// A schedulable unit: a single creation, or a whole MTL group executed
+/// once as a barrier task (the merged `cr'` of paper §5).
+#[derive(Debug, Clone)]
+pub struct PlanTask {
+    /// Group members (one for non-MTL tasks), sorted by name for MTL
+    /// groups so the executor's spec order is deterministic.
+    pub members: Vec<PlanMember>,
+    /// Whether this task runs through `execute_mtl_group`.
+    pub mtl: bool,
+    /// Index into `members` whose parent set feeds the executor (the
+    /// lowest-index member — the one the serial implementation reached
+    /// first in topological order).
+    pub parent_source: usize,
+    /// Task ids that must complete before this one can run.
+    pub deps: Vec<usize>,
+    /// Task ids unblocked by this one (inverse of `deps`).
+    pub dependents: Vec<usize>,
+}
+
+/// Immutable output of Phase A: what to execute, in what partial order.
+#[derive(Debug, Clone)]
+pub struct CascadePlan {
+    /// The updated model's old version.
+    pub m: NodeIdx,
+    /// The user-registered new version of `m`.
+    pub m_new: NodeIdx,
+    /// Execution units in deterministic creation order.
+    pub tasks: Vec<PlanTask>,
+    /// Descendants skipped because they had no creation function.
+    pub skipped_no_cr: Vec<NodeIdx>,
+    /// new-node index -> owning task id.
+    pub task_of: HashMap<NodeIdx, usize>,
+}
+
+impl CascadePlan {
+    /// Total number of models the plan will create.
+    pub fn n_models(&self) -> usize {
+        self.tasks.iter().map(|t| t.members.len()).sum()
+    }
+
+    /// Serialize for the on-disk journal. Nodes are stored by *name*
+    /// (indices are re-resolved against the saved graph on resume).
+    pub fn to_json(&self, g: &LineageGraph) -> Json {
+        let tasks: Vec<Json> = self
+            .tasks
+            .iter()
+            .map(|t| {
+                let members: Vec<Json> = t
+                    .members
+                    .iter()
+                    .map(|mb| {
+                        Json::obj()
+                            .set("old", g.node(mb.old).name.as_str())
+                            .set("new", mb.name.as_str())
+                            .set("arch", mb.arch.as_str())
+                            .set(
+                                "parents",
+                                Json::Arr(
+                                    mb.parents
+                                        .iter()
+                                        .map(|&p| Json::from(g.node(p).name.as_str()))
+                                        .collect(),
+                                ),
+                            )
+                            .set("spec", mb.spec.to_json())
+                    })
+                    .collect();
+                Json::obj()
+                    .set("mtl", t.mtl)
+                    .set("parent_source", t.parent_source)
+                    .set("deps", Json::Arr(t.deps.iter().map(|&d| Json::from(d)).collect()))
+                    .set("members", Json::Arr(members))
+            })
+            .collect();
+        Json::obj()
+            .set("version", 1usize)
+            .set("m", g.node(self.m).name.as_str())
+            .set("m_new", g.node(self.m_new).name.as_str())
+            .set(
+                "skipped_no_cr",
+                Json::Arr(
+                    self.skipped_no_cr
+                        .iter()
+                        .map(|&i| Json::from(g.node(i).name.as_str()))
+                        .collect(),
+                ),
+            )
+            .set("tasks", Json::Arr(tasks))
+    }
+
+    /// Rebuild a plan from [`CascadePlan::to_json`] against a graph that
+    /// already contains the Phase-A nodes (the repo graph is saved right
+    /// after planning, before execution starts).
+    pub fn from_json(j: &Json, g: &LineageGraph) -> Result<CascadePlan> {
+        let m = g.idx(j.req_str("m")?)?;
+        let m_new = g.idx(j.req_str("m_new")?)?;
+        let mut skipped_no_cr = Vec::new();
+        for s in j.req_arr("skipped_no_cr")? {
+            let name = s.as_str().ok_or_else(|| anyhow!("bad skipped entry"))?;
+            skipped_no_cr.push(g.idx(name)?);
+        }
+        let mut tasks = Vec::new();
+        let mut task_of = HashMap::new();
+        for (tid, tj) in j.req_arr("tasks")?.iter().enumerate() {
+            let mtl = tj.req("mtl")?.as_bool().unwrap_or(false);
+            let parent_source = tj.req_usize("parent_source")?;
+            let mut deps = Vec::new();
+            for d in tj.req_arr("deps")? {
+                deps.push(d.as_usize().ok_or_else(|| anyhow!("bad dep index"))?);
+            }
+            let mut members = Vec::new();
+            for mj in tj.req_arr("members")? {
+                let name = mj.req_str("new")?.to_string();
+                let new = g.idx(&name)?;
+                let mut parents = Vec::new();
+                for p in mj.req_arr("parents")? {
+                    let pname = p.as_str().ok_or_else(|| anyhow!("bad parent entry"))?;
+                    parents.push(g.idx(pname)?);
+                }
+                members.push(PlanMember {
+                    old: g.idx(mj.req_str("old")?)?,
+                    new,
+                    name,
+                    arch: mj.req_str("arch")?.to_string(),
+                    spec: CreationSpec::from_json(mj.req("spec")?)?,
+                    parents,
+                });
+            }
+            if parent_source >= members.len() {
+                bail!("task {tid}: parent_source out of range");
+            }
+            for mb in &members {
+                task_of.insert(mb.new, tid);
+            }
+            tasks.push(PlanTask { members, mtl, parent_source, deps, dependents: Vec::new() });
+        }
+        for tid in 0..tasks.len() {
+            for d in tasks[tid].deps.clone() {
+                if d >= tasks.len() {
+                    bail!("task {tid}: dependency {d} out of range");
+                }
+                tasks[d].dependents.push(tid);
+            }
+        }
+        let plan = CascadePlan { m, m_new, tasks, skipped_no_cr, task_of };
+        plan.check_acyclic()?;
+        Ok(plan)
+    }
+
+    /// Kahn's algorithm over the task graph; MTL grouping can in theory
+    /// fold a provenance path back into its own group, which would stall
+    /// the scheduler forever — fail fast instead.
+    fn check_acyclic(&self) -> Result<()> {
+        let mut indeg: Vec<usize> = self.tasks.iter().map(|t| t.deps.len()).collect();
+        let mut queue: Vec<usize> =
+            (0..self.tasks.len()).filter(|&t| indeg[t] == 0).collect();
+        let mut seen = 0;
+        while let Some(t) = queue.pop() {
+            seen += 1;
+            for &d in &self.tasks[t].dependents {
+                indeg[d] -= 1;
+                if indeg[d] == 0 {
+                    queue.push(d);
+                }
+            }
+        }
+        if seen != self.tasks.len() {
+            bail!(
+                "cascade plan has a dependency cycle ({} of {} tasks unreachable; \
+                 an MTL group probably spans a provenance chain)",
+                self.tasks.len() - seen,
+                self.tasks.len()
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Phase A of Algorithm 2. Creates an (empty) next version of every
+/// provenance descendant of `m` that has a creation function, wires
+/// version + provenance edges, and returns the execution plan. `m_new`
+/// must already be registered as the next version of `m` (the CLI's
+/// `cascade` command does that setup).
+pub fn plan_cascade(
+    g: &mut LineageGraph,
+    m: NodeIdx,
+    m_new: NodeIdx,
+    skip: impl Fn(&LineageGraph, NodeIdx) -> bool,
+    terminate: impl Fn(&LineageGraph, NodeIdx) -> bool,
+) -> Result<CascadePlan> {
+    if g.next_version(m) != Some(m_new) {
+        bail!("m' must be the registered next version of m");
+    }
+
+    // BFS over m's provenance descendants, honouring skip/terminate.
+    let descendants = traversal::bfs(
+        g,
+        m,
+        traversal::EdgeFilter::Provenance,
+        |g2, i| i == m || skip(g2, i),
+        &terminate,
+    );
+
+    // Create the next-version nodes in BFS order (matches the serial
+    // implementation, so node indices — and graph JSON — are identical).
+    let mut skipped_no_cr = Vec::new();
+    let mut next_of: HashMap<NodeIdx, NodeIdx> = HashMap::from([(m, m_new)]);
+    let mut created: Vec<(NodeIdx, NodeIdx)> = Vec::new(); // (old, new)
+    for &x in &descendants {
+        if g.node(x).creation.is_none() {
+            skipped_no_cr.push(x);
+            continue;
+        }
+        let name = next_version_name(g, &g.node(x).name);
+        let model_type = g.node(x).model_type.clone();
+        let x_new = g.add_node(&name, &model_type)?;
+        g.node_mut(x_new).creation = g.node(x).creation.clone();
+        g.node_mut(x_new).metadata = g.node(x).metadata.clone();
+        g.add_version_edge(x, x_new)?;
+        next_of.insert(x, x_new);
+        created.push((x, x_new));
+    }
+
+    // Provenance edges: from the next version of each parent where one
+    // exists, falling back to the current parent. Iterate in sorted node
+    // order — per-child parent order is fixed either way, but sorted
+    // iteration also pins the children order on shared parents, making
+    // the whole Phase-A mutation reproducible run to run.
+    let mut wiring = created.clone();
+    wiring.sort_unstable_by_key(|&(x, _)| x);
+    for &(x, x_new) in &wiring {
+        let parents = g.node(x).prov_parents.clone();
+        for p in parents {
+            let p_eff = next_of.get(&p).copied().unwrap_or(p);
+            g.add_edge(p_eff, x_new)?;
+        }
+    }
+
+    // Fold the created nodes into tasks: MTL members sharing a group are
+    // gathered into one barrier task; everything else is a task of one.
+    let mut tasks: Vec<PlanTask> = Vec::new();
+    let mut task_of: HashMap<NodeIdx, usize> = HashMap::new();
+    for &(x, x_new) in &created {
+        if task_of.contains_key(&x_new) {
+            continue; // already claimed by an earlier MTL group
+        }
+        let spec = g.node(x_new).creation.clone().expect("created nodes carry a creation fn");
+        let tid = tasks.len();
+        let mut member_nodes: Vec<(NodeIdx, NodeIdx)> = vec![(x, x_new)];
+        let mtl = matches!(&spec, CreationSpec::Mtl { .. });
+        if let CreationSpec::Mtl { group, .. } = &spec {
+            let group_tasks: HashSet<&String> = group.iter().collect();
+            for &(y, y_new) in &created {
+                if y_new == x_new || task_of.contains_key(&y_new) {
+                    continue;
+                }
+                if let Some(CreationSpec::Mtl { task, .. }) = &g.node(y_new).creation {
+                    if group_tasks.contains(task) {
+                        member_nodes.push((y, y_new));
+                    }
+                }
+            }
+            member_nodes.sort_by(|&(_, a), &(_, b)| g.node(a).name.cmp(&g.node(b).name));
+        }
+        let parent_source = member_nodes
+            .iter()
+            .enumerate()
+            .min_by_key(|&(_, &(_, n))| n)
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        let members: Vec<PlanMember> = member_nodes
+            .iter()
+            .map(|&(old, new)| PlanMember {
+                old,
+                new,
+                name: g.node(new).name.clone(),
+                arch: g.node(new).model_type.clone(),
+                spec: g.node(new).creation.clone().expect("created nodes carry a creation fn"),
+                parents: g.node(new).prov_parents.clone(),
+            })
+            .collect();
+        for mb in &members {
+            task_of.insert(mb.new, tid);
+        }
+        tasks.push(PlanTask {
+            members,
+            mtl,
+            parent_source,
+            deps: Vec::new(),
+            dependents: Vec::new(),
+        });
+    }
+
+    // Dependencies: task A waits on task B when any member of A has a
+    // provenance parent created by B.
+    for tid in 0..tasks.len() {
+        let mut deps: Vec<usize> = tasks[tid]
+            .members
+            .iter()
+            .flat_map(|mb| mb.parents.iter())
+            .filter_map(|p| task_of.get(p).copied())
+            .filter(|&d| d != tid)
+            .collect();
+        deps.sort_unstable();
+        deps.dedup();
+        tasks[tid].deps = deps;
+    }
+    for tid in 0..tasks.len() {
+        for d in tasks[tid].deps.clone() {
+            tasks[d].dependents.push(tid);
+        }
+    }
+
+    let plan = CascadePlan { m, m_new, tasks, skipped_no_cr, task_of };
+    plan.check_acyclic()?;
+    Ok(plan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::registry::{FreezeSpec, Objective};
+
+    fn finetune(task: &str) -> CreationSpec {
+        CreationSpec::Finetune {
+            task: task.into(),
+            objective: Objective::Cls,
+            steps: 1,
+            lr: 0.1,
+            seed: 0,
+            freeze: FreezeSpec::None,
+            perturb: None,
+        }
+    }
+
+    /// m -> a -> b ; m -> c(no cr); m2 registered as m's next version.
+    fn chain_graph() -> (LineageGraph, NodeIdx, NodeIdx) {
+        let mut g = LineageGraph::new();
+        let m = g.add_node("m", "t").unwrap();
+        let a = g.add_node("a", "t").unwrap();
+        let b = g.add_node("b", "t").unwrap();
+        let c = g.add_node("c", "t").unwrap();
+        g.add_edge(m, a).unwrap();
+        g.add_edge(a, b).unwrap();
+        g.add_edge(m, c).unwrap();
+        g.register_creation_function(a, finetune("t1")).unwrap();
+        g.register_creation_function(b, finetune("t2")).unwrap();
+        let m2 = g.add_node("m@v2", "t").unwrap();
+        g.add_version_edge(m, m2).unwrap();
+        (g, m, m2)
+    }
+
+    #[test]
+    fn plan_builds_chain_dependencies() {
+        let (mut g, m, m2) = chain_graph();
+        let plan = plan_cascade(&mut g, m, m2, |_, _| false, |_, _| false).unwrap();
+        assert_eq!(plan.tasks.len(), 2);
+        assert_eq!(plan.skipped_no_cr.len(), 1);
+        // a@v2 has no created parents; b@v2 depends on a@v2's task.
+        let a2 = g.idx("a@v2").unwrap();
+        let b2 = g.idx("b@v2").unwrap();
+        let ta = plan.task_of[&a2];
+        let tb = plan.task_of[&b2];
+        assert!(plan.tasks[ta].deps.is_empty());
+        assert_eq!(plan.tasks[tb].deps, vec![ta]);
+        assert_eq!(plan.tasks[ta].dependents, vec![tb]);
+        // Parent wiring: a@v2 <- m@v2, b@v2 <- a@v2.
+        assert_eq!(g.node(a2).prov_parents, vec![m2]);
+        assert_eq!(g.node(b2).prov_parents, vec![a2]);
+        g.integrity_check().unwrap();
+    }
+
+    #[test]
+    fn plan_requires_version_edge() {
+        let (mut g, m, _) = chain_graph();
+        let a = g.idx("a").unwrap();
+        assert!(plan_cascade(&mut g, m, a, |_, _| false, |_, _| false).is_err());
+    }
+
+    #[test]
+    fn mtl_members_fold_into_one_task() {
+        let mut g = LineageGraph::new();
+        let m = g.add_node("m", "t").unwrap();
+        let t1 = g.add_node("t1", "t").unwrap();
+        let t2 = g.add_node("t2", "t").unwrap();
+        g.add_edge(m, t1).unwrap();
+        g.add_edge(m, t2).unwrap();
+        let mtl = |task: &str| CreationSpec::Mtl {
+            task: task.into(),
+            group: vec!["t1".into(), "t2".into()],
+            steps: 1,
+            lr: 0.1,
+            seed: 0,
+        };
+        g.register_creation_function(t1, mtl("t1")).unwrap();
+        g.register_creation_function(t2, mtl("t2")).unwrap();
+        let m2 = g.add_node("m@v2", "t").unwrap();
+        g.add_version_edge(m, m2).unwrap();
+        let plan = plan_cascade(&mut g, m, m2, |_, _| false, |_, _| false).unwrap();
+        assert_eq!(plan.tasks.len(), 1);
+        assert!(plan.tasks[0].mtl);
+        assert_eq!(plan.tasks[0].members.len(), 2);
+        // Members sorted by name.
+        assert_eq!(plan.tasks[0].members[0].name, "t1@v2");
+        assert_eq!(plan.tasks[0].members[1].name, "t2@v2");
+    }
+
+    #[test]
+    fn plan_json_roundtrip() {
+        let (mut g, m, m2) = chain_graph();
+        let plan = plan_cascade(&mut g, m, m2, |_, _| false, |_, _| false).unwrap();
+        let j = plan.to_json(&g);
+        let back = CascadePlan::from_json(&j, &g).unwrap();
+        assert_eq!(back.tasks.len(), plan.tasks.len());
+        assert_eq!(back.m, plan.m);
+        assert_eq!(back.m_new, plan.m_new);
+        assert_eq!(back.skipped_no_cr, plan.skipped_no_cr);
+        for (a, b) in back.tasks.iter().zip(&plan.tasks) {
+            assert_eq!(a.deps, b.deps);
+            assert_eq!(a.dependents, b.dependents);
+            assert_eq!(a.mtl, b.mtl);
+            assert_eq!(a.parent_source, b.parent_source);
+            assert_eq!(a.members.len(), b.members.len());
+            for (x, y) in a.members.iter().zip(&b.members) {
+                assert_eq!((x.old, x.new, &x.name), (y.old, y.new, &y.name));
+                assert_eq!(x.parents, y.parents);
+                assert_eq!(x.spec, y.spec);
+            }
+        }
+    }
+}

@@ -1,0 +1,271 @@
+//! Scheduling — wavefront execution of a [`CascadePlan`].
+//!
+//! A ready-queue scheduler over a scoped thread pool: every task whose
+//! dependencies are satisfied is *ready*; `jobs` workers pull ready
+//! tasks, execute them against the shared `&dyn CreationExecutor` /
+//! `&dyn CheckpointStore` (both `Send + Sync` by trait contract), and
+//! unblock dependents as they finish. Independent sibling models — the
+//! common shape of a lineage graph, where one upstream update fans out
+//! into many finetuned children — retrain concurrently instead of one
+//! at a time.
+//!
+//! * With `jobs = 1` the single worker drains the queue FIFO, which is
+//!   exactly the all-parents-first serial order of Algorithm 2 — results
+//!   are bit-identical to the historical serial implementation.
+//! * MTL groups are single barrier tasks: the whole group trains once
+//!   through [`CreationExecutor::execute_mtl_group`] on one worker.
+//! * On a task failure the first error is kept, no new tasks are issued,
+//!   in-flight tasks finish (and are journaled), and the error is
+//!   returned — `mgit cascade --resume` replays only the unfinished
+//!   suffix.
+//!
+//! The graph is *never mutated* here; workers read it only for
+//! pre-existing checkpoint pointers. Results are applied back onto the
+//! graph by [`crate::cascade::apply_results`] after the wavefront
+//! drains.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Condvar, Mutex};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::checkpoint::Checkpoint;
+use crate::delta::StoredModel;
+use crate::lineage::{LineageGraph, NodeIdx};
+use crate::registry::CreationSpec;
+use crate::update::{CheckpointStore, CreationExecutor};
+
+use super::journal::CascadeJournal;
+use super::plan::{CascadePlan, PlanTask};
+
+/// Completed-task results as replayed from a journal: task id -> the
+/// stored models of every member.
+pub type DoneTasks = HashMap<usize, Vec<(NodeIdx, StoredModel)>>;
+
+struct SchedState {
+    ready: VecDeque<usize>,
+    indeg: Vec<usize>,
+    /// Tasks not yet finished (neither done-from-journal nor executed).
+    remaining: usize,
+    /// Tasks currently executing on some worker.
+    running: usize,
+    /// Stored models of every completed new node (seeded from `done`).
+    results: HashMap<NodeIdx, StoredModel>,
+    /// First failure; once set, no new tasks are issued.
+    error: Option<anyhow::Error>,
+}
+
+/// Execute every task of `plan` not already in `done`, fanning out over
+/// `jobs` worker threads. Returns the stored model of every new node
+/// (journal-replayed ones included).
+pub fn execute_plan(
+    g: &LineageGraph,
+    plan: &CascadePlan,
+    ckstore: &dyn CheckpointStore,
+    exec: &dyn CreationExecutor,
+    jobs: usize,
+    journal: Option<&CascadeJournal>,
+    done: &DoneTasks,
+) -> Result<HashMap<NodeIdx, StoredModel>> {
+    let n_tasks = plan.tasks.len();
+    let mut results: HashMap<NodeIdx, StoredModel> = HashMap::new();
+    for outs in done.values() {
+        for (idx, sm) in outs {
+            results.insert(*idx, sm.clone());
+        }
+    }
+    // Effective in-degrees ignore dependencies already satisfied by the
+    // journal replay.
+    let indeg: Vec<usize> = plan
+        .tasks
+        .iter()
+        .map(|t| t.deps.iter().filter(|&d| !done.contains_key(d)).count())
+        .collect();
+    let ready: VecDeque<usize> = (0..n_tasks)
+        .filter(|t| !done.contains_key(t) && indeg[*t] == 0)
+        .collect();
+    let remaining = n_tasks - done.len();
+    if remaining == 0 {
+        return Ok(results);
+    }
+
+    let state = Mutex::new(SchedState {
+        ready,
+        indeg,
+        remaining,
+        running: 0,
+        results,
+        error: None,
+    });
+    let cv = Condvar::new();
+
+    let workers = jobs.max(1).min(remaining);
+    if workers <= 1 {
+        worker(g, plan, ckstore, exec, journal, &state, &cv);
+    } else {
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| worker(g, plan, ckstore, exec, journal, &state, &cv));
+            }
+        });
+    }
+
+    let st = state.into_inner().unwrap();
+    if let Some(e) = st.error {
+        return Err(e);
+    }
+    if st.remaining > 0 {
+        bail!("cascade scheduler exited with {} tasks unfinished", st.remaining);
+    }
+    Ok(st.results)
+}
+
+fn worker(
+    g: &LineageGraph,
+    plan: &CascadePlan,
+    ckstore: &dyn CheckpointStore,
+    exec: &dyn CreationExecutor,
+    journal: Option<&CascadeJournal>,
+    state: &Mutex<SchedState>,
+    cv: &Condvar,
+) {
+    loop {
+        let tid = {
+            let mut st = state.lock().unwrap();
+            loop {
+                if st.error.is_some() || st.remaining == 0 {
+                    return;
+                }
+                if let Some(t) = st.ready.pop_front() {
+                    st.running += 1;
+                    break t;
+                }
+                if st.running == 0 {
+                    // Nothing ready, nothing in flight, work remaining:
+                    // unreachable for an acyclic plan, but fail loudly
+                    // rather than deadlock if an invariant ever breaks.
+                    st.error = Some(anyhow!(
+                        "cascade scheduler stalled with {} tasks blocked",
+                        st.remaining
+                    ));
+                    cv.notify_all();
+                    return;
+                }
+                st = cv.wait(st).unwrap();
+            }
+        };
+
+        let task = &plan.tasks[tid];
+        let outcome = run_task(g, task, ckstore, exec, state).and_then(|outs| {
+            // Journal outside the scheduler lock: the record is a write +
+            // fsync, and serializing every worker behind it would bend
+            // wide wavefronts back toward serial. The journal's own file
+            // mutex keeps appends whole.
+            if let Some(j) = journal {
+                j.record(g, tid, &outs).context("writing cascade journal")?;
+            }
+            Ok(outs)
+        });
+
+        let mut st = state.lock().unwrap();
+        st.running -= 1;
+        match outcome {
+            Ok(outs) => {
+                for (idx, sm) in outs {
+                    st.results.insert(idx, sm);
+                }
+                for &dep in &task.dependents {
+                    st.indeg[dep] -= 1;
+                    if st.indeg[dep] == 0 {
+                        st.ready.push_back(dep);
+                    }
+                }
+                st.remaining -= 1;
+                cv.notify_all();
+            }
+            Err(e) => {
+                if st.error.is_none() {
+                    st.error = Some(e.context(format!(
+                        "cascade task `{}` failed",
+                        task.members[task.parent_source].name
+                    )));
+                }
+                cv.notify_all();
+                return;
+            }
+        }
+    }
+}
+
+/// Execute one task: load parent checkpoints (completed-in-cascade
+/// parents come from the results map, everything else from the graph),
+/// run the creation function(s), and persist each member against its
+/// previous version.
+fn run_task(
+    g: &LineageGraph,
+    task: &PlanTask,
+    ckstore: &dyn CheckpointStore,
+    exec: &dyn CreationExecutor,
+    state: &Mutex<SchedState>,
+) -> Result<Vec<(NodeIdx, StoredModel)>> {
+    let src = &task.members[task.parent_source];
+    // Snapshot the parent pointers under the lock, then do all I/O and
+    // compute outside it.
+    let parent_sms: Vec<StoredModel> = {
+        let st = state.lock().unwrap();
+        src.parents
+            .iter()
+            .map(|&p| match st.results.get(&p) {
+                Some(sm) => Ok(sm.clone()),
+                None => g
+                    .node(p)
+                    .stored
+                    .clone()
+                    .ok_or_else(|| anyhow!("parent {} has no checkpoint", g.node(p).name)),
+            })
+            .collect::<Result<_>>()?
+    };
+    let parents: Vec<Checkpoint> = parent_sms
+        .iter()
+        .map(|sm| ckstore.load(sm))
+        .collect::<Result<_>>()?;
+
+    let mut outs = Vec::with_capacity(task.members.len());
+    if task.mtl {
+        let specs: Vec<&CreationSpec> = task.members.iter().map(|mb| &mb.spec).collect();
+        let cks = exec.execute_mtl_group(&specs, &src.arch, &parents)?;
+        if cks.len() != task.members.len() {
+            bail!(
+                "MTL executor returned {} models for {} members",
+                cks.len(),
+                task.members.len()
+            );
+        }
+        for (mb, ck) in task.members.iter().zip(&cks) {
+            outs.push(save_member(g, ckstore, mb.old, mb.new, ck)?);
+        }
+    } else {
+        let ck = exec.execute(&src.spec, &src.arch, &parents)?;
+        outs.push(save_member(g, ckstore, src.old, src.new, &ck)?);
+    }
+    Ok(outs)
+}
+
+/// Persist one member's checkpoint, delta-compressing against its
+/// previous version when that version has a stored checkpoint.
+fn save_member(
+    g: &LineageGraph,
+    ckstore: &dyn CheckpointStore,
+    old: NodeIdx,
+    new: NodeIdx,
+    ck: &Checkpoint,
+) -> Result<(NodeIdx, StoredModel)> {
+    let prev_data = match &g.node(old).stored {
+        Some(sm) => Some((sm.clone(), ckstore.load(sm)?)),
+        None => None,
+    };
+    let sm = ckstore
+        .save(ck, prev_data.as_ref().map(|(s, c)| (s, c)))
+        .with_context(|| format!("storing {}", g.node(new).name))?;
+    Ok((new, sm))
+}

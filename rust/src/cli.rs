@@ -23,16 +23,20 @@
 //! mgit build <g1|g2|g3|g4|g5>    # train + register a workload graph
 //! mgit compress --codec <rle|lzma|zstd> [--eps E]  # re-store with deltas
 //! mgit test [--re REGEX]         # run registered tests over the graph
-//! mgit cascade <node> [--steps N]# perturb-retrain node, cascade children
+//! mgit cascade <node> [--steps N] [--jobs N]
+//!                                # perturb-retrain node, cascade children
+//!                                # (wavefront-parallel over N workers)
+//! mgit cascade --resume [--jobs N] # finish an interrupted cascade
 //! mgit stats                     # store/dedup/chain-depth statistics
 //! ```
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use regex::Regex;
 
 use crate::autoconstruct::AutoConfig;
+use crate::cascade;
 use crate::checkpoint::Checkpoint;
 use crate::delta::{self, Codec, CompressConfig, DeltaKernel, NativeKernel};
 use crate::diff::{divergence_scores, value_distance};
@@ -141,7 +145,12 @@ impl Repo {
         res
     }
 
-    pub fn load_checkpoint(&self, node: &str, kernel: &dyn DeltaKernel, zoo: &crate::checkpoint::ModelZoo) -> Result<Checkpoint> {
+    pub fn load_checkpoint(
+        &self,
+        node: &str,
+        kernel: &dyn DeltaKernel,
+        zoo: &crate::checkpoint::ModelZoo,
+    ) -> Result<Checkpoint> {
         let n = self.graph.by_name(node)?;
         let sm = n
             .stored
@@ -218,6 +227,10 @@ usage: mgit <command> [args] [--flags]
   repack                     pack new loose objects into a fresh pack
                              (--incremental, the default; --full rewrites
                              every pack) [--max-chain-depth 8] [--prune]
+                             [--auto-full-gens 16] [--auto-full-dead 0.5]
+                             (incremental auto-promotes to a full rewrite
+                             past either threshold; 0 disables; the dead-
+                             byte trigger fires only with --prune)
   verify-pack                verify pack checksums + object content hashes
   diff <a> <b>               divergence scores between two models
   merge <base> <m1> <m2>     figure-2 merge (conflict detection)
@@ -227,6 +240,8 @@ usage: mgit <command> [args] [--flags]
   test [--re REGEX]          run registered tests over all nodes
   cascade <node>             retrain <node> on perturbed data, then run
                              the update cascade over its descendants
+                             [--jobs N] (wavefront-parallel) — journaled:
+                             `cascade --resume` finishes an interrupted run
   auto-insert                rebuild provenance edges automatically (§3.2)
 
 global flags: --dir DIR  --artifacts DIR
@@ -457,10 +472,27 @@ fn cmd_repack(root: &Path, args: &Args) -> Result<()> {
         bail!("--full and --incremental are mutually exclusive");
     }
     let mode = if args.has("full") { RepackMode::Full } else { RepackMode::Incremental };
+    // Generation-aware escalation defaults (ROADMAP follow-up): after 16
+    // generations or once half the sealed pack bytes are garbage, an
+    // incremental run is promoted to a full rewrite. `0` disables either.
+    let max_generations = match args.flag_usize("auto-full-gens", 16)? {
+        0 => None,
+        n => Some(n),
+    };
+    let max_dead_ratio = {
+        let r = args.flag_f64("auto-full-dead", 0.5)?;
+        if r <= 0.0 {
+            None
+        } else {
+            Some(r)
+        }
+    };
     let cfg = crate::store::pack::RepackConfig {
         max_chain_depth: args.flag_usize("max-chain-depth", 8)?,
         prune: args.has("prune"),
         mode,
+        max_generations,
+        max_dead_ratio,
     };
     let roots = repo.graph.object_roots();
     let t = crate::util::timing::Timer::start();
@@ -468,17 +500,24 @@ fn cmd_repack(root: &Path, args: &Args) -> Result<()> {
     // re-based encodings agree across runtime backends.
     let report = crate::store::pack::repack(&mut repo.store, &roots, &cfg, &NativeKernel)?;
     repo.save()?;
+    let mode_label = match (mode, &report.escalated) {
+        (RepackMode::Full, _) => "full".to_string(),
+        (RepackMode::Incremental, None) => "incremental".to_string(),
+        (RepackMode::Incremental, Some(reason)) => {
+            format!("incremental -> full: {reason}")
+        }
+    };
     println!(
         "repacked {} objects ({} retained in old packs, {} carried dead) in {} [{}]",
         report.packed,
         report.retained_packed,
         report.carried_dead,
         human_secs(t.elapsed_secs()),
-        match mode {
-            RepackMode::Incremental => "incremental",
-            RepackMode::Full => "full",
-        }
+        mode_label
     );
+    if report.dead_ratio > 0.0 {
+        println!("garbage: {:.1}% of sealed pack bytes are unreachable", report.dead_ratio * 100.0);
+    }
     println!("packs:  {} -> {}", report.packs_before, report.packs_after);
     println!(
         "chains: max depth {} -> {} ({} re-based onto nearer ancestors, {} new bases)",
@@ -884,9 +923,69 @@ fn cmd_test(root: &Path, artifacts: &Path, args: &Args) -> Result<()> {
 }
 
 fn cmd_cascade(root: &Path, artifacts: &Path, args: &Args) -> Result<()> {
-    let mut repo = Repo::open(root)?;
+    use crate::update::{CheckpointStore as _, CreationExecutor as _};
+
+    let jobs = args.flag_usize("jobs", 1)?;
+    let jdir = cascade::journal_dir(&Repo::mgit_dir(root));
+    let resume = args.has("resume");
+
+    // Cheap precondition checks first: a missing/stale journal should
+    // produce its actionable message without paying runtime startup
+    // (and without runtime-init errors masking it).
+    if resume && !cascade::journal_exists(&jdir) {
+        bail!("no interrupted cascade to resume (no journal at {})", jdir.display());
+    }
+    if !resume && cascade::journal_exists(&jdir) {
+        bail!(
+            "an interrupted cascade journal exists at {}; run `mgit cascade --resume` \
+             to finish it (or delete the directory to abandon it)",
+            jdir.display()
+        );
+    }
+
+    // Shared execution substrate: one trainer + one CAS-backed store
+    // serve every scheduler worker; parent checkpoints resolve through
+    // a shared bounded cache so concurrent loads reuse ancestors.
     let rt = Runtime::new(artifacts)?;
     let zoo = rt.zoo().clone();
+    let trainer = Trainer::new(&rt);
+    let cache = delta::ResolveCache::with_max_bytes(128, 256 << 20);
+
+    if resume {
+        let mut repo = Repo::open(root)?;
+        let ckstore = CasCheckpointStore {
+            store: &repo.store,
+            zoo: &zoo,
+            kernel: &NativeKernel,
+            compress: Some(CompressConfig::default()),
+            cache: Some(&cache),
+        };
+        let report = cascade::resume(&mut repo.graph, &ckstore, &trainer, &jdir, jobs)
+            .with_context(|| {
+                format!(
+                    "resuming the cascade journaled at {} (a plan that no longer \
+                     binds to the graph means the original run died before the \
+                     graph was saved — delete the journal directory and re-run \
+                     the cascade)",
+                    jdir.display()
+                )
+            })?;
+        repo.save()?;
+        cascade::remove_journal(&jdir)?;
+        println!(
+            "resumed cascade: {} new versions ({} tasks replayed from the journal), \
+             {} skipped (no cr)",
+            report.new_versions.len(),
+            report.resumed_tasks,
+            report.skipped_no_cr.len()
+        );
+        for (old, new) in report.new_versions {
+            println!("  {} -> {}", repo.graph.node(old).name, repo.graph.node(new).name);
+        }
+        return Ok(());
+    }
+
+    let mut repo = Repo::open(root)?;
     let node_name = args.pos(0, "node")?.to_string();
     let steps = args.flag_usize("steps", 30)?;
     let perturb = args.flag_or("perturb", "swap").to_string();
@@ -896,37 +995,57 @@ fn cmd_cascade(root: &Path, artifacts: &Path, args: &Args) -> Result<()> {
     let ck = repo.load_checkpoint(&node_name, &rt, &zoo)?;
 
     // Retrain the root on perturbed data -> m'.
-    let mut trainer = Trainer::new(&rt);
     let spec = CreationSpec::Pretrain { corpus_seed: 777, steps, lr: 0.02 };
     let _ = perturb; // root update here is a fresh pretrain continuation
-    let new_ck = {
-        use crate::update::CreationExecutor;
-        trainer.execute(&spec, &arch, &[ck.clone()])?
-    };
-    let mut ckstore = CasCheckpointStore {
+    let new_ck = trainer.execute(&spec, &arch, &[ck.clone()])?;
+    let ckstore = CasCheckpointStore {
         store: &repo.store,
         zoo: &zoo,
         kernel: &NativeKernel,
         compress: Some(CompressConfig::default()),
+        cache: Some(&cache),
     };
-    let sm = update::CheckpointStore::save(&mut ckstore, &new_ck, None)?;
+    let sm = ckstore.save(&new_ck, None)?;
     let new_name = update::next_version_name(&repo.graph, &node_name);
     let m_new = repo.graph.add_node(&new_name, &arch)?;
     repo.graph.node_mut(m_new).stored = Some(sm);
     repo.graph.add_version_edge(m, m_new)?;
 
-    let report = update::run_update_cascade(
-        &mut repo.graph,
-        &mut ckstore,
-        &mut trainer,
-        m,
-        m_new,
-        |_, _| false,
-        |_, _| false,
-    )?;
+    // Plan (all graph mutation), journal the plan, then persist the
+    // graph so a crash during execution is resumable. Journal-first: if
+    // we die between the two writes, graph.json is still pre-cascade —
+    // `--resume` then fails to re-bind the plan (its nodes were never
+    // saved) and tells the user to delete the journal, which is strictly
+    // better than the graph accumulating orphaned, never-stored
+    // next-version nodes.
+    let plan = cascade::plan_cascade(&mut repo.graph, m, m_new, |_, _| false, |_, _| false)?;
+    let journal = cascade::CascadeJournal::create(&jdir, &plan, &repo.graph)?;
     repo.save()?;
+    let opts = cascade::CascadeOptions { jobs, journal: Some(&journal) };
+    let report = match cascade::execute_and_apply(
+        &mut repo.graph,
+        &plan,
+        &ckstore,
+        &trainer,
+        &opts,
+        &cascade::DoneTasks::new(),
+    ) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!(
+                "cascade interrupted; finished models are journaled — \
+                 run `mgit cascade --resume` to continue"
+            );
+            return Err(e);
+        }
+    };
+    repo.save()?;
+    drop(journal);
+    cascade::remove_journal(&jdir)?;
     println!(
-        "cascade from {node_name} -> {new_name}: {} new versions, {} skipped (no cr)",
+        "cascade from {node_name} -> {new_name} ({} jobs): {} new versions, \
+         {} skipped (no cr)",
+        jobs.max(1),
         report.new_versions.len(),
         report.skipped_no_cr.len()
     );

@@ -142,7 +142,11 @@ pub struct Candidate {
 /// Store a checkpoint without delta compression (content hashing only —
 /// the paper's "Hash" configuration; identical tensors dedup across
 /// models automatically).
-pub fn store_raw(store: &Store, spec: &ArchSpec, ck: &Checkpoint) -> Result<(StoredModel, CompressReport)> {
+pub fn store_raw(
+    store: &Store,
+    spec: &ArchSpec,
+    ck: &Checkpoint,
+) -> Result<(StoredModel, CompressReport)> {
     ck.check_arch(spec)?;
     let mut params = Vec::with_capacity(spec.layout.len());
     let mut report = CompressReport { n_params: spec.layout.len(), ..Default::default() };

@@ -68,7 +68,7 @@ pub struct FlRound {
 pub fn run_federated(
     rt: &Runtime,
     g: &mut LineageGraph,
-    ckstore: &mut dyn CheckpointStore,
+    ckstore: &dyn CheckpointStore,
     cfg: &FlConfig,
 ) -> Result<Vec<FlRound>> {
     let zoo = rt.zoo();

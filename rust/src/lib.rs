@@ -8,7 +8,8 @@
 //!   (Algorithm 1), the structural/contextual [`diff`] primitive
 //!   (Algorithm 3), [`autoconstruct`]-ed graphs (§3.2), the [`merge`]
 //!   decision tree (Figure 2), test/creation-function [`registry`]
-//!   machinery, and the [`update`] cascade (Algorithm 2).
+//!   machinery, and the [`update`]/[`cascade`] execution tier
+//!   (Algorithm 2, planned + wavefront-scheduled + journaled).
 //! * **L2/L1 (build-time Python, `python/compile/`)** — the transformer
 //!   model family and Pallas kernels, AOT-lowered to HLO text artifacts
 //!   that the [`runtime`] executes through the PJRT CPU client. Python is
@@ -20,6 +21,7 @@
 //! dependency-free [`util`] (JSON, PRNG, CLI parsing, property testing).
 
 pub mod autoconstruct;
+pub mod cascade;
 pub mod checkpoint;
 pub mod cli;
 pub mod data;

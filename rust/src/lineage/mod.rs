@@ -335,7 +335,9 @@ impl LineageGraph {
     /// Nodes with no provenance parents.
     pub fn roots(&self) -> Vec<NodeIdx> {
         (0..self.nodes.len())
-            .filter(|&i| self.nodes[i].prov_parents.is_empty() && self.nodes[i].ver_parents.is_empty())
+            .filter(|&i| {
+                self.nodes[i].prov_parents.is_empty() && self.nodes[i].ver_parents.is_empty()
+            })
             .collect()
     }
 

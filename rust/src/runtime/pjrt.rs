@@ -11,11 +11,10 @@
 //!   storage path's hot loop runs the same compiled code the paper's
 //!   GPU implementation would.
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
 use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, bail, Result};
 
@@ -25,11 +24,28 @@ use crate::data;
 use crate::delta::quant::DeltaKernel;
 use crate::registry::{EvalBackend, Objective};
 
-pub struct Runtime {
+/// The PJRT client plus its lazily-compiled executable cache — the only
+/// part of [`Runtime`] whose thread-safety the compiler cannot verify.
+struct XlaHandles {
     client: xla::PjRtClient,
+    exes: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+// SAFETY: the execution-tier contract (`CreationExecutor`/`DeltaKernel`
+// implementations are `Send + Sync`) requires sharing one Runtime across
+// cascade worker threads. XLA's PJRT CPU client and loaded executables
+// are internally synchronized (PJRT documents Execute as thread-safe);
+// the lazily-built executable cache is behind a `Mutex`. The `xla`
+// bindings simply don't propagate the auto traits through their raw
+// pointers, hence the explicit impls — scoped to this newtype so the
+// compiler keeps checking every other Runtime field.
+unsafe impl Send for XlaHandles {}
+unsafe impl Sync for XlaHandles {}
+
+pub struct Runtime {
+    xla: XlaHandles,
     zoo: ModelZoo,
     dir: PathBuf,
-    exes: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
     pub stats: RuntimeStats,
 }
 
@@ -41,10 +57,9 @@ impl Runtime {
         let client = xla::PjRtClient::cpu()
             .map_err(|e| anyhow!("creating PJRT CPU client: {e:?}"))?;
         Ok(Runtime {
-            client,
+            xla: XlaHandles { client, exes: Mutex::new(HashMap::new()) },
             zoo,
             dir: artifacts_dir.to_path_buf(),
-            exes: RefCell::new(HashMap::new()),
             stats: RuntimeStats::default(),
         })
     }
@@ -53,10 +68,13 @@ impl Runtime {
         &self.zoo
     }
 
-    fn exe(&self, file: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.exes.borrow().get(file) {
+    fn exe(&self, file: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.xla.exes.lock().unwrap().get(file) {
             return Ok(e.clone());
         }
+        // Compile outside the lock (it can take a while); two threads
+        // racing on the same artifact both compile once and the second
+        // insert simply wins — executables are interchangeable.
         let path = self.dir.join(file);
         let proto = xla::HloModuleProto::from_text_file(
             path.to_str().ok_or_else(|| anyhow!("bad path"))?,
@@ -64,12 +82,13 @@ impl Runtime {
         .map_err(|e| anyhow!("parsing HLO text {}: {e:?}", path.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = self
+            .xla
             .client
             .compile(&comp)
             .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
         self.stats.compile_count.fetch_add(1, Ordering::Relaxed);
-        let exe = Rc::new(exe);
-        self.exes.borrow_mut().insert(file.to_string(), exe.clone());
+        let exe = Arc::new(exe);
+        self.xla.exes.lock().unwrap().insert(file.to_string(), exe.clone());
         Ok(exe)
     }
 

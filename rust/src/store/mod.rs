@@ -218,9 +218,9 @@ pub struct DiskStore {
 impl DiskStore {
     /// Open (creating if needed) a loose store rooted at `dir`. Stale
     /// `*.tmp*` staging files from puts that crashed mid-write are swept
-    /// here: open happens before any reader/writer threads exist, and
-    /// repository operations are per-invocation single-writer, so nothing
-    /// in-flight can own them.
+    /// here — but only past a grace period, because *another process*
+    /// may have an in-flight put staged (open-before-threads only rules
+    /// out this process's own writers).
     pub fn open(dir: &Path) -> Result<DiskStore> {
         std::fs::create_dir_all(dir)
             .with_context(|| format!("creating object store at {}", dir.display()))?;
@@ -230,7 +230,12 @@ impl DiskStore {
     }
 
     /// Best-effort removal of orphaned put-staging files (crash debris).
+    /// Only files older than a grace period are swept: another live mgit
+    /// process may be between its staging write and the rename, and
+    /// deleting its tmp file would fail that in-flight `put`.
     fn sweep_stale_tmp(&self) {
+        const GRACE: std::time::Duration = std::time::Duration::from_secs(15 * 60);
+        let now = std::time::SystemTime::now();
         let Ok(fans) = std::fs::read_dir(&self.root) else { return };
         for fan in fans.filter_map(|e| e.ok()) {
             let name = fan.file_name().to_string_lossy().to_string();
@@ -239,7 +244,17 @@ impl DiskStore {
             }
             let Ok(objs) = std::fs::read_dir(fan.path()) else { continue };
             for obj in objs.filter_map(|e| e.ok()) {
-                if obj.file_name().to_string_lossy().contains(".tmp") {
+                if !obj.file_name().to_string_lossy().contains(".tmp") {
+                    continue;
+                }
+                let stale = obj
+                    .metadata()
+                    .and_then(|m| m.modified())
+                    .ok()
+                    .and_then(|t| now.duration_since(t).ok())
+                    .map(|age| age > GRACE)
+                    .unwrap_or(false);
+                if stale {
                     let _ = std::fs::remove_file(obj.path());
                 }
             }

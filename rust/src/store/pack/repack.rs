@@ -23,6 +23,19 @@
 //!   (the original behaviour): every live chain is depth-capped, dead
 //!   packed objects are carried or pruned, and old packs are deleted.
 //!
+//! ## Generation-aware escalation
+//!
+//! Incremental repacks have two blind spots: pack generations accumulate
+//! (every read consults every index) and garbage sealed inside packs is
+//! never reclaimed. [`RepackConfig::max_generations`] and
+//! [`RepackConfig::max_dead_ratio`] bound both — when either threshold
+//! is exceeded an incremental run auto-promotes itself to a full
+//! rewrite, and [`RepackReport::escalated`] records why. The dead-byte
+//! trigger additionally requires [`RepackConfig::prune`] — a full
+//! rewrite that carried its garbage would re-escalate forever. The CLI
+//! enables escalation by default (`mgit repack --auto-full-gens 16
+//! --auto-full-dead 0.5`); at the library level both default to `None`.
+//!
 //! ## Chain re-basing
 //!
 //! Reconstruction cost grows linearly with chain depth (the chain-depth
@@ -83,12 +96,31 @@ pub struct RepackConfig {
     pub prune: bool,
     /// Incremental (pack only new loose objects) or full rewrite.
     pub mode: RepackMode,
+    /// Generation-aware escalation: an incremental repack auto-promotes
+    /// to a full rewrite once more than this many pack generations have
+    /// accumulated (each incremental run appends one). `None` disables.
+    pub max_generations: Option<usize>,
+    /// Escalation on garbage: auto-promote when the fraction of sealed
+    /// pack bytes holding *unreachable* objects exceeds this ratio
+    /// (incremental repacks can never reclaim packed garbage). Only
+    /// consulted together with [`RepackConfig::prune`] — a full rewrite
+    /// that carries its garbage would leave the ratio unchanged and
+    /// re-escalate forever. `None` disables.
+    pub max_dead_ratio: Option<f64>,
 }
 
 impl Default for RepackConfig {
     fn default() -> Self {
         // SNIPPETS.md chain-depth guidance: 1–10 reconstructs fast.
-        RepackConfig { max_chain_depth: 8, prune: false, mode: RepackMode::Incremental }
+        // Escalation is opt-in at the library level (the CLI enables it
+        // with its own defaults).
+        RepackConfig {
+            max_chain_depth: 8,
+            prune: false,
+            mode: RepackMode::Incremental,
+            max_generations: None,
+            max_dead_ratio: None,
+        }
     }
 }
 
@@ -124,6 +156,12 @@ pub struct RepackReport {
     pub packs_after: usize,
     /// Path of the freshly written pack, if any objects needed packing.
     pub pack_path: Option<PathBuf>,
+    /// Why an incremental run was auto-promoted to a full rewrite
+    /// (generation or dead-byte threshold), if it was.
+    pub escalated: Option<String>,
+    /// Fraction of sealed pack bytes that were unreachable at mark time
+    /// (the dead-byte ratio the escalation decision saw).
+    pub dead_ratio: f64,
 }
 
 /// Chain depth of every object in the store (0 = raw/opaque base).
@@ -204,7 +242,6 @@ pub fn repack(
         .ok_or_else(|| anyhow!("repack needs a pack-capable store (Store::open_packed)"))?;
     let pack_dir = packed.pack_dir();
     let old_pack_paths: Vec<PathBuf> = packed.packs().iter().map(|p| p.path.clone()).collect();
-    let incremental = cfg.mode == RepackMode::Incremental;
     // Ids already sealed inside a pack: in incremental mode these are
     // retained verbatim (their packs are never rewritten).
     let in_pack: HashSet<ObjectId> = packed
@@ -279,6 +316,58 @@ pub fn repack(
         for &c in chain.iter().rev() {
             d += 1;
             old_depth.insert(c, d);
+        }
+    }
+    // ------------------------------------------------------------------
+    // 2a. Generation-aware escalation (incremental only): once the
+    //     liveness mark is known, measure what an incremental run could
+    //     never fix — accumulated pack generations and garbage sealed
+    //     inside packs — and promote to a full rewrite past either
+    //     configured threshold. The decision is recorded in the report.
+    // ------------------------------------------------------------------
+    let mut incremental = cfg.mode == RepackMode::Incremental;
+    {
+        let mut packed_bytes = 0u64;
+        let mut dead_bytes = 0u64;
+        for p in packed.packs() {
+            for e in &p.index.entries {
+                packed_bytes += e.len;
+                if !live.contains(&e.id) {
+                    dead_bytes += e.len;
+                }
+            }
+        }
+        report.dead_ratio = if packed_bytes > 0 {
+            dead_bytes as f64 / packed_bytes as f64
+        } else {
+            0.0
+        };
+        if incremental {
+            if let Some(max_gens) = cfg.max_generations {
+                if max_gens > 0 && old_pack_paths.len() > max_gens {
+                    report.escalated = Some(format!(
+                        "{} pack generations > {max_gens}",
+                        old_pack_paths.len()
+                    ));
+                }
+            }
+            if report.escalated.is_none() {
+                // The ratio trigger only fires with prune: a full rewrite
+                // that *carries* dead objects leaves the ratio unchanged
+                // and would escalate every subsequent run forever without
+                // reclaiming anything.
+                if let (Some(max_ratio), true) = (cfg.max_dead_ratio, cfg.prune) {
+                    if packed_bytes > 0 && report.dead_ratio > max_ratio {
+                        report.escalated = Some(format!(
+                            "dead-byte ratio {:.2} > {max_ratio:.2}",
+                            report.dead_ratio
+                        ));
+                    }
+                }
+            }
+            if report.escalated.is_some() {
+                incremental = false;
+            }
         }
     }
     report.max_depth_before = old_depth.values().copied().max().unwrap_or(0);
@@ -594,8 +683,12 @@ mod tests {
         let junk = store.put_blob(b"unreachable-junk").unwrap();
         let before = resolve_all(&store, &ids);
 
-        let cfg =
-            RepackConfig { max_chain_depth: 4, prune: false, mode: RepackMode::Full };
+        let cfg = RepackConfig {
+            max_chain_depth: 4,
+            prune: false,
+            mode: RepackMode::Full,
+            ..RepackConfig::default()
+        };
         let roots = vec![*ids.last().unwrap()];
         let report = repack(&mut store, &roots, &cfg, &NativeKernel).unwrap();
         assert_eq!(report.packed, ids.len());
@@ -641,7 +734,12 @@ mod tests {
         let (dir, mut store) = tmp_store("prune");
         let ids = build_chain(&store, 3, 2);
         let junk = store.put_blob(b"dead-blob").unwrap();
-        let cfg = RepackConfig { max_chain_depth: 8, prune: true, mode: RepackMode::Full };
+        let cfg = RepackConfig {
+            max_chain_depth: 8,
+            prune: true,
+            mode: RepackMode::Full,
+            ..RepackConfig::default()
+        };
         let roots = vec![*ids.last().unwrap()];
         let report = repack(&mut store, &roots, &cfg, &NativeKernel).unwrap();
         assert_eq!(report.pruned_loose, 1);
@@ -668,8 +766,12 @@ mod tests {
     fn repack_without_prune_carries_dead_packed_objects() {
         let (dir, mut store) = tmp_store("carry");
         let ids = build_chain(&store, 2, 3);
-        let cfg =
-            RepackConfig { max_chain_depth: 8, prune: false, mode: RepackMode::Full };
+        let cfg = RepackConfig {
+            max_chain_depth: 8,
+            prune: false,
+            mode: RepackMode::Full,
+            ..RepackConfig::default()
+        };
         // First repack with the tip as root packs the whole chain.
         let tip = *ids.last().unwrap();
         repack(&mut store, &[tip], &cfg, &NativeKernel).unwrap();
@@ -687,8 +789,12 @@ mod tests {
         let (dir, mut store) = tmp_store("incr");
         let ids = build_chain(&store, 4, 7);
         let tip = *ids.last().unwrap();
-        let full =
-            RepackConfig { max_chain_depth: 8, prune: false, mode: RepackMode::Full };
+        let full = RepackConfig {
+            max_chain_depth: 8,
+            prune: false,
+            mode: RepackMode::Full,
+            ..RepackConfig::default()
+        };
         let r1 = repack(&mut store, &[tip], &full, &NativeKernel).unwrap();
         let first_pack = r1.pack_path.clone().unwrap();
 
@@ -702,6 +808,7 @@ mod tests {
             max_chain_depth: 8,
             prune: false,
             mode: RepackMode::Incremental,
+            ..RepackConfig::default()
         };
         let roots = vec![*ext.last().unwrap()];
         let r2 = repack(&mut store, &roots, &inc, &NativeKernel).unwrap();
@@ -742,8 +849,12 @@ mod tests {
         let (dir, mut store) = tmp_store("incr-rebase");
         let ids = build_chain(&store, 6, 11);
         let tip = *ids.last().unwrap();
-        let full =
-            RepackConfig { max_chain_depth: 8, prune: false, mode: RepackMode::Full };
+        let full = RepackConfig {
+            max_chain_depth: 8,
+            prune: false,
+            mode: RepackMode::Full,
+            ..RepackConfig::default()
+        };
         repack(&mut store, &[tip], &full, &NativeKernel).unwrap();
 
         // Extend loose past the cap: tips would reach depth 11.
@@ -755,6 +866,7 @@ mod tests {
             max_chain_depth: 8,
             prune: false,
             mode: RepackMode::Incremental,
+            ..RepackConfig::default()
         };
         let report =
             repack(&mut store, &[*ext.last().unwrap()], &inc, &NativeKernel).unwrap();
@@ -782,5 +894,78 @@ mod tests {
         let mut store = Store::in_memory();
         let id = hash_bytes(b"x");
         assert!(repack(&mut store, &[id], &RepackConfig::default(), &NativeKernel).is_err());
+    }
+
+    #[test]
+    fn incremental_escalates_on_generation_count() {
+        let (dir, mut store) = tmp_store("esc-gens");
+        let ids = build_chain(&store, 3, 31);
+        let mut tip = *ids.last().unwrap();
+        let inc = RepackConfig {
+            max_chain_depth: 16,
+            prune: false,
+            mode: RepackMode::Incremental,
+            ..RepackConfig::default()
+        };
+        // Grow three pack generations (each run stages fresh loose links).
+        repack(&mut store, &[tip], &inc, &NativeKernel).unwrap();
+        for round in 0..2 {
+            tip = *extend_chain(&store, tip, 2, 40 + round).last().unwrap();
+            let r = repack(&mut store, &[tip], &inc, &NativeKernel).unwrap();
+            assert!(r.escalated.is_none(), "thresholds disabled must never escalate");
+        }
+        assert_eq!(store.as_packed().unwrap().packs().len(), 3);
+        let all: Vec<ObjectId> = store.list().unwrap();
+        let want = resolve_all(&store, &all);
+
+        // Next incremental run with a 2-generation budget promotes to a
+        // full rewrite: one pack remains, content bit-identical.
+        tip = *extend_chain(&store, tip, 1, 50).last().unwrap();
+        let esc = RepackConfig { max_generations: Some(2), ..inc };
+        let r = repack(&mut store, &[tip], &esc, &NativeKernel).unwrap();
+        let reason = r.escalated.expect("3 generations > 2 must escalate");
+        assert!(reason.contains("generations"), "unexpected reason: {reason}");
+        assert_eq!(r.packs_after, 1);
+        let store2 = Store::open_packed(&dir).unwrap();
+        let got = resolve_all(&store2, &all);
+        for (b, a) in want.iter().zip(&got) {
+            for (x, y) in b.iter().zip(a) {
+                assert_eq!(x.to_bits(), y.to_bits(), "content changed by escalation");
+            }
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn incremental_escalates_on_dead_byte_ratio() {
+        let (dir, mut store) = tmp_store("esc-dead");
+        let ids = build_chain(&store, 6, 33);
+        let tip = *ids.last().unwrap();
+        let full = RepackConfig {
+            max_chain_depth: 8,
+            prune: false,
+            mode: RepackMode::Full,
+            ..RepackConfig::default()
+        };
+        repack(&mut store, &[tip], &full, &NativeKernel).unwrap();
+
+        // Re-root at the base: the six packed deltas become garbage an
+        // incremental run could never reclaim. With a dead-ratio budget
+        // the run promotes to full and (with prune) drops them.
+        let esc = RepackConfig {
+            max_chain_depth: 8,
+            prune: true,
+            mode: RepackMode::Incremental,
+            max_dead_ratio: Some(0.1),
+            ..RepackConfig::default()
+        };
+        let r = repack(&mut store, &[ids[0]], &esc, &NativeKernel).unwrap();
+        let reason = r.escalated.expect("garbage past the ratio must escalate");
+        assert!(reason.contains("dead-byte"), "unexpected reason: {reason}");
+        assert!(r.dead_ratio > 0.1, "measured ratio {}", r.dead_ratio);
+        assert_eq!(r.packs_after, 1);
+        assert!(store.has(&ids[0]));
+        assert!(!store.has(&tip), "pruned full rewrite drops packed garbage");
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -5,11 +5,13 @@
 //! backbone (G5). Also the CAS-backed [`CheckpointStore`] used by the
 //! update cascade.
 
+use std::sync::Mutex;
+
 use anyhow::{anyhow, bail, Result};
 
 use crate::checkpoint::{ArchSpec, Checkpoint};
 use crate::data;
-use crate::delta::{self, CompressConfig, DeltaKernel, StoredModel};
+use crate::delta::{self, CompressConfig, DeltaKernel, ResolveCache, StoredModel};
 use crate::registry::{CreationSpec, FreezeSpec, Objective};
 use crate::runtime::Runtime;
 use crate::store::Store;
@@ -26,15 +28,26 @@ pub struct TrainTrace {
 }
 
 /// Executes creation specs against the runtime.
+///
+/// [`CreationExecutor`] is `&self + Send + Sync` (cascade workers share
+/// one trainer), so the diagnostic loss traces live behind a mutex —
+/// the lock is taken once per finished creation, never inside the
+/// training loop.
 pub struct Trainer<'a> {
     pub rt: &'a Runtime,
-    /// Loss traces per executed creation, in order (diagnostics).
-    pub traces: Vec<(String, TrainTrace)>,
+    /// Loss traces per executed creation, in completion order
+    /// (diagnostics; drain with [`Trainer::take_traces`]).
+    pub traces: Mutex<Vec<(String, TrainTrace)>>,
 }
 
 impl<'a> Trainer<'a> {
     pub fn new(rt: &'a Runtime) -> Trainer<'a> {
-        Trainer { rt, traces: Vec::new() }
+        Trainer { rt, traces: Mutex::new(Vec::new()) }
+    }
+
+    /// Drain the accumulated loss traces.
+    pub fn take_traces(&self) -> Vec<(String, TrainTrace)> {
+        std::mem::take(&mut *self.traces.lock().unwrap())
     }
 
     fn spec_of(&self, arch: &str) -> Result<&ArchSpec> {
@@ -62,7 +75,7 @@ impl<'a> Trainer<'a> {
     /// Core training loop with optional freezing and pruning masks.
     #[allow(clippy::too_many_arguments)]
     fn train_loop(
-        &mut self,
+        &self,
         label: &str,
         arch: &str,
         obj: Objective,
@@ -123,7 +136,7 @@ impl<'a> Trainer<'a> {
             }
             trace.losses.push(loss);
         }
-        self.traces.push((label.to_string(), trace));
+        self.traces.lock().unwrap().push((label.to_string(), trace));
         Ok(Checkpoint { arch: arch.to_string(), flat: params })
     }
 
@@ -183,7 +196,7 @@ pub fn average_checkpoints(arch: &str, parents: &[Checkpoint]) -> Result<Checkpo
 
 impl<'a> CreationExecutor for Trainer<'a> {
     fn execute(
-        &mut self,
+        &self,
         spec: &CreationSpec,
         arch: &str,
         parents: &[Checkpoint],
@@ -273,7 +286,7 @@ impl<'a> CreationExecutor for Trainer<'a> {
     /// every non-head tensor bit-exactly — content hashing then stores the
     /// backbone once (the paper's 98% sharing for G5).
     fn execute_mtl_group(
-        &mut self,
+        &self,
         specs: &[&CreationSpec],
         arch: &str,
         parents: &[Checkpoint],
@@ -355,7 +368,7 @@ impl<'a> CreationExecutor for Trainer<'a> {
                 }
             }
         }
-        self.traces.push(("mtl_group".to_string(), trace));
+        self.traces.lock().unwrap().push(("mtl_group".to_string(), trace));
         // Materialize per-member checkpoints: shared backbone + own head.
         let out = members
             .iter()
@@ -376,21 +389,32 @@ impl<'a> CreationExecutor for Trainer<'a> {
 // ---------------------------------------------------------------------------
 // CAS-backed checkpoint store (delta-compresses against previous versions)
 // ---------------------------------------------------------------------------
+/// [`CheckpointStore`] over the content-addressed [`Store`]. `Send +
+/// Sync` by composition (every field is a shared reference to a
+/// thread-safe value), so one instance serves all cascade workers.
 pub struct CasCheckpointStore<'a> {
     pub store: &'a Store,
     pub zoo: &'a crate::checkpoint::ModelZoo,
-    pub kernel: &'a dyn DeltaKernel,
+    pub kernel: &'a (dyn DeltaKernel + Sync),
     /// None => raw storage (hash-dedup only).
     pub compress: Option<CompressConfig>,
+    /// Shared resolved-tensor cache: concurrent loads reuse each other's
+    /// materialized delta-chain ancestors instead of re-decoding them.
+    pub cache: Option<&'a ResolveCache>,
 }
 
 impl<'a> CheckpointStore for CasCheckpointStore<'a> {
     fn load(&self, stored: &StoredModel) -> Result<Checkpoint> {
-        delta::load(self.store, self.zoo, stored, self.kernel)
+        match self.cache {
+            Some(cache) => {
+                delta::load_with_cache(self.store, self.zoo, stored, self.kernel, cache)
+            }
+            None => delta::load(self.store, self.zoo, stored, self.kernel),
+        }
     }
 
     fn save(
-        &mut self,
+        &self,
         ck: &Checkpoint,
         prev: Option<(&StoredModel, &Checkpoint)>,
     ) -> Result<StoredModel> {

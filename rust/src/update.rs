@@ -1,38 +1,39 @@
-//! Automated model updating — `run_update_cascade` (paper §5, Algorithm 2).
+//! Automated model updating (paper §5, Algorithm 2): the execution-tier
+//! traits and the serial convenience wrapper.
 //!
 //! Given an update `m → m'` (the user registered a new version `m'` of
-//! model `m`), create new versions of every provenance descendant of `m`
-//! and re-execute their creation functions against the updated parents:
+//! model `m`), a cascade creates new versions of every provenance
+//! descendant of `m` and re-executes their creation functions against
+//! the updated parents. The implementation lives in [`crate::cascade`]
+//! as three layers — planning, wavefront scheduling, journaling —
+//! [`run_update_cascade`] here is the one-call serial (`jobs = 1`) form
+//! kept for library users, tests and benches.
 //!
-//! * **Phase A** — BFS over `m`'s descendants (respecting skip/terminate):
-//!   for each node `x`, create an empty node `x'`, link provenance edges
-//!   from the *next versions* of `x`'s parents (falling back to current
-//!   versions for parents outside the cascade), add the version edge
-//!   `x → x'`, and copy the creation function.
-//! * **Phase B** — all-parents-first traversal from `m'`: materialize each
-//!   `x'` by running its creation spec with its parents' checkpoints. MTL
-//!   groups are gathered and executed once per group through
-//!   [`CreationExecutor::execute_mtl_group`] (the merged `cr'`).
+//! The two traits below are the contract between the cascade engine and
+//! its substrate. Both are **`&self + Send + Sync`**: one executor and
+//! one checkpoint store are shared by reference across the scheduler's
+//! worker threads, so implementations keep any internal mutability
+//! behind their own synchronization (see [`crate::train::Trainer`]'s
+//! mutexed loss traces).
 //!
-//! MGit never overwrites existing models: the old versions stay loadable,
-//! and the storage layer delta-compresses `x'` against `x`.
+//! MGit never overwrites existing models: the old versions stay
+//! loadable, and the storage layer delta-compresses `x'` against `x`.
 
-use std::collections::{HashMap, HashSet};
-
-use anyhow::{anyhow, bail, Result};
+use anyhow::Result;
 
 use crate::checkpoint::Checkpoint;
 use crate::delta::StoredModel;
-use crate::lineage::{traversal, LineageGraph, NodeIdx};
+use crate::lineage::{LineageGraph, NodeIdx};
 use crate::registry::CreationSpec;
 
-/// Executes creation specs (implemented over the PJRT runtime in
-/// [`crate::train`], mocked in tests).
-pub trait CreationExecutor {
+/// Executes creation specs (implemented over the runtime in
+/// [`crate::train`], mocked in tests). Shared across scheduler workers —
+/// implementations must be thread-safe.
+pub trait CreationExecutor: Send + Sync {
     /// Create a model from its parents per `spec`. `arch` is the target
     /// node's architecture (model_type).
     fn execute(
-        &mut self,
+        &self,
         spec: &CreationSpec,
         arch: &str,
         parents: &[Checkpoint],
@@ -42,7 +43,7 @@ pub trait CreationExecutor {
     /// trained jointly with shared backbone weights. Returns one
     /// checkpoint per member, in `specs` order.
     fn execute_mtl_group(
-        &mut self,
+        &self,
         specs: &[&CreationSpec],
         arch: &str,
         parents: &[Checkpoint],
@@ -50,12 +51,14 @@ pub trait CreationExecutor {
 }
 
 /// Persists checkpoints into the CAS (with delta compression against the
-/// previous version when available).
-pub trait CheckpointStore {
+/// previous version when available). Shared across scheduler workers —
+/// implementations must be thread-safe (the [`crate::store::Store`]
+/// facade already is).
+pub trait CheckpointStore: Send + Sync {
     fn load(&self, stored: &StoredModel) -> Result<Checkpoint>;
     /// `prev` is the node's previous version (delta-compression parent).
     fn save(
-        &mut self,
+        &self,
         ck: &Checkpoint,
         prev: Option<(&StoredModel, &Checkpoint)>,
     ) -> Result<StoredModel>;
@@ -84,216 +87,72 @@ pub fn next_version_name(g: &LineageGraph, name: &str) -> String {
 /// Outcome of one cascade.
 #[derive(Debug, Default)]
 pub struct CascadeReport {
-    /// (old node, new node) pairs, in creation order.
+    /// (old node, new node) pairs, in plan order.
     pub new_versions: Vec<(NodeIdx, NodeIdx)>,
     /// Nodes skipped because they had no creation function.
     pub skipped_no_cr: Vec<NodeIdx>,
+    /// Tasks replayed from a journal instead of re-executed (resume).
+    pub resumed_tasks: usize,
 }
 
-/// Algorithm 2. `m` is the updated model's old version, `m_new` the user's
-/// new version (already a node, with `stored` populated and a version edge
-/// m → m_new in place — the CLI's `cascade` command does that setup).
+/// Algorithm 2, serial form. `m` is the updated model's old version,
+/// `m_new` the user's new version (already a node, with `stored`
+/// populated and a version edge m → m_new in place — the CLI's `cascade`
+/// command does that setup). Equivalent to [`crate::cascade::run`] with
+/// default options; use that directly for multi-threaded (`jobs > 1`) or
+/// journaled execution.
 pub fn run_update_cascade(
     g: &mut LineageGraph,
-    ckstore: &mut dyn CheckpointStore,
-    exec: &mut dyn CreationExecutor,
+    ckstore: &dyn CheckpointStore,
+    exec: &dyn CreationExecutor,
     m: NodeIdx,
     m_new: NodeIdx,
     skip: impl Fn(&LineageGraph, NodeIdx) -> bool,
     terminate: impl Fn(&LineageGraph, NodeIdx) -> bool,
 ) -> Result<CascadeReport> {
-    if g.next_version(m) != Some(m_new) {
-        bail!("m' must be the registered next version of m");
-    }
-    let mut report = CascadeReport::default();
-
-    // ---------------- Phase A: create empty next versions ----------------
-    let descendants = traversal::bfs(
+    crate::cascade::run(
         g,
+        ckstore,
+        exec,
         m,
-        traversal::EdgeFilter::Provenance,
-        |g2, i| i == m || skip(g2, i),
-        &terminate,
-    );
-    let mut next_of: HashMap<NodeIdx, NodeIdx> = HashMap::from([(m, m_new)]);
-    for &x in &descendants {
-        if g.node(x).creation.is_none() {
-            report.skipped_no_cr.push(x);
-            continue;
-        }
-        let name = next_version_name(g, &g.node(x).name);
-        let model_type = g.node(x).model_type.clone();
-        let x_new = g.add_node(&name, &model_type)?;
-        g.node_mut(x_new).creation = g.node(x).creation.clone();
-        g.node_mut(x_new).metadata = g.node(x).metadata.clone();
-        g.add_version_edge(x, x_new)?;
-        next_of.insert(x, x_new);
-    }
-    // Provenance edges: from next version of each parent if it exists,
-    // otherwise from the current parent.
-    for (&x, &x_new) in next_of.iter() {
-        if x == m {
-            continue;
-        }
-        let parents = g.node(x).prov_parents.clone();
-        for p in parents {
-            let p_eff = next_of.get(&p).copied().unwrap_or(p);
-            g.add_edge(p_eff, x_new)?;
-        }
-    }
-
-    // ---------------- Phase B: train in all-parents-first order ----------
-    // Order the *created* nodes so each trains only after every created
-    // parent is materialized (parents outside the created set — including
-    // skipped nodes' old versions — are already stored). This is the
-    // traversal_all_parents_first of Algorithm 2 restricted to the new
-    // version set, which also covers children whose path from m' was cut
-    // by a skip.
-    let created: HashSet<NodeIdx> =
-        next_of.values().copied().filter(|&i| i != m_new).collect();
-    let mut indeg: HashMap<NodeIdx, usize> = created
-        .iter()
-        .map(|&i| {
-            let d = g
-                .node(i)
-                .prov_parents
-                .iter()
-                .filter(|p| created.contains(p))
-                .count();
-            (i, d)
-        })
-        .collect();
-    let mut queue: std::collections::VecDeque<NodeIdx> = {
-        let mut q: Vec<NodeIdx> = created
-            .iter()
-            .copied()
-            .filter(|i| indeg[i] == 0)
-            .collect();
-        q.sort_unstable();
-        q.into()
-    };
-    let mut order = Vec::with_capacity(created.len());
-    while let Some(i) = queue.pop_front() {
-        order.push(i);
-        for &c in &g.node(i).prov_children {
-            if let Some(d) = indeg.get_mut(&c) {
-                *d -= 1;
-                if *d == 0 {
-                    queue.push_back(c);
-                }
-            }
-        }
-    }
-    let mut done: HashSet<NodeIdx> = HashSet::new();
-    for x_new in order {
-        if done.contains(&x_new) || g.node(x_new).stored.is_some() {
-            continue;
-        }
-        let Some(spec) = g.node(x_new).creation.clone() else { continue };
-
-        // Gather parents' checkpoints.
-        let load_parents = |g: &LineageGraph, idx: NodeIdx| -> Result<Vec<Checkpoint>> {
-            g.node(idx)
-                .prov_parents
-                .iter()
-                .map(|&p| {
-                    let sm = g
-                        .node(p)
-                        .stored
-                        .as_ref()
-                        .ok_or_else(|| anyhow!("parent {} has no checkpoint", g.node(p).name))?;
-                    ckstore.load(sm)
-                })
-                .collect()
-        };
-
-        if let CreationSpec::Mtl { group, .. } = &spec {
-            // Gather the whole group among pending new versions.
-            let group_tasks: HashSet<&String> = group.iter().collect();
-            let mut members: Vec<NodeIdx> = vec![x_new];
-            for (&_old, &cand) in next_of.iter() {
-                if cand == x_new || done.contains(&cand) {
-                    continue;
-                }
-                if let Some(CreationSpec::Mtl { task, .. }) = &g.node(cand).creation {
-                    if group_tasks.contains(task) {
-                        members.push(cand);
-                    }
-                }
-            }
-            members.sort_by_key(|&i| g.node(i).name.clone());
-            let parents = load_parents(g, x_new)?;
-            let specs: Vec<CreationSpec> = members
-                .iter()
-                .map(|&i| g.node(i).creation.clone().unwrap())
-                .collect();
-            let spec_refs: Vec<&CreationSpec> = specs.iter().collect();
-            let arch = g.node(x_new).model_type.clone();
-            let cks = exec.execute_mtl_group(&spec_refs, &arch, &parents)?;
-            if cks.len() != members.len() {
-                bail!("MTL executor returned {} models for {} members", cks.len(), members.len());
-            }
-            for (&member, ck) in members.iter().zip(&cks) {
-                let prev = g.prev_version(member);
-                let prev_data = match prev {
-                    Some(p) => {
-                        let sm = g.node(p).stored.clone();
-                        match sm {
-                            Some(sm) => Some((sm.clone(), ckstore.load(&sm)?)),
-                            None => None,
-                        }
-                    }
-                    None => None,
-                };
-                let stored = ckstore
-                    .save(ck, prev_data.as_ref().map(|(s, c)| (s, c)))?;
-                g.node_mut(member).stored = Some(stored);
-                done.insert(member);
-                if let Some(p) = prev {
-                    report.new_versions.push((p, member));
-                }
-            }
-        } else {
-            let parents = load_parents(g, x_new)?;
-            let arch = g.node(x_new).model_type.clone();
-            let ck = exec.execute(&spec, &arch, &parents)?;
-            let prev = g.prev_version(x_new);
-            let prev_data = match prev {
-                Some(p) => match g.node(p).stored.clone() {
-                    Some(sm) => Some((sm.clone(), ckstore.load(&sm)?)),
-                    None => None,
-                },
-                None => None,
-            };
-            let stored = ckstore.save(&ck, prev_data.as_ref().map(|(s, c)| (s, c)))?;
-            g.node_mut(x_new).stored = Some(stored);
-            done.insert(x_new);
-            if let Some(p) = prev {
-                report.new_versions.push((p, x_new));
-            }
-        }
-    }
-    Ok(report)
+        m_new,
+        skip,
+        terminate,
+        &crate::cascade::CascadeOptions::default(),
+    )
 }
 
 #[cfg(test)]
-mod tests {
+pub(crate) mod testutil {
+    //! Mock executor/store shared by the update and cascade test suites.
+    use std::sync::Mutex;
+
     use super::*;
     use crate::registry::{FreezeSpec, Objective};
 
     /// Executor that records calls and returns parents[0] + 1.0.
-    struct MockExec {
-        calls: Vec<String>,
+    pub struct MockExec {
+        pub calls: Mutex<Vec<String>>,
+    }
+
+    impl MockExec {
+        pub fn new() -> MockExec {
+            MockExec { calls: Mutex::new(Vec::new()) }
+        }
+
+        pub fn calls(&self) -> Vec<String> {
+            self.calls.lock().unwrap().clone()
+        }
     }
 
     impl CreationExecutor for MockExec {
         fn execute(
-            &mut self,
+            &self,
             spec: &CreationSpec,
             _arch: &str,
             parents: &[Checkpoint],
         ) -> Result<Checkpoint> {
-            self.calls.push(format!("{}", spec.kind()));
+            self.calls.lock().unwrap().push(spec.kind().to_string());
             let mut ck = parents[0].clone();
             for x in ck.flat.iter_mut() {
                 *x += 1.0;
@@ -302,46 +161,53 @@ mod tests {
         }
 
         fn execute_mtl_group(
-            &mut self,
+            &self,
             specs: &[&CreationSpec],
             _arch: &str,
             parents: &[Checkpoint],
         ) -> Result<Vec<Checkpoint>> {
-            self.calls.push(format!("mtl_group x{}", specs.len()));
+            self.calls.lock().unwrap().push(format!("mtl_group x{}", specs.len()));
             Ok(specs.iter().map(|_| parents[0].clone()).collect())
         }
     }
 
-    /// In-memory checkpoint "store" that just clones.
-    struct MockStore {
-        saved: Vec<Checkpoint>,
+    /// In-memory checkpoint "store" that just clones; the slot index is
+    /// smuggled through the arch field suffix.
+    pub struct MockStore {
+        pub saved: Mutex<Vec<Checkpoint>>,
+    }
+
+    impl MockStore {
+        pub fn new() -> MockStore {
+            MockStore { saved: Mutex::new(Vec::new()) }
+        }
     }
 
     impl CheckpointStore for MockStore {
         fn load(&self, stored: &StoredModel) -> Result<Checkpoint> {
-            // Index is smuggled through the arch field suffix.
             let idx: usize = stored.arch.rsplit('#').next().unwrap().parse()?;
-            Ok(self.saved[idx].clone())
+            Ok(self.saved.lock().unwrap()[idx].clone())
         }
 
         fn save(
-            &mut self,
+            &self,
             ck: &Checkpoint,
             _prev: Option<(&StoredModel, &Checkpoint)>,
         ) -> Result<StoredModel> {
-            self.saved.push(ck.clone());
+            let mut saved = self.saved.lock().unwrap();
+            saved.push(ck.clone());
             Ok(StoredModel {
-                arch: format!("{}#{}", ck.arch, self.saved.len() - 1),
+                arch: format!("{}#{}", ck.arch, saved.len() - 1),
                 params: vec![],
             })
         }
     }
 
-    fn ck(v: f32) -> Checkpoint {
+    pub fn ck(v: f32) -> Checkpoint {
         Checkpoint { arch: "t".into(), flat: vec![v; 4] }
     }
 
-    fn finetune_spec(task: &str) -> CreationSpec {
+    pub fn finetune_spec(task: &str) -> CreationSpec {
         CreationSpec::Finetune {
             task: task.into(),
             objective: Objective::Cls,
@@ -353,10 +219,28 @@ mod tests {
         }
     }
 
+    /// Register `m2` as a stored next version of `m` (what the CLI does
+    /// before invoking the cascade).
+    pub fn register_update(g: &mut LineageGraph, st: &MockStore, m: NodeIdx) -> NodeIdx {
+        let name = next_version_name(g, &g.node(m).name);
+        let mt = g.node(m).model_type.clone();
+        let m2 = g.add_node(&name, &mt).unwrap();
+        let stored = st.save(&ck(100.0), None).unwrap();
+        g.node_mut(m2).stored = Some(stored);
+        g.add_version_edge(m, m2).unwrap();
+        m2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::*;
+    use super::*;
+
     /// root(m) -> a -> b ; root -> c(no cr)
     fn setup() -> (LineageGraph, MockStore) {
         let mut g = LineageGraph::new();
-        let mut st = MockStore { saved: vec![] };
+        let st = MockStore::new();
         let m = g.add_node("m", "t").unwrap();
         let a = g.add_node("a", "t").unwrap();
         let b = g.add_node("b", "t").unwrap();
@@ -374,27 +258,15 @@ mod tests {
         (g, st)
     }
 
-    fn register_update(g: &mut LineageGraph, st: &mut MockStore, m: NodeIdx) -> NodeIdx {
-        let name = next_version_name(g, &g.node(m).name);
-        let mt = g.node(m).model_type.clone();
-        let m2 = g.add_node(&name, &mt).unwrap();
-        let stored = st.save(&ck(100.0), None).unwrap();
-        g.node_mut(m2).stored = Some(stored);
-        g.add_version_edge(m, m2).unwrap();
-        m2
-    }
-
     #[test]
     fn cascade_creates_and_trains_descendants() {
-        let (mut g, mut st) = setup();
+        let (mut g, st) = setup();
         let m = g.idx("m").unwrap();
-        let m2 = register_update(&mut g, &mut st, m);
-        let mut exec = MockExec { calls: vec![] };
-        let report = run_update_cascade(
-            &mut g, &mut st, &mut exec, m, m2,
-            |_, _| false, |_, _| false,
-        )
-        .unwrap();
+        let m2 = register_update(&mut g, &st, m);
+        let exec = MockExec::new();
+        let report =
+            run_update_cascade(&mut g, &st, &exec, m, m2, |_, _| false, |_, _| false)
+                .unwrap();
         // a and b get new versions; c skipped (no cr).
         assert_eq!(report.new_versions.len(), 2);
         assert_eq!(report.skipped_no_cr.len(), 1);
@@ -415,18 +287,16 @@ mod tests {
 
     #[test]
     fn cascade_respects_skip() {
-        let (mut g, mut st) = setup();
+        let (mut g, st) = setup();
         let m = g.idx("m").unwrap();
         let a = g.idx("a").unwrap();
-        let m2 = register_update(&mut g, &mut st, m);
-        let mut exec = MockExec { calls: vec![] };
+        let m2 = register_update(&mut g, &st, m);
+        let exec = MockExec::new();
         // Skip a: only b would remain, but its parent a has no new version,
         // so b@v2 trains against the OLD a (parent fallback).
-        let report = run_update_cascade(
-            &mut g, &mut st, &mut exec, m, m2,
-            move |_, i| i == a, |_, _| false,
-        )
-        .unwrap();
+        let report =
+            run_update_cascade(&mut g, &st, &exec, m, m2, move |_, i| i == a, |_, _| false)
+                .unwrap();
         assert!(g.idx("a@v2").is_err());
         assert!(g.idx("b@v2").is_ok());
         assert_eq!(report.new_versions.len(), 1);
@@ -437,15 +307,14 @@ mod tests {
 
     #[test]
     fn cascade_requires_version_edge() {
-        let (mut g, mut st) = setup();
+        let (mut g, st) = setup();
         let m = g.idx("m").unwrap();
         let a = g.idx("a").unwrap();
-        let mut exec = MockExec { calls: vec![] };
-        assert!(run_update_cascade(
-            &mut g, &mut st, &mut exec, m, a,
-            |_, _| false, |_, _| false
-        )
-        .is_err());
+        let exec = MockExec::new();
+        assert!(
+            run_update_cascade(&mut g, &st, &exec, m, a, |_, _| false, |_, _| false)
+                .is_err()
+        );
     }
 
     #[test]
@@ -462,7 +331,7 @@ mod tests {
     #[test]
     fn mtl_group_trains_once() {
         let mut g = LineageGraph::new();
-        let mut st = MockStore { saved: vec![] };
+        let st = MockStore::new();
         let m = g.add_node("m", "t").unwrap();
         let t1 = g.add_node("t1", "t").unwrap();
         let t2 = g.add_node("t2", "t").unwrap();
@@ -481,17 +350,15 @@ mod tests {
         };
         g.register_creation_function(t1, mtl("t1")).unwrap();
         g.register_creation_function(t2, mtl("t2")).unwrap();
-        let m2 = register_update(&mut g, &mut st, m);
-        let mut exec = MockExec { calls: vec![] };
-        let report = run_update_cascade(
-            &mut g, &mut st, &mut exec, m, m2,
-            |_, _| false, |_, _| false,
-        )
-        .unwrap();
+        let m2 = register_update(&mut g, &st, m);
+        let exec = MockExec::new();
+        let report =
+            run_update_cascade(&mut g, &st, &exec, m, m2, |_, _| false, |_, _| false)
+                .unwrap();
         assert_eq!(report.new_versions.len(), 2);
         // The group executed exactly once.
         assert_eq!(
-            exec.calls.iter().filter(|c| c.starts_with("mtl_group")).count(),
+            exec.calls().iter().filter(|c| c.starts_with("mtl_group")).count(),
             1
         );
     }

@@ -123,7 +123,7 @@ pub fn build_g2(rt: &Runtime, scale: &Scale) -> Result<Workload> {
     let arch = "tx-tiny";
     let mut g = LineageGraph::new();
     let mut cks = HashMap::new();
-    let mut trainer = Trainer::new(rt);
+    let trainer = Trainer::new(rt);
 
     // Root: MLM-pretrained base model.
     let root_spec = CreationSpec::Pretrain {
@@ -188,42 +188,45 @@ pub fn build_g2(rt: &Runtime, scale: &Scale) -> Result<Workload> {
 // ---------------------------------------------------------------------------
 pub fn build_g3(rt: &Runtime, scale: &Scale) -> Result<Workload> {
     // FL registers lineage itself; capture checkpoints through a
-    // collecting CheckpointStore.
+    // collecting CheckpointStore (mutexed: the trait is `&self`).
     struct Collect<'a> {
         inner: CasCheckpointStore<'a>,
-        seen: Vec<(StoredModel, Checkpoint)>,
+        seen: std::sync::Mutex<Vec<(StoredModel, Checkpoint)>>,
     }
     impl<'a> CheckpointStore for Collect<'a> {
         fn load(&self, sm: &StoredModel) -> Result<Checkpoint> {
             self.inner.load(sm)
         }
         fn save(
-            &mut self,
+            &self,
             ck: &Checkpoint,
             prev: Option<(&StoredModel, &Checkpoint)>,
         ) -> Result<StoredModel> {
             let sm = self.inner.save(ck, prev)?;
-            self.seen.push((sm.clone(), ck.clone()));
+            self.seen.lock().unwrap().push((sm.clone(), ck.clone()));
             Ok(sm)
         }
     }
     let scratch = Store::in_memory();
-    let mut collect = Collect {
+    let collect = Collect {
         inner: CasCheckpointStore {
             store: &scratch,
             zoo: rt.zoo(),
             kernel: &crate::delta::NativeKernel,
             compress: None,
+            cache: None,
         },
-        seen: Vec::new(),
+        seen: std::sync::Mutex::new(Vec::new()),
     };
     let mut g = LineageGraph::new();
     let cfg = FlConfig { ..scale.fl.clone() };
-    run_federated(rt, &mut g, &mut collect, &cfg)?;
+    run_federated(rt, &mut g, &collect, &cfg)?;
     // Map stored models back to node names.
     let mut cks = HashMap::new();
     let by_params: HashMap<String, Checkpoint> = collect
         .seen
+        .into_inner()
+        .unwrap()
         .iter()
         .map(|(sm, ck)| (sm.to_json().to_string_compact(), ck.clone()))
         .collect();
@@ -247,7 +250,7 @@ pub fn build_g3(rt: &Runtime, scale: &Scale) -> Result<Workload> {
 pub fn build_g4(rt: &Runtime, scale: &Scale) -> Result<Workload> {
     let mut g = LineageGraph::new();
     let mut cks = HashMap::new();
-    let mut trainer = Trainer::new(rt);
+    let trainer = Trainer::new(rt);
     // The 3 architectures stand in for ResNet-50 / DenseNet121 / MobileNet.
     for (ai, arch) in ["tx-tiny", "tx-small", "tx-base"].into_iter().enumerate() {
         let task = task_name(ai % scale.n_tasks.max(1));
@@ -298,7 +301,7 @@ pub fn build_g5(rt: &Runtime, scale: &Scale) -> Result<Workload> {
     let arch = "tx-tiny";
     let mut g = LineageGraph::new();
     let mut cks = HashMap::new();
-    let mut trainer = Trainer::new(rt);
+    let trainer = Trainer::new(rt);
 
     let root_spec = CreationSpec::Pretrain {
         corpus_seed: 5,
@@ -375,7 +378,7 @@ pub fn build_g1(rt: &Runtime, scale: &Scale) -> Result<Workload> {
     let gold = g1_gold();
     let mut g = LineageGraph::new();
     let mut cks: HashMap<String, Checkpoint> = HashMap::new();
-    let mut trainer = Trainer::new(rt);
+    let trainer = Trainer::new(rt);
 
     for (i, (name, arch, parent)) in gold.iter().enumerate() {
         let (ck, spec) = match parent {

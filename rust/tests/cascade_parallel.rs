@@ -1,0 +1,407 @@
+//! Integration: the wavefront cascade engine — serial/parallel parity,
+//! Phase-A determinism, MTL groups crossed by skip/terminate predicates,
+//! and journaled resume after a partial failure. Everything runs against
+//! mock executors/stores, so no runtime artifacts are needed.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Result};
+use mgit::cascade::{self, CascadeOptions};
+use mgit::checkpoint::Checkpoint;
+use mgit::delta::StoredModel;
+use mgit::lineage::{LineageGraph, NodeIdx};
+use mgit::registry::{CreationSpec, FreezeSpec, Objective};
+use mgit::update::{next_version_name, CheckpointStore, CreationExecutor};
+
+// ---------------------------------------------------------------------------
+// Mocks (thread-safe: the traits are `&self + Send + Sync`)
+// ---------------------------------------------------------------------------
+
+fn spec_label(spec: &CreationSpec) -> String {
+    match spec {
+        CreationSpec::Finetune { task, .. } => task.clone(),
+        CreationSpec::Mtl { task, .. } => task.clone(),
+        other => other.kind().to_string(),
+    }
+}
+
+/// Deterministic executor: child = parents[0] + 1.0; records labels and
+/// optionally fails on one task label (failure injection for resume).
+struct MockExec {
+    calls: Mutex<Vec<String>>,
+    fail_on: Option<String>,
+}
+
+impl MockExec {
+    fn new() -> MockExec {
+        MockExec { calls: Mutex::new(Vec::new()), fail_on: None }
+    }
+
+    fn failing_on(label: &str) -> MockExec {
+        MockExec { calls: Mutex::new(Vec::new()), fail_on: Some(label.to_string()) }
+    }
+
+    fn calls(&self) -> Vec<String> {
+        self.calls.lock().unwrap().clone()
+    }
+}
+
+impl CreationExecutor for MockExec {
+    fn execute(
+        &self,
+        spec: &CreationSpec,
+        _arch: &str,
+        parents: &[Checkpoint],
+    ) -> Result<Checkpoint> {
+        let label = spec_label(spec);
+        if self.fail_on.as_deref() == Some(label.as_str()) {
+            return Err(anyhow!("injected failure on `{label}`"));
+        }
+        self.calls.lock().unwrap().push(label);
+        let mut ck = parents[0].clone();
+        for x in ck.flat.iter_mut() {
+            *x += 1.0;
+        }
+        Ok(ck)
+    }
+
+    fn execute_mtl_group(
+        &self,
+        specs: &[&CreationSpec],
+        _arch: &str,
+        parents: &[Checkpoint],
+    ) -> Result<Vec<Checkpoint>> {
+        self.calls.lock().unwrap().push(format!("mtl x{}", specs.len()));
+        Ok(specs.iter().map(|_| parents[0].clone()).collect())
+    }
+}
+
+/// Content-addressed in-memory store: the key is a hash of the values,
+/// so stored pointers are identical whatever order workers finish in —
+/// exactly like the real CAS.
+struct MockStore {
+    saved: Mutex<HashMap<String, Checkpoint>>,
+}
+
+impl MockStore {
+    fn new() -> MockStore {
+        MockStore { saved: Mutex::new(HashMap::new()) }
+    }
+}
+
+fn content_key(ck: &Checkpoint) -> String {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for x in &ck.flat {
+        for b in x.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    format!("{}#{h:016x}", ck.arch)
+}
+
+impl CheckpointStore for MockStore {
+    fn load(&self, stored: &StoredModel) -> Result<Checkpoint> {
+        self.saved
+            .lock()
+            .unwrap()
+            .get(&stored.arch)
+            .cloned()
+            .ok_or_else(|| anyhow!("no stored checkpoint under key {}", stored.arch))
+    }
+
+    fn save(
+        &self,
+        ck: &Checkpoint,
+        _prev: Option<(&StoredModel, &Checkpoint)>,
+    ) -> Result<StoredModel> {
+        let key = content_key(ck);
+        self.saved.lock().unwrap().insert(key.clone(), ck.clone());
+        Ok(StoredModel { arch: key, params: vec![] })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Graph builders
+// ---------------------------------------------------------------------------
+
+fn ck(v: f32) -> Checkpoint {
+    Checkpoint { arch: "t".into(), flat: vec![v; 8] }
+}
+
+fn finetune(task: &str) -> CreationSpec {
+    CreationSpec::Finetune {
+        task: task.into(),
+        objective: Objective::Cls,
+        steps: 1,
+        lr: 0.1,
+        seed: 0,
+        freeze: FreezeSpec::None,
+        perturb: None,
+    }
+}
+
+fn put(g: &mut LineageGraph, st: &MockStore, idx: NodeIdx, v: f32) {
+    let sm = st.save(&ck(v), None).unwrap();
+    g.node_mut(idx).stored = Some(sm);
+}
+
+/// Register a stored next version of `m` (what the CLI does up front).
+fn register_update(g: &mut LineageGraph, st: &MockStore, m: NodeIdx) -> NodeIdx {
+    let name = next_version_name(g, &g.node(m).name);
+    let mt = g.node(m).model_type.clone();
+    let m2 = g.add_node(&name, &mt).unwrap();
+    let sm = st.save(&ck(100.0), None).unwrap();
+    g.node_mut(m2).stored = Some(sm);
+    g.add_version_edge(m, m2).unwrap();
+    m2
+}
+
+/// m fans out into `width` independent children, each with one
+/// grandchild: the shape wavefront scheduling exists for.
+fn wide_graph(width: usize) -> (LineageGraph, MockStore) {
+    let mut g = LineageGraph::new();
+    let st = MockStore::new();
+    let m = g.add_node("m", "t").unwrap();
+    put(&mut g, &st, m, 0.0);
+    for i in 0..width {
+        let c = g.add_node(&format!("c{i}"), "t").unwrap();
+        g.add_edge(m, c).unwrap();
+        g.register_creation_function(c, finetune(&format!("c{i}"))).unwrap();
+        put(&mut g, &st, c, 1.0 + i as f32);
+        let gc = g.add_node(&format!("g{i}"), "t").unwrap();
+        g.add_edge(c, gc).unwrap();
+        g.register_creation_function(gc, finetune(&format!("g{i}"))).unwrap();
+        put(&mut g, &st, gc, 100.0 + i as f32);
+    }
+    (g, st)
+}
+
+fn run_wide(width: usize, jobs: usize) -> (LineageGraph, MockStore, usize) {
+    let (mut g, st) = wide_graph(width);
+    let m = g.idx("m").unwrap();
+    let m2 = register_update(&mut g, &st, m);
+    let exec = MockExec::new();
+    let report = cascade::run(
+        &mut g,
+        &st,
+        &exec,
+        m,
+        m2,
+        |_, _| false,
+        |_, _| false,
+        &CascadeOptions { jobs, journal: None },
+    )
+    .unwrap();
+    (g, st, report.new_versions.len())
+}
+
+// ---------------------------------------------------------------------------
+// Tests
+// ---------------------------------------------------------------------------
+
+/// `--jobs 4` must produce results bit-identical to the serial path:
+/// same graph JSON, same stored checkpoints.
+#[test]
+fn parallel_jobs_match_serial_bit_exactly() {
+    let (g1, st1, n1) = run_wide(12, 1);
+    let (g4, st4, n4) = run_wide(12, 4);
+    assert_eq!(n1, 24);
+    assert_eq!(n4, 24);
+    assert_eq!(
+        g1.to_json().to_string_pretty(),
+        g4.to_json().to_string_pretty(),
+        "graph JSON must not depend on the worker count"
+    );
+    for i in 0..12 {
+        for name in [format!("c{i}@v2"), format!("g{i}@v2")] {
+            let a = st1.load(g1.by_name(&name).unwrap().stored.as_ref().unwrap()).unwrap();
+            let b = st4.load(g4.by_name(&name).unwrap().stored.as_ref().unwrap()).unwrap();
+            assert_eq!(a.flat, b.flat, "{name} differs across job counts");
+        }
+    }
+    // Values flow: child = m2+1 = 101, grandchild = 102.
+    let c0 = st1.load(g1.by_name("c0@v2").unwrap().stored.as_ref().unwrap()).unwrap();
+    assert_eq!(c0.flat[0], 101.0);
+    let g0 = st1.load(g1.by_name("g0@v2").unwrap().stored.as_ref().unwrap()).unwrap();
+    assert_eq!(g0.flat[0], 102.0);
+    g1.integrity_check().unwrap();
+    g4.integrity_check().unwrap();
+}
+
+/// Phase-A determinism regression (the old implementation wired
+/// provenance edges in HashMap order): two identical cascades must
+/// serialize to byte-identical graph JSON.
+#[test]
+fn identical_cascades_produce_identical_graph_json() {
+    let (ga, _, _) = run_wide(9, 1);
+    let (gb, _, _) = run_wide(9, 1);
+    assert_eq!(
+        ga.to_json().to_string_pretty(),
+        gb.to_json().to_string_pretty(),
+        "cascade graph mutation must be deterministic run to run"
+    );
+}
+
+/// An MTL group crossed by skip/terminate predicates: the skipped member
+/// stays at its old version, the group retrains as a smaller barrier
+/// task, and terminate cuts the cascade below a member.
+#[test]
+fn mtl_group_crossed_by_skip_and_terminate() {
+    let mut g = LineageGraph::new();
+    let st = MockStore::new();
+    let m = g.add_node("m", "t").unwrap();
+    put(&mut g, &st, m, 0.0);
+    let mtl = |task: &str| CreationSpec::Mtl {
+        task: task.into(),
+        group: vec!["t1".into(), "t2".into(), "t3".into()],
+        steps: 1,
+        lr: 0.1,
+        seed: 0,
+    };
+    for name in ["t1", "t2", "t3"] {
+        let n = g.add_node(name, "t").unwrap();
+        g.add_edge(m, n).unwrap();
+        g.register_creation_function(n, mtl(name)).unwrap();
+        put(&mut g, &st, n, 1.0);
+    }
+    // A descendant below t1 that terminate will cut off.
+    let t1 = g.idx("t1").unwrap();
+    let d = g.add_node("d", "t").unwrap();
+    g.add_edge(t1, d).unwrap();
+    g.register_creation_function(d, finetune("d")).unwrap();
+    put(&mut g, &st, d, 2.0);
+
+    let m2 = register_update(&mut g, &st, m);
+    let exec = MockExec::new();
+    let skip = |g2: &LineageGraph, i: NodeIdx| g2.node(i).name == "t2";
+    let terminate = |g2: &LineageGraph, i: NodeIdx| g2.node(i).name == "t1";
+    let report = cascade::run(
+        &mut g,
+        &st,
+        &exec,
+        m,
+        m2,
+        skip,
+        terminate,
+        &CascadeOptions::default(),
+    )
+    .unwrap();
+
+    // t1 and t3 get new versions; t2 was skipped; d was cut by terminate.
+    assert_eq!(report.new_versions.len(), 2);
+    assert!(g.idx("t1@v2").is_ok());
+    assert!(g.idx("t3@v2").is_ok());
+    assert!(g.idx("t2@v2").is_err());
+    assert!(g.idx("d@v2").is_err());
+    // The shrunken group still trained once, jointly.
+    assert_eq!(exec.calls(), vec!["mtl x2"]);
+    g.integrity_check().unwrap();
+}
+
+/// Kill a cascade mid-flight, then resume from the journal: only the
+/// unfinished suffix re-executes, and the final state matches a clean
+/// run.
+#[test]
+fn resume_replays_exactly_the_unfinished_suffix() {
+    let jdir = std::env::temp_dir()
+        .join(format!("mgit-cascade-journal-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&jdir);
+
+    // m -> a -> b -> c (chain) plus m -> s1, m -> s2 (siblings).
+    let mut g = LineageGraph::new();
+    let st = MockStore::new();
+    let m = g.add_node("m", "t").unwrap();
+    put(&mut g, &st, m, 0.0);
+    let mut prev = m;
+    for name in ["a", "b", "c"] {
+        let n = g.add_node(name, "t").unwrap();
+        g.add_edge(prev, n).unwrap();
+        g.register_creation_function(n, finetune(name)).unwrap();
+        put(&mut g, &st, n, 1.0);
+        prev = n;
+    }
+    for name in ["s1", "s2"] {
+        let n = g.add_node(name, "t").unwrap();
+        g.add_edge(m, n).unwrap();
+        g.register_creation_function(n, finetune(name)).unwrap();
+        put(&mut g, &st, n, 2.0);
+    }
+    let m2 = register_update(&mut g, &st, m);
+
+    // First attempt: `b` fails. With one worker the FIFO order is
+    // a, s1, s2, then b (fails) — c never becomes ready.
+    let plan = cascade::plan_cascade(&mut g, m, m2, |_, _| false, |_, _| false).unwrap();
+    let journal = cascade::CascadeJournal::create(&jdir, &plan, &g).unwrap();
+    let exec1 = MockExec::failing_on("b");
+    let opts = CascadeOptions { jobs: 1, journal: Some(&journal) };
+    let err = cascade::execute_and_apply(
+        &mut g,
+        &plan,
+        &st,
+        &exec1,
+        &opts,
+        &cascade::DoneTasks::new(),
+    );
+    assert!(err.is_err(), "injected failure must surface");
+    assert_eq!(exec1.calls(), vec!["a", "s1", "s2"]);
+    drop(journal);
+
+    // Resume: the journaled prefix (a, s1, s2) is replayed, not
+    // re-executed; only b and c run.
+    let exec2 = MockExec::new();
+    let report = cascade::resume(&mut g, &st, &exec2, &jdir, 1).unwrap();
+    assert_eq!(report.resumed_tasks, 3);
+    assert_eq!(report.new_versions.len(), 5);
+    assert_eq!(exec2.calls(), vec!["b", "c"]);
+
+    // Final state matches an uninterrupted cascade: m2=100 flows down
+    // the chain (a=101, b=102, c=103) and across the siblings (101).
+    for (name, want) in
+        [("a@v2", 101.0), ("b@v2", 102.0), ("c@v2", 103.0), ("s1@v2", 101.0), ("s2@v2", 101.0)]
+    {
+        let node = g.by_name(name).unwrap();
+        let loaded = st.load(node.stored.as_ref().unwrap()).unwrap();
+        assert_eq!(loaded.flat[0], want, "{name}");
+    }
+    g.integrity_check().unwrap();
+    std::fs::remove_dir_all(&jdir).unwrap();
+}
+
+/// The journal refuses double-creation, reports existence correctly,
+/// and cleans up.
+#[test]
+fn journal_lifecycle() {
+    let jdir: PathBuf = std::env::temp_dir()
+        .join(format!("mgit-cascade-journal-life-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&jdir);
+    assert!(!cascade::journal_exists(&jdir));
+
+    let (mut g, st) = wide_graph(2);
+    let m = g.idx("m").unwrap();
+    let m2 = register_update(&mut g, &st, m);
+    let plan = cascade::plan_cascade(&mut g, m, m2, |_, _| false, |_, _| false).unwrap();
+    let journal = cascade::CascadeJournal::create(&jdir, &plan, &g).unwrap();
+    assert!(cascade::journal_exists(&jdir));
+    assert!(
+        cascade::CascadeJournal::create(&jdir, &plan, &g).is_err(),
+        "double-create must be refused"
+    );
+    drop(journal);
+
+    // A full run against the journal leaves a replayable record.
+    let exec = MockExec::new();
+    let journal = cascade::CascadeJournal::reopen(&jdir).unwrap();
+    let opts = CascadeOptions { jobs: 2, journal: Some(&journal) };
+    cascade::execute_and_apply(&mut g, &plan, &st, &exec, &opts, &cascade::DoneTasks::new())
+        .unwrap();
+    drop(journal);
+    let (loaded_plan, done) = cascade::load_journal(&jdir, &g).unwrap();
+    assert_eq!(loaded_plan.tasks.len(), plan.tasks.len());
+    assert_eq!(done.len(), plan.tasks.len(), "every task journaled");
+
+    cascade::remove_journal(&jdir).unwrap();
+    assert!(!cascade::journal_exists(&jdir));
+}

@@ -81,7 +81,12 @@ fn concurrent_readers_with_live_writer() {
         .map(|i| build_chain(&store, CHAIN_LEN, 100 + i as u64, 256))
         .collect();
     let tips: Vec<ObjectId> = chains.iter().map(|c| *c.last().unwrap()).collect();
-    let cfg = RepackConfig { max_chain_depth: 8, prune: false, mode: RepackMode::Full };
+    let cfg = RepackConfig {
+        max_chain_depth: 8,
+        prune: false,
+        mode: RepackMode::Full,
+        ..RepackConfig::default()
+    };
     let report = repack(&mut store, &tips, &cfg, &NativeKernel).unwrap();
     assert!(report.pack_path.is_some());
 
@@ -191,8 +196,12 @@ fn concurrent_readers_with_live_writer() {
     let first_pack = report.pack_path.clone().unwrap();
     let mut roots = tips.clone();
     roots.extend(writer_ids.iter().copied());
-    let inc =
-        RepackConfig { max_chain_depth: 8, prune: false, mode: RepackMode::Incremental };
+    let inc = RepackConfig {
+        max_chain_depth: 8,
+        prune: false,
+        mode: RepackMode::Incremental,
+        ..RepackConfig::default()
+    };
     let r2 = repack(&mut store, &roots, &inc, &NativeKernel).unwrap();
     assert_eq!(r2.packed, writer_ids.len());
     assert!(first_pack.exists());

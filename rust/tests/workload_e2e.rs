@@ -67,13 +67,16 @@ fn g2_build_persist_load_cascade() {
         }
     }
 
-    // Cascade from the root.
-    let mut trainer = Trainer::new(&rt);
-    let mut ckstore = CasCheckpointStore {
+    // Cascade from the root (through the shared resolve cache, as the
+    // CLI does).
+    let trainer = Trainer::new(&rt);
+    let cache = delta::ResolveCache::new(64);
+    let ckstore = CasCheckpointStore {
         store: &store,
         zoo: &zoo,
         kernel: &NativeKernel,
         compress: Some(CompressConfig::default()),
+        cache: Some(&cache),
     };
     let m = wl.graph.idx("g2/base-mlm").unwrap();
     let base_ck = wl.ck("g2/base-mlm").unwrap().clone();
@@ -91,8 +94,8 @@ fn g2_build_persist_load_cascade() {
     let before = wl.graph.len();
     let report = update::run_update_cascade(
         &mut wl.graph,
-        &mut ckstore,
-        &mut trainer,
+        &ckstore,
+        &trainer,
         m,
         m_new,
         |_, _| false,
