@@ -1,0 +1,182 @@
+//! HTTP serving-tier bench: requests/second through `mgit serve`'s
+//! bounded worker pool, versus client concurrency.
+//!
+//! No runtime/artifacts needed: a synthetic lineage (1 root × 15
+//! delta-compressed versions of a 512 KiB model) is built inline and
+//! fully repacked, so `/checkpoint` responses stream through the mmap
+//! pack tier and the shared `ResolveCache`. Sections:
+//!
+//! 1. `/log` (pure JSON, no tensor work) at 1/2/4/8 concurrent clients;
+//! 2. `/checkpoint/<node>` (chain resolution + 512 KiB body) at 1/2/4/8
+//!    concurrent clients, pool fixed at 8.
+//!
+//! Each client performs a fixed request quota; rows report wall clock,
+//! requests/s and aggregate MiB/s.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::Path;
+
+use mgit::checkpoint::{Checkpoint, ModelZoo};
+use mgit::delta::{self, CompressConfig, NativeKernel};
+use mgit::ops::serve::Server;
+use mgit::ops::{self, Repo};
+use mgit::util::rng::Rng;
+use mgit::util::timing::Timer;
+use mgit::util::{human_bytes, json};
+
+const N_TENSORS: usize = 8;
+const TENSOR_SIZE: usize = 16 * 1024;
+const VERSIONS: usize = 15;
+const POOL: usize = 8;
+const REQUESTS_PER_CLIENT: usize = 40;
+
+fn manifest() -> String {
+    let layout: Vec<String> = (0..N_TENSORS)
+        .map(|i| {
+            format!(
+                r#"{{"name":"w.t{i}","shape":[{TENSOR_SIZE}],"offset":{},"size":{TENSOR_SIZE},"init":"normal"}}"#,
+                i * TENSOR_SIZE
+            )
+        })
+        .collect();
+    format!(
+        r#"{{
+          "vocab": 16, "max_seq": 4, "n_classes": 2, "batch": 2,
+          "delta_chunk": 4096,
+          "special_tokens": {{"cls": 14, "mask": 15, "ignore_label": -100}},
+          "archs": {{"bench": {{
+              "d_model": 8, "n_layers": 1, "n_heads": 1, "d_ff": 16,
+              "param_count": {},
+              "layout": [{}],
+              "dag": {{"nodes": [], "edges": []}}
+          }}}},
+          "artifacts": {{"bench": {{}}}},
+          "delta_kernels": {{"quant": "q", "dequant": "d"}}
+        }}"#,
+        N_TENSORS * TENSOR_SIZE,
+        layout.join(",")
+    )
+}
+
+fn build_repo(dir: &Path, zoo: &ModelZoo) -> Vec<String> {
+    let spec = zoo.arch("bench").unwrap();
+    Repo::init(dir).unwrap();
+    let mut repo = Repo::open(dir).unwrap();
+    let root = Checkpoint::init(spec, 7);
+    let (sm, _) = delta::store_raw(&repo.store, spec, &root).unwrap();
+    let idx = repo.graph.add_node("bench/v1", "bench").unwrap();
+    repo.graph.node_mut(idx).stored = Some(sm.clone());
+    let mut names = vec!["bench/v1".to_string()];
+    let mut prev = (root, sm);
+    let mut prev_idx = idx;
+    for v in 1..VERSIONS as u64 {
+        let mut rng = Rng::new(v + 100);
+        let child = Checkpoint {
+            arch: prev.0.arch.clone(),
+            flat: prev.0.flat.iter().map(|&x| x + rng.normal_f32(0.0, 1e-4)).collect(),
+        };
+        let cand = delta::prepare_delta(
+            &repo.store,
+            spec,
+            &child,
+            spec,
+            &prev.0,
+            &prev.1,
+            CompressConfig::default(),
+            &NativeKernel,
+        )
+        .unwrap();
+        delta::commit(&repo.store, &cand).unwrap();
+        let name = format!("bench/v{}", v + 1);
+        let n = repo.graph.add_node(&name, "bench").unwrap();
+        repo.graph.node_mut(n).stored = Some(cand.model.clone());
+        repo.graph.add_version_edge(prev_idx, n).unwrap();
+        names.push(name);
+        prev = (cand.checkpoint, cand.model);
+        prev_idx = n;
+    }
+    repo.save().unwrap();
+    ops::RepackRequest::default().run(&mut Repo::open(dir).unwrap()).unwrap();
+    names
+}
+
+fn http_get_len(addr: SocketAddr, path: &str) -> usize {
+    let mut s = TcpStream::connect(addr).unwrap();
+    write!(s, "GET {path} HTTP/1.1\r\nHost: bench\r\nConnection: close\r\n\r\n").unwrap();
+    let mut buf = Vec::new();
+    s.read_to_end(&mut buf).unwrap();
+    assert!(buf.starts_with(b"HTTP/1.1 200"), "non-200 for {path}");
+    buf.len()
+}
+
+fn drive(addr: SocketAddr, clients: usize, paths: &[String]) -> (f64, u64) {
+    let t = Timer::start();
+    let mut total = 0u64;
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for c in 0..clients {
+            let paths = paths.to_vec();
+            handles.push(scope.spawn(move || {
+                let mut bytes = 0u64;
+                for i in 0..REQUESTS_PER_CLIENT {
+                    let path = &paths[(c + i) % paths.len()];
+                    bytes += http_get_len(addr, path) as u64;
+                }
+                bytes
+            }));
+        }
+        for h in handles {
+            total += h.join().unwrap();
+        }
+    });
+    (t.elapsed_secs(), total)
+}
+
+fn section(addr: SocketAddr, label: &str, paths: &[String]) {
+    println!("{label} (pool {POOL}, {REQUESTS_PER_CLIENT} requests/client)");
+    println!(
+        "  {:>8} {:>10} {:>12} {:>12}",
+        "clients", "wall", "req/s", "aggregate"
+    );
+    for clients in [1usize, 2, 4, 8] {
+        let (secs, bytes) = drive(addr, clients, paths);
+        let reqs = (clients * REQUESTS_PER_CLIENT) as f64;
+        println!(
+            "  {:>8} {:>9.2}s {:>12.0} {:>10}/s",
+            clients,
+            secs,
+            reqs / secs,
+            human_bytes((bytes as f64 / secs) as u64)
+        );
+    }
+}
+
+fn main() {
+    let dir = std::env::temp_dir().join(format!("mgit-serve-bench-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let zoo = ModelZoo::from_json(&json::parse(&manifest()).unwrap()).unwrap();
+    let names = build_repo(&dir, &zoo);
+
+    let server = Server::bind(Repo::open(&dir).unwrap(), Some(zoo), 0, POOL).unwrap();
+    let addr = server.local_addr().unwrap();
+    let handle = server.handle().unwrap();
+    let srv = std::thread::spawn(move || server.serve().unwrap());
+
+    println!(
+        "serve bench: {} versions of a {} model, packed, pool {POOL}",
+        VERSIONS,
+        human_bytes((N_TENSORS * TENSOR_SIZE * 4) as u64)
+    );
+    section(addr, "GET /log", &["/log".to_string()]);
+    let ck_paths: Vec<String> =
+        names.iter().map(|n| format!("/checkpoint/{n}")).collect();
+    section(addr, "GET /checkpoint/<node>", &ck_paths);
+
+    handle.shutdown();
+    let report = srv.join().unwrap();
+    println!("total: {} requests, {} errors", report.requests, report.errors);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,13 +1,11 @@
 //! The `mgit` command-line interface (paper §3.1: "analogous to git's
-//! command-line interface") and the on-disk repository wrapper.
+//! command-line interface") — a thin shell over the typed operations
+//! API in [`crate::ops`]: parse argv → build a request → execute →
+//! render the report (human text, or JSON with `--json`). No operation
+//! logic lives here.
 //!
-//! A repository is a directory containing `.mgit/graph.json` (lineage
-//! graph + test registry, re-serialized after every mutating operation,
-//! matching §3.1) and `.mgit/objects/` (the content-addressed store:
-//! loose staging fan-out plus `pack/*.pack` pack files — see
-//! `docs/STORAGE.md`).
-//!
-//! Commands:
+//! Commands (every one maps to an `ops` request/report pair and accepts
+//! `--json`):
 //! ```text
 //! mgit init [--dir D]
 //! mgit log                       # nodes, edges, versions
@@ -23,451 +21,143 @@
 //! mgit build <g1|g2|g3|g4|g5>    # train + register a workload graph
 //! mgit compress --codec <rle|lzma|zstd> [--eps E]  # re-store with deltas
 //! mgit test [--re REGEX]         # run registered tests over the graph
-//! mgit cascade <node> [--steps N] [--jobs N]
+//! mgit cascade <node> [--steps N] [--jobs N|auto]
 //!                                # perturb-retrain node, cascade children
 //!                                # (wavefront-parallel over N workers)
-//! mgit cascade --resume [--jobs N] # finish an interrupted cascade
+//! mgit cascade --resume [--jobs N|auto]  # finish an interrupted cascade
 //! mgit stats                     # store/dedup/chain-depth statistics
+//! mgit serve [--port N] [--pool N|auto]  # HTTP front-end on the
+//!                                # concurrent read tier (docs/API.md)
 //! ```
+//!
+//! Exit status: nonzero when the operation errors *or* when its report
+//! carries problems ([`crate::ops::Report::failure`]) — `fsck` with
+//! corruption, `test` with failing tests, `verify-pack` with bad packs.
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
-use regex::Regex;
+use anyhow::{bail, Result};
 
-use crate::autoconstruct::AutoConfig;
-use crate::cascade;
-use crate::checkpoint::Checkpoint;
-use crate::delta::{self, Codec, CompressConfig, DeltaKernel, NativeKernel};
-use crate::diff::{divergence_scores, value_distance};
-use crate::lineage::{traversal, LineageGraph};
-use crate::merge::{merge, MergeOutcome};
-use crate::modeldag::ModelDag;
-use crate::registry::{run_test, CreationSpec, Objective, PerturbSpec, TestScope, TestSpec};
+use crate::delta::{Codec, CompressConfig};
+use crate::ops::{self, Report};
 use crate::runtime::Runtime;
-use crate::store::{ObjectId, Store};
-use crate::train::{CasCheckpointStore, Trainer};
-use crate::update;
 use crate::util::argparse::Args;
-use crate::util::{human_bytes, human_secs};
-use crate::workloads::{self, PersistMode, Scale};
 
-/// An on-disk MGit repository.
-pub struct Repo {
-    pub root: PathBuf,
-    pub graph: LineageGraph,
-    pub store: Store,
-}
-
-impl Repo {
-    pub fn mgit_dir(root: &Path) -> PathBuf {
-        root.join(".mgit")
-    }
-
-    pub fn graph_path(root: &Path) -> PathBuf {
-        Self::mgit_dir(root).join("graph.json")
-    }
-
-    fn stats_path(root: &Path) -> PathBuf {
-        Self::mgit_dir(root).join("stats.json")
-    }
-
-    pub fn init(root: &Path) -> Result<Repo> {
-        let dir = Self::mgit_dir(root);
-        if Self::graph_path(root).exists() {
-            bail!("repository already initialized at {}", dir.display());
-        }
-        std::fs::create_dir_all(&dir)?;
-        let store = Store::open_packed(&dir.join("objects"))?;
-        let graph = LineageGraph::new();
-        graph.save(&Self::graph_path(root))?;
-        Ok(Repo { root: root.to_path_buf(), graph, store })
-    }
-
-    /// De-serialize at the start of an operation (paper §3.1). The store
-    /// is pack-capable: loose staging first, then pack indexes.
-    pub fn open(root: &Path) -> Result<Repo> {
-        let graph = LineageGraph::load(&Self::graph_path(root))?;
-        let store = Store::open_packed(&Self::mgit_dir(root).join("objects"))?;
-        Ok(Repo { root: root.to_path_buf(), graph, store })
-    }
-
-    /// Serialize at the end of every operation (paper §3.1); also folds
-    /// this process's store counters into the persistent cumulative
-    /// stats that `mgit stats` reports.
-    pub fn save(&self) -> Result<()> {
-        self.graph.save(&Self::graph_path(&self.root))?;
-        self.persist_stats()
-    }
-
-    /// Cumulative (puts, dedup_hits, bytes_written) since `init`.
-    pub fn load_stats(root: &Path) -> (u64, u64, u64) {
-        let read = || -> Result<(u64, u64, u64)> {
-            let text = std::fs::read_to_string(Self::stats_path(root))?;
-            let j = crate::util::json::parse(&text)?;
-            Ok((
-                j.req_usize("puts")? as u64,
-                j.req_usize("dedup_hits")? as u64,
-                j.req_usize("bytes_written")? as u64,
-            ))
-        };
-        read().unwrap_or((0, 0, 0))
-    }
-
-    /// Drain the in-process store counters into `.mgit/stats.json`.
-    /// Single-writer, like `graph.json`: operations are per-invocation.
-    pub fn persist_stats(&self) -> Result<()> {
-        let (puts, dedup, written) = self.store.stats.take();
-        if puts == 0 && dedup == 0 && written == 0 {
-            return Ok(());
-        }
-        let (p0, d0, w0) = Self::load_stats(&self.root);
-        let j = crate::util::json::Json::obj()
-            .set("puts", (p0 + puts) as usize)
-            .set("dedup_hits", (d0 + dedup) as usize)
-            .set("bytes_written", (w0 + written) as usize);
-        let path = Self::stats_path(&self.root);
-        let write = || -> Result<()> {
-            let tmp = path.with_extension("json.tmp");
-            std::fs::write(&tmp, j.to_string_pretty())?;
-            std::fs::rename(&tmp, &path)?;
-            Ok(())
-        };
-        let res = write();
-        if res.is_err() {
-            // Don't lose the drained counts on a failed write; they'll
-            // ride along with the next successful persist.
-            use std::sync::atomic::Ordering;
-            self.store.stats.puts.fetch_add(puts, Ordering::Relaxed);
-            self.store.stats.dedup_hits.fetch_add(dedup, Ordering::Relaxed);
-            self.store.stats.bytes_written.fetch_add(written, Ordering::Relaxed);
-        }
-        res
-    }
-
-    pub fn load_checkpoint(
-        &self,
-        node: &str,
-        kernel: &dyn DeltaKernel,
-        zoo: &crate::checkpoint::ModelZoo,
-    ) -> Result<Checkpoint> {
-        let n = self.graph.by_name(node)?;
-        let sm = n
-            .stored
-            .as_ref()
-            .ok_or_else(|| anyhow!("node {node} has no stored checkpoint"))?;
-        delta::load(&self.store, zoo, sm, kernel)
-    }
-
-    /// GC roots: every stored model referenced by the graph. Delta-parent
-    /// references are strong and walked transitively; GC aborts rather
-    /// than sweep if a live object is unreadable.
-    pub fn gc(&self) -> Result<Vec<ObjectId>> {
-        let roots = self.graph.object_roots();
-        self.store.gc(&roots, |bytes| {
-            crate::store::format::TensorObject::decode(bytes)
-                .map(|o| o.refs())
-                .unwrap_or_default()
-        })
-    }
-}
+pub use crate::ops::Repo;
 
 /// Entry point used by `rust/src/main.rs`.
 pub fn run(argv: Vec<String>) -> Result<()> {
     let args = Args::parse(argv)?;
     let root = PathBuf::from(args.flag_or("dir", "."));
     let artifacts = PathBuf::from(args.flag_or("artifacts", "artifacts"));
+    let json = args.has("json");
     match args.command.as_str() {
         "" | "help" => {
             print!("{}", HELP);
             Ok(())
         }
-        "init" => {
-            Repo::init(&root)?;
-            println!("initialized empty MGit repository in {}", Repo::mgit_dir(&root).display());
-            Ok(())
+        "init" => finish(json, &ops::InitRequest.run(&root)?),
+        "log" => finish(json, &ops::LogRequest.run(&Repo::open(&root)?)?),
+        "show" => {
+            let req = ops::ShowRequest { node: args.pos(0, "node")?.to_string() };
+            finish(json, &req.run(&Repo::open(&root)?)?)
         }
-        "log" => cmd_log(&root),
-        "show" => cmd_show(&root, &args),
-        "fsck" => cmd_fsck(&root),
-        "stats" => cmd_stats(&root),
-        "repack" => cmd_repack(&root, &args),
-        "verify-pack" => cmd_verify_pack(&root),
-        "gc" => {
-            let repo = Repo::open(&root)?;
-            let swept = repo.gc()?;
-            println!("swept {} unreachable objects", swept.len());
-            Ok(())
+        "fsck" => finish(json, &ops::FsckRequest.run(&Repo::open(&root)?)?),
+        "stats" => finish(json, &ops::StatsRequest.run(&Repo::open(&root)?)?),
+        "gc" => finish(json, &ops::GcRequest.run(&Repo::open(&root)?)?),
+        "repack" => finish(json, &repack_request(&args)?.run(&mut Repo::open(&root)?)?),
+        "verify-pack" => finish(json, &ops::VerifyPackRequest.run(&Repo::open(&root)?)?),
+        "diff" => {
+            let rt = Runtime::new(&artifacts)?;
+            let req = ops::DiffRequest {
+                a: args.pos(0, "a")?.to_string(),
+                b: args.pos(1, "b")?.to_string(),
+            };
+            finish(json, &req.run(&Repo::open(&root)?, rt.zoo(), &rt)?)
         }
-        "diff" => cmd_diff(&root, &artifacts, &args),
-        "merge" => cmd_merge(&root, &artifacts, &args),
-        "build" => cmd_build(&root, &artifacts, &args),
-        "compress" => cmd_compress(&root, &artifacts, &args),
-        "test" => cmd_test(&root, &artifacts, &args),
-        "cascade" => cmd_cascade(&root, &artifacts, &args),
-        "auto-insert" => cmd_auto_insert(&root, &artifacts, &args),
+        "merge" => {
+            let rt = Runtime::new(&artifacts)?;
+            let req = ops::MergeRequest {
+                base: args.pos(0, "base")?.to_string(),
+                m1: args.pos(1, "m1")?.to_string(),
+                m2: args.pos(2, "m2")?.to_string(),
+                out: args.flag("out").map(String::from),
+            };
+            finish(json, &req.run(&mut Repo::open(&root)?, rt.zoo(), &rt)?)
+        }
+        "build" => {
+            let rt = Runtime::new(&artifacts)?;
+            let req = ops::BuildRequest {
+                which: args.pos(0, "graph")?.to_string(),
+                small: args.has("small"),
+            };
+            finish(json, &req.run(&mut Repo::open(&root)?, &rt)?)
+        }
+        "compress" => {
+            let rt = Runtime::new(&artifacts)?;
+            let req = ops::CompressRequest {
+                config: CompressConfig {
+                    eps: args.flag_f64("eps", 1e-4)? as f32,
+                    codec: Codec::parse(args.flag_or("codec", "lzma"))?,
+                    prequantize: args.has("prequantize"),
+                },
+            };
+            finish(json, &req.run(&mut Repo::open(&root)?, rt.zoo(), &rt)?)
+        }
+        "test" => {
+            let rt = Runtime::new(&artifacts)?;
+            let req = ops::TestRequest { pattern: args.flag("re").map(String::from) };
+            finish(json, &req.run(&Repo::open(&root)?, rt.zoo(), &rt, &rt)?)
+        }
+        "cascade" => {
+            let req = ops::CascadeRequest {
+                node: if args.has("resume") {
+                    None
+                } else {
+                    Some(args.pos(0, "node")?.to_string())
+                },
+                steps: args.flag_usize("steps", 30)?,
+                jobs: jobs_flag(&args, "jobs", 1)?,
+            };
+            finish(json, &req.run(&root, &artifacts)?)
+        }
+        "auto-insert" => {
+            let rt = Runtime::new(&artifacts)?;
+            finish(json, &ops::AutoInsertRequest.run(&Repo::open(&root)?, &rt)?)
+        }
+        "serve" => cmd_serve(&root, &artifacts, &args, json),
         other => bail!("unknown command `{other}` (try `mgit help`)"),
     }
 }
 
-const HELP: &str = "\
-mgit — model versioning and management (MGit, ICML 2024 reproduction)
-
-usage: mgit <command> [args] [--flags]
-
-  init                       create .mgit/ in --dir (default .)
-  log                        list nodes with edges and versions
-  show <node>                node details (type, creation fn, params)
-  fsck                       check graph invariants, object presence and
-                             cross-pack delta-chain integrity
-  stats                      object store statistics (loose vs packed,
-                             dedup counters, chain-depth histogram,
-                             per-pack generations)
-  gc                         sweep unreachable loose objects
-  repack                     pack new loose objects into a fresh pack
-                             (--incremental, the default; --full rewrites
-                             every pack) [--max-chain-depth 8] [--prune]
-                             [--auto-full-gens 16] [--auto-full-dead 0.5]
-                             (incremental auto-promotes to a full rewrite
-                             past either threshold; 0 disables; the dead-
-                             byte trigger fires only with --prune)
-  verify-pack                verify pack checksums + object content hashes
-  diff <a> <b>               divergence scores between two models
-  merge <base> <m1> <m2>     figure-2 merge (conflict detection)
-  build <g1|g2|g3|g4|g5>     train + register a workload graph [--small]
-  compress                   re-store all models with delta compression
-                             [--codec rle|lzma|zstd] [--eps 1e-4]
-  test [--re REGEX]          run registered tests over all nodes
-  cascade <node>             retrain <node> on perturbed data, then run
-                             the update cascade over its descendants
-                             [--jobs N] (wavefront-parallel) — journaled:
-                             `cascade --resume` finishes an interrupted run
-  auto-insert                rebuild provenance edges automatically (§3.2)
-
-global flags: --dir DIR  --artifacts DIR
-";
-
-fn cmd_log(root: &Path) -> Result<()> {
-    let repo = Repo::open(root)?;
-    let (prov, ver) = repo.graph.edge_counts();
-    println!(
-        "{} nodes / {} provenance edges / {} version edges",
-        repo.graph.len(),
-        prov,
-        ver
-    );
-    for node in &repo.graph.nodes {
-        let parents: Vec<&str> = node
-            .prov_parents
-            .iter()
-            .map(|&p| repo.graph.node(p).name.as_str())
-            .collect();
-        let stored = if node.stored.is_some() { "" } else { " (no ckpt)" };
-        let cr = node
-            .creation
-            .as_ref()
-            .map(|c| format!(" cr={}", c.kind()))
-            .unwrap_or_default();
-        println!(
-            "  {:<40} [{}]{}{} <- {:?}",
-            node.name, node.model_type, stored, cr, parents
-        );
-    }
-    Ok(())
-}
-
-fn cmd_show(root: &Path, args: &Args) -> Result<()> {
-    let repo = Repo::open(root)?;
-    let node = repo.graph.by_name(args.pos(0, "node")?)?;
-    println!("name:  {}", node.name);
-    println!("type:  {}", node.model_type);
-    if let Some(cr) = &node.creation {
-        println!("cr:    {}", cr.to_json().to_string_compact());
-    }
-    println!("meta:  {}", node.metadata.to_string_compact());
-    if let Some(sm) = &node.stored {
-        println!("params ({}):", sm.params.len());
-        for (name, id) in sm.params.iter().take(8) {
-            println!("  {:<24} {}", name, id.short());
-        }
-        if sm.params.len() > 8 {
-            println!("  … {} more", sm.params.len() - 8);
-        }
-    }
-    Ok(())
-}
-
-fn cmd_fsck(root: &Path) -> Result<()> {
-    let repo = Repo::open(root)?;
-    repo.graph.integrity_check()?;
-    let mut problems = 0;
-    // Every model parameter must be present (loose or packed).
-    for node in &repo.graph.nodes {
-        if let Some(sm) = &node.stored {
-            for (pname, id) in &sm.params {
-                if !repo.store.has(id) {
-                    println!("MISSING object {} ({}:{})", id.short(), node.name, pname);
-                    problems += 1;
-                }
-            }
-        }
-    }
-    // Cross-pack delta-chain integrity: every delta parent must resolve
-    // somewhere in the store, whichever pack (or loose file) holds it.
-    // Unreadable objects are recorded and the scan continues — fsck must
-    // report corruption, not die on it. Orphaned parents are also listed
-    // together at the end so a repair pass has the full set in one place.
-    let mut orphaned: std::collections::BTreeMap<ObjectId, Vec<ObjectId>> = Default::default();
-    for id in repo.store.list()? {
-        let bytes = match repo.store.get(&id) {
-            Ok(b) => b,
-            Err(e) => {
-                println!("UNREADABLE object {}: {e:#}", id.short());
-                problems += 1;
-                continue;
-            }
-        };
-        if let Ok(obj) = crate::store::format::TensorObject::decode(&bytes) {
-            for parent in obj.refs() {
-                if !repo.store.has(&parent) {
-                    println!(
-                        "DANGLING delta parent {} (referenced by {})",
-                        parent.short(),
-                        id.short()
-                    );
-                    orphaned.entry(parent).or_default().push(id);
-                    problems += 1;
-                }
-            }
-        }
-    }
-    if !orphaned.is_empty() {
-        println!("orphaned delta parents ({}):", orphaned.len());
-        for (parent, children) in &orphaned {
-            let refs: Vec<String> = children.iter().map(|c| c.short()).collect();
-            println!("  {} <- [{}]", parent.hex(), refs.join(", "));
-        }
-    }
-    // Pack structure (checksums, index/offset agreement).
-    if let Some(ps) = repo.store.as_packed() {
-        for p in ps.packs() {
-            if let Err(e) = p.verify() {
-                println!("BAD PACK {}: {e:#}", p.path.display());
-                problems += 1;
-            }
-        }
-        let (loose, packed) = ps.counts()?;
-        println!("objects: {loose} loose / {packed} packed in {} packs", ps.packs().len());
-    }
-    if problems == 0 {
-        println!("ok: {} nodes, all invariants hold, all objects present", repo.graph.len());
-        Ok(())
+/// Render the report (JSON or human text), then map report-carried
+/// problems to a nonzero exit.
+fn finish(json: bool, report: &dyn Report) -> Result<()> {
+    if json {
+        println!("{}", report.to_json().to_string_pretty());
     } else {
-        bail!("{problems} fsck problems")
+        let text = report.to_string();
+        if !text.is_empty() {
+            println!("{text}");
+        }
+    }
+    match report.failure() {
+        None => Ok(()),
+        Some(msg) => bail!("{msg}"),
     }
 }
 
-fn cmd_stats(root: &Path) -> Result<()> {
-    let repo = Repo::open(root)?;
-    let objects = repo.store.list()?;
-    let bytes = repo.store.stored_bytes()?;
-    let mut raw_bytes: u64 = 0;
-    let mut delta_objs = 0usize;
-    // One decode pass feeds both the byte accounting and (via the parent
-    // map) the chain-depth histogram below.
-    let mut parents: std::collections::HashMap<ObjectId, Option<ObjectId>> =
-        Default::default();
-    for id in &objects {
-        let mut parent = None;
-        if let Ok(obj) = crate::store::format::TensorObject::decode(&repo.store.get(id)?) {
-            let numel: usize = obj.shape().iter().product();
-            raw_bytes += (numel * 4) as u64;
-            if let crate::store::format::TensorObject::Delta { parent: p, .. } = obj {
-                delta_objs += 1;
-                parent = Some(p);
-            }
-        }
-        parents.insert(*id, parent);
+/// `--jobs N` / `--jobs auto` (ROADMAP follow-up): `auto` sizes from
+/// [`crate::util::auto_jobs`].
+fn jobs_flag(args: &Args, name: &str, default: usize) -> Result<usize> {
+    match args.flag(name) {
+        Some("auto") => Ok(crate::util::auto_jobs()),
+        _ => args.flag_usize(name, default),
     }
-    let (loose, packed) = match repo.store.as_packed() {
-        Some(ps) => ps.counts()?,
-        None => (objects.len(), 0),
-    };
-    println!("objects:        {} ({loose} loose, {packed} packed)", objects.len());
-    // Per-pack generation info: incremental repacks append packs over
-    // time; sort by file mtime so "gen 0" is the oldest.
-    if let Some(ps) = repo.store.as_packed() {
-        if !ps.packs().is_empty() {
-            let mut gens: Vec<_> = ps
-                .packs()
-                .iter()
-                .map(|p| {
-                    let mtime = std::fs::metadata(&p.path)
-                        .and_then(|m| m.modified())
-                        .unwrap_or(std::time::SystemTime::UNIX_EPOCH);
-                    (mtime, p)
-                })
-                .collect();
-            gens.sort_by_key(|(t, _)| *t);
-            println!("packs:          {} ({} reads)", gens.len(), gens[0].1.reader_kind());
-            for (generation, (_, p)) in gens.iter().enumerate() {
-                let name = p
-                    .path
-                    .file_name()
-                    .map(|n| n.to_string_lossy().into_owned())
-                    .unwrap_or_else(|| p.path.display().to_string());
-                println!(
-                    "  gen {generation:<3} {:<6} objects  {:>10}  {}",
-                    p.object_count(),
-                    human_bytes(p.size_bytes()),
-                    name
-                );
-            }
-        }
-    }
-    println!("delta-encoded:  {delta_objs}");
-    println!("stored bytes:   {}", human_bytes(bytes));
-    println!("logical bytes:  {}", human_bytes(raw_bytes));
-    if bytes > 0 {
-        println!("object-level compression ratio: {:.2}x", raw_bytes as f64 / bytes as f64);
-    }
-    // Cumulative dedup counters (persisted across invocations).
-    let (puts, dedup, written) = Repo::load_stats(root);
-    println!(
-        "puts:           {puts} total, {dedup} dedup hits ({:.1}% hit rate)",
-        if puts > 0 { 100.0 * dedup as f64 / puts as f64 } else { 0.0 }
-    );
-    println!("bytes written:  {}", human_bytes(written));
-    // Delta-chain depths (reconstruction cost driver; see docs/STORAGE.md).
-    let depths = crate::store::pack::chain_depths_from_parents(&parents)?;
-    let max_depth = depths.values().copied().max().unwrap_or(0);
-    let chain_lens: Vec<usize> = depths.values().copied().filter(|&d| d > 0).collect();
-    let mean_depth = if chain_lens.is_empty() {
-        0.0
-    } else {
-        chain_lens.iter().sum::<usize>() as f64 / chain_lens.len() as f64
-    };
-    println!("chain depth:    max {max_depth}, mean {mean_depth:.2} (over delta objects)");
-    let buckets: [(usize, usize, &str); 6] = [
-        (0, 0, "0 (base)"),
-        (1, 2, "1-2"),
-        (3, 4, "3-4"),
-        (5, 8, "5-8"),
-        (9, 16, "9-16"),
-        (17, usize::MAX, "17+"),
-    ];
-    for (lo, hi, label) in buckets {
-        let n = depths.values().filter(|&&d| d >= lo && d <= hi).count();
-        if n > 0 {
-            println!("  depth {label:<9} {n}");
-        }
-    }
-    Ok(())
 }
 
-fn cmd_repack(root: &Path, args: &Args) -> Result<()> {
+fn repack_request(args: &Args) -> Result<ops::RepackRequest> {
     use crate::store::pack::RepackMode;
-    let mut repo = Repo::open(root)?;
     if args.has("full") && args.has("incremental") {
         bail!("--full and --incremental are mutually exclusive");
     }
@@ -487,599 +177,84 @@ fn cmd_repack(root: &Path, args: &Args) -> Result<()> {
             Some(r)
         }
     };
-    let cfg = crate::store::pack::RepackConfig {
+    Ok(ops::RepackRequest {
         max_chain_depth: args.flag_usize("max-chain-depth", 8)?,
         prune: args.has("prune"),
         mode,
         max_generations,
         max_dead_ratio,
-    };
-    let roots = repo.graph.object_roots();
-    let t = crate::util::timing::Timer::start();
-    // NativeKernel is the bit-compatible oracle of the Pallas kernel, so
-    // re-based encodings agree across runtime backends.
-    let report = crate::store::pack::repack(&mut repo.store, &roots, &cfg, &NativeKernel)?;
-    repo.save()?;
-    let mode_label = match (mode, &report.escalated) {
-        (RepackMode::Full, _) => "full".to_string(),
-        (RepackMode::Incremental, None) => "incremental".to_string(),
-        (RepackMode::Incremental, Some(reason)) => {
-            format!("incremental -> full: {reason}")
-        }
-    };
-    println!(
-        "repacked {} objects ({} retained in old packs, {} carried dead) in {} [{}]",
-        report.packed,
-        report.retained_packed,
-        report.carried_dead,
-        human_secs(t.elapsed_secs()),
-        mode_label
-    );
-    if report.dead_ratio > 0.0 {
-        println!("garbage: {:.1}% of sealed pack bytes are unreachable", report.dead_ratio * 100.0);
-    }
-    println!("packs:  {} -> {}", report.packs_before, report.packs_after);
-    println!(
-        "chains: max depth {} -> {} ({} re-based onto nearer ancestors, {} new bases)",
-        report.max_depth_before,
-        report.max_depth_after,
-        report.rebased_delta,
-        report.new_bases
-    );
-    println!(
-        "store:  {} -> {} ({} loose demoted, {} pruned)",
-        human_bytes(report.bytes_before),
-        human_bytes(report.bytes_after),
-        report.loose_demoted,
-        report.pruned_loose
-    );
-    if let Some(p) = &report.pack_path {
-        println!("pack:   {}", p.display());
-    }
-    Ok(())
+    })
 }
 
-fn cmd_verify_pack(root: &Path) -> Result<()> {
+fn cmd_serve(root: &Path, artifacts: &Path, args: &Args, json: bool) -> Result<()> {
+    let port = u16::try_from(args.flag_usize("port", 7421)?)
+        .map_err(|_| anyhow::anyhow!("--port must be 0-65535"))?;
+    // Pool sizing defaults to the machine's available parallelism.
+    let pool = match args.flag("pool") {
+        None | Some("auto") => crate::util::auto_jobs(),
+        Some(_) => args.flag_usize("pool", 1)?.max(1),
+    };
     let repo = Repo::open(root)?;
-    let Some(ps) = repo.store.as_packed() else {
-        bail!("object store is not pack-capable");
-    };
-    if ps.packs().is_empty() {
-        println!("no packs to verify");
-        return Ok(());
-    }
-    // Structure first: checksums, counts, offset/length agreement. A bad
-    // pack is reported (with the failing pack named and, for entry-level
-    // problems, the offending offset) and the scan continues, so one
-    // corrupt pack doesn't mask others.
-    let mut total = 0usize;
-    let mut failures: Vec<String> = Vec::new();
-    let mut structurally_ok: Vec<bool> = Vec::with_capacity(ps.packs().len());
-    for p in ps.packs() {
-        match p.verify() {
-            Ok(()) => {
-                total += p.object_count();
-                println!(
-                    "pack {}: {} objects, structure ok",
-                    p.path.display(),
-                    p.object_count()
-                );
-                structurally_ok.push(true);
-            }
-            Err(e) => {
-                println!("BAD PACK {}: {e:#}", p.path.display());
-                failures.push(format!("{}: {e:#}", p.path.display()));
-                structurally_ok.push(false);
-            }
-        }
-    }
-    // Content second: each pack's *own copy* of every object (ids may be
-    // duplicated across packs after a crash) must still hash to its id
-    // once its delta chain — possibly crossing packs / loose staging —
-    // is resolved. Structurally bad packs are skipped (their offsets
-    // can't be trusted), and per-object errors are recorded rather than
-    // aborting, so one corruption never masks another.
-    let mut cache: std::collections::HashMap<ObjectId, Vec<f32>> = Default::default();
-    let mut checked = 0usize;
-    let mut opaque = 0usize;
-    for (p, ok) in ps.packs().iter().zip(&structurally_ok) {
-        if !ok {
-            continue;
-        }
-        for id in p.index.ids().collect::<Vec<_>>() {
-            let offset = p.index.lookup(&id).map(|(o, _)| o).unwrap_or(0);
-            let bytes = match p.get(&id) {
-                Ok(Some(b)) => b,
-                Ok(None) => {
-                    let msg = format!(
-                        "index lists {} but pack {} lacks it",
-                        id.short(),
-                        p.path.display()
-                    );
-                    println!("BAD OBJECT {msg}");
-                    failures.push(msg);
-                    continue;
-                }
-                Err(e) => {
-                    let msg = format!(
-                        "object {} at offset {offset} in pack {} unreadable: {e:#}",
-                        id.short(),
-                        p.path.display()
-                    );
-                    println!("BAD OBJECT {msg}");
-                    failures.push(msg);
-                    continue;
-                }
-            };
-            let obj = match crate::store::format::TensorObject::decode(&bytes) {
-                Ok(o) => o,
-                Err(_) => {
-                    opaque += 1; // non-MGTF blob: structure-only
-                    continue;
-                }
-            };
-            let shape = obj.shape().to_vec();
-            let want = match &obj {
-                crate::store::format::TensorObject::Raw { dtype, payload, .. } => {
-                    crate::store::hash_tensor(*dtype, &shape, payload)
-                }
-                crate::store::format::TensorObject::Delta { .. } => {
-                    match delta::resolve_object(&repo.store, &obj, &NativeKernel, &mut cache, 0)
-                    {
-                        Ok(values) => crate::store::hash_tensor(
-                            crate::tensor::DType::F32,
-                            &shape,
-                            &crate::tensor::f32_to_bytes(&values),
-                        ),
-                        Err(e) => {
-                            let msg = format!(
-                                "object {} at offset {offset} in pack {} has an \
-                                 unresolvable delta chain: {e:#}",
-                                id.short(),
-                                p.path.display()
-                            );
-                            println!("BAD OBJECT {msg}");
-                            failures.push(msg);
-                            continue;
-                        }
-                    }
-                }
-            };
-            if want != id {
-                let msg = format!(
-                    "object {} at offset {offset} in pack {} does not hash to its id",
-                    id.short(),
-                    p.path.display()
-                );
-                println!("BAD OBJECT {msg}");
-                failures.push(msg);
-                continue;
-            }
-            checked += 1;
-            // Ancestor values only help while verifying nearby chain
-            // links; keep peak memory bounded on huge stores.
-            if cache.len() > 4096 {
-                cache.clear();
-            }
-        }
-    }
-    if !failures.is_empty() {
-        bail!("verify-pack found {} problems:\n  {}", failures.len(), failures.join("\n  "));
-    }
-    println!(
-        "verify-pack ok: {total} objects in {} packs, {checked} content hashes verified, \
-         {opaque} opaque blobs",
-        ps.packs().len()
-    );
-    Ok(())
-}
-
-fn cmd_diff(root: &Path, artifacts: &Path, args: &Args) -> Result<()> {
-    let repo = Repo::open(root)?;
-    let rt = Runtime::new(artifacts)?;
-    let zoo = rt.zoo();
-    let (a, b) = (args.pos(0, "a")?, args.pos(1, "b")?);
-    let na = repo.graph.by_name(a)?;
-    let nb = repo.graph.by_name(b)?;
-    let (sa, sb) = (zoo.arch(&na.model_type)?, zoo.arch(&nb.model_type)?);
-    let da = ModelDag::from_arch(sa, na.stored.as_ref())?;
-    let db = ModelDag::from_arch(sb, nb.stored.as_ref())?;
-    let (ds, dc) = divergence_scores(&da, &db);
-    println!("structural divergence: {ds:.4}");
-    println!("contextual divergence: {dc:.4}");
-    if na.stored.is_some() && nb.stored.is_some() {
-        let cka = repo.load_checkpoint(a, &rt, zoo)?;
-        let ckb = repo.load_checkpoint(b, &rt, zoo)?;
-        let dv = value_distance(&da, sa, &cka, &db, sb, &ckb)?;
-        println!("value distance:        {dv:.4}");
-    }
-    Ok(())
-}
-
-fn cmd_merge(root: &Path, artifacts: &Path, args: &Args) -> Result<()> {
-    let mut repo = Repo::open(root)?;
-    let rt = Runtime::new(artifacts)?;
-    let zoo = rt.zoo();
-    let (base, m1, m2) = (args.pos(0, "base")?, args.pos(1, "m1")?, args.pos(2, "m2")?);
-    let arch = repo.graph.by_name(base)?.model_type.clone();
-    let spec = zoo.arch(&arch)?;
-    let dag = ModelDag::from_arch(spec, None)?;
-    let b = repo.load_checkpoint(base, &rt, zoo)?;
-    let c1 = repo.load_checkpoint(m1, &rt, zoo)?;
-    let c2 = repo.load_checkpoint(m2, &rt, zoo)?;
-    let out = merge(spec, &dag, &b, &c1, &c2)?;
-    println!("merge verdict: {}", out.verdict());
-    match &out {
-        MergeOutcome::Conflict { overlapping } => {
-            println!("layers changed by both sides: {overlapping:?}");
-            println!("manual resolution required");
-        }
-        MergeOutcome::PossibleConflict { dependent_pairs, .. } => {
-            println!("dependent changed-layer pairs: {dependent_pairs:?}");
-            println!("run `mgit test` on the merged model before accepting");
-        }
-        MergeOutcome::Clean { .. } => {}
-    }
-    if let Some(merged) = out.merged() {
-        let name = args.flag_or("out", "merged");
-        let (sm, _) = delta::store_raw(&repo.store, spec, merged)?;
-        let idx = repo.graph.add_node(name, &arch)?;
-        repo.graph.node_mut(idx).stored = Some(sm);
-        let b1 = repo.graph.idx(m1)?;
-        let b2 = repo.graph.idx(m2)?;
-        repo.graph.add_edge(b1, idx)?;
-        repo.graph.add_edge(b2, idx)?;
-        repo.save()?;
-        println!("stored merged model as `{name}`");
-    }
-    Ok(())
-}
-
-fn scale_from(args: &Args) -> Scale {
-    if args.has("small") {
-        Scale::small()
-    } else {
-        Scale::paper()
-    }
-}
-
-fn cmd_build(root: &Path, artifacts: &Path, args: &Args) -> Result<()> {
-    let mut repo = Repo::open(root)?;
-    let rt = Runtime::new(artifacts)?;
-    let scale = scale_from(args);
-    let which = args.pos(0, "graph")?;
-    let t = crate::util::timing::Timer::start();
-    let mut wl = match which {
-        "g1" => workloads::build_g1(&rt, &scale)?,
-        "g2" => workloads::build_g2(&rt, &scale)?,
-        "g3" => workloads::build_g3(&rt, &scale)?,
-        "g4" => workloads::build_g4(&rt, &scale)?,
-        "g5" => workloads::build_g5(&rt, &scale)?,
-        other => bail!("unknown workload `{other}`"),
-    };
-    workloads::persist(
-        &mut wl,
-        &repo.store,
-        rt.zoo(),
-        &rt,
-        PersistMode::HashOnly,
-        |_, _| Ok(true),
-    )?;
-    // Merge the workload graph into the repo graph.
-    merge_graphs(&mut repo.graph, &wl.graph)?;
-    repo.save()?;
-    let (prov, ver) = wl.graph.edge_counts();
-    println!(
-        "built {}: {} nodes / {} prov + {} ver edges in {}",
-        wl.name,
-        wl.graph.len(),
-        prov,
-        ver,
-        human_secs(t.elapsed_secs())
-    );
-    Ok(())
-}
-
-/// Import `src` into `dst` (names must be disjoint).
-fn merge_graphs(dst: &mut LineageGraph, src: &LineageGraph) -> Result<()> {
-    let mut map = Vec::with_capacity(src.len());
-    for node in &src.nodes {
-        let idx = dst.add_node(&node.name, &node.model_type)?;
-        dst.node_mut(idx).stored = node.stored.clone();
-        dst.node_mut(idx).creation = node.creation.clone();
-        dst.node_mut(idx).metadata = node.metadata.clone();
-        map.push(idx);
-    }
-    for (i, node) in src.nodes.iter().enumerate() {
-        for &p in &node.prov_parents {
-            dst.add_edge(map[p], map[i])?;
-        }
-        for &p in &node.ver_parents {
-            dst.add_version_edge(map[p], map[i])?;
-        }
-    }
-    for t in &src.tests.tests {
-        let _ = dst.tests.register(&t.name, t.scope.clone(), t.spec.clone());
-    }
-    Ok(())
-}
-
-fn cmd_compress(root: &Path, artifacts: &Path, args: &Args) -> Result<()> {
-    let mut repo = Repo::open(root)?;
-    let rt = Runtime::new(artifacts)?;
-    let zoo = rt.zoo();
-    let cfg = CompressConfig {
-        eps: args.flag_f64("eps", 1e-4)? as f32,
-        codec: Codec::parse(args.flag_or("codec", "lzma"))?,
-        prequantize: args.has("prequantize"),
-    };
-    let t = crate::util::timing::Timer::start();
-    let mut raw = 0u64;
-    let mut stored = 0u64;
-    // Roots-first over provenance edges.
-    let order: Vec<usize> = {
-        let roots = repo.graph.roots();
-        let mut out = Vec::new();
-        for r in roots {
-            out.extend(traversal::bfs(
-                &repo.graph,
-                r,
-                traversal::EdgeFilter::Both,
-                |_, _| false,
-                |_, _| false,
-            ));
-        }
-        out
-    };
-    let mut rec_cache: std::collections::HashMap<usize, Checkpoint> = Default::default();
-    for idx in order {
-        let Some(sm) = repo.graph.node(idx).stored.clone() else { continue };
-        let ck = delta::load(&repo.store, zoo, &sm, &rt)?;
-        let spec = zoo.arch(&ck.arch)?;
-        let parent = repo.graph.node(idx)
-            .ver_parents
-            .first()
-            .or_else(|| repo.graph.node(idx).prov_parents.first())
-            .copied();
-        match parent.and_then(|p| {
-            repo.graph.node(p).stored.clone().map(|s| (p, s))
-        }) {
-            Some((p, psm)) if repo.graph.node(p).model_type == ck.arch => {
-                let pck = match rec_cache.get(&p) {
-                    Some(c) => c.clone(),
-                    None => delta::load(&repo.store, zoo, &psm, &rt)?,
-                };
-                let (sm2, final_ck, rep, _) = delta::delta_compress_checked(
-                    &repo.store, spec, &ck, zoo.arch(&pck.arch)?, &pck, &psm, cfg, &rt,
-                    |_| Ok(true),
-                )?;
-                raw += rep.raw_bytes;
-                stored += rep.stored_bytes;
-                repo.graph.node_mut(idx).stored = Some(sm2);
-                rec_cache.insert(idx, final_ck);
-            }
-            _ => {
-                let (sm2, rep) = delta::store_raw(&repo.store, spec, &ck)?;
-                raw += rep.raw_bytes;
-                stored += rep.stored_bytes;
-                repo.graph.node_mut(idx).stored = Some(sm2);
-                rec_cache.insert(idx, ck);
-            }
-        }
-    }
-    repo.save()?;
-    let swept = repo.gc()?;
-    println!(
-        "compressed: {} raw -> {} new bytes ({:.2}x vs raw), {} objects swept, took {}",
-        human_bytes(raw),
-        human_bytes(stored),
-        if stored > 0 { raw as f64 / stored as f64 } else { 0.0 },
-        swept.len(),
-        human_secs(t.elapsed_secs())
-    );
-    Ok(())
-}
-
-fn cmd_test(root: &Path, artifacts: &Path, args: &Args) -> Result<()> {
-    let repo = Repo::open(root)?;
-    let rt = Runtime::new(artifacts)?;
-    let zoo = rt.zoo();
-    let re = match args.flag("re") {
-        Some(r) => Some(Regex::new(r)?),
-        None => None,
-    };
-    let mut ran = 0;
-    let mut failed = 0;
-    for node in &repo.graph.nodes {
-        let tests: Vec<_> = repo
-            .graph
-            .tests
-            .matching(&node.name, &node.model_type, re.as_ref())
-            .cloned()
-            .collect();
-        if tests.is_empty() || node.stored.is_none() {
-            continue;
-        }
-        let ck = delta::load(&repo.store, zoo, node.stored.as_ref().unwrap(), &rt)?;
-        for t in tests {
-            let (pass, metric) = run_test(&t.spec, &ck, &rt)?;
-            ran += 1;
-            if !pass {
-                failed += 1;
-            }
-            println!(
-                "{} {:<36} {:<24} metric={metric:.4}",
-                if pass { "PASS" } else { "FAIL" },
-                node.name,
-                t.name
-            );
-        }
-    }
-    println!("{ran} tests run, {failed} failed");
-    if failed > 0 {
-        bail!("{failed} test failures");
-    }
-    Ok(())
-}
-
-fn cmd_cascade(root: &Path, artifacts: &Path, args: &Args) -> Result<()> {
-    use crate::update::{CheckpointStore as _, CreationExecutor as _};
-
-    let jobs = args.flag_usize("jobs", 1)?;
-    let jdir = cascade::journal_dir(&Repo::mgit_dir(root));
-    let resume = args.has("resume");
-
-    // Cheap precondition checks first: a missing/stale journal should
-    // produce its actionable message without paying runtime startup
-    // (and without runtime-init errors masking it).
-    if resume && !cascade::journal_exists(&jdir) {
-        bail!("no interrupted cascade to resume (no journal at {})", jdir.display());
-    }
-    if !resume && cascade::journal_exists(&jdir) {
-        bail!(
-            "an interrupted cascade journal exists at {}; run `mgit cascade --resume` \
-             to finish it (or delete the directory to abandon it)",
-            jdir.display()
+    // Arch specs enable /diff and /checkpoint; the graph/store endpoints
+    // work without them.
+    let zoo = Runtime::new(artifacts).ok().map(|rt| rt.zoo().clone());
+    if zoo.is_none() {
+        eprintln!(
+            "warning: no artifacts manifest under {}; /diff and /checkpoint are disabled",
+            artifacts.display()
         );
     }
-
-    // Shared execution substrate: one trainer + one CAS-backed store
-    // serve every scheduler worker; parent checkpoints resolve through
-    // a shared bounded cache so concurrent loads reuse ancestors.
-    let rt = Runtime::new(artifacts)?;
-    let zoo = rt.zoo().clone();
-    let trainer = Trainer::new(&rt);
-    let cache = delta::ResolveCache::with_max_bytes(128, 256 << 20);
-
-    if resume {
-        let mut repo = Repo::open(root)?;
-        let ckstore = CasCheckpointStore {
-            store: &repo.store,
-            zoo: &zoo,
-            kernel: &NativeKernel,
-            compress: Some(CompressConfig::default()),
-            cache: Some(&cache),
-        };
-        let report = cascade::resume(&mut repo.graph, &ckstore, &trainer, &jdir, jobs)
-            .with_context(|| {
-                format!(
-                    "resuming the cascade journaled at {} (a plan that no longer \
-                     binds to the graph means the original run died before the \
-                     graph was saved — delete the journal directory and re-run \
-                     the cascade)",
-                    jdir.display()
-                )
-            })?;
-        repo.save()?;
-        cascade::remove_journal(&jdir)?;
-        println!(
-            "resumed cascade: {} new versions ({} tasks replayed from the journal), \
-             {} skipped (no cr)",
-            report.new_versions.len(),
-            report.resumed_tasks,
-            report.skipped_no_cr.len()
-        );
-        for (old, new) in report.new_versions {
-            println!("  {} -> {}", repo.graph.node(old).name, repo.graph.node(new).name);
-        }
-        return Ok(());
-    }
-
-    let mut repo = Repo::open(root)?;
-    let node_name = args.pos(0, "node")?.to_string();
-    let steps = args.flag_usize("steps", 30)?;
-    let perturb = args.flag_or("perturb", "swap").to_string();
-
-    let m = repo.graph.idx(&node_name)?;
-    let arch = repo.graph.node(m).model_type.clone();
-    let ck = repo.load_checkpoint(&node_name, &rt, &zoo)?;
-
-    // Retrain the root on perturbed data -> m'.
-    let spec = CreationSpec::Pretrain { corpus_seed: 777, steps, lr: 0.02 };
-    let _ = perturb; // root update here is a fresh pretrain continuation
-    let new_ck = trainer.execute(&spec, &arch, &[ck.clone()])?;
-    let ckstore = CasCheckpointStore {
-        store: &repo.store,
-        zoo: &zoo,
-        kernel: &NativeKernel,
-        compress: Some(CompressConfig::default()),
-        cache: Some(&cache),
-    };
-    let sm = ckstore.save(&new_ck, None)?;
-    let new_name = update::next_version_name(&repo.graph, &node_name);
-    let m_new = repo.graph.add_node(&new_name, &arch)?;
-    repo.graph.node_mut(m_new).stored = Some(sm);
-    repo.graph.add_version_edge(m, m_new)?;
-
-    // Plan (all graph mutation), journal the plan, then persist the
-    // graph so a crash during execution is resumable. Journal-first: if
-    // we die between the two writes, graph.json is still pre-cascade —
-    // `--resume` then fails to re-bind the plan (its nodes were never
-    // saved) and tells the user to delete the journal, which is strictly
-    // better than the graph accumulating orphaned, never-stored
-    // next-version nodes.
-    let plan = cascade::plan_cascade(&mut repo.graph, m, m_new, |_, _| false, |_, _| false)?;
-    let journal = cascade::CascadeJournal::create(&jdir, &plan, &repo.graph)?;
-    repo.save()?;
-    let opts = cascade::CascadeOptions { jobs, journal: Some(&journal) };
-    let report = match cascade::execute_and_apply(
-        &mut repo.graph,
-        &plan,
-        &ckstore,
-        &trainer,
-        &opts,
-        &cascade::DoneTasks::new(),
-    ) {
-        Ok(r) => r,
-        Err(e) => {
-            eprintln!(
-                "cascade interrupted; finished models are journaled — \
-                 run `mgit cascade --resume` to continue"
-            );
-            return Err(e);
-        }
-    };
-    repo.save()?;
-    drop(journal);
-    cascade::remove_journal(&jdir)?;
-    println!(
-        "cascade from {node_name} -> {new_name} ({} jobs): {} new versions, \
-         {} skipped (no cr)",
-        jobs.max(1),
-        report.new_versions.len(),
-        report.skipped_no_cr.len()
+    let server = ops::serve::Server::bind(repo, zoo, port, pool)?;
+    // Status chatter goes to stderr so stdout stays JSON-clean.
+    eprintln!(
+        "mgit serve: listening on http://{} ({} workers)",
+        server.local_addr()?,
+        server.pool()
     );
-    for (old, new) in report.new_versions {
-        println!("  {} -> {}", repo.graph.node(old).name, repo.graph.node(new).name);
-    }
-    Ok(())
+    finish(json, &server.serve()?)
 }
 
-fn cmd_auto_insert(root: &Path, artifacts: &Path, args: &Args) -> Result<()> {
-    let repo = Repo::open(root)?;
-    let rt = Runtime::new(artifacts)?;
-    let zoo = rt.zoo();
-    let cfg = AutoConfig::default();
-    let _ = args;
-    // Re-derive provenance edges for all stored nodes, in insertion order.
-    let mut order = Vec::new();
-    let mut cks = std::collections::HashMap::new();
-    for node in &repo.graph.nodes {
-        if node.stored.is_some() {
-            let ck = repo.load_checkpoint(&node.name, &rt, zoo)?;
-            cks.insert(node.name.clone(), ck);
-            order.push((node.name.clone(), node.model_type.clone(), None));
-        }
-    }
-    let scratch = Store::in_memory();
-    let (g, _, times) = workloads::auto_construct(&rt, &scratch, &order, &cks, &cfg)?;
-    println!("auto-constructed {} nodes:", g.len());
-    for node in &g.nodes {
-        let parents: Vec<&str> =
-            node.prov_parents.iter().map(|&p| g.node(p).name.as_str()).collect();
-        println!("  {:<40} <- {:?}", node.name, parents);
-    }
-    let avg = times.iter().sum::<f64>() / times.len().max(1) as f64;
-    println!("avg per-model insertion time: {}", human_secs(avg));
-    Ok(())
-}
+const HELP: &str = "\
+mgit — model versioning and management (MGit, ICML 2024 reproduction)
+
+usage: mgit <command> [args] [--flags]
+
+  init                       create .mgit/ in --dir (default .)
+  log                        list nodes with edges and versions
+  show <node>                node details (type, creation fn, params)
+  fsck                       check graph invariants, object presence and
+                             cross-pack delta-chain integrity (exits
+                             nonzero on corruption)
+  stats                      object store statistics (loose vs packed,
+                             dedup counters, chain-depth histogram,
+                             per-pack generations)
+  gc                         sweep unreachable loose objects
+  repack                     pack new loose objects into a fresh pack
+                             (--incremental, the default; --full rewrites
+                             every pack) [--max-chain-depth 8] [--prune]
+                             [--auto-full-gens 16] [--auto-full-dead 0.5]
+                             (incremental auto-promotes to a full rewrite
+                             past either threshold; 0 disables; the dead-
+                             byte trigger fires only with --prune)
+  verify-pack                verify pack checksums + object content hashes
+                             (exits nonzero on bad packs)
+  diff <a> <b>               divergence scores between two models
+  merge <base> <m1> <m2>     figure-2 merge (conflict detection)
+  build <g1|g2|g3|g4|g5>     train + register a workload graph [--small]
+  compress                   re-store all models with delta compression
+                             [--codec rle|lzma|zstd] [--eps 1e-4]
+  test [--re REGEX]          run registered tests over all nodes (exits
+                             nonzero on failures)
+  cascade <node>             retrain <node> on perturbed data, then run
+                             the update cascade over its descendants
+                             [--jobs N|auto] (wavefront-parallel) —
+                             journaled: `cascade --resume` finishes an
+                             interrupted run
+  auto-insert                rebuild provenance edges automatically (§3.2)
+  serve                      HTTP front-end on the concurrent read tier
+                             [--port 7421] [--pool N|auto]; endpoints
+                             /log /stats /show/<node> /diff/<a>/<b>
+                             /checkpoint/<node> /object/<id> (docs/API.md)
+
+global flags: --dir DIR  --artifacts DIR  --json (machine-readable reports)
+";

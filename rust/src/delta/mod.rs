@@ -568,7 +568,7 @@ impl ResolveCache {
 
     /// Whether the cache is empty.
     pub fn is_empty(&self) -> bool {
-        self.len() == 0
+        self.inner.lock().unwrap().map.is_empty()
     }
 
     /// Cumulative (hits, misses) since construction.

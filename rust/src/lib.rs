@@ -19,6 +19,12 @@
 //! synthetic [`data`] tasks, [`train`]-ing creation functions, a federated
 //! learning controller ([`fl`]), model [`workloads`] G1–G5, and
 //! dependency-free [`util`] (JSON, PRNG, CLI parsing, property testing).
+//!
+//! The public entry point is the typed operations API in [`ops`]: every
+//! repository operation is a request struct returning a serializable
+//! report, executed against an open [`ops::Repo`] session. [`cli`] is a
+//! thin argv shell over it, and [`ops::serve`] exposes the read path
+//! over HTTP (see `docs/API.md`).
 
 pub mod autoconstruct;
 pub mod cascade;
@@ -31,6 +37,7 @@ pub mod fl;
 pub mod lineage;
 pub mod merge;
 pub mod modeldag;
+pub mod ops;
 pub mod registry;
 pub mod runtime;
 pub mod store;

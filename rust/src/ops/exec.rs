@@ -1,0 +1,469 @@
+//! Execution-tier operations: `build`, `test`, `cascade`, `auto-insert`.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+use regex::Regex;
+
+use crate::autoconstruct::AutoConfig;
+use crate::cascade;
+use crate::checkpoint::ModelZoo;
+use crate::delta::{self, CompressConfig, DeltaKernel, NativeKernel};
+use crate::lineage::LineageGraph;
+use crate::registry::{run_test, CreationSpec, EvalBackend};
+use crate::runtime::Runtime;
+use crate::store::Store;
+use crate::train::{CasCheckpointStore, Trainer};
+use crate::update;
+use crate::util::json::Json;
+use crate::util::timing::Timer;
+use crate::workloads::{self, PersistMode, Scale};
+
+use super::{Report, Repo};
+
+// ---------------------------------------------------------------------------
+// build
+// ---------------------------------------------------------------------------
+
+/// `mgit build <g1..g5>`: train + register one of the paper's workload
+/// graphs, then import it into the repository graph.
+pub struct BuildRequest {
+    /// Workload name: `g1` … `g5`.
+    pub which: String,
+    /// Use the fast small-scale configuration instead of paper scale.
+    pub small: bool,
+}
+
+/// Typed result of [`BuildRequest`].
+pub struct BuildReport {
+    pub name: String,
+    pub nodes: usize,
+    pub prov_edges: usize,
+    pub ver_edges: usize,
+    pub elapsed_secs: f64,
+}
+
+impl BuildRequest {
+    pub fn run(&self, repo: &mut Repo, rt: &Runtime) -> Result<BuildReport> {
+        let scale = if self.small { Scale::small() } else { Scale::paper() };
+        let t = Timer::start();
+        let mut wl = match self.which.as_str() {
+            "g1" => workloads::build_g1(rt, &scale)?,
+            "g2" => workloads::build_g2(rt, &scale)?,
+            "g3" => workloads::build_g3(rt, &scale)?,
+            "g4" => workloads::build_g4(rt, &scale)?,
+            "g5" => workloads::build_g5(rt, &scale)?,
+            other => bail!("unknown workload `{other}`"),
+        };
+        workloads::persist(&mut wl, &repo.store, rt.zoo(), rt, PersistMode::HashOnly, |_, _| {
+            Ok(true)
+        })?;
+        // Merge the workload graph into the repo graph.
+        merge_graphs(&mut repo.graph, &wl.graph)?;
+        repo.save()?;
+        let (prov, ver) = wl.graph.edge_counts();
+        Ok(BuildReport {
+            name: wl.name.clone(),
+            nodes: wl.graph.len(),
+            prov_edges: prov,
+            ver_edges: ver,
+            elapsed_secs: t.elapsed_secs(),
+        })
+    }
+}
+
+/// Import `src` into `dst` (names must be disjoint).
+pub fn merge_graphs(dst: &mut LineageGraph, src: &LineageGraph) -> Result<()> {
+    let mut map = Vec::with_capacity(src.len());
+    for node in &src.nodes {
+        let idx = dst.add_node(&node.name, &node.model_type)?;
+        dst.node_mut(idx).stored = node.stored.clone();
+        dst.node_mut(idx).creation = node.creation.clone();
+        dst.node_mut(idx).metadata = node.metadata.clone();
+        map.push(idx);
+    }
+    for (i, node) in src.nodes.iter().enumerate() {
+        for &p in &node.prov_parents {
+            dst.add_edge(map[p], map[i])?;
+        }
+        for &p in &node.ver_parents {
+            dst.add_version_edge(map[p], map[i])?;
+        }
+    }
+    for t in &src.tests.tests {
+        let _ = dst.tests.register(&t.name, t.scope.clone(), t.spec.clone());
+    }
+    Ok(())
+}
+
+impl Report for BuildReport {
+    fn to_json(&self) -> Json {
+        Json::obj()
+            .set("name", self.name.as_str())
+            .set("nodes", self.nodes)
+            .set("prov_edges", self.prov_edges)
+            .set("ver_edges", self.ver_edges)
+            .set("elapsed_secs", self.elapsed_secs)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// test
+// ---------------------------------------------------------------------------
+
+/// `mgit test [--re REGEX]`: run every registered test whose name
+/// matches against every node it applies to.
+pub struct TestRequest {
+    /// Optional test-name filter.
+    pub pattern: Option<String>,
+}
+
+/// One executed test in a [`TestReport`].
+pub struct TestResult {
+    pub node: String,
+    pub test: String,
+    pub passed: bool,
+    pub metric: f64,
+}
+
+/// Typed result of [`TestRequest`]. A nonzero `failed` makes the CLI
+/// exit nonzero (see [`Report::failure`]).
+pub struct TestReport {
+    pub results: Vec<TestResult>,
+    pub ran: usize,
+    pub failed: usize,
+}
+
+impl TestRequest {
+    pub fn run(
+        &self,
+        repo: &Repo,
+        zoo: &ModelZoo,
+        kernel: &dyn DeltaKernel,
+        backend: &dyn EvalBackend,
+    ) -> Result<TestReport> {
+        let re = match &self.pattern {
+            Some(r) => Some(Regex::new(r)?),
+            None => None,
+        };
+        let mut results = Vec::new();
+        let mut failed = 0usize;
+        for node in &repo.graph.nodes {
+            let tests: Vec<_> = repo
+                .graph
+                .tests
+                .matching(&node.name, &node.model_type, re.as_ref())
+                .cloned()
+                .collect();
+            if tests.is_empty() || node.stored.is_none() {
+                continue;
+            }
+            let ck = delta::load(&repo.store, zoo, node.stored.as_ref().unwrap(), kernel)?;
+            for t in tests {
+                let (pass, metric) = run_test(&t.spec, &ck, backend)?;
+                if !pass {
+                    failed += 1;
+                }
+                results.push(TestResult {
+                    node: node.name.clone(),
+                    test: t.name.clone(),
+                    passed: pass,
+                    metric,
+                });
+            }
+        }
+        Ok(TestReport { ran: results.len(), failed, results })
+    }
+}
+
+impl Report for TestReport {
+    fn to_json(&self) -> Json {
+        Json::obj()
+            .set(
+                "results",
+                Json::Arr(
+                    self.results
+                        .iter()
+                        .map(|r| {
+                            Json::obj()
+                                .set("node", r.node.as_str())
+                                .set("test", r.test.as_str())
+                                .set("passed", r.passed)
+                                .set("metric", r.metric)
+                        })
+                        .collect(),
+                ),
+            )
+            .set("ran", self.ran)
+            .set("failed", self.failed)
+    }
+
+    fn failure(&self) -> Option<String> {
+        if self.failed == 0 {
+            None
+        } else {
+            Some(format!("{} test failures", self.failed))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// cascade
+// ---------------------------------------------------------------------------
+
+/// `mgit cascade <node>` / `mgit cascade --resume`: retrain the root on
+/// perturbed data, then run the Algorithm-2 update cascade over its
+/// descendants on a wavefront scheduler (journaled, resumable).
+pub struct CascadeRequest {
+    /// Root node to update; `None` means resume the journaled cascade.
+    pub node: Option<String>,
+    /// Retraining steps for the root update.
+    pub steps: usize,
+    /// Scheduler worker threads (1 = serial).
+    pub jobs: usize,
+}
+
+/// Typed result of [`CascadeRequest`].
+pub struct CascadeReport {
+    pub resumed: bool,
+    pub jobs: usize,
+    /// `(old root, new root version)` for fresh runs.
+    pub origin: Option<(String, String)>,
+    /// `(old, new)` node names, plan order.
+    pub new_versions: Vec<(String, String)>,
+    pub skipped_no_cr: usize,
+    /// Tasks replayed from the journal instead of re-executed.
+    pub resumed_tasks: usize,
+}
+
+impl CascadeRequest {
+    pub fn run(&self, root: &Path, artifacts: &Path) -> Result<CascadeReport> {
+        use crate::update::{CheckpointStore as _, CreationExecutor as _};
+
+        let jobs = self.jobs;
+        let jdir = cascade::journal_dir(&Repo::mgit_dir(root));
+        let resume = self.node.is_none();
+
+        // Cheap precondition checks first: a missing/stale journal should
+        // produce its actionable message without paying runtime startup
+        // (and without runtime-init errors masking it).
+        if resume && !cascade::journal_exists(&jdir) {
+            bail!("no interrupted cascade to resume (no journal at {})", jdir.display());
+        }
+        if !resume && cascade::journal_exists(&jdir) {
+            bail!(
+                "an interrupted cascade journal exists at {}; run `mgit cascade --resume` \
+                 to finish it (or delete the directory to abandon it)",
+                jdir.display()
+            );
+        }
+
+        // Shared execution substrate: one trainer + one CAS-backed store
+        // serve every scheduler worker; parent checkpoints resolve
+        // through a shared bounded cache so concurrent loads reuse
+        // ancestors.
+        let rt = Runtime::new(artifacts)?;
+        let zoo = rt.zoo().clone();
+        let trainer = Trainer::new(&rt);
+        let cache = delta::ResolveCache::with_max_bytes(128, 256 << 20);
+
+        if resume {
+            let mut repo = Repo::open(root)?;
+            let ckstore = CasCheckpointStore {
+                store: &repo.store,
+                zoo: &zoo,
+                kernel: &NativeKernel,
+                compress: Some(CompressConfig::default()),
+                cache: Some(&cache),
+            };
+            let report = cascade::resume(&mut repo.graph, &ckstore, &trainer, &jdir, jobs)
+                .map_err(|e| {
+                    e.context(format!(
+                        "resuming the cascade journaled at {} (a plan that no longer \
+                         binds to the graph means the original run died before the \
+                         graph was saved — delete the journal directory and re-run \
+                         the cascade)",
+                        jdir.display()
+                    ))
+                })?;
+            repo.save()?;
+            cascade::remove_journal(&jdir)?;
+            return Ok(CascadeReport {
+                resumed: true,
+                jobs: jobs.max(1),
+                origin: None,
+                new_versions: name_pairs(&repo.graph, &report.new_versions),
+                skipped_no_cr: report.skipped_no_cr.len(),
+                resumed_tasks: report.resumed_tasks,
+            });
+        }
+
+        let mut repo = Repo::open(root)?;
+        let node_name = self.node.clone().expect("checked above");
+
+        let m = repo.graph.idx(&node_name)?;
+        let arch = repo.graph.node(m).model_type.clone();
+        let ck = repo.load_checkpoint(&node_name, &rt, &zoo)?;
+
+        // Retrain the root on perturbed data -> m'.
+        let spec = CreationSpec::Pretrain { corpus_seed: 777, steps: self.steps, lr: 0.02 };
+        let new_ck = trainer.execute(&spec, &arch, &[ck.clone()])?;
+        let ckstore = CasCheckpointStore {
+            store: &repo.store,
+            zoo: &zoo,
+            kernel: &NativeKernel,
+            compress: Some(CompressConfig::default()),
+            cache: Some(&cache),
+        };
+        let sm = ckstore.save(&new_ck, None)?;
+        let new_name = update::next_version_name(&repo.graph, &node_name);
+        let m_new = repo.graph.add_node(&new_name, &arch)?;
+        repo.graph.node_mut(m_new).stored = Some(sm);
+        repo.graph.add_version_edge(m, m_new)?;
+
+        // Plan (all graph mutation), journal the plan, then persist the
+        // graph so a crash during execution is resumable. Journal-first:
+        // if we die between the two writes, graph.json is still
+        // pre-cascade — `--resume` then fails to re-bind the plan (its
+        // nodes were never saved) and tells the user to delete the
+        // journal, which is strictly better than the graph accumulating
+        // orphaned, never-stored next-version nodes.
+        let plan =
+            cascade::plan_cascade(&mut repo.graph, m, m_new, |_, _| false, |_, _| false)?;
+        let journal = cascade::CascadeJournal::create(&jdir, &plan, &repo.graph)?;
+        repo.save()?;
+        let opts = cascade::CascadeOptions { jobs, journal: Some(&journal) };
+        let report = match cascade::execute_and_apply(
+            &mut repo.graph,
+            &plan,
+            &ckstore,
+            &trainer,
+            &opts,
+            &cascade::DoneTasks::new(),
+        ) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!(
+                    "cascade interrupted; finished models are journaled — \
+                     run `mgit cascade --resume` to continue"
+                );
+                return Err(e);
+            }
+        };
+        repo.save()?;
+        drop(journal);
+        cascade::remove_journal(&jdir)?;
+        Ok(CascadeReport {
+            resumed: false,
+            jobs: jobs.max(1),
+            origin: Some((node_name, new_name)),
+            new_versions: name_pairs(&repo.graph, &report.new_versions),
+            skipped_no_cr: report.skipped_no_cr.len(),
+            resumed_tasks: report.resumed_tasks,
+        })
+    }
+}
+
+fn name_pairs(
+    g: &LineageGraph,
+    pairs: &[(crate::lineage::NodeIdx, crate::lineage::NodeIdx)],
+) -> Vec<(String, String)> {
+    pairs
+        .iter()
+        .map(|&(old, new)| (g.node(old).name.clone(), g.node(new).name.clone()))
+        .collect()
+}
+
+impl Report for CascadeReport {
+    fn to_json(&self) -> Json {
+        let versions: Vec<Json> = self
+            .new_versions
+            .iter()
+            .map(|(old, new)| Json::obj().set("old", old.as_str()).set("new", new.as_str()))
+            .collect();
+        let origin = match &self.origin {
+            Some((node, new)) => {
+                Json::obj().set("node", node.as_str()).set("new", new.as_str())
+            }
+            None => Json::Null,
+        };
+        Json::obj()
+            .set("resumed", self.resumed)
+            .set("jobs", self.jobs)
+            .set("origin", origin)
+            .set("new_versions", Json::Arr(versions))
+            .set("skipped_no_cr", self.skipped_no_cr)
+            .set("resumed_tasks", self.resumed_tasks)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// auto-insert
+// ---------------------------------------------------------------------------
+
+/// `mgit auto-insert`: rebuild provenance edges automatically (§3.2) for
+/// every stored node, in insertion order.
+pub struct AutoInsertRequest;
+
+/// Typed result of [`AutoInsertRequest`].
+pub struct AutoInsertReport {
+    /// (node name, inferred provenance parents).
+    pub nodes: Vec<(String, Vec<String>)>,
+    /// Mean per-model insertion time.
+    pub avg_secs: f64,
+}
+
+impl AutoInsertRequest {
+    pub fn run(&self, repo: &Repo, rt: &Runtime) -> Result<AutoInsertReport> {
+        let zoo = rt.zoo();
+        let cfg = AutoConfig::default();
+        // Re-derive provenance edges for all stored nodes, in insertion
+        // order.
+        let mut order = Vec::new();
+        let mut cks = std::collections::HashMap::new();
+        for node in &repo.graph.nodes {
+            if node.stored.is_some() {
+                let ck = repo.load_checkpoint(&node.name, rt, zoo)?;
+                cks.insert(node.name.clone(), ck);
+                order.push((node.name.clone(), node.model_type.clone(), None));
+            }
+        }
+        let scratch = Store::in_memory();
+        let (g, _, times) = workloads::auto_construct(rt, &scratch, &order, &cks, &cfg)?;
+        let nodes = g
+            .nodes
+            .iter()
+            .map(|node| {
+                (
+                    node.name.clone(),
+                    node.prov_parents.iter().map(|&p| g.node(p).name.clone()).collect(),
+                )
+            })
+            .collect();
+        let avg = times.iter().sum::<f64>() / times.len().max(1) as f64;
+        Ok(AutoInsertReport { nodes, avg_secs: avg })
+    }
+}
+
+impl Report for AutoInsertReport {
+    fn to_json(&self) -> Json {
+        Json::obj()
+            .set(
+                "nodes",
+                Json::Arr(
+                    self.nodes
+                        .iter()
+                        .map(|(name, parents)| {
+                            Json::obj().set("name", name.as_str()).set(
+                                "prov_parents",
+                                Json::Arr(
+                                    parents.iter().map(|p| Json::from(p.as_str())).collect(),
+                                ),
+                            )
+                        })
+                        .collect(),
+                ),
+            )
+            .set("avg_insertion_secs", self.avg_secs)
+    }
+}

@@ -1,0 +1,412 @@
+//! Integrity operations: `fsck`, `verify-pack`, `gc`.
+//!
+//! These walk the graph/store looking for corruption and report every
+//! problem they find rather than dying on the first one (a repair pass
+//! needs the full set). The CLI maps a non-empty problem list to a
+//! nonzero process exit through [`Report::failure`].
+
+use anyhow::{bail, Result};
+
+use crate::delta::{self, NativeKernel};
+use crate::store::ObjectId;
+use crate::util::json::Json;
+
+use super::{Report, Repo};
+
+// ---------------------------------------------------------------------------
+// fsck
+// ---------------------------------------------------------------------------
+
+/// `mgit fsck`: graph invariants + object presence + cross-pack
+/// delta-chain integrity.
+pub struct FsckRequest;
+
+/// One fsck finding. `kind` is a stable machine tag (`MISSING`,
+/// `UNREADABLE`, `DANGLING`, `BAD_PACK`).
+pub struct FsckProblem {
+    pub kind: &'static str,
+    pub detail: String,
+}
+
+/// Typed result of [`FsckRequest`].
+pub struct FsckReport {
+    /// Lineage-graph node count.
+    pub nodes: usize,
+    pub problems: Vec<FsckProblem>,
+    /// Orphaned delta parents: (parent hex, referencing-object hexes).
+    pub orphaned: Vec<(String, Vec<String>)>,
+    /// (loose, packed, pack count) when the store is pack-capable.
+    pub pack_counts: Option<(usize, usize, usize)>,
+}
+
+impl FsckRequest {
+    pub fn run(&self, repo: &Repo) -> Result<FsckReport> {
+        repo.graph.integrity_check()?;
+        let mut problems = Vec::new();
+        // Every model parameter must be present (loose or packed).
+        for node in &repo.graph.nodes {
+            if let Some(sm) = &node.stored {
+                for (pname, id) in &sm.params {
+                    if !repo.store.has(id) {
+                        problems.push(FsckProblem {
+                            kind: "MISSING",
+                            detail: format!(
+                                "object {} ({}:{})",
+                                id.short(),
+                                node.name,
+                                pname
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+        // Cross-pack delta-chain integrity: every delta parent must
+        // resolve somewhere in the store, whichever pack (or loose file)
+        // holds it. Unreadable objects are recorded and the scan
+        // continues — fsck must report corruption, not die on it.
+        // Orphaned parents are also collected together so a repair pass
+        // has the full set in one place. Ids are scanned in sorted order
+        // so the report is deterministic.
+        let mut ids = repo.store.list()?;
+        ids.sort();
+        let mut orphaned: std::collections::BTreeMap<ObjectId, Vec<ObjectId>> =
+            Default::default();
+        for id in ids {
+            let bytes = match repo.store.get(&id) {
+                Ok(b) => b,
+                Err(e) => {
+                    problems.push(FsckProblem {
+                        kind: "UNREADABLE",
+                        detail: format!("object {}: {e:#}", id.short()),
+                    });
+                    continue;
+                }
+            };
+            if let Ok(obj) = crate::store::format::TensorObject::decode(&bytes) {
+                for parent in obj.refs() {
+                    if !repo.store.has(&parent) {
+                        problems.push(FsckProblem {
+                            kind: "DANGLING",
+                            detail: format!(
+                                "delta parent {} (referenced by {})",
+                                parent.short(),
+                                id.short()
+                            ),
+                        });
+                        orphaned.entry(parent).or_default().push(id);
+                    }
+                }
+            }
+        }
+        // Pack structure (checksums, index/offset agreement).
+        let mut pack_counts = None;
+        if let Some(ps) = repo.store.as_packed() {
+            for p in ps.packs() {
+                if let Err(e) = p.verify() {
+                    problems.push(FsckProblem {
+                        kind: "BAD_PACK",
+                        detail: format!("{}: {e:#}", p.path.display()),
+                    });
+                }
+            }
+            let (loose, packed) = ps.counts()?;
+            pack_counts = Some((loose, packed, ps.packs().len()));
+        }
+        let orphaned = orphaned
+            .into_iter()
+            .map(|(parent, children)| {
+                (parent.hex(), children.iter().map(|c| c.hex()).collect())
+            })
+            .collect();
+        Ok(FsckReport { nodes: repo.graph.len(), problems, orphaned, pack_counts })
+    }
+}
+
+impl Report for FsckReport {
+    fn to_json(&self) -> Json {
+        let problems: Vec<Json> = self
+            .problems
+            .iter()
+            .map(|p| Json::obj().set("kind", p.kind).set("detail", p.detail.as_str()))
+            .collect();
+        let orphaned: Vec<Json> = self
+            .orphaned
+            .iter()
+            .map(|(parent, children)| {
+                Json::obj().set("parent", parent.as_str()).set(
+                    "referenced_by",
+                    Json::Arr(children.iter().map(|c| Json::from(c.as_str())).collect()),
+                )
+            })
+            .collect();
+        let mut j = Json::obj()
+            .set("nodes", self.nodes)
+            .set("problems", Json::Arr(problems))
+            .set("orphaned_delta_parents", Json::Arr(orphaned))
+            .set("ok", self.problems.is_empty());
+        if let Some((loose, packed, packs)) = self.pack_counts {
+            j = j.set("loose", loose).set("packed", packed).set("pack_count", packs);
+        }
+        j
+    }
+
+    fn failure(&self) -> Option<String> {
+        if self.problems.is_empty() {
+            None
+        } else {
+            Some(format!("{} fsck problems", self.problems.len()))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// verify-pack
+// ---------------------------------------------------------------------------
+
+/// `mgit verify-pack`: pack checksums + per-object content hashes.
+pub struct VerifyPackRequest;
+
+/// Per-pack structural verification outcome.
+pub struct PackCheck {
+    pub path: String,
+    pub objects: usize,
+    pub structure_ok: bool,
+    pub error: Option<String>,
+}
+
+/// Typed result of [`VerifyPackRequest`].
+pub struct VerifyPackReport {
+    pub packs: Vec<PackCheck>,
+    /// Per-object content-verification failures (bad hashes, unreadable
+    /// entries, unresolvable chains) across all structurally-ok packs.
+    pub object_problems: Vec<String>,
+    /// Objects counted across structurally-ok packs.
+    pub total_objects: usize,
+    /// Content hashes verified.
+    pub checked: usize,
+    /// Non-MGTF blobs (structure-only verification).
+    pub opaque: usize,
+}
+
+impl VerifyPackRequest {
+    pub fn run(&self, repo: &Repo) -> Result<VerifyPackReport> {
+        let Some(ps) = repo.store.as_packed() else {
+            bail!("object store is not pack-capable");
+        };
+        // Structure first: checksums, counts, offset/length agreement. A
+        // bad pack is recorded (with the failing pack named and, for
+        // entry-level problems, the offending offset) and the scan
+        // continues, so one corrupt pack doesn't mask others.
+        let mut total = 0usize;
+        let mut packs = Vec::with_capacity(ps.packs().len());
+        for p in ps.packs() {
+            match p.verify() {
+                Ok(()) => {
+                    total += p.object_count();
+                    packs.push(PackCheck {
+                        path: p.path.display().to_string(),
+                        objects: p.object_count(),
+                        structure_ok: true,
+                        error: None,
+                    });
+                }
+                Err(e) => {
+                    packs.push(PackCheck {
+                        path: p.path.display().to_string(),
+                        objects: p.object_count(),
+                        structure_ok: false,
+                        error: Some(format!("{e:#}")),
+                    });
+                }
+            }
+        }
+        // Content second: each pack's *own copy* of every object (ids may
+        // be duplicated across packs after a crash) must still hash to
+        // its id once its delta chain — possibly crossing packs / loose
+        // staging — is resolved. Structurally bad packs are skipped
+        // (their offsets can't be trusted), and per-object errors are
+        // recorded rather than aborting, so one corruption never masks
+        // another.
+        let mut object_problems: Vec<String> = Vec::new();
+        let mut cache: std::collections::HashMap<ObjectId, Vec<f32>> = Default::default();
+        let mut checked = 0usize;
+        let mut opaque = 0usize;
+        for (p, check) in ps.packs().iter().zip(&packs) {
+            if !check.structure_ok {
+                continue;
+            }
+            for id in p.index.ids().collect::<Vec<_>>() {
+                let offset = p.index.lookup(&id).map(|(o, _)| o).unwrap_or(0);
+                let bytes = match p.get(&id) {
+                    Ok(Some(b)) => b,
+                    Ok(None) => {
+                        object_problems.push(format!(
+                            "index lists {} but pack {} lacks it",
+                            id.short(),
+                            p.path.display()
+                        ));
+                        continue;
+                    }
+                    Err(e) => {
+                        object_problems.push(format!(
+                            "object {} at offset {offset} in pack {} unreadable: {e:#}",
+                            id.short(),
+                            p.path.display()
+                        ));
+                        continue;
+                    }
+                };
+                let obj = match crate::store::format::TensorObject::decode(&bytes) {
+                    Ok(o) => o,
+                    Err(_) => {
+                        opaque += 1; // non-MGTF blob: structure-only
+                        continue;
+                    }
+                };
+                let shape = obj.shape().to_vec();
+                let want = match &obj {
+                    crate::store::format::TensorObject::Raw { dtype, payload, .. } => {
+                        crate::store::hash_tensor(*dtype, &shape, payload)
+                    }
+                    crate::store::format::TensorObject::Delta { .. } => {
+                        match delta::resolve_object(
+                            &repo.store,
+                            &obj,
+                            &NativeKernel,
+                            &mut cache,
+                            0,
+                        ) {
+                            Ok(values) => crate::store::hash_tensor(
+                                crate::tensor::DType::F32,
+                                &shape,
+                                &crate::tensor::f32_to_bytes(&values),
+                            ),
+                            Err(e) => {
+                                object_problems.push(format!(
+                                    "object {} at offset {offset} in pack {} has an \
+                                     unresolvable delta chain: {e:#}",
+                                    id.short(),
+                                    p.path.display()
+                                ));
+                                continue;
+                            }
+                        }
+                    }
+                };
+                if want != id {
+                    object_problems.push(format!(
+                        "object {} at offset {offset} in pack {} does not hash to its id",
+                        id.short(),
+                        p.path.display()
+                    ));
+                    continue;
+                }
+                checked += 1;
+                // Ancestor values only help while verifying nearby chain
+                // links; keep peak memory bounded on huge stores.
+                if cache.len() > 4096 {
+                    cache.clear();
+                }
+            }
+        }
+        Ok(VerifyPackReport {
+            packs,
+            object_problems,
+            total_objects: total,
+            checked,
+            opaque,
+        })
+    }
+}
+
+impl VerifyPackReport {
+    /// Every problem (structural pack failures + per-object failures),
+    /// in report order.
+    pub fn all_problems(&self) -> Vec<String> {
+        let mut out: Vec<String> = self
+            .packs
+            .iter()
+            .filter_map(|p| p.error.as_ref().map(|e| format!("{}: {e}", p.path)))
+            .collect();
+        out.extend(self.object_problems.iter().cloned());
+        out
+    }
+}
+
+impl Report for VerifyPackReport {
+    fn to_json(&self) -> Json {
+        let packs: Vec<Json> = self
+            .packs
+            .iter()
+            .map(|p| {
+                Json::obj()
+                    .set("path", p.path.as_str())
+                    .set("objects", p.objects)
+                    .set("structure_ok", p.structure_ok)
+                    .set(
+                        "error",
+                        p.error.as_deref().map(Json::from).unwrap_or(Json::Null),
+                    )
+            })
+            .collect();
+        Json::obj()
+            .set("packs", Json::Arr(packs))
+            .set(
+                "object_problems",
+                Json::Arr(
+                    self.object_problems
+                        .iter()
+                        .map(|m| Json::from(m.as_str()))
+                        .collect(),
+                ),
+            )
+            .set("total_objects", self.total_objects)
+            .set("checked", self.checked)
+            .set("opaque", self.opaque)
+            .set("ok", self.all_problems().is_empty())
+    }
+
+    fn failure(&self) -> Option<String> {
+        let problems = self.all_problems();
+        if problems.is_empty() {
+            None
+        } else {
+            Some(format!(
+                "verify-pack found {} problems:\n  {}",
+                problems.len(),
+                problems.join("\n  ")
+            ))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// gc
+// ---------------------------------------------------------------------------
+
+/// `mgit gc`: sweep unreachable loose objects.
+pub struct GcRequest;
+
+/// Typed result of [`GcRequest`].
+pub struct GcReport {
+    /// Hex ids of swept objects, sorted.
+    pub swept: Vec<String>,
+}
+
+impl GcRequest {
+    pub fn run(&self, repo: &Repo) -> Result<GcReport> {
+        let mut swept: Vec<String> = repo.gc()?.iter().map(|id| id.hex()).collect();
+        swept.sort();
+        Ok(GcReport { swept })
+    }
+}
+
+impl Report for GcReport {
+    fn to_json(&self) -> Json {
+        Json::obj().set("swept", self.swept.len()).set(
+            "swept_objects",
+            Json::Arr(self.swept.iter().map(|s| Json::from(s.as_str())).collect()),
+        )
+    }
+}

@@ -1,0 +1,233 @@
+//! Store-maintenance operations: `repack`, `compress`.
+
+use anyhow::Result;
+
+use crate::checkpoint::{Checkpoint, ModelZoo};
+use crate::delta::{self, CompressConfig, DeltaKernel, NativeKernel};
+use crate::lineage::traversal;
+use crate::store::pack::{RepackConfig, RepackMode};
+use crate::util::json::Json;
+use crate::util::timing::Timer;
+
+use super::{Report, Repo};
+
+// ---------------------------------------------------------------------------
+// repack
+// ---------------------------------------------------------------------------
+
+/// `mgit repack`: migrate loose objects into packs (incrementally by
+/// default; [`RepackMode::Full`] rewrites every pack), re-basing long
+/// delta chains onto nearer ancestors.
+pub struct RepackRequest {
+    pub max_chain_depth: usize,
+    /// Drop unreachable objects while repacking.
+    pub prune: bool,
+    pub mode: RepackMode,
+    /// Promote an incremental run to a full rewrite past this many pack
+    /// generations (None disables).
+    pub max_generations: Option<usize>,
+    /// Promote an incremental run to a full rewrite once this fraction
+    /// of sealed pack bytes is dead (None disables; needs `prune`).
+    pub max_dead_ratio: Option<f64>,
+}
+
+impl Default for RepackRequest {
+    fn default() -> Self {
+        RepackRequest {
+            max_chain_depth: 8,
+            prune: false,
+            mode: RepackMode::Incremental,
+            max_generations: Some(16),
+            max_dead_ratio: Some(0.5),
+        }
+    }
+}
+
+/// Typed result of [`RepackRequest`]: the storage-layer report plus the
+/// effective mode and wall-clock time.
+pub struct RepackReport {
+    pub pack: crate::store::pack::RepackReport,
+    /// `full`, `incremental`, or `incremental -> full: <reason>`.
+    pub mode_label: String,
+    pub elapsed_secs: f64,
+}
+
+impl RepackRequest {
+    pub fn run(&self, repo: &mut Repo) -> Result<RepackReport> {
+        let cfg = RepackConfig {
+            max_chain_depth: self.max_chain_depth,
+            prune: self.prune,
+            mode: self.mode,
+            max_generations: self.max_generations,
+            max_dead_ratio: self.max_dead_ratio,
+        };
+        let roots = repo.graph.object_roots();
+        let t = Timer::start();
+        // NativeKernel is the bit-compatible oracle of the Pallas kernel,
+        // so re-based encodings agree across runtime backends.
+        let report = crate::store::pack::repack(&mut repo.store, &roots, &cfg, &NativeKernel)?;
+        repo.save()?;
+        let mode_label = match (self.mode, &report.escalated) {
+            (RepackMode::Full, _) => "full".to_string(),
+            (RepackMode::Incremental, None) => "incremental".to_string(),
+            (RepackMode::Incremental, Some(reason)) => {
+                format!("incremental -> full: {reason}")
+            }
+        };
+        Ok(RepackReport { pack: report, mode_label, elapsed_secs: t.elapsed_secs() })
+    }
+}
+
+impl Report for RepackReport {
+    fn to_json(&self) -> Json {
+        let p = &self.pack;
+        Json::obj()
+            .set("mode", self.mode_label.as_str())
+            .set("packed", p.packed)
+            .set("retained_packed", p.retained_packed)
+            .set("carried_dead", p.carried_dead)
+            .set("dead_ratio", p.dead_ratio)
+            .set("packs_before", p.packs_before)
+            .set("packs_after", p.packs_after)
+            .set("max_depth_before", p.max_depth_before)
+            .set("max_depth_after", p.max_depth_after)
+            .set("rebased_delta", p.rebased_delta)
+            .set("new_bases", p.new_bases)
+            .set("bytes_before", p.bytes_before)
+            .set("bytes_after", p.bytes_after)
+            .set("loose_demoted", p.loose_demoted)
+            .set("pruned_loose", p.pruned_loose)
+            .set(
+                "pack_path",
+                p.pack_path
+                    .as_ref()
+                    .map(|path| Json::from(path.display().to_string()))
+                    .unwrap_or(Json::Null),
+            )
+            .set("elapsed_secs", self.elapsed_secs)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// compress
+// ---------------------------------------------------------------------------
+
+/// `mgit compress`: re-store every model with delta compression against
+/// its parent (roots-first, so parents are already re-stored when their
+/// children are encoded).
+pub struct CompressRequest {
+    pub config: CompressConfig,
+}
+
+/// Typed result of [`CompressRequest`].
+pub struct CompressReport {
+    /// Raw f32 payload bytes across all re-stored models.
+    pub raw_bytes: u64,
+    /// Bytes of objects newly written.
+    pub stored_bytes: u64,
+    /// Objects swept by the post-compress GC.
+    pub swept: usize,
+    pub elapsed_secs: f64,
+}
+
+impl CompressRequest {
+    pub fn run(
+        &self,
+        repo: &mut Repo,
+        zoo: &ModelZoo,
+        kernel: &dyn DeltaKernel,
+    ) -> Result<CompressReport> {
+        let cfg = self.config;
+        let t = Timer::start();
+        let mut raw = 0u64;
+        let mut stored = 0u64;
+        // Roots-first over provenance edges.
+        let order: Vec<usize> = {
+            let roots = repo.graph.roots();
+            let mut out = Vec::new();
+            for r in roots {
+                out.extend(traversal::bfs(
+                    &repo.graph,
+                    r,
+                    traversal::EdgeFilter::Both,
+                    |_, _| false,
+                    |_, _| false,
+                ));
+            }
+            out
+        };
+        let mut rec_cache: std::collections::HashMap<usize, Checkpoint> = Default::default();
+        for idx in order {
+            let Some(sm) = repo.graph.node(idx).stored.clone() else { continue };
+            let ck = delta::load(&repo.store, zoo, &sm, kernel)?;
+            let spec = zoo.arch(&ck.arch)?;
+            let parent = repo
+                .graph
+                .node(idx)
+                .ver_parents
+                .first()
+                .or_else(|| repo.graph.node(idx).prov_parents.first())
+                .copied();
+            match parent.and_then(|p| repo.graph.node(p).stored.clone().map(|s| (p, s))) {
+                Some((p, psm)) if repo.graph.node(p).model_type == ck.arch => {
+                    let pck = match rec_cache.get(&p) {
+                        Some(c) => c.clone(),
+                        None => delta::load(&repo.store, zoo, &psm, kernel)?,
+                    };
+                    let (sm2, final_ck, rep, _) = delta::delta_compress_checked(
+                        &repo.store,
+                        spec,
+                        &ck,
+                        zoo.arch(&pck.arch)?,
+                        &pck,
+                        &psm,
+                        cfg,
+                        kernel,
+                        |_| Ok(true),
+                    )?;
+                    raw += rep.raw_bytes;
+                    stored += rep.stored_bytes;
+                    repo.graph.node_mut(idx).stored = Some(sm2);
+                    rec_cache.insert(idx, final_ck);
+                }
+                _ => {
+                    let (sm2, rep) = delta::store_raw(&repo.store, spec, &ck)?;
+                    raw += rep.raw_bytes;
+                    stored += rep.stored_bytes;
+                    repo.graph.node_mut(idx).stored = Some(sm2);
+                    rec_cache.insert(idx, ck);
+                }
+            }
+        }
+        repo.save()?;
+        let swept = repo.gc()?;
+        Ok(CompressReport {
+            raw_bytes: raw,
+            stored_bytes: stored,
+            swept: swept.len(),
+            elapsed_secs: t.elapsed_secs(),
+        })
+    }
+}
+
+impl CompressReport {
+    /// `raw / stored` (0.0 when nothing was written).
+    pub fn ratio(&self) -> f64 {
+        if self.stored_bytes > 0 {
+            self.raw_bytes as f64 / self.stored_bytes as f64
+        } else {
+            0.0
+        }
+    }
+}
+
+impl Report for CompressReport {
+    fn to_json(&self) -> Json {
+        Json::obj()
+            .set("raw_bytes", self.raw_bytes)
+            .set("stored_bytes", self.stored_bytes)
+            .set("ratio", self.ratio())
+            .set("swept", self.swept)
+            .set("elapsed_secs", self.elapsed_secs)
+    }
+}

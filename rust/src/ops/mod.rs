@@ -1,0 +1,72 @@
+//! The typed operations API — MGit as a library first.
+//!
+//! Every repository operation is a **request struct** (its parameters)
+//! executed against an open [`Repo`] session, returning a **typed,
+//! serializable report** — never printed text:
+//!
+//! | request                  | report                    | needs                |
+//! |--------------------------|---------------------------|----------------------|
+//! | [`InitRequest`]          | [`InitReport`]            | —                    |
+//! | [`LogRequest`]           | [`LogReport`]             | `&Repo`              |
+//! | [`ShowRequest`]          | [`ShowReport`]            | `&Repo`              |
+//! | [`StatsRequest`]         | [`StatsReport`]           | `&Repo`              |
+//! | [`FsckRequest`]          | [`FsckReport`]            | `&Repo`              |
+//! | [`VerifyPackRequest`]    | [`VerifyPackReport`]      | `&Repo`              |
+//! | [`GcRequest`]            | [`GcReport`]              | `&Repo`              |
+//! | [`RepackRequest`]        | [`RepackReport`]          | `&mut Repo`          |
+//! | [`CompressRequest`]      | [`CompressReport`]        | `&mut Repo` + zoo    |
+//! | [`DiffRequest`]          | [`DiffReport`]            | `&Repo` + zoo        |
+//! | [`MergeRequest`]         | [`MergeReport`]           | `&mut Repo` + zoo    |
+//! | [`BuildRequest`]         | [`BuildReport`]           | `&mut Repo` + runtime|
+//! | [`TestRequest`]          | [`TestReport`]            | `&Repo` + backend    |
+//! | [`CascadeRequest`]       | [`CascadeReport`]         | repo root + runtime  |
+//! | [`AutoInsertRequest`]    | [`AutoInsertReport`]      | `&Repo` + runtime    |
+//! | [`serve::Server`]        | [`serve::ServeReport`]    | `Repo` (owned)       |
+//!
+//! Reports implement [`Report`]: `to_json()` for machine consumers (the
+//! CLI's `--json`, the [`serve`] HTTP tier, golden tests) and `Display`
+//! ([`render`]) for humans. Operation *logic* lives here;
+//! [`crate::cli`] only parses argv, builds a request, runs it, and
+//! renders the report — so every command is equally reachable from
+//! Rust code, the command line, and HTTP.
+
+pub mod exec;
+pub mod integrity;
+pub mod maintain;
+pub mod model;
+pub mod query;
+pub mod render;
+mod repo;
+pub mod serve;
+
+pub use exec::{
+    merge_graphs, AutoInsertReport, AutoInsertRequest, BuildReport, BuildRequest,
+    CascadeReport, CascadeRequest, TestReport, TestRequest, TestResult,
+};
+pub use integrity::{
+    FsckProblem, FsckReport, FsckRequest, GcReport, GcRequest, PackCheck, VerifyPackReport,
+    VerifyPackRequest,
+};
+pub use maintain::{CompressReport, CompressRequest, RepackReport, RepackRequest};
+pub use model::{DiffReport, DiffRequest, MergeReport, MergeRequest};
+pub use query::{
+    LogNode, LogReport, LogRequest, PackGeneration, ShowReport, ShowRequest, StatsReport,
+    StatsRequest,
+};
+pub use repo::{InitReport, InitRequest, Repo};
+
+use crate::util::json::Json;
+
+/// Implemented by every operation report: a machine-consumable JSON
+/// form plus human rendering (via `Display`, see [`render`]).
+pub trait Report: std::fmt::Display {
+    /// Serialize the report (stable field order; golden-testable).
+    fn to_json(&self) -> Json;
+
+    /// When the operation *ran* but found problems that must fail the
+    /// process (fsck corruption, failing tests, bad packs), the message
+    /// to exit nonzero with. `None` = success.
+    fn failure(&self) -> Option<String> {
+        None
+    }
+}

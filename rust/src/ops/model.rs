@@ -1,0 +1,175 @@
+//! Model-to-model operations: `diff`, `merge`.
+
+use anyhow::Result;
+
+use crate::checkpoint::ModelZoo;
+use crate::delta::{self, DeltaKernel};
+use crate::diff::{divergence_scores, value_distance};
+use crate::merge::{merge, MergeOutcome};
+use crate::modeldag::ModelDag;
+use crate::util::json::Json;
+
+use super::{Report, Repo};
+
+// ---------------------------------------------------------------------------
+// diff
+// ---------------------------------------------------------------------------
+
+/// `mgit diff <a> <b>`: structural/contextual divergence (Algorithm 3)
+/// plus parameter-value distance when both nodes have checkpoints.
+pub struct DiffRequest {
+    pub a: String,
+    pub b: String,
+}
+
+/// Typed result of [`DiffRequest`].
+pub struct DiffReport {
+    pub a: String,
+    pub b: String,
+    pub structural: f64,
+    pub contextual: f64,
+    /// Present only when both nodes have stored checkpoints.
+    pub value_distance: Option<f64>,
+}
+
+impl DiffRequest {
+    pub fn run(
+        &self,
+        repo: &Repo,
+        zoo: &ModelZoo,
+        kernel: &dyn DeltaKernel,
+    ) -> Result<DiffReport> {
+        let na = repo.graph.by_name(&self.a)?;
+        let nb = repo.graph.by_name(&self.b)?;
+        let (sa, sb) = (zoo.arch(&na.model_type)?, zoo.arch(&nb.model_type)?);
+        let da = ModelDag::from_arch(sa, na.stored.as_ref())?;
+        let db = ModelDag::from_arch(sb, nb.stored.as_ref())?;
+        let (structural, contextual) = divergence_scores(&da, &db);
+        let value = if na.stored.is_some() && nb.stored.is_some() {
+            let cka = repo.load_checkpoint(&self.a, kernel, zoo)?;
+            let ckb = repo.load_checkpoint(&self.b, kernel, zoo)?;
+            Some(value_distance(&da, sa, &cka, &db, sb, &ckb)?)
+        } else {
+            None
+        };
+        Ok(DiffReport {
+            a: self.a.clone(),
+            b: self.b.clone(),
+            structural,
+            contextual,
+            value_distance: value,
+        })
+    }
+}
+
+impl Report for DiffReport {
+    fn to_json(&self) -> Json {
+        Json::obj()
+            .set("a", self.a.as_str())
+            .set("b", self.b.as_str())
+            .set("structural_divergence", self.structural)
+            .set("contextual_divergence", self.contextual)
+            .set(
+                "value_distance",
+                self.value_distance.map(Json::from).unwrap_or(Json::Null),
+            )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// merge
+// ---------------------------------------------------------------------------
+
+/// `mgit merge <base> <m1> <m2>`: the Figure-2 merge decision tree; a
+/// mergeable result is stored as a new node with provenance edges from
+/// both sides.
+pub struct MergeRequest {
+    pub base: String,
+    pub m1: String,
+    pub m2: String,
+    /// Name for the merged node (default `merged`).
+    pub out: Option<String>,
+}
+
+/// Typed result of [`MergeRequest`].
+pub struct MergeReport {
+    /// `conflict`, `possible-conflict`, or `no-conflict`.
+    pub verdict: String,
+    /// Layers changed by both sides (conflict case).
+    pub overlapping: Vec<String>,
+    /// Dependent changed-layer pairs (possible-conflict case).
+    pub dependent_pairs: Vec<(String, String)>,
+    /// Name the merged model was stored under, when one was produced.
+    pub stored_as: Option<String>,
+}
+
+impl MergeRequest {
+    pub fn run(
+        &self,
+        repo: &mut Repo,
+        zoo: &ModelZoo,
+        kernel: &dyn DeltaKernel,
+    ) -> Result<MergeReport> {
+        let arch = repo.graph.by_name(&self.base)?.model_type.clone();
+        let spec = zoo.arch(&arch)?;
+        let dag = ModelDag::from_arch(spec, None)?;
+        let b = repo.load_checkpoint(&self.base, kernel, zoo)?;
+        let c1 = repo.load_checkpoint(&self.m1, kernel, zoo)?;
+        let c2 = repo.load_checkpoint(&self.m2, kernel, zoo)?;
+        let out = merge(spec, &dag, &b, &c1, &c2)?;
+        let mut report = MergeReport {
+            verdict: out.verdict().to_string(),
+            overlapping: Vec::new(),
+            dependent_pairs: Vec::new(),
+            stored_as: None,
+        };
+        match &out {
+            MergeOutcome::Conflict { overlapping } => {
+                report.overlapping = overlapping.clone();
+            }
+            MergeOutcome::PossibleConflict { dependent_pairs, .. } => {
+                report.dependent_pairs = dependent_pairs.clone();
+            }
+            MergeOutcome::Clean { .. } => {}
+        }
+        if let Some(merged) = out.merged() {
+            let name = self.out.as_deref().unwrap_or("merged").to_string();
+            let (sm, _) = delta::store_raw(&repo.store, spec, merged)?;
+            let idx = repo.graph.add_node(&name, &arch)?;
+            repo.graph.node_mut(idx).stored = Some(sm);
+            let b1 = repo.graph.idx(&self.m1)?;
+            let b2 = repo.graph.idx(&self.m2)?;
+            repo.graph.add_edge(b1, idx)?;
+            repo.graph.add_edge(b2, idx)?;
+            repo.save()?;
+            report.stored_as = Some(name);
+        }
+        Ok(report)
+    }
+}
+
+impl Report for MergeReport {
+    fn to_json(&self) -> Json {
+        Json::obj()
+            .set("verdict", self.verdict.as_str())
+            .set(
+                "overlapping",
+                Json::Arr(self.overlapping.iter().map(|s| Json::from(s.as_str())).collect()),
+            )
+            .set(
+                "dependent_pairs",
+                Json::Arr(
+                    self.dependent_pairs
+                        .iter()
+                        .map(|(a, b)| {
+                            Json::Arr(vec![Json::from(a.as_str()), Json::from(b.as_str())])
+                        })
+                        .collect(),
+                ),
+            )
+            .set(
+                "stored_as",
+                self.stored_as.as_deref().map(Json::from).unwrap_or(Json::Null),
+            )
+    }
+}

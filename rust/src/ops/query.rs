@@ -1,0 +1,359 @@
+//! Read-path query operations: `log`, `show`, `stats`.
+
+use anyhow::Result;
+
+use crate::store::ObjectId;
+use crate::util::json::Json;
+
+use super::{Report, Repo};
+
+// ---------------------------------------------------------------------------
+// log
+// ---------------------------------------------------------------------------
+
+/// `mgit log`: list every node with its edges and versions.
+pub struct LogRequest;
+
+/// One node row in a [`LogReport`].
+pub struct LogNode {
+    pub name: String,
+    pub model_type: String,
+    /// Whether the node has a stored checkpoint in the CAS.
+    pub stored: bool,
+    /// Creation-function kind (`pretrain`, `finetune`, …), if registered.
+    pub creation: Option<String>,
+    /// Provenance parents, by name.
+    pub prov_parents: Vec<String>,
+}
+
+/// Typed result of [`LogRequest`].
+pub struct LogReport {
+    pub nodes: Vec<LogNode>,
+    pub prov_edges: usize,
+    pub ver_edges: usize,
+}
+
+impl LogRequest {
+    pub fn run(&self, repo: &Repo) -> Result<LogReport> {
+        let (prov, ver) = repo.graph.edge_counts();
+        let nodes = repo
+            .graph
+            .nodes
+            .iter()
+            .map(|node| LogNode {
+                name: node.name.clone(),
+                model_type: node.model_type.clone(),
+                stored: node.stored.is_some(),
+                creation: node.creation.as_ref().map(|c| c.kind().to_string()),
+                prov_parents: node
+                    .prov_parents
+                    .iter()
+                    .map(|&p| repo.graph.node(p).name.clone())
+                    .collect(),
+            })
+            .collect();
+        Ok(LogReport { nodes, prov_edges: prov, ver_edges: ver })
+    }
+}
+
+impl Report for LogReport {
+    fn to_json(&self) -> Json {
+        let nodes: Vec<Json> = self
+            .nodes
+            .iter()
+            .map(|n| {
+                Json::obj()
+                    .set("name", n.name.as_str())
+                    .set("model_type", n.model_type.as_str())
+                    .set("stored", n.stored)
+                    .set(
+                        "creation",
+                        n.creation.as_deref().map(Json::from).unwrap_or(Json::Null),
+                    )
+                    .set(
+                        "prov_parents",
+                        Json::Arr(
+                            n.prov_parents.iter().map(|p| Json::from(p.as_str())).collect(),
+                        ),
+                    )
+            })
+            .collect();
+        Json::obj()
+            .set("nodes", Json::Arr(nodes))
+            .set("prov_edges", self.prov_edges)
+            .set("ver_edges", self.ver_edges)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// show
+// ---------------------------------------------------------------------------
+
+/// `mgit show <node>`: one node's details.
+pub struct ShowRequest {
+    pub node: String,
+}
+
+/// Typed result of [`ShowRequest`].
+pub struct ShowReport {
+    pub name: String,
+    pub model_type: String,
+    /// The serialized creation spec, if registered.
+    pub creation: Option<Json>,
+    /// Free-form node metadata.
+    pub metadata: Json,
+    /// (parameter name, full content-id hex) pairs, layout order.
+    pub params: Vec<(String, String)>,
+}
+
+impl ShowRequest {
+    pub fn run(&self, repo: &Repo) -> Result<ShowReport> {
+        let node = repo.graph.by_name(&self.node)?;
+        let params = node
+            .stored
+            .as_ref()
+            .map(|sm| {
+                sm.params
+                    .iter()
+                    .map(|(name, id)| (name.clone(), id.hex()))
+                    .collect()
+            })
+            .unwrap_or_default();
+        Ok(ShowReport {
+            name: node.name.clone(),
+            model_type: node.model_type.clone(),
+            creation: node.creation.as_ref().map(|c| c.to_json()),
+            metadata: node.metadata.clone(),
+            params,
+        })
+    }
+}
+
+impl Report for ShowReport {
+    fn to_json(&self) -> Json {
+        Json::obj()
+            .set("name", self.name.as_str())
+            .set("model_type", self.model_type.as_str())
+            .set("creation", self.creation.clone().unwrap_or(Json::Null))
+            .set("metadata", self.metadata.clone())
+            .set(
+                "params",
+                Json::Arr(
+                    self.params
+                        .iter()
+                        .map(|(n, id)| {
+                            Json::obj().set("name", n.as_str()).set("id", id.as_str())
+                        })
+                        .collect(),
+                ),
+            )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// stats
+// ---------------------------------------------------------------------------
+
+/// `mgit stats`: object-store statistics.
+pub struct StatsRequest;
+
+/// One pack generation in a [`StatsReport`] (mtime-ordered; gen 0 is the
+/// oldest).
+pub struct PackGeneration {
+    pub generation: usize,
+    pub objects: usize,
+    pub bytes: u64,
+    pub name: String,
+}
+
+/// Typed result of [`StatsRequest`].
+pub struct StatsReport {
+    pub objects: usize,
+    pub loose: usize,
+    pub packed: usize,
+    /// Pack reader implementation (`mmap`, `pread`, …); None if no packs.
+    pub reader_kind: Option<&'static str>,
+    pub packs: Vec<PackGeneration>,
+    pub delta_objects: usize,
+    pub stored_bytes: u64,
+    pub logical_bytes: u64,
+    /// Cumulative counters persisted across invocations.
+    pub puts: u64,
+    pub dedup_hits: u64,
+    pub bytes_written: u64,
+    pub chain_max: usize,
+    pub chain_mean: f64,
+    /// (bucket label, object count), non-empty buckets only.
+    pub depth_buckets: Vec<(String, usize)>,
+}
+
+impl StatsRequest {
+    pub fn run(&self, repo: &Repo) -> Result<StatsReport> {
+        let objects = repo.store.list()?;
+        let bytes = repo.store.stored_bytes()?;
+        let mut raw_bytes: u64 = 0;
+        let mut delta_objs = 0usize;
+        // One decode pass feeds both the byte accounting and (via the
+        // parent map) the chain-depth histogram below.
+        let mut parents: std::collections::HashMap<ObjectId, Option<ObjectId>> =
+            Default::default();
+        for id in &objects {
+            let mut parent = None;
+            if let Ok(obj) =
+                crate::store::format::TensorObject::decode(&repo.store.get(id)?)
+            {
+                let numel: usize = obj.shape().iter().product();
+                raw_bytes += (numel * 4) as u64;
+                if let crate::store::format::TensorObject::Delta { parent: p, .. } = obj {
+                    delta_objs += 1;
+                    parent = Some(p);
+                }
+            }
+            parents.insert(*id, parent);
+        }
+        let (loose, packed) = match repo.store.as_packed() {
+            Some(ps) => ps.counts()?,
+            None => (objects.len(), 0),
+        };
+        // Per-pack generation info: incremental repacks append packs over
+        // time; sort by file mtime so "gen 0" is the oldest.
+        let mut reader_kind = None;
+        let mut packs = Vec::new();
+        if let Some(ps) = repo.store.as_packed() {
+            if !ps.packs().is_empty() {
+                let mut gens: Vec<_> = ps
+                    .packs()
+                    .iter()
+                    .map(|p| {
+                        let mtime = std::fs::metadata(&p.path)
+                            .and_then(|m| m.modified())
+                            .unwrap_or(std::time::SystemTime::UNIX_EPOCH);
+                        (mtime, p)
+                    })
+                    .collect();
+                gens.sort_by_key(|(t, _)| *t);
+                reader_kind = Some(gens[0].1.reader_kind());
+                for (generation, (_, p)) in gens.iter().enumerate() {
+                    let name = p
+                        .path
+                        .file_name()
+                        .map(|n| n.to_string_lossy().into_owned())
+                        .unwrap_or_else(|| p.path.display().to_string());
+                    packs.push(PackGeneration {
+                        generation,
+                        objects: p.object_count(),
+                        bytes: p.size_bytes(),
+                        name,
+                    });
+                }
+            }
+        }
+        // Cumulative dedup counters (persisted across invocations).
+        let (puts, dedup, written) = Repo::load_stats(&repo.root);
+        // Delta-chain depths (reconstruction cost driver; docs/STORAGE.md).
+        let depths = crate::store::pack::chain_depths_from_parents(&parents)?;
+        let chain_max = depths.values().copied().max().unwrap_or(0);
+        let chain_lens: Vec<usize> = depths.values().copied().filter(|&d| d > 0).collect();
+        let chain_mean = if chain_lens.is_empty() {
+            0.0
+        } else {
+            chain_lens.iter().sum::<usize>() as f64 / chain_lens.len() as f64
+        };
+        let buckets: [(usize, usize, &str); 6] = [
+            (0, 0, "0 (base)"),
+            (1, 2, "1-2"),
+            (3, 4, "3-4"),
+            (5, 8, "5-8"),
+            (9, 16, "9-16"),
+            (17, usize::MAX, "17+"),
+        ];
+        let mut depth_buckets = Vec::new();
+        for (lo, hi, label) in buckets {
+            let n = depths.values().filter(|&&d| d >= lo && d <= hi).count();
+            if n > 0 {
+                depth_buckets.push((label.to_string(), n));
+            }
+        }
+        Ok(StatsReport {
+            objects: objects.len(),
+            loose,
+            packed,
+            reader_kind,
+            packs,
+            delta_objects: delta_objs,
+            stored_bytes: bytes,
+            logical_bytes: raw_bytes,
+            puts,
+            dedup_hits: dedup,
+            bytes_written: written,
+            chain_max,
+            chain_mean,
+            depth_buckets,
+        })
+    }
+}
+
+impl StatsReport {
+    /// `logical / stored` (0.0 when nothing is stored).
+    pub fn compression_ratio(&self) -> f64 {
+        if self.stored_bytes > 0 {
+            self.logical_bytes as f64 / self.stored_bytes as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Dedup hit rate in percent (0.0 with no puts).
+    pub fn dedup_hit_rate(&self) -> f64 {
+        if self.puts > 0 {
+            100.0 * self.dedup_hits as f64 / self.puts as f64
+        } else {
+            0.0
+        }
+    }
+}
+
+impl Report for StatsReport {
+    fn to_json(&self) -> Json {
+        let packs: Vec<Json> = self
+            .packs
+            .iter()
+            .map(|p| {
+                Json::obj()
+                    .set("generation", p.generation)
+                    .set("objects", p.objects)
+                    .set("bytes", p.bytes)
+                    .set("name", p.name.as_str())
+            })
+            .collect();
+        Json::obj()
+            .set("objects", self.objects)
+            .set("loose", self.loose)
+            .set("packed", self.packed)
+            .set(
+                "reader_kind",
+                self.reader_kind.map(Json::from).unwrap_or(Json::Null),
+            )
+            .set("packs", Json::Arr(packs))
+            .set("delta_objects", self.delta_objects)
+            .set("stored_bytes", self.stored_bytes)
+            .set("logical_bytes", self.logical_bytes)
+            .set("compression_ratio", self.compression_ratio())
+            .set("puts", self.puts)
+            .set("dedup_hits", self.dedup_hits)
+            .set("bytes_written", self.bytes_written)
+            .set("chain_max", self.chain_max)
+            .set("chain_mean", self.chain_mean)
+            .set(
+                "depth_buckets",
+                Json::Arr(
+                    self.depth_buckets
+                        .iter()
+                        .map(|(label, n)| {
+                            Json::obj().set("depth", label.as_str()).set("objects", *n)
+                        })
+                        .collect(),
+                ),
+            )
+    }
+}

@@ -1,0 +1,348 @@
+//! Human-readable rendering for every operation report.
+//!
+//! The typed reports in [`crate::ops`] carry data only; this module is
+//! the presentation layer the CLI uses when `--json` is absent. Each
+//! `Display` impl produces the full multi-line text *without* a
+//! trailing newline (the CLI adds it).
+
+use std::fmt;
+
+use crate::util::{human_bytes, human_secs};
+
+use super::exec::{AutoInsertReport, BuildReport, CascadeReport, TestReport};
+use super::integrity::{FsckReport, GcReport, VerifyPackReport};
+use super::maintain::{CompressReport, RepackReport};
+use super::model::{DiffReport, MergeReport};
+use super::query::{LogReport, ShowReport, StatsReport};
+use super::repo::InitReport;
+use super::serve::ServeReport;
+
+fn join(f: &mut fmt::Formatter<'_>, lines: &[String]) -> fmt::Result {
+    write!(f, "{}", lines.join("\n"))
+}
+
+impl fmt::Display for InitReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "initialized empty MGit repository in {}", self.mgit_dir)
+    }
+}
+
+impl fmt::Display for LogReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut lines = vec![format!(
+            "{} nodes / {} provenance edges / {} version edges",
+            self.nodes.len(),
+            self.prov_edges,
+            self.ver_edges
+        )];
+        for node in &self.nodes {
+            let stored = if node.stored { "" } else { " (no ckpt)" };
+            let cr = node
+                .creation
+                .as_ref()
+                .map(|c| format!(" cr={c}"))
+                .unwrap_or_default();
+            lines.push(format!(
+                "  {:<40} [{}]{}{} <- {:?}",
+                node.name, node.model_type, stored, cr, node.prov_parents
+            ));
+        }
+        join(f, &lines)
+    }
+}
+
+impl fmt::Display for ShowReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut lines = vec![
+            format!("name:  {}", self.name),
+            format!("type:  {}", self.model_type),
+        ];
+        if let Some(cr) = &self.creation {
+            lines.push(format!("cr:    {}", cr.to_string_compact()));
+        }
+        lines.push(format!("meta:  {}", self.metadata.to_string_compact()));
+        if !self.params.is_empty() {
+            lines.push(format!("params ({}):", self.params.len()));
+            for (name, id) in self.params.iter().take(8) {
+                lines.push(format!("  {:<24} {}", name, &id[..12.min(id.len())]));
+            }
+            if self.params.len() > 8 {
+                lines.push(format!("  … {} more", self.params.len() - 8));
+            }
+        }
+        join(f, &lines)
+    }
+}
+
+impl fmt::Display for FsckReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut lines = Vec::new();
+        for p in &self.problems {
+            // `BAD_PACK` is a machine tag; humans read "BAD PACK".
+            lines.push(format!("{} {}", p.kind.replace('_', " "), p.detail));
+        }
+        if !self.orphaned.is_empty() {
+            lines.push(format!("orphaned delta parents ({}):", self.orphaned.len()));
+            for (parent, children) in &self.orphaned {
+                let refs: Vec<&str> =
+                    children.iter().map(|c| &c[..12.min(c.len())]).collect();
+                lines.push(format!("  {} <- [{}]", parent, refs.join(", ")));
+            }
+        }
+        if let Some((loose, packed, packs)) = self.pack_counts {
+            lines.push(format!("objects: {loose} loose / {packed} packed in {packs} packs"));
+        }
+        if self.problems.is_empty() {
+            lines.push(format!(
+                "ok: {} nodes, all invariants hold, all objects present",
+                self.nodes
+            ));
+        }
+        join(f, &lines)
+    }
+}
+
+impl fmt::Display for StatsReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut lines = vec![format!(
+            "objects:        {} ({} loose, {} packed)",
+            self.objects, self.loose, self.packed
+        )];
+        if !self.packs.is_empty() {
+            lines.push(format!(
+                "packs:          {} ({} reads)",
+                self.packs.len(),
+                self.reader_kind.unwrap_or("unknown")
+            ));
+            for p in &self.packs {
+                lines.push(format!(
+                    "  gen {:<3} {:<6} objects  {:>10}  {}",
+                    p.generation,
+                    p.objects,
+                    human_bytes(p.bytes),
+                    p.name
+                ));
+            }
+        }
+        lines.push(format!("delta-encoded:  {}", self.delta_objects));
+        lines.push(format!("stored bytes:   {}", human_bytes(self.stored_bytes)));
+        lines.push(format!("logical bytes:  {}", human_bytes(self.logical_bytes)));
+        if self.stored_bytes > 0 {
+            lines.push(format!(
+                "object-level compression ratio: {:.2}x",
+                self.compression_ratio()
+            ));
+        }
+        lines.push(format!(
+            "puts:           {} total, {} dedup hits ({:.1}% hit rate)",
+            self.puts,
+            self.dedup_hits,
+            self.dedup_hit_rate()
+        ));
+        lines.push(format!("bytes written:  {}", human_bytes(self.bytes_written)));
+        lines.push(format!(
+            "chain depth:    max {}, mean {:.2} (over delta objects)",
+            self.chain_max, self.chain_mean
+        ));
+        for (label, n) in &self.depth_buckets {
+            lines.push(format!("  depth {label:<9} {n}"));
+        }
+        join(f, &lines)
+    }
+}
+
+impl fmt::Display for VerifyPackReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.packs.is_empty() {
+            return write!(f, "no packs to verify");
+        }
+        let mut lines = Vec::new();
+        for p in &self.packs {
+            match &p.error {
+                None => {
+                    lines.push(format!("pack {}: {} objects, structure ok", p.path, p.objects))
+                }
+                Some(e) => lines.push(format!("BAD PACK {}: {e}", p.path)),
+            }
+        }
+        for m in &self.object_problems {
+            lines.push(format!("BAD OBJECT {m}"));
+        }
+        if self.all_problems().is_empty() {
+            lines.push(format!(
+                "verify-pack ok: {} objects in {} packs, {} content hashes verified, \
+                 {} opaque blobs",
+                self.total_objects,
+                self.packs.len(),
+                self.checked,
+                self.opaque
+            ));
+        }
+        join(f, &lines)
+    }
+}
+
+impl fmt::Display for GcReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "swept {} unreachable objects", self.swept.len())
+    }
+}
+
+impl fmt::Display for RepackReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let p = &self.pack;
+        let mut lines = vec![format!(
+            "repacked {} objects ({} retained in old packs, {} carried dead) in {} [{}]",
+            p.packed,
+            p.retained_packed,
+            p.carried_dead,
+            human_secs(self.elapsed_secs),
+            self.mode_label
+        )];
+        if p.dead_ratio > 0.0 {
+            lines.push(format!(
+                "garbage: {:.1}% of sealed pack bytes are unreachable",
+                p.dead_ratio * 100.0
+            ));
+        }
+        lines.push(format!("packs:  {} -> {}", p.packs_before, p.packs_after));
+        lines.push(format!(
+            "chains: max depth {} -> {} ({} re-based onto nearer ancestors, {} new bases)",
+            p.max_depth_before, p.max_depth_after, p.rebased_delta, p.new_bases
+        ));
+        lines.push(format!(
+            "store:  {} -> {} ({} loose demoted, {} pruned)",
+            human_bytes(p.bytes_before),
+            human_bytes(p.bytes_after),
+            p.loose_demoted,
+            p.pruned_loose
+        ));
+        if let Some(path) = &p.pack_path {
+            lines.push(format!("pack:   {}", path.display()));
+        }
+        join(f, &lines)
+    }
+}
+
+impl fmt::Display for CompressReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "compressed: {} raw -> {} new bytes ({:.2}x vs raw), {} objects swept, took {}",
+            human_bytes(self.raw_bytes),
+            human_bytes(self.stored_bytes),
+            self.ratio(),
+            self.swept,
+            human_secs(self.elapsed_secs)
+        )
+    }
+}
+
+impl fmt::Display for DiffReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut lines = vec![
+            format!("structural divergence: {:.4}", self.structural),
+            format!("contextual divergence: {:.4}", self.contextual),
+        ];
+        if let Some(dv) = self.value_distance {
+            lines.push(format!("value distance:        {dv:.4}"));
+        }
+        join(f, &lines)
+    }
+}
+
+impl fmt::Display for MergeReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut lines = vec![format!("merge verdict: {}", self.verdict)];
+        if !self.overlapping.is_empty() {
+            lines.push(format!("layers changed by both sides: {:?}", self.overlapping));
+            lines.push("manual resolution required".to_string());
+        }
+        if !self.dependent_pairs.is_empty() {
+            lines.push(format!("dependent changed-layer pairs: {:?}", self.dependent_pairs));
+            lines.push("run `mgit test` on the merged model before accepting".to_string());
+        }
+        if let Some(name) = &self.stored_as {
+            lines.push(format!("stored merged model as `{name}`"));
+        }
+        join(f, &lines)
+    }
+}
+
+impl fmt::Display for BuildReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "built {}: {} nodes / {} prov + {} ver edges in {}",
+            self.name,
+            self.nodes,
+            self.prov_edges,
+            self.ver_edges,
+            human_secs(self.elapsed_secs)
+        )
+    }
+}
+
+impl fmt::Display for TestReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut lines = Vec::with_capacity(self.results.len() + 1);
+        for r in &self.results {
+            lines.push(format!(
+                "{} {:<36} {:<24} metric={:.4}",
+                if r.passed { "PASS" } else { "FAIL" },
+                r.node,
+                r.test,
+                r.metric
+            ));
+        }
+        lines.push(format!("{} tests run, {} failed", self.ran, self.failed));
+        join(f, &lines)
+    }
+}
+
+impl fmt::Display for CascadeReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut lines = Vec::new();
+        match &self.origin {
+            Some((node, new)) => lines.push(format!(
+                "cascade from {node} -> {new} ({} jobs): {} new versions, \
+                 {} skipped (no cr)",
+                self.jobs,
+                self.new_versions.len(),
+                self.skipped_no_cr
+            )),
+            None => lines.push(format!(
+                "resumed cascade: {} new versions ({} tasks replayed from the journal), \
+                 {} skipped (no cr)",
+                self.new_versions.len(),
+                self.resumed_tasks,
+                self.skipped_no_cr
+            )),
+        }
+        for (old, new) in &self.new_versions {
+            lines.push(format!("  {old} -> {new}"));
+        }
+        join(f, &lines)
+    }
+}
+
+impl fmt::Display for AutoInsertReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut lines = vec![format!("auto-constructed {} nodes:", self.nodes.len())];
+        for (name, parents) in &self.nodes {
+            lines.push(format!("  {name:<40} <- {parents:?}"));
+        }
+        lines.push(format!("avg per-model insertion time: {}", human_secs(self.avg_secs)));
+        join(f, &lines)
+    }
+}
+
+impl fmt::Display for ServeReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "serve: handled {} requests ({} errors) across {} workers",
+            self.requests, self.errors, self.pool
+        )
+    }
+}

@@ -1,0 +1,189 @@
+//! The on-disk repository session every operation executes against.
+//!
+//! A repository is a directory containing `.mgit/graph.json` (lineage
+//! graph + test registry, re-serialized after every mutating operation,
+//! matching §3.1) and `.mgit/objects/` (the content-addressed store:
+//! loose staging fan-out plus `pack/*.pack` pack files — see
+//! `docs/STORAGE.md`). [`Repo`] bundles the two behind open/save
+//! bookkeeping; the typed operations in [`crate::ops`] take a `&Repo`
+//! (read path) or `&mut Repo` (mutating path).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::checkpoint::Checkpoint;
+use crate::delta::{self, DeltaKernel};
+use crate::lineage::LineageGraph;
+use crate::store::{ObjectId, Store};
+use crate::util::json::Json;
+
+use super::Report;
+
+/// An on-disk MGit repository.
+pub struct Repo {
+    pub root: PathBuf,
+    pub graph: LineageGraph,
+    pub store: Store,
+}
+
+impl Repo {
+    pub fn mgit_dir(root: &Path) -> PathBuf {
+        root.join(".mgit")
+    }
+
+    pub fn graph_path(root: &Path) -> PathBuf {
+        Self::mgit_dir(root).join("graph.json")
+    }
+
+    fn stats_path(root: &Path) -> PathBuf {
+        Self::mgit_dir(root).join("stats.json")
+    }
+
+    pub fn init(root: &Path) -> Result<Repo> {
+        let dir = Self::mgit_dir(root);
+        if Self::graph_path(root).exists() {
+            bail!("repository already initialized at {}", dir.display());
+        }
+        std::fs::create_dir_all(&dir)?;
+        let store = Store::open_packed(&dir.join("objects"))?;
+        let graph = LineageGraph::new();
+        graph.save(&Self::graph_path(root))?;
+        Ok(Repo { root: root.to_path_buf(), graph, store })
+    }
+
+    /// De-serialize at the start of an operation (paper §3.1). The store
+    /// is pack-capable: loose staging first, then pack indexes.
+    pub fn open(root: &Path) -> Result<Repo> {
+        let graph = LineageGraph::load(&Self::graph_path(root))?;
+        let store = Store::open_packed(&Self::mgit_dir(root).join("objects"))?;
+        Ok(Repo { root: root.to_path_buf(), graph, store })
+    }
+
+    /// Serialize at the end of every operation (paper §3.1); also folds
+    /// this process's store counters into the persistent cumulative
+    /// stats that `mgit stats` reports.
+    pub fn save(&self) -> Result<()> {
+        self.graph.save(&Self::graph_path(&self.root))?;
+        self.persist_stats()
+    }
+
+    /// Cumulative (puts, dedup_hits, bytes_written) since `init`.
+    ///
+    /// A missing `stats.json` is a fresh repository: zeros. A *corrupt*
+    /// one is never silently discarded — the unreadable file is
+    /// preserved as `stats.json.corrupt`, a warning goes to stderr, and
+    /// counting restarts from zero (the next `persist_stats` writes a
+    /// fresh file).
+    pub fn load_stats(root: &Path) -> (u64, u64, u64) {
+        let path = Self::stats_path(root);
+        if !path.exists() {
+            return (0, 0, 0);
+        }
+        let read = || -> Result<(u64, u64, u64)> {
+            let text = std::fs::read_to_string(&path)?;
+            let j = crate::util::json::parse(&text)?;
+            Ok((
+                j.req_usize("puts")? as u64,
+                j.req_usize("dedup_hits")? as u64,
+                j.req_usize("bytes_written")? as u64,
+            ))
+        };
+        match read() {
+            Ok(t) => t,
+            Err(e) => {
+                let corrupt = path.with_extension("json.corrupt");
+                let kept = std::fs::rename(&path, &corrupt).is_ok();
+                eprintln!(
+                    "warning: {} is unreadable ({e:#}); cumulative dedup counters reset{}",
+                    path.display(),
+                    if kept {
+                        format!(" (old file preserved as {})", corrupt.display())
+                    } else {
+                        String::new()
+                    }
+                );
+                (0, 0, 0)
+            }
+        }
+    }
+
+    /// Drain the in-process store counters into `.mgit/stats.json`.
+    /// Single-writer, like `graph.json`: operations are per-invocation.
+    pub fn persist_stats(&self) -> Result<()> {
+        let (puts, dedup, written) = self.store.stats.take();
+        if puts == 0 && dedup == 0 && written == 0 {
+            return Ok(());
+        }
+        let (p0, d0, w0) = Self::load_stats(&self.root);
+        let j = Json::obj()
+            .set("puts", (p0 + puts) as usize)
+            .set("dedup_hits", (d0 + dedup) as usize)
+            .set("bytes_written", (w0 + written) as usize);
+        let path = Self::stats_path(&self.root);
+        let write = || -> Result<()> {
+            let tmp = path.with_extension("json.tmp");
+            std::fs::write(&tmp, j.to_string_pretty())?;
+            std::fs::rename(&tmp, &path)?;
+            Ok(())
+        };
+        let res = write();
+        if res.is_err() {
+            // Don't lose the drained counts on a failed write; they'll
+            // ride along with the next successful persist.
+            use std::sync::atomic::Ordering;
+            self.store.stats.puts.fetch_add(puts, Ordering::Relaxed);
+            self.store.stats.dedup_hits.fetch_add(dedup, Ordering::Relaxed);
+            self.store.stats.bytes_written.fetch_add(written, Ordering::Relaxed);
+        }
+        res
+    }
+
+    pub fn load_checkpoint(
+        &self,
+        node: &str,
+        kernel: &dyn DeltaKernel,
+        zoo: &crate::checkpoint::ModelZoo,
+    ) -> Result<Checkpoint> {
+        let n = self.graph.by_name(node)?;
+        let sm = n
+            .stored
+            .as_ref()
+            .ok_or_else(|| anyhow!("node {node} has no stored checkpoint"))?;
+        delta::load(&self.store, zoo, sm, kernel)
+    }
+
+    /// GC roots: every stored model referenced by the graph. Delta-parent
+    /// references are strong and walked transitively; GC aborts rather
+    /// than sweep if a live object is unreadable.
+    pub fn gc(&self) -> Result<Vec<ObjectId>> {
+        let roots = self.graph.object_roots();
+        self.store.gc(&roots, |bytes| {
+            crate::store::format::TensorObject::decode(bytes)
+                .map(|o| o.refs())
+                .unwrap_or_default()
+        })
+    }
+}
+
+/// `mgit init`: create an empty repository.
+pub struct InitRequest;
+
+/// Outcome of [`InitRequest`].
+pub struct InitReport {
+    /// The `.mgit` directory that was created.
+    pub mgit_dir: String,
+}
+
+impl InitRequest {
+    pub fn run(&self, root: &Path) -> Result<InitReport> {
+        Repo::init(root)?;
+        Ok(InitReport { mgit_dir: Repo::mgit_dir(root).display().to_string() })
+    }
+}
+
+impl Report for InitReport {
+    fn to_json(&self) -> Json {
+        Json::obj().set("initialized", self.mgit_dir.as_str())
+    }
+}

@@ -1,0 +1,412 @@
+//! `mgit serve`: a dependency-free HTTP/1.1 front-end over the
+//! concurrent read tier.
+//!
+//! The server owns one read-only [`Repo`] snapshot (graph loaded once at
+//! bind time) and shares the `Send + Sync` [`crate::store::Store`] plus
+//! one bounded [`ResolveCache`] across a fixed pool of worker threads —
+//! exactly the concurrency contract the storage tier guarantees (mmap'd
+//! lock-free pack reads; see `docs/STORAGE.md`). Endpoints:
+//!
+//! | method+path              | response                                         |
+//! |--------------------------|--------------------------------------------------|
+//! | `GET /log`               | [`super::LogReport`] JSON                        |
+//! | `GET /stats`             | [`super::StatsReport`] JSON                      |
+//! | `GET /show/<node>`       | [`super::ShowReport`] JSON                       |
+//! | `GET /diff/<a>/<b>`      | [`super::DiffReport`] JSON (needs the manifest)  |
+//! | `GET /checkpoint/<node>` | raw little-endian f32 tensor stream (flat layout |
+//! |                          | order), delta chains resolved through the shared |
+//! |                          | cache — bit-exact with [`crate::delta::load`]    |
+//! | `GET /object/<hex-id>`   | the stored object's exact bytes (`Store::get`)   |
+//! | `GET /healthz`           | `{"ok": true}`                                   |
+//!
+//! Node names may contain `/` (e.g. `g5/base-mlm`): `show` and
+//! `checkpoint` treat the whole remaining path as the name, and any
+//! segment may percent-encode reserved characters (`%2F`). The protocol
+//! surface is deliberately tiny — `GET`-only, `Connection: close` — so
+//! it needs no external HTTP crate, matching the repo's no-new-deps
+//! style.
+
+use std::io::Write;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::checkpoint::ModelZoo;
+use crate::delta::{self, NativeKernel, ResolveCache};
+use crate::store::ObjectId;
+use crate::tensor::f32_to_bytes;
+use crate::util::json::Json;
+
+use super::{Report, Repo};
+
+/// Summary returned when a server shuts down.
+pub struct ServeReport {
+    pub requests: u64,
+    pub errors: u64,
+    pub pool: usize,
+}
+
+impl Report for ServeReport {
+    fn to_json(&self) -> Json {
+        Json::obj()
+            .set("requests", self.requests)
+            .set("errors", self.errors)
+            .set("pool", self.pool)
+    }
+}
+
+/// Shared, read-only serving state (one per server).
+struct ServeState {
+    repo: Repo,
+    /// `/stats` response, computed once at bind time: the report walks
+    /// every object in the store, and the server's repo snapshot is
+    /// immutable for its lifetime — recomputing per request would let a
+    /// few concurrent `/stats` hits pin every pool worker on large
+    /// stores.
+    stats: Json,
+    /// Arch specs for `/diff` and `/checkpoint`; None when no artifacts
+    /// manifest was found (those endpoints answer 503).
+    zoo: Option<ModelZoo>,
+    /// Shared across workers so concurrent chain walks reuse resolved
+    /// ancestors (PR 2's bounded LRU).
+    cache: ResolveCache,
+    stop: AtomicBool,
+    requests: AtomicU64,
+    errors: AtomicU64,
+}
+
+/// A bound-but-not-yet-serving HTTP server.
+pub struct Server {
+    listener: TcpListener,
+    state: Arc<ServeState>,
+    pool: usize,
+}
+
+/// Cloneable handle used to stop a running [`Server`] (tests, signal
+/// handlers).
+#[derive(Clone)]
+pub struct ServerHandle {
+    state: Arc<ServeState>,
+    addr: SocketAddr,
+}
+
+impl ServerHandle {
+    /// Ask the accept loop to exit. Safe to call more than once.
+    pub fn shutdown(&self) {
+        self.state.stop.store(true, Ordering::SeqCst);
+        // Unblock the blocking `accept` with one throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+impl Server {
+    /// Bind `127.0.0.1:port` (`port = 0` picks an ephemeral port) over
+    /// an opened repository. `pool` worker threads serve requests
+    /// (clamped to ≥ 1); size it with [`crate::util::auto_jobs`].
+    pub fn bind(repo: Repo, zoo: Option<ModelZoo>, port: u16, pool: usize) -> Result<Server> {
+        let listener = TcpListener::bind(("127.0.0.1", port))
+            .with_context(|| format!("binding 127.0.0.1:{port}"))?;
+        let stats = super::StatsRequest.run(&repo)?.to_json();
+        let state = Arc::new(ServeState {
+            repo,
+            stats,
+            zoo,
+            cache: ResolveCache::with_max_bytes(128, 256 << 20),
+            stop: AtomicBool::new(false),
+            requests: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+        });
+        Ok(Server { listener, state, pool: pool.max(1) })
+    }
+
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    pub fn pool(&self) -> usize {
+        self.pool
+    }
+
+    pub fn handle(&self) -> Result<ServerHandle> {
+        Ok(ServerHandle { state: Arc::clone(&self.state), addr: self.local_addr()? })
+    }
+
+    /// Accept connections until [`ServerHandle::shutdown`], dispatching
+    /// them to the bounded worker pool. Blocks the calling thread.
+    pub fn serve(self) -> Result<ServeReport> {
+        // Bounded hand-off: when every worker is busy and the queue is
+        // full, the accept loop blocks in `send`, which backpressures to
+        // the kernel listen queue instead of buffering unboundedly.
+        let (tx, rx) = mpsc::sync_channel::<TcpStream>(self.pool * 2);
+        let rx = Arc::new(Mutex::new(rx));
+        std::thread::scope(|scope| {
+            for _ in 0..self.pool {
+                let rx = Arc::clone(&rx);
+                let state = Arc::clone(&self.state);
+                scope.spawn(move || loop {
+                    // Hold the receiver lock only for the dequeue.
+                    let conn = rx.lock().unwrap().recv();
+                    match conn {
+                        Ok(stream) => handle_connection(&state, stream),
+                        Err(_) => break, // accept loop ended
+                    }
+                });
+            }
+            for conn in self.listener.incoming() {
+                if self.state.stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = conn else { continue };
+                if tx.send(stream).is_err() {
+                    break;
+                }
+            }
+            drop(tx); // workers drain the queue, then exit
+        });
+        Ok(ServeReport {
+            requests: self.state.requests.load(Ordering::Relaxed),
+            errors: self.state.errors.load(Ordering::Relaxed),
+            pool: self.pool,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-connection handling
+// ---------------------------------------------------------------------------
+
+fn handle_connection(state: &ServeState, stream: TcpStream) {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(60)));
+    match handle_http(state, stream) {
+        Ok(served) => {
+            if served {
+                state.requests.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        Err(_) => {
+            state.errors.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Parse one request and answer it. Returns `false` for connections that
+/// never sent a request line (e.g. the shutdown wake-up connection).
+fn handle_http(state: &ServeState, mut stream: TcpStream) -> Result<bool> {
+    use std::io::{BufRead, BufReader, Read};
+    // Bound how much request-line + header data one connection can make
+    // us buffer: `read_line` grows its String until a newline arrives,
+    // so an un-capped reader would let a newline-free byte stream grow a
+    // worker's memory without ever tripping the per-read timeout.
+    let mut reader = BufReader::new(stream.try_clone()?.take(16 * 1024));
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    if line.trim().is_empty() {
+        return Ok(false);
+    }
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let target = parts.next().unwrap_or("").to_string();
+    // Drain (and ignore) the request headers.
+    loop {
+        let mut h = String::new();
+        if reader.read_line(&mut h)? == 0 || h == "\r\n" || h == "\n" {
+            break;
+        }
+    }
+    if method != "GET" {
+        respond_json(&mut stream, 405, &err_json("only GET is supported"))?;
+        return Ok(true);
+    }
+    let path = target.split('?').next().unwrap_or("").to_string();
+    if let Err(e) = route(state, &mut stream, &path) {
+        // Route handlers answer their own 4xx; anything that *escapes* is
+        // an internal error. Best-effort 500 (the client may be gone).
+        let _ = respond_json(&mut stream, 500, &err_json(&format!("{e:#}")));
+        anyhow::bail!("internal error serving {path}: {e:#}");
+    }
+    Ok(true)
+}
+
+fn route(state: &ServeState, stream: &mut TcpStream, path: &str) -> Result<()> {
+    match path {
+        "/log" => {
+            let report = super::LogRequest.run(&state.repo)?;
+            return respond_json(stream, 200, &report.to_json());
+        }
+        "/stats" => return respond_json(stream, 200, &state.stats),
+        "/healthz" => return respond_json(stream, 200, &Json::obj().set("ok", true)),
+        _ => {}
+    }
+    if let Some(rest) = path.strip_prefix("/show/") {
+        let node = percent_decode(rest);
+        if state.repo.graph.idx(&node).is_err() {
+            return respond_json(stream, 404, &err_json(&format!("no node named `{node}`")));
+        }
+        let report = super::ShowRequest { node }.run(&state.repo)?;
+        return respond_json(stream, 200, &report.to_json());
+    }
+    if let Some(rest) = path.strip_prefix("/checkpoint/") {
+        return serve_checkpoint(state, stream, &percent_decode(rest));
+    }
+    if let Some(rest) = path.strip_prefix("/object/") {
+        return serve_object(state, stream, rest);
+    }
+    if let Some(rest) = path.strip_prefix("/diff/") {
+        let segs: Vec<&str> = rest.split('/').collect();
+        if segs.len() != 2 {
+            return respond_json(
+                stream,
+                400,
+                &err_json("diff wants exactly /diff/<a>/<b> (percent-encode `/` in names)"),
+            );
+        }
+        let (a, b) = (percent_decode(segs[0]), percent_decode(segs[1]));
+        let Some(zoo) = &state.zoo else {
+            return respond_json(stream, 503, &err_json(NO_MANIFEST));
+        };
+        if state.repo.graph.idx(&a).is_err() || state.repo.graph.idx(&b).is_err() {
+            return respond_json(stream, 404, &err_json("no such node"));
+        }
+        let report = super::DiffRequest { a, b }.run(&state.repo, zoo, &NativeKernel)?;
+        return respond_json(stream, 200, &report.to_json());
+    }
+    respond_json(stream, 404, &err_json(&format!("no route for `{path}`")))
+}
+
+const NO_MANIFEST: &str =
+    "server started without an artifacts manifest; arch-dependent endpoints are disabled";
+
+/// Stream a node's resolved checkpoint: the flat f32 parameter vector in
+/// layout order, little-endian — bit-exact with what `delta::load`
+/// reconstructs. Delta chains resolve through the server's shared cache,
+/// so concurrent readers of sibling models reuse common ancestors.
+fn serve_checkpoint(state: &ServeState, stream: &mut TcpStream, node: &str) -> Result<()> {
+    let Ok(n) = state.repo.graph.by_name(node) else {
+        return respond_json(stream, 404, &err_json(&format!("no node named `{node}`")));
+    };
+    let Some(sm) = &n.stored else {
+        return respond_json(
+            stream,
+            404,
+            &err_json(&format!("node `{node}` has no stored checkpoint")),
+        );
+    };
+    let Some(zoo) = &state.zoo else {
+        return respond_json(stream, 503, &err_json(NO_MANIFEST));
+    };
+    let ck = delta::load_with_cache(&state.repo.store, zoo, sm, &NativeKernel, &state.cache)?;
+    let body_len = ck.flat.len() * 4;
+    write_head(stream, 200, "application/octet-stream", body_len)?;
+    // Stream in bounded chunks rather than materializing one giant byte
+    // buffer next to the checkpoint.
+    const CHUNK: usize = 1 << 20; // 1 Mi f32 values (4 MiB) per write
+    for values in ck.flat.chunks(CHUNK) {
+        stream.write_all(&f32_to_bytes(values))?;
+    }
+    stream.flush()?;
+    Ok(())
+}
+
+/// Serve one stored object's exact bytes — byte-identical to
+/// `Store::get`, whichever pack or loose file holds it.
+fn serve_object(state: &ServeState, stream: &mut TcpStream, hex: &str) -> Result<()> {
+    let Ok(id) = ObjectId::from_hex(hex) else {
+        return respond_json(stream, 400, &err_json("object id must be 64 hex chars"));
+    };
+    if !state.repo.store.has(&id) {
+        return respond_json(stream, 404, &err_json(&format!("object {hex} not found")));
+    }
+    let bytes = state.repo.store.get(&id)?;
+    write_head(stream, 200, "application/octet-stream", bytes.len())?;
+    stream.write_all(&bytes)?;
+    stream.flush()?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// HTTP plumbing
+// ---------------------------------------------------------------------------
+
+fn status_reason(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        503 => "Service Unavailable",
+        _ => "Internal Server Error",
+    }
+}
+
+fn write_head(
+    stream: &mut TcpStream,
+    code: u16,
+    content_type: &str,
+    content_length: usize,
+) -> Result<()> {
+    write!(
+        stream,
+        "HTTP/1.1 {code} {}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {content_length}\r\nConnection: close\r\n\r\n",
+        status_reason(code)
+    )?;
+    Ok(())
+}
+
+fn respond_json(stream: &mut TcpStream, code: u16, body: &Json) -> Result<()> {
+    let text = body.to_string_pretty();
+    write_head(stream, code, "application/json", text.len())?;
+    stream.write_all(text.as_bytes())?;
+    stream.flush()?;
+    Ok(())
+}
+
+fn err_json(msg: &str) -> Json {
+    Json::obj().set("error", msg)
+}
+
+/// Minimal percent-decoding (`%2F` → `/`, `+` is *not* special — node
+/// names may legitimately contain it). Invalid escapes pass through
+/// verbatim.
+fn percent_decode(s: &str) -> String {
+    let bytes = s.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        if bytes[i] == b'%' {
+            if let Some(hex) = s.get(i + 1..i + 3) {
+                if let Ok(b) = u8::from_str_radix(hex, 16) {
+                    out.push(b);
+                    i += 3;
+                    continue;
+                }
+            }
+        }
+        out.push(bytes[i]);
+        i += 1;
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::percent_decode;
+
+    #[test]
+    fn percent_decoding() {
+        assert_eq!(percent_decode("g5%2Fbase-mlm"), "g5/base-mlm");
+        assert_eq!(percent_decode("plain"), "plain");
+        assert_eq!(percent_decode("a+b"), "a+b");
+        assert_eq!(percent_decode("bad%zz"), "bad%zz");
+        assert_eq!(percent_decode("trail%2"), "trail%2");
+        assert_eq!(percent_decode("%41%42"), "AB");
+    }
+}

@@ -83,8 +83,8 @@ impl ObjectId {
             bail!("object id must be 64 hex chars, got {}", s.len());
         }
         let mut out = [0u8; 32];
-        for i in 0..32 {
-            out[i] = u8::from_str_radix(&s[2 * i..2 * i + 2], 16)
+        for (i, byte) in out.iter_mut().enumerate() {
+            *byte = u8::from_str_radix(&s[2 * i..2 * i + 2], 16)
                 .map_err(|_| anyhow!("bad hex in object id"))?;
         }
         Ok(ObjectId(out))

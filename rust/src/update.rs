@@ -135,6 +135,12 @@ pub(crate) mod testutil {
         pub calls: Mutex<Vec<String>>,
     }
 
+    impl Default for MockExec {
+        fn default() -> Self {
+            Self::new()
+        }
+    }
+
     impl MockExec {
         pub fn new() -> MockExec {
             MockExec { calls: Mutex::new(Vec::new()) }
@@ -175,6 +181,12 @@ pub(crate) mod testutil {
     /// smuggled through the arch field suffix.
     pub struct MockStore {
         pub saved: Mutex<Vec<Checkpoint>>,
+    }
+
+    impl Default for MockStore {
+        fn default() -> Self {
+            Self::new()
+        }
     }
 
     impl MockStore {

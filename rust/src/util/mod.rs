@@ -13,6 +13,14 @@ pub mod proptest;
 pub mod rng;
 pub mod timing;
 
+/// Worker-count heuristic behind `--jobs auto` and `mgit serve` pool
+/// sizing: [`std::thread::available_parallelism`], falling back to `1`
+/// (serial — the always-correct choice) when the parallelism cannot be
+/// determined (restricted cgroups/sandboxes make the syscall fail).
+pub fn auto_jobs() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
 /// Format a byte count human-readably (e.g. `1.50 MiB`).
 pub fn human_bytes(n: u64) -> String {
     const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];

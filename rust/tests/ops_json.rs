@@ -1,0 +1,257 @@
+//! Golden tests for the typed operations API: `--json` reports must be
+//! byte-stable across runs, carry the documented fields, and map
+//! problems to nonzero CLI exits.
+
+use std::path::{Path, PathBuf};
+
+use mgit::checkpoint::{Checkpoint, ModelZoo};
+use mgit::delta::{self, CompressConfig, NativeKernel};
+use mgit::ops::{self, Report};
+use mgit::util::rng::Rng;
+
+const MANIFEST: &str = r#"{
+  "vocab": 16, "max_seq": 4, "n_classes": 2, "batch": 2,
+  "delta_chunk": 1024,
+  "special_tokens": {"cls": 14, "mask": 15, "ignore_label": -100},
+  "archs": {"t": {
+      "d_model": 4, "n_layers": 1, "n_heads": 1, "d_ff": 8,
+      "param_count": 4096,
+      "layout": [
+        {"name":"w.a","shape":[4096],"offset":0,"size":4096,"init":"normal"}
+      ],
+      "dag": {"nodes": [], "edges": []}
+  }},
+  "artifacts": {"t": {}},
+  "delta_kernels": {"quant": "q", "dequant": "d"}
+}"#;
+
+fn tmp_repo(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("mgit-ops-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn zoo() -> ModelZoo {
+    ModelZoo::from_json(&mgit::util::json::parse(MANIFEST).unwrap()).unwrap()
+}
+
+/// Build `m/v1 … m/v{versions}` as a delta chain through the library.
+fn build_chain(dir: &Path, zoo: &ModelZoo, versions: usize) {
+    let spec = zoo.arch("t").unwrap();
+    let mut repo = ops::Repo::open(dir).unwrap();
+    let root_ck = Checkpoint::init(spec, 1);
+    let (sm, _) = delta::store_raw(&repo.store, spec, &root_ck).unwrap();
+    let idx = repo.graph.add_node("m/v1", "t").unwrap();
+    repo.graph.node_mut(idx).stored = Some(sm.clone());
+    let mut prev = (root_ck, sm);
+    let mut prev_idx = idx;
+    for v in 1..versions as u64 {
+        let mut rng = Rng::new(v + 10);
+        let child = Checkpoint {
+            arch: prev.0.arch.clone(),
+            flat: prev.0.flat.iter().map(|&x| x + rng.normal_f32(0.0, 3e-4)).collect(),
+        };
+        let cand = delta::prepare_delta(
+            &repo.store,
+            spec,
+            &child,
+            spec,
+            &prev.0,
+            &prev.1,
+            CompressConfig::default(),
+            &NativeKernel,
+        )
+        .unwrap();
+        delta::commit(&repo.store, &cand).unwrap();
+        let name = format!("m/v{}", v + 1);
+        let n = repo.graph.add_node(&name, "t").unwrap();
+        repo.graph.node_mut(n).stored = Some(cand.model.clone());
+        repo.graph.add_version_edge(prev_idx, n).unwrap();
+        prev = (cand.checkpoint, cand.model);
+        prev_idx = n;
+    }
+    repo.save().unwrap();
+}
+
+fn cli(args: &[&str]) -> anyhow::Result<()> {
+    mgit::cli::run(args.iter().map(|s| s.to_string()).collect())
+}
+
+#[test]
+fn log_stats_fsck_json_byte_stable() {
+    let dir = tmp_repo("golden");
+    let z = zoo();
+    ops::Repo::init(&dir).unwrap();
+    build_chain(&dir, &z, 5);
+    // Repack so stats exercises the pack-generation listing too.
+    ops::RepackRequest::default().run(&mut ops::Repo::open(&dir).unwrap()).unwrap();
+
+    let snapshot = |what: &str| -> String {
+        let repo = ops::Repo::open(&dir).unwrap();
+        match what {
+            "log" => ops::LogRequest.run(&repo).unwrap().to_json().to_string_pretty(),
+            "stats" => ops::StatsRequest.run(&repo).unwrap().to_json().to_string_pretty(),
+            "fsck" => ops::FsckRequest.run(&repo).unwrap().to_json().to_string_pretty(),
+            _ => unreachable!(),
+        }
+    };
+    for what in ["log", "stats", "fsck"] {
+        let a = snapshot(what);
+        let b = snapshot(what);
+        assert_eq!(a, b, "{what} --json must be byte-stable across runs");
+    }
+
+    // Golden structure: the documented fields are present and sane.
+    let log = mgit::util::json::parse(&snapshot("log")).unwrap();
+    assert_eq!(log.req_arr("nodes").unwrap().len(), 5);
+    assert_eq!(log.req_usize("ver_edges").unwrap(), 4);
+    assert_eq!(log.req_usize("prov_edges").unwrap(), 0);
+    let first = &log.req_arr("nodes").unwrap()[0];
+    assert_eq!(first.req_str("name").unwrap(), "m/v1");
+    assert_eq!(first.get("stored").unwrap().as_bool(), Some(true));
+
+    let stats = mgit::util::json::parse(&snapshot("stats")).unwrap();
+    assert_eq!(stats.req_usize("objects").unwrap(), 5);
+    assert!(stats.req_usize("delta_objects").unwrap() >= 1);
+    assert!(!stats.req_arr("packs").unwrap().is_empty());
+    assert!(stats.req_f64("compression_ratio").unwrap() > 0.0);
+
+    let fsck = mgit::util::json::parse(&snapshot("fsck")).unwrap();
+    assert_eq!(fsck.get("ok").unwrap().as_bool(), Some(true));
+    assert!(fsck.req_arr("problems").unwrap().is_empty());
+    assert_eq!(fsck.req_usize("nodes").unwrap(), 5);
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn diff_json_byte_stable() {
+    let dir = tmp_repo("diff");
+    let z = zoo();
+    ops::Repo::init(&dir).unwrap();
+    build_chain(&dir, &z, 3);
+    let req = ops::DiffRequest { a: "m/v1".into(), b: "m/v2".into() };
+    let run = || {
+        let repo = ops::Repo::open(&dir).unwrap();
+        req.run(&repo, &z, &NativeKernel).unwrap().to_json().to_string_pretty()
+    };
+    let (a, b) = (run(), run());
+    assert_eq!(a, b, "diff --json must be byte-stable across runs");
+    let j = mgit::util::json::parse(&a).unwrap();
+    assert_eq!(j.req_str("a").unwrap(), "m/v1");
+    assert!(j.req_f64("value_distance").unwrap() >= 0.0);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn show_json_full_ids() {
+    let dir = tmp_repo("show");
+    let z = zoo();
+    ops::Repo::init(&dir).unwrap();
+    build_chain(&dir, &z, 2);
+    let repo = ops::Repo::open(&dir).unwrap();
+    let report = ops::ShowRequest { node: "m/v2".into() }.run(&repo).unwrap();
+    assert_eq!(report.name, "m/v2");
+    assert_eq!(report.params.len(), 1);
+    assert_eq!(report.params[0].1.len(), 64, "JSON carries full content ids");
+    assert!(ops::ShowRequest { node: "nope".into() }.run(&repo).is_err());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Satellite: fsck with corruption must exit nonzero from the CLI (with
+/// and without `--json`), and the typed report must carry the problems.
+#[test]
+fn fsck_corruption_exits_nonzero() {
+    let dir = tmp_repo("fsck-exit");
+    let d = dir.to_str().unwrap();
+    let z = zoo();
+    ops::Repo::init(&dir).unwrap();
+    build_chain(&dir, &z, 3);
+
+    // Destroy the chain base: the loose object file of m/v1's parameter.
+    let repo = ops::Repo::open(&dir).unwrap();
+    let id = repo.graph.by_name("m/v1").unwrap().stored.as_ref().unwrap().params[0].1;
+    let hex = id.hex();
+    let path = dir.join(".mgit/objects").join(&hex[..2]).join(&hex[2..]);
+    std::fs::remove_file(&path).unwrap();
+
+    let report = ops::FsckRequest.run(&ops::Repo::open(&dir).unwrap()).unwrap();
+    assert!(!report.problems.is_empty());
+    assert!(report.failure().unwrap().contains("fsck problems"));
+    assert!(report.problems.iter().any(|p| p.kind == "MISSING"));
+    assert!(report.problems.iter().any(|p| p.kind == "DANGLING"));
+
+    assert!(cli(&["fsck", "--dir", d]).is_err());
+    assert!(cli(&["fsck", "--dir", d, "--json"]).is_err());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Satellite: a corrupt `stats.json` is preserved as `stats.json.corrupt`
+/// instead of being silently reset.
+#[test]
+fn corrupt_stats_preserved() {
+    let dir = tmp_repo("stats-corrupt");
+    let z = zoo();
+    ops::Repo::init(&dir).unwrap();
+    build_chain(&dir, &z, 2);
+    let stats_path = dir.join(".mgit/stats.json");
+    assert!(stats_path.exists(), "build must have persisted counters");
+    std::fs::write(&stats_path, "{not json").unwrap();
+
+    assert_eq!(ops::Repo::load_stats(&dir), (0, 0, 0));
+    assert!(
+        dir.join(".mgit/stats.json.corrupt").exists(),
+        "corrupt stats must be preserved for inspection"
+    );
+    assert!(!stats_path.exists(), "the corrupt file was moved aside");
+    // A fresh load is a clean zero (no file), and stats still runs.
+    assert_eq!(ops::Repo::load_stats(&dir), (0, 0, 0));
+    ops::StatsRequest.run(&ops::Repo::open(&dir).unwrap()).unwrap();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Satellite: failing tests / bad packs surface through `Report::failure`
+/// so the CLI exits nonzero while still emitting the full typed report.
+#[test]
+fn report_failure_contracts() {
+    let passing = ops::TestReport { results: vec![], ran: 3, failed: 0 };
+    assert!(passing.failure().is_none());
+    let failing = ops::TestReport { results: vec![], ran: 3, failed: 2 };
+    assert_eq!(failing.failure().unwrap(), "2 test failures");
+
+    let bad_pack = ops::VerifyPackReport {
+        packs: vec![ops::PackCheck {
+            path: "p.pack".into(),
+            objects: 1,
+            structure_ok: false,
+            error: Some("checksum mismatch".into()),
+        }],
+        object_problems: vec![],
+        total_objects: 0,
+        checked: 0,
+        opaque: 0,
+    };
+    assert!(bad_pack.failure().unwrap().contains("1 problems"));
+    // JSON still renders the failing state.
+    let j = bad_pack.to_json();
+    assert_eq!(j.get("ok").unwrap().as_bool(), Some(false));
+}
+
+/// `--json` through the CLI surface: machine-readable output parses and
+/// the command still succeeds.
+#[test]
+fn cli_json_flag_smoke() {
+    let dir = tmp_repo("cli-json");
+    let d = dir.to_str().unwrap();
+    cli(&["init", "--dir", d, "--json"]).unwrap();
+    let z = zoo();
+    build_chain(&dir, &z, 2);
+    cli(&["log", "--dir", d, "--json"]).unwrap();
+    cli(&["stats", "--dir", d, "--json"]).unwrap();
+    cli(&["fsck", "--dir", d, "--json"]).unwrap();
+    cli(&["gc", "--dir", d, "--json"]).unwrap();
+    cli(&["repack", "--dir", d, "--json"]).unwrap();
+    cli(&["verify-pack", "--dir", d, "--json"]).unwrap();
+    std::fs::remove_dir_all(&dir).unwrap();
+}

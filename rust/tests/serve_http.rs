@@ -1,0 +1,223 @@
+//! Integration: the `mgit serve` HTTP front-end under concurrent load.
+//!
+//! Starts a server on an ephemeral port over a packed repository and
+//! hammers it from N concurrent clients: `/log` JSON plus
+//! `/checkpoint/<node>` tensor streams that must be bit-exact with what
+//! `delta::load` reconstructs, and `/object/<id>` bodies byte-identical
+//! to `Store::get`.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::{Path, PathBuf};
+
+use mgit::checkpoint::{Checkpoint, ModelZoo};
+use mgit::delta::{self, CompressConfig, NativeKernel};
+use mgit::ops::serve::Server;
+use mgit::ops::{self, Repo};
+use mgit::tensor::f32_to_bytes;
+use mgit::util::rng::Rng;
+
+const MANIFEST: &str = r#"{
+  "vocab": 16, "max_seq": 4, "n_classes": 2, "batch": 2,
+  "delta_chunk": 1024,
+  "special_tokens": {"cls": 14, "mask": 15, "ignore_label": -100},
+  "archs": {"t": {
+      "d_model": 4, "n_layers": 1, "n_heads": 1, "d_ff": 8,
+      "param_count": 4096,
+      "layout": [
+        {"name":"w.a","shape":[4096],"offset":0,"size":4096,"init":"normal"}
+      ],
+      "dag": {"nodes": [], "edges": []}
+  }},
+  "artifacts": {"t": {}},
+  "delta_kernels": {"quant": "q", "dequant": "d"}
+}"#;
+
+const VERSIONS: usize = 6;
+const CLIENTS: usize = 8;
+
+fn tmp_repo(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("mgit-serve-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn build_chain(dir: &Path, zoo: &ModelZoo) {
+    let spec = zoo.arch("t").unwrap();
+    let mut repo = Repo::open(dir).unwrap();
+    let root_ck = Checkpoint::init(spec, 1);
+    let (sm, _) = delta::store_raw(&repo.store, spec, &root_ck).unwrap();
+    let idx = repo.graph.add_node("m/v1", "t").unwrap();
+    repo.graph.node_mut(idx).stored = Some(sm.clone());
+    let mut prev = (root_ck, sm);
+    let mut prev_idx = idx;
+    for v in 1..VERSIONS as u64 {
+        let mut rng = Rng::new(v + 30);
+        let child = Checkpoint {
+            arch: prev.0.arch.clone(),
+            flat: prev.0.flat.iter().map(|&x| x + rng.normal_f32(0.0, 3e-4)).collect(),
+        };
+        let cand = delta::prepare_delta(
+            &repo.store,
+            spec,
+            &child,
+            spec,
+            &prev.0,
+            &prev.1,
+            CompressConfig::default(),
+            &NativeKernel,
+        )
+        .unwrap();
+        delta::commit(&repo.store, &cand).unwrap();
+        let name = format!("m/v{}", v + 1);
+        let n = repo.graph.add_node(&name, "t").unwrap();
+        repo.graph.node_mut(n).stored = Some(cand.model.clone());
+        repo.graph.add_version_edge(prev_idx, n).unwrap();
+        prev = (cand.checkpoint, cand.model);
+        prev_idx = n;
+    }
+    repo.save().unwrap();
+}
+
+/// Minimal HTTP/1.1 GET: returns (status code, body bytes).
+fn http_get(addr: SocketAddr, path: &str) -> (u16, Vec<u8>) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    write!(s, "GET {path} HTTP/1.1\r\nHost: localhost\r\nConnection: close\r\n\r\n").unwrap();
+    s.flush().unwrap();
+    let mut buf = Vec::new();
+    s.read_to_end(&mut buf).unwrap();
+    let head_end =
+        buf.windows(4).position(|w| w == b"\r\n\r\n").expect("malformed response") + 4;
+    let head = String::from_utf8_lossy(&buf[..head_end]).into_owned();
+    let status: u16 = head
+        .split_whitespace()
+        .nth(1)
+        .and_then(|c| c.parse().ok())
+        .expect("bad status line");
+    (status, buf[head_end..].to_vec())
+}
+
+#[test]
+fn serve_concurrent_bit_exact() {
+    let dir = tmp_repo("conc");
+    let zoo = ModelZoo::from_json(&mgit::util::json::parse(MANIFEST).unwrap()).unwrap();
+    Repo::init(&dir).unwrap();
+    build_chain(&dir, &zoo);
+    // Repack so the server reads through the pack/mmap tier, not loose
+    // files.
+    ops::RepackRequest::default().run(&mut Repo::open(&dir).unwrap()).unwrap();
+
+    // Library-side ground truth: every node's resolved flat checkpoint.
+    let repo = Repo::open(&dir).unwrap();
+    let mut expected: HashMap<String, Vec<u8>> = HashMap::new();
+    for node in &repo.graph.nodes {
+        let ck = delta::load(
+            &repo.store,
+            &zoo,
+            node.stored.as_ref().unwrap(),
+            &NativeKernel,
+        )
+        .unwrap();
+        expected.insert(node.name.clone(), f32_to_bytes(&ck.flat));
+    }
+    let object_id = repo.graph.by_name("m/v1").unwrap().stored.as_ref().unwrap().params[0].1;
+    let object_bytes = repo.store.get(&object_id).unwrap();
+
+    let server = Server::bind(Repo::open(&dir).unwrap(), Some(zoo.clone()), 0, CLIENTS)
+        .unwrap();
+    let addr = server.local_addr().unwrap();
+    let handle = server.handle().unwrap();
+    let srv = std::thread::spawn(move || server.serve().unwrap());
+
+    // ≥ 8 concurrent readers, each fetching /log and every node's
+    // checkpoint twice; every byte must match the library reconstruction.
+    let mut clients = Vec::new();
+    for _ in 0..CLIENTS {
+        let expected = expected.clone();
+        clients.push(std::thread::spawn(move || {
+            for _round in 0..2 {
+                let (code, body) = http_get(addr, "/log");
+                assert_eq!(code, 200);
+                let log = mgit::util::json::parse(&String::from_utf8(body).unwrap()).unwrap();
+                assert_eq!(log.req_arr("nodes").unwrap().len(), VERSIONS);
+                for (name, want) in &expected {
+                    let (code, body) = http_get(addr, &format!("/checkpoint/{name}"));
+                    assert_eq!(code, 200, "checkpoint {name}");
+                    assert_eq!(&body, want, "checkpoint {name} not bit-exact");
+                }
+            }
+        }));
+    }
+    for c in clients {
+        c.join().unwrap();
+    }
+
+    // /object/<id> is byte-identical to Store::get.
+    let (code, body) = http_get(addr, &format!("/object/{}", object_id.hex()));
+    assert_eq!(code, 200);
+    assert_eq!(body, object_bytes);
+
+    // JSON endpoints + routing edges.
+    let (code, body) = http_get(addr, "/stats");
+    assert_eq!(code, 200);
+    let stats = mgit::util::json::parse(&String::from_utf8(body).unwrap()).unwrap();
+    assert_eq!(stats.req_usize("objects").unwrap(), VERSIONS);
+
+    let (code, body) = http_get(addr, "/show/m%2Fv1");
+    assert_eq!(code, 200);
+    let show = mgit::util::json::parse(&String::from_utf8(body).unwrap()).unwrap();
+    assert_eq!(show.req_str("name").unwrap(), "m/v1");
+    // Unencoded slashes also reach single-name endpoints.
+    let (code, _) = http_get(addr, "/show/m/v1");
+    assert_eq!(code, 200);
+
+    let (code, body) = http_get(addr, "/diff/m%2Fv1/m%2Fv2");
+    assert_eq!(code, 200);
+    let diff = mgit::util::json::parse(&String::from_utf8(body).unwrap()).unwrap();
+    assert!(diff.req_f64("value_distance").unwrap() >= 0.0);
+
+    let (code, _) = http_get(addr, "/healthz");
+    assert_eq!(code, 200);
+    let (code, _) = http_get(addr, "/no-such-route");
+    assert_eq!(code, 404);
+    let (code, _) = http_get(addr, "/checkpoint/ghost");
+    assert_eq!(code, 404);
+    let (code, _) = http_get(addr, "/object/zzzz");
+    assert_eq!(code, 400);
+    let (code, _) = http_get(addr, "/diff/only-one");
+    assert_eq!(code, 400);
+
+    handle.shutdown();
+    let report = srv.join().unwrap();
+    let min = (CLIENTS * 2 * (VERSIONS + 1)) as u64;
+    assert!(report.requests >= min, "served {} < {min}", report.requests);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Without a manifest the graph/store endpoints still work; the
+/// arch-dependent ones answer 503.
+#[test]
+fn serve_without_manifest_degrades() {
+    let dir = tmp_repo("nozoo");
+    let zoo = ModelZoo::from_json(&mgit::util::json::parse(MANIFEST).unwrap()).unwrap();
+    Repo::init(&dir).unwrap();
+    build_chain(&dir, &zoo);
+
+    let server = Server::bind(Repo::open(&dir).unwrap(), None, 0, 2).unwrap();
+    let addr = server.local_addr().unwrap();
+    let handle = server.handle().unwrap();
+    let srv = std::thread::spawn(move || server.serve().unwrap());
+
+    let (code, _) = http_get(addr, "/log");
+    assert_eq!(code, 200);
+    let (code, _) = http_get(addr, "/checkpoint/m%2Fv1");
+    assert_eq!(code, 503);
+    let (code, _) = http_get(addr, "/diff/m%2Fv1/m%2Fv2");
+    assert_eq!(code, 503);
+
+    handle.shutdown();
+    srv.join().unwrap();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
