@@ -7,8 +7,37 @@ use mgit::runtime::Runtime;
 use mgit::workloads::Scale;
 
 pub fn runtime() -> Runtime {
+    runtime_opt().expect("run `make artifacts` first")
+}
+
+/// Like [`runtime`], but `None` when the AOT artifacts manifest is
+/// absent — benches with artifact-free sections use this to skip their
+/// runtime-dependent parts cleanly (CI runs without artifacts).
+pub fn runtime_opt() -> Option<Runtime> {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    Runtime::new(&dir).expect("run `make artifacts` first")
+    Runtime::new(&dir).ok()
+}
+
+/// Append one measurement row (`{"bench":…,"metric":…,"value":…}` per
+/// line) to the file named by `$MGIT_BENCH_JSON`. No-op when the
+/// variable is unset. CI's bench-smoke job points it at `BENCH_pr.json`
+/// and uploads the file, so every PR leaves a perf datapoint.
+pub fn bench_json(bench: &str, metric: &str, value: f64) {
+    let Ok(path) = std::env::var("MGIT_BENCH_JSON") else { return };
+    if path.is_empty() {
+        return;
+    }
+    if !value.is_finite() {
+        // inf/NaN would render as invalid JSON and break artifact
+        // consumers; a degenerate measurement is better dropped.
+        eprintln!("bench_json: skipping non-finite {bench}/{metric}");
+        return;
+    }
+    use std::io::Write;
+    let file = std::fs::OpenOptions::new().create(true).append(true).open(&path);
+    if let Ok(mut f) = file {
+        let _ = writeln!(f, "{{\"bench\":\"{bench}\",\"metric\":\"{metric}\",\"value\":{value}}}");
+    }
 }
 
 /// MGIT_SCALE=small shrinks every workload (CI); default is paper shape.

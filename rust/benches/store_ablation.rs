@@ -30,7 +30,13 @@ fn main() -> anyhow::Result<()> {
     );
     let q = NativeKernel.quantize(&parent, &child, 1e-4)?;
     let payload = i32_to_bytes(&q);
-    for codec in [Codec::Rle, Codec::Deflate, Codec::Zstd] {
+    #[cfg(feature = "zstd")]
+    let codecs = [Codec::Rle, Codec::Deflate, Codec::Zstd];
+    #[cfg(not(feature = "zstd"))]
+    let codecs = [Codec::Rle, Codec::Deflate];
+    #[cfg(not(feature = "zstd"))]
+    println!("(zstd codec skipped: rebuild with --features zstd)");
+    for codec in codecs {
         let enc = codec.compress(&payload)?;
         let cs = BenchStats::measure("c", 1, 5, || {
             let _ = codec.compress(&payload).unwrap();

@@ -1,5 +1,7 @@
 //! Table 4: compression ratio, max/avg accuracy delta and per-model
-//! runtime for every compression configuration × lineage graph.
+//! runtime for every compression configuration × lineage graph — plus
+//! an artifact-free **pack framing** section comparing Raw vs Zstd
+//! outer (whole-pack) compression on a synthetic delta-chain store.
 //!
 //! Configurations (paper names; DEFLATE substitutes LZMA — DESIGN.md §2):
 //!   MGit (LZMA + Hash)      delta-compressed, dictionary codec
@@ -7,16 +9,22 @@
 //!   MGit (Hash)             content hashing only (lossless)
 //!   Full                    quantize whole model + dictionary codec
 //!   Full w/o quantization   dictionary codec on raw parameters
+//!
+//! The framing section always runs (no artifacts needed; zstd numbers
+//! need `--features zstd`); the per-graph table needs the AOT artifacts
+//! manifest and skips cleanly without it.
 
 mod common;
 
 use std::collections::HashMap;
 
 use mgit::checkpoint::Checkpoint;
-use mgit::delta::{self, Codec, CompressConfig};
+use mgit::delta::{self, Codec, CompressConfig, DeltaKernel, NativeKernel};
 use mgit::registry::{CreationSpec, Objective};
 use mgit::runtime::Runtime;
+use mgit::store::pack::{repack, PackFraming, RepackConfig, RepackMode};
 use mgit::store::Store;
+use mgit::util::human_bytes;
 use mgit::util::timing::Timer;
 use mgit::workloads::{self, PersistMode, Scale, Workload};
 
@@ -53,8 +61,112 @@ enum Mode {
     Full { quantize: bool },
 }
 
+/// Raw-vs-Zstd pack framing on a synthetic store: a raw f32 base plus a
+/// chain of deflate-compressed quantized deltas, repacked `--full` once
+/// per framing. Reports on-disk pack sizes and the size ratio.
+fn pack_framing_section() -> anyhow::Result<()> {
+    use mgit::store::format::TensorObject;
+    use mgit::store::hash_tensor;
+    use mgit::tensor::{f32_to_bytes, i32_to_bytes, DType};
+    use mgit::util::rng::Rng;
+
+    println!("Pack framing — outer whole-pack compression (Raw vs Zstd)");
+    common::hr();
+    let dir = std::env::temp_dir().join(format!("mgit-t4-framing-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = Store::open_packed(&dir)?;
+
+    // A 24-link chain over a 16 Ki-f32 base (same object shapes the
+    // storage paper sections use).
+    let mut rng = Rng::new(42);
+    let len = 16 * 1024usize;
+    let eps = 1e-4f32;
+    let codec = Codec::Deflate;
+    let base: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let base_payload = f32_to_bytes(&base);
+    let base_id = hash_tensor(DType::F32, &[len], &base_payload);
+    store.put(
+        base_id,
+        &TensorObject::Raw { dtype: DType::F32, shape: vec![len], payload: base_payload }
+            .encode(),
+    )?;
+    let (mut prev, mut prev_id) = (base, base_id);
+    let mut tip = base_id;
+    for _ in 0..24 {
+        let child: Vec<f32> = prev.iter().map(|&p| p + rng.normal_f32(0.0, 3e-4)).collect();
+        let q = NativeKernel.quantize(&prev, &child, eps)?;
+        let rec = NativeKernel.dequantize(&prev, &q, eps)?;
+        let payload = f32_to_bytes(&rec);
+        let id = hash_tensor(DType::F32, &[len], &payload);
+        let obj = TensorObject::Delta {
+            dtype: DType::F32,
+            shape: vec![len],
+            parent: prev_id,
+            eps,
+            codec: codec.code(),
+            n_quant: len,
+            grid: false,
+            payload: codec.compress(&i32_to_bytes(&q))?,
+        };
+        store.put(id, &obj.encode())?;
+        (prev, prev_id) = (rec, id);
+        tip = id;
+    }
+    drop(store);
+
+    let mut sizes: Vec<(PackFraming, u64)> = Vec::new();
+    for framing in [PackFraming::Raw, PackFraming::Zstd] {
+        if framing == PackFraming::Zstd && !cfg!(feature = "zstd") {
+            println!("zstd framing skipped (rebuild with --features zstd)");
+            continue;
+        }
+        let mut store = Store::open_packed(&dir)?;
+        let cfg = RepackConfig {
+            max_chain_depth: 32,
+            mode: RepackMode::Full,
+            framing,
+            ..RepackConfig::default()
+        };
+        let t = Timer::start();
+        let report = repack(&mut store, &[tip], &cfg, &NativeKernel)?;
+        let size = std::fs::metadata(report.pack_path.as_ref().unwrap())?.len();
+        println!(
+            "{:<5} framing: pack {:>10} on disk ({} objects, repack {})",
+            framing.name(),
+            human_bytes(size),
+            report.packed + report.retained_packed,
+            mgit::util::human_secs(t.elapsed_secs()),
+        );
+        common::bench_json(
+            "table4_compression",
+            &format!("pack_size_{}_bytes", framing.name()),
+            size as f64,
+        );
+        sizes.push((framing, size));
+    }
+    if let (Some((_, raw)), Some((_, zstd))) = (
+        sizes.iter().find(|(f, _)| *f == PackFraming::Raw),
+        sizes.iter().find(|(f, _)| *f == PackFraming::Zstd),
+    ) {
+        let ratio = *raw as f64 / (*zstd).max(1) as f64;
+        println!("raw/zstd pack-size ratio: {ratio:.3}x");
+        common::bench_json("table4_compression", "raw_vs_zstd_pack_ratio", ratio);
+    }
+    common::hr();
+    std::fs::remove_dir_all(&dir)?;
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
-    let rt = common::runtime();
+    pack_framing_section()?;
+
+    let Some(rt) = common::runtime_opt() else {
+        println!(
+            "Table 4 skipped: no AOT artifacts manifest (run `make artifacts` \
+             to enable the per-graph compression table)"
+        );
+        return Ok(());
+    };
     let scale = common::scale();
     let zoo = rt.zoo().clone();
 

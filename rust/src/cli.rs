@@ -15,6 +15,7 @@
 //! mgit merge <base> <m1> <m2> [--out name]
 //! mgit gc                        # sweep unreachable loose objects
 //! mgit repack [--max-chain-depth N] [--prune] [--full|--incremental]
+//!             [--framing raw|zstd]
 //!                                # pack new loose objects (incremental,
 //!                                # the default) or rewrite every pack
 //! mgit verify-pack               # pack checksums + content hashes
@@ -157,11 +158,12 @@ fn jobs_flag(args: &Args, name: &str, default: usize) -> Result<usize> {
 }
 
 fn repack_request(args: &Args) -> Result<ops::RepackRequest> {
-    use crate::store::pack::RepackMode;
+    use crate::store::pack::{PackFraming, RepackMode};
     if args.has("full") && args.has("incremental") {
         bail!("--full and --incremental are mutually exclusive");
     }
     let mode = if args.has("full") { RepackMode::Full } else { RepackMode::Incremental };
+    let framing = PackFraming::parse(args.flag_or("framing", "raw"))?;
     // Generation-aware escalation defaults (ROADMAP follow-up): after 16
     // generations or once half the sealed pack bytes are garbage, an
     // incremental run is promoted to a full rewrite. `0` disables either.
@@ -183,6 +185,7 @@ fn repack_request(args: &Args) -> Result<ops::RepackRequest> {
         mode,
         max_generations,
         max_dead_ratio,
+        framing,
     })
 }
 
@@ -231,7 +234,10 @@ usage: mgit <command> [args] [--flags]
   gc                         sweep unreachable loose objects
   repack                     pack new loose objects into a fresh pack
                              (--incremental, the default; --full rewrites
-                             every pack) [--max-chain-depth 8] [--prune]
+                             every pack and upgrades v1 packs to v2)
+                             [--max-chain-depth 8] [--prune]
+                             [--framing raw|zstd] (outer whole-pack
+                             compression; zstd needs --features zstd)
                              [--auto-full-gens 16] [--auto-full-dead 0.5]
                              (incremental auto-promotes to a full rewrite
                              past either threshold; 0 disables; the dead-

@@ -17,7 +17,11 @@ pub enum Codec {
     Rle,
     /// DEFLATE/zlib (stands in for the paper's LZMA).
     Deflate,
-    /// zstd (ablation).
+    /// zstd (ablation). The variant always exists — codec ids are
+    /// persisted, so decoding must be able to *name* it — but actually
+    /// compressing/decompressing with it needs the feature-gated `zstd`
+    /// dependency (`--features zstd`); without it both operations return
+    /// a descriptive error.
     Zstd,
 }
 
@@ -69,7 +73,10 @@ impl Codec {
                 enc.write_all(data)?;
                 Ok(enc.finish()?)
             }
+            #[cfg(feature = "zstd")]
             Codec::Zstd => Ok(zstd::bulk::compress(data, 6)?),
+            #[cfg(not(feature = "zstd"))]
+            Codec::Zstd => Err(no_zstd()),
         }
     }
 
@@ -83,7 +90,10 @@ impl Codec {
                 dec.read_to_end(&mut out)?;
                 out
             }
+            #[cfg(feature = "zstd")]
             Codec::Zstd => zstd::bulk::decompress(data, expected_len.max(1))?,
+            #[cfg(not(feature = "zstd"))]
+            Codec::Zstd => return Err(no_zstd()),
         };
         if out.len() != expected_len {
             bail!(
@@ -97,22 +107,44 @@ impl Codec {
     }
 }
 
+#[cfg(not(feature = "zstd"))]
+fn no_zstd() -> anyhow::Error {
+    anyhow!(
+        "the zstd codec is not compiled into this build \
+         (rebuild with --features zstd)"
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::util::proptest::{check, gen, prop_assert};
 
+    /// Codecs usable for actual (de)compression in this build. `Zstd`
+    /// always names/parses (ids are persisted) but only compresses with
+    /// the `zstd` feature.
+    #[cfg(feature = "zstd")]
     const ALL: [Codec; 3] = [Codec::Rle, Codec::Deflate, Codec::Zstd];
+    #[cfg(not(feature = "zstd"))]
+    const ALL: [Codec; 2] = [Codec::Rle, Codec::Deflate];
 
     #[test]
     fn codes_roundtrip() {
-        for c in ALL {
+        for c in [Codec::Rle, Codec::Deflate, Codec::Zstd] {
             assert_eq!(Codec::from_code(c.code()).unwrap(), c);
             assert_eq!(Codec::parse(c.name()).unwrap(), c);
         }
         assert_eq!(Codec::parse("LZMA").unwrap(), Codec::Deflate);
         assert!(Codec::parse("brotli").is_err());
         assert!(Codec::from_code(9).is_err());
+    }
+
+    #[cfg(not(feature = "zstd"))]
+    #[test]
+    fn zstd_codec_errors_without_feature() {
+        let err = Codec::Zstd.compress(b"data").unwrap_err().to_string();
+        assert!(err.contains("--features zstd"), "got: {err}");
+        assert!(Codec::Zstd.decompress(b"data", 4).is_err());
     }
 
     #[test]

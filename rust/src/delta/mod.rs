@@ -775,13 +775,18 @@ pub fn reencode_exact(
 }
 
 /// Length of the delta chain from `id` up to its first raw ancestor.
+///
+/// Chain discovery is metadata-only ([`Store::object_meta`]): links
+/// sealed in v2 packs are followed straight from the pack index without
+/// reading the objects at all; loose and v1-packed links cost a
+/// header-only parse. No payload is ever decoded.
 pub fn chain_depth(store: &Store, id: ObjectId) -> Result<usize> {
     let mut depth = 0;
     let mut cur = id;
     loop {
-        match TensorObject::decode(&store.get(&cur)?)? {
-            TensorObject::Raw { .. } => return Ok(depth),
-            TensorObject::Delta { parent, .. } => {
+        match store.object_meta(&cur)?.parent {
+            None => return Ok(depth),
+            Some(parent) => {
                 depth += 1;
                 cur = parent;
                 if depth > 10_000 {

@@ -37,6 +37,12 @@ pub struct FsckReport {
     pub orphaned: Vec<(String, Vec<String>)>,
     /// (loose, packed, pack count) when the store is pack-capable.
     pub pack_counts: Option<(usize, usize, usize)>,
+    /// Objects whose delta-parent edges were answered from pack-index v2
+    /// metadata — zero object reads, zero payload decodes.
+    pub meta_scanned: usize,
+    /// Objects that needed a byte read + header parse (loose staging
+    /// copies, v1-pack copies).
+    pub byte_scanned: usize,
 }
 
 impl FsckRequest {
@@ -63,18 +69,25 @@ impl FsckRequest {
         }
         // Cross-pack delta-chain integrity: every delta parent must
         // resolve somewhere in the store, whichever pack (or loose file)
-        // holds it. Unreadable objects are recorded and the scan
-        // continues — fsck must report corruption, not die on it.
-        // Orphaned parents are also collected together so a repair pass
-        // has the full set in one place. Ids are scanned in sorted order
-        // so the report is deterministic.
+        // holds it. The scan is metadata-only: objects sealed in v2
+        // packs contribute their parent edge straight from the index
+        // (no object read — `verify-pack`/`BAD_PACK` below cross-checks
+        // that the index metadata matches the stored headers); loose and
+        // v1-packed objects cost a header parse, never a payload decode.
+        // Unreadable objects are recorded and the scan continues — fsck
+        // must report corruption, not die on it. Orphaned parents are
+        // also collected together so a repair pass has the full set in
+        // one place. Ids are scanned in sorted order so the report is
+        // deterministic.
         let mut ids = repo.store.list()?;
         ids.sort();
         let mut orphaned: std::collections::BTreeMap<ObjectId, Vec<ObjectId>> =
             Default::default();
+        let mut meta_scanned = 0usize;
+        let mut byte_scanned = 0usize;
         for id in ids {
-            let bytes = match repo.store.get(&id) {
-                Ok(b) => b,
+            let meta = match repo.store.object_meta(&id) {
+                Ok(m) => m,
                 Err(e) => {
                     problems.push(FsckProblem {
                         kind: "UNREADABLE",
@@ -83,19 +96,22 @@ impl FsckRequest {
                     continue;
                 }
             };
-            if let Ok(obj) = crate::store::format::TensorObject::decode(&bytes) {
-                for parent in obj.refs() {
-                    if !repo.store.has(&parent) {
-                        problems.push(FsckProblem {
-                            kind: "DANGLING",
-                            detail: format!(
-                                "delta parent {} (referenced by {})",
-                                parent.short(),
-                                id.short()
-                            ),
-                        });
-                        orphaned.entry(parent).or_default().push(id);
-                    }
+            if meta.from_index {
+                meta_scanned += 1;
+            } else {
+                byte_scanned += 1;
+            }
+            if let Some(parent) = meta.parent {
+                if !repo.store.has(&parent) {
+                    problems.push(FsckProblem {
+                        kind: "DANGLING",
+                        detail: format!(
+                            "delta parent {} (referenced by {})",
+                            parent.short(),
+                            id.short()
+                        ),
+                    });
+                    orphaned.entry(parent).or_default().push(id);
                 }
             }
         }
@@ -119,7 +135,14 @@ impl FsckRequest {
                 (parent.hex(), children.iter().map(|c| c.hex()).collect())
             })
             .collect();
-        Ok(FsckReport { nodes: repo.graph.len(), problems, orphaned, pack_counts })
+        Ok(FsckReport {
+            nodes: repo.graph.len(),
+            problems,
+            orphaned,
+            pack_counts,
+            meta_scanned,
+            byte_scanned,
+        })
     }
 }
 
@@ -144,6 +167,8 @@ impl Report for FsckReport {
             .set("nodes", self.nodes)
             .set("problems", Json::Arr(problems))
             .set("orphaned_delta_parents", Json::Arr(orphaned))
+            .set("meta_scanned", self.meta_scanned)
+            .set("byte_scanned", self.byte_scanned)
             .set("ok", self.problems.is_empty());
         if let Some((loose, packed, packs)) = self.pack_counts {
             j = j.set("loose", loose).set("packed", packed).set("pack_count", packs);
@@ -171,6 +196,10 @@ pub struct VerifyPackRequest;
 pub struct PackCheck {
     pub path: String,
     pub objects: usize,
+    /// Pack format version (1 = legacy, 2 = framed + index metadata).
+    pub version: u8,
+    /// Outer framing (`raw`/`zstd`).
+    pub framing: &'static str,
     pub structure_ok: bool,
     pub error: Option<String>,
 }
@@ -207,6 +236,8 @@ impl VerifyPackRequest {
                     packs.push(PackCheck {
                         path: p.path.display().to_string(),
                         objects: p.object_count(),
+                        version: p.version,
+                        framing: p.framing.name(),
                         structure_ok: true,
                         error: None,
                     });
@@ -215,6 +246,8 @@ impl VerifyPackRequest {
                     packs.push(PackCheck {
                         path: p.path.display().to_string(),
                         objects: p.object_count(),
+                        version: p.version,
+                        framing: p.framing.name(),
                         structure_ok: false,
                         error: Some(format!("{e:#}")),
                     });
@@ -343,6 +376,8 @@ impl Report for VerifyPackReport {
                 Json::obj()
                     .set("path", p.path.as_str())
                     .set("objects", p.objects)
+                    .set("version", p.version as usize)
+                    .set("framing", p.framing)
                     .set("structure_ok", p.structure_ok)
                     .set(
                         "error",

@@ -5,7 +5,7 @@ use anyhow::Result;
 use crate::checkpoint::{Checkpoint, ModelZoo};
 use crate::delta::{self, CompressConfig, DeltaKernel, NativeKernel};
 use crate::lineage::traversal;
-use crate::store::pack::{RepackConfig, RepackMode};
+use crate::store::pack::{PackFraming, RepackConfig, RepackMode};
 use crate::util::json::Json;
 use crate::util::timing::Timer;
 
@@ -29,6 +29,9 @@ pub struct RepackRequest {
     /// Promote an incremental run to a full rewrite once this fraction
     /// of sealed pack bytes is dead (None disables; needs `prune`).
     pub max_dead_ratio: Option<f64>,
+    /// Outer framing of the pack this run writes (`--framing raw|zstd`;
+    /// zstd needs the feature-gated dependency).
+    pub framing: PackFraming,
 }
 
 impl Default for RepackRequest {
@@ -39,6 +42,7 @@ impl Default for RepackRequest {
             mode: RepackMode::Incremental,
             max_generations: Some(16),
             max_dead_ratio: Some(0.5),
+            framing: PackFraming::Raw,
         }
     }
 }
@@ -60,6 +64,8 @@ impl RepackRequest {
             mode: self.mode,
             max_generations: self.max_generations,
             max_dead_ratio: self.max_dead_ratio,
+            framing: self.framing,
+            ..RepackConfig::default()
         };
         let roots = repo.graph.object_roots();
         let t = Timer::start();
@@ -83,10 +89,13 @@ impl Report for RepackReport {
         let p = &self.pack;
         Json::obj()
             .set("mode", self.mode_label.as_str())
+            .set("framing", p.framing.name())
             .set("packed", p.packed)
             .set("retained_packed", p.retained_packed)
             .set("carried_dead", p.carried_dead)
             .set("dead_ratio", p.dead_ratio)
+            .set("mark_payload_decodes", p.mark_payload_decodes)
+            .set("mark_meta_fallback", p.mark_meta_fallback)
             .set("packs_before", p.packs_before)
             .set("packs_after", p.packs_after)
             .set("max_depth_before", p.max_depth_before)

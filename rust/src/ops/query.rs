@@ -163,6 +163,16 @@ pub struct PackGeneration {
     pub generation: usize,
     pub objects: usize,
     pub bytes: u64,
+    /// Pack format version (1 = legacy, 2 = framed + index metadata).
+    pub version: u8,
+    /// Outer framing (`raw`/`zstd`).
+    pub framing: &'static str,
+    /// Deepest delta chain recorded in this pack's index metadata at
+    /// pack time (`None` for v1 packs, which persist none) — read
+    /// straight from the index, no pack bytes touched. A high value on
+    /// an old generation is a hint that `repack --full` would shorten
+    /// chains.
+    pub max_depth: Option<u32>,
     pub name: String,
 }
 
@@ -193,23 +203,24 @@ impl StatsRequest {
         let bytes = repo.store.stored_bytes()?;
         let mut raw_bytes: u64 = 0;
         let mut delta_objs = 0usize;
-        // One decode pass feeds both the byte accounting and (via the
-        // parent map) the chain-depth histogram below.
+        // One header-parse pass (no payload decodes/decompression) feeds
+        // both the byte accounting and (via the parent map) the
+        // chain-depth histogram below. Logical bytes need each tensor's
+        // shape, which pack indexes don't persist, so this pass reads
+        // object bytes — but only parses their headers.
         let mut parents: std::collections::HashMap<ObjectId, Option<ObjectId>> =
             Default::default();
         for id in &objects {
-            let mut parent = None;
-            if let Ok(obj) =
-                crate::store::format::TensorObject::decode(&repo.store.get(id)?)
-            {
-                let numel: usize = obj.shape().iter().product();
+            let meta =
+                crate::store::format::TensorObject::decode_meta(&repo.store.get(id)?);
+            if let Some(shape) = &meta.shape {
+                let numel: usize = shape.iter().product();
                 raw_bytes += (numel * 4) as u64;
-                if let crate::store::format::TensorObject::Delta { parent: p, .. } = obj {
-                    delta_objs += 1;
-                    parent = Some(p);
-                }
             }
-            parents.insert(*id, parent);
+            if meta.kind == crate::store::format::ObjectKind::Delta {
+                delta_objs += 1;
+            }
+            parents.insert(*id, meta.parent);
         }
         let (loose, packed) = match repo.store.as_packed() {
             Some(ps) => ps.counts()?,
@@ -239,10 +250,23 @@ impl StatsRequest {
                         .file_name()
                         .map(|n| n.to_string_lossy().into_owned())
                         .unwrap_or_else(|| p.path.display().to_string());
+                    // v2 indexes carry a depth per entry; v1 carry none.
+                    let max_depth = (p.index.version == crate::store::pack::VERSION)
+                        .then(|| {
+                            p.index
+                                .entries
+                                .iter()
+                                .filter_map(|e| e.meta.map(|m| m.depth))
+                                .max()
+                                .unwrap_or(0)
+                        });
                     packs.push(PackGeneration {
                         generation,
                         objects: p.object_count(),
                         bytes: p.size_bytes(),
+                        version: p.version,
+                        framing: p.framing.name(),
+                        max_depth,
                         name,
                     });
                 }
@@ -323,6 +347,12 @@ impl Report for StatsReport {
                     .set("generation", p.generation)
                     .set("objects", p.objects)
                     .set("bytes", p.bytes)
+                    .set("version", p.version as usize)
+                    .set("framing", p.framing)
+                    .set(
+                        "max_depth",
+                        p.max_depth.map(|d| Json::from(d as usize)).unwrap_or(Json::Null),
+                    )
                     .set("name", p.name.as_str())
             })
             .collect();

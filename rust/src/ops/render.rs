@@ -92,6 +92,10 @@ impl fmt::Display for FsckReport {
         if let Some((loose, packed, packs)) = self.pack_counts {
             lines.push(format!("objects: {loose} loose / {packed} packed in {packs} packs"));
         }
+        lines.push(format!(
+            "chain scan: {} via index metadata, {} via header reads",
+            self.meta_scanned, self.byte_scanned
+        ));
         if self.problems.is_empty() {
             lines.push(format!(
                 "ok: {} nodes, all invariants hold, all objects present",
@@ -115,11 +119,18 @@ impl fmt::Display for StatsReport {
                 self.reader_kind.unwrap_or("unknown")
             ));
             for p in &self.packs {
+                let depth = p
+                    .max_depth
+                    .map(|d| format!("depth<={d}"))
+                    .unwrap_or_else(|| "depth=?".to_string());
                 lines.push(format!(
-                    "  gen {:<3} {:<6} objects  {:>10}  {}",
+                    "  gen {:<3} {:<6} objects  {:>10}  v{} {:<5} {:<10} {}",
                     p.generation,
                     p.objects,
                     human_bytes(p.bytes),
+                    p.version,
+                    p.framing,
+                    depth,
                     p.name
                 ));
             }
@@ -159,9 +170,10 @@ impl fmt::Display for VerifyPackReport {
         let mut lines = Vec::new();
         for p in &self.packs {
             match &p.error {
-                None => {
-                    lines.push(format!("pack {}: {} objects, structure ok", p.path, p.objects))
-                }
+                None => lines.push(format!(
+                    "pack {}: {} objects, v{} {}, structure ok",
+                    p.path, p.objects, p.version, p.framing
+                )),
                 Some(e) => lines.push(format!("BAD PACK {}: {e}", p.path)),
             }
         }
@@ -192,13 +204,19 @@ impl fmt::Display for RepackReport {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         let p = &self.pack;
         let mut lines = vec![format!(
-            "repacked {} objects ({} retained in old packs, {} carried dead) in {} [{}]",
+            "repacked {} objects ({} retained in old packs, {} carried dead) in {} [{}, \
+             {} framing]",
             p.packed,
             p.retained_packed,
             p.carried_dead,
             human_secs(self.elapsed_secs),
-            self.mode_label
+            self.mode_label,
+            p.framing.name()
         )];
+        lines.push(format!(
+            "mark:   {} payload decodes, {} metadata fallbacks (byte reads)",
+            p.mark_payload_decodes, p.mark_meta_fallback
+        ));
         if p.dead_ratio > 0.0 {
             lines.push(format!(
                 "garbage: {:.1}% of sealed pack bytes are unreachable",

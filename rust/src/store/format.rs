@@ -22,6 +22,8 @@
 //! recursively by [`crate::delta::resolve_tensor`] (or its thread-safe
 //! sibling [`crate::delta::resolve_tensor_shared`]).
 
+use std::cell::Cell;
+
 use anyhow::{bail, Result};
 
 use super::ObjectId;
@@ -29,6 +31,92 @@ use crate::tensor::DType;
 
 pub const MAGIC: &[u8; 4] = b"MGTF";
 pub const VERSION: u8 = 1;
+
+thread_local! {
+    /// Per-thread count of full [`TensorObject::decode`] calls — the
+    /// expensive path that copies (and later decompresses) payload
+    /// bytes. [`TensorObject::decode_meta`] does *not* count: it parses
+    /// the fixed-size header only. The repack mark phase and fsck's
+    /// orphan scan are asserted decode-free against this counter
+    /// (thread-local so concurrent tests can't pollute each other).
+    static PAYLOAD_DECODES: Cell<u64> = const { Cell::new(0) };
+}
+
+/// This thread's cumulative count of full payload decodes.
+pub fn payload_decodes() -> u64 {
+    PAYLOAD_DECODES.with(|c| c.get())
+}
+
+/// What a stored object is, determinable from its header alone.
+///
+/// Persisted in pack index v2 entries (do not renumber) so chain
+/// discovery — repack marking, fsck's orphan scan, `stats`' depth
+/// histogram — can walk delta-parent edges without touching pack
+/// payload bytes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ObjectKind {
+    /// MGTF raw tensor (chain base).
+    Raw,
+    /// MGTF delta against a parent tensor.
+    Delta,
+    /// Not an MGTF object (graph JSON, arbitrary blobs).
+    Opaque,
+}
+
+impl ObjectKind {
+    pub fn code(self) -> u8 {
+        match self {
+            ObjectKind::Raw => 0,
+            ObjectKind::Delta => 1,
+            ObjectKind::Opaque => 2,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Result<ObjectKind> {
+        match c {
+            0 => Ok(ObjectKind::Raw),
+            1 => Ok(ObjectKind::Delta),
+            2 => Ok(ObjectKind::Opaque),
+            _ => bail!("unknown object kind code {c}"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ObjectKind::Raw => "raw",
+            ObjectKind::Delta => "delta",
+            ObjectKind::Opaque => "opaque",
+        }
+    }
+}
+
+/// Header-only view of a stored object: everything chain discovery and
+/// byte accounting need, with the payload left untouched.
+///
+/// Produced by [`TensorObject::decode_meta`] (which parses the header of
+/// the object bytes) or reconstructed from a v2 pack index entry (in
+/// which case `shape`/`dtype` are `None` — the index does not persist
+/// them).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ObjectMeta {
+    pub kind: ObjectKind,
+    /// Delta-parent id; `None` for raw and opaque objects.
+    pub parent: Option<ObjectId>,
+    pub dtype: Option<DType>,
+    /// Tensor shape; `None` when the meta came from a pack index.
+    pub shape: Option<Vec<usize>>,
+    /// `true` when this answer came from pack-index v2 metadata (zero
+    /// object reads); `false` when the object bytes were read and
+    /// header-parsed.
+    pub from_index: bool,
+}
+
+impl ObjectMeta {
+    /// Meta for an object known only through a pack index entry.
+    pub fn from_index(kind: ObjectKind, parent: Option<ObjectId>) -> ObjectMeta {
+        ObjectMeta { kind, parent, dtype: None, shape: None, from_index: true }
+    }
+}
 
 /// Parsed object header + payload.
 #[derive(Debug, Clone, PartialEq)]
@@ -104,23 +192,15 @@ impl TensorObject {
     }
 
     pub fn decode(bytes: &[u8]) -> Result<TensorObject> {
+        PAYLOAD_DECODES.with(|c| c.set(c.get() + 1));
         let mut r = Reader { b: bytes, pos: 0 };
-        if r.take(4)? != MAGIC {
-            bail!("not an MGTF object");
-        }
-        let version = r.u8()?;
-        if version != VERSION {
-            bail!("unsupported MGTF version {version}");
-        }
-        let enc = r.u8()?;
-        let dtype = DType::from_code(r.u8()?)?;
-        let ndim = r.u8()? as usize;
-        let mut shape = Vec::with_capacity(ndim);
-        for _ in 0..ndim {
-            shape.push(r.u64()? as usize);
-        }
-        match enc {
-            0 => Ok(TensorObject::Raw { dtype, shape, payload: r.rest().to_vec() }),
+        let h = parse_header(&mut r)?;
+        match h.enc {
+            0 => Ok(TensorObject::Raw {
+                dtype: h.dtype,
+                shape: h.shape,
+                payload: r.rest().to_vec(),
+            }),
             1 | 2 => {
                 let mut parent = [0u8; 32];
                 parent.copy_from_slice(r.take(32)?);
@@ -128,18 +208,60 @@ impl TensorObject {
                 let codec = r.u8()?;
                 let n_quant = r.u64()? as usize;
                 Ok(TensorObject::Delta {
-                    dtype,
-                    shape,
+                    dtype: h.dtype,
+                    shape: h.shape,
                     parent: ObjectId(parent),
                     eps,
                     codec,
                     n_quant,
-                    grid: enc == 2,
+                    grid: h.enc == 2,
                     payload: r.rest().to_vec(),
                 })
             }
             other => bail!("unknown MGTF encoding {other}"),
         }
+    }
+
+    /// Parse only the header of `bytes`: kind, delta parent, dtype and
+    /// shape — no payload copy, no decompression, and no bump of the
+    /// [`payload_decodes`] counter. Shares [`parse_header`] with
+    /// [`TensorObject::decode`] so the two can never drift. Anything
+    /// that is not a well-formed MGTF header is reported as
+    /// [`ObjectKind::Opaque`] rather than an error (the store holds
+    /// opaque blobs by design).
+    pub fn decode_meta(bytes: &[u8]) -> ObjectMeta {
+        fn parse(bytes: &[u8]) -> Result<ObjectMeta> {
+            let mut r = Reader { b: bytes, pos: 0 };
+            let h = parse_header(&mut r)?;
+            match h.enc {
+                0 => Ok(ObjectMeta {
+                    kind: ObjectKind::Raw,
+                    parent: None,
+                    dtype: Some(h.dtype),
+                    shape: Some(h.shape),
+                    from_index: false,
+                }),
+                1 | 2 => {
+                    let mut parent = [0u8; 32];
+                    parent.copy_from_slice(r.take(32)?);
+                    Ok(ObjectMeta {
+                        kind: ObjectKind::Delta,
+                        parent: Some(ObjectId(parent)),
+                        dtype: Some(h.dtype),
+                        shape: Some(h.shape),
+                        from_index: false,
+                    })
+                }
+                _ => bail!("unknown encoding"),
+            }
+        }
+        parse(bytes).unwrap_or(ObjectMeta {
+            kind: ObjectKind::Opaque,
+            parent: None,
+            dtype: None,
+            shape: None,
+            from_index: false,
+        })
     }
 
     /// Outgoing object references (for GC).
@@ -149,6 +271,35 @@ impl TensorObject {
             TensorObject::Delta { parent, .. } => vec![*parent],
         }
     }
+}
+
+/// The fixed MGTF header fields shared by every encoding, parsed by
+/// [`parse_header`] — the single parser behind both
+/// [`TensorObject::decode`] and [`TensorObject::decode_meta`].
+struct Header {
+    enc: u8,
+    dtype: DType,
+    shape: Vec<usize>,
+}
+
+/// Parse magic, version, encoding byte, dtype and shape, leaving the
+/// reader positioned at the encoding-specific fields (delta parent, …).
+fn parse_header(r: &mut Reader<'_>) -> Result<Header> {
+    if r.take(4)? != MAGIC {
+        bail!("not an MGTF object");
+    }
+    let version = r.u8()?;
+    if version != VERSION {
+        bail!("unsupported MGTF version {version}");
+    }
+    let enc = r.u8()?;
+    let dtype = DType::from_code(r.u8()?)?;
+    let ndim = r.u8()? as usize;
+    let mut shape = Vec::with_capacity(ndim);
+    for _ in 0..ndim {
+        shape.push(r.u64()? as usize);
+    }
+    Ok(Header { enc, dtype, shape })
 }
 
 struct Reader<'a> {
@@ -215,6 +366,52 @@ mod tests {
             assert_eq!(back, obj);
             assert_eq!(back.refs(), vec![parent]);
         }
+    }
+
+    #[test]
+    fn decode_meta_matches_decode_without_counting() {
+        let parent = hash_bytes(b"meta-parent");
+        let raw = TensorObject::Raw {
+            dtype: DType::F32,
+            shape: vec![3, 5],
+            payload: vec![0; 60],
+        };
+        let delta = TensorObject::Delta {
+            dtype: DType::F32,
+            shape: vec![7],
+            parent,
+            eps: 1e-4,
+            codec: 1,
+            n_quant: 7,
+            grid: true,
+            payload: vec![1, 2, 3],
+        };
+        let before = payload_decodes();
+        let m = TensorObject::decode_meta(&raw.encode());
+        assert_eq!(m.kind, ObjectKind::Raw);
+        assert_eq!(m.parent, None);
+        assert_eq!(m.shape.as_deref(), Some(&[3usize, 5][..]));
+        let m = TensorObject::decode_meta(&delta.encode());
+        assert_eq!(m.kind, ObjectKind::Delta);
+        assert_eq!(m.parent, Some(parent));
+        let m = TensorObject::decode_meta(b"not an object at all");
+        assert_eq!(m.kind, ObjectKind::Opaque);
+        assert_eq!(m.parent, None);
+        assert_eq!(
+            payload_decodes(),
+            before,
+            "decode_meta must not count as a payload decode"
+        );
+        TensorObject::decode(&raw.encode()).unwrap();
+        assert_eq!(payload_decodes(), before + 1, "decode must count");
+    }
+
+    #[test]
+    fn object_kind_codes_roundtrip() {
+        for k in [ObjectKind::Raw, ObjectKind::Delta, ObjectKind::Opaque] {
+            assert_eq!(ObjectKind::from_code(k.code()).unwrap(), k);
+        }
+        assert!(ObjectKind::from_code(7).is_err());
     }
 
     #[test]

@@ -422,6 +422,21 @@ impl PackedStore {
         Ok((loose, packed.len()))
     }
 
+    /// Chain metadata for `id` straight from pack-index v2 entries —
+    /// zero object reads. Answers for the *newest* pack holding `id`
+    /// (matching [`PackedStore::get`]'s precedence among packs); returns
+    /// `None` when that pack's index is v1 (no metadata) or no pack
+    /// holds the id. Callers wanting `get()`-equivalent metadata must
+    /// check the loose staging area first — [`Store::object_meta`] does.
+    pub fn indexed_meta(&self, id: &ObjectId) -> Option<format::ObjectMeta> {
+        for p in self.packs.iter().rev() {
+            if let Some(e) = p.index.entry(id) {
+                return e.meta.map(|m| format::ObjectMeta::from_index(m.kind, m.parent));
+            }
+        }
+        None
+    }
+
     pub(crate) fn replace_packs(&mut self, packs: Vec<pack::PackFile>) {
         self.packs = packs;
     }
@@ -626,6 +641,26 @@ impl Store {
     /// Fetch the payload stored under `id` (error if absent).
     pub fn get(&self, id: &ObjectId) -> Result<Vec<u8>> {
         self.obj().get(id)
+    }
+
+    /// Header-only metadata for `id`: kind, delta-parent pointer, and —
+    /// when the object bytes had to be read anyway — dtype/shape.
+    ///
+    /// Objects sealed in v2 packs (and not shadowed by a loose staging
+    /// copy) are answered straight from the pack index with **zero
+    /// object reads**; everything else falls back to reading the object
+    /// and parsing its header only (never a payload decode). This is
+    /// what makes repack marking, `fsck`'s orphan scan and the
+    /// chain-depth statistics metadata-walks instead of store scans.
+    pub fn object_meta(&self, id: &ObjectId) -> Result<format::ObjectMeta> {
+        if let BackendImpl::Packed(ps) = &self.backend {
+            if !ps.loose.contains(id) {
+                if let Some(m) = ps.indexed_meta(id) {
+                    return Ok(m);
+                }
+            }
+        }
+        Ok(format::TensorObject::decode_meta(&self.get(id)?))
     }
 
     /// Whether `id` is present in the backend.
@@ -870,6 +905,54 @@ mod tests {
         store.put(d1_id, &mk_delta(raw_id).encode()).unwrap();
         store.put(d2_id, &mk_delta(d1_id).encode()).unwrap();
         (raw_id, d1_id, d2_id)
+    }
+
+    /// `object_meta` answers from pack-index v2 metadata when the object
+    /// is sealed (no byte read ⇒ no shape), and falls back to a
+    /// header-only parse for loose objects (shape known).
+    #[test]
+    fn object_meta_index_first_with_loose_fallback() {
+        use crate::store::format::ObjectKind;
+
+        let dir =
+            std::env::temp_dir().join(format!("mgit-objmeta-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = Store::open_packed(&dir).unwrap();
+        let (raw_id, d1_id, d2_id) = mgtf_chain(&store);
+        // All loose: metadata via header parse, shape present.
+        let m = store.object_meta(&d1_id).unwrap();
+        assert_eq!(m.kind, ObjectKind::Delta);
+        assert_eq!(m.parent, Some(raw_id));
+        assert!(!m.from_index);
+        assert!(m.shape.is_some(), "loose fallback knows the shape");
+
+        // Seal the chain into a pack, drop loose copies, reopen.
+        {
+            let ps = store.as_packed().unwrap();
+            let mut w = pack::PackWriter::create(&ps.pack_dir()).unwrap();
+            for id in [raw_id, d1_id, d2_id] {
+                w.add(id, &store.get(&id).unwrap()).unwrap();
+            }
+            w.finish().unwrap();
+        }
+        for id in [raw_id, d1_id, d2_id] {
+            store.remove(&id).unwrap();
+        }
+        let store = Store::open_packed(&dir).unwrap();
+        let m = store.object_meta(&d2_id).unwrap();
+        assert_eq!(m.kind, ObjectKind::Delta);
+        assert_eq!(m.parent, Some(d1_id));
+        assert!(m.from_index, "sealed object must be answered from the index");
+        assert!(m.shape.is_none(), "index answers carry no shape (no byte read)");
+        let m = store.object_meta(&raw_id).unwrap();
+        assert_eq!(m.kind, ObjectKind::Raw);
+        assert_eq!(m.parent, None);
+
+        // Opaque blobs: loose parse reports opaque.
+        let blob = store.put_blob(b"not an MGTF object").unwrap();
+        let m = store.object_meta(&blob).unwrap();
+        assert_eq!(m.kind, ObjectKind::Opaque);
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     /// Regression: only the chain *tip* is a root, yet the mid-chain and

@@ -29,9 +29,20 @@ use anyhow::{bail, Context, Result};
 
 /// A sealed pack's bytes, readable at arbitrary offsets without locking
 /// (memory-mapped by default; see the module docs for the fallbacks).
+///
+/// A pack with outer zstd framing cannot be served straight from the
+/// file — its logical byte image only exists after decompression — so a
+/// second backing exists: an owned in-memory buffer
+/// ([`PackMmap::from_owned`], reader kind `"owned"`), which is just as
+/// lock-free (shared immutable reads).
 pub struct PackMmap {
-    imp: imp::Reader,
+    backing: Backing,
     len: u64,
+}
+
+enum Backing {
+    File(imp::Reader),
+    Owned(Vec<u8>),
 }
 
 impl PackMmap {
@@ -45,10 +56,17 @@ impl PackMmap {
             .len();
         let imp = imp::Reader::new(file, len)
             .with_context(|| format!("mapping pack {}", path.display()))?;
-        Ok(PackMmap { imp, len })
+        Ok(PackMmap { backing: Backing::File(imp), len })
     }
 
-    /// Total file length in bytes.
+    /// Serve reads from an owned buffer (the decoded logical image of a
+    /// zstd-framed pack).
+    pub fn from_owned(bytes: Vec<u8>) -> PackMmap {
+        let len = bytes.len() as u64;
+        PackMmap { backing: Backing::Owned(bytes), len }
+    }
+
+    /// Total length in bytes (file length, or owned-buffer length).
     pub fn len(&self) -> u64 {
         self.len
     }
@@ -58,14 +76,17 @@ impl PackMmap {
         self.len == 0
     }
 
-    /// Which read strategy this build uses: `"mmap"`, `"pread"` or
-    /// `"locked"`.
+    /// Which read strategy backs this handle: `"mmap"`, `"pread"`,
+    /// `"locked"`, or `"owned"` (decoded zstd-framed pack).
     pub fn kind(&self) -> &'static str {
-        imp::KIND
+        match &self.backing {
+            Backing::File(_) => imp::KIND,
+            Backing::Owned(_) => "owned",
+        }
     }
 
     /// Read exactly `len` bytes starting at `offset`. Bounds are checked
-    /// against the file length before the backend is consulted.
+    /// against the total length before the backend is consulted.
     pub fn read_at(&self, offset: u64, len: usize) -> Result<Vec<u8>> {
         let end = offset
             .checked_add(len as u64)
@@ -82,7 +103,12 @@ impl PackMmap {
             // not be built from a null pointer.
             return Ok(Vec::new());
         }
-        self.imp.read_at(offset, len)
+        match &self.backing {
+            Backing::File(imp) => imp.read_at(offset, len),
+            Backing::Owned(buf) => {
+                Ok(buf[offset as usize..offset as usize + len].to_vec())
+            }
+        }
     }
 }
 
@@ -259,10 +285,16 @@ mod tests {
         std::fs::write(&path, &payload).unwrap();
 
         let m = PackMmap::open(&path).unwrap();
+        run_concurrent(&m, &payload);
+        let o = PackMmap::from_owned(payload.clone());
+        assert_eq!(o.kind(), "owned");
+        run_concurrent(&o, &payload);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    fn run_concurrent(m: &PackMmap, payload: &[u8]) {
         std::thread::scope(|s| {
             for t in 0..4 {
-                let m = &m;
-                let payload = &payload;
                 s.spawn(move || {
                     for i in 0..200usize {
                         let off = ((t * 997 + i * 131) % 4000) * 4;
@@ -272,6 +304,5 @@ mod tests {
                 });
             }
         });
-        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

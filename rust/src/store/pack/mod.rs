@@ -8,39 +8,68 @@
 //!
 //! ## On-disk formats (all integers little-endian)
 //!
-//! `pack-<sha256-hex>.pack`:
+//! `pack-<sha256-hex>.pack`, version 2 (current; see
+//! `docs/STORAGE.md` for the byte-level tables and the frozen v1
+//! layout, which stays readable forever):
 //!
 //! ```text
 //! magic   "MGPK"                          4 bytes
-//! version u8 = 1
+//! version u8 = 2
+//! framing u8                              0 = raw, 1 = zstd
+//! -- framing = raw --
 //! entries count ×:
 //!     len u64                             object byte length
 //!     bytes [len]                         MGTF object (or opaque blob)
+//! -- framing = zstd --
+//! ulen    u64                             uncompressed body length
+//! zbytes                                  one zstd frame of the body
+//!                                         (the same len-prefixed entries)
+//! -- either way --
 //! count   u64                             entry count (trailer)
 //! sha     32 bytes                        SHA-256 of everything above
 //! ```
 //!
-//! `pack-<sha256-hex>.idx` (loadable without touching the pack):
+//! `pack-<sha256-hex>.idx`, version 2 (loadable without touching the
+//! pack — and, new in v2, walkable without *decoding* it):
 //!
 //! ```text
 //! magic   "MGPI"                          4 bytes
-//! version u8 = 1
+//! version u8 = 2
 //! count   u64
 //! fanout  256 × u32                       cumulative count by id[0]
 //! entries count × (sorted by id):
 //!     id     32 bytes
-//!     offset u64                          file offset of object bytes
+//!     offset u64                          logical offset of object bytes
 //!     len    u64
+//!     kind   u8                           ObjectKind code (raw/delta/opaque)
+//!     depth  u32                          delta-chain depth at pack time
+//!     parent 32 bytes                     delta parent id (zeroed sentinel
+//!                                         for raw/opaque base objects)
 //! sha     32 bytes                        the pack's trailer SHA-256
 //! ```
 //!
+//! The v2 entry's `kind`/`parent`/`depth` triple makes pack metadata
+//! **self-describing**: incremental repack's mark phase and `fsck`'s
+//! orphaned-parent scan walk delta-parent edges straight out of the
+//! index, with zero payload decodes (counter-asserted in tests).
+//! Version-1 packs and indexes (no framing byte, no entry metadata)
+//! remain readable forever — the version byte dispatches — and
+//! `repack --full` rewrites them to v2.
+//!
+//! Index/pack `offset`s are *logical*: for raw framing the logical image
+//! is the file itself (reads stay on the mmap fast path); for zstd
+//! framing it is the decoded header+body, materialized **lazily on the
+//! first body read** into an owned buffer ([`PackMmap::from_owned`],
+//! cached per handle) so readers are untouched by the framing choice and
+//! commands that never read bodies never pay the decode.
+//!
 //! Lookup is fanout-bucketed binary search ([`PackIndex::lookup`]);
 //! object reads are lock-free bounds-checked copies out of a
-//! memory-mapped (or positionally-read) pack ([`PackFile::get`] over
-//! [`PackMmap`]), so any number of threads can read one pack
-//! concurrently. Packs are immutable once finished: [`PackWriter`]
-//! streams objects into a temp file, then renames it to its content
-//! hash. Compaction/chain re-basing lives in [`repack()`].
+//! memory-mapped (or positionally-read, or owned) image
+//! ([`PackFile::get`] over [`PackMmap`]), so any number of threads can
+//! read one pack concurrently. Packs are immutable once finished:
+//! [`PackWriter`] streams objects into a temp file, then renames it to
+//! its content hash. Compaction/chain re-basing lives in [`repack()`].
 
 mod mmap;
 mod repack;
@@ -58,24 +87,122 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Context, Result};
 use sha2::{Digest, Sha256};
 
+use super::format::{ObjectKind, TensorObject};
 use super::ObjectId;
 
 pub const PACK_MAGIC: &[u8; 4] = b"MGPK";
 pub const IDX_MAGIC: &[u8; 4] = b"MGPI";
-pub const VERSION: u8 = 1;
-/// Pack header length (magic + version): the first valid object offset
-/// is `HEADER_LEN + 8` (past the first length prefix).
-pub const HEADER_LEN: u64 = 5;
-/// Pack trailer length (count + sha256).
+/// The frozen first-generation format (no framing byte, no index
+/// metadata). Still readable; never written anymore.
+pub const VERSION_1: u8 = 1;
+/// The current write version.
+pub const VERSION: u8 = 2;
+/// Pack trailer length (count + sha256), identical in both versions.
 pub const TRAILER_LEN: u64 = 8 + 32;
 
-/// One object's position inside a pack.
+/// Pack header length for a format version: the first valid object
+/// offset is `header_len(v) + 8` (past the first length prefix).
+pub fn header_len(version: u8) -> u64 {
+    match version {
+        VERSION_1 => 5, // magic + version
+        _ => 6,         // magic + version + framing
+    }
+}
+
+/// Outer (whole-pack) framing, negotiated via the v2 pack-header flag.
+///
+/// Object payloads are already codec-compressed individually
+/// ([`crate::delta::Codec`]), so raw framing is the default — it keeps
+/// the zero-copy mmap read path. Zstd framing trades open-time
+/// decompression (the pack decodes to an owned buffer once) for extra
+/// whole-pack compression of everything the per-object codecs leave on
+/// the table: MGTF headers, length prefixes, and cross-object
+/// redundancy. It requires the feature-gated `zstd` dependency
+/// (`--features zstd`); a build without it writes and reads raw packs
+/// only.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PackFraming {
+    /// Body bytes stored verbatim; reads are served from the file
+    /// (mmap/pread). The offline default.
+    #[default]
+    Raw,
+    /// Body stored as a single zstd frame; decoded to an owned buffer
+    /// at open.
+    Zstd,
+}
+
+impl PackFraming {
+    pub fn code(self) -> u8 {
+        match self {
+            PackFraming::Raw => 0,
+            PackFraming::Zstd => 1,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Result<PackFraming> {
+        match c {
+            0 => Ok(PackFraming::Raw),
+            1 => Ok(PackFraming::Zstd),
+            _ => bail!("unknown pack framing code {c}"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PackFraming::Raw => "raw",
+            PackFraming::Zstd => "zstd",
+        }
+    }
+
+    /// Parse a user-facing name (`repack --framing raw|zstd`).
+    pub fn parse(name: &str) -> Result<PackFraming> {
+        match name.to_ascii_lowercase().as_str() {
+            "raw" => Ok(PackFraming::Raw),
+            "zstd" => Ok(PackFraming::Zstd),
+            other => bail!("unknown pack framing `{other}` (raw|zstd)"),
+        }
+    }
+}
+
+/// Per-entry object metadata persisted in index v2: enough to walk
+/// delta chains without reading the pack.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EntryMeta {
+    pub kind: ObjectKind,
+    /// Delta parent; `None` (a zeroed sentinel on disk) for raw/opaque
+    /// base objects.
+    pub parent: Option<ObjectId>,
+    /// Chain depth of this pack's copy at write time. Exact for
+    /// repack-written live objects (the repacker knows global depths);
+    /// best-effort for objects added without explicit metadata (0 for
+    /// bases, a lower bound for deltas whose parents live outside the
+    /// pack). Never used for correctness — parents are.
+    pub depth: u32,
+}
+
+impl EntryMeta {
+    /// Derive metadata from object bytes (header parse only).
+    /// `parent_depth` resolves an in-pack parent's depth when known.
+    pub fn infer(bytes: &[u8], parent_depth: impl Fn(&ObjectId) -> Option<u32>) -> EntryMeta {
+        let meta = TensorObject::decode_meta(bytes);
+        let depth = match (meta.kind, meta.parent.as_ref()) {
+            (ObjectKind::Delta, Some(p)) => parent_depth(p).map_or(1, |d| d + 1),
+            _ => 0,
+        };
+        EntryMeta { kind: meta.kind, parent: meta.parent, depth }
+    }
+}
+
+/// One object's position inside a pack (plus, in v2 indexes, its chain
+/// metadata).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct IdxEntry {
     pub id: ObjectId,
-    /// Absolute file offset of the object bytes (past the len prefix).
+    /// Logical offset of the object bytes (past the len prefix).
     pub offset: u64,
     pub len: u64,
+    /// `None` only for entries decoded from a v1 index.
+    pub meta: Option<EntryMeta>,
 }
 
 /// Sorted fan-out table over a pack's objects.
@@ -85,6 +212,10 @@ pub struct PackIndex {
     fanout: [u32; 256],
     /// The paired pack's trailer checksum.
     pub pack_sha: [u8; 32],
+    /// Index format version this was decoded from / will encode as:
+    /// [`VERSION`] when every entry carries metadata, [`VERSION_1`]
+    /// otherwise.
+    pub version: u8,
 }
 
 impl PackIndex {
@@ -104,7 +235,12 @@ impl PackIndex {
             acc += *f;
             *f = acc;
         }
-        Ok(PackIndex { entries, fanout, pack_sha })
+        let version = if entries.iter().all(|e| e.meta.is_some()) {
+            VERSION
+        } else {
+            VERSION_1
+        };
+        Ok(PackIndex { entries, fanout, pack_sha, version })
     }
 
     pub fn ids(&self) -> impl Iterator<Item = ObjectId> + '_ {
@@ -121,19 +257,24 @@ impl PackIndex {
 
     /// Binary search within the id's fan-out bucket.
     pub fn lookup(&self, id: &ObjectId) -> Option<(u64, u64)> {
+        self.entry(id).map(|e| (e.offset, e.len))
+    }
+
+    /// The full index entry for `id` (metadata included), if present.
+    pub fn entry(&self, id: &ObjectId) -> Option<&IdxEntry> {
         let b = id.0[0] as usize;
         let lo = if b == 0 { 0 } else { self.fanout[b - 1] as usize };
         let hi = self.fanout[b] as usize;
         let seg = &self.entries[lo..hi];
-        seg.binary_search_by(|e| e.id.cmp(id))
-            .ok()
-            .map(|i| (seg[i].offset, seg[i].len))
+        seg.binary_search_by(|e| e.id.cmp(id)).ok().map(|i| &seg[i])
     }
 
     pub fn encode(&self) -> Vec<u8> {
-        let mut out = Vec::with_capacity(4 + 1 + 8 + 256 * 4 + self.entries.len() * 48 + 32);
+        let entry_len = if self.version == VERSION_1 { 48 } else { 85 };
+        let mut out =
+            Vec::with_capacity(4 + 1 + 8 + 256 * 4 + self.entries.len() * entry_len + 32);
         out.extend_from_slice(IDX_MAGIC);
-        out.push(VERSION);
+        out.push(self.version);
         out.extend_from_slice(&(self.entries.len() as u64).to_le_bytes());
         for f in &self.fanout {
             out.extend_from_slice(&f.to_le_bytes());
@@ -142,6 +283,13 @@ impl PackIndex {
             out.extend_from_slice(&e.id.0);
             out.extend_from_slice(&e.offset.to_le_bytes());
             out.extend_from_slice(&e.len.to_le_bytes());
+            if self.version != VERSION_1 {
+                // from_entries guarantees meta for v2.
+                let m = e.meta.expect("v2 index entry without metadata");
+                out.push(m.kind.code());
+                out.extend_from_slice(&m.depth.to_le_bytes());
+                out.extend_from_slice(&m.parent.map_or([0u8; 32], |p| p.0));
+            }
         }
         out.extend_from_slice(&self.pack_sha);
         out
@@ -153,7 +301,7 @@ impl PackIndex {
             bail!("not an MGPI pack index");
         }
         let version = r.u8()?;
-        if version != VERSION {
+        if version != VERSION_1 && version != VERSION {
             bail!("unsupported pack index version {version}");
         }
         let count = r.u64()? as usize;
@@ -166,7 +314,20 @@ impl PackIndex {
             id.copy_from_slice(r.take(32)?);
             let offset = r.u64()?;
             let len = r.u64()?;
-            entries.push(IdxEntry { id: ObjectId(id), offset, len });
+            let meta = if version == VERSION_1 {
+                None
+            } else {
+                let kind = ObjectKind::from_code(r.u8()?)?;
+                let depth = r.u32()?;
+                let mut parent = [0u8; 32];
+                parent.copy_from_slice(r.take(32)?);
+                let parent = match kind {
+                    ObjectKind::Delta => Some(ObjectId(parent)),
+                    _ => None,
+                };
+                Some(EntryMeta { kind, parent, depth })
+            };
+            entries.push(IdxEntry { id: ObjectId(id), offset, len, meta });
         }
         let mut pack_sha = [0u8; 32];
         pack_sha.copy_from_slice(r.take(32)?);
@@ -190,17 +351,37 @@ impl PackIndex {
     }
 }
 
-/// An open pack: its index plus a lock-free reader over the pack bytes.
+/// An open pack: its index plus a lock-free reader over the pack's
+/// *logical* bytes (the file itself for raw framing; for zstd framing,
+/// an owned buffer decoded **lazily on first read** and cached for the
+/// handle's lifetime).
 ///
-/// `PackFile` is `Send + Sync`: the index is immutable after load and
-/// [`PackMmap`] reads need no coordination, so one handle serves any
-/// number of concurrent reader threads without serializing them.
+/// Laziness matters twice over: commands that never touch this pack's
+/// bodies (`mgit log`, index-metadata walks) pay nothing, and a corrupt
+/// or feature-unsupported zstd body does not make the *store*
+/// unopenable — `open` still succeeds, reads of that pack error
+/// per-object, and `fsck`/`verify-pack` keep their contract of
+/// reporting a bad pack instead of dying on it.
+///
+/// `PackFile` is `Send + Sync`: the index is immutable after load,
+/// [`PackMmap`] reads need no coordination, and the decoded image sits
+/// behind a `OnceLock`, so one handle serves any number of concurrent
+/// reader threads without serializing them.
 pub struct PackFile {
     /// Path of the sealed `.pack` file.
     pub path: PathBuf,
     /// The sidecar fan-out index.
     pub index: PackIndex,
+    /// Pack format version (1 or 2).
+    pub version: u8,
+    /// Outer framing (always [`PackFraming::Raw`] for v1 packs).
+    pub framing: PackFraming,
+    /// The physical file bytes (logical image too, for raw framing).
     data: PackMmap,
+    /// Zstd framing only: the decoded logical image, materialized on
+    /// first body read. Decode errors are cached as strings (packs are
+    /// immutable, so a failure is permanent for this handle).
+    decoded: std::sync::OnceLock<std::result::Result<PackMmap, String>>,
 }
 
 impl PackFile {
@@ -210,20 +391,92 @@ impl PackFile {
     }
 
     /// Open a sealed pack: load its index, map the pack bytes, and
-    /// validate the header magic + version.
+    /// validate the header magic + version + framing code. Zstd-framed
+    /// bodies are *not* decoded here — that happens on first read, so a
+    /// bad body degrades to per-object read errors (and `BAD_PACK` in
+    /// fsck) rather than an unopenable store.
     pub fn open(pack_path: &Path) -> Result<PackFile> {
         let index = PackIndex::load(&Self::idx_path(pack_path))?;
         let data = PackMmap::open(pack_path)?;
-        let header = data
-            .read_at(0, HEADER_LEN as usize)
+        let head = data
+            .read_at(0, 5)
             .with_context(|| format!("reading pack header {}", pack_path.display()))?;
-        if &header[..4] != PACK_MAGIC {
+        if &head[..4] != PACK_MAGIC {
             bail!("{} is not an MGPK pack", pack_path.display());
         }
-        if header[4] != VERSION {
-            bail!("unsupported pack version {}", header[4]);
+        let version = head[4];
+        let framing = match version {
+            VERSION_1 => PackFraming::Raw,
+            VERSION => PackFraming::from_code(data.read_at(5, 1)?[0])
+                .with_context(|| format!("pack {}", pack_path.display()))?,
+            other => bail!("unsupported pack version {other}"),
+        };
+        Ok(PackFile {
+            path: pack_path.to_path_buf(),
+            index,
+            version,
+            framing,
+            data,
+            decoded: std::sync::OnceLock::new(),
+        })
+    }
+
+    /// The reader serving this pack's *logical* image: the file itself
+    /// for raw framing, the lazily decoded (and cached) buffer for zstd.
+    fn logical(&self) -> Result<&PackMmap> {
+        match self.framing {
+            PackFraming::Raw => Ok(&self.data),
+            PackFraming::Zstd => {
+                let cached = self.decoded.get_or_init(|| {
+                    Self::decode_zstd_image(&self.path, &self.data)
+                        .map_err(|e| format!("{e:#}"))
+                });
+                match cached {
+                    Ok(m) => Ok(m),
+                    Err(e) => bail!("{e}"),
+                }
+            }
         }
-        Ok(PackFile { path: pack_path.to_path_buf(), index, data })
+    }
+
+    /// Materialize a zstd-framed pack's logical image (header + decoded
+    /// body) as an owned read buffer.
+    #[cfg(feature = "zstd")]
+    fn decode_zstd_image(pack_path: &Path, data: &PackMmap) -> Result<PackMmap> {
+        let hlen = header_len(VERSION);
+        let total = data.len();
+        if total < hlen + 8 + TRAILER_LEN {
+            bail!("zstd pack {} truncated", pack_path.display());
+        }
+        let ulen =
+            u64::from_le_bytes(data.read_at(hlen, 8)?.try_into().unwrap());
+        let zlen = (total - hlen - 8 - TRAILER_LEN) as usize;
+        let zbytes = data.read_at(hlen + 8, zlen)?;
+        let body = zstd::stream::decode_all(&zbytes[..]).with_context(|| {
+            format!("decoding zstd pack body {}", pack_path.display())
+        })?;
+        if body.len() as u64 != ulen {
+            bail!(
+                "zstd pack {} decoded to {} bytes, header says {ulen}",
+                pack_path.display(),
+                body.len()
+            );
+        }
+        let mut image = Vec::with_capacity(hlen as usize + body.len());
+        image.extend_from_slice(PACK_MAGIC);
+        image.push(VERSION);
+        image.push(PackFraming::Zstd.code());
+        image.extend_from_slice(&body);
+        Ok(PackMmap::from_owned(image))
+    }
+
+    #[cfg(not(feature = "zstd"))]
+    fn decode_zstd_image(pack_path: &Path, _data: &PackMmap) -> Result<PackMmap> {
+        bail!(
+            "pack {} uses zstd outer framing, but this build has no zstd \
+             support (rebuild with --features zstd)",
+            pack_path.display()
+        )
     }
 
     /// Whether this pack holds `id` (index-only; the pack is untouched).
@@ -232,12 +485,14 @@ impl PackFile {
     }
 
     /// Read one object; `Ok(None)` if this pack doesn't hold `id`.
-    /// Lock-free: concurrent `get`s never wait on each other.
+    /// Lock-free: concurrent `get`s never wait on each other (the first
+    /// read of a zstd-framed pack decodes its body once, under the
+    /// `OnceLock`).
     pub fn get(&self, id: &ObjectId) -> Result<Option<Vec<u8>>> {
         let Some((offset, len)) = self.index.lookup(id) else {
             return Ok(None);
         };
-        let buf = self.data.read_at(offset, len as usize).with_context(|| {
+        let buf = self.logical()?.read_at(offset, len as usize).with_context(|| {
             format!(
                 "reading object {} at offset {offset} in pack {}",
                 id.short(),
@@ -252,32 +507,43 @@ impl PackFile {
         self.index.len()
     }
 
-    /// Total pack file size in bytes (header + objects + trailer).
+    /// Pack file size on disk in bytes (the compressed size for
+    /// zstd-framed packs).
     pub fn size_bytes(&self) -> u64 {
         self.data.len()
     }
 
-    /// The read strategy backing this pack: `"mmap"`, `"pread"` or
-    /// `"locked"` (see [`PackMmap::kind`]).
+    /// The read strategy backing this pack's object reads: `"mmap"`,
+    /// `"pread"` or `"locked"` for raw framing (see [`PackMmap::kind`]),
+    /// `"owned"` for zstd framing (reads come from the decoded buffer).
     pub fn reader_kind(&self) -> &'static str {
-        self.data.kind()
+        match self.framing {
+            PackFraming::Raw => self.data.kind(),
+            PackFraming::Zstd => "owned",
+        }
     }
 
-    /// Structural verification: trailer checksum, entry count, and that
-    /// every index entry points at a properly length-prefixed byte range.
-    /// (Content-level verification — decoding objects and re-hashing
-    /// resolved tensors — is `mgit verify-pack`'s job, since it needs
-    /// chain resolution across the whole store.)
+    /// Structural verification: trailer checksum, entry count, that
+    /// every index entry points at a properly length-prefixed byte
+    /// range of the logical image, and — for v2 indexes — that each
+    /// entry's persisted kind/parent metadata agrees with the object
+    /// header actually stored in the pack. (Content-level verification —
+    /// decoding objects and re-hashing resolved tensors — is
+    /// `mgit verify-pack`'s job, since it needs chain resolution across
+    /// the whole store.)
     pub fn verify(&self) -> Result<()> {
         let bytes = std::fs::read(&self.path)
             .with_context(|| format!("reading pack {}", self.path.display()))?;
         let total = bytes.len() as u64;
-        if total < HEADER_LEN + TRAILER_LEN {
+        let hlen = header_len(self.version);
+        if total < hlen + TRAILER_LEN {
             bail!("pack {} truncated", self.path.display());
         }
-        if &bytes[..4] != PACK_MAGIC || bytes[4] != VERSION {
+        if &bytes[..4] != PACK_MAGIC || bytes[4] != self.version {
             bail!("pack {} has a bad header", self.path.display());
         }
+        // The trailer checksum covers the *physical* bytes, whatever the
+        // framing — it seals the file as written.
         let body_end = (total - 32) as usize;
         let mut h = Sha256::new();
         h.update(&bytes[..body_end]);
@@ -307,8 +573,37 @@ impl PackFile {
                 self.index.len()
             );
         }
+        // Entry checks run against the logical image: the raw file body
+        // is already in `bytes`; a zstd body is served from the lazily
+        // cached decoded buffer — never copied wholesale a second time
+        // (small per-entry reads only).
+        let zimage = match self.framing {
+            PackFraming::Raw => None,
+            // The physical bytes this image came from were just
+            // checksum-validated above.
+            PackFraming::Zstd => Some(self.logical()?),
+        };
+        let body_limit = match zimage {
+            None => total - TRAILER_LEN,
+            Some(image) => image.len(),
+        };
+        let read_logical = |offset: u64, len: usize| -> Result<Vec<u8>> {
+            match zimage {
+                None => Ok(bytes[offset as usize..offset as usize + len].to_vec()),
+                Some(image) => image.read_at(offset, len),
+            }
+        };
+        // An MGTF header is at most magic+version+enc+dtype+ndim (8) +
+        // 255 dims (2040) + parent/eps/codec/nquant (45) bytes; reading
+        // that much is always enough for `decode_meta`.
+        const MAX_HEADER: u64 = 8 + 255 * 8 + 45;
         for e in &self.index.entries {
-            if e.offset < HEADER_LEN + 8 || e.offset + e.len > total - TRAILER_LEN {
+            // checked_add: a corrupt index must produce a reportable
+            // error, never a wrapped bound that slips through to a
+            // slicing panic below.
+            let in_bounds = e.offset >= hlen + 8
+                && e.offset.checked_add(e.len).is_some_and(|end| end <= body_limit);
+            if !in_bounds {
                 bail!(
                     "index entry {} (offset {}, len {}) out of bounds in pack {}",
                     e.id.short(),
@@ -317,8 +612,8 @@ impl PackFile {
                     self.path.display()
                 );
             }
-            let lp = (e.offset - 8) as usize;
-            let len = u64::from_le_bytes(bytes[lp..lp + 8].try_into().unwrap());
+            let prefix = read_logical(e.offset - 8, 8)?;
+            let len = u64::from_le_bytes(prefix.try_into().unwrap());
             if len != e.len {
                 bail!(
                     "length prefix mismatch for {} at offset {} in pack {} \
@@ -329,6 +624,25 @@ impl PackFile {
                     len,
                     e.len
                 );
+            }
+            if let Some(meta) = e.meta {
+                // The persisted chain metadata must describe the bytes:
+                // a lying index would silently corrupt every
+                // metadata-only walk (repack marking, fsck).
+                let head = read_logical(e.offset, e.len.min(MAX_HEADER) as usize)?;
+                let actual = TensorObject::decode_meta(&head);
+                if actual.kind != meta.kind || actual.parent != meta.parent {
+                    bail!(
+                        "index metadata mismatch for {} in pack {}: index says \
+                         {}/{}, object header says {}/{}",
+                        e.id.short(),
+                        self.path.display(),
+                        meta.kind.name(),
+                        meta.parent.map_or("-".into(), |p| p.short()),
+                        actual.kind.name(),
+                        actual.parent.map_or("-".into(), |p| p.short()),
+                    );
+                }
             }
         }
         Ok(())
@@ -400,10 +714,19 @@ mod tests {
         }
         let pack = w.finish().unwrap();
         assert_eq!(pack.object_count(), 50);
+        assert_eq!(pack.version, VERSION);
+        assert_eq!(pack.framing, PackFraming::Raw);
+        assert_eq!(pack.index.version, VERSION);
         pack.verify().unwrap();
         for (id, p) in ids.iter().zip(&payloads) {
             assert!(pack.contains(id));
             assert_eq!(pack.get(id).unwrap().unwrap(), *p);
+            // These payloads are not MGTF objects, so v2 metadata must
+            // classify them as opaque bases.
+            let meta = pack.index.entry(id).unwrap().meta.unwrap();
+            assert_eq!(meta.kind, ObjectKind::Opaque);
+            assert_eq!(meta.parent, None);
+            assert_eq!(meta.depth, 0);
         }
         assert!(pack.get(&hash_bytes(b"absent")).unwrap().is_none());
 
@@ -417,31 +740,93 @@ mod tests {
         std::fs::remove_dir_all(&dir).unwrap();
     }
 
+    #[cfg(feature = "zstd")]
     #[test]
-    fn index_roundtrip_and_lookup() {
+    fn zstd_framing_roundtrip() {
+        let dir = tmp_dir("zstd");
+        let mut w = PackWriter::create_with(&dir, PackFraming::Zstd).unwrap();
+        let payloads: Vec<Vec<u8>> = (0..40u8)
+            .map(|i| vec![i % 5; 64 + (i as usize * 11) % 128])
+            .collect();
+        let ids: Vec<ObjectId> = payloads.iter().map(|p| hash_bytes(p)).collect();
+        for (id, p) in ids.iter().zip(&payloads) {
+            w.add(*id, p).unwrap();
+        }
+        let pack = w.finish().unwrap();
+        assert_eq!(pack.framing, PackFraming::Zstd);
+        assert_eq!(pack.reader_kind(), "owned");
+        assert!(pack.decoded.get().is_none(), "body must not decode at open");
+        pack.verify().unwrap();
+        // Redundant payloads: the framed pack must be smaller on disk
+        // than its logical image (decoded lazily by verify above).
+        assert!(pack.size_bytes() < pack.logical().unwrap().len());
+        for (id, p) in ids.iter().zip(&payloads) {
+            assert_eq!(pack.get(id).unwrap().unwrap(), *p);
+        }
+        let reopened = PackFile::open(&pack.path).unwrap();
+        reopened.verify().unwrap();
+        for (id, p) in ids.iter().zip(&payloads) {
+            assert_eq!(reopened.get(id).unwrap().unwrap(), *p);
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn index_roundtrip_and_lookup_v1_and_v2() {
+        // v1: no metadata.
         let entries: Vec<IdxEntry> = (0..200u32)
             .map(|i| IdxEntry {
                 id: hash_bytes(&i.to_le_bytes()),
                 offset: 13 + i as u64 * 100,
                 len: i as u64 + 1,
+                meta: None,
             })
             .collect();
         let idx = PackIndex::from_entries(entries.clone(), [7u8; 32]).unwrap();
+        assert_eq!(idx.version, VERSION_1);
         let back = PackIndex::decode(&idx.encode()).unwrap();
         assert_eq!(back.len(), 200);
+        assert_eq!(back.version, VERSION_1);
         assert_eq!(back.pack_sha, [7u8; 32]);
         for e in &entries {
             assert_eq!(back.lookup(&e.id), Some((e.offset, e.len)));
+            assert_eq!(back.entry(&e.id).unwrap().meta, None);
         }
         assert_eq!(back.lookup(&hash_bytes(b"missing")), None);
+
+        // v2: kind/parent/depth survive the roundtrip.
+        let parent = hash_bytes(b"the-parent");
+        let v2: Vec<IdxEntry> = (0..50u32)
+            .map(|i| IdxEntry {
+                id: hash_bytes(&(1000 + i).to_le_bytes()),
+                offset: 14 + i as u64 * 64,
+                len: 32,
+                meta: Some(if i % 3 == 0 {
+                    EntryMeta { kind: ObjectKind::Raw, parent: None, depth: 0 }
+                } else {
+                    EntryMeta {
+                        kind: ObjectKind::Delta,
+                        parent: Some(parent),
+                        depth: i % 7,
+                    }
+                }),
+            })
+            .collect();
+        let idx = PackIndex::from_entries(v2.clone(), [9u8; 32]).unwrap();
+        assert_eq!(idx.version, VERSION);
+        let back = PackIndex::decode(&idx.encode()).unwrap();
+        assert_eq!(back.version, VERSION);
+        for e in &v2 {
+            assert_eq!(back.entry(&e.id).unwrap().meta, e.meta);
+        }
     }
 
     #[test]
     fn duplicate_ids_rejected() {
         let id = hash_bytes(b"dup");
         let entries = vec![
-            IdxEntry { id, offset: 13, len: 4 },
-            IdxEntry { id, offset: 30, len: 4 },
+            IdxEntry { id, offset: 13, len: 4, meta: None },
+            IdxEntry { id, offset: 30, len: 4, meta: None },
         ];
         assert!(PackIndex::from_entries(entries, [0u8; 32]).is_err());
     }
@@ -456,10 +841,42 @@ mod tests {
         pack.verify().unwrap();
         // Flip one payload byte.
         let mut bytes = std::fs::read(&pack.path).unwrap();
-        bytes[(HEADER_LEN + 8) as usize] ^= 0xff;
+        bytes[(header_len(VERSION) + 8) as usize] ^= 0xff;
         std::fs::write(&pack.path, &bytes).unwrap();
         let reopened = PackFile::open(&pack.path).unwrap();
         assert!(reopened.verify().is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn lying_index_metadata_detected() {
+        use crate::store::format::TensorObject;
+        use crate::tensor::DType;
+
+        let dir = tmp_dir("lying-meta");
+        let mut w = PackWriter::create(&dir).unwrap();
+        let obj = TensorObject::Raw {
+            dtype: DType::F32,
+            shape: vec![2],
+            payload: vec![0u8; 8],
+        };
+        let id = hash_bytes(b"raw-obj");
+        w.add(id, &obj.encode()).unwrap();
+        let pack = w.finish().unwrap();
+        pack.verify().unwrap();
+        // Rewrite the index claiming the object is a delta: verify must
+        // catch metadata that contradicts the stored object header.
+        let mut entries = pack.index.entries.clone();
+        entries[0].meta = Some(EntryMeta {
+            kind: ObjectKind::Delta,
+            parent: Some(hash_bytes(b"bogus-parent")),
+            depth: 3,
+        });
+        let lying = PackIndex::from_entries(entries, pack.index.pack_sha).unwrap();
+        lying.save(&PackFile::idx_path(&pack.path)).unwrap();
+        let reopened = PackFile::open(&pack.path).unwrap();
+        let err = reopened.verify().unwrap_err().to_string();
+        assert!(err.contains("metadata mismatch"), "got: {err}");
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

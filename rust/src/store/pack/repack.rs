@@ -69,9 +69,9 @@ use std::path::PathBuf;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use super::{PackFile, PackWriter};
+use super::{EntryMeta, PackFile, PackFraming, PackWriter};
 use crate::delta::{self, Codec, DeltaKernel};
-use crate::store::format::TensorObject;
+use crate::store::format::{payload_decodes, ObjectKind, TensorObject};
 use crate::store::{ObjectId, ObjectStore, Store};
 use crate::tensor::f32_to_bytes;
 
@@ -107,6 +107,15 @@ pub struct RepackConfig {
     /// that carries its garbage would leave the ratio unchanged and
     /// re-escalate forever. `None` disables.
     pub max_dead_ratio: Option<f64>,
+    /// Outer framing of the pack this run writes ([`PackFraming::Raw`]
+    /// by default; `Zstd` needs the feature-gated dependency).
+    pub framing: PackFraming,
+    /// Force the mark phase back onto the legacy decode-every-object
+    /// walk instead of the v2 index-metadata walk. The two are
+    /// output-equivalent (tested byte-for-byte); this knob exists as the
+    /// validation oracle and for debugging suspected index metadata
+    /// corruption.
+    pub decode_mark: bool,
 }
 
 impl Default for RepackConfig {
@@ -120,6 +129,8 @@ impl Default for RepackConfig {
             mode: RepackMode::Incremental,
             max_generations: None,
             max_dead_ratio: None,
+            framing: PackFraming::Raw,
+            decode_mark: false,
         }
     }
 }
@@ -162,20 +173,31 @@ pub struct RepackReport {
     /// Fraction of sealed pack bytes that were unreachable at mark time
     /// (the dead-byte ratio the escalation decision saw).
     pub dead_ratio: f64,
+    /// Full payload decodes performed by the mark phase. Zero when every
+    /// live object is covered by v2 index metadata or loose header
+    /// parses; nonzero only under [`RepackConfig::decode_mark`].
+    pub mark_payload_decodes: u64,
+    /// Live objects whose chain metadata needed an object-byte read
+    /// during marking (loose staging copies and v1-pack copies); objects
+    /// answered from v2 index metadata are not counted.
+    pub mark_meta_fallback: usize,
+    /// Outer framing of the pack this run wrote.
+    pub framing: PackFraming,
 }
 
 /// Chain depth of every object in the store (0 = raw/opaque base).
 /// Dangling parents are treated as bases so depths stay defined; `fsck`
 /// reports the dangling reference itself.
+///
+/// Chain discovery goes through [`Store::object_meta`]: objects covered
+/// by v2 pack-index metadata contribute their parent edge with zero
+/// object reads; loose and v1-packed objects fall back to a header-only
+/// parse (never a payload decode).
 pub fn chain_depths(store: &Store) -> Result<HashMap<ObjectId, usize>> {
     let ids = store.list()?;
     let mut parent: HashMap<ObjectId, Option<ObjectId>> = HashMap::with_capacity(ids.len());
     for id in &ids {
-        let p = match TensorObject::decode(&store.get(id)?) {
-            Ok(TensorObject::Delta { parent, .. }) => Some(parent),
-            _ => None,
-        };
-        parent.insert(*id, p);
+        parent.insert(*id, store.object_meta(id)?.parent);
     }
     chain_depths_from_parents(&parent)
 }
@@ -259,7 +281,15 @@ pub fn repack(
     // ------------------------------------------------------------------
     // 1. Mark live objects (delta parents are strong, transitive refs)
     //    and record each live object's parent pointer.
+    //
+    //    The walk is metadata-only: objects sealed in v2 packs
+    //    contribute their parent edge straight from the index (no object
+    //    read at all); loose staging copies and v1-pack copies cost one
+    //    byte read + header parse. Payload decodes happen only under the
+    //    `decode_mark` oracle — the thread-local decode counter proves
+    //    it (`RepackReport::mark_payload_decodes`).
     // ------------------------------------------------------------------
+    let decodes_before_mark = payload_decodes();
     let mut live: HashSet<ObjectId> = HashSet::new();
     let mut parent_of: HashMap<ObjectId, Option<ObjectId>> = HashMap::new();
     let mut stack: Vec<ObjectId> = roots.to_vec();
@@ -267,21 +297,35 @@ pub fn repack(
         if !live.insert(id) {
             continue;
         }
-        let bytes = store
-            .get(&id)
-            .with_context(|| format!("repack: live object {} unreadable", id.short()))?;
-        match TensorObject::decode(&bytes) {
-            Ok(TensorObject::Delta { parent, .. }) => {
-                parent_of.insert(id, Some(parent));
-                if !live.contains(&parent) {
-                    stack.push(parent);
-                }
+        let parent = if cfg.decode_mark {
+            // Legacy path: full decode of every live object.
+            let bytes = store
+                .get(&id)
+                .with_context(|| format!("repack: live object {} unreadable", id.short()))?;
+            match TensorObject::decode(&bytes) {
+                Ok(TensorObject::Delta { parent, .. }) => Some(parent),
+                _ => None,
             }
-            _ => {
-                parent_of.insert(id, None);
+        } else {
+            let meta = store
+                .object_meta(&id)
+                .with_context(|| format!("repack: live object {} unreadable", id.short()))?;
+            if !meta.from_index {
+                // The answer needed a byte read + header parse (loose or
+                // v1-packed copy).
+                report.mark_meta_fallback += 1;
+            }
+            meta.parent
+        };
+        parent_of.insert(id, parent);
+        if let Some(parent) = parent {
+            if !live.contains(&parent) {
+                stack.push(parent);
             }
         }
     }
+    report.mark_payload_decodes = payload_decodes() - decodes_before_mark;
+    report.framing = cfg.framing;
 
     // ------------------------------------------------------------------
     // 2. Original chain depths; process parents before children so a
@@ -380,6 +424,9 @@ pub fn repack(
     // ------------------------------------------------------------------
     let mut new_bytes: HashMap<ObjectId, Vec<u8>> = HashMap::with_capacity(order.len());
     let mut new_depth: HashMap<ObjectId, usize> = HashMap::with_capacity(order.len());
+    // Index metadata for every freshly written object (exact depths:
+    // this loop knows the global chain structure).
+    let mut new_meta: HashMap<ObjectId, EntryMeta> = HashMap::with_capacity(order.len());
     let mut resolve_cache: HashMap<ObjectId, Vec<f32>> = HashMap::new();
     for &id in &order {
         if incremental && in_pack.contains(&id) {
@@ -396,6 +443,10 @@ pub fn repack(
                 // Opaque (non-MGTF) blob: copy verbatim.
                 new_depth.insert(id, 0);
                 new_bytes.insert(id, bytes);
+                new_meta.insert(
+                    id,
+                    EntryMeta { kind: ObjectKind::Opaque, parent: None, depth: 0 },
+                );
                 continue;
             }
             Ok(o) => o,
@@ -404,6 +455,8 @@ pub fn repack(
             TensorObject::Raw { .. } => {
                 new_depth.insert(id, 0);
                 new_bytes.insert(id, bytes);
+                new_meta
+                    .insert(id, EntryMeta { kind: ObjectKind::Raw, parent: None, depth: 0 });
             }
             TensorObject::Delta { dtype, shape, parent, eps, codec, grid, .. } => {
                 let pd = *new_depth.get(&parent).ok_or_else(|| {
@@ -418,6 +471,14 @@ pub fn repack(
                     // delta still reconstructs the identical content.
                     new_depth.insert(id, pd + 1);
                     new_bytes.insert(id, bytes);
+                    new_meta.insert(
+                        id,
+                        EntryMeta {
+                            kind: ObjectKind::Delta,
+                            parent: Some(parent),
+                            depth: (pd + 1) as u32,
+                        },
+                    );
                     continue;
                 }
                 // Chain too deep: re-base against the nearest ancestor
@@ -450,6 +511,14 @@ pub fn repack(
                         report.rebased_delta += 1;
                         new_depth.insert(id, new_depth[&anc] + 1);
                         new_bytes.insert(id, obj.encode());
+                        new_meta.insert(
+                            id,
+                            EntryMeta {
+                                kind: ObjectKind::Delta,
+                                parent: Some(anc),
+                                depth: new_depth[&id] as u32,
+                            },
+                        );
                     }
                     None => {
                         // Promote to a new raw base: the payload *is* the
@@ -462,6 +531,10 @@ pub fn repack(
                         };
                         new_depth.insert(id, 0);
                         new_bytes.insert(id, raw.encode());
+                        new_meta.insert(
+                            id,
+                            EntryMeta { kind: ObjectKind::Raw, parent: None, depth: 0 },
+                        );
                     }
                 }
             }
@@ -499,14 +572,17 @@ pub fn repack(
     //    incremental mode only freshly encoded (former loose) objects
     //    are in `new_bytes`; in full mode every live object is.
     // ------------------------------------------------------------------
-    let mut writer = PackWriter::create(&pack_dir)?;
+    let mut writer = PackWriter::create_with(&pack_dir, cfg.framing)?;
     for &id in &order {
         if let Some(bytes) = new_bytes.get(&id) {
-            writer.add(id, bytes)?;
+            writer.add_with_meta(id, bytes, new_meta[&id])?;
             report.packed += 1;
         }
     }
     for &id in &dead_carry {
+        // Dead objects carry best-effort inferred metadata (exact
+        // kind/parent from the object header; depth is a lower bound
+        // when the parent landed later in the sorted dead sweep).
         writer.add(id, &store.get(&id)?)?;
         report.carried_dead += 1;
     }
@@ -887,6 +963,83 @@ mod tests {
             }
         }
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// Tentpole: over a multi-generation v2 store with every live object
+    /// sealed in packs, the incremental mark phase must not decode a
+    /// single payload — it walks pure index metadata.
+    #[test]
+    fn incremental_mark_is_decode_free_on_v2_packs() {
+        let (dir, mut store) = tmp_store("meta-mark");
+        let ids = build_chain(&store, 5, 13);
+        let mut tip = *ids.last().unwrap();
+        let inc = RepackConfig {
+            max_chain_depth: 8,
+            mode: RepackMode::Incremental,
+            ..RepackConfig::default()
+        };
+        // Two generations of v2 packs.
+        repack(&mut store, &[tip], &inc, &NativeKernel).unwrap();
+        tip = *extend_chain(&store, tip, 2, 14).last().unwrap();
+        repack(&mut store, &[tip], &inc, &NativeKernel).unwrap();
+        assert_eq!(store.as_packed().unwrap().packs().len(), 2);
+
+        // Third run with nothing staged: all live objects are packed
+        // with v2 metadata, so the mark phase is pure index walking.
+        let r = repack(&mut store, &[tip], &inc, &NativeKernel).unwrap();
+        assert_eq!(r.packed, 0);
+        assert_eq!(
+            r.mark_payload_decodes, 0,
+            "metadata mark must not decode payloads"
+        );
+        assert_eq!(
+            r.mark_meta_fallback, 0,
+            "fully v2-packed store must not need byte reads during mark"
+        );
+
+        // The decode_mark oracle really does decode (counter sanity).
+        let oracle = RepackConfig { decode_mark: true, ..inc };
+        let r = repack(&mut store, &[tip], &oracle, &NativeKernel).unwrap();
+        assert!(r.mark_payload_decodes > 0, "oracle path must count decodes");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// The metadata mark and the legacy decode mark must produce
+    /// byte-identical packs and indexes (same liveness, same order, same
+    /// re-encodings, same persisted metadata).
+    #[test]
+    fn metadata_mark_matches_decode_mark_byte_identical() {
+        let run = |tag: &str, decode_mark: bool| -> (Vec<u8>, Vec<u8>, u64) {
+            let (dir, mut store) = tmp_store(tag);
+            let ids = build_chain(&store, 6, 77);
+            let tip = *ids.last().unwrap();
+            let full = RepackConfig {
+                max_chain_depth: 8,
+                mode: RepackMode::Full,
+                ..RepackConfig::default()
+            };
+            repack(&mut store, &[tip], &full, &NativeKernel).unwrap();
+            let ext = extend_chain(&store, tip, 4, 88);
+            let cfg = RepackConfig {
+                max_chain_depth: 8,
+                mode: RepackMode::Incremental,
+                decode_mark,
+                ..RepackConfig::default()
+            };
+            let r =
+                repack(&mut store, &[*ext.last().unwrap()], &cfg, &NativeKernel).unwrap();
+            let pack_path = r.pack_path.expect("loose extension must produce a pack");
+            let pack = std::fs::read(&pack_path).unwrap();
+            let idx = std::fs::read(PackFile::idx_path(&pack_path)).unwrap();
+            std::fs::remove_dir_all(&dir).unwrap();
+            (pack, idx, r.mark_payload_decodes)
+        };
+        let (pack_meta, idx_meta, decodes_meta) = run("bitid-meta", false);
+        let (pack_oracle, idx_oracle, decodes_oracle) = run("bitid-oracle", true);
+        assert_eq!(decodes_meta, 0, "metadata mark must be decode-free");
+        assert!(decodes_oracle > 0);
+        assert_eq!(pack_meta, pack_oracle, "pack bytes must be identical");
+        assert_eq!(idx_meta, idx_oracle, "index bytes must be identical");
     }
 
     #[test]

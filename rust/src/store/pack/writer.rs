@@ -1,7 +1,10 @@
-//! Streaming pack writer: objects are appended to a temp file with a
-//! running SHA-256; `finish` seals the trailer, renames the pack to its
-//! content hash, and writes the sidecar index.
+//! Streaming pack writer: objects are appended to a temp file (raw
+//! framing) or a zstd stream (zstd framing) with a running SHA-256;
+//! `finish` seals the trailer, renames the pack to its content hash, and
+//! writes the sidecar v2 index (delta-parent/kind/depth metadata per
+//! entry).
 
+use std::collections::HashMap;
 use std::fs::File;
 use std::io::Write;
 use std::path::PathBuf;
@@ -9,8 +12,27 @@ use std::path::PathBuf;
 use anyhow::{Context, Result};
 use sha2::{Digest, Sha256};
 
-use super::{IdxEntry, PackFile, PackIndex, PACK_MAGIC, VERSION};
+use super::{
+    header_len, EntryMeta, IdxEntry, PackFile, PackFraming, PackIndex, PACK_MAGIC, VERSION,
+};
 use crate::store::ObjectId;
+
+/// Where body bytes go between `add` and `finish`.
+enum BodySink {
+    /// Raw framing: written straight through to the temp file (and the
+    /// physical hash) as they arrive.
+    Raw,
+    /// Zstd framing: the uncompressed body accumulates in memory and is
+    /// compressed into one frame at `finish` (the `bulk` API is stable
+    /// across the zstd crate versions the offline registry carries).
+    /// Known cost: peak memory is the pack's full logical body — fine
+    /// for incremental packs (proportional to new data), expensive for
+    /// `--full --framing zstd` over a huge store. Streaming the frame
+    /// through to the temp file while feeding the running checksum is
+    /// the planned fix (ROADMAP).
+    #[cfg(feature = "zstd")]
+    Zstd(Vec<u8>),
+}
 
 pub struct PackWriter {
     dir: PathBuf,
@@ -18,13 +40,33 @@ pub struct PackWriter {
     file: File,
     hasher: Sha256,
     entries: Vec<IdxEntry>,
-    offset: u64,
+    /// Depths of entries already added (feeds [`EntryMeta::infer`] for
+    /// intra-pack parent chains).
+    depths: HashMap<ObjectId, u32>,
+    /// The framing sink (which framing was chosen lives in the pack
+    /// header bytes already written).
+    sink: BodySink,
+    /// Physical bytes written so far (file offset).
+    physical: u64,
+    /// Logical offset: equal to `physical` for raw framing; tracks the
+    /// *decoded* image for zstd framing (what index offsets refer to).
+    logical: u64,
 }
 
 impl PackWriter {
-    /// Start a new pack in `pack_dir` (created if needed). The file stays
-    /// a `tmp-*.pack` until [`PackWriter::finish`] renames it.
+    /// Start a new raw-framed pack in `pack_dir` (created if needed).
+    /// The file stays a `tmp-*.packtmp` until [`PackWriter::finish`]
+    /// renames it.
     pub fn create(pack_dir: &std::path::Path) -> Result<PackWriter> {
+        Self::create_with(pack_dir, PackFraming::Raw)
+    }
+
+    /// Start a new pack with an explicit outer framing.
+    /// [`PackFraming::Zstd`] needs the `zstd` feature.
+    pub fn create_with(
+        pack_dir: &std::path::Path,
+        framing: PackFraming,
+    ) -> Result<PackWriter> {
         std::fs::create_dir_all(pack_dir)
             .with_context(|| format!("creating pack dir {}", pack_dir.display()))?;
         // Not `.pack`: a crash must not leave something PackedStore::open
@@ -32,33 +74,85 @@ impl PackWriter {
         let tmp_path = pack_dir.join(format!("tmp-{}.packtmp", std::process::id()));
         let file = File::create(&tmp_path)
             .with_context(|| format!("creating {}", tmp_path.display()))?;
+        let sink = match framing {
+            PackFraming::Raw => BodySink::Raw,
+            #[cfg(feature = "zstd")]
+            PackFraming::Zstd => BodySink::Zstd(Vec::new()),
+            #[cfg(not(feature = "zstd"))]
+            PackFraming::Zstd => {
+                let _ = std::fs::remove_file(&tmp_path);
+                anyhow::bail!(
+                    "zstd pack framing is not compiled into this build \
+                     (rebuild with --features zstd)"
+                );
+            }
+        };
         let mut w = PackWriter {
             dir: pack_dir.to_path_buf(),
             tmp_path,
             file,
             hasher: Sha256::new(),
             entries: Vec::new(),
-            offset: 0,
+            depths: HashMap::new(),
+            sink,
+            physical: 0,
+            logical: 0,
         };
-        w.write_hashed(PACK_MAGIC)?;
-        w.write_hashed(&[VERSION])?;
+        w.write_physical(PACK_MAGIC)?;
+        w.write_physical(&[VERSION])?;
+        w.write_physical(&[framing.code()])?;
+        w.logical = header_len(VERSION);
         Ok(w)
     }
 
-    fn write_hashed(&mut self, bytes: &[u8]) -> Result<()> {
+    /// Write bytes to the physical file + running checksum (header,
+    /// raw-framed body, trailer).
+    fn write_physical(&mut self, bytes: &[u8]) -> Result<()> {
         self.file.write_all(bytes)?;
         self.hasher.update(bytes);
-        self.offset += bytes.len() as u64;
+        self.physical += bytes.len() as u64;
         Ok(())
     }
 
-    /// Append one object. Ids must be unique within a pack (checked at
-    /// `finish` when the index is built).
+    /// Write body bytes through the framing sink, advancing the logical
+    /// offset.
+    fn write_body(&mut self, bytes: &[u8]) -> Result<()> {
+        match &mut self.sink {
+            BodySink::Raw => {}
+            #[cfg(feature = "zstd")]
+            BodySink::Zstd(body) => {
+                body.extend_from_slice(bytes);
+                self.logical += bytes.len() as u64;
+                return Ok(());
+            }
+        }
+        self.write_physical(bytes)?;
+        self.logical = self.physical;
+        Ok(())
+    }
+
+    /// Append one object, deriving its index metadata from the object
+    /// header (exact kind/parent; depth exact when the parent is in this
+    /// pack, a lower bound otherwise). Ids must be unique within a pack
+    /// (checked at `finish` when the index is built).
     pub fn add(&mut self, id: ObjectId, bytes: &[u8]) -> Result<()> {
-        self.write_hashed(&(bytes.len() as u64).to_le_bytes())?;
-        let offset = self.offset;
-        self.write_hashed(bytes)?;
-        self.entries.push(IdxEntry { id, offset, len: bytes.len() as u64 });
+        let meta = EntryMeta::infer(bytes, |p| self.depths.get(p).copied());
+        self.add_with_meta(id, bytes, meta)
+    }
+
+    /// Append one object with caller-supplied index metadata (the
+    /// repacker passes globally exact chain depths).
+    pub fn add_with_meta(&mut self, id: ObjectId, bytes: &[u8], meta: EntryMeta) -> Result<()> {
+        self.write_body(&(bytes.len() as u64).to_le_bytes())?;
+        let offset = self.logical;
+        self.write_body(bytes)?;
+        self.depths.insert(id, meta.depth);
+        self.entries.push(IdxEntry {
+            id,
+            offset,
+            len: bytes.len() as u64,
+            meta: Some(meta),
+        });
         Ok(())
     }
 
@@ -66,11 +160,24 @@ impl PackWriter {
         self.entries.len()
     }
 
-    /// Seal the pack: write the count trailer + checksum, rename to
-    /// `pack-<sha256>.pack`, and write the sidecar `.idx`.
+    /// Seal the pack: flush the framed body (zstd), write the count
+    /// trailer + checksum, rename to `pack-<sha256>.pack`, and write the
+    /// sidecar v2 `.idx`.
     pub fn finish(mut self) -> Result<PackFile> {
+        match std::mem::replace(&mut self.sink, BodySink::Raw) {
+            BodySink::Raw => {}
+            #[cfg(feature = "zstd")]
+            BodySink::Zstd(body) => {
+                let zbytes =
+                    zstd::bulk::compress(&body, 6).context("sealing zstd pack frame")?;
+                debug_assert_eq!(body.len() as u64, self.logical - header_len(VERSION));
+                let ulen = body.len() as u64;
+                self.write_physical(&ulen.to_le_bytes())?;
+                self.write_physical(&zbytes)?;
+            }
+        }
         let count = self.entries.len() as u64;
-        self.write_hashed(&count.to_le_bytes())?;
+        self.write_physical(&count.to_le_bytes())?;
         let PackWriter { dir, tmp_path, mut file, hasher, entries, .. } = self;
         let sha: [u8; 32] = hasher.finalize().into();
         file.write_all(&sha)?;
@@ -90,6 +197,7 @@ impl PackWriter {
 
     /// Drop the partial pack without sealing it.
     pub fn abort(self) -> Result<()> {
+        drop(self.sink);
         drop(self.file);
         if self.tmp_path.exists() {
             std::fs::remove_file(&self.tmp_path)?;

@@ -116,6 +116,12 @@ fn log_stats_fsck_json_byte_stable() {
     assert!(stats.req_usize("delta_objects").unwrap() >= 1);
     assert!(!stats.req_arr("packs").unwrap().is_empty());
     assert!(stats.req_f64("compression_ratio").unwrap() > 0.0);
+    // v2 pack metadata surfaces per generation: format version, outer
+    // framing, and the index-recorded max chain depth.
+    let gen0 = &stats.req_arr("packs").unwrap()[0];
+    assert_eq!(gen0.req_usize("version").unwrap(), 2);
+    assert_eq!(gen0.req_str("framing").unwrap(), "raw");
+    assert!(gen0.req_usize("max_depth").unwrap() >= 1);
 
     let fsck = mgit::util::json::parse(&snapshot("fsck")).unwrap();
     assert_eq!(fsck.get("ok").unwrap().as_bool(), Some(true));
@@ -224,6 +230,8 @@ fn report_failure_contracts() {
         packs: vec![ops::PackCheck {
             path: "p.pack".into(),
             objects: 1,
+            version: 2,
+            framing: "raw",
             structure_ok: false,
             error: Some("checksum mismatch".into()),
         }],
