@@ -1,0 +1,281 @@
+//! Concurrent load harness for `mgit serve`: latency percentiles and
+//! throughput under keep-alive client fleets, cross-checked against the
+//! server's own `/metrics` histogram.
+//!
+//! No runtime/artifacts needed: a synthetic lineage (12 delta-compressed
+//! versions of a 512 KiB model) is built inline and fully repacked.
+//! Each level spins N ∈ {8, 64, 256} client threads; every client holds
+//! one persistent HTTP/1.1 connection (parsing `Content-Length` framed
+//! responses) and works through a fixed quota of requests over a mixed
+//! `/log` + `/stats` + `/checkpoint/<node>` workload. Rows report
+//! client-observed p50/p99 latency and aggregate requests/second, and
+//! land in `$MGIT_BENCH_JSON` via `common::bench_json`.
+//!
+//! The final section fetches `GET /metrics` and asserts the server's
+//! `request_micros` histogram counted *exactly* the requests the clients
+//! completed — the deterministic record-before-first-byte contract the
+//! serving tier guarantees (see `rust/src/ops/serve.rs`).
+//!
+//! `MGIT_SCALE=small` shrinks the per-client quota for CI smoke runs.
+
+mod common;
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::Path;
+use std::time::Instant;
+
+use mgit::checkpoint::{Checkpoint, ModelZoo};
+use mgit::delta::{self, CompressConfig, NativeKernel};
+use mgit::ops::serve::{Server, MAX_REQUESTS_PER_CONN};
+use mgit::ops::{self, Repo};
+use mgit::util::json;
+use mgit::util::rng::Rng;
+use mgit::util::timing::Timer;
+
+const N_TENSORS: usize = 8;
+const TENSOR_SIZE: usize = 16 * 1024;
+const VERSIONS: usize = 12;
+const POOL: usize = 8;
+const LEVELS: [usize; 3] = [8, 64, 256];
+
+fn quota() -> usize {
+    match std::env::var("MGIT_SCALE").as_deref() {
+        Ok("small") => 6,
+        _ => 32,
+    }
+}
+
+fn manifest() -> String {
+    let layout: Vec<String> = (0..N_TENSORS)
+        .map(|i| {
+            format!(
+                r#"{{"name":"w.t{i}","shape":[{TENSOR_SIZE}],"offset":{},"size":{TENSOR_SIZE},"init":"normal"}}"#,
+                i * TENSOR_SIZE
+            )
+        })
+        .collect();
+    format!(
+        r#"{{
+          "vocab": 16, "max_seq": 4, "n_classes": 2, "batch": 2,
+          "delta_chunk": 4096,
+          "special_tokens": {{"cls": 14, "mask": 15, "ignore_label": -100}},
+          "archs": {{"bench": {{
+              "d_model": 8, "n_layers": 1, "n_heads": 1, "d_ff": 16,
+              "param_count": {},
+              "layout": [{}],
+              "dag": {{"nodes": [], "edges": []}}
+          }}}},
+          "artifacts": {{"bench": {{}}}},
+          "delta_kernels": {{"quant": "q", "dequant": "d"}}
+        }}"#,
+        N_TENSORS * TENSOR_SIZE,
+        layout.join(",")
+    )
+}
+
+fn build_repo(dir: &Path, zoo: &ModelZoo) -> Vec<String> {
+    let spec = zoo.arch("bench").unwrap();
+    Repo::init(dir).unwrap();
+    let mut repo = Repo::open(dir).unwrap();
+    let root = Checkpoint::init(spec, 7);
+    let (sm, _) = delta::store_raw(&repo.store, spec, &root).unwrap();
+    let idx = repo.graph.add_node("bench/v1", "bench").unwrap();
+    repo.graph.node_mut(idx).stored = Some(sm.clone());
+    let mut names = vec!["bench/v1".to_string()];
+    let mut prev = (root, sm);
+    let mut prev_idx = idx;
+    for v in 1..VERSIONS as u64 {
+        let mut rng = Rng::new(v + 500);
+        let child = Checkpoint {
+            arch: prev.0.arch.clone(),
+            flat: prev.0.flat.iter().map(|&x| x + rng.normal_f32(0.0, 1e-4)).collect(),
+        };
+        let cand = delta::prepare_delta(
+            &repo.store,
+            spec,
+            &child,
+            spec,
+            &prev.0,
+            &prev.1,
+            CompressConfig::default(),
+            &NativeKernel,
+        )
+        .unwrap();
+        delta::commit(&repo.store, &cand).unwrap();
+        let name = format!("bench/v{}", v + 1);
+        let n = repo.graph.add_node(&name, "bench").unwrap();
+        repo.graph.node_mut(n).stored = Some(cand.model.clone());
+        repo.graph.add_version_edge(prev_idx, n).unwrap();
+        names.push(name);
+        prev = (cand.checkpoint, cand.model);
+        prev_idx = n;
+    }
+    repo.save().unwrap();
+    ops::RepackRequest::default().run(&mut Repo::open(dir).unwrap()).unwrap();
+    names
+}
+
+/// One persistent HTTP/1.1 connection: requests are written without
+/// `Connection: close`, responses are framed by `Content-Length`, so a
+/// single TCP stream carries the client's whole quota.
+struct KeepAliveClient {
+    reader: BufReader<TcpStream>,
+}
+
+impl KeepAliveClient {
+    fn connect(addr: SocketAddr) -> KeepAliveClient {
+        let stream = TcpStream::connect(addr).unwrap();
+        let _ = stream.set_nodelay(true);
+        KeepAliveClient { reader: BufReader::new(stream) }
+    }
+
+    fn get(&mut self, path: &str) -> (u16, Vec<u8>) {
+        write!(self.reader.get_mut(), "GET {path} HTTP/1.1\r\nHost: bench\r\n\r\n")
+            .unwrap();
+        let mut line = String::new();
+        self.reader.read_line(&mut line).unwrap();
+        let status: u16 = line
+            .split_whitespace()
+            .nth(1)
+            .unwrap_or_else(|| panic!("bad status line {line:?} for {path}"))
+            .parse()
+            .unwrap();
+        let mut content_len = 0usize;
+        loop {
+            let mut h = String::new();
+            self.reader.read_line(&mut h).unwrap();
+            if h == "\r\n" || h == "\n" || h.is_empty() {
+                break;
+            }
+            if let Some(v) = h.to_ascii_lowercase().strip_prefix("content-length:") {
+                content_len = v.trim().parse().unwrap();
+            }
+        }
+        let mut body = vec![0u8; content_len];
+        self.reader.read_exact(&mut body).unwrap();
+        (status, body)
+    }
+}
+
+/// Drive `clients` concurrent keep-alive clients through `per_client`
+/// requests each; returns (wall seconds, all per-request latencies µs).
+fn drive(
+    addr: SocketAddr,
+    clients: usize,
+    per_client: usize,
+    paths: &[String],
+) -> (f64, Vec<u64>) {
+    let t = Timer::start();
+    let mut all = Vec::with_capacity(clients * per_client);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for c in 0..clients {
+            handles.push(scope.spawn(move || {
+                let mut client = KeepAliveClient::connect(addr);
+                let mut lat = Vec::with_capacity(per_client);
+                for i in 0..per_client {
+                    let path = &paths[(c + i) % paths.len()];
+                    let t0 = Instant::now();
+                    let (status, _body) = client.get(path);
+                    assert_eq!(status, 200, "non-200 for {path}");
+                    lat.push(t0.elapsed().as_micros() as u64);
+                }
+                lat
+            }));
+        }
+        for h in handles {
+            all.extend(h.join().unwrap());
+        }
+    });
+    (t.elapsed_secs(), all)
+}
+
+/// The `q`-quantile of an already-sorted latency list (nearest-rank).
+fn pctile(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = ((q * sorted.len() as f64).ceil() as usize).max(1);
+    sorted[rank.min(sorted.len()) - 1]
+}
+
+fn main() {
+    let per_client = quota();
+    assert!(
+        (per_client as u64) < MAX_REQUESTS_PER_CONN,
+        "client quota must fit one keep-alive connection"
+    );
+    let dir = std::env::temp_dir().join(format!("mgit-serve-load-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let zoo = ModelZoo::from_json(&json::parse(&manifest()).unwrap()).unwrap();
+    let names = build_repo(&dir, &zoo);
+
+    let server = Server::bind(Repo::open(&dir).unwrap(), Some(zoo), 0, POOL).unwrap();
+    let addr = server.local_addr().unwrap();
+    let handle = server.handle().unwrap();
+    let srv = std::thread::spawn(move || server.serve().unwrap());
+
+    // Mixed workload: cheap JSON endpoints interleaved with 512 KiB
+    // checkpoint streams over every version of the chain.
+    let mut paths = vec!["/log".to_string(), "/stats".to_string()];
+    paths.extend(names.iter().map(|n| format!("/checkpoint/{n}")));
+
+    println!(
+        "serve load: pool {POOL}, {per_client} requests/client, {} mixed paths",
+        paths.len()
+    );
+    println!(
+        "  {:>8} {:>10} {:>12} {:>12} {:>12}",
+        "clients", "wall", "req/s", "p50", "p99"
+    );
+    let mut issued = 0u64;
+    for clients in LEVELS {
+        let (secs, mut lat) = drive(addr, clients, per_client, &paths);
+        lat.sort_unstable();
+        issued += lat.len() as u64;
+        let req_s = lat.len() as f64 / secs;
+        let (p50, p99) = (pctile(&lat, 0.50), pctile(&lat, 0.99));
+        println!(
+            "  {clients:>8} {secs:>9.2}s {req_s:>12.0} {p50:>10}µs {p99:>10}µs"
+        );
+        common::bench_json("serve_load", &format!("req_per_s_c{clients}"), req_s);
+        common::bench_json("serve_load", &format!("p50_micros_c{clients}"), p50 as f64);
+        common::bench_json("serve_load", &format!("p99_micros_c{clients}"), p99 as f64);
+    }
+
+    // Cross-check: the server's own request histogram must have counted
+    // exactly the requests our clients completed (metrics are recorded
+    // before the first response byte; `/metrics` excludes itself).
+    let mut probe = KeepAliveClient::connect(addr);
+    let (status, body) = probe.get("/metrics");
+    assert_eq!(status, 200);
+    let snap = json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    let hist = snap
+        .get("server")
+        .unwrap()
+        .get("histograms")
+        .unwrap()
+        .get("request_micros")
+        .unwrap();
+    let server_count = hist.req_usize("count").unwrap() as u64;
+    assert_eq!(
+        server_count, issued,
+        "server histogram disagrees with client-side request count"
+    );
+    let (sp50, sp99) =
+        (hist.req_usize("p50").unwrap(), hist.req_usize("p99").unwrap());
+    println!(
+        "cross-check: /metrics histogram count {server_count} == {issued} issued; \
+         server-side p50 {sp50}µs p99 {sp99}µs (log2-bucket upper bounds)"
+    );
+    common::bench_json("serve_load", "server_hist_count", server_count as f64);
+
+    handle.shutdown();
+    let report = srv.join().unwrap();
+    println!("total: {} requests, {} errors", report.requests, report.errors);
+    assert_eq!(report.errors, 0, "load run must be error-free");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

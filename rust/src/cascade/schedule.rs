@@ -38,6 +38,17 @@ use crate::update::{CheckpointStore, CreationExecutor};
 use super::journal::CascadeJournal;
 use super::plan::{CascadePlan, PlanTask};
 
+// Process-global scheduler metrics (`mgit serve` exposes them via
+// `GET /metrics`). Updated only at points where the scheduler already
+// holds its own lock or is outside any lock — a relaxed atomic op each,
+// never a new mutex acquisition.
+static TASK_MICROS: crate::obs::LazyHistogram =
+    crate::obs::LazyHistogram::new("cascade.task_micros");
+static QUEUE_DEPTH: crate::obs::LazyGauge =
+    crate::obs::LazyGauge::new("cascade.queue_depth");
+static TASKS_DONE: crate::obs::LazyCounter =
+    crate::obs::LazyCounter::new("cascade.tasks_completed");
+
 /// Completed-task results as replayed from a journal: task id -> the
 /// stored models of every member.
 pub type DoneTasks = HashMap<usize, Vec<(NodeIdx, StoredModel)>>;
@@ -138,6 +149,7 @@ fn worker(
                 }
                 if let Some(t) = st.ready.pop_front() {
                     st.running += 1;
+                    QUEUE_DEPTH.set(st.ready.len() as i64);
                     break t;
                 }
                 if st.running == 0 {
@@ -156,6 +168,7 @@ fn worker(
         };
 
         let task = &plan.tasks[tid];
+        let started = std::time::Instant::now();
         let outcome = run_task(g, task, ckstore, exec, state).and_then(|outs| {
             // Journal outside the scheduler lock: the record is a write +
             // fsync, and serializing every worker behind it would bend
@@ -171,6 +184,8 @@ fn worker(
         st.running -= 1;
         match outcome {
             Ok(outs) => {
+                TASK_MICROS.observe(started.elapsed().as_micros() as u64);
+                TASKS_DONE.inc();
                 for (idx, sm) in outs {
                     st.results.insert(idx, sm);
                 }
@@ -181,6 +196,7 @@ fn worker(
                     }
                 }
                 st.remaining -= 1;
+                QUEUE_DEPTH.set(st.ready.len() as i64);
                 cv.notify_all();
             }
             Err(e) => {

@@ -27,8 +27,10 @@
 //!                                # (wavefront-parallel over N workers)
 //! mgit cascade --resume [--jobs N|auto]  # finish an interrupted cascade
 //! mgit stats                     # store/dedup/chain-depth statistics
-//! mgit serve [--port N] [--pool N|auto]  # HTTP front-end on the
-//!                                # concurrent read tier (docs/API.md)
+//! mgit serve [--port N] [--pool N|auto] [--log-requests]
+//!                                # HTTP front-end on the concurrent
+//!                                # read tier; /metrics for live
+//!                                # counters/latency (docs/API.md)
 //! ```
 //!
 //! Exit status: nonzero when the operation errors *or* when its report
@@ -207,7 +209,8 @@ fn cmd_serve(root: &Path, artifacts: &Path, args: &Args, json: bool) -> Result<(
             artifacts.display()
         );
     }
-    let server = ops::serve::Server::bind(repo, zoo, port, pool)?;
+    let server = ops::serve::Server::bind(repo, zoo, port, pool)?
+        .with_log_requests(args.has("log-requests"));
     // Status chatter goes to stderr so stdout stays JSON-clean.
     eprintln!(
         "mgit serve: listening on http://{} ({} workers)",
@@ -258,9 +261,11 @@ usage: mgit <command> [args] [--flags]
                              interrupted run
   auto-insert                rebuild provenance edges automatically (§3.2)
   serve                      HTTP front-end on the concurrent read tier
-                             [--port 7421] [--pool N|auto]; endpoints
-                             /log /stats /show/<node> /diff/<a>/<b>
-                             /checkpoint/<node> /object/<id> (docs/API.md)
+                             [--port 7421] [--pool N|auto]
+                             [--log-requests] (JSON request log, stderr);
+                             endpoints /log /stats /show/<node>
+                             /diff/<a>/<b> /checkpoint/<node>
+                             /object/<id> /metrics (docs/API.md)
 
 global flags: --dir DIR  --artifacts DIR  --json (machine-readable reports)
 ";

@@ -465,6 +465,12 @@ pub struct ResolveCache {
     max_bytes: u64,
     hits: AtomicU64,
     misses: AtomicU64,
+    /// Cumulative LRU evictions. Updated while `inner`'s lock is already
+    /// held (inserts), read lock-free — observability must not add lock
+    /// acquisitions to any cache path.
+    evictions: AtomicU64,
+    /// Lock-free mirror of `inner.bytes`, refreshed after each insert.
+    resident: AtomicU64,
 }
 
 struct ResolveCacheInner {
@@ -500,6 +506,8 @@ impl ResolveCache {
             max_bytes,
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            resident: AtomicU64::new(0),
         }
     }
 
@@ -550,6 +558,7 @@ impl ResolveCache {
                 Some(k) => {
                     if let Some((v, _)) = inner.map.remove(&k) {
                         inner.bytes -= v.len() as u64 * 4;
+                        self.evictions.fetch_add(1, Ordering::Relaxed);
                     }
                 }
                 None => break,
@@ -558,6 +567,7 @@ impl ResolveCache {
         let arc = Arc::new(values);
         inner.map.insert(id, (arc.clone(), tick));
         inner.bytes += new_bytes;
+        self.resident.store(inner.bytes, Ordering::Relaxed);
         arc
     }
 
@@ -574,6 +584,17 @@ impl ResolveCache {
     /// Cumulative (hits, misses) since construction.
     pub fn counters(&self) -> (u64, u64) {
         (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+
+    /// Cumulative LRU evictions since construction (lock-free read).
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// Payload bytes currently resident, as of the last insert
+    /// (lock-free read of a mirror; see `len` for an exact locked count).
+    pub fn resident_bytes(&self) -> u64 {
+        self.resident.load(Ordering::Relaxed)
     }
 
     /// Fraction of lookups served from cache (0.0 when none happened).
@@ -1095,6 +1116,32 @@ mod tests {
         cache.insert(id(999), vec![0.0; 1024]);
         assert!(cache.get(&id(999)).is_some());
         assert_eq!(cache.len(), 1);
+    }
+
+    /// The accounting counters exposed to `/metrics` — evictions and
+    /// resident bytes — must track the cache's actual behavior.
+    #[test]
+    fn resolve_cache_accounting_counters() {
+        let id = |i: u32| crate::store::hash_bytes(&i.to_le_bytes());
+        let cache = ResolveCache::new(4);
+        assert_eq!(cache.evictions(), 0);
+        assert_eq!(cache.resident_bytes(), 0);
+        for i in 0..4u32 {
+            cache.insert(id(i), vec![i as f32; 8]); // 32 bytes each
+        }
+        assert_eq!(cache.evictions(), 0, "under capacity: nothing evicted");
+        assert_eq!(cache.resident_bytes(), 4 * 32);
+        // Each further insert evicts exactly one LRU entry; resident
+        // bytes stay at capacity.
+        for i in 4..10u32 {
+            cache.insert(id(i), vec![i as f32; 8]);
+        }
+        assert_eq!(cache.evictions(), 6);
+        assert_eq!(cache.resident_bytes(), 4 * 32);
+        // Re-inserting a resident id is a no-op for both counters.
+        cache.insert(id(9), vec![0.0; 8]);
+        assert_eq!(cache.evictions(), 6);
+        assert_eq!(cache.resident_bytes(), 4 * 32);
     }
 
     /// Eviction is LRU, not FIFO: a base tensor inserted first but hit

@@ -17,8 +17,10 @@
 //!
 //! Supporting substrates (everything the paper depends on, built here):
 //! synthetic [`data`] tasks, [`train`]-ing creation functions, a federated
-//! learning controller ([`fl`]), model [`workloads`] G1–G5, and
-//! dependency-free [`util`] (JSON, PRNG, CLI parsing, property testing).
+//! learning controller ([`fl`]), model [`workloads`] G1–G5,
+//! dependency-free [`util`] (JSON, PRNG, CLI parsing, property testing),
+//! and lock-free process metrics ([`obs`]: counters/gauges/histograms,
+//! exposed by `mgit serve` as `GET /metrics`).
 //!
 //! The public entry point is the typed operations API in [`ops`]: every
 //! repository operation is a request struct returning a serializable
@@ -37,6 +39,7 @@ pub mod fl;
 pub mod lineage;
 pub mod merge;
 pub mod modeldag;
+pub mod obs;
 pub mod ops;
 pub mod registry;
 pub mod runtime;

@@ -1,0 +1,549 @@
+//! Process-wide observability: atomic counters, gauges and log2 latency
+//! histograms behind a named [`Registry`].
+//!
+//! The design constraint is the storage tier's concurrency contract
+//! (`docs/STORAGE.md`): pack reads and `ResolveCache` hits are lock-free
+//! today, and instrumenting them must not add a lock. Every metric is
+//! therefore plain atomics:
+//!
+//! * [`Counter`] — monotonic `AtomicU64` (`inc`/`add` are single
+//!   `fetch_add`s).
+//! * [`Gauge`] — signed `AtomicI64` level (in-flight requests, queue
+//!   depth, resident bytes).
+//! * [`Histogram`] — fixed array of power-of-two buckets: `observe(v)`
+//!   is three relaxed `fetch_add`s (bucket, count, sum), and
+//!   p50/p90/p99 are *derived* from the bucket counts at read time
+//!   ([`Histogram::quantile`]), so the hot path never sorts or
+//!   allocates. Bucket `i` holds values `v ≤ 2^i`; quantiles report the
+//!   bucket upper bound (≤ 2× the true value — plenty for tail-latency
+//!   dashboards).
+//!
+//! A [`Registry`] is a name → metric map. Registration (`counter`/
+//! `gauge`/`histogram`) takes a short mutex and hands back an
+//! `Arc`-shared handle; callers resolve once and keep the handle, so
+//! the lock is never on a per-event path. Two registries matter in
+//! practice:
+//!
+//! * [`global()`] — the process-wide registry. Layer-level telemetry
+//!   (store reads, payload decodes, cascade scheduling) lands here via
+//!   the [`LazyCounter`]/[`LazyGauge`]/[`LazyHistogram`] statics, which
+//!   resolve their handle once under a `OnceLock` and are lock-free
+//!   afterwards.
+//! * Per-instance registries — `mgit serve` gives each server its own
+//!   ([`crate::ops::serve`]), so concurrent servers in one process
+//!   (tests!) don't bleed request counts into each other. `GET
+//!   /metrics` renders both.
+//!
+//! Rendering: [`Registry::snapshot`] → [`crate::util::json::Json`] and
+//! [`Registry::render_prometheus`] → the text exposition format
+//! (`# TYPE` lines, cumulative `_bucket{le="..."}` histograms).
+//! Snapshots are taken metric-by-metric with relaxed loads: a snapshot
+//! racing live traffic can be off by in-flight events, which is the
+//! usual (and documented) contract for scrape-based metrics.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::util::json::Json;
+
+/// Number of histogram buckets: bucket `i` covers values up to `2^i`,
+/// so 48 buckets span `1 µs .. ~8.9 years` in microseconds — any
+/// latency this codebase can produce lands in a real bucket, and the
+/// whole histogram is 48 atomics (384 bytes).
+pub const HIST_BUCKETS: usize = 48;
+
+// ---------------------------------------------------------------------------
+// Metric primitives
+// ---------------------------------------------------------------------------
+
+/// Monotonic event counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub const fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Overwrite the value — for counters *mirrored* from another
+    /// subsystem's own atomics (e.g. `ResolveCache` hit counts pulled
+    /// into a registry at scrape time), never for live counting.
+    pub fn store(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A level that can go up and down (in-flight requests, queue depth).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub const fn new() -> Gauge {
+        Gauge(AtomicI64::new(0))
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn dec(&self) {
+        self.add(-1);
+    }
+
+    pub fn add(&self, n: i64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Fixed-bucket log2 histogram; see the module docs for the layout.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    /// The bucket index for `v`: the smallest `i` with `v ≤ 2^i`
+    /// (clamped into the last bucket).
+    fn bucket_index(v: u64) -> usize {
+        if v <= 1 {
+            return 0;
+        }
+        // ceil(log2(v)) for v ≥ 2.
+        let i = 64 - (v - 1).leading_zeros() as usize;
+        i.min(HIST_BUCKETS - 1)
+    }
+
+    /// Upper bound (`le`) of bucket `i`.
+    pub fn bucket_bound(i: usize) -> u64 {
+        1u64 << i.min(63)
+    }
+
+    /// Record one observation — three relaxed `fetch_add`s, lock-free.
+    pub fn observe(&self, v: u64) {
+        self.buckets[Self::bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Total number of observations.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all observed values.
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Point-in-time copy of the per-bucket counts.
+    pub fn bucket_counts(&self) -> [u64; HIST_BUCKETS] {
+        std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed))
+    }
+
+    /// The `q`-quantile (`0.0 ..= 1.0`) derived from bucket counts:
+    /// returns the upper bound of the bucket holding the `ceil(q·n)`-th
+    /// observation (0 when empty). An upper bound, within 2× of the
+    /// true value by construction.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let counts = self.bucket_counts();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, c) in counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Self::bucket_bound(i);
+            }
+        }
+        Self::bucket_bound(HIST_BUCKETS - 1)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+#[derive(Clone)]
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+/// A named collection of metrics.
+///
+/// `counter`/`gauge`/`histogram` are create-or-get: the first call for
+/// a name registers it, later calls return the same `Arc`. The map
+/// mutex is held only during registration and snapshots — callers keep
+/// the returned handle, so incrementing never touches the registry.
+#[derive(Default)]
+pub struct Registry {
+    metrics: Mutex<BTreeMap<String, Metric>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Create-or-get the counter `name`. Panics if `name` is already
+    /// registered as a different metric kind (a programming error — the
+    /// name space is static).
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut m = self.metrics.lock().unwrap();
+        let metric = m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Counter(Arc::new(Counter::new())));
+        match metric {
+            Metric::Counter(c) => Arc::clone(c),
+            _ => panic!("metric `{name}` is not a counter"),
+        }
+    }
+
+    /// Create-or-get the gauge `name` (same contract as `counter`).
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut m = self.metrics.lock().unwrap();
+        let metric = m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Gauge(Arc::new(Gauge::new())));
+        match metric {
+            Metric::Gauge(g) => Arc::clone(g),
+            _ => panic!("metric `{name}` is not a gauge"),
+        }
+    }
+
+    /// Create-or-get the histogram `name` (same contract as `counter`).
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut m = self.metrics.lock().unwrap();
+        let metric = m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Histogram(Arc::new(Histogram::new())));
+        match metric {
+            Metric::Histogram(h) => Arc::clone(h),
+            _ => panic!("metric `{name}` is not a histogram"),
+        }
+    }
+
+    /// JSON snapshot, grouped by kind and sorted by name:
+    ///
+    /// ```text
+    /// {"counters": {name: value, …},
+    ///  "gauges":   {name: value, …},
+    ///  "histograms": {name: {count, sum, p50, p90, p99,
+    ///                        buckets: [{le, count}, …]}, …}}
+    /// ```
+    ///
+    /// Histogram `buckets` lists non-empty buckets only
+    /// (non-cumulative counts; `le` is the bucket's upper bound).
+    pub fn snapshot(&self) -> Json {
+        let metrics = self.metrics.lock().unwrap().clone();
+        let mut counters = Json::obj();
+        let mut gauges = Json::obj();
+        let mut histograms = Json::obj();
+        for (name, metric) in &metrics {
+            match metric {
+                Metric::Counter(c) => counters = counters.set(name.as_str(), c.get()),
+                Metric::Gauge(g) => gauges = gauges.set(name.as_str(), g.get()),
+                Metric::Histogram(h) => {
+                    let counts = h.bucket_counts();
+                    let buckets: Vec<Json> = counts
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, &c)| c > 0)
+                        .map(|(i, &c)| {
+                            Json::obj()
+                                .set("le", Histogram::bucket_bound(i))
+                                .set("count", c)
+                        })
+                        .collect();
+                    histograms = histograms.set(
+                        name.as_str(),
+                        Json::obj()
+                            .set("count", h.count())
+                            .set("sum", h.sum())
+                            .set("p50", h.quantile(0.50))
+                            .set("p90", h.quantile(0.90))
+                            .set("p99", h.quantile(0.99))
+                            .set("buckets", Json::Arr(buckets)),
+                    );
+                }
+            }
+        }
+        Json::obj()
+            .set("counters", counters)
+            .set("gauges", gauges)
+            .set("histograms", histograms)
+    }
+
+    /// Append the Prometheus text exposition of every metric to `out`,
+    /// each name mangled to `<prefix><name>` with `.`/`-`/`/` → `_`.
+    /// Histograms render the conventional cumulative
+    /// `_bucket{le="…"}` series plus `_sum`/`_count`.
+    pub fn render_prometheus(&self, prefix: &str, out: &mut String) {
+        use std::fmt::Write;
+        let metrics = self.metrics.lock().unwrap().clone();
+        for (name, metric) in &metrics {
+            let pname = prom_name(prefix, name);
+            match metric {
+                Metric::Counter(c) => {
+                    let _ = writeln!(out, "# TYPE {pname} counter");
+                    let _ = writeln!(out, "{pname} {}", c.get());
+                }
+                Metric::Gauge(g) => {
+                    let _ = writeln!(out, "# TYPE {pname} gauge");
+                    let _ = writeln!(out, "{pname} {}", g.get());
+                }
+                Metric::Histogram(h) => {
+                    let counts = h.bucket_counts();
+                    let last = counts.iter().rposition(|&c| c > 0);
+                    let _ = writeln!(out, "# TYPE {pname} histogram");
+                    let mut cum = 0u64;
+                    if let Some(last) = last {
+                        for (i, &c) in counts.iter().take(last + 1).enumerate() {
+                            cum += c;
+                            let _ = writeln!(
+                                out,
+                                "{pname}_bucket{{le=\"{}\"}} {cum}",
+                                Histogram::bucket_bound(i)
+                            );
+                        }
+                    }
+                    let _ = writeln!(out, "{pname}_bucket{{le=\"+Inf\"}} {cum}");
+                    let _ = writeln!(out, "{pname}_sum {}", h.sum());
+                    let _ = writeln!(out, "{pname}_count {}", h.count());
+                }
+            }
+        }
+    }
+}
+
+fn prom_name(prefix: &str, name: &str) -> String {
+    let mut out = String::with_capacity(prefix.len() + name.len());
+    out.push_str(prefix);
+    for ch in name.chars() {
+        out.push(if ch.is_ascii_alphanumeric() { ch } else { '_' });
+    }
+    out
+}
+
+/// The process-global registry: layer-level telemetry (store, delta,
+/// cascade) registers here. Servers keep per-instance registries for
+/// request-level metrics; `GET /metrics` renders both.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+// ---------------------------------------------------------------------------
+// Lazily resolved global metrics (for hot-path statics)
+// ---------------------------------------------------------------------------
+
+/// A global-registry counter resolved once and cached: after the first
+/// call, `inc`/`add` are an atomic `OnceLock` load plus one `fetch_add`
+/// — no registry lock on any subsequent event.
+pub struct LazyCounter {
+    name: &'static str,
+    slot: OnceLock<Arc<Counter>>,
+}
+
+impl LazyCounter {
+    pub const fn new(name: &'static str) -> LazyCounter {
+        LazyCounter { name, slot: OnceLock::new() }
+    }
+
+    pub fn handle(&self) -> &Counter {
+        self.slot.get_or_init(|| global().counter(self.name))
+    }
+
+    pub fn inc(&self) {
+        self.handle().inc();
+    }
+
+    pub fn add(&self, n: u64) {
+        self.handle().add(n);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.handle().get()
+    }
+}
+
+/// [`LazyCounter`], for gauges.
+pub struct LazyGauge {
+    name: &'static str,
+    slot: OnceLock<Arc<Gauge>>,
+}
+
+impl LazyGauge {
+    pub const fn new(name: &'static str) -> LazyGauge {
+        LazyGauge { name, slot: OnceLock::new() }
+    }
+
+    pub fn handle(&self) -> &Gauge {
+        self.slot.get_or_init(|| global().gauge(self.name))
+    }
+
+    pub fn set(&self, v: i64) {
+        self.handle().set(v);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.handle().get()
+    }
+}
+
+/// [`LazyCounter`], for histograms.
+pub struct LazyHistogram {
+    name: &'static str,
+    slot: OnceLock<Arc<Histogram>>,
+}
+
+impl LazyHistogram {
+    pub const fn new(name: &'static str) -> LazyHistogram {
+        LazyHistogram { name, slot: OnceLock::new() }
+    }
+
+    pub fn handle(&self) -> &Histogram {
+        self.slot.get_or_init(|| global().histogram(self.name))
+    }
+
+    pub fn observe(&self, v: u64) {
+        self.handle().observe(v);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let r = Registry::new();
+        let c = r.counter("a.count");
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        // Create-or-get returns the same underlying atomic.
+        assert_eq!(r.counter("a.count").get(), 5);
+        let g = r.gauge("a.level");
+        g.inc();
+        g.inc();
+        g.dec();
+        assert_eq!(g.get(), 1);
+        g.set(-3);
+        assert_eq!(g.get(), -3);
+    }
+
+    #[test]
+    fn histogram_buckets_and_quantiles() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile(0.5), 0, "empty histogram");
+        // 0 and 1 land in bucket 0; 2^i lands exactly in bucket i.
+        assert_eq!(Histogram::bucket_index(0), 0);
+        assert_eq!(Histogram::bucket_index(1), 0);
+        assert_eq!(Histogram::bucket_index(2), 1);
+        assert_eq!(Histogram::bucket_index(3), 2);
+        assert_eq!(Histogram::bucket_index(4), 2);
+        assert_eq!(Histogram::bucket_index(1024), 10);
+        assert_eq!(Histogram::bucket_index(u64::MAX), HIST_BUCKETS - 1);
+        // 90 fast observations and 10 slow ones: p50 stays in the fast
+        // bucket, p99 reports (an upper bound of) the slow one.
+        for _ in 0..90 {
+            h.observe(100);
+        }
+        for _ in 0..10 {
+            h.observe(90_000);
+        }
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.sum(), 90 * 100 + 10 * 90_000);
+        assert_eq!(h.quantile(0.50), 128);
+        assert_eq!(h.quantile(0.90), 128);
+        assert_eq!(h.quantile(0.99), 131072);
+        // The bucket counts sum to the total count.
+        assert_eq!(h.bucket_counts().iter().sum::<u64>(), h.count());
+    }
+
+    #[test]
+    fn snapshot_shape() {
+        let r = Registry::new();
+        r.counter("reqs").add(7);
+        r.gauge("inflight").set(2);
+        r.histogram("lat").observe(5);
+        let snap = r.snapshot();
+        assert_eq!(snap.get("counters").unwrap().req_usize("reqs").unwrap(), 7);
+        assert_eq!(snap.get("gauges").unwrap().req_usize("inflight").unwrap(), 2);
+        let h = snap.get("histograms").unwrap().get("lat").unwrap();
+        assert_eq!(h.req_usize("count").unwrap(), 1);
+        assert_eq!(h.req_usize("sum").unwrap(), 5);
+        assert_eq!(h.req_usize("p50").unwrap(), 8);
+        assert_eq!(h.req_arr("buckets").unwrap().len(), 1);
+    }
+
+    #[test]
+    fn prometheus_rendering() {
+        let r = Registry::new();
+        r.counter("store.reads").add(3);
+        r.histogram("req-micros").observe(3);
+        r.histogram("req-micros").observe(700);
+        let mut out = String::new();
+        r.render_prometheus("mgit_", &mut out);
+        assert!(out.contains("# TYPE mgit_store_reads counter"));
+        assert!(out.contains("mgit_store_reads 3"));
+        assert!(out.contains("# TYPE mgit_req_micros histogram"));
+        // Cumulative buckets: the 2-value histogram ends at 2 by +Inf.
+        assert!(out.contains("mgit_req_micros_bucket{le=\"4\"} 1"));
+        assert!(out.contains("mgit_req_micros_bucket{le=\"1024\"} 2"));
+        assert!(out.contains("mgit_req_micros_bucket{le=\"+Inf\"} 2"));
+        assert!(out.contains("mgit_req_micros_count 2"));
+        assert!(out.contains("mgit_req_micros_sum 703"));
+    }
+
+    #[test]
+    fn lazy_statics_resolve_against_global() {
+        static C: LazyCounter = LazyCounter::new("obs.test.lazy_counter");
+        C.inc();
+        C.add(2);
+        assert_eq!(global().counter("obs.test.lazy_counter").get(), C.get());
+        assert!(C.get() >= 3);
+    }
+}

@@ -195,6 +195,10 @@ pub struct StatsReport {
     pub chain_mean: f64,
     /// (bucket label, object count), non-empty buckets only.
     pub depth_buckets: Vec<(String, usize)>,
+    /// Objects whose metadata required reading object bytes (loose
+    /// objects, plus packed entries whose index predates persisted
+    /// numel). 0 means the whole report came from pack indexes alone.
+    pub meta_fallback: usize,
 }
 
 impl StatsRequest {
@@ -203,19 +207,38 @@ impl StatsRequest {
         let bytes = repo.store.stored_bytes()?;
         let mut raw_bytes: u64 = 0;
         let mut delta_objs = 0usize;
-        // One header-parse pass (no payload decodes/decompression) feeds
-        // both the byte accounting and (via the parent map) the
-        // chain-depth histogram below. Logical bytes need each tensor's
-        // shape, which pack indexes don't persist, so this pass reads
-        // object bytes — but only parses their headers.
+        let mut meta_fallback = 0usize;
+        // One metadata pass feeds both the byte accounting and (via the
+        // parent map) the chain-depth histogram below. v3 pack indexes
+        // persist each tensor's numel, so packed objects are answered from
+        // pure index metadata — zero object reads, zero payload decodes.
+        // Only loose objects and v2-index entries (which predate persisted
+        // numel) fall back to reading bytes for a header parse; those are
+        // counted in `meta_fallback`.
         let mut parents: std::collections::HashMap<ObjectId, Option<ObjectId>> =
             Default::default();
         for id in &objects {
-            let meta =
-                crate::store::format::TensorObject::decode_meta(&repo.store.get(id)?);
-            if let Some(shape) = &meta.shape {
-                let numel: usize = shape.iter().product();
-                raw_bytes += (numel * 4) as u64;
+            let meta = repo.store.object_meta(id)?;
+            if !meta.from_index {
+                meta_fallback += 1; // loose: header parse read the bytes
+            }
+            let numel = match meta.numel {
+                Some(n) => Some(n),
+                None if meta.from_index
+                    && meta.kind != crate::store::format::ObjectKind::Opaque =>
+                {
+                    // v2 index entry (kind/parent but no numel persisted):
+                    // one header parse of the object bytes.
+                    meta_fallback += 1;
+                    crate::store::format::TensorObject::decode_meta(
+                        &repo.store.get(id)?,
+                    )
+                    .numel
+                }
+                None => None, // opaque blob: no logical tensor bytes
+            };
+            if let Some(n) = numel {
+                raw_bytes += n * 4;
             }
             if meta.kind == crate::store::format::ObjectKind::Delta {
                 delta_objs += 1;
@@ -250,8 +273,9 @@ impl StatsRequest {
                         .file_name()
                         .map(|n| n.to_string_lossy().into_owned())
                         .unwrap_or_else(|| p.path.display().to_string());
-                    // v2 indexes carry a depth per entry; v1 carry none.
-                    let max_depth = (p.index.version == crate::store::pack::VERSION)
+                    // v2+ indexes carry a depth per entry; v1 carry none.
+                    let max_depth = (p.index.version
+                        >= crate::store::pack::IDX_VERSION_2)
                         .then(|| {
                             p.index
                                 .entries
@@ -313,6 +337,7 @@ impl StatsRequest {
             chain_max,
             chain_mean,
             depth_buckets,
+            meta_fallback,
         })
     }
 }
@@ -374,6 +399,7 @@ impl Report for StatsReport {
             .set("bytes_written", self.bytes_written)
             .set("chain_max", self.chain_max)
             .set("chain_mean", self.chain_mean)
+            .set("meta_fallback", self.meta_fallback)
             .set(
                 "depth_buckets",
                 Json::Arr(

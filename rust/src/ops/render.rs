@@ -155,6 +155,10 @@ impl fmt::Display for StatsReport {
             "chain depth:    max {}, mean {:.2} (over delta objects)",
             self.chain_max, self.chain_mean
         ));
+        lines.push(format!(
+            "meta fallback:  {} object(s) needed a header read",
+            self.meta_fallback
+        ));
         for (label, n) in &self.depth_buckets {
             lines.push(format!("  depth {label:<9} {n}"));
         }

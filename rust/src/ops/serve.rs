@@ -17,30 +17,61 @@
 //! |                          | order), delta chains resolved through the shared |
 //! |                          | cache — bit-exact with [`crate::delta::load`]    |
 //! | `GET /object/<hex-id>`   | the stored object's exact bytes (`Store::get`)   |
+//! | `GET /metrics`           | live metrics: per-server request counters and    |
+//! |                          | latency histograms plus the process registry     |
+//! |                          | (JSON; `?format=prom` for Prometheus text)       |
 //! | `GET /healthz`           | `{"ok": true}`                                   |
 //!
 //! Node names may contain `/` (e.g. `g5/base-mlm`): `show` and
 //! `checkpoint` treat the whole remaining path as the name, and any
 //! segment may percent-encode reserved characters (`%2F`). The protocol
-//! surface is deliberately tiny — `GET`-only, `Connection: close` — so
-//! it needs no external HTTP crate, matching the repo's no-new-deps
-//! style.
+//! surface is deliberately tiny — `GET`-only (anything else gets a `405`
+//! with an `Allow: GET` header) — so it needs no external HTTP crate,
+//! matching the repo's no-new-deps style.
+//!
+//! ## Keep-alive
+//!
+//! Connections are HTTP/1.1 persistent by default: a worker serves up to
+//! [`MAX_REQUESTS_PER_CONN`] requests per connection, closing early on
+//! `Connection: close`, an HTTP/1.0 request line, or ~5 s of idleness
+//! between requests (the first request gets a longer 10 s grace). Load
+//! clients amortize the TCP handshake across a whole request stream,
+//! which is what `benches/serve_load.rs` measures.
+//!
+//! ## Observability
+//!
+//! Every server owns a *per-instance* [`Registry`] (concurrent servers
+//! in one process — tests — must not bleed request counts into each
+//! other): request/byte counters, per-endpoint and per-status counters,
+//! an in-flight gauge, and a request-latency histogram. `GET /metrics`
+//! renders that registry alongside the process-global one
+//! ([`crate::obs::global`]: store reads, payload decodes, cascade
+//! timings). Metrics for a request are recorded *before* its first
+//! response byte is written, so once a client has read a response, a
+//! subsequent `/metrics` fetch is guaranteed to include it — the
+//! property the integration tests pin down. `--log-requests` adds a
+//! one-line JSON record per request on stderr.
 
 use std::io::Write;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::checkpoint::ModelZoo;
 use crate::delta::{self, NativeKernel, ResolveCache};
+use crate::obs::{Counter, Gauge, Histogram, Registry};
 use crate::store::ObjectId;
 use crate::tensor::f32_to_bytes;
 use crate::util::json::Json;
 
 use super::{Report, Repo};
+
+/// Hard cap on requests served over one persistent connection: bounds
+/// how long a single client can monopolize a pool worker.
+pub const MAX_REQUESTS_PER_CONN: u64 = 1000;
 
 /// Summary returned when a server shuts down.
 pub struct ServeReport {
@@ -58,6 +89,136 @@ impl Report for ServeReport {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Per-server metrics
+// ---------------------------------------------------------------------------
+
+/// Endpoint labels for per-endpoint request counters. `other` absorbs
+/// unmatched paths (404s on unknown routes).
+const ENDPOINTS: [&str; 9] = [
+    "checkpoint",
+    "diff",
+    "healthz",
+    "log",
+    "metrics",
+    "object",
+    "other",
+    "show",
+    "stats",
+];
+
+/// Status codes with dedicated counters; anything else lands in
+/// `status.other`.
+const STATUSES: [u16; 6] = [200, 400, 404, 405, 500, 503];
+
+/// One server's request metrics: a private [`Registry`] plus handles
+/// resolved once at bind time, so the per-request path is pure relaxed
+/// atomics (the registry mutex is never taken while serving).
+struct ServeMetrics {
+    registry: Registry,
+    requests_total: Arc<Counter>,
+    bytes_sent: Arc<Counter>,
+    request_micros: Arc<Histogram>,
+    inflight: Arc<Gauge>,
+    connections: Arc<Counter>,
+    endpoints: Vec<(&'static str, Arc<Counter>)>,
+    statuses: Vec<(u16, Arc<Counter>)>,
+    status_other: Arc<Counter>,
+    // Mirrors of the shared ResolveCache's own atomics, refreshed at
+    // /metrics scrape time (the cache is the source of truth; mirroring
+    // keeps the hot cache paths free of registry coupling).
+    cache_hits: Arc<Counter>,
+    cache_misses: Arc<Counter>,
+    cache_evictions: Arc<Counter>,
+    cache_resident: Arc<Gauge>,
+}
+
+impl ServeMetrics {
+    fn new() -> ServeMetrics {
+        let registry = Registry::new();
+        let requests_total = registry.counter("requests_total");
+        let bytes_sent = registry.counter("bytes_sent_total");
+        let request_micros = registry.histogram("request_micros");
+        let inflight = registry.gauge("inflight");
+        let connections = registry.counter("connections_total");
+        let endpoints = ENDPOINTS
+            .iter()
+            .map(|e| (*e, registry.counter(&format!("endpoint.{e}"))))
+            .collect();
+        let statuses = STATUSES
+            .iter()
+            .map(|c| (*c, registry.counter(&format!("status.{c}"))))
+            .collect();
+        let status_other = registry.counter("status.other");
+        let cache_hits = registry.counter("cache.hits");
+        let cache_misses = registry.counter("cache.misses");
+        let cache_evictions = registry.counter("cache.evictions");
+        let cache_resident = registry.gauge("cache.resident_bytes");
+        ServeMetrics {
+            registry,
+            requests_total,
+            bytes_sent,
+            request_micros,
+            inflight,
+            connections,
+            endpoints,
+            statuses,
+            status_other,
+            cache_hits,
+            cache_misses,
+            cache_evictions,
+            cache_resident,
+        }
+    }
+
+    fn endpoint(&self, name: &str) -> &Counter {
+        self.endpoints
+            .iter()
+            .find(|(n, _)| *n == name)
+            .or_else(|| self.endpoints.iter().find(|(n, _)| *n == "other"))
+            .map(|(_, c)| c.as_ref())
+            .expect("`other` endpoint counter always registered")
+    }
+
+    fn status(&self, code: u16) -> &Counter {
+        self.statuses
+            .iter()
+            .find(|(c, _)| *c == code)
+            .map(|(_, c)| c.as_ref())
+            .unwrap_or(self.status_other.as_ref())
+    }
+
+    /// Refresh the ResolveCache mirror metrics (scrape-time only).
+    fn sync_cache(&self, cache: &ResolveCache) {
+        let (hits, misses) = cache.counters();
+        self.cache_hits.store(hits);
+        self.cache_misses.store(misses);
+        self.cache_evictions.store(cache.evictions());
+        self.cache_resident.set(cache.resident_bytes() as i64);
+    }
+}
+
+/// RAII in-flight marker: decrements the gauge however the request
+/// handler exits (including error paths).
+struct InflightGuard<'a>(&'a Gauge);
+
+impl<'a> InflightGuard<'a> {
+    fn new(g: &'a Gauge) -> InflightGuard<'a> {
+        g.inc();
+        InflightGuard(g)
+    }
+}
+
+impl Drop for InflightGuard<'_> {
+    fn drop(&mut self) {
+        self.0.dec();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Server
+// ---------------------------------------------------------------------------
+
 /// Shared, read-only serving state (one per server).
 struct ServeState {
     repo: Repo,
@@ -73,6 +234,9 @@ struct ServeState {
     /// Shared across workers so concurrent chain walks reuse resolved
     /// ancestors (PR 2's bounded LRU).
     cache: ResolveCache,
+    metrics: ServeMetrics,
+    /// Emit a one-line JSON record per request on stderr.
+    log_requests: AtomicBool,
     stop: AtomicBool,
     requests: AtomicU64,
     errors: AtomicU64,
@@ -119,11 +283,19 @@ impl Server {
             stats,
             zoo,
             cache: ResolveCache::with_max_bytes(128, 256 << 20),
+            metrics: ServeMetrics::new(),
+            log_requests: AtomicBool::new(false),
             stop: AtomicBool::new(false),
             requests: AtomicU64::new(0),
             errors: AtomicU64::new(0),
         });
         Ok(Server { listener, state, pool: pool.max(1) })
+    }
+
+    /// Toggle per-request stderr logging (`mgit serve --log-requests`).
+    pub fn with_log_requests(self, on: bool) -> Server {
+        self.state.log_requests.store(on, Ordering::Relaxed);
+        self
     }
 
     pub fn local_addr(&self) -> Result<SocketAddr> {
@@ -183,151 +355,326 @@ impl Server {
 // ---------------------------------------------------------------------------
 
 fn handle_connection(state: &ServeState, stream: TcpStream) {
+    state.metrics.connections.inc();
     let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
     let _ = stream.set_write_timeout(Some(Duration::from_secs(60)));
-    match handle_http(state, stream) {
-        Ok(served) => {
-            if served {
-                state.requests.fetch_add(1, Ordering::Relaxed);
+    if handle_http(state, stream).is_err() {
+        state.errors.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// One in-flight request's response side: writes the head exactly once
+/// and records the request's metrics (status/endpoint/latency/bytes —
+/// plus the optional stderr log line) *immediately before* the head
+/// bytes go out. By the time a client has a response, its request is in
+/// the metrics, so `/metrics` reads are deterministic for settled
+/// traffic; the `/metrics` handler itself snapshots before its own head
+/// and is therefore excluded from its own output.
+struct ResponseWriter<'a> {
+    stream: &'a mut TcpStream,
+    metrics: &'a ServeMetrics,
+    log_requests: bool,
+    keep_alive: bool,
+    method: &'a str,
+    path: &'a str,
+    endpoint: &'static str,
+    start: Instant,
+    recorded: bool,
+}
+
+impl ResponseWriter<'_> {
+    fn record(&mut self, code: u16, body_len: usize) {
+        if self.recorded {
+            return;
+        }
+        self.recorded = true;
+        let micros = self.start.elapsed().as_micros() as u64;
+        self.metrics.requests_total.inc();
+        self.metrics.status(code).inc();
+        self.metrics.endpoint(self.endpoint).inc();
+        self.metrics.bytes_sent.add(body_len as u64);
+        self.metrics.request_micros.observe(micros);
+        if self.log_requests {
+            let line = Json::obj()
+                .set("method", self.method)
+                .set("path", self.path)
+                .set("status", code as usize)
+                .set("bytes", body_len)
+                .set("micros", micros)
+                .to_string_compact();
+            eprintln!("{line}");
+        }
+    }
+
+    fn write_head(&mut self, code: u16, content_type: &str, len: usize) -> Result<()> {
+        self.write_head_with(code, content_type, len, &[])
+    }
+
+    fn write_head_with(
+        &mut self,
+        code: u16,
+        content_type: &str,
+        len: usize,
+        extra: &[(&str, &str)],
+    ) -> Result<()> {
+        self.record(code, len);
+        write!(
+            self.stream,
+            "HTTP/1.1 {code} {}\r\nContent-Type: {content_type}\r\nContent-Length: {len}\r\n",
+            status_reason(code)
+        )?;
+        for (k, v) in extra {
+            write!(self.stream, "{k}: {v}\r\n")?;
+        }
+        let conn = if self.keep_alive { "keep-alive" } else { "close" };
+        write!(self.stream, "Connection: {conn}\r\n\r\n")?;
+        Ok(())
+    }
+
+    fn respond_json(&mut self, code: u16, body: &Json) -> Result<()> {
+        self.respond_json_with(code, body, &[])
+    }
+
+    fn respond_json_with(
+        &mut self,
+        code: u16,
+        body: &Json,
+        extra: &[(&str, &str)],
+    ) -> Result<()> {
+        let text = body.to_string_pretty();
+        self.write_head_with(code, "application/json", text.len(), extra)?;
+        self.stream.write_all(text.as_bytes())?;
+        self.stream.flush()?;
+        Ok(())
+    }
+}
+
+/// Serve one connection's request stream (HTTP/1.1 keep-alive).
+fn handle_http(state: &ServeState, mut stream: TcpStream) -> Result<()> {
+    use std::io::{BufRead, BufReader, Read};
+    // Bound how much request-line + header data one request can make us
+    // buffer: `read_line` grows its String until a newline arrives, so an
+    // un-capped reader would let a newline-free byte stream grow a
+    // worker's memory without ever tripping the per-read timeout. The cap
+    // is re-armed per request.
+    let mut reader = BufReader::new(stream.try_clone()?.take(16 * 1024));
+    let mut served = 0u64;
+    loop {
+        reader.get_mut().set_limit(16 * 1024);
+        let mut line = String::new();
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(()), // clean EOF (client closed)
+            Ok(_) => {}
+            Err(e)
+                if served > 0
+                    && matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+            {
+                // Idle keep-alive connection timed out: a clean close,
+                // not a served-request error.
+                return Ok(());
+            }
+            Err(e) => return Err(e.into()),
+        }
+        if line.trim().is_empty() {
+            // No request line: the shutdown wake-up connection (or a
+            // client that sent a bare newline and went away).
+            return Ok(());
+        }
+        let mut parts = line.split_whitespace();
+        let method = parts.next().unwrap_or("").to_string();
+        let target = parts.next().unwrap_or("").to_string();
+        let version = parts.next().unwrap_or("HTTP/1.1");
+        // HTTP/1.0 defaults to close; 1.1 to keep-alive. An explicit
+        // `Connection:` header wins either way.
+        let mut close = version == "HTTP/1.0";
+        loop {
+            let mut h = String::new();
+            if reader.read_line(&mut h)? == 0 || h == "\r\n" || h == "\n" {
+                break;
+            }
+            let lower = h.trim().to_ascii_lowercase();
+            if let Some(v) = lower.strip_prefix("connection:") {
+                match v.trim() {
+                    "close" => close = true,
+                    "keep-alive" => close = false,
+                    _ => {}
+                }
             }
         }
-        Err(_) => {
-            state.errors.fetch_add(1, Ordering::Relaxed);
+        served += 1;
+        let keep_alive = !close && served < MAX_REQUESTS_PER_CONN;
+        let _inflight = InflightGuard::new(&state.metrics.inflight);
+        let (path, query) = match target.split_once('?') {
+            Some((p, q)) => (p.to_string(), q.to_string()),
+            None => (target.clone(), String::new()),
+        };
+        let mut rw = ResponseWriter {
+            stream: &mut stream,
+            metrics: &state.metrics,
+            log_requests: state.log_requests.load(Ordering::Relaxed),
+            keep_alive,
+            method: &method,
+            path: &path,
+            endpoint: "other",
+            start: Instant::now(),
+            recorded: false,
+        };
+        if method != "GET" {
+            rw.respond_json_with(
+                405,
+                &err_json("only GET is supported"),
+                &[("Allow", "GET")],
+            )?;
+        } else if let Err(e) = route(state, &mut rw, &path, &query) {
+            // Route handlers answer their own 4xx; anything that
+            // *escapes* is an internal error. Best-effort 500 unless a
+            // head already went out (the client may be gone either way).
+            if !rw.recorded {
+                let _ = rw.respond_json(500, &err_json(&format!("{e:#}")));
+            }
+            bail!("internal error serving {path}: {e:#}");
         }
+        state.requests.fetch_add(1, Ordering::Relaxed);
+        if !keep_alive {
+            return Ok(());
+        }
+        // Idle budget between keep-alive requests is tighter than the
+        // first-request grace: a parked connection frees its worker fast.
+        let _ = stream.set_read_timeout(Some(Duration::from_secs(5)));
     }
 }
 
-/// Parse one request and answer it. Returns `false` for connections that
-/// never sent a request line (e.g. the shutdown wake-up connection).
-fn handle_http(state: &ServeState, mut stream: TcpStream) -> Result<bool> {
-    use std::io::{BufRead, BufReader, Read};
-    // Bound how much request-line + header data one connection can make
-    // us buffer: `read_line` grows its String until a newline arrives,
-    // so an un-capped reader would let a newline-free byte stream grow a
-    // worker's memory without ever tripping the per-read timeout.
-    let mut reader = BufReader::new(stream.try_clone()?.take(16 * 1024));
-    let mut line = String::new();
-    reader.read_line(&mut line)?;
-    if line.trim().is_empty() {
-        return Ok(false);
-    }
-    let mut parts = line.split_whitespace();
-    let method = parts.next().unwrap_or("").to_string();
-    let target = parts.next().unwrap_or("").to_string();
-    // Drain (and ignore) the request headers.
-    loop {
-        let mut h = String::new();
-        if reader.read_line(&mut h)? == 0 || h == "\r\n" || h == "\n" {
-            break;
-        }
-    }
-    if method != "GET" {
-        respond_json(&mut stream, 405, &err_json("only GET is supported"))?;
-        return Ok(true);
-    }
-    let path = target.split('?').next().unwrap_or("").to_string();
-    if let Err(e) = route(state, &mut stream, &path) {
-        // Route handlers answer their own 4xx; anything that *escapes* is
-        // an internal error. Best-effort 500 (the client may be gone).
-        let _ = respond_json(&mut stream, 500, &err_json(&format!("{e:#}")));
-        anyhow::bail!("internal error serving {path}: {e:#}");
-    }
-    Ok(true)
-}
-
-fn route(state: &ServeState, stream: &mut TcpStream, path: &str) -> Result<()> {
+fn route(state: &ServeState, rw: &mut ResponseWriter, path: &str, query: &str) -> Result<()> {
     match path {
         "/log" => {
+            rw.endpoint = "log";
             let report = super::LogRequest.run(&state.repo)?;
-            return respond_json(stream, 200, &report.to_json());
+            return rw.respond_json(200, &report.to_json());
         }
-        "/stats" => return respond_json(stream, 200, &state.stats),
-        "/healthz" => return respond_json(stream, 200, &Json::obj().set("ok", true)),
+        "/stats" => {
+            rw.endpoint = "stats";
+            return rw.respond_json(200, &state.stats);
+        }
+        "/metrics" => {
+            rw.endpoint = "metrics";
+            return serve_metrics(state, rw, query);
+        }
+        "/healthz" => {
+            rw.endpoint = "healthz";
+            return rw.respond_json(200, &Json::obj().set("ok", true));
+        }
         _ => {}
     }
     if let Some(rest) = path.strip_prefix("/show/") {
+        rw.endpoint = "show";
         let node = percent_decode(rest);
         if state.repo.graph.idx(&node).is_err() {
-            return respond_json(stream, 404, &err_json(&format!("no node named `{node}`")));
+            return rw.respond_json(404, &err_json(&format!("no node named `{node}`")));
         }
         let report = super::ShowRequest { node }.run(&state.repo)?;
-        return respond_json(stream, 200, &report.to_json());
+        return rw.respond_json(200, &report.to_json());
     }
     if let Some(rest) = path.strip_prefix("/checkpoint/") {
-        return serve_checkpoint(state, stream, &percent_decode(rest));
+        rw.endpoint = "checkpoint";
+        return serve_checkpoint(state, rw, &percent_decode(rest));
     }
     if let Some(rest) = path.strip_prefix("/object/") {
-        return serve_object(state, stream, rest);
+        rw.endpoint = "object";
+        return serve_object(state, rw, rest);
     }
     if let Some(rest) = path.strip_prefix("/diff/") {
+        rw.endpoint = "diff";
         let segs: Vec<&str> = rest.split('/').collect();
         if segs.len() != 2 {
-            return respond_json(
-                stream,
+            return rw.respond_json(
                 400,
                 &err_json("diff wants exactly /diff/<a>/<b> (percent-encode `/` in names)"),
             );
         }
         let (a, b) = (percent_decode(segs[0]), percent_decode(segs[1]));
         let Some(zoo) = &state.zoo else {
-            return respond_json(stream, 503, &err_json(NO_MANIFEST));
+            return rw.respond_json(503, &err_json(NO_MANIFEST));
         };
         if state.repo.graph.idx(&a).is_err() || state.repo.graph.idx(&b).is_err() {
-            return respond_json(stream, 404, &err_json("no such node"));
+            return rw.respond_json(404, &err_json("no such node"));
         }
         let report = super::DiffRequest { a, b }.run(&state.repo, zoo, &NativeKernel)?;
-        return respond_json(stream, 200, &report.to_json());
+        return rw.respond_json(200, &report.to_json());
     }
-    respond_json(stream, 404, &err_json(&format!("no route for `{path}`")))
+    rw.respond_json(404, &err_json(&format!("no route for `{path}`")))
 }
 
 const NO_MANIFEST: &str =
     "server started without an artifacts manifest; arch-dependent endpoints are disabled";
 
+/// `GET /metrics`: both registries — this server's request metrics plus
+/// the process-global layer telemetry. The snapshot is taken *before*
+/// this response's own head is written, so a `/metrics` response never
+/// includes itself (keeping "histogram count == requests the client has
+/// completed" exact for tests and cross-checking load harnesses).
+fn serve_metrics(state: &ServeState, rw: &mut ResponseWriter, query: &str) -> Result<()> {
+    state.metrics.sync_cache(&state.cache);
+    if query.split('&').any(|kv| kv == "format=prom") {
+        let mut out = String::new();
+        state.metrics.registry.render_prometheus("mgit_serve_", &mut out);
+        crate::obs::global().render_prometheus("mgit_", &mut out);
+        rw.write_head(200, "text/plain; version=0.0.4", out.len())?;
+        rw.stream.write_all(out.as_bytes())?;
+        rw.stream.flush()?;
+        return Ok(());
+    }
+    let body = Json::obj()
+        .set("server", state.metrics.registry.snapshot())
+        .set("process", crate::obs::global().snapshot());
+    rw.respond_json(200, &body)
+}
+
 /// Stream a node's resolved checkpoint: the flat f32 parameter vector in
 /// layout order, little-endian — bit-exact with what `delta::load`
 /// reconstructs. Delta chains resolve through the server's shared cache,
 /// so concurrent readers of sibling models reuse common ancestors.
-fn serve_checkpoint(state: &ServeState, stream: &mut TcpStream, node: &str) -> Result<()> {
+fn serve_checkpoint(state: &ServeState, rw: &mut ResponseWriter, node: &str) -> Result<()> {
     let Ok(n) = state.repo.graph.by_name(node) else {
-        return respond_json(stream, 404, &err_json(&format!("no node named `{node}`")));
+        return rw.respond_json(404, &err_json(&format!("no node named `{node}`")));
     };
     let Some(sm) = &n.stored else {
-        return respond_json(
-            stream,
+        return rw.respond_json(
             404,
             &err_json(&format!("node `{node}` has no stored checkpoint")),
         );
     };
     let Some(zoo) = &state.zoo else {
-        return respond_json(stream, 503, &err_json(NO_MANIFEST));
+        return rw.respond_json(503, &err_json(NO_MANIFEST));
     };
     let ck = delta::load_with_cache(&state.repo.store, zoo, sm, &NativeKernel, &state.cache)?;
     let body_len = ck.flat.len() * 4;
-    write_head(stream, 200, "application/octet-stream", body_len)?;
+    rw.write_head(200, "application/octet-stream", body_len)?;
     // Stream in bounded chunks rather than materializing one giant byte
     // buffer next to the checkpoint.
     const CHUNK: usize = 1 << 20; // 1 Mi f32 values (4 MiB) per write
     for values in ck.flat.chunks(CHUNK) {
-        stream.write_all(&f32_to_bytes(values))?;
+        rw.stream.write_all(&f32_to_bytes(values))?;
     }
-    stream.flush()?;
+    rw.stream.flush()?;
     Ok(())
 }
 
 /// Serve one stored object's exact bytes — byte-identical to
 /// `Store::get`, whichever pack or loose file holds it.
-fn serve_object(state: &ServeState, stream: &mut TcpStream, hex: &str) -> Result<()> {
+fn serve_object(state: &ServeState, rw: &mut ResponseWriter, hex: &str) -> Result<()> {
     let Ok(id) = ObjectId::from_hex(hex) else {
-        return respond_json(stream, 400, &err_json("object id must be 64 hex chars"));
+        return rw.respond_json(400, &err_json("object id must be 64 hex chars"));
     };
     if !state.repo.store.has(&id) {
-        return respond_json(stream, 404, &err_json(&format!("object {hex} not found")));
+        return rw.respond_json(404, &err_json(&format!("object {hex} not found")));
     }
     let bytes = state.repo.store.get(&id)?;
-    write_head(stream, 200, "application/octet-stream", bytes.len())?;
-    stream.write_all(&bytes)?;
-    stream.flush()?;
+    rw.write_head(200, "application/octet-stream", bytes.len())?;
+    rw.stream.write_all(&bytes)?;
+    rw.stream.flush()?;
     Ok(())
 }
 
@@ -344,29 +691,6 @@ fn status_reason(code: u16) -> &'static str {
         503 => "Service Unavailable",
         _ => "Internal Server Error",
     }
-}
-
-fn write_head(
-    stream: &mut TcpStream,
-    code: u16,
-    content_type: &str,
-    content_length: usize,
-) -> Result<()> {
-    write!(
-        stream,
-        "HTTP/1.1 {code} {}\r\nContent-Type: {content_type}\r\n\
-         Content-Length: {content_length}\r\nConnection: close\r\n\r\n",
-        status_reason(code)
-    )?;
-    Ok(())
-}
-
-fn respond_json(stream: &mut TcpStream, code: u16, body: &Json) -> Result<()> {
-    let text = body.to_string_pretty();
-    write_head(stream, code, "application/json", text.len())?;
-    stream.write_all(text.as_bytes())?;
-    stream.flush()?;
-    Ok(())
 }
 
 fn err_json(msg: &str) -> Json {
@@ -398,7 +722,7 @@ fn percent_decode(s: &str) -> String {
 
 #[cfg(test)]
 mod tests {
-    use super::percent_decode;
+    use super::*;
 
     #[test]
     fn percent_decoding() {
@@ -408,5 +732,35 @@ mod tests {
         assert_eq!(percent_decode("bad%zz"), "bad%zz");
         assert_eq!(percent_decode("trail%2"), "trail%2");
         assert_eq!(percent_decode("%41%42"), "AB");
+    }
+
+    #[test]
+    fn serve_metrics_labels_and_mirrors() {
+        let m = ServeMetrics::new();
+        m.endpoint("stats").inc();
+        m.endpoint("stats").inc();
+        m.endpoint("no-such-endpoint").inc(); // falls into `other`
+        m.status(200).inc();
+        m.status(418).inc(); // falls into `status.other`
+        let snap = m.registry.snapshot();
+        let counters = snap.get("counters").unwrap();
+        assert_eq!(counters.req_usize("endpoint.stats").unwrap(), 2);
+        assert_eq!(counters.req_usize("endpoint.other").unwrap(), 1);
+        assert_eq!(counters.req_usize("status.200").unwrap(), 1);
+        assert_eq!(counters.req_usize("status.other").unwrap(), 1);
+
+        let cache = ResolveCache::new(2);
+        cache.insert(crate::store::hash_bytes(b"a"), vec![0.0; 4]);
+        assert!(cache.get(&crate::store::hash_bytes(b"a")).is_some());
+        assert!(cache.get(&crate::store::hash_bytes(b"b")).is_none());
+        m.sync_cache(&cache);
+        let snap = m.registry.snapshot();
+        let counters = snap.get("counters").unwrap();
+        assert_eq!(counters.req_usize("cache.hits").unwrap(), 1);
+        assert_eq!(counters.req_usize("cache.misses").unwrap(), 1);
+        assert_eq!(
+            snap.get("gauges").unwrap().req_usize("cache.resident_bytes").unwrap(),
+            16
+        );
     }
 }

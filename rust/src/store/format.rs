@@ -39,8 +39,17 @@ thread_local! {
     /// the fixed-size header only. The repack mark phase and fsck's
     /// orphan scan are asserted decode-free against this counter
     /// (thread-local so concurrent tests can't pollute each other).
+    /// Every decode *also* bumps the process-global
+    /// `store.payload_decodes` registry counter below, which is what
+    /// `GET /metrics` serves.
     static PAYLOAD_DECODES: Cell<u64> = const { Cell::new(0) };
 }
+
+/// Process-wide decode counter mirrored into [`crate::obs::global`]
+/// (the thread-local above stays the test oracle — thread isolation
+/// keeps concurrent tests honest; the registry aggregates for ops).
+static OBS_PAYLOAD_DECODES: crate::obs::LazyCounter =
+    crate::obs::LazyCounter::new("store.payload_decodes");
 
 /// This thread's cumulative count of full payload decodes.
 pub fn payload_decodes() -> u64 {
@@ -105,7 +114,12 @@ pub struct ObjectMeta {
     pub dtype: Option<DType>,
     /// Tensor shape; `None` when the meta came from a pack index.
     pub shape: Option<Vec<usize>>,
-    /// `true` when this answer came from pack-index v2 metadata (zero
+    /// Tensor element count: the shape product for header-parsed tensor
+    /// objects, the persisted value for v3 pack-index answers (v3
+    /// stores numel without the full shape), `None` for opaque objects
+    /// and v2-index answers (which don't persist it).
+    pub numel: Option<u64>,
+    /// `true` when this answer came from pack-index v2+ metadata (zero
     /// object reads); `false` when the object bytes were read and
     /// header-parsed.
     pub from_index: bool,
@@ -113,8 +127,19 @@ pub struct ObjectMeta {
 
 impl ObjectMeta {
     /// Meta for an object known only through a pack index entry.
-    pub fn from_index(kind: ObjectKind, parent: Option<ObjectId>) -> ObjectMeta {
-        ObjectMeta { kind, parent, dtype: None, shape: None, from_index: true }
+    /// `numel` is the index-persisted element count (v3 indexes; opaque
+    /// entries persist 0, reported here as `None` — an opaque blob has
+    /// no tensor elements).
+    pub fn from_index(
+        kind: ObjectKind,
+        parent: Option<ObjectId>,
+        numel: Option<u64>,
+    ) -> ObjectMeta {
+        let numel = match kind {
+            ObjectKind::Opaque => None,
+            _ => numel,
+        };
+        ObjectMeta { kind, parent, dtype: None, shape: None, numel, from_index: true }
     }
 }
 
@@ -193,6 +218,7 @@ impl TensorObject {
 
     pub fn decode(bytes: &[u8]) -> Result<TensorObject> {
         PAYLOAD_DECODES.with(|c| c.set(c.get() + 1));
+        OBS_PAYLOAD_DECODES.inc();
         let mut r = Reader { b: bytes, pos: 0 };
         let h = parse_header(&mut r)?;
         match h.enc {
@@ -233,12 +259,14 @@ impl TensorObject {
         fn parse(bytes: &[u8]) -> Result<ObjectMeta> {
             let mut r = Reader { b: bytes, pos: 0 };
             let h = parse_header(&mut r)?;
+            let numel = Some(h.shape.iter().product::<usize>() as u64);
             match h.enc {
                 0 => Ok(ObjectMeta {
                     kind: ObjectKind::Raw,
                     parent: None,
                     dtype: Some(h.dtype),
                     shape: Some(h.shape),
+                    numel,
                     from_index: false,
                 }),
                 1 | 2 => {
@@ -249,6 +277,7 @@ impl TensorObject {
                         parent: Some(ObjectId(parent)),
                         dtype: Some(h.dtype),
                         shape: Some(h.shape),
+                        numel,
                         from_index: false,
                     })
                 }
@@ -260,6 +289,7 @@ impl TensorObject {
             parent: None,
             dtype: None,
             shape: None,
+            numel: None,
             from_index: false,
         })
     }

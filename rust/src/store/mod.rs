@@ -62,6 +62,16 @@ use std::sync::Mutex;
 use anyhow::{anyhow, bail, Context, Result};
 use sha2::{Digest, Sha256};
 
+// Process-global read telemetry (served by `GET /metrics`). Lazily
+// resolved statics: after first touch each event is a single relaxed
+// atomic add — the loose and pack read paths stay lock-free.
+static OBS_LOOSE_READS: crate::obs::LazyCounter =
+    crate::obs::LazyCounter::new("store.loose_reads");
+static OBS_PACK_READS: crate::obs::LazyCounter =
+    crate::obs::LazyCounter::new("store.pack_reads");
+static OBS_READ_BYTES: crate::obs::LazyCounter =
+    crate::obs::LazyCounter::new("store.read_bytes");
+
 /// SHA-256 content id.
 #[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct ObjectId(pub [u8; 32]);
@@ -273,8 +283,11 @@ impl DiskStore {
 
 impl ObjectStore for DiskStore {
     fn get(&self, id: &ObjectId) -> Result<Vec<u8>> {
-        std::fs::read(self.path_for(id))
-            .with_context(|| format!("object {} not found", id.short()))
+        let bytes = std::fs::read(self.path_for(id))
+            .with_context(|| format!("object {} not found", id.short()))?;
+        OBS_LOOSE_READS.inc();
+        OBS_READ_BYTES.add(bytes.len() as u64);
+        Ok(bytes)
     }
 
     fn put(&self, id: ObjectId, bytes: &[u8]) -> Result<bool> {
@@ -422,8 +435,9 @@ impl PackedStore {
         Ok((loose, packed.len()))
     }
 
-    /// Chain metadata for `id` straight from pack-index v2 entries —
-    /// zero object reads. Answers for the *newest* pack holding `id`
+    /// Chain metadata for `id` straight from pack-index v2+ entries —
+    /// zero object reads (v3 entries additionally carry tensor numel).
+    /// Answers for the *newest* pack holding `id`
     /// (matching [`PackedStore::get`]'s precedence among packs); returns
     /// `None` when that pack's index is v1 (no metadata) or no pack
     /// holds the id. Callers wanting `get()`-equivalent metadata must
@@ -431,7 +445,9 @@ impl PackedStore {
     pub fn indexed_meta(&self, id: &ObjectId) -> Option<format::ObjectMeta> {
         for p in self.packs.iter().rev() {
             if let Some(e) = p.index.entry(id) {
-                return e.meta.map(|m| format::ObjectMeta::from_index(m.kind, m.parent));
+                return e
+                    .meta
+                    .map(|m| format::ObjectMeta::from_index(m.kind, m.parent, m.numel));
             }
         }
         None
@@ -463,10 +479,12 @@ fn _assert_store_types_send_sync() {
 impl ObjectStore for PackedStore {
     fn get(&self, id: &ObjectId) -> Result<Vec<u8>> {
         if self.loose.contains(id) {
-            return self.loose.get(id);
+            return self.loose.get(id); // counted as a loose read there
         }
         for p in self.packs.iter().rev() {
             if let Some(bytes) = p.get(id)? {
+                OBS_PACK_READS.inc();
+                OBS_READ_BYTES.add(bytes.len() as u64);
                 return Ok(bytes);
             }
         }

@@ -29,12 +29,12 @@
 //! sha     32 bytes                        SHA-256 of everything above
 //! ```
 //!
-//! `pack-<sha256-hex>.idx`, version 2 (loadable without touching the
-//! pack — and, new in v2, walkable without *decoding* it):
+//! `pack-<sha256-hex>.idx`, version 3 (loadable without touching the
+//! pack — and, since v2, walkable without *decoding* it):
 //!
 //! ```text
 //! magic   "MGPI"                          4 bytes
-//! version u8 = 2
+//! version u8 = 3
 //! count   u64
 //! fanout  256 × u32                       cumulative count by id[0]
 //! entries count × (sorted by id):
@@ -45,16 +45,22 @@
 //!     depth  u32                          delta-chain depth at pack time
 //!     parent 32 bytes                     delta parent id (zeroed sentinel
 //!                                         for raw/opaque base objects)
+//!     numel  u64                          tensor element count (v3 only;
+//!                                         0 for opaque blobs)
 //! sha     32 bytes                        the pack's trailer SHA-256
 //! ```
 //!
 //! The v2 entry's `kind`/`parent`/`depth` triple makes pack metadata
 //! **self-describing**: incremental repack's mark phase and `fsck`'s
 //! orphaned-parent scan walk delta-parent edges straight out of the
-//! index, with zero payload decodes (counter-asserted in tests).
-//! Version-1 packs and indexes (no framing byte, no entry metadata)
-//! remain readable forever — the version byte dispatches — and
-//! `repack --full` rewrites them to v2.
+//! index, with zero payload decodes (counter-asserted in tests). Index
+//! v3 appends each tensor's element count, so `stats`' parameter/
+//! logical-byte totals become metadata walks too. Version-1 packs and
+//! indexes (no framing byte, no entry metadata) and v2 indexes (no
+//! numel) remain readable forever — the version byte dispatches — and
+//! `repack --full` rewrites them to the current formats. The index
+//! version ([`IDX_VERSION`]) evolves independently of the pack file
+//! version ([`VERSION`]): a v2 pack normally pairs with a v3 index.
 //!
 //! Index/pack `offset`s are *logical*: for raw framing the logical image
 //! is the file itself (reads stay on the mmap fast path); for zstd
@@ -95,8 +101,15 @@ pub const IDX_MAGIC: &[u8; 4] = b"MGPI";
 /// The frozen first-generation format (no framing byte, no index
 /// metadata). Still readable; never written anymore.
 pub const VERSION_1: u8 = 1;
-/// The current write version.
+/// The current *pack file* write version (framing byte in the header).
 pub const VERSION: u8 = 2;
+/// Index format v2: entries carry kind/parent/depth (85 bytes each).
+/// Still readable; superseded by v3 for new writes.
+pub const IDX_VERSION_2: u8 = 2;
+/// The current *index* write version: v3 = v2 + persisted tensor numel
+/// (93-byte entries). The sidecar index evolves independently of the
+/// pack body — a v2 pack file normally pairs with a v3 index.
+pub const IDX_VERSION: u8 = 3;
 /// Pack trailer length (count + sha256), identical in both versions.
 pub const TRAILER_LEN: u64 = 8 + 32;
 
@@ -164,8 +177,9 @@ impl PackFraming {
     }
 }
 
-/// Per-entry object metadata persisted in index v2: enough to walk
-/// delta chains without reading the pack.
+/// Per-entry object metadata persisted in index v2+: enough to walk
+/// delta chains — and, since v3, to total tensor parameters — without
+/// reading the pack.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct EntryMeta {
     pub kind: ObjectKind,
@@ -178,6 +192,11 @@ pub struct EntryMeta {
     /// bases, a lower bound for deltas whose parents live outside the
     /// pack). Never used for correctness — parents are.
     pub depth: u32,
+    /// Tensor element count, persisted since index v3 (`stats`' logical
+    /// byte totals walk this instead of reading object headers).
+    /// `Some(0)` for opaque entries; `None` only when decoded from a v2
+    /// index, which predates the field.
+    pub numel: Option<u64>,
 }
 
 impl EntryMeta {
@@ -189,7 +208,8 @@ impl EntryMeta {
             (ObjectKind::Delta, Some(p)) => parent_depth(p).map_or(1, |d| d + 1),
             _ => 0,
         };
-        EntryMeta { kind: meta.kind, parent: meta.parent, depth }
+        let numel = Some(meta.numel.unwrap_or(0));
+        EntryMeta { kind: meta.kind, parent: meta.parent, depth, numel }
     }
 }
 
@@ -213,8 +233,9 @@ pub struct PackIndex {
     /// The paired pack's trailer checksum.
     pub pack_sha: [u8; 32],
     /// Index format version this was decoded from / will encode as:
-    /// [`VERSION`] when every entry carries metadata, [`VERSION_1`]
-    /// otherwise.
+    /// [`IDX_VERSION`] when every entry carries metadata including
+    /// numel, [`IDX_VERSION_2`] when metadata lacks numel (decoded from
+    /// a v2 index), [`VERSION_1`] otherwise.
     pub version: u8,
 }
 
@@ -236,7 +257,13 @@ impl PackIndex {
             *f = acc;
         }
         let version = if entries.iter().all(|e| e.meta.is_some()) {
-            VERSION
+            if entries.iter().all(|e| e.meta.is_some_and(|m| m.numel.is_some())) {
+                IDX_VERSION
+            } else {
+                // Round-tripping a v2 index must not invent numel
+                // values it never had: stay v2.
+                IDX_VERSION_2
+            }
         } else {
             VERSION_1
         };
@@ -270,7 +297,11 @@ impl PackIndex {
     }
 
     pub fn encode(&self) -> Vec<u8> {
-        let entry_len = if self.version == VERSION_1 { 48 } else { 85 };
+        let entry_len = match self.version {
+            VERSION_1 => 48,
+            IDX_VERSION_2 => 85,
+            _ => 93,
+        };
         let mut out =
             Vec::with_capacity(4 + 1 + 8 + 256 * 4 + self.entries.len() * entry_len + 32);
         out.extend_from_slice(IDX_MAGIC);
@@ -284,11 +315,16 @@ impl PackIndex {
             out.extend_from_slice(&e.offset.to_le_bytes());
             out.extend_from_slice(&e.len.to_le_bytes());
             if self.version != VERSION_1 {
-                // from_entries guarantees meta for v2.
-                let m = e.meta.expect("v2 index entry without metadata");
+                // from_entries guarantees meta for v2/v3.
+                let m = e.meta.expect("v2+ index entry without metadata");
                 out.push(m.kind.code());
                 out.extend_from_slice(&m.depth.to_le_bytes());
                 out.extend_from_slice(&m.parent.map_or([0u8; 32], |p| p.0));
+                if self.version == IDX_VERSION {
+                    // from_entries guarantees numel for v3.
+                    let n = m.numel.expect("v3 index entry without numel");
+                    out.extend_from_slice(&n.to_le_bytes());
+                }
             }
         }
         out.extend_from_slice(&self.pack_sha);
@@ -301,7 +337,7 @@ impl PackIndex {
             bail!("not an MGPI pack index");
         }
         let version = r.u8()?;
-        if version != VERSION_1 && version != VERSION {
+        if version != VERSION_1 && version != IDX_VERSION_2 && version != IDX_VERSION {
             bail!("unsupported pack index version {version}");
         }
         let count = r.u64()? as usize;
@@ -325,7 +361,8 @@ impl PackIndex {
                     ObjectKind::Delta => Some(ObjectId(parent)),
                     _ => None,
                 };
-                Some(EntryMeta { kind, parent, depth })
+                let numel = if version == IDX_VERSION { Some(r.u64()?) } else { None };
+                Some(EntryMeta { kind, parent, depth, numel })
             };
             entries.push(IdxEntry { id: ObjectId(id), offset, len, meta });
         }
@@ -643,6 +680,19 @@ impl PackFile {
                         actual.parent.map_or("-".into(), |p| p.short()),
                     );
                 }
+                // v3 indexes also persist numel; a lying value would
+                // silently skew every metadata-only parameter total.
+                if let Some(n) = meta.numel {
+                    let actual_n = actual.numel.unwrap_or(0);
+                    if n != actual_n {
+                        bail!(
+                            "index numel mismatch for {} in pack {}: index says \
+                             {n}, object header says {actual_n}",
+                            e.id.short(),
+                            self.path.display(),
+                        );
+                    }
+                }
             }
         }
         Ok(())
@@ -716,17 +766,18 @@ mod tests {
         assert_eq!(pack.object_count(), 50);
         assert_eq!(pack.version, VERSION);
         assert_eq!(pack.framing, PackFraming::Raw);
-        assert_eq!(pack.index.version, VERSION);
+        assert_eq!(pack.index.version, IDX_VERSION);
         pack.verify().unwrap();
         for (id, p) in ids.iter().zip(&payloads) {
             assert!(pack.contains(id));
             assert_eq!(pack.get(id).unwrap().unwrap(), *p);
-            // These payloads are not MGTF objects, so v2 metadata must
-            // classify them as opaque bases.
+            // These payloads are not MGTF objects, so the metadata must
+            // classify them as opaque bases (numel 0).
             let meta = pack.index.entry(id).unwrap().meta.unwrap();
             assert_eq!(meta.kind, ObjectKind::Opaque);
             assert_eq!(meta.parent, None);
             assert_eq!(meta.depth, 0);
+            assert_eq!(meta.numel, Some(0));
         }
         assert!(pack.get(&hash_bytes(b"absent")).unwrap().is_none());
 
@@ -794,7 +845,9 @@ mod tests {
         }
         assert_eq!(back.lookup(&hash_bytes(b"missing")), None);
 
-        // v2: kind/parent/depth survive the roundtrip.
+        // v2: kind/parent/depth survive the roundtrip; numel was never
+        // persisted, so the re-encoded index must *stay* v2 rather than
+        // inventing values.
         let parent = hash_bytes(b"the-parent");
         let v2: Vec<IdxEntry> = (0..50u32)
             .map(|i| IdxEntry {
@@ -802,21 +855,44 @@ mod tests {
                 offset: 14 + i as u64 * 64,
                 len: 32,
                 meta: Some(if i % 3 == 0 {
-                    EntryMeta { kind: ObjectKind::Raw, parent: None, depth: 0 }
+                    EntryMeta { kind: ObjectKind::Raw, parent: None, depth: 0, numel: None }
                 } else {
                     EntryMeta {
                         kind: ObjectKind::Delta,
                         parent: Some(parent),
                         depth: i % 7,
+                        numel: None,
                     }
                 }),
             })
             .collect();
         let idx = PackIndex::from_entries(v2.clone(), [9u8; 32]).unwrap();
-        assert_eq!(idx.version, VERSION);
+        assert_eq!(idx.version, IDX_VERSION_2);
         let back = PackIndex::decode(&idx.encode()).unwrap();
-        assert_eq!(back.version, VERSION);
+        assert_eq!(back.version, IDX_VERSION_2);
         for e in &v2 {
+            assert_eq!(back.entry(&e.id).unwrap().meta, e.meta);
+        }
+
+        // v3: numel survives the roundtrip too.
+        let v3: Vec<IdxEntry> = (0..50u32)
+            .map(|i| IdxEntry {
+                id: hash_bytes(&(2000 + i).to_le_bytes()),
+                offset: 14 + i as u64 * 64,
+                len: 32,
+                meta: Some(EntryMeta {
+                    kind: if i % 3 == 0 { ObjectKind::Raw } else { ObjectKind::Delta },
+                    parent: (i % 3 != 0).then_some(parent),
+                    depth: i % 7,
+                    numel: Some(i as u64 * 17),
+                }),
+            })
+            .collect();
+        let idx = PackIndex::from_entries(v3.clone(), [11u8; 32]).unwrap();
+        assert_eq!(idx.version, IDX_VERSION);
+        let back = PackIndex::decode(&idx.encode()).unwrap();
+        assert_eq!(back.version, IDX_VERSION);
+        for e in &v3 {
             assert_eq!(back.entry(&e.id).unwrap().meta, e.meta);
         }
     }
@@ -871,12 +947,23 @@ mod tests {
             kind: ObjectKind::Delta,
             parent: Some(hash_bytes(b"bogus-parent")),
             depth: 3,
+            numel: Some(2),
         });
         let lying = PackIndex::from_entries(entries, pack.index.pack_sha).unwrap();
         lying.save(&PackFile::idx_path(&pack.path)).unwrap();
         let reopened = PackFile::open(&pack.path).unwrap();
         let err = reopened.verify().unwrap_err().to_string();
         assert!(err.contains("metadata mismatch"), "got: {err}");
+
+        // A lying numel (kind/parent correct) must be caught too.
+        let mut entries = pack.index.entries.clone();
+        let good = entries[0].meta.unwrap();
+        entries[0].meta = Some(EntryMeta { numel: Some(999), ..good });
+        let lying = PackIndex::from_entries(entries, pack.index.pack_sha).unwrap();
+        lying.save(&PackFile::idx_path(&pack.path)).unwrap();
+        let reopened = PackFile::open(&pack.path).unwrap();
+        let err = reopened.verify().unwrap_err().to_string();
+        assert!(err.contains("numel mismatch"), "got: {err}");
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -445,20 +445,24 @@ pub fn repack(
                 new_bytes.insert(id, bytes);
                 new_meta.insert(
                     id,
-                    EntryMeta { kind: ObjectKind::Opaque, parent: None, depth: 0 },
+                    EntryMeta { kind: ObjectKind::Opaque, parent: None, depth: 0, numel: Some(0) },
                 );
                 continue;
             }
             Ok(o) => o,
         };
         match obj {
-            TensorObject::Raw { .. } => {
+            TensorObject::Raw { ref shape, .. } => {
+                let numel = Some(shape.iter().product::<usize>() as u64);
                 new_depth.insert(id, 0);
                 new_bytes.insert(id, bytes);
-                new_meta
-                    .insert(id, EntryMeta { kind: ObjectKind::Raw, parent: None, depth: 0 });
+                new_meta.insert(
+                    id,
+                    EntryMeta { kind: ObjectKind::Raw, parent: None, depth: 0, numel },
+                );
             }
             TensorObject::Delta { dtype, shape, parent, eps, codec, grid, .. } => {
+                let numel = Some(shape.iter().product::<usize>() as u64);
                 let pd = *new_depth.get(&parent).ok_or_else(|| {
                     anyhow!(
                         "repack: parent {} of {} not processed — liveness walk inconsistent",
@@ -477,6 +481,7 @@ pub fn repack(
                             kind: ObjectKind::Delta,
                             parent: Some(parent),
                             depth: (pd + 1) as u32,
+                            numel,
                         },
                     );
                     continue;
@@ -517,6 +522,7 @@ pub fn repack(
                                 kind: ObjectKind::Delta,
                                 parent: Some(anc),
                                 depth: new_depth[&id] as u32,
+                                numel,
                             },
                         );
                     }
@@ -533,7 +539,7 @@ pub fn repack(
                         new_bytes.insert(id, raw.encode());
                         new_meta.insert(
                             id,
-                            EntryMeta { kind: ObjectKind::Raw, parent: None, depth: 0 },
+                            EntryMeta { kind: ObjectKind::Raw, parent: None, depth: 0, numel },
                         );
                     }
                 }

@@ -12,7 +12,8 @@ use std::path::PathBuf;
 use mgit::delta::NativeKernel;
 use mgit::store::format::{payload_decodes, ObjectKind, TensorObject};
 use mgit::store::pack::{
-    chain_depths, repack, PackFraming, RepackConfig, RepackMode, VERSION, VERSION_1,
+    chain_depths, repack, PackFraming, RepackConfig, RepackMode, IDX_VERSION, VERSION,
+    VERSION_1,
 };
 use mgit::store::{hash_bytes, hash_tensor, ObjectId, Store};
 use mgit::tensor::{f32_to_bytes, DType};
@@ -121,20 +122,24 @@ fn repack_full_upgrades_v1_to_v2() {
     assert_eq!(report.mark_meta_fallback, 4, "all four live objects are v1-packed");
     assert!(!v1_path.exists(), "the v1 pack must be replaced by the rewrite");
 
-    // The rewritten pack is v2 with exact metadata.
+    // The rewritten pack is v2 with exact metadata, and its freshly
+    // written index carries the v3 per-entry numel column.
     let store = Store::open_packed(&root).unwrap();
     let pack = &store.as_packed().unwrap().packs()[0];
     assert_eq!(pack.version, VERSION);
     assert_eq!(pack.framing, PackFraming::Raw);
-    assert_eq!(pack.index.version, VERSION);
+    assert_eq!(pack.index.version, IDX_VERSION);
     pack.verify().unwrap();
     let meta = |id: &ObjectId| pack.index.entry(id).unwrap().meta.unwrap();
     assert_eq!(meta(&a_id).kind, ObjectKind::Raw);
     assert_eq!(meta(&a_id).depth, 0);
+    assert_eq!(meta(&a_id).numel, Some(4), "v3 index persists tensor numel");
     assert_eq!(meta(&d_id).kind, ObjectKind::Delta);
     assert_eq!(meta(&d_id).parent, Some(a_id));
     assert_eq!(meta(&d_id).depth, 1);
+    assert_eq!(meta(&d_id).numel, Some(4));
     assert_eq!(meta(&o_id).kind, ObjectKind::Opaque);
+    assert_eq!(meta(&o_id).numel, Some(0), "opaque blobs have no tensor elements");
 
     // Bit-exact content survived the upgrade.
     for (id, bytes) in &objects {
@@ -232,6 +237,75 @@ fn fsck_orphan_scan_is_decode_free_on_v2() {
     );
     assert_eq!(report.orphaned.len(), 1);
     assert!(report.failure().is_some(), "fsck with problems must map to exit != 0");
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+/// `mgit stats` over a fully v3-packed store answers entirely from pack
+/// index metadata: zero payload decodes and zero header-read fallbacks
+/// (`meta_fallback == 0`), with the logical byte accounting computed
+/// from the persisted per-entry numel.
+#[test]
+fn stats_walks_pure_index_metadata_on_v3() {
+    use mgit::ops;
+
+    let root =
+        std::env::temp_dir().join(format!("mgit-stats-meta-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    ops::Repo::init(&root).unwrap();
+    let mut repo = ops::Repo::open(&root).unwrap();
+
+    // raw → d1 → d2, same fabricated chain shape as the fsck test.
+    let mk_delta = |parent: ObjectId, tag: &[u8]| {
+        (
+            hash_bytes(tag),
+            TensorObject::Delta {
+                dtype: DType::F32,
+                shape: vec![2],
+                parent,
+                eps: 1e-4,
+                codec: 1,
+                n_quant: 2,
+                grid: false,
+                payload: vec![1, 2, 3],
+            }
+            .encode(),
+        )
+    };
+    let raw_payload = f32_to_bytes(&[0.5, -0.5]);
+    let raw_id = hash_tensor(DType::F32, &[2], &raw_payload);
+    let raw =
+        TensorObject::Raw { dtype: DType::F32, shape: vec![2], payload: raw_payload }
+            .encode();
+    let (d1_id, d1) = mk_delta(raw_id, b"stats-d1");
+    let (d2_id, d2) = mk_delta(d1_id, b"stats-d2");
+    repo.store.put(raw_id, &raw).unwrap();
+    repo.store.put(d1_id, &d1).unwrap();
+    repo.store.put(d2_id, &d2).unwrap();
+    repo.save().unwrap();
+
+    // Loose store: every object needs a header read for its metadata.
+    let report = ops::StatsRequest.run(&repo).unwrap();
+    assert_eq!(report.meta_fallback, 3, "loose objects always fall back");
+
+    // Seal everything into a v3-indexed pack.
+    let cfg = RepackConfig {
+        max_chain_depth: 8,
+        mode: RepackMode::Full,
+        ..RepackConfig::default()
+    };
+    repack(&mut repo.store, &[d2_id], &cfg, &NativeKernel).unwrap();
+
+    let repo = ops::Repo::open(&root).unwrap();
+    assert_eq!(repo.store.as_packed().unwrap().packs()[0].index.version, IDX_VERSION);
+    let before = payload_decodes();
+    let report = ops::StatsRequest.run(&repo).unwrap();
+    assert_eq!(payload_decodes(), before, "stats over v3 must not decode payloads");
+    assert_eq!(report.meta_fallback, 0, "stats over v3 must not read object bytes");
+    assert_eq!(report.objects, 3);
+    assert_eq!(report.delta_objects, 2);
+    // 3 tensors × 2 elements × 4 bytes, straight from index numel.
+    assert_eq!(report.logical_bytes, 24);
+    assert_eq!(report.chain_max, 2);
     std::fs::remove_dir_all(&root).unwrap();
 }
 

@@ -4,10 +4,13 @@
 //! hammers it from N concurrent clients: `/log` JSON plus
 //! `/checkpoint/<node>` tensor streams that must be bit-exact with what
 //! `delta::load` reconstructs, and `/object/<id>` bodies byte-identical
-//! to `Store::get`.
+//! to `Store::get`. The `/metrics` endpoint must account for that
+//! traffic *exactly* (requests are recorded before their first response
+//! byte), in both JSON and Prometheus text renderings, and keep-alive
+//! connections must carry multiple requests.
 
 use std::collections::HashMap;
-use std::io::{Read, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpStream};
 use std::path::{Path, PathBuf};
 
@@ -81,10 +84,10 @@ fn build_chain(dir: &Path, zoo: &ModelZoo) {
     repo.save().unwrap();
 }
 
-/// Minimal HTTP/1.1 GET: returns (status code, body bytes).
-fn http_get(addr: SocketAddr, path: &str) -> (u16, Vec<u8>) {
+/// Raw one-shot HTTP exchange: returns (status code, head text, body).
+fn http_request(addr: SocketAddr, request: &str) -> (u16, String, Vec<u8>) {
     let mut s = TcpStream::connect(addr).unwrap();
-    write!(s, "GET {path} HTTP/1.1\r\nHost: localhost\r\nConnection: close\r\n\r\n").unwrap();
+    s.write_all(request.as_bytes()).unwrap();
     s.flush().unwrap();
     let mut buf = Vec::new();
     s.read_to_end(&mut buf).unwrap();
@@ -96,7 +99,51 @@ fn http_get(addr: SocketAddr, path: &str) -> (u16, Vec<u8>) {
         .nth(1)
         .and_then(|c| c.parse().ok())
         .expect("bad status line");
-    (status, buf[head_end..].to_vec())
+    (status, head, buf[head_end..].to_vec())
+}
+
+/// Minimal HTTP/1.1 GET: returns (status code, body bytes).
+fn http_get(addr: SocketAddr, path: &str) -> (u16, Vec<u8>) {
+    let (status, _head, body) = http_request(
+        addr,
+        &format!("GET {path} HTTP/1.1\r\nHost: localhost\r\nConnection: close\r\n\r\n"),
+    );
+    (status, body)
+}
+
+/// A persistent (keep-alive) client connection: responses are framed by
+/// `Content-Length`, so one TCP stream carries many requests.
+struct KeepAliveConn {
+    reader: BufReader<TcpStream>,
+}
+
+impl KeepAliveConn {
+    fn connect(addr: SocketAddr) -> KeepAliveConn {
+        KeepAliveConn { reader: BufReader::new(TcpStream::connect(addr).unwrap()) }
+    }
+
+    fn get(&mut self, path: &str) -> (u16, Vec<u8>) {
+        write!(self.reader.get_mut(), "GET {path} HTTP/1.1\r\nHost: localhost\r\n\r\n")
+            .unwrap();
+        let mut line = String::new();
+        self.reader.read_line(&mut line).unwrap();
+        let status: u16 =
+            line.split_whitespace().nth(1).and_then(|c| c.parse().ok()).unwrap();
+        let mut content_len = 0usize;
+        loop {
+            let mut h = String::new();
+            self.reader.read_line(&mut h).unwrap();
+            if h == "\r\n" || h == "\n" || h.is_empty() {
+                break;
+            }
+            if let Some(v) = h.to_ascii_lowercase().strip_prefix("content-length:") {
+                content_len = v.trim().parse().unwrap();
+            }
+        }
+        let mut body = vec![0u8; content_len];
+        self.reader.read_exact(&mut body).unwrap();
+        (status, body)
+    }
 }
 
 #[test]
@@ -189,10 +236,163 @@ fn serve_concurrent_bit_exact() {
     let (code, _) = http_get(addr, "/diff/only-one");
     assert_eq!(code, 400);
 
+    // ------------------------------------------------------------------
+    // /metrics accounts for everything above *exactly*: metrics are
+    // recorded before a response's first byte, every response above was
+    // fully read, and a /metrics snapshot excludes its own request.
+    // ------------------------------------------------------------------
+    // 112 concurrent (8 clients × 2 rounds × (1 /log + 6 checkpoints))
+    // + 10 sequential probes above.
+    let settled = 112 + 10;
+    let (code, body) = http_get(addr, "/metrics");
+    assert_eq!(code, 200);
+    let snap = mgit::util::json::parse(&String::from_utf8(body).unwrap()).unwrap();
+    let server_reg = snap.get("server").expect("per-server registry section");
+    snap.get("process").expect("process-global registry section");
+    let counters = server_reg.get("counters").unwrap();
+    assert_eq!(counters.req_usize("requests_total").unwrap(), settled);
+    assert_eq!(counters.req_usize("status.200").unwrap(), settled - 4);
+    assert_eq!(counters.req_usize("status.404").unwrap(), 2);
+    assert_eq!(counters.req_usize("status.400").unwrap(), 2);
+    assert_eq!(counters.req_usize("endpoint.log").unwrap(), 16);
+    assert_eq!(counters.req_usize("endpoint.checkpoint").unwrap(), 97);
+    // Concurrent chain walks share ancestors through the server's
+    // ResolveCache; its mirror counters must show that.
+    assert!(counters.req_usize("cache.hits").unwrap() > 0, "no cache hits mirrored");
+    let hist = server_reg.get("histograms").unwrap().get("request_micros").unwrap();
+    assert_eq!(
+        hist.req_usize("count").unwrap(),
+        settled,
+        "latency histogram count must equal settled requests"
+    );
+    assert!(hist.req_usize("p99").unwrap() >= hist.req_usize("p50").unwrap());
+    assert!(!hist.req_arr("buckets").unwrap().is_empty());
+
+    // Counters are monotonic, and the next scrape counts the previous
+    // one: +1 exactly.
+    let (_, body) = http_get(addr, "/metrics");
+    let snap2 = mgit::util::json::parse(&String::from_utf8(body).unwrap()).unwrap();
+    let counters2 = snap2.get("server").unwrap().get("counters").unwrap();
+    assert_eq!(counters2.req_usize("requests_total").unwrap(), settled + 1);
+
+    // Prometheus text rendering: typed series, cumulative buckets, and
+    // the process registry (prefixed `mgit_`) alongside the server's.
+    let (code, body) = http_get(addr, "/metrics?format=prom");
+    assert_eq!(code, 200);
+    let text = String::from_utf8(body).unwrap();
+    assert!(text.contains("# TYPE mgit_serve_requests_total counter"));
+    assert!(text.contains(&format!("mgit_serve_requests_total {}", settled + 2)));
+    assert!(text.contains("# TYPE mgit_serve_request_micros histogram"));
+    assert!(text.contains("mgit_serve_request_micros_bucket{le=\""));
+    assert!(text.contains("mgit_serve_request_micros_bucket{le=\"+Inf\"}"));
+    assert!(text.contains(&format!("mgit_serve_request_micros_count {}", settled + 2)));
+    assert!(text.contains("mgit_store_pack_reads"), "process registry missing");
+
+    // Non-GET methods: 405 with an explicit Allow header, JSON body.
+    let (code, head, body) = http_request(
+        addr,
+        "POST /log HTTP/1.1\r\nHost: localhost\r\nConnection: close\r\n\r\n",
+    );
+    assert_eq!(code, 405);
+    assert!(head.contains("Allow: GET"), "405 must carry Allow: GET, got {head}");
+    let err = mgit::util::json::parse(&String::from_utf8(body).unwrap()).unwrap();
+    assert!(err.req_str("error").unwrap().contains("GET"));
+
     handle.shutdown();
     let report = srv.join().unwrap();
     let min = (CLIENTS * 2 * (VERSIONS + 1)) as u64;
     assert!(report.requests >= min, "served {} < {min}", report.requests);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Golden shape of `/metrics` after a known sequential request mix on a
+/// fresh server: per-endpoint and per-status counters, the in-flight
+/// gauge (which must read 1 — the `/metrics` request itself), and
+/// connection accounting.
+#[test]
+fn serve_metrics_golden_shape() {
+    let dir = tmp_repo("metrics");
+    Repo::init(&dir).unwrap();
+    let server = Server::bind(Repo::open(&dir).unwrap(), None, 0, 2).unwrap();
+    let addr = server.local_addr().unwrap();
+    let handle = server.handle().unwrap();
+    let srv = std::thread::spawn(move || server.serve().unwrap());
+
+    let (code, _) = http_get(addr, "/healthz");
+    assert_eq!(code, 200);
+    let (code, _) = http_get(addr, "/log");
+    assert_eq!(code, 200);
+    let (code, _) = http_get(addr, "/nope");
+    assert_eq!(code, 404);
+    let (code, _, _) = http_request(
+        addr,
+        "DELETE /log HTTP/1.1\r\nHost: localhost\r\nConnection: close\r\n\r\n",
+    );
+    assert_eq!(code, 405);
+
+    let (code, body) = http_get(addr, "/metrics");
+    assert_eq!(code, 200);
+    let snap = mgit::util::json::parse(&String::from_utf8(body).unwrap()).unwrap();
+    let server_reg = snap.get("server").unwrap();
+    let counters = server_reg.get("counters").unwrap();
+    assert_eq!(counters.req_usize("requests_total").unwrap(), 4);
+    assert_eq!(counters.req_usize("endpoint.healthz").unwrap(), 1);
+    assert_eq!(counters.req_usize("endpoint.log").unwrap(), 1);
+    // The 404'd unknown route and the 405'd DELETE both land in `other`.
+    assert_eq!(counters.req_usize("endpoint.other").unwrap(), 2);
+    assert_eq!(counters.req_usize("status.200").unwrap(), 2);
+    assert_eq!(counters.req_usize("status.404").unwrap(), 1);
+    assert_eq!(counters.req_usize("status.405").unwrap(), 1);
+    assert!(counters.req_usize("bytes_sent_total").unwrap() > 0);
+    // 4 one-shot connections + the one carrying this /metrics request.
+    assert_eq!(counters.req_usize("connections_total").unwrap(), 5);
+    let gauges = server_reg.get("gauges").unwrap();
+    assert_eq!(
+        gauges.req_usize("inflight").unwrap(),
+        1,
+        "the in-flight request is the /metrics fetch itself"
+    );
+    let hist = server_reg.get("histograms").unwrap().get("request_micros").unwrap();
+    assert_eq!(hist.req_usize("count").unwrap(), 4);
+    assert!(hist.req_usize("sum").unwrap() > 0);
+
+    handle.shutdown();
+    srv.join().unwrap();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// HTTP/1.1 keep-alive: one TCP connection carries several requests,
+/// and the server's connection/request accounting proves it.
+#[test]
+fn serve_keep_alive_reuses_connection() {
+    let dir = tmp_repo("keepalive");
+    Repo::init(&dir).unwrap();
+    let server = Server::bind(Repo::open(&dir).unwrap(), None, 0, 2).unwrap();
+    let addr = server.local_addr().unwrap();
+    let handle = server.handle().unwrap();
+    let srv = std::thread::spawn(move || server.serve().unwrap());
+
+    let mut conn = KeepAliveConn::connect(addr);
+    for _ in 0..2 {
+        let (code, body) = conn.get("/healthz");
+        assert_eq!(code, 200);
+        let ok = mgit::util::json::parse(&String::from_utf8(body).unwrap()).unwrap();
+        assert_eq!(ok.get("ok"), Some(&mgit::util::json::Json::Bool(true)));
+    }
+    // Same connection, third request: the server saw exactly one
+    // connection and has settled exactly the two /healthz requests.
+    let (code, body) = conn.get("/metrics");
+    assert_eq!(code, 200);
+    let snap = mgit::util::json::parse(&String::from_utf8(body).unwrap()).unwrap();
+    let counters = snap.get("server").unwrap().get("counters").unwrap();
+    assert_eq!(counters.req_usize("connections_total").unwrap(), 1);
+    assert_eq!(counters.req_usize("requests_total").unwrap(), 2);
+    drop(conn);
+
+    handle.shutdown();
+    let report = srv.join().unwrap();
+    assert_eq!(report.requests, 3);
+    assert_eq!(report.errors, 0);
     std::fs::remove_dir_all(&dir).unwrap();
 }
 
