@@ -16,6 +16,13 @@
 //! completed — the deterministic record-before-first-byte contract the
 //! serving tier guarantees (see `rust/src/ops/serve.rs`).
 //!
+//! A `serve_write` section then restarts the repo writable and measures
+//! the mixed read/write regime: a single writer streams WAL-backed
+//! `POST /commit`s (each fsync'd and snapshot-swapped) while a fleet of
+//! keep-alive readers keeps hammering `/log` + `/checkpoint`; rows
+//! report commit throughput, client-observed write latency, and read
+//! p99 under write load.
+//!
 //! `MGIT_SCALE=small` shrinks the per-client quota for CI smoke runs.
 
 mod common;
@@ -277,5 +284,123 @@ fn main() {
     println!("total: {} requests, {} errors", report.requests, report.errors);
     assert_eq!(report.errors, 0, "load run must be error-free");
 
+    serve_write_section(&dir);
+
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// One-shot `POST` (Connection: close); returns the status code.
+fn http_post(addr: SocketAddr, path: &str, body: &[u8]) -> u16 {
+    let mut s = TcpStream::connect(addr).unwrap();
+    let _ = s.set_nodelay(true);
+    write!(
+        s,
+        "POST {path} HTTP/1.1\r\nHost: bench\r\nConnection: close\r\nContent-Length: {}\r\n\r\n",
+        body.len()
+    )
+    .unwrap();
+    s.write_all(body).unwrap();
+    s.flush().unwrap();
+    let mut buf = Vec::new();
+    s.read_to_end(&mut buf).unwrap();
+    let head_end = buf.windows(4).position(|w| w == b"\r\n\r\n").expect("malformed response");
+    let head = String::from_utf8_lossy(&buf[..head_end]);
+    head.split_whitespace().nth(1).and_then(|c| c.parse().ok()).expect("bad status line")
+}
+
+/// Mixed read/write: restart the repo writable, stream WAL-backed
+/// commits from one writer while `WRITE_READERS` keep-alive readers keep
+/// pulling `/log` + `/checkpoint`, and report both sides' latencies.
+fn serve_write_section(dir: &Path) {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+    use mgit::ops::serve::WriteConfig;
+
+    const WRITE_READERS: usize = 8;
+    let commits = match std::env::var("MGIT_SCALE").as_deref() {
+        Ok("small") => 40usize,
+        _ => 200,
+    };
+
+    let zoo = ModelZoo::from_json(&json::parse(&manifest()).unwrap()).unwrap();
+    let server = Server::bind_writable(
+        Repo::open(dir).unwrap(),
+        Some(zoo),
+        0,
+        WRITE_READERS + 2,
+        WriteConfig { auth_token: None, rate_per_sec: None },
+    )
+    .unwrap();
+    let addr = server.local_addr().unwrap();
+    let handle = server.handle().unwrap();
+    let srv = std::thread::spawn(move || server.serve().unwrap());
+
+    let done = Arc::new(AtomicBool::new(false));
+    let mut write_lat = Vec::with_capacity(commits);
+    let mut read_lat: Vec<u64> = Vec::new();
+    let t = Timer::start();
+    std::thread::scope(|scope| {
+        let mut readers = Vec::new();
+        for c in 0..WRITE_READERS {
+            let done = Arc::clone(&done);
+            readers.push(scope.spawn(move || {
+                let paths = ["/log", "/checkpoint/bench%2Fv1", "/stats"];
+                let mut lat = Vec::new();
+                while !done.load(Ordering::SeqCst) {
+                    // Reconnect per block to stay inside the server's
+                    // per-connection request cap.
+                    let mut client = KeepAliveClient::connect(addr);
+                    for i in 0..200usize {
+                        let t0 = Instant::now();
+                        let (status, _) = client.get(paths[(c + i) % paths.len()]);
+                        assert_eq!(status, 200, "reader under write load");
+                        lat.push(t0.elapsed().as_micros() as u64);
+                        if done.load(Ordering::SeqCst) {
+                            break;
+                        }
+                    }
+                }
+                lat
+            }));
+        }
+        // The single writer: metadata-only commits, each one a durable
+        // WAL append + fsync + snapshot swap.
+        for i in 0..commits {
+            let op = format!(r#"{{"name":"live/{i}","model_type":"bench"}}"#);
+            let t0 = Instant::now();
+            let status = http_post(addr, "/commit", op.as_bytes());
+            assert_eq!(status, 200, "commit live/{i}");
+            write_lat.push(t0.elapsed().as_micros() as u64);
+        }
+        done.store(true, Ordering::SeqCst);
+        for r in readers {
+            read_lat.extend(r.join().unwrap());
+        }
+    });
+    let secs = t.elapsed_secs();
+
+    write_lat.sort_unstable();
+    read_lat.sort_unstable();
+    let commits_per_s = commits as f64 / secs;
+    let (wp50, wp99) = (pctile(&write_lat, 0.50), pctile(&write_lat, 0.99));
+    let rp99 = pctile(&read_lat, 0.99);
+    println!(
+        "serve write: {commits} commits in {secs:.2}s ({commits_per_s:.0}/s), \
+         write p50 {wp50}µs p99 {wp99}µs; {} reads, read p99 {rp99}µs",
+        read_lat.len()
+    );
+    common::bench_json("serve_write", "commits_per_s", commits_per_s);
+    common::bench_json("serve_write", "write_p50_micros", wp50 as f64);
+    common::bench_json("serve_write", "write_p99_micros", wp99 as f64);
+    common::bench_json("serve_write", "read_p99_micros_under_write", rp99 as f64);
+
+    handle.shutdown();
+    let report = srv.join().unwrap();
+    assert!(report.writable);
+    assert_eq!(report.commits, commits as u64, "every commit must have landed");
+    assert_eq!(report.errors, 0, "write run must be error-free");
+    println!(
+        "serve write: {} snapshot swaps, {} total requests",
+        report.snapshot_swaps, report.requests
+    );
 }

@@ -28,9 +28,12 @@
 //! mgit cascade --resume [--jobs N|auto]  # finish an interrupted cascade
 //! mgit stats                     # store/dedup/chain-depth statistics
 //! mgit serve [--port N] [--pool N|auto] [--log-requests]
+//!            [--writable [--auth-token TOK] [--write-rate N]]
 //!                                # HTTP front-end on the concurrent
-//!                                # read tier; /metrics for live
-//!                                # counters/latency (docs/API.md)
+//!                                # read tier; --writable adds WAL-backed
+//!                                # POST routes with live snapshot swap;
+//!                                # /metrics for live counters/latency
+//!                                # (docs/API.md)
 //! ```
 //!
 //! Exit status: nonzero when the operation errors *or* when its report
@@ -188,6 +191,7 @@ fn repack_request(args: &Args) -> Result<ops::RepackRequest> {
         max_generations,
         max_dead_ratio,
         framing,
+        keep_loose: args.has("keep-loose"),
     })
 }
 
@@ -199,6 +203,15 @@ fn cmd_serve(root: &Path, artifacts: &Path, args: &Args, json: bool) -> Result<(
         None | Some("auto") => crate::util::auto_jobs(),
         Some(_) => args.flag_usize("pool", 1)?.max(1),
     };
+    let writable = args.has("writable");
+    let auth_token = args.flag("auth-token").map(|t| t.to_string());
+    let write_rate = match args.flag("write-rate") {
+        None => None,
+        Some(_) => Some(args.flag_usize("write-rate", 0)? as u64),
+    };
+    if !writable && (auth_token.is_some() || write_rate.is_some()) {
+        bail!("--auth-token/--write-rate only make sense with --writable");
+    }
     let repo = Repo::open(root)?;
     // Arch specs enable /diff and /checkpoint; the graph/store endpoints
     // work without them.
@@ -209,13 +222,24 @@ fn cmd_serve(root: &Path, artifacts: &Path, args: &Args, json: bool) -> Result<(
             artifacts.display()
         );
     }
-    let server = ops::serve::Server::bind(repo, zoo, port, pool)?
-        .with_log_requests(args.has("log-requests"));
+    let server = if writable {
+        ops::serve::Server::bind_writable(
+            repo,
+            zoo,
+            port,
+            pool,
+            ops::serve::WriteConfig { auth_token, rate_per_sec: write_rate },
+        )?
+    } else {
+        ops::serve::Server::bind(repo, zoo, port, pool)?
+    }
+    .with_log_requests(args.has("log-requests"));
     // Status chatter goes to stderr so stdout stays JSON-clean.
     eprintln!(
-        "mgit serve: listening on http://{} ({} workers)",
+        "mgit serve: listening on http://{} ({} workers{})",
         server.local_addr()?,
-        server.pool()
+        server.pool(),
+        if writable { ", writable" } else { "" }
     );
     finish(json, &server.serve()?)
 }
@@ -245,6 +269,8 @@ usage: mgit <command> [args] [--flags]
                              (incremental auto-promotes to a full rewrite
                              past either threshold; 0 disables; the dead-
                              byte trigger fires only with --prune)
+                             [--keep-loose] (keep loose copies of newly
+                             packed objects — live-server repacks)
   verify-pack                verify pack checksums + object content hashes
                              (exits nonzero on bad packs)
   diff <a> <b>               divergence scores between two models
@@ -262,8 +288,13 @@ usage: mgit <command> [args] [--flags]
   auto-insert                rebuild provenance edges automatically (§3.2)
   serve                      HTTP front-end on the concurrent read tier
                              [--port 7421] [--pool N|auto]
-                             [--log-requests] (JSON request log, stderr);
-                             endpoints /log /stats /show/<node>
+                             [--log-requests] (JSON request log, stderr)
+                             [--writable] (WAL-backed POST /object
+                             /commit /checkpoint/<node> /admin/repack
+                             with live snapshot swap)
+                             [--auth-token TOK] (bearer auth on writes)
+                             [--write-rate N] (write requests/second);
+                             read endpoints /log /stats /show/<node>
                              /diff/<a>/<b> /checkpoint/<node>
                              /object/<id> /metrics (docs/API.md)
 

@@ -227,6 +227,78 @@ impl LineageGraph {
     }
 
     // ------------------------------------------------------------------
+    // Incremental append (the WAL / serving-tier commit operation)
+    // ------------------------------------------------------------------
+    /// Apply one serialized commit operation — the unit the writable
+    /// serving tier appends to its write-ahead log:
+    ///
+    /// ```json
+    /// {"name": "m/v2", "model_type": "t",
+    ///  "stored": {…StoredModel…} | null,
+    ///  "prov_parents": ["m/base"], "ver_parent": "m/v1" | null,
+    ///  "metadata": {…}}
+    /// ```
+    ///
+    /// Idempotent: a commit whose `name` already exists is a no-op
+    /// returning `Ok(false)` — WAL replay after a crash between
+    /// `graph.json` checkpoint and log truncation re-applies cleanly.
+    /// Parent names are resolved before the node is added, so an
+    /// unknown parent leaves the graph untouched.
+    pub fn apply_commit(&mut self, op: &Json) -> Result<bool> {
+        let name = op.req_str("name")?;
+        if self.by_name.contains_key(name) {
+            return Ok(false);
+        }
+        let model_type = op.req_str("model_type")?.to_string();
+        let stored = match op.get("stored") {
+            None | Some(Json::Null) => None,
+            Some(j) => Some(StoredModel::from_json(j)?),
+        };
+        let mut prov = Vec::new();
+        if let Some(parents) = op.get("prov_parents") {
+            for p in parents
+                .as_arr()
+                .ok_or_else(|| anyhow!("prov_parents must be an array"))?
+            {
+                let pname = p
+                    .as_str()
+                    .ok_or_else(|| anyhow!("prov_parents entries must be strings"))?;
+                prov.push(self.idx(pname)?);
+            }
+        }
+        let ver = match op.get("ver_parent") {
+            None | Some(Json::Null) => None,
+            Some(v) => {
+                let vname = v
+                    .as_str()
+                    .ok_or_else(|| anyhow!("ver_parent must be a string"))?;
+                let vidx = self.idx(vname)?;
+                if self.nodes[vidx].model_type != model_type {
+                    bail!(
+                        "version edge requires same model type ({} vs {})",
+                        self.nodes[vidx].model_type,
+                        model_type
+                    );
+                }
+                Some(vidx)
+            }
+        };
+        let name = name.to_string();
+        let idx = self.add_node(&name, &model_type)?;
+        self.nodes[idx].stored = stored;
+        if let Some(md) = op.get("metadata") {
+            self.nodes[idx].metadata = md.clone();
+        }
+        for p in prov {
+            self.add_edge(p, idx)?;
+        }
+        if let Some(v) = ver {
+            self.add_version_edge(v, idx)?;
+        }
+        Ok(true)
+    }
+
+    // ------------------------------------------------------------------
     // Removal (paper API: remove_edge, remove_node)
     // ------------------------------------------------------------------
     /// Remove the `ty` edge `parent -> child` (error if no such edge).

@@ -22,7 +22,7 @@ use super::{Report, Repo};
 pub struct FsckRequest;
 
 /// One fsck finding. `kind` is a stable machine tag (`MISSING`,
-/// `UNREADABLE`, `DANGLING`, `BAD_PACK`).
+/// `UNREADABLE`, `DANGLING`, `BAD_PACK`, `TORN_WAL`).
 pub struct FsckProblem {
     pub kind: &'static str,
     pub detail: String,
@@ -113,6 +113,33 @@ impl FsckRequest {
                     });
                     orphaned.entry(parent).or_default().push(id);
                 }
+            }
+        }
+        // Write-ahead log: a torn tail means a writable server crashed
+        // mid-append. The durable prefix was already replayed by
+        // `Repo::open`; the tail past it is unrecoverable and must fail
+        // fsck so operators notice the lost (never-acknowledged) write.
+        let wal_file = crate::store::wal::wal_path(&repo.root);
+        if wal_file.exists() {
+            match crate::store::wal::scan(&wal_file) {
+                Ok(scan) => {
+                    if let Some(t) = scan.torn {
+                        problems.push(FsckProblem {
+                            kind: "TORN_WAL",
+                            detail: format!(
+                                "{} torn at byte {}: {} ({} durable commits precede it)",
+                                wal_file.display(),
+                                t.offset,
+                                t.reason,
+                                scan.commits
+                            ),
+                        });
+                    }
+                }
+                Err(e) => problems.push(FsckProblem {
+                    kind: "UNREADABLE",
+                    detail: format!("{}: {e:#}", wal_file.display()),
+                }),
             }
         }
         // Pack structure (checksums, index/offset agreement).

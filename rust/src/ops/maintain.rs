@@ -32,6 +32,10 @@ pub struct RepackRequest {
     /// Outer framing of the pack this run writes (`--framing raw|zstd`;
     /// zstd needs the feature-gated dependency).
     pub framing: PackFraming,
+    /// Keep loose copies of newly packed objects (`--keep-loose`). The
+    /// writable serving tier repacks live with this on so readers still
+    /// holding a pre-repack store snapshot keep resolving.
+    pub keep_loose: bool,
 }
 
 impl Default for RepackRequest {
@@ -43,6 +47,7 @@ impl Default for RepackRequest {
             max_generations: Some(16),
             max_dead_ratio: Some(0.5),
             framing: PackFraming::Raw,
+            keep_loose: false,
         }
     }
 }
@@ -65,6 +70,7 @@ impl RepackRequest {
             max_generations: self.max_generations,
             max_dead_ratio: self.max_dead_ratio,
             framing: self.framing,
+            keep_loose: self.keep_loose,
             ..RepackConfig::default()
         };
         let roots = repo.graph.object_roots();

@@ -39,18 +39,31 @@ impl DiffRequest {
         zoo: &ModelZoo,
         kernel: &dyn DeltaKernel,
     ) -> Result<DiffReport> {
-        let na = repo.graph.by_name(&self.a)?;
-        let nb = repo.graph.by_name(&self.b)?;
+        self.run_on(&repo.graph, &repo.store, zoo, kernel)
+    }
+
+    /// Snapshot-level entry point: the serving tier diffs against an
+    /// immutable (graph, store) pair rather than a [`Repo`] session.
+    pub fn run_on(
+        &self,
+        graph: &crate::lineage::LineageGraph,
+        store: &crate::store::Store,
+        zoo: &ModelZoo,
+        kernel: &dyn DeltaKernel,
+    ) -> Result<DiffReport> {
+        let na = graph.by_name(&self.a)?;
+        let nb = graph.by_name(&self.b)?;
         let (sa, sb) = (zoo.arch(&na.model_type)?, zoo.arch(&nb.model_type)?);
         let da = ModelDag::from_arch(sa, na.stored.as_ref())?;
         let db = ModelDag::from_arch(sb, nb.stored.as_ref())?;
         let (structural, contextual) = divergence_scores(&da, &db);
-        let value = if na.stored.is_some() && nb.stored.is_some() {
-            let cka = repo.load_checkpoint(&self.a, kernel, zoo)?;
-            let ckb = repo.load_checkpoint(&self.b, kernel, zoo)?;
-            Some(value_distance(&da, sa, &cka, &db, sb, &ckb)?)
-        } else {
-            None
+        let value = match (&na.stored, &nb.stored) {
+            (Some(sma), Some(smb)) => {
+                let cka = delta::load(store, zoo, sma, kernel)?;
+                let ckb = delta::load(store, zoo, smb, kernel)?;
+                Some(value_distance(&da, sa, &cka, &db, sb, &ckb)?)
+            }
+            _ => None,
         };
         Ok(DiffReport {
             a: self.a.clone(),

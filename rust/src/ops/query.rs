@@ -2,7 +2,8 @@
 
 use anyhow::Result;
 
-use crate::store::ObjectId;
+use crate::lineage::LineageGraph;
+use crate::store::{ObjectId, Store};
 use crate::util::json::Json;
 
 use super::{Report, Repo};
@@ -35,9 +36,14 @@ pub struct LogReport {
 
 impl LogRequest {
     pub fn run(&self, repo: &Repo) -> Result<LogReport> {
-        let (prov, ver) = repo.graph.edge_counts();
-        let nodes = repo
-            .graph
+        self.run_graph(&repo.graph)
+    }
+
+    /// Graph-level entry point: the serving tier runs `log` against an
+    /// immutable snapshot graph rather than a whole [`Repo`] session.
+    pub fn run_graph(&self, graph: &LineageGraph) -> Result<LogReport> {
+        let (prov, ver) = graph.edge_counts();
+        let nodes = graph
             .nodes
             .iter()
             .map(|node| LogNode {
@@ -48,7 +54,7 @@ impl LogRequest {
                 prov_parents: node
                     .prov_parents
                     .iter()
-                    .map(|&p| repo.graph.node(p).name.clone())
+                    .map(|&p| graph.node(p).name.clone())
                     .collect(),
             })
             .collect();
@@ -108,7 +114,12 @@ pub struct ShowReport {
 
 impl ShowRequest {
     pub fn run(&self, repo: &Repo) -> Result<ShowReport> {
-        let node = repo.graph.by_name(&self.node)?;
+        self.run_graph(&repo.graph)
+    }
+
+    /// Graph-level entry point (see [`LogRequest::run_graph`]).
+    pub fn run_graph(&self, graph: &LineageGraph) -> Result<ShowReport> {
+        let node = graph.by_name(&self.node)?;
         let params = node
             .stored
             .as_ref()
@@ -203,8 +214,15 @@ pub struct StatsReport {
 
 impl StatsRequest {
     pub fn run(&self, repo: &Repo) -> Result<StatsReport> {
-        let objects = repo.store.list()?;
-        let bytes = repo.store.stored_bytes()?;
+        self.run_on(&repo.root, &repo.store)
+    }
+
+    /// Store-level entry point: `stats` never reads the graph, so the
+    /// serving tier can run it against a snapshot's shared store (plus
+    /// the repo root, for the persisted cumulative counters).
+    pub fn run_on(&self, root: &std::path::Path, store: &Store) -> Result<StatsReport> {
+        let objects = store.list()?;
+        let bytes = store.stored_bytes()?;
         let mut raw_bytes: u64 = 0;
         let mut delta_objs = 0usize;
         let mut meta_fallback = 0usize;
@@ -218,7 +236,7 @@ impl StatsRequest {
         let mut parents: std::collections::HashMap<ObjectId, Option<ObjectId>> =
             Default::default();
         for id in &objects {
-            let meta = repo.store.object_meta(id)?;
+            let meta = store.object_meta(id)?;
             if !meta.from_index {
                 meta_fallback += 1; // loose: header parse read the bytes
             }
@@ -230,10 +248,8 @@ impl StatsRequest {
                     // v2 index entry (kind/parent but no numel persisted):
                     // one header parse of the object bytes.
                     meta_fallback += 1;
-                    crate::store::format::TensorObject::decode_meta(
-                        &repo.store.get(id)?,
-                    )
-                    .numel
+                    crate::store::format::TensorObject::decode_meta(&store.get(id)?)
+                        .numel
                 }
                 None => None, // opaque blob: no logical tensor bytes
             };
@@ -245,7 +261,7 @@ impl StatsRequest {
             }
             parents.insert(*id, meta.parent);
         }
-        let (loose, packed) = match repo.store.as_packed() {
+        let (loose, packed) = match store.as_packed() {
             Some(ps) => ps.counts()?,
             None => (objects.len(), 0),
         };
@@ -253,7 +269,7 @@ impl StatsRequest {
         // time; sort by file mtime so "gen 0" is the oldest.
         let mut reader_kind = None;
         let mut packs = Vec::new();
-        if let Some(ps) = repo.store.as_packed() {
+        if let Some(ps) = store.as_packed() {
             if !ps.packs().is_empty() {
                 let mut gens: Vec<_> = ps
                     .packs()
@@ -297,7 +313,7 @@ impl StatsRequest {
             }
         }
         // Cumulative dedup counters (persisted across invocations).
-        let (puts, dedup, written) = Repo::load_stats(&repo.root);
+        let (puts, dedup, written) = Repo::load_stats(root);
         // Delta-chain depths (reconstruction cost driver; docs/STORAGE.md).
         let depths = crate::store::pack::chain_depths_from_parents(&parents)?;
         let chain_max = depths.values().copied().max().unwrap_or(0);

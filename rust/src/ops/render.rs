@@ -365,6 +365,14 @@ impl fmt::Display for ServeReport {
             f,
             "serve: handled {} requests ({} errors) across {} workers",
             self.requests, self.errors, self.pool
-        )
+        )?;
+        if self.writable {
+            write!(
+                f,
+                "; writable: {} commits, {} snapshot swaps",
+                self.commits, self.snapshot_swaps
+            )?;
+        }
+        Ok(())
     }
 }

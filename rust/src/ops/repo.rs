@@ -15,7 +15,7 @@ use anyhow::{anyhow, bail, Result};
 use crate::checkpoint::Checkpoint;
 use crate::delta::{self, DeltaKernel};
 use crate::lineage::LineageGraph;
-use crate::store::{ObjectId, Store};
+use crate::store::{wal, ObjectId, Store};
 use crate::util::json::Json;
 
 use super::Report;
@@ -54,9 +54,44 @@ impl Repo {
 
     /// De-serialize at the start of an operation (paper §3.1). The store
     /// is pack-capable: loose staging first, then pack indexes.
+    ///
+    /// If a writable server left a write-ahead log behind (crash, or
+    /// simply commits since the last checkpoint), its durable prefix is
+    /// replayed here: WAL-carried objects are re-put (dedup makes this
+    /// write-free after the first materialization) and commit records
+    /// are re-applied to the in-memory graph (idempotent). The log file
+    /// itself is never modified on open — only a writable server
+    /// truncates it, after folding it into `graph.json`. A torn tail is
+    /// warned about here and diagnosed as a problem by `mgit fsck`.
     pub fn open(root: &Path) -> Result<Repo> {
-        let graph = LineageGraph::load(&Self::graph_path(root))?;
+        let mut graph = LineageGraph::load(&Self::graph_path(root))?;
         let store = Store::open_packed(&Self::mgit_dir(root).join("objects"))?;
+        let wal_file = wal::wal_path(root);
+        if wal_file.exists() {
+            let scan = wal::scan(&wal_file)?;
+            if let Some(t) = &scan.torn {
+                eprintln!(
+                    "warning: {} has a torn tail at byte {} ({}); recovering the durable prefix ({} commits)",
+                    wal_file.display(),
+                    t.offset,
+                    t.reason,
+                    scan.commits
+                );
+            }
+            let mut replayed = 0u64;
+            for rec in &scan.records {
+                match rec {
+                    wal::WalRecord::Put { id, bytes } => {
+                        store.put(*id, bytes)?;
+                    }
+                    wal::WalRecord::Commit { op } => {
+                        graph.apply_commit(op)?;
+                    }
+                }
+                replayed += 1;
+            }
+            wal::WAL_REPLAYS.add(replayed);
+        }
         Ok(Repo { root: root.to_path_buf(), graph, store })
     }
 

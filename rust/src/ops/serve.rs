@@ -1,33 +1,63 @@
 //! `mgit serve`: a dependency-free HTTP/1.1 front-end over the
-//! concurrent read tier.
+//! concurrent read tier, optionally write-capable.
 //!
-//! The server owns one read-only [`Repo`] snapshot (graph loaded once at
-//! bind time) and shares the `Send + Sync` [`crate::store::Store`] plus
-//! one bounded [`ResolveCache`] across a fixed pool of worker threads —
-//! exactly the concurrency contract the storage tier guarantees (mmap'd
-//! lock-free pack reads; see `docs/STORAGE.md`). Endpoints:
+//! ## Snapshots
 //!
-//! | method+path              | response                                         |
-//! |--------------------------|--------------------------------------------------|
-//! | `GET /log`               | [`super::LogReport`] JSON                        |
-//! | `GET /stats`             | [`super::StatsReport`] JSON                      |
-//! | `GET /show/<node>`       | [`super::ShowReport`] JSON                       |
-//! | `GET /diff/<a>/<b>`      | [`super::DiffReport`] JSON (needs the manifest)  |
-//! | `GET /checkpoint/<node>` | raw little-endian f32 tensor stream (flat layout |
-//! |                          | order), delta chains resolved through the shared |
-//! |                          | cache — bit-exact with [`crate::delta::load`]    |
-//! | `GET /object/<hex-id>`   | the stored object's exact bytes (`Store::get`)   |
-//! | `GET /metrics`           | live metrics: per-server request counters and    |
-//! |                          | latency histograms plus the process registry     |
-//! |                          | (JSON; `?format=prom` for Prometheus text)       |
-//! | `GET /healthz`           | `{"ok": true}`                                   |
+//! Every read request is pinned to one immutable [`Snapshot`] — an
+//! `Arc`'d (graph, store, epoch) triple held behind an `RwLock` slot.
+//! Readers clone the `Arc` once at dispatch and never observe a torn
+//! graph: the writer builds the next snapshot off to the side and swaps
+//! the slot atomically after each committed batch, so `/log` and
+//! `/checkpoint` reflect new commits without a restart. The shared
+//! `Send + Sync` [`crate::store::Store`] and one bounded
+//! [`ResolveCache`] span all snapshots (objects are content-addressed
+//! and immutable, so the cache is epoch-agnostic). Endpoints:
+//!
+//! | method+path               | response                                         |
+//! |---------------------------|--------------------------------------------------|
+//! | `GET /log`                | [`super::LogReport`] JSON                        |
+//! | `GET /stats`              | [`super::StatsReport`] JSON (lazy per snapshot)  |
+//! | `GET /show/<node>`        | [`super::ShowReport`] JSON                       |
+//! | `GET /diff/<a>/<b>`       | [`super::DiffReport`] JSON (needs the manifest)  |
+//! | `GET /checkpoint/<node>`  | raw little-endian f32 tensor stream (flat layout |
+//! |                           | order), delta chains resolved through the shared |
+//! |                           | cache — bit-exact with [`crate::delta::load`];   |
+//! |                           | honors single-range `Range: bytes=…` (206/416)   |
+//! | `GET /object/<hex-id>`    | the stored object's exact bytes (`Store::get`)   |
+//! | `GET /metrics`            | live metrics: per-server request counters and    |
+//! |                           | latency histograms plus the process registry     |
+//! |                           | (JSON; `?format=prom` for Prometheus text)       |
+//! | `GET /healthz`            | `{"ok": true}`                                   |
+//! | `POST /object/<hex-id>`   | stage one encoded object ahead of a commit       |
+//! | `POST /commit`            | apply one commit-op JSON body                    |
+//! | `POST /checkpoint/<node>` | store a raw f32 body (`?arch=<name>&prev=<node>` |
+//! |                           | delta-compresses against `prev`) and commit it   |
+//! | `POST /admin/repack`      | checkpoint the WAL, repack live, swap snapshots  |
 //!
 //! Node names may contain `/` (e.g. `g5/base-mlm`): `show` and
 //! `checkpoint` treat the whole remaining path as the name, and any
-//! segment may percent-encode reserved characters (`%2F`). The protocol
-//! surface is deliberately tiny — `GET`-only (anything else gets a `405`
-//! with an `Allow: GET` header) — so it needs no external HTTP crate,
-//! matching the repo's no-new-deps style.
+//! segment may percent-encode reserved characters (`%2F`). Method
+//! dispatch is route-aware: a known route answers `405` with its own
+//! `Allow` header (`GET, POST` on `/object/…` and `/checkpoint/…`,
+//! `POST` on `/commit` and `/admin/repack`, `GET` elsewhere); unknown
+//! routes are `404` for every method. No external HTTP crate, matching
+//! the repo's no-new-deps style.
+//!
+//! ## Write tier
+//!
+//! Mutating routes exist only when the server was bound with
+//! [`Server::bind_writable`] (`mgit serve --writable`); otherwise they
+//! answer `403`. Writes are single-writer: one [`WriteState`] mutex
+//! owns the authoritative graph and the append-only WAL at
+//! `.mgit/wal/wal.log` (see [`crate::store::wal`] for the byte format).
+//! Commit durability order is: object put records, then the commit
+//! record, then **one fsync**, then in-memory apply, then the snapshot
+//! swap — a crash at any byte boundary recovers to exactly the last
+//! durable commit ([`super::Repo::open`] replays the log). Every
+//! [`CHECKPOINT_EVERY`] commits (and at shutdown) the graph is folded
+//! into `graph.json` and the log truncated. Optional guards on the
+//! write path: a bearer token (`--auth-token`, else `401`) and a
+//! token-bucket rate limit (`--write-rate`, else `429`).
 //!
 //! ## Keep-alive
 //!
@@ -43,29 +73,33 @@
 //! Every server owns a *per-instance* [`Registry`] (concurrent servers
 //! in one process — tests — must not bleed request counts into each
 //! other): request/byte counters, per-endpoint and per-status counters,
-//! an in-flight gauge, and a request-latency histogram. `GET /metrics`
-//! renders that registry alongside the process-global one
-//! ([`crate::obs::global`]: store reads, payload decodes, cascade
-//! timings). Metrics for a request are recorded *before* its first
-//! response byte is written, so once a client has read a response, a
-//! subsequent `/metrics` fetch is guaranteed to include it — the
-//! property the integration tests pin down. `--log-requests` adds a
-//! one-line JSON record per request on stderr.
+//! an in-flight gauge, request- and write-latency histograms, and a
+//! `snapshot.swaps` counter. `GET /metrics` renders that registry
+//! alongside the process-global one ([`crate::obs::global`]: store
+//! reads, payload decodes, WAL appends/replays, cascade timings).
+//! Metrics for a request are recorded *before* its first response byte
+//! is written, so once a client has read a response, a subsequent
+//! `/metrics` fetch is guaranteed to include it — the property the
+//! integration tests pin down. `--log-requests` adds a one-line JSON
+//! record per request on stderr.
 
 use std::io::Write;
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex, OnceLock, RwLock};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use crate::checkpoint::ModelZoo;
-use crate::delta::{self, NativeKernel, ResolveCache};
+use crate::checkpoint::{Checkpoint, ModelZoo};
+use crate::delta::{self, CompressConfig, NativeKernel, ResolveCache, StoredModel};
+use crate::lineage::LineageGraph;
 use crate::obs::{Counter, Gauge, Histogram, Registry};
-use crate::store::ObjectId;
-use crate::tensor::f32_to_bytes;
-use crate::util::json::Json;
+use crate::store::pack::RepackMode;
+use crate::store::{wal, ObjectId, Store};
+use crate::tensor::{bytes_to_f32, f32_to_bytes};
+use crate::util::json::{self, Json};
 
 use super::{Report, Repo};
 
@@ -73,11 +107,25 @@ use super::{Report, Repo};
 /// how long a single client can monopolize a pool worker.
 pub const MAX_REQUESTS_PER_CONN: u64 = 1000;
 
+/// Fold the WAL into `graph.json` (and truncate the log) every this
+/// many commits; also happens at shutdown. Bounds replay work after a
+/// crash without putting `graph.json` serialization on every commit.
+pub const CHECKPOINT_EVERY: u64 = 64;
+
+/// Largest request body accepted (matches the WAL's own record cap).
+pub const MAX_BODY: usize = 1 << 30;
+
 /// Summary returned when a server shuts down.
 pub struct ServeReport {
     pub requests: u64,
     pub errors: u64,
     pub pool: usize,
+    /// Whether the server accepted writes.
+    pub writable: bool,
+    /// Commits applied over the server's lifetime.
+    pub commits: u64,
+    /// Snapshot epochs published (commits + admin repacks).
+    pub snapshot_swaps: u64,
 }
 
 impl Report for ServeReport {
@@ -86,6 +134,9 @@ impl Report for ServeReport {
             .set("requests", self.requests)
             .set("errors", self.errors)
             .set("pool", self.pool)
+            .set("writable", self.writable)
+            .set("commits", self.commits)
+            .set("snapshot_swaps", self.snapshot_swaps)
     }
 }
 
@@ -95,8 +146,10 @@ impl Report for ServeReport {
 
 /// Endpoint labels for per-endpoint request counters. `other` absorbs
 /// unmatched paths (404s on unknown routes).
-const ENDPOINTS: [&str; 9] = [
+const ENDPOINTS: [&str; 11] = [
+    "admin",
     "checkpoint",
+    "commit",
     "diff",
     "healthz",
     "log",
@@ -109,7 +162,8 @@ const ENDPOINTS: [&str; 9] = [
 
 /// Status codes with dedicated counters; anything else lands in
 /// `status.other`.
-const STATUSES: [u16; 6] = [200, 400, 404, 405, 500, 503];
+const STATUSES: [u16; 13] =
+    [200, 206, 400, 401, 403, 404, 405, 409, 413, 416, 429, 500, 503];
 
 /// One server's request metrics: a private [`Registry`] plus handles
 /// resolved once at bind time, so the per-request path is pure relaxed
@@ -119,6 +173,10 @@ struct ServeMetrics {
     requests_total: Arc<Counter>,
     bytes_sent: Arc<Counter>,
     request_micros: Arc<Histogram>,
+    /// Write-route handler latency (commit/object/checkpoint/repack).
+    write_micros: Arc<Histogram>,
+    /// Snapshot epochs published by the write tier.
+    snapshot_swaps: Arc<Counter>,
     inflight: Arc<Gauge>,
     connections: Arc<Counter>,
     endpoints: Vec<(&'static str, Arc<Counter>)>,
@@ -139,6 +197,8 @@ impl ServeMetrics {
         let requests_total = registry.counter("requests_total");
         let bytes_sent = registry.counter("bytes_sent_total");
         let request_micros = registry.histogram("request_micros");
+        let write_micros = registry.histogram("write_micros");
+        let snapshot_swaps = registry.counter("snapshot.swaps");
         let inflight = registry.gauge("inflight");
         let connections = registry.counter("connections_total");
         let endpoints = ENDPOINTS
@@ -159,6 +219,8 @@ impl ServeMetrics {
             requests_total,
             bytes_sent,
             request_micros,
+            write_micros,
+            snapshot_swaps,
             inflight,
             connections,
             endpoints,
@@ -216,18 +278,82 @@ impl Drop for InflightGuard<'_> {
 }
 
 // ---------------------------------------------------------------------------
+// Snapshots and the write state
+// ---------------------------------------------------------------------------
+
+/// One immutable published view of the repository. Readers clone the
+/// `Arc` at dispatch time and keep it for the whole request, so a
+/// concurrent commit (which swaps the slot, never mutates a published
+/// snapshot) can't tear a response.
+struct Snapshot {
+    graph: Arc<LineageGraph>,
+    /// Shared across snapshots except after an admin repack, which
+    /// publishes a freshly opened store (old `Arc`s keep resolving:
+    /// live repacks retain loose copies and never delete sealed packs).
+    store: Arc<Store>,
+    /// Monotonic publish counter, starting at 1 for the bind snapshot.
+    epoch: u64,
+    /// `/stats` response, computed lazily on first request against this
+    /// snapshot (it walks every object; commits would invalidate it, so
+    /// the old bind-time precompute is now per-epoch).
+    stats: OnceLock<Json>,
+}
+
+/// The single-writer side: authoritative graph plus the open WAL. All
+/// mutating routes funnel through this mutex.
+struct WriteState {
+    graph: LineageGraph,
+    wal: wal::Wal,
+    /// Commits since the WAL was last folded into `graph.json`.
+    since_checkpoint: u64,
+}
+
+/// Options for [`Server::bind_writable`].
+pub struct WriteConfig {
+    /// Require `Authorization: Bearer <token>` on mutating routes.
+    pub auth_token: Option<String>,
+    /// Token-bucket rate limit on mutating requests (per second;
+    /// `None`/0 disables).
+    pub rate_per_sec: Option<u64>,
+}
+
+/// Minimal token bucket: refills continuously at `per_sec`, holds at
+/// most one second's burst.
+struct TokenBucket {
+    tokens: f64,
+    last: Instant,
+    per_sec: f64,
+}
+
+impl TokenBucket {
+    fn new(per_sec: u64) -> TokenBucket {
+        let per_sec = per_sec.max(1) as f64;
+        TokenBucket { tokens: per_sec, last: Instant::now(), per_sec }
+    }
+
+    fn take(&mut self) -> bool {
+        let now = Instant::now();
+        let dt = now.duration_since(self.last).as_secs_f64();
+        self.last = now;
+        self.tokens = (self.tokens + dt * self.per_sec).min(self.per_sec);
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Server
 // ---------------------------------------------------------------------------
 
-/// Shared, read-only serving state (one per server).
+/// Shared serving state (one per server).
 struct ServeState {
-    repo: Repo,
-    /// `/stats` response, computed once at bind time: the report walks
-    /// every object in the store, and the server's repo snapshot is
-    /// immutable for its lifetime — recomputing per request would let a
-    /// few concurrent `/stats` hits pin every pool worker on large
-    /// stores.
-    stats: Json,
+    root: PathBuf,
+    /// The published snapshot slot; see [`Snapshot`].
+    snapshot: RwLock<Arc<Snapshot>>,
     /// Arch specs for `/diff` and `/checkpoint`; None when no artifacts
     /// manifest was found (those endpoints answer 503).
     zoo: Option<ModelZoo>,
@@ -235,6 +361,12 @@ struct ServeState {
     /// ancestors (PR 2's bounded LRU).
     cache: ResolveCache,
     metrics: ServeMetrics,
+    /// Present iff the server accepts writes.
+    writer: Option<Mutex<WriteState>>,
+    auth_token: Option<String>,
+    rate: Option<Mutex<TokenBucket>>,
+    epoch: AtomicU64,
+    commits: AtomicU64,
     /// Emit a one-line JSON record per request on stderr.
     log_requests: AtomicBool,
     stop: AtomicBool,
@@ -272,18 +404,77 @@ impl ServerHandle {
 
 impl Server {
     /// Bind `127.0.0.1:port` (`port = 0` picks an ephemeral port) over
-    /// an opened repository. `pool` worker threads serve requests
-    /// (clamped to ≥ 1); size it with [`crate::util::auto_jobs`].
+    /// an opened repository, read-only. `pool` worker threads serve
+    /// requests (clamped to ≥ 1); size it with [`crate::util::auto_jobs`].
     pub fn bind(repo: Repo, zoo: Option<ModelZoo>, port: u16, pool: usize) -> Result<Server> {
+        Self::bind_inner(repo, zoo, port, pool, None)
+    }
+
+    /// Bind a write-capable server (`mgit serve --writable`): folds any
+    /// replayed WAL into `graph.json`, opens a fresh log, and enables
+    /// the POST routes guarded by `cfg`.
+    pub fn bind_writable(
+        repo: Repo,
+        zoo: Option<ModelZoo>,
+        port: u16,
+        pool: usize,
+        cfg: WriteConfig,
+    ) -> Result<Server> {
+        Self::bind_inner(repo, zoo, port, pool, Some(cfg))
+    }
+
+    fn bind_inner(
+        repo: Repo,
+        zoo: Option<ModelZoo>,
+        port: u16,
+        pool: usize,
+        write: Option<WriteConfig>,
+    ) -> Result<Server> {
         let listener = TcpListener::bind(("127.0.0.1", port))
             .with_context(|| format!("binding 127.0.0.1:{port}"))?;
-        let stats = super::StatsRequest.run(&repo)?.to_json();
+        let Repo { root, graph, store } = repo;
+        let writer = match &write {
+            None => None,
+            Some(_) => {
+                // `Repo::open` already replayed any leftover WAL into
+                // `graph`; persist that and start from an empty log so
+                // the bind snapshot and the log agree.
+                graph.save(&Repo::graph_path(&root))?;
+                let mut wal = wal::Wal::open_append(&root)?;
+                wal.truncate()?;
+                Some(Mutex::new(WriteState {
+                    graph: graph.clone(),
+                    wal,
+                    since_checkpoint: 0,
+                }))
+            }
+        };
+        let (auth_token, rate) = match write {
+            None => (None, None),
+            Some(cfg) => (
+                cfg.auth_token,
+                cfg.rate_per_sec
+                    .filter(|r| *r > 0)
+                    .map(|r| Mutex::new(TokenBucket::new(r))),
+            ),
+        };
+        let snapshot = Snapshot {
+            graph: Arc::new(graph),
+            store: Arc::new(store),
+            epoch: 1,
+            stats: OnceLock::new(),
+        };
         let state = Arc::new(ServeState {
-            repo,
-            stats,
+            root,
+            snapshot: RwLock::new(Arc::new(snapshot)),
             zoo,
             cache: ResolveCache::with_max_bytes(128, 256 << 20),
             metrics: ServeMetrics::new(),
+            writer,
+            auth_token,
+            rate,
+            epoch: AtomicU64::new(1),
+            commits: AtomicU64::new(0),
             log_requests: AtomicBool::new(false),
             stop: AtomicBool::new(false),
             requests: AtomicU64::new(0),
@@ -311,7 +502,9 @@ impl Server {
     }
 
     /// Accept connections until [`ServerHandle::shutdown`], dispatching
-    /// them to the bounded worker pool. Blocks the calling thread.
+    /// them to the bounded worker pool. Blocks the calling thread. A
+    /// writable server checkpoints its WAL into `graph.json` on the way
+    /// out, so a clean shutdown leaves an empty log.
     pub fn serve(self) -> Result<ServeReport> {
         // Bounded hand-off: when every worker is busy and the queue is
         // full, the accept loop blocks in `send`, which backpressures to
@@ -342,12 +535,182 @@ impl Server {
             }
             drop(tx); // workers drain the queue, then exit
         });
+        if let Some(wm) = &self.state.writer {
+            let mut ws = wm.lock().unwrap();
+            if let Err(e) = checkpoint_writer(&self.state, &mut ws) {
+                eprintln!("warning: final WAL checkpoint failed: {e:#}");
+            }
+        }
         Ok(ServeReport {
             requests: self.state.requests.load(Ordering::Relaxed),
             errors: self.state.errors.load(Ordering::Relaxed),
             pool: self.pool,
+            writable: self.state.writer.is_some(),
+            commits: self.state.commits.load(Ordering::Relaxed),
+            snapshot_swaps: self.state.metrics.snapshot_swaps.get(),
         })
     }
+}
+
+/// Fold the writer's graph into `graph.json`, then truncate the WAL.
+/// Crash-safe in that order: a crash between the two replays the log
+/// against an already-updated graph, which `apply_commit` treats as a
+/// no-op per record.
+fn checkpoint_writer(state: &ServeState, ws: &mut WriteState) -> Result<()> {
+    ws.graph.save(&Repo::graph_path(&state.root))?;
+    ws.wal.truncate()?;
+    ws.since_checkpoint = 0;
+    Ok(())
+}
+
+/// Publish a new immutable snapshot (epoch bump + atomic slot swap).
+fn publish_snapshot(state: &ServeState, graph: &LineageGraph, store: Arc<Store>) -> u64 {
+    let epoch = state.epoch.fetch_add(1, Ordering::SeqCst) + 1;
+    let snap = Arc::new(Snapshot {
+        graph: Arc::new(graph.clone()),
+        store,
+        epoch,
+        stats: OnceLock::new(),
+    });
+    *state.snapshot.write().unwrap() = snap;
+    state.metrics.snapshot_swaps.inc();
+    epoch
+}
+
+/// `/stats` for one snapshot, computed on first request (a benign race
+/// may compute it twice; `OnceLock` keeps one).
+fn snapshot_stats(state: &ServeState, snap: &Snapshot) -> Result<Json> {
+    if let Some(j) = snap.stats.get() {
+        return Ok(j.clone());
+    }
+    let j = super::StatsRequest.run_on(&state.root, &snap.store)?.to_json();
+    let _ = snap.stats.set(j.clone());
+    Ok(j)
+}
+
+// ---------------------------------------------------------------------------
+// The single-writer commit path
+// ---------------------------------------------------------------------------
+
+/// A write-path failure: either a client error with a status code, or
+/// an internal error that escapes to the generic 500 handler.
+enum WriteError {
+    Reject(u16, String),
+    Internal(anyhow::Error),
+}
+
+impl From<anyhow::Error> for WriteError {
+    fn from(e: anyhow::Error) -> WriteError {
+        WriteError::Internal(e)
+    }
+}
+
+fn reject(code: u16, msg: impl Into<String>) -> WriteError {
+    WriteError::Reject(code, msg.into())
+}
+
+struct CommitDone {
+    epoch: u64,
+    new_objects: usize,
+    nodes: usize,
+}
+
+/// Apply one commit under the writer lock: validate against the
+/// authoritative graph, WAL the object puts and the commit record,
+/// fsync once, apply in memory, maybe checkpoint, and publish the new
+/// snapshot. `objects` are puts batched with this commit (the commit
+/// may also reference objects staged earlier via `POST /object`).
+fn writer_commit(
+    state: &ServeState,
+    objects: &[(ObjectId, Vec<u8>)],
+    op: &Json,
+) -> Result<CommitDone, WriteError> {
+    let wm = state.writer.as_ref().expect("dispatch gates writes on state.writer");
+    let mut ws = wm.lock().unwrap();
+    let name = op.req_str("name").map_err(|e| reject(400, format!("{e:#}")))?;
+    if name.is_empty() {
+        return Err(reject(400, "node name must be non-empty"));
+    }
+    if ws.graph.idx(name).is_ok() {
+        return Err(reject(409, format!("node `{name}` already exists")));
+    }
+    let model_type = op
+        .req_str("model_type")
+        .map_err(|e| reject(400, format!("{e:#}")))?
+        .to_string();
+    let store = Arc::clone(&state.snapshot.read().unwrap().store);
+    match op.get("stored") {
+        None | Some(Json::Null) => {}
+        Some(j) => {
+            let sm = StoredModel::from_json(j)
+                .map_err(|e| reject(400, format!("invalid stored model: {e:#}")))?;
+            for (pname, id) in &sm.params {
+                if !store.has(id) && !objects.iter().any(|(oid, _)| oid == id) {
+                    return Err(reject(
+                        409,
+                        format!(
+                            "param `{pname}` references object {} that is neither \
+                             stored nor in this batch; POST /object first",
+                            id.hex()
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+    if let Some(parents) = op.get("prov_parents") {
+        let arr = parents
+            .as_arr()
+            .ok_or_else(|| reject(400, "prov_parents must be an array"))?;
+        for p in arr {
+            let pname = p
+                .as_str()
+                .ok_or_else(|| reject(400, "prov_parents entries must be strings"))?;
+            if ws.graph.idx(pname).is_err() {
+                return Err(reject(400, format!("unknown prov parent `{pname}`")));
+            }
+        }
+    }
+    match op.get("ver_parent") {
+        None | Some(Json::Null) => {}
+        Some(v) => {
+            let vname = v
+                .as_str()
+                .ok_or_else(|| reject(400, "ver_parent must be a string"))?;
+            let vn = ws
+                .graph
+                .by_name(vname)
+                .map_err(|_| reject(400, format!("unknown ver parent `{vname}`")))?;
+            if vn.model_type != model_type {
+                return Err(reject(
+                    400,
+                    format!(
+                        "ver parent `{vname}` has model type `{}`, commit says `{model_type}`",
+                        vn.model_type
+                    ),
+                ));
+            }
+        }
+    }
+    // Durability order: puts, commit record, one fsync. Only after the
+    // batch is durable does it become visible (graph apply + swap).
+    let mut new_objects = 0usize;
+    for (id, bytes) in objects {
+        if store.put_via_wal(&mut ws.wal, *id, bytes)? {
+            new_objects += 1;
+        }
+    }
+    ws.wal.append(&wal::WalRecord::Commit { op: op.clone() })?;
+    ws.wal.sync()?;
+    let applied = ws.graph.apply_commit(op)?;
+    debug_assert!(applied, "validated commit must apply");
+    ws.since_checkpoint += 1;
+    if ws.since_checkpoint >= CHECKPOINT_EVERY {
+        checkpoint_writer(state, &mut ws)?;
+    }
+    let epoch = publish_snapshot(state, &ws.graph, store);
+    state.commits.fetch_add(1, Ordering::Relaxed);
+    Ok(CommitDone { epoch, new_objects, nodes: ws.graph.len() })
 }
 
 // ---------------------------------------------------------------------------
@@ -449,6 +812,19 @@ impl ResponseWriter<'_> {
     }
 }
 
+/// One parsed request, body already read (framing is handled before
+/// dispatch so keep-alive survives error responses).
+struct Request<'a> {
+    method: &'a str,
+    path: &'a str,
+    query: &'a str,
+    body: &'a [u8],
+    /// `Authorization: Bearer <token>` value, when present.
+    auth: Option<&'a str>,
+    /// Raw `Range:` header value, when present.
+    range: Option<&'a str>,
+}
+
 /// Serve one connection's request stream (HTTP/1.1 keep-alive).
 fn handle_http(state: &ServeState, mut stream: TcpStream) -> Result<()> {
     use std::io::{BufRead, BufReader, Read};
@@ -490,18 +866,46 @@ fn handle_http(state: &ServeState, mut stream: TcpStream) -> Result<()> {
         // HTTP/1.0 defaults to close; 1.1 to keep-alive. An explicit
         // `Connection:` header wins either way.
         let mut close = version == "HTTP/1.0";
+        let mut content_length = 0usize;
+        let mut bad_content_length = false;
+        let mut chunked = false;
+        let mut auth_bearer: Option<String> = None;
+        let mut range_header: Option<String> = None;
         loop {
             let mut h = String::new();
             if reader.read_line(&mut h)? == 0 || h == "\r\n" || h == "\n" {
                 break;
             }
-            let lower = h.trim().to_ascii_lowercase();
-            if let Some(v) = lower.strip_prefix("connection:") {
-                match v.trim() {
+            // Only the header *name* is case-insensitive; values (bearer
+            // tokens in particular) must pass through untouched.
+            let Some((hname, hval)) = h.split_once(':') else { continue };
+            let hname = hname.trim().to_ascii_lowercase();
+            let hval = hval.trim();
+            match hname.as_str() {
+                "connection" => match hval.to_ascii_lowercase().as_str() {
                     "close" => close = true,
                     "keep-alive" => close = false,
                     _ => {}
+                },
+                "content-length" => match hval.parse::<usize>() {
+                    Ok(n) => content_length = n,
+                    Err(_) => bad_content_length = true,
+                },
+                "transfer-encoding" => {
+                    if hval.to_ascii_lowercase().contains("chunked") {
+                        chunked = true;
+                    }
                 }
+                "authorization" => {
+                    if let Some(tok) = hval
+                        .strip_prefix("Bearer ")
+                        .or_else(|| hval.strip_prefix("bearer "))
+                    {
+                        auth_bearer = Some(tok.trim().to_string());
+                    }
+                }
+                "range" => range_header = Some(hval.to_string()),
+                _ => {}
             }
         }
         served += 1;
@@ -522,13 +926,44 @@ fn handle_http(state: &ServeState, mut stream: TcpStream) -> Result<()> {
             start: Instant::now(),
             recorded: false,
         };
-        if method != "GET" {
-            rw.respond_json_with(
-                405,
-                &err_json("only GET is supported"),
-                &[("Allow", "GET")],
+        // Framing errors close the connection: we can't locate the next
+        // request boundary without a trustworthy body length.
+        if bad_content_length || chunked {
+            rw.keep_alive = false;
+            let msg = if chunked {
+                "chunked request bodies are not supported; send Content-Length"
+            } else {
+                "invalid Content-Length"
+            };
+            rw.respond_json(400, &err_json(msg))?;
+            state.requests.fetch_add(1, Ordering::Relaxed);
+            return Ok(());
+        }
+        if content_length > MAX_BODY {
+            rw.keep_alive = false;
+            rw.respond_json(
+                413,
+                &err_json(&format!("request body exceeds {MAX_BODY} bytes")),
             )?;
-        } else if let Err(e) = route(state, &mut rw, &path, &query) {
+            state.requests.fetch_add(1, Ordering::Relaxed);
+            return Ok(());
+        }
+        // Read the body on every method (even ones we'll reject) so the
+        // keep-alive stream stays framed.
+        let mut body = vec![0u8; content_length];
+        if content_length > 0 {
+            reader.get_mut().set_limit(content_length as u64);
+            reader.read_exact(&mut body)?;
+        }
+        let req = Request {
+            method: &method,
+            path: &path,
+            query: &query,
+            body: &body,
+            auth: auth_bearer.as_deref(),
+            range: range_header.as_deref(),
+        };
+        if let Err(e) = dispatch(state, &mut rw, &req) {
             // Route handlers answer their own 4xx; anything that
             // *escapes* is an internal error. Best-effort 500 unless a
             // head already went out (the client may be gone either way).
@@ -547,68 +982,194 @@ fn handle_http(state: &ServeState, mut stream: TcpStream) -> Result<()> {
     }
 }
 
-fn route(state: &ServeState, rw: &mut ResponseWriter, path: &str, query: &str) -> Result<()> {
+// ---------------------------------------------------------------------------
+// Routing
+// ---------------------------------------------------------------------------
+
+enum Route<'a> {
+    Log,
+    Stats,
+    Metrics,
+    Healthz,
+    Show(&'a str),
+    Diff(&'a str),
+    Checkpoint(&'a str),
+    Object(&'a str),
+    Commit,
+    AdminRepack,
+    Unknown,
+}
+
+fn parse_route(path: &str) -> Route<'_> {
     match path {
-        "/log" => {
-            rw.endpoint = "log";
-            let report = super::LogRequest.run(&state.repo)?;
-            return rw.respond_json(200, &report.to_json());
+        "/log" => Route::Log,
+        "/stats" => Route::Stats,
+        "/metrics" => Route::Metrics,
+        "/healthz" => Route::Healthz,
+        "/commit" => Route::Commit,
+        "/admin/repack" => Route::AdminRepack,
+        _ => {
+            if let Some(r) = path.strip_prefix("/show/") {
+                Route::Show(r)
+            } else if let Some(r) = path.strip_prefix("/checkpoint/") {
+                Route::Checkpoint(r)
+            } else if let Some(r) = path.strip_prefix("/object/") {
+                Route::Object(r)
+            } else if let Some(r) = path.strip_prefix("/diff/") {
+                Route::Diff(r)
+            } else {
+                Route::Unknown
+            }
         }
-        "/stats" => {
-            rw.endpoint = "stats";
-            return rw.respond_json(200, &state.stats);
-        }
-        "/metrics" => {
-            rw.endpoint = "metrics";
-            return serve_metrics(state, rw, query);
-        }
-        "/healthz" => {
-            rw.endpoint = "healthz";
-            return rw.respond_json(200, &Json::obj().set("ok", true));
-        }
-        _ => {}
     }
-    if let Some(rest) = path.strip_prefix("/show/") {
-        rw.endpoint = "show";
-        let node = percent_decode(rest);
-        if state.repo.graph.idx(&node).is_err() {
-            return rw.respond_json(404, &err_json(&format!("no node named `{node}`")));
+}
+
+impl Route<'_> {
+    fn endpoint(&self) -> &'static str {
+        match self {
+            Route::Log => "log",
+            Route::Stats => "stats",
+            Route::Metrics => "metrics",
+            Route::Healthz => "healthz",
+            Route::Show(_) => "show",
+            Route::Diff(_) => "diff",
+            Route::Checkpoint(_) => "checkpoint",
+            Route::Object(_) => "object",
+            Route::Commit => "commit",
+            Route::AdminRepack => "admin",
+            Route::Unknown => "other",
         }
-        let report = super::ShowRequest { node }.run(&state.repo)?;
-        return rw.respond_json(200, &report.to_json());
     }
-    if let Some(rest) = path.strip_prefix("/checkpoint/") {
-        rw.endpoint = "checkpoint";
-        return serve_checkpoint(state, rw, &percent_decode(rest));
+
+    /// The `Allow:` header this route advertises on a 405.
+    fn allow(&self) -> &'static str {
+        match self {
+            Route::Checkpoint(_) | Route::Object(_) => "GET, POST",
+            Route::Commit | Route::AdminRepack => "POST",
+            _ => "GET",
+        }
     }
-    if let Some(rest) = path.strip_prefix("/object/") {
-        rw.endpoint = "object";
-        return serve_object(state, rw, rest);
+
+    fn allows(&self, method: &str) -> bool {
+        match self {
+            Route::Checkpoint(_) | Route::Object(_) => method == "GET" || method == "POST",
+            Route::Commit | Route::AdminRepack => method == "POST",
+            _ => method == "GET",
+        }
     }
-    if let Some(rest) = path.strip_prefix("/diff/") {
-        rw.endpoint = "diff";
-        let segs: Vec<&str> = rest.split('/').collect();
-        if segs.len() != 2 {
+}
+
+fn dispatch(state: &ServeState, rw: &mut ResponseWriter, req: &Request) -> Result<()> {
+    let route = parse_route(req.path);
+    rw.endpoint = route.endpoint();
+    if matches!(route, Route::Unknown) {
+        return rw.respond_json(404, &err_json(&format!("no route for `{}`", req.path)));
+    }
+    if !route.allows(req.method) {
+        return rw.respond_json_with(
+            405,
+            &err_json(&format!(
+                "method {} not allowed here; allowed: {}",
+                req.method,
+                route.allow()
+            )),
+            &[("Allow", route.allow())],
+        );
+    }
+    if req.method == "POST" {
+        // Write gating, in order: capability, auth, rate.
+        if state.writer.is_none() {
             return rw.respond_json(
-                400,
-                &err_json("diff wants exactly /diff/<a>/<b> (percent-encode `/` in names)"),
+                403,
+                &err_json("server is read-only (start with --writable)"),
             );
         }
-        let (a, b) = (percent_decode(segs[0]), percent_decode(segs[1]));
-        let Some(zoo) = &state.zoo else {
-            return rw.respond_json(503, &err_json(NO_MANIFEST));
-        };
-        if state.repo.graph.idx(&a).is_err() || state.repo.graph.idx(&b).is_err() {
-            return rw.respond_json(404, &err_json("no such node"));
+        if let Some(expect) = &state.auth_token {
+            if req.auth != Some(expect.as_str()) {
+                return rw.respond_json_with(
+                    401,
+                    &err_json("missing or invalid bearer token"),
+                    &[("WWW-Authenticate", "Bearer")],
+                );
+            }
         }
-        let report = super::DiffRequest { a, b }.run(&state.repo, zoo, &NativeKernel)?;
-        return rw.respond_json(200, &report.to_json());
+        if let Some(rate) = &state.rate {
+            if !rate.lock().unwrap().take() {
+                return rw.respond_json(429, &err_json("write rate limit exceeded"));
+            }
+        }
+        let t = Instant::now();
+        let res = match route {
+            Route::Commit => post_commit(state, rw, req.body),
+            Route::AdminRepack => admin_repack(state, rw),
+            Route::Object(hex) => post_object(state, rw, hex, req.body),
+            Route::Checkpoint(rest) => {
+                post_checkpoint(state, rw, &percent_decode(rest), req.query, req.body)
+            }
+            _ => unreachable!("allows() admits POST only on write routes"),
+        };
+        state
+            .metrics
+            .write_micros
+            .observe(t.elapsed().as_micros() as u64);
+        return res;
     }
-    rw.respond_json(404, &err_json(&format!("no route for `{path}`")))
+    // Read path: pin the whole request to one immutable snapshot.
+    let snap = state.snapshot.read().unwrap().clone();
+    match route {
+        Route::Log => {
+            let report = super::LogRequest.run_graph(&snap.graph)?;
+            rw.respond_json(200, &report.to_json())
+        }
+        Route::Stats => {
+            let stats = snapshot_stats(state, &snap)?;
+            rw.respond_json(200, &stats)
+        }
+        Route::Metrics => serve_metrics(state, rw, req.query),
+        Route::Healthz => rw.respond_json(200, &Json::obj().set("ok", true)),
+        Route::Show(rest) => {
+            let node = percent_decode(rest);
+            if snap.graph.idx(&node).is_err() {
+                return rw.respond_json(404, &err_json(&format!("no node named `{node}`")));
+            }
+            let report = super::ShowRequest { node }.run_graph(&snap.graph)?;
+            rw.respond_json(200, &report.to_json())
+        }
+        Route::Checkpoint(rest) => {
+            serve_checkpoint(state, &snap, rw, &percent_decode(rest), req.range)
+        }
+        Route::Object(hex) => serve_object(&snap, rw, hex),
+        Route::Diff(rest) => {
+            let segs: Vec<&str> = rest.split('/').collect();
+            if segs.len() != 2 {
+                return rw.respond_json(
+                    400,
+                    &err_json("diff wants exactly /diff/<a>/<b> (percent-encode `/` in names)"),
+                );
+            }
+            let (a, b) = (percent_decode(segs[0]), percent_decode(segs[1]));
+            let Some(zoo) = &state.zoo else {
+                return rw.respond_json(503, &err_json(NO_MANIFEST));
+            };
+            if snap.graph.idx(&a).is_err() || snap.graph.idx(&b).is_err() {
+                return rw.respond_json(404, &err_json("no such node"));
+            }
+            let report =
+                super::DiffRequest { a, b }.run_on(&snap.graph, &snap.store, zoo, &NativeKernel)?;
+            rw.respond_json(200, &report.to_json())
+        }
+        Route::Commit | Route::AdminRepack | Route::Unknown => {
+            unreachable!("handled before the read path")
+        }
+    }
 }
 
 const NO_MANIFEST: &str =
     "server started without an artifacts manifest; arch-dependent endpoints are disabled";
+
+// ---------------------------------------------------------------------------
+// Read handlers
+// ---------------------------------------------------------------------------
 
 /// `GET /metrics`: both registries — this server's request metrics plus
 /// the process-global layer telemetry. The snapshot is taken *before*
@@ -632,12 +1193,72 @@ fn serve_metrics(state: &ServeState, rw: &mut ResponseWriter, query: &str) -> Re
     rw.respond_json(200, &body)
 }
 
+/// Outcome of parsing a `Range:` header against a known body length.
+enum RangeParse {
+    /// No usable single byte-range: serve the full 200 response.
+    Ignore,
+    /// Syntactically valid but empty/out-of-bounds: 416.
+    Unsatisfiable,
+    /// Half-open byte window `[start, end)` within the body.
+    Bytes(usize, usize),
+}
+
+/// Parse a single-range `bytes=` header (RFC 9110 subset). Multi-range
+/// and malformed specs fall back to `Ignore` — a full 200 is always a
+/// valid response to a Range request.
+fn parse_range(header: &str, total: usize) -> RangeParse {
+    let Some(spec) = header.trim().strip_prefix("bytes=") else {
+        return RangeParse::Ignore;
+    };
+    if spec.contains(',') {
+        return RangeParse::Ignore;
+    }
+    let Some((a, b)) = spec.split_once('-') else {
+        return RangeParse::Ignore;
+    };
+    let (a, b) = (a.trim(), b.trim());
+    match (a.is_empty(), b.is_empty()) {
+        (false, false) => match (a.parse::<usize>(), b.parse::<usize>()) {
+            (Ok(start), Ok(last)) => {
+                if start > last {
+                    RangeParse::Ignore
+                } else if start >= total {
+                    RangeParse::Unsatisfiable
+                } else {
+                    RangeParse::Bytes(start, (last + 1).min(total))
+                }
+            }
+            _ => RangeParse::Ignore,
+        },
+        (false, true) => match a.parse::<usize>() {
+            Ok(start) if start < total => RangeParse::Bytes(start, total),
+            Ok(_) => RangeParse::Unsatisfiable,
+            Err(_) => RangeParse::Ignore,
+        },
+        (true, false) => match b.parse::<usize>() {
+            Ok(0) => RangeParse::Unsatisfiable,
+            Ok(n) if total > 0 => RangeParse::Bytes(total.saturating_sub(n), total),
+            Ok(_) => RangeParse::Unsatisfiable,
+            Err(_) => RangeParse::Ignore,
+        },
+        (true, true) => RangeParse::Ignore,
+    }
+}
+
 /// Stream a node's resolved checkpoint: the flat f32 parameter vector in
 /// layout order, little-endian — bit-exact with what `delta::load`
 /// reconstructs. Delta chains resolve through the server's shared cache,
-/// so concurrent readers of sibling models reuse common ancestors.
-fn serve_checkpoint(state: &ServeState, rw: &mut ResponseWriter, node: &str) -> Result<()> {
-    let Ok(n) = state.repo.graph.by_name(node) else {
+/// so concurrent readers of sibling models reuse common ancestors. A
+/// single `Range: bytes=…` header yields a 206 byte window (416 when
+/// unsatisfiable); resumable pulls of multi-GB checkpoints ride on this.
+fn serve_checkpoint(
+    state: &ServeState,
+    snap: &Snapshot,
+    rw: &mut ResponseWriter,
+    node: &str,
+    range: Option<&str>,
+) -> Result<()> {
+    let Ok(n) = snap.graph.by_name(node) else {
         return rw.respond_json(404, &err_json(&format!("no node named `{node}`")));
     };
     let Some(sm) = &n.stored else {
@@ -649,9 +1270,40 @@ fn serve_checkpoint(state: &ServeState, rw: &mut ResponseWriter, node: &str) -> 
     let Some(zoo) = &state.zoo else {
         return rw.respond_json(503, &err_json(NO_MANIFEST));
     };
-    let ck = delta::load_with_cache(&state.repo.store, zoo, sm, &NativeKernel, &state.cache)?;
-    let body_len = ck.flat.len() * 4;
-    rw.write_head(200, "application/octet-stream", body_len)?;
+    let ck = delta::load_with_cache(&snap.store, zoo, sm, &NativeKernel, &state.cache)?;
+    let total = ck.flat.len() * 4;
+    if let Some(header) = range {
+        match parse_range(header, total) {
+            RangeParse::Ignore => {}
+            RangeParse::Unsatisfiable => {
+                let content_range = format!("bytes */{total}");
+                return rw.respond_json_with(
+                    416,
+                    &err_json("range not satisfiable"),
+                    &[("Content-Range", content_range.as_str())],
+                );
+            }
+            RangeParse::Bytes(start, end) => {
+                // Serialize just the f32 window covering [start, end),
+                // then trim to the exact byte edges.
+                let i0 = start / 4;
+                let i1 = (end + 3) / 4;
+                let window = f32_to_bytes(&ck.flat[i0..i1]);
+                let slice = &window[start - i0 * 4..][..end - start];
+                let content_range = format!("bytes {}-{}/{}", start, end - 1, total);
+                rw.write_head_with(
+                    206,
+                    "application/octet-stream",
+                    slice.len(),
+                    &[("Content-Range", content_range.as_str()), ("Accept-Ranges", "bytes")],
+                )?;
+                rw.stream.write_all(slice)?;
+                rw.stream.flush()?;
+                return Ok(());
+            }
+        }
+    }
+    rw.write_head_with(200, "application/octet-stream", total, &[("Accept-Ranges", "bytes")])?;
     // Stream in bounded chunks rather than materializing one giant byte
     // buffer next to the checkpoint.
     const CHUNK: usize = 1 << 20; // 1 Mi f32 values (4 MiB) per write
@@ -664,18 +1316,217 @@ fn serve_checkpoint(state: &ServeState, rw: &mut ResponseWriter, node: &str) -> 
 
 /// Serve one stored object's exact bytes — byte-identical to
 /// `Store::get`, whichever pack or loose file holds it.
-fn serve_object(state: &ServeState, rw: &mut ResponseWriter, hex: &str) -> Result<()> {
+fn serve_object(snap: &Snapshot, rw: &mut ResponseWriter, hex: &str) -> Result<()> {
     let Ok(id) = ObjectId::from_hex(hex) else {
         return rw.respond_json(400, &err_json("object id must be 64 hex chars"));
     };
-    if !state.repo.store.has(&id) {
+    if !snap.store.has(&id) {
         return rw.respond_json(404, &err_json(&format!("object {hex} not found")));
     }
-    let bytes = state.repo.store.get(&id)?;
+    let bytes = snap.store.get(&id)?;
     rw.write_head(200, "application/octet-stream", bytes.len())?;
     rw.stream.write_all(&bytes)?;
     rw.stream.flush()?;
     Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Write handlers
+// ---------------------------------------------------------------------------
+
+/// `POST /object/<hex-id>`: stage one encoded object (WAL-journaled put)
+/// ahead of a commit that references it. Idempotent: an already-stored
+/// id answers `"new": false` without touching the log.
+fn post_object(state: &ServeState, rw: &mut ResponseWriter, hex: &str, body: &[u8]) -> Result<()> {
+    let Ok(id) = ObjectId::from_hex(hex) else {
+        return rw.respond_json(400, &err_json("object id must be 64 hex chars"));
+    };
+    let wm = state.writer.as_ref().expect("dispatch gates writes on state.writer");
+    let mut ws = wm.lock().unwrap();
+    let store = Arc::clone(&state.snapshot.read().unwrap().store);
+    let new = store.put_via_wal(&mut ws.wal, id, body)?;
+    if new {
+        ws.wal.sync()?;
+    }
+    rw.respond_json(
+        200,
+        &Json::obj().set("id", hex).set("new", new).set("bytes", body.len()),
+    )
+}
+
+/// `POST /commit`: apply one commit-op JSON body (see
+/// [`LineageGraph::apply_commit`] for the schema).
+fn post_commit(state: &ServeState, rw: &mut ResponseWriter, body: &[u8]) -> Result<()> {
+    let text = match std::str::from_utf8(body) {
+        Ok(t) => t,
+        Err(_) => return rw.respond_json(400, &err_json("commit body must be UTF-8 JSON")),
+    };
+    let op = match json::parse(text) {
+        Ok(j) => j,
+        Err(e) => {
+            return rw.respond_json(400, &err_json(&format!("invalid commit JSON: {e:#}")))
+        }
+    };
+    match writer_commit(state, &[], &op) {
+        Ok(done) => rw.respond_json(
+            200,
+            &Json::obj()
+                .set("committed", true)
+                .set("epoch", done.epoch)
+                .set("nodes", done.nodes)
+                .set("new_objects", done.new_objects),
+        ),
+        Err(WriteError::Reject(code, msg)) => rw.respond_json(code, &err_json(&msg)),
+        Err(WriteError::Internal(e)) => Err(e),
+    }
+}
+
+/// `POST /checkpoint/<node>?arch=<name>[&prev=<node>]`: store a raw
+/// little-endian f32 body as `<node>`'s checkpoint and commit it in one
+/// round trip. With `prev`, the body is delta-compressed against that
+/// node's checkpoint and linked to it with a version edge.
+fn post_checkpoint(
+    state: &ServeState,
+    rw: &mut ResponseWriter,
+    node: &str,
+    query: &str,
+    body: &[u8],
+) -> Result<()> {
+    let Some(zoo) = &state.zoo else {
+        return rw.respond_json(503, &err_json(NO_MANIFEST));
+    };
+    if node.is_empty() {
+        return rw.respond_json(400, &err_json("checkpoint wants POST /checkpoint/<node>"));
+    }
+    let mut arch = None;
+    let mut prev = None;
+    for kv in query.split('&') {
+        match kv.split_once('=') {
+            Some(("arch", v)) => arch = Some(percent_decode(v)),
+            Some(("prev", v)) => prev = Some(percent_decode(v)),
+            _ => {}
+        }
+    }
+    let Some(arch) = arch else {
+        return rw.respond_json(400, &err_json("POST /checkpoint/<node>?arch=<name> is required"));
+    };
+    let spec = match zoo.arch(&arch) {
+        Ok(s) => s,
+        Err(_) => {
+            return rw.respond_json(400, &err_json(&format!("unknown architecture `{arch}`")))
+        }
+    };
+    if body.len() != spec.param_count * 4 {
+        return rw.respond_json(
+            400,
+            &err_json(&format!(
+                "arch `{arch}` wants {} bytes of little-endian f32 ({} params); body has {}",
+                spec.param_count * 4,
+                spec.param_count,
+                body.len()
+            )),
+        );
+    }
+    let ck = Checkpoint { arch: spec.name.clone(), flat: bytes_to_f32(body) };
+    let snap = state.snapshot.read().unwrap().clone();
+    let (sm, objects, delta_params) = match &prev {
+        Some(pname) => {
+            let pn = match snap.graph.by_name(pname) {
+                Ok(n) => n,
+                Err(_) => {
+                    return rw
+                        .respond_json(400, &err_json(&format!("unknown prev node `{pname}`")))
+                }
+            };
+            let Some(psm) = &pn.stored else {
+                return rw.respond_json(
+                    400,
+                    &err_json(&format!("prev node `{pname}` has no stored checkpoint")),
+                );
+            };
+            if pn.model_type != spec.name {
+                return rw.respond_json(
+                    400,
+                    &err_json(&format!(
+                        "prev node `{pname}` has model type `{}`, not `{}`",
+                        pn.model_type, spec.name
+                    )),
+                );
+            }
+            let pck = delta::load_with_cache(&snap.store, zoo, psm, &NativeKernel, &state.cache)?;
+            let cand = delta::prepare_delta(
+                &snap.store,
+                spec,
+                &ck,
+                spec,
+                &pck,
+                psm,
+                CompressConfig::default(),
+                &NativeKernel,
+            )?;
+            (cand.model, cand.objects, cand.report.n_delta)
+        }
+        None => {
+            // Encode into a scratch in-memory store, then ship the
+            // objects through the WAL'd commit like any other batch.
+            let mem = Store::in_memory();
+            let (sm, _) = delta::store_raw(&mem, spec, &ck)?;
+            let mut seen = std::collections::HashSet::new();
+            let mut objects = Vec::new();
+            for (_, id) in &sm.params {
+                if seen.insert(*id) {
+                    objects.push((*id, mem.get(id)?));
+                }
+            }
+            (sm, objects, 0)
+        }
+    };
+    let mut op = Json::obj()
+        .set("name", node)
+        .set("model_type", spec.name.as_str())
+        .set("stored", sm.to_json());
+    if let Some(pname) = &prev {
+        op = op.set("ver_parent", pname.as_str());
+    }
+    match writer_commit(state, &objects, &op) {
+        Ok(done) => rw.respond_json(
+            200,
+            &Json::obj()
+                .set("node", node)
+                .set("arch", spec.name.as_str())
+                .set("delta_params", delta_params)
+                .set("new_objects", done.new_objects)
+                .set("epoch", done.epoch),
+        ),
+        Err(WriteError::Reject(code, msg)) => rw.respond_json(code, &err_json(&msg)),
+        Err(WriteError::Internal(e)) => Err(e),
+    }
+}
+
+/// `POST /admin/repack`: checkpoint the WAL, repack the store live
+/// (incremental, escalation off, loose copies kept so readers holding a
+/// pre-repack snapshot keep resolving), and publish a new snapshot over
+/// the repacked store.
+fn admin_repack(state: &ServeState, rw: &mut ResponseWriter) -> Result<()> {
+    let wm = state.writer.as_ref().expect("dispatch gates writes on state.writer");
+    let mut ws = wm.lock().unwrap();
+    // Fold outstanding commits into graph.json so the fresh Repo below
+    // sees them without a WAL replay.
+    checkpoint_writer(state, &mut ws)?;
+    let mut repo = Repo::open(&state.root)?;
+    let request = super::RepackRequest {
+        mode: RepackMode::Incremental,
+        prune: false,
+        keep_loose: true,
+        // Escalation to a full rewrite deletes old packs, which would
+        // break readers still on a pre-repack store snapshot.
+        max_generations: None,
+        max_dead_ratio: None,
+        ..Default::default()
+    };
+    let report = request.run(&mut repo)?;
+    let epoch = publish_snapshot(state, &ws.graph, Arc::new(repo.store));
+    rw.respond_json(200, &report.to_json().set("epoch", epoch))
 }
 
 // ---------------------------------------------------------------------------
@@ -685,9 +1536,16 @@ fn serve_object(state: &ServeState, rw: &mut ResponseWriter, hex: &str) -> Resul
 fn status_reason(code: u16) -> &'static str {
     match code {
         200 => "OK",
+        206 => "Partial Content",
         400 => "Bad Request",
+        401 => "Unauthorized",
+        403 => "Forbidden",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        409 => "Conflict",
+        413 => "Payload Too Large",
+        416 => "Range Not Satisfiable",
+        429 => "Too Many Requests",
         503 => "Service Unavailable",
         _ => "Internal Server Error",
     }
@@ -748,6 +1606,12 @@ mod tests {
         assert_eq!(counters.req_usize("endpoint.other").unwrap(), 1);
         assert_eq!(counters.req_usize("status.200").unwrap(), 1);
         assert_eq!(counters.req_usize("status.other").unwrap(), 1);
+        // The write-tier labels exist from bind time so scrapes are
+        // shape-stable whether or not a write ever happened.
+        assert_eq!(counters.req_usize("endpoint.commit").unwrap(), 0);
+        assert_eq!(counters.req_usize("endpoint.admin").unwrap(), 0);
+        assert_eq!(counters.req_usize("status.401").unwrap(), 0);
+        assert_eq!(counters.req_usize("snapshot.swaps").unwrap(), 0);
 
         let cache = ResolveCache::new(2);
         cache.insert(crate::store::hash_bytes(b"a"), vec![0.0; 4]);
@@ -762,5 +1626,75 @@ mod tests {
             snap.get("gauges").unwrap().req_usize("cache.resident_bytes").unwrap(),
             16
         );
+    }
+
+    #[test]
+    fn range_parsing() {
+        // Full-form, open-ended, and suffix ranges on a 100-byte body.
+        assert!(matches!(parse_range("bytes=0-9", 100), RangeParse::Bytes(0, 10)));
+        assert!(matches!(parse_range("bytes=90-199", 100), RangeParse::Bytes(90, 100)));
+        assert!(matches!(parse_range("bytes=40-", 100), RangeParse::Bytes(40, 100)));
+        assert!(matches!(parse_range("bytes=-25", 100), RangeParse::Bytes(75, 100)));
+        assert!(matches!(parse_range("bytes=-500", 100), RangeParse::Bytes(0, 100)));
+        // Unsatisfiable: start past the end, empty suffix, empty body.
+        assert!(matches!(parse_range("bytes=100-", 100), RangeParse::Unsatisfiable));
+        assert!(matches!(parse_range("bytes=200-300", 100), RangeParse::Unsatisfiable));
+        assert!(matches!(parse_range("bytes=-0", 100), RangeParse::Unsatisfiable));
+        assert!(matches!(parse_range("bytes=-5", 0), RangeParse::Unsatisfiable));
+        // Ignored (→ full 200): other units, multi-range, garbage.
+        assert!(matches!(parse_range("items=0-4", 100), RangeParse::Ignore));
+        assert!(matches!(parse_range("bytes=0-4,10-14", 100), RangeParse::Ignore));
+        assert!(matches!(parse_range("bytes=x-y", 100), RangeParse::Ignore));
+        assert!(matches!(parse_range("bytes=9-2", 100), RangeParse::Ignore));
+        assert!(matches!(parse_range("bytes=-", 100), RangeParse::Ignore));
+    }
+
+    #[test]
+    fn token_bucket_refills() {
+        let mut tb = TokenBucket::new(2);
+        // Full burst up front, then dry.
+        assert!(tb.take());
+        assert!(tb.take());
+        assert!(!tb.take());
+        // Simulate the passage of time by back-dating the last refill.
+        tb.last = Instant::now() - Duration::from_secs(1);
+        assert!(tb.take()); // ~2 tokens refilled
+        assert!(tb.take());
+        assert!(!tb.take());
+    }
+
+    #[test]
+    fn snapshot_swap_is_atomic_for_held_readers() {
+        let mut g1 = LineageGraph::new();
+        g1.add_node("a", "t").unwrap();
+        let store = Arc::new(Store::in_memory());
+        let slot = RwLock::new(Arc::new(Snapshot {
+            graph: Arc::new(g1.clone()),
+            store: Arc::clone(&store),
+            epoch: 1,
+            stats: OnceLock::new(),
+        }));
+
+        // A reader pins the epoch-1 snapshot...
+        let held = slot.read().unwrap().clone();
+
+        // ...while the writer publishes epoch 2 with one more node.
+        let mut g2 = g1.clone();
+        g2.add_node("b", "t").unwrap();
+        *slot.write().unwrap() = Arc::new(Snapshot {
+            graph: Arc::new(g2),
+            store,
+            epoch: 2,
+            stats: OnceLock::new(),
+        });
+
+        // The held snapshot is frozen; the slot serves the new epoch.
+        assert_eq!(held.epoch, 1);
+        assert_eq!(held.graph.len(), 1);
+        assert!(held.graph.idx("b").is_err());
+        let current = slot.read().unwrap().clone();
+        assert_eq!(current.epoch, 2);
+        assert_eq!(current.graph.len(), 2);
+        assert!(current.graph.idx("b").is_ok());
     }
 }

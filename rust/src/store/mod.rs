@@ -52,6 +52,7 @@
 
 pub mod format;
 pub mod pack;
+pub mod wal;
 
 use std::collections::{HashMap, HashSet};
 use std::fmt;
@@ -647,6 +648,26 @@ impl Store {
             self.stats.dedup_hits.fetch_add(1, Ordering::Relaxed);
         }
         Ok(wrote)
+    }
+
+    /// Put-through-WAL seam for the writable serving tier: record the
+    /// object in `wal` *before* materializing it in the backend, so a
+    /// crash between the two is recovered by replay. Dedup hits skip
+    /// both the log record and the write (the object is already
+    /// durable). The caller batches [`wal::Wal::sync`] — typically one
+    /// fsync per commit, not per object.
+    pub fn put_via_wal(
+        &self,
+        wal: &mut wal::Wal,
+        id: ObjectId,
+        bytes: &[u8],
+    ) -> Result<bool> {
+        if self.has(&id) {
+            // Count the dedup hit exactly like a direct put would.
+            return self.put(id, bytes);
+        }
+        wal.append(&wal::WalRecord::Put { id, bytes: bytes.to_vec() })?;
+        self.put(id, bytes)
     }
 
     /// Convenience: hash bytes and store them under their own hash.

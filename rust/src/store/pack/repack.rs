@@ -116,6 +116,13 @@ pub struct RepackConfig {
     /// validation oracle and for debugging suspected index metadata
     /// corruption.
     pub decode_mark: bool,
+    /// Keep loose copies of objects that are now packed instead of
+    /// demoting (deleting) them. A live writable server repacks with
+    /// this on: readers still holding a pre-repack store snapshot have
+    /// never opened the new pack, so the loose staging copies are their
+    /// only path to the data. A later offline `mgit repack` (default:
+    /// off) demotes them.
+    pub keep_loose: bool,
 }
 
 impl Default for RepackConfig {
@@ -131,6 +138,7 @@ impl Default for RepackConfig {
             max_dead_ratio: None,
             framing: PackFraming::Raw,
             decode_mark: false,
+            keep_loose: false,
         }
     }
 }
@@ -626,10 +634,14 @@ pub fn repack(
         }
     }
     // Every live object is now packed (either newly written or retained
-    // in an old pack), so any loose copy is redundant staging.
-    for id in order.iter().chain(&dead_carry) {
-        if ps.loose().remove(id)? {
-            report.loose_demoted += 1;
+    // in an old pack), so any loose copy is redundant staging — unless
+    // the caller needs the loose copies kept for readers still on a
+    // pre-repack store snapshot (live serve repack).
+    if !cfg.keep_loose {
+        for id in order.iter().chain(&dead_carry) {
+            if ps.loose().remove(id)? {
+                report.loose_demoted += 1;
+            }
         }
     }
     if cfg.prune {

@@ -1,0 +1,447 @@
+//! Write-ahead log for the writable serving tier.
+//!
+//! A repository that accepts live commits (`mgit serve --writable`)
+//! records every mutation in an append-only log under `.mgit/wal/`
+//! *before* touching the store or the graph. The log is the sole
+//! durability mechanism for a write: once the commit record is
+//! fsync'd, a crash at any later point — including halfway through
+//! materializing loose objects or saving `graph.json` — recovers to
+//! exactly that commit, because [`Repo::open`](crate::ops::Repo::open)
+//! replays the log non-destructively on every open.
+//!
+//! ## On-disk format
+//!
+//! One file, `.mgit/wal/wal.log`:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic "MGWL"
+//! 4       4     format version, u32 LE (currently 1)
+//! 8       ...   records, back to back
+//! ```
+//!
+//! Each record:
+//!
+//! ```text
+//! offset  size  field
+//! +0      4     payload length N, u32 LE (1 ..= 1 GiB)
+//! +4      4     CRC32 (IEEE) of the N payload bytes, u32 LE
+//! +8      N     payload: [kind: u8] + body
+//! ```
+//!
+//! Payload kinds:
+//!
+//! * `1` — **Put**: 32-byte object id followed by the exact object
+//!   bytes. Carrying the bytes in the log (rather than trusting the
+//!   loose-file write) is what makes a commit's referenced objects
+//!   durable the moment the commit record is synced.
+//! * `2` — **Commit**: a UTF-8 JSON commit operation, applied to the
+//!   lineage graph by `LineageGraph::apply_commit`.
+//!
+//! ## Torn-tail policy
+//!
+//! A crash mid-append leaves a suffix that fails one of the checks
+//! (short header, implausible length, truncated payload, checksum
+//! mismatch, undecodable payload). [`scan`] stops at the **first**
+//! invalid byte and never resynchronizes past it: everything before is
+//! the durable prefix, everything after is the torn tail, reported via
+//! [`WalScan::torn`] (and surfaced as an `fsck` problem). A writer
+//! reopening the log ([`Wal::open_append`]) truncates the torn tail
+//! before appending — records are only ever appended after a clean
+//! scan, so valid data never follows garbage.
+//!
+//! The log is bounded by the writer's checkpoint cadence (the serving
+//! tier folds it into `graph.json` and truncates every few dozen
+//! commits), so [`scan`] reading the whole file into memory is fine.
+
+use std::fs::{self, File, OpenOptions};
+use std::io::{Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::obs::LazyCounter;
+use crate::util::json::{self, Json};
+
+use super::ObjectId;
+
+/// Records appended across the process lifetime (all WAL instances).
+pub static WAL_APPENDS: LazyCounter = LazyCounter::new("wal.appends");
+/// Records replayed into a store/graph across the process lifetime.
+pub static WAL_REPLAYS: LazyCounter = LazyCounter::new("wal.replays");
+
+pub const WAL_MAGIC: &[u8; 4] = b"MGWL";
+pub const WAL_VERSION: u32 = 1;
+/// Bytes before the first record.
+pub const WAL_HEADER_LEN: u64 = 8;
+/// Upper bound on a single record's payload (sanity check on scan).
+pub const MAX_RECORD_LEN: u32 = 1 << 30;
+
+const KIND_PUT: u8 = 1;
+const KIND_COMMIT: u8 = 2;
+
+/// `<root>/.mgit/wal`.
+pub fn wal_dir(root: &Path) -> PathBuf {
+    root.join(".mgit").join("wal")
+}
+
+/// `<root>/.mgit/wal/wal.log`.
+pub fn wal_path(root: &Path) -> PathBuf {
+    wal_dir(root).join("wal.log")
+}
+
+/// One durable mutation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WalRecord {
+    /// Object bytes, stored under a content id.
+    Put { id: ObjectId, bytes: Vec<u8> },
+    /// A lineage commit operation (see `LineageGraph::apply_commit`).
+    Commit { op: Json },
+}
+
+impl WalRecord {
+    /// The payload this record serializes to (kind byte + body).
+    fn payload(&self) -> Vec<u8> {
+        match self {
+            WalRecord::Put { id, bytes } => {
+                let mut out = Vec::with_capacity(1 + 32 + bytes.len());
+                out.push(KIND_PUT);
+                out.extend_from_slice(&id.0);
+                out.extend_from_slice(bytes);
+                out
+            }
+            WalRecord::Commit { op } => {
+                let mut out = vec![KIND_COMMIT];
+                out.extend_from_slice(op.to_string().as_bytes());
+                out
+            }
+        }
+    }
+
+    fn decode(payload: &[u8]) -> Result<WalRecord> {
+        match payload.first() {
+            Some(&KIND_PUT) => {
+                if payload.len() < 1 + 32 {
+                    bail!("put record shorter than an object id");
+                }
+                let mut id = [0u8; 32];
+                id.copy_from_slice(&payload[1..33]);
+                Ok(WalRecord::Put { id: ObjectId(id), bytes: payload[33..].to_vec() })
+            }
+            Some(&KIND_COMMIT) => {
+                let text = std::str::from_utf8(&payload[1..])
+                    .context("commit record is not UTF-8")?;
+                Ok(WalRecord::Commit { op: json::parse(text)? })
+            }
+            Some(k) => bail!("unknown record kind {k}"),
+            None => bail!("empty record payload"),
+        }
+    }
+}
+
+/// Where and why a scan stopped before the end of the file.
+#[derive(Debug, Clone)]
+pub struct TornTail {
+    /// File offset of the first invalid byte.
+    pub offset: u64,
+    pub reason: String,
+}
+
+/// Result of [`scan`]: the durable prefix plus any torn tail.
+#[derive(Debug, Default)]
+pub struct WalScan {
+    /// Every complete, checksummed record, in append order.
+    pub records: Vec<WalRecord>,
+    /// File length of the durable prefix (header included).
+    pub valid_len: u64,
+    /// Commit records within `records`.
+    pub commits: usize,
+    /// Present when the file has bytes past the durable prefix that do
+    /// not form a valid record.
+    pub torn: Option<TornTail>,
+}
+
+/// Read and validate the log at `path`. A missing file is an empty
+/// (clean) log. Never modifies the file.
+pub fn scan(path: &Path) -> Result<WalScan> {
+    let data = match fs::read(path) {
+        Ok(d) => d,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return Ok(WalScan { valid_len: WAL_HEADER_LEN, ..Default::default() })
+        }
+        Err(e) => return Err(e).context(format!("reading WAL {}", path.display())),
+    };
+    let mut out = WalScan::default();
+    if data.len() < WAL_HEADER_LEN as usize {
+        out.torn = Some(TornTail { offset: 0, reason: "short header".into() });
+        return Ok(out);
+    }
+    if &data[..4] != WAL_MAGIC {
+        out.torn = Some(TornTail { offset: 0, reason: "bad magic".into() });
+        return Ok(out);
+    }
+    let version = u32::from_le_bytes([data[4], data[5], data[6], data[7]]);
+    if version != WAL_VERSION {
+        out.torn =
+            Some(TornTail { offset: 4, reason: format!("unknown version {version}") });
+        return Ok(out);
+    }
+    let mut off = WAL_HEADER_LEN as usize;
+    let mut torn = |offset: usize, reason: String| -> Option<TornTail> {
+        Some(TornTail { offset: offset as u64, reason })
+    };
+    while off < data.len() {
+        if data.len() - off < 8 {
+            out.torn = torn(off, "partial record header".into());
+            break;
+        }
+        let len = u32::from_le_bytes([data[off], data[off + 1], data[off + 2], data[off + 3]]);
+        let want_crc =
+            u32::from_le_bytes([data[off + 4], data[off + 5], data[off + 6], data[off + 7]]);
+        if len == 0 || len > MAX_RECORD_LEN {
+            out.torn = torn(off, format!("implausible record length {len}"));
+            break;
+        }
+        let body = off + 8;
+        let end = body + len as usize;
+        if end > data.len() {
+            out.torn = torn(off, "record extends past end of file".into());
+            break;
+        }
+        let payload = &data[body..end];
+        if crc32(payload) != want_crc {
+            out.torn = torn(off, "checksum mismatch".into());
+            break;
+        }
+        match WalRecord::decode(payload) {
+            Ok(rec) => {
+                if matches!(rec, WalRecord::Commit { .. }) {
+                    out.commits += 1;
+                }
+                out.records.push(rec);
+            }
+            Err(e) => {
+                out.torn = torn(off, format!("undecodable payload: {e}"));
+                break;
+            }
+        }
+        off = end;
+    }
+    out.valid_len = if out.torn.as_ref().is_some_and(|t| t.offset < WAL_HEADER_LEN) {
+        // Header itself is damaged: nothing in the file is trustworthy.
+        WAL_HEADER_LEN
+    } else {
+        out.torn.as_ref().map(|t| t.offset).unwrap_or(data.len() as u64)
+    };
+    Ok(out)
+}
+
+/// Single-writer append handle. Creating one truncates any torn tail
+/// (the only mutation recovery ever performs on the log itself), so
+/// every append lands after a validated prefix.
+pub struct Wal {
+    path: PathBuf,
+    file: File,
+}
+
+impl Wal {
+    /// Open (creating if needed) the log for `root` and position at the
+    /// end of the durable prefix.
+    pub fn open_append(root: &Path) -> Result<Wal> {
+        let dir = wal_dir(root);
+        fs::create_dir_all(&dir)
+            .with_context(|| format!("creating WAL dir {}", dir.display()))?;
+        let path = wal_path(root);
+        let prior = scan(&path)?;
+        let mut file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(false)
+            .open(&path)
+            .with_context(|| format!("opening WAL {}", path.display()))?;
+        if file.metadata()?.len() < WAL_HEADER_LEN || prior.valid_len == WAL_HEADER_LEN {
+            // Fresh file, or a header-damaged one: (re)write the header.
+            file.set_len(0)?;
+            file.seek(SeekFrom::Start(0))?;
+            file.write_all(WAL_MAGIC)?;
+            file.write_all(&WAL_VERSION.to_le_bytes())?;
+            file.sync_data()?;
+        } else if prior.torn.is_some() {
+            file.set_len(prior.valid_len)?;
+            file.sync_data()?;
+        }
+        file.seek(SeekFrom::Start(prior.valid_len.max(WAL_HEADER_LEN)))?;
+        Ok(Wal { path, file })
+    }
+
+    /// Append one record. Not durable until [`Wal::sync`] returns.
+    pub fn append(&mut self, rec: &WalRecord) -> Result<()> {
+        let payload = rec.payload();
+        let mut frame = Vec::with_capacity(8 + payload.len());
+        frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&crc32(&payload).to_le_bytes());
+        frame.extend_from_slice(&payload);
+        self.file
+            .write_all(&frame)
+            .with_context(|| format!("appending to WAL {}", self.path.display()))?;
+        WAL_APPENDS.inc();
+        Ok(())
+    }
+
+    /// Make every appended record durable (fsync).
+    pub fn sync(&mut self) -> Result<()> {
+        self.file.sync_data().context("fsync WAL")
+    }
+
+    /// Drop every record (after the caller has checkpointed them into
+    /// durable state elsewhere, e.g. `graph.json`).
+    pub fn truncate(&mut self) -> Result<()> {
+        self.file.set_len(WAL_HEADER_LEN)?;
+        self.file.seek(SeekFrom::Start(WAL_HEADER_LEN))?;
+        self.file.sync_data()?;
+        Ok(())
+    }
+
+    /// Current file length (header + appended records).
+    pub fn len(&self) -> Result<u64> {
+        Ok(self.file.metadata()?.len())
+    }
+
+    pub fn is_empty(&self) -> Result<bool> {
+        Ok(self.len()? <= WAL_HEADER_LEN)
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CRC32 (IEEE 802.3), dependency-free
+// ---------------------------------------------------------------------------
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc32_table();
+
+/// CRC32 (IEEE) of `bytes`.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_known_vectors() {
+        // Standard test vector: CRC32("123456789") = 0xCBF43926.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    fn tmp_root(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("mgit-wal-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn append_scan_roundtrip() {
+        let root = tmp_root("roundtrip");
+        let recs = vec![
+            WalRecord::Put { id: ObjectId([7u8; 32]), bytes: vec![1, 2, 3, 4, 5] },
+            WalRecord::Commit {
+                op: Json::obj().set("name", "m/v1").set("model_type", "t"),
+            },
+            WalRecord::Put { id: ObjectId([9u8; 32]), bytes: vec![] },
+        ];
+        {
+            let mut wal = Wal::open_append(&root).unwrap();
+            for r in &recs {
+                wal.append(r).unwrap();
+            }
+            wal.sync().unwrap();
+        }
+        let scan = scan(&wal_path(&root)).unwrap();
+        assert!(scan.torn.is_none());
+        assert_eq!(scan.commits, 1);
+        assert_eq!(scan.records, recs);
+        fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn torn_tail_detected_and_truncated_on_reopen() {
+        let root = tmp_root("torn");
+        {
+            let mut wal = Wal::open_append(&root).unwrap();
+            wal.append(&WalRecord::Put { id: ObjectId([1u8; 32]), bytes: vec![42; 16] })
+                .unwrap();
+            wal.sync().unwrap();
+        }
+        let path = wal_path(&root);
+        let full = fs::read(&path).unwrap();
+        // Simulate a crash mid-append: half a record header dangling.
+        let mut cut = full.clone();
+        cut.extend_from_slice(&[0xAB, 0xCD, 0xEF]);
+        fs::write(&path, &cut).unwrap();
+        let s = scan(&path).unwrap();
+        assert_eq!(s.records.len(), 1);
+        let torn = s.torn.expect("dangling bytes must be reported torn");
+        assert_eq!(torn.offset, full.len() as u64);
+        // Reopening for append truncates the tail.
+        drop(Wal::open_append(&root).unwrap());
+        assert_eq!(fs::read(&path).unwrap(), full);
+        fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn bit_flip_stops_replay_at_first_bad_record() {
+        let root = tmp_root("flip");
+        {
+            let mut wal = Wal::open_append(&root).unwrap();
+            for i in 0..4u8 {
+                wal.append(&WalRecord::Put {
+                    id: ObjectId([i; 32]),
+                    bytes: vec![i; 8],
+                })
+                .unwrap();
+            }
+            wal.sync().unwrap();
+        }
+        let path = wal_path(&root);
+        let mut data = fs::read(&path).unwrap();
+        // Flip one payload bit in the third record.
+        let rec_len = 8 + 1 + 32 + 8;
+        let third_payload = WAL_HEADER_LEN as usize + 2 * rec_len + 8 + 5;
+        data[third_payload] ^= 0x10;
+        fs::write(&path, &data).unwrap();
+        let s = scan(&path).unwrap();
+        assert_eq!(s.records.len(), 2, "replay must stop before the flipped record");
+        let torn = s.torn.unwrap();
+        assert_eq!(torn.offset as usize, WAL_HEADER_LEN as usize + 2 * rec_len);
+        assert!(torn.reason.contains("checksum"));
+        fs::remove_dir_all(&root).unwrap();
+    }
+}

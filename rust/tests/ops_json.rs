@@ -246,6 +246,45 @@ fn report_failure_contracts() {
     assert_eq!(j.get("ok").unwrap().as_bool(), Some(false));
 }
 
+/// Golden shape of `ServeReport` with the write-tier fields: the JSON
+/// carries `writable`/`commits`/`snapshot_swaps`, is byte-stable, and
+/// the human rendering mentions the write tier only when it was on.
+#[test]
+fn serve_report_write_fields_golden() {
+    let ro = ops::serve::ServeReport {
+        requests: 7,
+        errors: 1,
+        pool: 2,
+        writable: false,
+        commits: 0,
+        snapshot_swaps: 0,
+    };
+    assert_eq!(
+        ro.to_json().to_string_compact(),
+        r#"{"requests":7,"errors":1,"pool":2,"writable":false,"commits":0,"snapshot_swaps":0}"#
+    );
+    let text = format!("{ro}");
+    assert!(text.contains("7 requests"), "got {text}");
+    assert!(!text.contains("writable"), "read-only report must not mention writes: {text}");
+
+    let rw = ops::serve::ServeReport {
+        requests: 120,
+        errors: 0,
+        pool: 8,
+        writable: true,
+        commits: 101,
+        snapshot_swaps: 102,
+    };
+    assert_eq!(
+        rw.to_json().to_string_compact(),
+        r#"{"requests":120,"errors":0,"pool":8,"writable":true,"commits":101,"snapshot_swaps":102}"#
+    );
+    assert_eq!(rw.to_json().to_string_compact(), rw.to_json().to_string_compact());
+    let text = format!("{rw}");
+    assert!(text.contains("writable: 101 commits, 102 snapshot swaps"), "got {text}");
+    assert!(rw.failure().is_none());
+}
+
 /// `--json` through the CLI surface: machine-readable output parses and
 /// the command still succeeds.
 #[test]

@@ -8,17 +8,28 @@
 //! traffic *exactly* (requests are recorded before their first response
 //! byte), in both JSON and Prometheus text renderings, and keep-alive
 //! connections must carry multiple requests.
+//!
+//! The write tier is exercised end-to-end as well: route-aware method
+//! dispatch (405/403/401/429 gating), `POST /object` + `POST /commit` +
+//! `POST /checkpoint` round trips, `Range:` reads, a live
+//! `POST /admin/repack`, and a ≥8-reader × ≥100-commit concurrent
+//! stress run that pins down snapshot-swap atomicity (no torn reads)
+//! and exact metrics settling.
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpStream};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 
 use mgit::checkpoint::{Checkpoint, ModelZoo};
 use mgit::delta::{self, CompressConfig, NativeKernel};
-use mgit::ops::serve::Server;
+use mgit::ops::serve::{Server, WriteConfig};
 use mgit::ops::{self, Repo};
+use mgit::store::{wal, Store};
 use mgit::tensor::f32_to_bytes;
+use mgit::util::json::{self, Json};
 use mgit::util::rng::Rng;
 
 const MANIFEST: &str = r#"{
@@ -84,11 +95,9 @@ fn build_chain(dir: &Path, zoo: &ModelZoo) {
     repo.save().unwrap();
 }
 
-/// Raw one-shot HTTP exchange: returns (status code, head text, body).
-fn http_request(addr: SocketAddr, request: &str) -> (u16, String, Vec<u8>) {
-    let mut s = TcpStream::connect(addr).unwrap();
-    s.write_all(request.as_bytes()).unwrap();
-    s.flush().unwrap();
+/// Read one `Connection: close` response off a stream: returns
+/// (status code, head text, body).
+fn read_response(mut s: TcpStream) -> (u16, String, Vec<u8>) {
     let mut buf = Vec::new();
     s.read_to_end(&mut buf).unwrap();
     let head_end =
@@ -102,6 +111,14 @@ fn http_request(addr: SocketAddr, request: &str) -> (u16, String, Vec<u8>) {
     (status, head, buf[head_end..].to_vec())
 }
 
+/// Raw one-shot HTTP exchange: returns (status code, head text, body).
+fn http_request(addr: SocketAddr, request: &str) -> (u16, String, Vec<u8>) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(request.as_bytes()).unwrap();
+    s.flush().unwrap();
+    read_response(s)
+}
+
 /// Minimal HTTP/1.1 GET: returns (status code, body bytes).
 fn http_get(addr: SocketAddr, path: &str) -> (u16, Vec<u8>) {
     let (status, _head, body) = http_request(
@@ -109,6 +126,46 @@ fn http_get(addr: SocketAddr, path: &str) -> (u16, Vec<u8>) {
         &format!("GET {path} HTTP/1.1\r\nHost: localhost\r\nConnection: close\r\n\r\n"),
     );
     (status, body)
+}
+
+/// One-shot GET carrying extra request headers (e.g. `Range:`).
+fn http_get_with(
+    addr: SocketAddr,
+    path: &str,
+    headers: &[(&str, &str)],
+) -> (u16, String, Vec<u8>) {
+    let mut req = format!("GET {path} HTTP/1.1\r\nHost: localhost\r\nConnection: close\r\n");
+    for (k, v) in headers {
+        req.push_str(&format!("{k}: {v}\r\n"));
+    }
+    req.push_str("\r\n");
+    http_request(addr, &req)
+}
+
+/// One-shot POST with a binary body: returns (status, head text, body).
+fn http_post(
+    addr: SocketAddr,
+    path: &str,
+    headers: &[(&str, &str)],
+    body: &[u8],
+) -> (u16, String, Vec<u8>) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    let mut head = format!(
+        "POST {path} HTTP/1.1\r\nHost: localhost\r\nConnection: close\r\nContent-Length: {}\r\n",
+        body.len()
+    );
+    for (k, v) in headers {
+        head.push_str(&format!("{k}: {v}\r\n"));
+    }
+    head.push_str("\r\n");
+    s.write_all(head.as_bytes()).unwrap();
+    s.write_all(body).unwrap();
+    s.flush().unwrap();
+    read_response(s)
+}
+
+fn parse_json(body: &[u8]) -> Json {
+    json::parse(std::str::from_utf8(body).unwrap()).unwrap()
 }
 
 /// A persistent (keep-alive) client connection: responses are framed by
@@ -337,9 +394,10 @@ fn serve_metrics_golden_shape() {
     let counters = server_reg.get("counters").unwrap();
     assert_eq!(counters.req_usize("requests_total").unwrap(), 4);
     assert_eq!(counters.req_usize("endpoint.healthz").unwrap(), 1);
-    assert_eq!(counters.req_usize("endpoint.log").unwrap(), 1);
-    // The 404'd unknown route and the 405'd DELETE both land in `other`.
-    assert_eq!(counters.req_usize("endpoint.other").unwrap(), 2);
+    // Route-aware dispatch: the 405'd DELETE still resolves to the /log
+    // endpoint label; only the 404'd unknown route lands in `other`.
+    assert_eq!(counters.req_usize("endpoint.log").unwrap(), 2);
+    assert_eq!(counters.req_usize("endpoint.other").unwrap(), 1);
     assert_eq!(counters.req_usize("status.200").unwrap(), 2);
     assert_eq!(counters.req_usize("status.404").unwrap(), 1);
     assert_eq!(counters.req_usize("status.405").unwrap(), 1);
@@ -419,5 +477,531 @@ fn serve_without_manifest_degrades() {
 
     handle.shutdown();
     srv.join().unwrap();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Write tier
+// ---------------------------------------------------------------------------
+
+/// Route-aware method dispatch on a read-only server: wrong methods get
+/// a 405 with the route's own `Allow:` set, POSTs to write routes get a
+/// 403 pointing at `--writable`, and unknown routes stay 404 regardless
+/// of method.
+#[test]
+fn serve_write_dispatch_read_only() {
+    let dir = tmp_repo("dispatch");
+    Repo::init(&dir).unwrap();
+    let server = Server::bind(Repo::open(&dir).unwrap(), None, 0, 2).unwrap();
+    let addr = server.local_addr().unwrap();
+    let handle = server.handle().unwrap();
+    let srv = std::thread::spawn(move || server.serve().unwrap());
+
+    // POST-only routes reject GET and say what they do accept.
+    let (code, head, body) = http_request(
+        addr,
+        "GET /commit HTTP/1.1\r\nHost: localhost\r\nConnection: close\r\n\r\n",
+    );
+    assert_eq!(code, 405);
+    assert!(head.contains("Allow: POST"), "got {head}");
+    assert!(parse_json(&body).req_str("error").unwrap().contains("POST"));
+    let (code, head, _) = http_request(
+        addr,
+        "GET /admin/repack HTTP/1.1\r\nHost: localhost\r\nConnection: close\r\n\r\n",
+    );
+    assert_eq!(code, 405);
+    assert!(head.contains("Allow: POST"), "got {head}");
+
+    // Dual-method routes advertise both verbs on a 405.
+    let (code, head, _) = http_request(
+        addr,
+        "DELETE /object/aa HTTP/1.1\r\nHost: localhost\r\nConnection: close\r\n\r\n",
+    );
+    assert_eq!(code, 405);
+    assert!(head.contains("Allow: GET, POST"), "got {head}");
+
+    // A well-formed POST to a write route on a read-only server: 403.
+    let (code, _, body) = http_post(addr, "/commit", &[], b"{}");
+    assert_eq!(code, 403);
+    assert!(parse_json(&body).req_str("error").unwrap().contains("read-only"));
+    let (code, _, _) = http_post(addr, "/admin/repack", &[], b"");
+    assert_eq!(code, 403);
+
+    // Unknown routes are 404 before any method/capability gating.
+    let (code, _, _) = http_post(addr, "/nope", &[], b"");
+    assert_eq!(code, 404);
+
+    handle.shutdown();
+    let report = srv.join().unwrap();
+    assert!(!report.writable);
+    assert_eq!(report.commits, 0);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Bearer-token auth plus the full `POST /object` → `POST /commit` →
+/// live `GET /checkpoint` lifecycle: unauthenticated writes get a 401
+/// challenge while reads stay open, staged objects commit into a node
+/// that is served bit-exact without a restart, and duplicate/invalid
+/// commits are rejected with typed errors.
+#[test]
+fn serve_write_auth_and_commit_lifecycle() {
+    let dir = tmp_repo("auth");
+    let zoo = ModelZoo::from_json(&json::parse(MANIFEST).unwrap()).unwrap();
+    Repo::init(&dir).unwrap();
+    let server = Server::bind_writable(
+        Repo::open(&dir).unwrap(),
+        Some(zoo.clone()),
+        0,
+        4,
+        WriteConfig { auth_token: Some("sekrit".to_string()), rate_per_sec: None },
+    )
+    .unwrap();
+    let addr = server.local_addr().unwrap();
+    let handle = server.handle().unwrap();
+    let srv = std::thread::spawn(move || server.serve().unwrap());
+    let auth = ("Authorization", "Bearer sekrit");
+    let op_a1 = br#"{"name":"a/1","model_type":"t"}"#;
+
+    // No token / wrong token: 401 with a challenge header and a JSON
+    // error body; reads need no auth.
+    let (code, head, body) = http_post(addr, "/commit", &[], op_a1);
+    assert_eq!(code, 401);
+    assert!(head.contains("WWW-Authenticate: Bearer"), "got {head}");
+    assert!(parse_json(&body).req_str("error").unwrap().contains("bearer"));
+    let (code, _, _) = http_post(addr, "/commit", &[("Authorization", "Bearer wrong")], op_a1);
+    assert_eq!(code, 401);
+    let (code, _) = http_get(addr, "/log");
+    assert_eq!(code, 200);
+
+    // Malformed bodies: 400, not 500.
+    let (code, _, _) = http_post(addr, "/commit", &[auth], b"not json");
+    assert_eq!(code, 400);
+    let (code, _, _) = http_post(addr, "/commit", &[auth], br#"{"model_type":"t"}"#);
+    assert_eq!(code, 400);
+
+    // A metadata-only commit lands and bumps the epoch.
+    let (code, _, body) = http_post(addr, "/commit", &[auth], op_a1);
+    assert_eq!(code, 200, "{}", String::from_utf8_lossy(&body));
+    let done = parse_json(&body);
+    assert_eq!(done.get("committed"), Some(&Json::Bool(true)));
+    assert_eq!(done.req_usize("epoch").unwrap(), 2);
+    assert_eq!(done.req_usize("nodes").unwrap(), 1);
+
+    // Same name again: 409.
+    let (code, _, body) = http_post(addr, "/commit", &[auth], op_a1);
+    assert_eq!(code, 409);
+    assert!(parse_json(&body).req_str("error").unwrap().contains("already exists"));
+
+    // Unknown provenance parent: 400.
+    let (code, _, _) = http_post(
+        addr,
+        "/commit",
+        &[auth],
+        br#"{"name":"a/2","model_type":"t","prov_parents":["ghost"]}"#,
+    );
+    assert_eq!(code, 400);
+
+    // A stored model whose objects were never uploaded: 409 telling the
+    // client to stage them first.
+    let fake = "ab".repeat(32);
+    let dangling = format!(
+        r#"{{"name":"a/2","model_type":"t","stored":{{"arch":"t","params":[{{"name":"w.a","id":"{fake}"}}]}}}}"#
+    );
+    let (code, _, body) = http_post(addr, "/commit", &[auth], dangling.as_bytes());
+    assert_eq!(code, 409);
+    assert!(parse_json(&body).req_str("error").unwrap().contains("POST /object"));
+
+    // Stage the real objects (idempotently), then commit the model.
+    let spec = zoo.arch("t").unwrap();
+    let ck = Checkpoint::init(spec, 7);
+    let mem = Store::in_memory();
+    let (sm, _) = delta::store_raw(&mem, spec, &ck).unwrap();
+    let mut seen = std::collections::HashSet::new();
+    for (_, id) in &sm.params {
+        if !seen.insert(*id) {
+            continue;
+        }
+        let bytes = mem.get(id).unwrap();
+        let (code, _, body) = http_post(addr, &format!("/object/{}", id.hex()), &[auth], &bytes);
+        assert_eq!(code, 200);
+        assert_eq!(parse_json(&body).get("new"), Some(&Json::Bool(true)));
+        let (code, _, body) = http_post(addr, &format!("/object/{}", id.hex()), &[auth], &bytes);
+        assert_eq!(code, 200);
+        assert_eq!(parse_json(&body).get("new"), Some(&Json::Bool(false)), "not idempotent");
+    }
+    let op = Json::obj()
+        .set("name", "a/2")
+        .set("model_type", "t")
+        .set("stored", sm.to_json())
+        .to_string_compact();
+    let (code, _, body) = http_post(addr, "/commit", &[auth], op.as_bytes());
+    assert_eq!(code, 200, "{}", String::from_utf8_lossy(&body));
+
+    // The committed node is live immediately — no restart — and its
+    // checkpoint streams bit-exact.
+    let (code, body) = http_get(addr, "/log");
+    assert_eq!(code, 200);
+    assert_eq!(parse_json(&body).req_arr("nodes").unwrap().len(), 2);
+    let (code, body) = http_get(addr, "/checkpoint/a%2F2");
+    assert_eq!(code, 200);
+    assert_eq!(body, f32_to_bytes(&ck.flat));
+
+    handle.shutdown();
+    let report = srv.join().unwrap();
+    assert!(report.writable);
+    assert_eq!(report.commits, 2);
+    assert_eq!(report.snapshot_swaps, 2);
+    assert_eq!(report.errors, 0);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// The write-rate token bucket: rapid-fire commits trip a 429, and a
+/// 429'd request never reaches the writer (no node is created for it).
+#[test]
+fn serve_write_rate_limit() {
+    let dir = tmp_repo("rate");
+    Repo::init(&dir).unwrap();
+    let server = Server::bind_writable(
+        Repo::open(&dir).unwrap(),
+        None,
+        0,
+        2,
+        WriteConfig { auth_token: None, rate_per_sec: Some(1) },
+    )
+    .unwrap();
+    let addr = server.local_addr().unwrap();
+    let handle = server.handle().unwrap();
+    let srv = std::thread::spawn(move || server.serve().unwrap());
+
+    let mut ok = 0usize;
+    let mut limited = 0usize;
+    for i in 0..4 {
+        let op = format!(r#"{{"name":"r/{i}","model_type":"t"}}"#);
+        let (code, _, body) = http_post(addr, "/commit", &[], op.as_bytes());
+        match code {
+            200 => ok += 1,
+            429 => {
+                assert!(parse_json(&body).req_str("error").unwrap().contains("rate"));
+                limited += 1;
+            }
+            c => panic!("unexpected status {c}"),
+        }
+    }
+    // The bucket holds a 1-token burst: at least the first succeeds, and
+    // four back-to-back posts cannot all refill in time.
+    assert!(ok >= 1, "no commit made it through");
+    assert!(limited >= 1, "rate limit never tripped");
+    assert_eq!(ok + limited, 4);
+
+    let (code, body) = http_get(addr, "/log");
+    assert_eq!(code, 200);
+    assert_eq!(parse_json(&body).req_arr("nodes").unwrap().len(), ok);
+
+    handle.shutdown();
+    let report = srv.join().unwrap();
+    assert_eq!(report.commits, ok as u64);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// `POST /checkpoint` raw and delta forms, then `Range:` reads over the
+/// result: 206 windows are byte-exact slices with `Content-Range`,
+/// unsatisfiable ranges answer 416, and malformed/multi ranges fall back
+/// to a full 200.
+#[test]
+fn serve_checkpoint_post_delta_and_range() {
+    let dir = tmp_repo("ckrange");
+    let zoo = ModelZoo::from_json(&json::parse(MANIFEST).unwrap()).unwrap();
+    Repo::init(&dir).unwrap();
+    let server = Server::bind_writable(
+        Repo::open(&dir).unwrap(),
+        Some(zoo.clone()),
+        0,
+        2,
+        WriteConfig { auth_token: None, rate_per_sec: None },
+    )
+    .unwrap();
+    let addr = server.local_addr().unwrap();
+    let handle = server.handle().unwrap();
+    let srv = std::thread::spawn(move || server.serve().unwrap());
+
+    let spec = zoo.arch("t").unwrap();
+    let v1 = Checkpoint::init(spec, 11);
+    let v1_bytes = f32_to_bytes(&v1.flat);
+    let total = v1_bytes.len(); // 4096 params × 4 bytes
+
+    // Parameter validation.
+    let (code, _, _) = http_post(addr, "/checkpoint/d%2Fv1", &[], &v1_bytes);
+    assert_eq!(code, 400); // arch is required
+    let (code, _, body) = http_post(addr, "/checkpoint/d%2Fv1?arch=zzz", &[], &v1_bytes);
+    assert_eq!(code, 400);
+    assert!(parse_json(&body).req_str("error").unwrap().contains("zzz"));
+    let (code, _, body) = http_post(addr, "/checkpoint/d%2Fv1?arch=t", &[], &v1_bytes[..8]);
+    assert_eq!(code, 400);
+    assert!(parse_json(&body).req_str("error").unwrap().contains("16384"));
+
+    // Raw upload commits and reads back bit-exact.
+    let (code, _, body) = http_post(addr, "/checkpoint/d%2Fv1?arch=t", &[], &v1_bytes);
+    assert_eq!(code, 200, "{}", String::from_utf8_lossy(&body));
+    let resp = parse_json(&body);
+    assert_eq!(resp.req_str("node").unwrap(), "d/v1");
+    assert_eq!(resp.req_usize("delta_params").unwrap(), 0);
+    assert_eq!(resp.req_usize("epoch").unwrap(), 2);
+    assert!(resp.req_usize("new_objects").unwrap() >= 1);
+    let (code, head, body) = http_get_with(addr, "/checkpoint/d%2Fv1", &[]);
+    assert_eq!(code, 200);
+    assert!(head.contains("Accept-Ranges: bytes"), "got {head}");
+    assert_eq!(body, v1_bytes);
+
+    // Delta upload against it; unknown prev is a 400.
+    let mut rng = Rng::new(99);
+    let v2 = Checkpoint {
+        arch: v1.arch.clone(),
+        flat: v1.flat.iter().map(|&x| x + rng.normal_f32(0.0, 3e-4)).collect(),
+    };
+    let v2_bytes = f32_to_bytes(&v2.flat);
+    let (code, _, _) = http_post(addr, "/checkpoint/d%2Fv3?arch=t&prev=ghost", &[], &v2_bytes);
+    assert_eq!(code, 400);
+    let (code, _, body) =
+        http_post(addr, "/checkpoint/d%2Fv2?arch=t&prev=d%2Fv1", &[], &v2_bytes);
+    assert_eq!(code, 200, "{}", String::from_utf8_lossy(&body));
+    assert!(parse_json(&body).req_usize("delta_params").unwrap() > 0);
+    // Delta encoding quantizes (lossy), so don't demand bit-equality
+    // with the posted body — demand a stable server-side reconstruction
+    // of the right size.
+    let (code, b1) = http_get(addr, "/checkpoint/d%2Fv2");
+    assert_eq!(code, 200);
+    assert_eq!(b1.len(), total);
+    let (_, b2) = http_get(addr, "/checkpoint/d%2Fv2");
+    assert_eq!(b1, b2);
+
+    // Range reads over d/v1.
+    let (code, head, body) = http_get_with(addr, "/checkpoint/d%2Fv1", &[("Range", "bytes=0-15")]);
+    assert_eq!(code, 206);
+    assert!(head.contains(&format!("Content-Range: bytes 0-15/{total}")), "got {head}");
+    assert_eq!(body, &v1_bytes[..16]);
+    let (code, head, body) =
+        http_get_with(addr, "/checkpoint/d%2Fv1", &[("Range", "bytes=16376-")]);
+    assert_eq!(code, 206);
+    assert!(head.contains(&format!("Content-Range: bytes 16376-16383/{total}")), "got {head}");
+    assert_eq!(body, &v1_bytes[16376..]);
+    let (code, _, body) = http_get_with(addr, "/checkpoint/d%2Fv1", &[("Range", "bytes=-8")]);
+    assert_eq!(code, 206);
+    assert_eq!(body, &v1_bytes[total - 8..]);
+    // Unaligned to the f32 grid still slices exact bytes.
+    let (code, _, body) = http_get_with(addr, "/checkpoint/d%2Fv1", &[("Range", "bytes=3-9")]);
+    assert_eq!(code, 206);
+    assert_eq!(body, &v1_bytes[3..10]);
+    // Past the end: 416 with the total advertised.
+    let (code, head, _) =
+        http_get_with(addr, "/checkpoint/d%2Fv1", &[("Range", "bytes=999999-1000000")]);
+    assert_eq!(code, 416);
+    assert!(head.contains(&format!("Content-Range: bytes */{total}")), "got {head}");
+    // Malformed and multi-range specs fall back to a full 200.
+    let (code, _, body) = http_get_with(addr, "/checkpoint/d%2Fv1", &[("Range", "bytes=9-2")]);
+    assert_eq!(code, 200);
+    assert_eq!(body, v1_bytes);
+    let (code, _, body) =
+        http_get_with(addr, "/checkpoint/d%2Fv1", &[("Range", "bytes=0-1,4-5")]);
+    assert_eq!(code, 200);
+    assert_eq!(body.len(), total);
+
+    handle.shutdown();
+    let report = srv.join().unwrap();
+    assert_eq!(report.commits, 2);
+    assert_eq!(report.errors, 0);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// The headline concurrency run: 8 keep-alive readers hammer `/log`,
+/// `/show`, `/checkpoint`, and `/metrics` while a writer commits 101
+/// nodes (51 raw checkpoints + 50 metadata commits, crossing the WAL
+/// auto-checkpoint threshold). Readers must never observe a torn graph:
+/// `/log` never shrinks, every listed node is servable, and a pinned
+/// checkpoint stays bit-exact throughout. Afterwards a live
+/// `POST /admin/repack` swaps in a repacked store with the same bytes,
+/// metrics settle exactly, a clean shutdown leaves an empty WAL, and a
+/// cold reopen agrees with everything the server served.
+#[test]
+fn serve_writable_concurrent_stress() {
+    const RAW: usize = 51; // raw checkpoint uploads w/v1..w/v51
+    const COMMITS: usize = 2 * RAW - 1; // + meta/1..meta/50
+    let dir = tmp_repo("stress");
+    let zoo = ModelZoo::from_json(&json::parse(MANIFEST).unwrap()).unwrap();
+    Repo::init(&dir).unwrap();
+    let spec = zoo.arch("t").unwrap();
+    let server = Server::bind_writable(
+        Repo::open(&dir).unwrap(),
+        Some(zoo.clone()),
+        0,
+        CLIENTS + 2,
+        WriteConfig { auth_token: None, rate_per_sec: None },
+    )
+    .unwrap();
+    let addr = server.local_addr().unwrap();
+    let handle = server.handle().unwrap();
+    let srv = std::thread::spawn(move || server.serve().unwrap());
+
+    // Deterministic oracle for every raw checkpoint this test uploads.
+    let mut oracle: HashMap<String, Vec<u8>> = HashMap::new();
+    for i in 1..=RAW {
+        let ck = Checkpoint::init(spec, 1000 + i as u64);
+        oracle.insert(format!("w/v{i}"), f32_to_bytes(&ck.flat));
+    }
+
+    // Land w/v1 before the readers start so the checkpoint they pin
+    // always exists.
+    let (code, _, body) = http_post(addr, "/checkpoint/w%2Fv1?arch=t", &[], &oracle["w/v1"]);
+    assert_eq!(code, 200, "{}", String::from_utf8_lossy(&body));
+    let mut last_epoch = parse_json(&body).req_usize("epoch").unwrap();
+    assert_eq!(last_epoch, 2);
+
+    let done = Arc::new(AtomicBool::new(false));
+    let mut readers = Vec::new();
+    for r in 0..CLIENTS {
+        let done = Arc::clone(&done);
+        let v1 = oracle["w/v1"].clone();
+        readers.push(std::thread::spawn(move || {
+            let mut seen = 1usize;
+            let mut iters = 0usize;
+            while !done.load(Ordering::SeqCst) {
+                // Fresh connection per block keeps each well under the
+                // server's per-connection request cap.
+                let mut conn = KeepAliveConn::connect(addr);
+                for _ in 0..50 {
+                    let (code, body) = conn.get("/log");
+                    assert_eq!(code, 200, "reader {r}");
+                    let log = parse_json(&body);
+                    let nodes = log.req_arr("nodes").unwrap();
+                    // Torn-read check #1: snapshots only move forward.
+                    assert!(
+                        nodes.len() >= seen,
+                        "reader {r}: /log went backwards ({} < {seen})",
+                        nodes.len()
+                    );
+                    seen = nodes.len();
+                    // Torn-read check #2: anything a snapshot lists is
+                    // fully servable from the same server.
+                    let last = nodes.last().unwrap().req_str("name").unwrap();
+                    let (code, _) = conn.get(&format!("/show/{}", last.replace('/', "%2F")));
+                    assert_eq!(code, 200, "reader {r}: listed `{last}` not showable");
+                    // Torn-read check #3: a pinned checkpoint never
+                    // changes underneath a reader.
+                    let (code, body) = conn.get("/checkpoint/w%2Fv1");
+                    assert_eq!(code, 200, "reader {r}");
+                    assert_eq!(body, v1, "reader {r}: torn checkpoint bytes");
+                    let (code, _) = conn.get("/metrics");
+                    assert_eq!(code, 200, "reader {r}");
+                    iters += 1;
+                    if done.load(Ordering::SeqCst) {
+                        break;
+                    }
+                }
+            }
+            assert!(iters > 0, "reader {r} never completed an iteration");
+        }));
+    }
+
+    // The writer: alternate raw checkpoint uploads and metadata-only
+    // commits; every response's epoch is exactly the previous plus one
+    // (single writer, no lost swaps).
+    for i in 2..=RAW {
+        let name = format!("w/v{i}");
+        let (code, _, body) = http_post(
+            addr,
+            &format!("/checkpoint/{}?arch=t", name.replace('/', "%2F")),
+            &[],
+            &oracle[&name],
+        );
+        assert_eq!(code, 200, "{name}: {}", String::from_utf8_lossy(&body));
+        let epoch = parse_json(&body).req_usize("epoch").unwrap();
+        assert_eq!(epoch, last_epoch + 1, "{name}");
+        last_epoch = epoch;
+        let op = format!(r#"{{"name":"meta/{}","model_type":"t","prov_parents":["w/v1"]}}"#, i - 1);
+        let (code, _, body) = http_post(addr, "/commit", &[], op.as_bytes());
+        assert_eq!(code, 200, "meta/{}: {}", i - 1, String::from_utf8_lossy(&body));
+        let epoch = parse_json(&body).req_usize("epoch").unwrap();
+        assert_eq!(epoch, last_epoch + 1);
+        last_epoch = epoch;
+    }
+    assert_eq!(last_epoch, COMMITS + 1);
+    done.store(true, Ordering::SeqCst);
+    for t in readers {
+        t.join().unwrap();
+    }
+
+    // Final /log shows every commit.
+    let (code, body) = http_get(addr, "/log");
+    assert_eq!(code, 200);
+    let log = parse_json(&body);
+    let nodes = log.req_arr("nodes").unwrap();
+    assert_eq!(nodes.len(), COMMITS);
+    let names: std::collections::HashSet<String> =
+        nodes.iter().map(|n| n.req_str("name").unwrap().to_string()).collect();
+    for i in 1..=RAW {
+        assert!(names.contains(&format!("w/v{i}")), "missing w/v{i}");
+    }
+    for i in 1..RAW {
+        assert!(names.contains(&format!("meta/{i}")), "missing meta/{i}");
+    }
+
+    // Every raw checkpoint is bit-exact after the dust settles.
+    for (name, want) in &oracle {
+        let (code, body) = http_get(addr, &format!("/checkpoint/{}", name.replace('/', "%2F")));
+        assert_eq!(code, 200, "{name}");
+        assert_eq!(&body, want, "{name} not bit-exact");
+    }
+
+    // Metrics settle exactly once traffic stops.
+    let (_, body) = http_get(addr, "/metrics");
+    let m1 = parse_json(&body);
+    let server_reg = m1.get("server").unwrap();
+    let c1 = server_reg.get("counters").unwrap();
+    assert_eq!(c1.req_usize("snapshot.swaps").unwrap(), COMMITS);
+    assert_eq!(c1.req_usize("endpoint.commit").unwrap(), RAW - 1);
+    assert_eq!(c1.req_usize("endpoint.admin").unwrap(), 0);
+    assert_eq!(c1.req_usize("status.200").unwrap(), c1.req_usize("requests_total").unwrap());
+    let wh = server_reg.get("histograms").unwrap().get("write_micros").unwrap();
+    assert_eq!(wh.req_usize("count").unwrap(), COMMITS, "one write-latency sample per commit");
+    // The next scrape counts the previous one: +1 exactly.
+    let (_, body) = http_get(addr, "/metrics");
+    let c2 = parse_json(&body);
+    let c2 = c2.get("server").unwrap().get("counters").unwrap();
+    assert_eq!(
+        c2.req_usize("requests_total").unwrap(),
+        c1.req_usize("requests_total").unwrap() + 1
+    );
+
+    // Live repack: the loose objects the write tier spilled migrate into
+    // a pack, a new snapshot is published over the repacked store, and
+    // every checkpoint still reads back bit-exact.
+    let (code, _, body) = http_post(addr, "/admin/repack", &[], b"");
+    assert_eq!(code, 200, "{}", String::from_utf8_lossy(&body));
+    let rep = parse_json(&body);
+    assert!(rep.req_usize("packs_after").unwrap() >= 1);
+    assert_eq!(rep.req_usize("epoch").unwrap(), COMMITS + 2);
+    for (name, want) in &oracle {
+        let (code, body) = http_get(addr, &format!("/checkpoint/{}", name.replace('/', "%2F")));
+        assert_eq!(code, 200, "{name} after repack");
+        assert_eq!(&body, want, "{name} not bit-exact after repack");
+    }
+
+    handle.shutdown();
+    let report = srv.join().unwrap();
+    assert!(report.writable);
+    assert_eq!(report.commits, COMMITS as u64);
+    assert_eq!(report.snapshot_swaps, COMMITS as u64 + 1); // + the repack swap
+    assert_eq!(report.errors, 0);
+
+    // Clean shutdown folded the WAL into graph.json: only the file
+    // header remains.
+    let wal_len = std::fs::metadata(wal::wal_path(&dir)).unwrap().len();
+    assert_eq!(wal_len, wal::WAL_HEADER_LEN);
+
+    // A cold reopen agrees with everything the server served.
+    let repo = Repo::open(&dir).unwrap();
+    assert_eq!(repo.graph.len(), COMMITS);
+    let n = repo.graph.by_name("w/v51").unwrap();
+    let ck = delta::load(&repo.store, &zoo, n.stored.as_ref().unwrap(), &NativeKernel).unwrap();
+    assert_eq!(f32_to_bytes(&ck.flat), oracle["w/v51"]);
     std::fs::remove_dir_all(&dir).unwrap();
 }

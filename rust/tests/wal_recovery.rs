@@ -1,0 +1,324 @@
+//! Deterministic crash-injection suite for the write-ahead log.
+//!
+//! Builds a 50-commit WAL (each commit = one staged object + one commit
+//! record, exactly what the writable serving tier appends), then
+//! simulates a crash at *every* interesting byte position:
+//!
+//! * truncation at every record boundary (a crash between appends),
+//! * truncation inside every record's header and payload (a crash
+//!   mid-append),
+//! * a bit flip inside the length, checksum, and payload of sampled
+//!   records (storage corruption).
+//!
+//! After each injected crash the repository is reopened cold and must
+//! recover to **exactly the last durable commit**: the `/log`-equivalent
+//! JSON is byte-identical to a never-crashed oracle holding the same
+//! prefix of commits, and every recovered node's checkpoint reads back
+//! bit-exact. Damage past a record boundary must additionally be
+//! diagnosed: `scan` reports the torn tail, `fsck` emits a `TORN_WAL`
+//! problem whose `failure()` maps to a nonzero process exit, and
+//! reopening the log for append truncates the tail so new records only
+//! ever land after a validated prefix.
+
+use std::collections::HashSet;
+use std::fs;
+use std::path::PathBuf;
+
+use mgit::checkpoint::{Checkpoint, ModelZoo};
+use mgit::delta::{self, NativeKernel};
+use mgit::lineage::LineageGraph;
+use mgit::ops::{self, Repo, Report};
+use mgit::store::wal::{self, Wal, WalRecord, WAL_HEADER_LEN};
+use mgit::store::Store;
+use mgit::tensor::f32_to_bytes;
+use mgit::util::json::{self, Json};
+
+const MANIFEST: &str = r#"{
+  "vocab": 16, "max_seq": 4, "n_classes": 2, "batch": 2,
+  "delta_chunk": 1024,
+  "special_tokens": {"cls": 14, "mask": 15, "ignore_label": -100},
+  "archs": {"t": {
+      "d_model": 4, "n_layers": 1, "n_heads": 1, "d_ff": 8,
+      "param_count": 1024,
+      "layout": [
+        {"name":"w.a","shape":[1024],"offset":0,"size":1024,"init":"normal"}
+      ],
+      "dag": {"nodes": [], "edges": []}
+  }},
+  "artifacts": {"t": {}},
+  "delta_kernels": {"quant": "q", "dequant": "d"}
+}"#;
+
+const COMMITS: usize = 50;
+
+/// Unique per call: the `#[test]`s here run in parallel threads of one
+/// process, so a pid-only suffix would collide.
+fn tmp_dir(tag: &str) -> PathBuf {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    static SEQ: AtomicUsize = AtomicUsize::new(0);
+    let dir = std::env::temp_dir().join(format!(
+        "mgit-walrec-{tag}-{}-{}",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    let _ = fs::remove_dir_all(&dir);
+    fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// The canonical rendering of a graph, as `/log` and `mgit log --json`
+/// serve it. Byte-compare these strings for "bit-exact log".
+fn log_json(graph: &LineageGraph) -> String {
+    ops::LogRequest.run_graph(graph).unwrap().to_json().to_string_compact()
+}
+
+/// The template WAL plus everything needed to judge a recovery.
+struct Fixture {
+    zoo: ModelZoo,
+    /// Full, never-crashed WAL bytes (header included).
+    full: Vec<u8>,
+    /// Byte offset where each record starts, in append order.
+    rec_starts: Vec<u64>,
+    /// Commits fully contained *before* each record (same indexing),
+    /// plus one trailing entry for "all records".
+    commits_before: Vec<usize>,
+    /// `log_json` of the oracle graph after d commits, for d in 0..=50.
+    oracle_logs: Vec<String>,
+    /// Bit-exact flat checkpoint bytes of commit k (index k-1).
+    ck_bytes: Vec<Vec<u8>>,
+}
+
+fn build_fixture() -> Fixture {
+    let zoo = ModelZoo::from_json(&json::parse(MANIFEST).unwrap()).unwrap();
+    let spec = zoo.arch("t").unwrap();
+    let template = tmp_dir("template");
+    Repo::init(&template).unwrap();
+    let mut wal = Wal::open_append(&template).unwrap();
+
+    let mut rec_starts = Vec::new();
+    let mut commits_before = Vec::new();
+    let mut oracle_logs = Vec::with_capacity(COMMITS + 1);
+    let mut ck_bytes = Vec::with_capacity(COMMITS);
+    let mut oracle = LineageGraph::new();
+    oracle_logs.push(log_json(&oracle));
+    let mut seen_ids = HashSet::new();
+    let mut commits = 0usize;
+    for k in 1..=COMMITS {
+        let ck = Checkpoint::init(spec, 7000 + k as u64);
+        // Encode exactly as the serving tier does: into a scratch store,
+        // then ship the objects as Put records ahead of the commit.
+        let mem = Store::in_memory();
+        let (sm, _) = delta::store_raw(&mem, spec, &ck).unwrap();
+        for (_, id) in &sm.params {
+            if seen_ids.insert(*id) {
+                rec_starts.push(wal.len().unwrap());
+                commits_before.push(commits);
+                wal.append(&WalRecord::Put { id: *id, bytes: mem.get(id).unwrap() })
+                    .unwrap();
+            }
+        }
+        let mut op = Json::obj()
+            .set("name", format!("c/{k}"))
+            .set("model_type", "t")
+            .set("stored", sm.to_json());
+        if k > 1 {
+            op = op.set("ver_parent", format!("c/{}", k - 1));
+        }
+        rec_starts.push(wal.len().unwrap());
+        commits_before.push(commits);
+        wal.append(&WalRecord::Commit { op: op.clone() }).unwrap();
+        commits += 1;
+        assert!(oracle.apply_commit(&op).unwrap());
+        oracle_logs.push(log_json(&oracle));
+        ck_bytes.push(f32_to_bytes(&ck.flat));
+    }
+    wal.sync().unwrap();
+    commits_before.push(commits);
+    let full = fs::read(wal::wal_path(&template)).unwrap();
+    fs::remove_dir_all(&template).unwrap();
+    Fixture { zoo, full, rec_starts, commits_before, oracle_logs, ck_bytes }
+}
+
+/// Durable commits in a prefix of the template log that ends at byte
+/// `len` (or whose first damaged record starts at `len`).
+fn durable_commits(fx: &Fixture, len: u64) -> usize {
+    for (i, start) in fx.rec_starts.iter().enumerate() {
+        if *start >= len {
+            return fx.commits_before[i];
+        }
+    }
+    *fx.commits_before.last().unwrap()
+}
+
+/// Plant `wal_bytes` in a fresh repository, reopen cold, and assert
+/// recovery to exactly `expect_commits` durable commits — bit-exact log
+/// JSON and checkpoint bytes against the oracle — plus the torn-tail
+/// diagnosis when `expect_torn`.
+fn assert_recovers(fx: &Fixture, wal_bytes: &[u8], expect_commits: usize, expect_torn: bool) {
+    let dir = tmp_dir("case");
+    Repo::init(&dir).unwrap();
+    fs::create_dir_all(wal::wal_dir(&dir)).unwrap();
+    let path = wal::wal_path(&dir);
+    fs::write(&path, wal_bytes).unwrap();
+
+    // The scan itself agrees on durability and damage.
+    let scan = wal::scan(&path).unwrap();
+    assert_eq!(scan.commits, expect_commits, "scan commits at len {}", wal_bytes.len());
+    assert_eq!(
+        scan.torn.is_some(),
+        expect_torn,
+        "torn detection at len {}",
+        wal_bytes.len()
+    );
+
+    // Cold reopen replays the durable prefix; the graph must equal the
+    // never-crashed oracle with the same number of commits, byte for
+    // byte in its canonical JSON rendering.
+    let repo = Repo::open(&dir).unwrap();
+    assert_eq!(
+        log_json(&repo.graph),
+        fx.oracle_logs[expect_commits],
+        "log mismatch at len {} ({expect_commits} commits)",
+        wal_bytes.len()
+    );
+    // Every recovered checkpoint reads back bit-exact.
+    for k in 1..=expect_commits {
+        let n = repo.graph.by_name(&format!("c/{k}")).unwrap();
+        let ck =
+            delta::load(&repo.store, &fx.zoo, n.stored.as_ref().unwrap(), &NativeKernel)
+                .unwrap();
+        assert_eq!(
+            f32_to_bytes(&ck.flat),
+            fx.ck_bytes[k - 1],
+            "checkpoint c/{k} at len {}",
+            wal_bytes.len()
+        );
+    }
+
+    // fsck: clean prefixes pass; damage is a TORN_WAL problem that maps
+    // to a nonzero exit via `failure()`.
+    let fsck = ops::FsckRequest.run(&repo).unwrap();
+    if expect_torn {
+        assert!(
+            fsck.problems.iter().any(|p| p.kind == "TORN_WAL"),
+            "fsck must flag the torn tail at len {}",
+            wal_bytes.len()
+        );
+        assert!(fsck.failure().is_some(), "torn WAL must fail fsck");
+    } else {
+        assert!(
+            fsck.failure().is_none(),
+            "clean recovery must pass fsck at len {}: {:?}",
+            wal_bytes.len(),
+            fsck.problems.iter().map(|p| format!("{}: {}", p.kind, p.detail)).collect::<Vec<_>>()
+        );
+    }
+
+    // A writer reopening the log truncates the tail back to the durable
+    // prefix — appends only ever land after validated bytes.
+    let expect_len = wal::scan(&path).unwrap().valid_len;
+    drop(Wal::open_append(&dir).unwrap());
+    assert_eq!(fs::metadata(&path).unwrap().len(), expect_len);
+    let rescan = wal::scan(&path).unwrap();
+    assert!(rescan.torn.is_none(), "open_append must leave a clean log");
+    assert_eq!(rescan.commits, expect_commits);
+
+    fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Crash at every record boundary: the file ends exactly between
+/// records, so recovery is clean (no torn tail) and lands on the last
+/// commit whose record made it in.
+#[test]
+fn truncation_at_every_record_boundary() {
+    let fx = build_fixture();
+    // Boundaries: after the header, after every record, and the full
+    // file (never crashed).
+    let mut boundaries: Vec<u64> = vec![WAL_HEADER_LEN];
+    boundaries.extend(fx.rec_starts.iter().skip(1).copied());
+    boundaries.push(fx.full.len() as u64);
+    assert_eq!(boundaries.len(), fx.rec_starts.len() + 1);
+    for &b in &boundaries {
+        let d = durable_commits(&fx, b);
+        assert_recovers(&fx, &fx.full[..b as usize], d, false);
+    }
+    // Sanity: the suite really covered the whole range.
+    assert_eq!(durable_commits(&fx, WAL_HEADER_LEN), 0);
+    assert_eq!(durable_commits(&fx, fx.full.len() as u64), COMMITS);
+}
+
+/// Crash inside every record: cut one byte into the frame header and
+/// halfway through the payload. Both leave a torn tail; recovery stops
+/// at the record's start.
+#[test]
+fn truncation_inside_every_record() {
+    let fx = build_fixture();
+    let n = fx.rec_starts.len();
+    for i in 0..n {
+        let start = fx.rec_starts[i] as usize;
+        let end = if i + 1 < n { fx.rec_starts[i + 1] as usize } else { fx.full.len() };
+        let d = fx.commits_before[i];
+        // One byte into the 8-byte frame header: partial header.
+        assert_recovers(&fx, &fx.full[..start + 1], d, true);
+        // Mid-payload: the length field promises more bytes than exist.
+        let mid = start + 8 + (end - start - 8) / 2;
+        assert_recovers(&fx, &fx.full[..mid], d, true);
+    }
+}
+
+/// Storage corruption: flip one bit in the length, checksum, and payload
+/// of sampled records. The scan must stop at the damaged record — never
+/// resynchronizing past it, even though later records are intact — and
+/// recover everything before it.
+#[test]
+fn bit_flip_inside_records() {
+    let fx = build_fixture();
+    let n = fx.rec_starts.len();
+    for i in (0..n).step_by(7).chain([n - 1]) {
+        let start = fx.rec_starts[i] as usize;
+        let end = if i + 1 < n { fx.rec_starts[i + 1] as usize } else { fx.full.len() };
+        let d = fx.commits_before[i];
+        // Length, checksum, and payload byte positions within the frame.
+        for delta_off in [0usize, 4, 8 + (end - start - 8) / 3] {
+            let mut data = fx.full.clone();
+            data[start + delta_off] ^= 0x40;
+            assert_recovers(&fx, &data, d, true);
+        }
+    }
+}
+
+/// After a torn-tail recovery the log keeps working: reopening for
+/// append truncates the damage, new commits land after the validated
+/// prefix, and the next cold open sees old + new.
+#[test]
+fn append_after_torn_tail_recovery() {
+    let fx = build_fixture();
+    // Cut mid-way through the final commit record: 49 durable commits.
+    let last_start = *fx.rec_starts.last().unwrap() as usize;
+    let cut = last_start + 8 + (fx.full.len() - last_start - 8) / 2;
+
+    let dir = tmp_dir("resume");
+    Repo::init(&dir).unwrap();
+    fs::create_dir_all(wal::wal_dir(&dir)).unwrap();
+    fs::write(wal::wal_path(&dir), &fx.full[..cut]).unwrap();
+
+    let mut wal = Wal::open_append(&dir).unwrap();
+    assert_eq!(wal.len().unwrap(), last_start as u64, "tail must be truncated");
+    wal.append(&WalRecord::Commit {
+        op: Json::obj()
+            .set("name", "resumed/1")
+            .set("model_type", "t")
+            .set("prov_parents", Json::Arr(vec![Json::from("c/1")])),
+    })
+    .unwrap();
+    wal.sync().unwrap();
+    drop(wal);
+
+    let repo = Repo::open(&dir).unwrap();
+    assert_eq!(repo.graph.len(), COMMITS); // 49 recovered + 1 resumed
+    assert!(repo.graph.by_name("resumed/1").is_ok());
+    assert!(repo.graph.by_name(&format!("c/{COMMITS}")).is_err(), "torn commit must be gone");
+    let fsck = ops::FsckRequest.run(&repo).unwrap();
+    assert!(fsck.failure().is_none(), "resumed log must be clean");
+    fs::remove_dir_all(&dir).unwrap();
+}
