@@ -1,0 +1,142 @@
+//! Graph-scale bench: `Repo::open`, paged log, and an ancestor walk
+//! over synthetic lineage graphs, JSON (`graph.json`) vs the binary
+//! MGGI index (`graph.bin`).
+//!
+//! The numbers this exists to pin down (ISSUE: graph tier):
+//! - `open bin` must beat `open json` by ≥10x at the largest size —
+//!   opening a mapped binary repo is a header parse, not an O(N) JSON
+//!   materialization;
+//! - `log page` (limit 100, cursor in the middle of the graph) and
+//!   `traverse` (1000-step version-ancestor walk) must be flat across
+//!   sizes — they touch O(page) of the file, never the node set. Both
+//!   run against the *unmaterialized* mapped graph and assert it stays
+//!   that way.
+//!
+//! `MGIT_SCALE=small` (CI bench-smoke) runs 2k/10k; the full ladder is
+//! 10k/100k/1M. Rows land in `$MGIT_BENCH_JSON`.
+
+mod common;
+
+use std::path::Path;
+use std::time::Instant;
+
+use mgit::lineage::store::GRAPH_RESIDENT_BYTES;
+use mgit::ops::{LogPageRequest, Repo, SynthGraphRequest};
+use mgit::util::human_bytes;
+
+/// Best-of-`iters` wall time in microseconds.
+fn best_micros<T>(iters: usize, mut f: impl FnMut() -> T) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..iters {
+        let t = Instant::now();
+        let v = f();
+        std::hint::black_box(&v);
+        best = best.min(t.elapsed().as_secs_f64() * 1e6);
+    }
+    best
+}
+
+fn synth(root: &Path, nodes: usize, format: &str) {
+    std::fs::create_dir_all(root).expect("bench tmp dir");
+    SynthGraphRequest { nodes, shape: "chain".to_string(), format: format.to_string() }
+        .run(root)
+        .expect("synth-graph");
+}
+
+fn main() -> anyhow::Result<()> {
+    let sizes: Vec<usize> = match std::env::var("MGIT_SCALE").as_deref() {
+        Ok("small") => vec![2_000, 10_000],
+        _ => vec![10_000, 100_000, 1_000_000],
+    };
+    println!("graph scale: Repo::open / paged log / ancestor walk, JSON vs MGGI binary");
+    common::hr();
+    println!(
+        "{:>9}  {:>12} {:>12} {:>8}  {:>11} {:>11}  {:>10}",
+        "nodes", "open json", "open bin", "speedup", "log page", "traverse", "resident"
+    );
+    let base = std::env::temp_dir().join(format!("mgit-graph-scale-{}", std::process::id()));
+    for &n in &sizes {
+        let json_root = base.join(format!("json-{n}"));
+        let bin_root = base.join(format!("bin-{n}"));
+        synth(&json_root, n, "json");
+        synth(&bin_root, n, "bin");
+        // Fewer repeats at the big end: the JSON side alone is seconds.
+        let iters = if n >= 500_000 { 2 } else { 3 };
+
+        // Opening a JSON repo parses and validates every node; the
+        // deref below forces the same work the old eager path always
+        // did, so the two columns compare like for like.
+        let open_json = best_micros(iters, || {
+            let repo = Repo::open(&json_root).expect("open json repo");
+            repo.graph.len()
+        });
+        let open_bin = best_micros(iters, || {
+            let repo = Repo::open(&bin_root).expect("open bin repo");
+            repo.graph.len()
+        });
+        let speedup = open_json / open_bin.max(1e-9);
+
+        let repo = Repo::open(&bin_root)?;
+        let resident = GRAPH_RESIDENT_BYTES.get().max(0) as u64;
+
+        // One 100-row page with its cursor in the middle of the graph:
+        // cost must not depend on n.
+        let mid = format!("n{:07}", n / 2);
+        let page = LogPageRequest {
+            limit: 100,
+            after: Some(mid),
+            model_type: None,
+        };
+        let logpage = best_micros(3, || {
+            let report = page.run(&repo).expect("log page");
+            assert_eq!(report.total, n);
+            report.nodes.len()
+        });
+
+        // 1000-step walk up the version chain from the newest node:
+        // O(steps) node decodes on the mapped graph.
+        let steps_want = 1_000.min(n.saturating_sub(1));
+        let start = format!("n{:07}", n - 1);
+        let traverse = best_micros(3, || {
+            let mut idx = repo.graph.idx(&start).expect("tail node");
+            let mut steps = 0usize;
+            while steps < steps_want {
+                let node = repo.graph.node_owned(idx).expect("node decode");
+                match node.ver_parents.first() {
+                    Some(&p) => {
+                        idx = p;
+                        steps += 1;
+                    }
+                    None => break,
+                }
+            }
+            assert_eq!(steps, steps_want);
+            steps
+        });
+        assert!(
+            !repo.graph.is_materialized(),
+            "paged log + traversal must not materialize the mapped graph"
+        );
+
+        println!(
+            "{:>9}  {:>11.0}u {:>11.0}u {:>7.1}x  {:>10.0}u {:>10.0}u  {:>10}",
+            n,
+            open_json,
+            open_bin,
+            speedup,
+            logpage,
+            traverse,
+            human_bytes(resident)
+        );
+        let bench = format!("graph_scale/{n}");
+        common::bench_json(&bench, "open_json_micros", open_json);
+        common::bench_json(&bench, "open_bin_micros", open_bin);
+        common::bench_json(&bench, "open_speedup", speedup);
+        common::bench_json(&bench, "logpage100_micros", logpage);
+        common::bench_json(&bench, "traverse1k_micros", traverse);
+        common::bench_json(&bench, "resident_bytes", resident as f64);
+    }
+    common::hr();
+    let _ = std::fs::remove_dir_all(&base);
+    Ok(())
+}

@@ -328,7 +328,11 @@ fn serve_write_section(dir: &Path) {
         Some(zoo),
         0,
         WRITE_READERS + 2,
-        WriteConfig { auth_token: None, rate_per_sec: None },
+        WriteConfig {
+            auth_token: None,
+            rate_per_sec: None,
+            fold_every: mgit::ops::serve::CHECKPOINT_EVERY,
+        },
     )
     .unwrap();
     let addr = server.local_addr().unwrap();

@@ -14,6 +14,12 @@
 //! `HashMap` iteration order as the old serial implementation did), so
 //! two cascades over identical graphs produce byte-identical graph JSON
 //! and identical plans.
+//!
+//! Planning mutates the graph, so callers reach it through
+//! [`crate::lineage::GraphStore`]'s `DerefMut` — on a mapped binary
+//! repo that materializes the full image first (a cascade rewrites
+//! much of the graph anyway); the subsequent `Repo::save` re-encodes
+//! `graph.bin` compactly.
 
 use std::collections::{HashMap, HashSet};
 

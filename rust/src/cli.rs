@@ -8,7 +8,9 @@
 //! `--json`):
 //! ```text
 //! mgit init [--dir D]
-//! mgit log                       # nodes, edges, versions
+//! mgit log [--limit N [--after NODE] [--type T]]
+//!                                # nodes, edges, versions; --limit pages
+//!                                # through big graphs without loading them
 //! mgit show <node>
 //! mgit fsck                      # graph + object + cross-pack integrity
 //! mgit diff <a> <b>              # structural/contextual divergence
@@ -27,8 +29,12 @@
 //!                                # (wavefront-parallel over N workers)
 //! mgit cascade --resume [--jobs N|auto]  # finish an interrupted cascade
 //! mgit stats                     # store/dedup/chain-depth statistics
+//! mgit synth-graph --nodes N [--shape chain|tree|mtl] [--format bin|json]
+//!                                # deterministic synthetic lineage graph
+//!                                # (graph-scale benchmarks)
 //! mgit serve [--port N] [--pool N|auto] [--log-requests]
-//!            [--writable [--auth-token TOK] [--write-rate N]]
+//!            [--writable [--auth-token TOK] [--write-rate N]
+//!             [--fold-every N]]
 //!                                # HTTP front-end on the concurrent
 //!                                # read tier; --writable adds WAL-backed
 //!                                # POST routes with live snapshot swap;
@@ -63,7 +69,23 @@ pub fn run(argv: Vec<String>) -> Result<()> {
             Ok(())
         }
         "init" => finish(json, &ops::InitRequest.run(&root)?),
-        "log" => finish(json, &ops::LogRequest.run(&Repo::open(&root)?)?),
+        "log" => {
+            let limit = args.flag_usize("limit", 0)?;
+            if limit == 0 && (args.has("after") || args.has("type")) {
+                bail!("--after/--type only make sense with --limit");
+            }
+            let repo = Repo::open(&root)?;
+            if limit == 0 {
+                finish(json, &ops::LogRequest.run(&repo)?)
+            } else {
+                let req = ops::LogPageRequest {
+                    limit,
+                    after: args.flag("after").map(String::from),
+                    model_type: args.flag("type").map(String::from),
+                };
+                finish(json, &req.run(&repo)?)
+            }
+        }
         "show" => {
             let req = ops::ShowRequest { node: args.pos(0, "node")?.to_string() };
             finish(json, &req.run(&Repo::open(&root)?)?)
@@ -130,6 +152,18 @@ pub fn run(argv: Vec<String>) -> Result<()> {
         "auto-insert" => {
             let rt = Runtime::new(&artifacts)?;
             finish(json, &ops::AutoInsertRequest.run(&Repo::open(&root)?, &rt)?)
+        }
+        "synth-graph" => {
+            let nodes = args.flag_usize("nodes", 0)?;
+            if nodes == 0 {
+                bail!("synth-graph wants --nodes N (positive)");
+            }
+            let req = ops::SynthGraphRequest {
+                nodes,
+                shape: args.flag_or("shape", "chain").to_string(),
+                format: args.flag_or("format", "bin").to_string(),
+            };
+            finish(json, &req.run(&root)?)
         }
         "serve" => cmd_serve(&root, &artifacts, &args, json),
         other => bail!("unknown command `{other}` (try `mgit help`)"),
@@ -209,8 +243,12 @@ fn cmd_serve(root: &Path, artifacts: &Path, args: &Args, json: bool) -> Result<(
         None => None,
         Some(_) => Some(args.flag_usize("write-rate", 0)? as u64),
     };
-    if !writable && (auth_token.is_some() || write_rate.is_some()) {
-        bail!("--auth-token/--write-rate only make sense with --writable");
+    let fold_every = args.flag_u64("fold-every", ops::serve::CHECKPOINT_EVERY)?;
+    if !writable && (auth_token.is_some() || write_rate.is_some() || args.has("fold-every")) {
+        bail!("--auth-token/--write-rate/--fold-every only make sense with --writable");
+    }
+    if fold_every == 0 {
+        bail!("--fold-every must be at least 1");
     }
     let repo = Repo::open(root)?;
     // Arch specs enable /diff and /checkpoint; the graph/store endpoints
@@ -228,7 +266,7 @@ fn cmd_serve(root: &Path, artifacts: &Path, args: &Args, json: bool) -> Result<(
             zoo,
             port,
             pool,
-            ops::serve::WriteConfig { auth_token, rate_per_sec: write_rate },
+            ops::serve::WriteConfig { auth_token, rate_per_sec: write_rate, fold_every },
         )?
     } else {
         ops::serve::Server::bind(repo, zoo, port, pool)?
@@ -251,6 +289,10 @@ usage: mgit <command> [args] [--flags]
 
   init                       create .mgit/ in --dir (default .)
   log                        list nodes with edges and versions
+                             [--limit N] (page through a big graph without
+                             loading it; repeat with --after <last name>)
+                             [--after NODE] [--type T] (filter by model
+                             type; both need --limit)
   show <node>                node details (type, creation fn, params)
   fsck                       check graph invariants, object presence and
                              cross-pack delta-chain integrity (exits
@@ -286,6 +328,10 @@ usage: mgit <command> [args] [--flags]
                              journaled: `cascade --resume` finishes an
                              interrupted run
   auto-insert                rebuild provenance edges automatically (§3.2)
+  synth-graph                write a deterministic synthetic lineage graph
+                             into --dir (graph-scale benchmarks/tests)
+                             --nodes N [--shape chain|tree|mtl]
+                             [--format bin|json] (bin = MGGI graph.bin)
   serve                      HTTP front-end on the concurrent read tier
                              [--port 7421] [--pool N|auto]
                              [--log-requests] (JSON request log, stderr)
@@ -293,7 +339,10 @@ usage: mgit <command> [args] [--flags]
                              /commit /checkpoint/<node> /admin/repack
                              with live snapshot swap)
                              [--auth-token TOK] (bearer auth on writes)
-                             [--write-rate N] (write requests/second);
+                             [--write-rate N] (write requests/second)
+                             [--fold-every N] (commits between WAL folds,
+                             default 64; a binary graph.bin folds by
+                             appending to its segment tail);
                              read endpoints /log /stats /show/<node>
                              /diff/<a>/<b> /checkpoint/<node>
                              /object/<id> /metrics (docs/API.md)

@@ -1,0 +1,686 @@
+//! MGGI — the indexed binary lineage graph format (graph format v1).
+//!
+//! `graph.json` (the v0 format) is parsed in full on every `Repo::open`;
+//! at millions of nodes that parse is the startup and memory wall. MGGI
+//! is the graph counterpart of the pack v2/v3 index work: one
+//! memory-mappable file whose header, name index, and CSR adjacency
+//! sections answer `idx`/`len`/`parents-of` queries with O(page) reads,
+//! while node bodies stay compact JSON decoded one node at a time.
+//!
+//! ## Byte format (all integers little-endian)
+//!
+//! ```text
+//! header (96 bytes)
+//!   [0..4)    magic  "MGGI"
+//!   [4..8)    u32    format version (1)
+//!   [8..16)   u64    node count N
+//!   [16..24)  u64    provenance edge count P
+//!   [24..32)  u64    version edge count V
+//!   [32..40)  u64    name index offset   (== 96)
+//!   [40..48)  u64    adjacency offset
+//!   [48..56)  u64    bodies index offset
+//!   [56..64)  u64    bodies offset
+//!   [64..72)  u64    tests offset
+//!   [72..80)  u64    tests length
+//!   [80..88)  u64    base length (tail records start here)
+//!   [88..96)  u64    reserved (zero)
+//!
+//! name index: N x 12 bytes  { fnv1a64(name) u64, node index u32 },
+//!   sorted by (hash, index); lookups binary-search the hash then
+//!   confirm against the body (collisions are adjacent entries).
+//!
+//! adjacency: four CSR blocks, in order
+//!   [prov_parents, prov_children, ver_parents, ver_children];
+//!   each block is (N+1) x u64 prefix offsets followed by E x u32
+//!   target node indices (E = P for the two prov blocks, V for ver).
+//!
+//! bodies index: N x 12 bytes { body offset u64 (relative to bodies
+//!   offset), body length u32 }.
+//!
+//! bodies: per-node compact JSON
+//!   {"name","model_type","metadata"[,"stored"][,"creation"]}
+//!   (adjacency lives in the CSR blocks, not in the body).
+//!
+//! tests: the [`TestRegistry`] as compact JSON.
+//!
+//! tail (after base length): zero or more append-only records
+//!   [len u32][crc32 u32][payload], payload = one serialized commit
+//!   operation (the [`LineageGraph::apply_commit`] JSON shape, exactly
+//!   what the serving tier's WAL carries). Readers keep the longest
+//!   valid prefix and report anything after it as torn — the same
+//!   contract as the WAL itself.
+//! ```
+//!
+//! Version dispatch follows the pack v1 -> v2 -> v3 precedent: the
+//! version field is read before anything else, unknown versions fail
+//! loudly, and a committed fixture (`tests/fixtures/graph_v1/`) pins
+//! v1 readability forever. Repos without a `graph.bin` keep using
+//! `graph.json` unchanged.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::delta::StoredModel;
+use crate::registry::{CreationSpec, TestRegistry};
+use crate::store::pack::PackMmap;
+use crate::store::wal::crc32;
+use crate::util::json::{self, Json};
+
+use super::{LineageGraph, Node, NodeIdx};
+
+/// File magic, the graph analogue of `MGPK`/`MGPI`/`MGWL`.
+pub const GRAPH_MAGIC: &[u8; 4] = b"MGGI";
+/// Current (and only) binary graph format version.
+pub const GRAPH_VERSION: u32 = 1;
+/// Fixed header length.
+pub const HEADER_LEN: u64 = 96;
+/// Upper bound on one tail record's payload; anything larger is
+/// treated as tail corruption rather than an allocation request.
+pub const MAX_TAIL_RECORD: u32 = 1 << 26;
+
+/// FNV-1a 64-bit — the name-index hash. Stable by definition; part of
+/// the on-disk format.
+pub fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn u32le(b: &[u8]) -> u32 {
+    u32::from_le_bytes([b[0], b[1], b[2], b[3]])
+}
+
+fn u64le(b: &[u8]) -> u64 {
+    u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]])
+}
+
+/// Serialize one node's body (adjacency excluded — that lives in the
+/// CSR section). Key order is fixed; it is part of the format.
+fn body_json(n: &Node) -> Json {
+    let mut j = Json::obj()
+        .set("name", n.name.as_str())
+        .set("model_type", n.model_type.as_str())
+        .set("metadata", n.metadata.clone());
+    if let Some(s) = &n.stored {
+        j = j.set("stored", s.to_json());
+    }
+    if let Some(c) = &n.creation {
+        j = j.set("creation", c.to_json());
+    }
+    j
+}
+
+/// Encode a full graph as one MGGI v1 image (no tail records).
+pub fn encode(g: &LineageGraph) -> Result<Vec<u8>> {
+    let n = g.nodes.len();
+    if n > u32::MAX as usize - 1 {
+        bail!("graph too large for MGGI v1 ({n} nodes)");
+    }
+    let (prov, ver) = g.edge_counts();
+
+    // Name index, sorted by (hash, idx).
+    let mut names: Vec<(u64, u32)> = g
+        .nodes
+        .iter()
+        .enumerate()
+        .map(|(i, node)| (fnv64(node.name.as_bytes()), i as u32))
+        .collect();
+    names.sort_unstable();
+
+    // Bodies + bodies index.
+    let mut bodies = Vec::new();
+    let mut bodies_idx: Vec<(u64, u32)> = Vec::with_capacity(n);
+    for node in &g.nodes {
+        let text = body_json(node).to_string_compact();
+        let bytes = text.as_bytes();
+        if bytes.len() > u32::MAX as usize {
+            bail!("node body `{}` too large for MGGI v1", node.name);
+        }
+        bodies_idx.push((bodies.len() as u64, bytes.len() as u32));
+        bodies.extend_from_slice(bytes);
+    }
+
+    // Four CSR adjacency blocks.
+    fn push_block(adj: &mut Vec<u8>, nodes: &[Node], list: fn(&Node) -> &[NodeIdx]) {
+        let mut off = 0u64;
+        for node in nodes {
+            adj.extend_from_slice(&off.to_le_bytes());
+            off += list(node).len() as u64;
+        }
+        adj.extend_from_slice(&off.to_le_bytes());
+        for node in nodes {
+            for &t in list(node) {
+                adj.extend_from_slice(&(t as u32).to_le_bytes());
+            }
+        }
+    }
+    let mut adj = Vec::new();
+    push_block(&mut adj, &g.nodes, |n| &n.prov_parents);
+    push_block(&mut adj, &g.nodes, |n| &n.prov_children);
+    push_block(&mut adj, &g.nodes, |n| &n.ver_parents);
+    push_block(&mut adj, &g.nodes, |n| &n.ver_children);
+
+    let tests = g.tests.to_json().to_string_compact();
+    let name_idx_off = HEADER_LEN;
+    let adj_off = name_idx_off + 12 * n as u64;
+    let bodies_idx_off = adj_off + adj.len() as u64;
+    let bodies_off = bodies_idx_off + 12 * n as u64;
+    let tests_off = bodies_off + bodies.len() as u64;
+    let tests_len = tests.len() as u64;
+    let base_len = tests_off + tests_len;
+
+    let mut out = Vec::with_capacity(base_len as usize);
+    out.extend_from_slice(GRAPH_MAGIC);
+    out.extend_from_slice(&GRAPH_VERSION.to_le_bytes());
+    out.extend_from_slice(&(n as u64).to_le_bytes());
+    out.extend_from_slice(&(prov as u64).to_le_bytes());
+    out.extend_from_slice(&(ver as u64).to_le_bytes());
+    out.extend_from_slice(&name_idx_off.to_le_bytes());
+    out.extend_from_slice(&adj_off.to_le_bytes());
+    out.extend_from_slice(&bodies_idx_off.to_le_bytes());
+    out.extend_from_slice(&bodies_off.to_le_bytes());
+    out.extend_from_slice(&tests_off.to_le_bytes());
+    out.extend_from_slice(&tests_len.to_le_bytes());
+    out.extend_from_slice(&base_len.to_le_bytes());
+    out.extend_from_slice(&0u64.to_le_bytes());
+    for (h, i) in &names {
+        out.extend_from_slice(&h.to_le_bytes());
+        out.extend_from_slice(&i.to_le_bytes());
+    }
+    out.extend_from_slice(&adj);
+    for (off, len) in &bodies_idx {
+        out.extend_from_slice(&off.to_le_bytes());
+        out.extend_from_slice(&len.to_le_bytes());
+    }
+    out.extend_from_slice(&bodies);
+    out.extend_from_slice(tests.as_bytes());
+    debug_assert_eq!(out.len() as u64, base_len);
+    Ok(out)
+}
+
+/// Write a compact (tail-free) MGGI image atomically (temp + rename,
+/// fsynced before the rename so a fold is durable once it returns).
+pub fn write_binary(g: &LineageGraph, path: &Path) -> Result<()> {
+    let bytes = encode(g)?;
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let tmp = path.with_extension("bin.tmp");
+    let mut f = std::fs::File::create(&tmp)
+        .with_context(|| format!("creating {}", tmp.display()))?;
+    f.write_all(&bytes)?;
+    f.sync_all()?;
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Append commit operations as tail records (the incremental fold: one
+/// fixed-framing record per commit instead of a full-image rewrite).
+/// Fsyncs before returning — callers may truncate the WAL afterwards.
+pub fn append_commits(path: &Path, ops: &[Json]) -> Result<()> {
+    if ops.is_empty() {
+        return Ok(());
+    }
+    let mut f = std::fs::OpenOptions::new()
+        .append(true)
+        .open(path)
+        .with_context(|| format!("opening {} for tail append", path.display()))?;
+    let mut buf = Vec::new();
+    for op in ops {
+        let payload = op.to_string_compact();
+        let payload = payload.as_bytes();
+        if payload.len() > MAX_TAIL_RECORD as usize {
+            bail!("commit operation too large for a graph tail record");
+        }
+        buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        buf.extend_from_slice(&crc32(payload).to_le_bytes());
+        buf.extend_from_slice(payload);
+    }
+    f.write_all(&buf)?;
+    f.sync_all()?;
+    Ok(())
+}
+
+/// A tail that stops being valid partway through (crash mid-append).
+#[derive(Debug, Clone)]
+pub struct TailTorn {
+    /// Byte offset of the first invalid record.
+    pub offset: u64,
+    pub reason: String,
+}
+
+/// A memory-mapped MGGI file: O(page) open, on-demand node decode.
+///
+/// Reads go through [`PackMmap`], so the `--no-default-features`
+/// (no-mmap) build transparently falls back to positional reads — same
+/// API, same results.
+pub struct MappedGraph {
+    map: PackMmap,
+    node_count: u64,
+    prov_edges: u64,
+    ver_edges: u64,
+    name_idx_off: u64,
+    adj_off: u64,
+    bodies_idx_off: u64,
+    bodies_off: u64,
+    tests_off: u64,
+    tests_len: u64,
+    base_len: u64,
+    /// Commit operations recovered from the valid tail prefix, in
+    /// append order. Applied on [`MappedGraph::materialize`].
+    pub tail_ops: Vec<Json>,
+    /// Set when bytes past the valid tail prefix exist but do not form
+    /// a valid record (torn append). The durable prefix above is still
+    /// served; fsck surfaces this as `TORN_GRAPH_TAIL`.
+    pub tail_torn: Option<TailTorn>,
+}
+
+/// The four CSR adjacency blocks, in on-disk order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdjBlock {
+    ProvParents = 0,
+    ProvChildren = 1,
+    VerParents = 2,
+    VerChildren = 3,
+}
+
+impl MappedGraph {
+    /// Map `path` and validate the header + section layout. Node bodies
+    /// and adjacency are *not* read; the tail is scanned (it is the
+    /// only variable-validity region).
+    pub fn open(path: &Path) -> Result<MappedGraph> {
+        let map = PackMmap::open(path)
+            .with_context(|| format!("mapping graph index {}", path.display()))?;
+        Self::parse(map).with_context(|| format!("reading graph index {}", path.display()))
+    }
+
+    fn parse(map: PackMmap) -> Result<MappedGraph> {
+        if map.len() < HEADER_LEN {
+            bail!("file shorter than an MGGI header");
+        }
+        let h = map.read_at(0, HEADER_LEN as usize)?;
+        if &h[0..4] != GRAPH_MAGIC {
+            bail!("bad magic (not an MGGI graph index)");
+        }
+        let version = u32le(&h[4..8]);
+        if version != GRAPH_VERSION {
+            bail!("unsupported graph format version {version} (this build reads v1)");
+        }
+        let node_count = u64le(&h[8..16]);
+        let prov_edges = u64le(&h[16..24]);
+        let ver_edges = u64le(&h[24..32]);
+        let name_idx_off = u64le(&h[32..40]);
+        let adj_off = u64le(&h[40..48]);
+        let bodies_idx_off = u64le(&h[48..56]);
+        let bodies_off = u64le(&h[56..64]);
+        let tests_off = u64le(&h[64..72]);
+        let tests_len = u64le(&h[72..80]);
+        let base_len = u64le(&h[80..88]);
+        if node_count >= u32::MAX as u64 {
+            bail!("implausible node count {node_count}");
+        }
+        if prov_edges > map.len() || ver_edges > map.len() {
+            bail!("implausible edge counts");
+        }
+        // The v1 layout is fully determined by the counts; recompute and
+        // demand exact agreement so a malformed writer can't smuggle
+        // overlapping sections past the bounds checks below.
+        let adj_len = 4 * (node_count + 1) * 8 + (2 * prov_edges + 2 * ver_edges) * 4;
+        if name_idx_off != HEADER_LEN
+            || adj_off != name_idx_off + 12 * node_count
+            || bodies_idx_off != adj_off + adj_len
+            || bodies_off != bodies_idx_off + 12 * node_count
+            || tests_off < bodies_off
+            || tests_off.checked_add(tests_len) != Some(base_len)
+            || base_len > map.len()
+        {
+            bail!("section table is inconsistent with the v1 layout");
+        }
+        let (tail_ops, tail_torn) = Self::scan_tail(&map, base_len)?;
+        Ok(MappedGraph {
+            map,
+            node_count,
+            prov_edges,
+            ver_edges,
+            name_idx_off,
+            adj_off,
+            bodies_idx_off,
+            bodies_off,
+            tests_off,
+            tests_len,
+            base_len,
+            tail_ops,
+            tail_torn,
+        })
+    }
+
+    fn scan_tail(map: &PackMmap, base_len: u64) -> Result<(Vec<Json>, Option<TailTorn>)> {
+        let mut ops = Vec::new();
+        let mut off = base_len;
+        while off < map.len() {
+            let torn = |reason: &str| {
+                Some(TailTorn { offset: off, reason: reason.to_string() })
+            };
+            if off + 8 > map.len() {
+                return Ok((ops, torn("truncated record header")));
+            }
+            let hdr = map.read_at(off, 8)?;
+            let len = u32le(&hdr[0..4]);
+            let crc = u32le(&hdr[4..8]);
+            if len == 0 || len > MAX_TAIL_RECORD {
+                return Ok((ops, torn("implausible record length")));
+            }
+            if off + 8 + len as u64 > map.len() {
+                return Ok((ops, torn("truncated record body")));
+            }
+            let payload = map.read_at(off + 8, len as usize)?;
+            if crc32(&payload) != crc {
+                return Ok((ops, torn("checksum mismatch")));
+            }
+            let text = match std::str::from_utf8(&payload) {
+                Ok(t) => t,
+                Err(_) => return Ok((ops, torn("payload is not UTF-8"))),
+            };
+            match json::parse(text) {
+                Ok(op) => ops.push(op),
+                Err(_) => return Ok((ops, torn("payload is not valid JSON"))),
+            }
+            off += 8 + len as u64;
+        }
+        Ok((ops, None))
+    }
+
+    /// Node count of the base image (tail commits not included).
+    pub fn node_count(&self) -> usize {
+        self.node_count as usize
+    }
+
+    /// (provenance, versioning) edge counts of the base image — O(1),
+    /// straight from the header.
+    pub fn edge_counts(&self) -> (usize, usize) {
+        (self.prov_edges as usize, self.ver_edges as usize)
+    }
+
+    /// End of the base image / start of the tail.
+    pub fn base_len(&self) -> u64 {
+        self.base_len
+    }
+
+    /// Total mapped length (base + tail).
+    pub fn file_len(&self) -> u64 {
+        self.map.len()
+    }
+
+    fn name_entry(&self, pos: usize) -> Result<(u64, usize)> {
+        let e = self.map.read_at(self.name_idx_off + 12 * pos as u64, 12)?;
+        Ok((u64le(&e[0..8]), u32le(&e[8..12]) as usize))
+    }
+
+    /// Name -> index through the fanout index: binary search on the
+    /// hash, confirm against the body (hash collisions are adjacent
+    /// entries). `Ok(None)` when absent.
+    pub fn idx(&self, name: &str) -> Result<Option<NodeIdx>> {
+        let target = fnv64(name.as_bytes());
+        let n = self.node_count();
+        let (mut lo, mut hi) = (0usize, n);
+        while lo < hi {
+            let mid = lo + (hi - lo) / 2;
+            if self.name_entry(mid)?.0 < target {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        while lo < n {
+            let (h, idx) = self.name_entry(lo)?;
+            if h != target {
+                break;
+            }
+            if self.name_of(idx)? == name {
+                return Ok(Some(idx));
+            }
+            lo += 1;
+        }
+        Ok(None)
+    }
+
+    /// Decode one node body (compact JSON) without touching adjacency.
+    pub fn body(&self, idx: NodeIdx) -> Result<Json> {
+        if idx >= self.node_count() {
+            bail!("node index {idx} out of range");
+        }
+        let e = self.map.read_at(self.bodies_idx_off + 12 * idx as u64, 12)?;
+        let off = u64le(&e[0..8]);
+        let len = u32le(&e[8..12]) as u64;
+        let end = self.bodies_off.checked_add(off).and_then(|v| v.checked_add(len));
+        if !matches!(end, Some(e) if e <= self.tests_off) {
+            bail!("body entry {idx} escapes the bodies section");
+        }
+        let bytes = self.map.read_at(self.bodies_off + off, len as usize)?;
+        let text = std::str::from_utf8(&bytes)
+            .map_err(|_| anyhow!("body {idx} is not UTF-8"))?;
+        json::parse(text).with_context(|| format!("parsing body of node {idx}"))
+    }
+
+    /// The name of node `idx` (one body decode).
+    pub fn name_of(&self, idx: NodeIdx) -> Result<String> {
+        Ok(self.body(idx)?.req_str("name")?.to_string())
+    }
+
+    /// One CSR adjacency list: two offset reads + the target range.
+    pub fn adjacency(&self, block: AdjBlock, idx: NodeIdx) -> Result<Vec<NodeIdx>> {
+        let n = self.node_count as u64;
+        if idx as u64 >= n {
+            bail!("node index {idx} out of range");
+        }
+        let edges = |b: AdjBlock| match b {
+            AdjBlock::ProvParents | AdjBlock::ProvChildren => self.prov_edges,
+            AdjBlock::VerParents | AdjBlock::VerChildren => self.ver_edges,
+        };
+        let mut block_off = self.adj_off;
+        for b in [AdjBlock::ProvParents, AdjBlock::ProvChildren, AdjBlock::VerParents] {
+            if b as usize >= block as usize {
+                break;
+            }
+            block_off += (n + 1) * 8 + edges(b) * 4;
+        }
+        let offs = self.map.read_at(block_off + 8 * idx as u64, 16)?;
+        let (start, end) = (u64le(&offs[0..8]), u64le(&offs[8..16]));
+        if start > end || end > edges(block) {
+            bail!("corrupt CSR offsets for node {idx}");
+        }
+        let targets_off = block_off + (n + 1) * 8;
+        let bytes = self.map.read_at(targets_off + 4 * start, (end - start) as usize * 4)?;
+        Ok(bytes.chunks_exact(4).map(|c| u32le(c) as NodeIdx).collect())
+    }
+
+    /// Decode one full [`Node`] (body + its four adjacency lists).
+    pub fn node(&self, idx: NodeIdx) -> Result<Node> {
+        let body = self.body(idx)?;
+        let stored = match body.get("stored") {
+            None | Some(Json::Null) => None,
+            Some(s) => Some(StoredModel::from_json(s)?),
+        };
+        let creation = match body.get("creation") {
+            None | Some(Json::Null) => None,
+            Some(c) => Some(CreationSpec::from_json(c)?),
+        };
+        Ok(Node {
+            name: body.req_str("name")?.to_string(),
+            model_type: body.req_str("model_type")?.to_string(),
+            stored,
+            creation,
+            metadata: body.get("metadata").cloned().unwrap_or_else(Json::obj),
+            prov_parents: self.adjacency(AdjBlock::ProvParents, idx)?,
+            prov_children: self.adjacency(AdjBlock::ProvChildren, idx)?,
+            ver_parents: self.adjacency(AdjBlock::VerParents, idx)?,
+            ver_children: self.adjacency(AdjBlock::VerChildren, idx)?,
+        })
+    }
+
+    /// The test registry blob.
+    pub fn tests(&self) -> Result<TestRegistry> {
+        let bytes = self.map.read_at(self.tests_off, self.tests_len as usize)?;
+        let text = std::str::from_utf8(&bytes)
+            .map_err(|_| anyhow!("tests section is not UTF-8"))?;
+        TestRegistry::from_json(&json::parse(text)?)
+    }
+
+    /// Rebuild the full in-memory [`LineageGraph`]: decode every body,
+    /// wire edges from the CSR parents, re-run the integrity check,
+    /// then apply the recovered tail commits (idempotently, exactly
+    /// like WAL replay).
+    pub fn materialize(&self) -> Result<LineageGraph> {
+        let n = self.node_count();
+        let mut nodes = Vec::with_capacity(n);
+        for i in 0..n {
+            let body = self
+                .body(i)?
+                .set(
+                    "prov_parents",
+                    Json::Arr(
+                        self.adjacency(AdjBlock::ProvParents, i)?
+                            .into_iter()
+                            .map(Json::from)
+                            .collect(),
+                    ),
+                )
+                .set(
+                    "ver_parents",
+                    Json::Arr(
+                        self.adjacency(AdjBlock::VerParents, i)?
+                            .into_iter()
+                            .map(Json::from)
+                            .collect(),
+                    ),
+                );
+            nodes.push(body);
+        }
+        let doc = Json::obj()
+            .set("version", 1usize)
+            .set("nodes", Json::Arr(nodes))
+            .set("tests", self.tests()?.to_json());
+        let mut g = LineageGraph::from_json(&doc)?;
+        for op in &self.tail_ops {
+            g.apply_commit(op)
+                .with_context(|| "applying graph tail commit".to_string())?;
+        }
+        Ok(g)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lineage::testutil;
+
+    fn tmpfile(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("mgit-binfmt-{tag}-{}.bin", std::process::id()))
+    }
+
+    #[test]
+    fn fnv64_known_vector() {
+        // FNV-1a 64 of "a" (published test vector).
+        assert_eq!(fnv64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv64(b""), 0xcbf2_9ce4_8422_2325);
+    }
+
+    #[test]
+    fn roundtrip_diamondish() {
+        let mut g = testutil::diamondish();
+        let b = g.idx("b").unwrap();
+        g.nodes[b].metadata = Json::obj().set("note", "hello");
+        let path = tmpfile("roundtrip");
+        write_binary(&g, &path).unwrap();
+        let m = MappedGraph::open(&path).unwrap();
+        assert_eq!(m.node_count(), g.len());
+        assert_eq!(m.edge_counts(), g.edge_counts());
+        assert!(m.tail_ops.is_empty() && m.tail_torn.is_none());
+        // Lazy lookups agree with the in-memory graph.
+        for (i, node) in g.nodes.iter().enumerate() {
+            assert_eq!(m.idx(&node.name).unwrap(), Some(i));
+            assert_eq!(m.name_of(i).unwrap(), node.name);
+            assert_eq!(m.adjacency(AdjBlock::ProvParents, i).unwrap(), node.prov_parents);
+            assert_eq!(m.adjacency(AdjBlock::VerChildren, i).unwrap(), node.ver_children);
+        }
+        assert_eq!(m.idx("nope").unwrap(), None);
+        // Full materialization is byte-identical at the JSON level.
+        let back = m.materialize().unwrap();
+        assert_eq!(
+            back.to_json().to_string_compact(),
+            g.to_json().to_string_compact()
+        );
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn empty_graph_roundtrip() {
+        let g = LineageGraph::new();
+        let path = tmpfile("empty");
+        write_binary(&g, &path).unwrap();
+        let m = MappedGraph::open(&path).unwrap();
+        assert_eq!(m.node_count(), 0);
+        assert_eq!(m.idx("x").unwrap(), None);
+        assert!(m.materialize().unwrap().is_empty());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn tail_append_and_recovery() {
+        let g = testutil::diamondish();
+        let path = tmpfile("tail");
+        write_binary(&g, &path).unwrap();
+        let op = Json::obj()
+            .set("name", "e")
+            .set("model_type", "tx")
+            .set("prov_parents", Json::Arr(vec![Json::from("a")]));
+        append_commits(&path, &[op.clone()]).unwrap();
+        let m = MappedGraph::open(&path).unwrap();
+        assert_eq!(m.tail_ops.len(), 1);
+        assert!(m.tail_torn.is_none());
+        let back = m.materialize().unwrap();
+        assert_eq!(back.len(), g.len() + 1);
+        assert!(back.idx("e").is_ok());
+
+        // A torn second record: the durable prefix survives, the torn
+        // bytes are reported.
+        let mut bytes = std::fs::read(&path).unwrap();
+        let torn_at = bytes.len() as u64;
+        bytes.extend_from_slice(&[7, 0, 0, 0, 0xde, 0xad]); // truncated mid-record
+        std::fs::write(&path, &bytes).unwrap();
+        let m = MappedGraph::open(&path).unwrap();
+        assert_eq!(m.tail_ops.len(), 1);
+        let torn = m.tail_torn.as_ref().expect("tail must be reported torn");
+        assert_eq!(torn.offset, torn_at);
+        assert_eq!(m.materialize().unwrap().len(), g.len() + 1);
+
+        // A corrupted checksum is torn too.
+        let mut bytes = std::fs::read(&path).unwrap();
+        let base = MappedGraph::open(&path).unwrap().base_len() as usize;
+        bytes[base + 4] ^= 0xff; // flip a crc byte of the first record
+        std::fs::write(&path, &bytes).unwrap();
+        let m = MappedGraph::open(&path).unwrap();
+        assert!(m.tail_ops.is_empty());
+        assert!(m.tail_torn.is_some());
+        assert_eq!(m.materialize().unwrap().len(), g.len());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn unknown_version_rejected() {
+        let g = LineageGraph::new();
+        let path = tmpfile("version");
+        write_binary(&g, &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[4] = 99;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = MappedGraph::open(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("version 99"), "{err:#}");
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -10,8 +10,17 @@
 //! round-trip the whole graph (including the test registry) as JSON at
 //! `.mgit/graph.json`; the repository wrapper in [`crate::cli`] does the
 //! per-operation save/load.
+//!
+//! Large repositories can instead keep the graph in the indexed binary
+//! MGGI format ([`binfmt`]): mmap-able, opened in O(page) time behind
+//! the lazy [`GraphStore`] seam ([`store`]). `graph.json` stays the v0
+//! fallback — repos without a `graph.bin` are read exactly as before.
 
+pub mod binfmt;
+pub mod store;
 pub mod traversal;
+
+pub use store::GraphStore;
 
 use std::collections::HashMap;
 use std::path::Path;

@@ -1,0 +1,437 @@
+//! The graph access seam: eager JSON vs lazily-mapped binary.
+//!
+//! [`GraphStore`] is what a [`crate::ops::Repo`] session (and a serve
+//! snapshot) holds instead of a bare [`LineageGraph`]. Two backends:
+//!
+//! * **EagerJson** — the v0 path: `graph.json` parsed in full at open,
+//!   exactly as before. Every repo without a `graph.bin` uses it.
+//! * **MappedBinary** — an MGGI index ([`super::binfmt`]) mapped at
+//!   open: O(page) startup, name lookups and node decodes on demand.
+//!
+//! `Deref<Target = LineageGraph>` materializes the full in-memory
+//! graph on first whole-graph access (mutation, cascade planning,
+//! merge…), so the ~40 existing `repo.graph.…` call sites keep working
+//! unchanged; the paginated/filtered read paths use the inherent lazy
+//! methods below and never materialize. Inherent methods deliberately
+//! shadow their `LineageGraph` namesakes (`len`, `idx`,
+//! `edge_counts`, `integrity_check`) with lazy equivalents.
+
+use std::fmt;
+use std::ops::{Deref, DerefMut};
+use std::path::Path;
+use std::sync::OnceLock;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::obs::{LazyCounter, LazyGauge, LazyHistogram};
+
+use super::binfmt::{self, AdjBlock, MappedGraph};
+use super::{LineageGraph, Node, NodeIdx};
+
+/// Time to open the graph (map the index or parse the JSON), µs.
+pub static GRAPH_OPEN_MICROS: LazyHistogram = LazyHistogram::new("graph.open_micros");
+/// Writable-serve folds of WAL commits into the graph image.
+pub static GRAPH_FOLDS: LazyCounter = LazyCounter::new("graph.folds");
+/// Time per fold (tail append or compact rewrite), µs.
+pub static GRAPH_FOLD_MICROS: LazyHistogram = LazyHistogram::new("graph.fold_micros");
+/// Node count of the most recently opened graph.
+pub static GRAPH_NODES: LazyGauge = LazyGauge::new("graph.nodes");
+/// Graph bytes resident after open: the full file for the eager JSON
+/// path, header + tail only for the mapped binary path.
+pub static GRAPH_RESIDENT_BYTES: LazyGauge = LazyGauge::new("graph.resident_bytes");
+
+enum Backend {
+    /// v0 `graph.json`, parsed eagerly (`full` is pre-set).
+    Eager,
+    /// MGGI `graph.bin`, mapped lazily.
+    Mapped(MappedGraph),
+}
+
+/// A lineage graph behind a lazy-materialization seam. See the module
+/// docs for the backend split.
+pub struct GraphStore {
+    backend: Backend,
+    full: OnceLock<LineageGraph>,
+}
+
+impl GraphStore {
+    /// Wrap an in-memory graph (eager backend, already materialized).
+    pub fn from_graph(g: LineageGraph) -> GraphStore {
+        let full = OnceLock::new();
+        let _ = full.set(g);
+        GraphStore { backend: Backend::Eager, full }
+    }
+
+    /// Open the graph under `.mgit/`: `graph.bin` (mapped, lazy) when
+    /// present, else `graph.json` (eager). A binary graph with a
+    /// non-empty append tail is materialized immediately so every
+    /// accessor sees the tail commits; a quiescent (compacted) one
+    /// stays O(page) until a whole-graph access. Records open metrics.
+    pub fn open(mgit_dir: &Path) -> Result<GraphStore> {
+        let t = std::time::Instant::now();
+        let bin = mgit_dir.join("graph.bin");
+        let store = if bin.exists() {
+            let mapped = MappedGraph::open(&bin)?;
+            if let Some(torn) = &mapped.tail_torn {
+                eprintln!(
+                    "warning: {} has a torn append tail at byte {} ({}); \
+                     keeping the {} durable tail commit(s) before it",
+                    bin.display(),
+                    torn.offset,
+                    torn.reason,
+                    mapped.tail_ops.len()
+                );
+            }
+            GRAPH_NODES.set(mapped.node_count() as i64);
+            GRAPH_RESIDENT_BYTES
+                .set((binfmt::HEADER_LEN + (mapped.file_len() - mapped.base_len())) as i64);
+            let has_tail = !mapped.tail_ops.is_empty();
+            let store = GraphStore { backend: Backend::Mapped(mapped), full: OnceLock::new() };
+            if has_tail {
+                store.full()?;
+            }
+            store
+        } else {
+            let path = mgit_dir.join("graph.json");
+            let g = LineageGraph::load(&path)?;
+            GRAPH_NODES.set(g.len() as i64);
+            GRAPH_RESIDENT_BYTES
+                .set(std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0) as i64);
+            GraphStore::from_graph(g)
+        };
+        GRAPH_OPEN_MICROS.observe(t.elapsed().as_micros() as u64);
+        Ok(store)
+    }
+
+    fn mapped(&self) -> Option<&MappedGraph> {
+        match &self.backend {
+            Backend::Mapped(m) => Some(m),
+            Backend::Eager => None,
+        }
+    }
+
+    /// `"json"` or `"binary"` — which on-disk format backs this store.
+    pub fn format(&self) -> &'static str {
+        match self.backend {
+            Backend::Eager => "json",
+            Backend::Mapped(_) => "binary",
+        }
+    }
+
+    /// Whether the full in-memory graph has been built (always true
+    /// for the eager backend).
+    pub fn is_materialized(&self) -> bool {
+        self.full.get().is_some()
+    }
+
+    /// The full in-memory graph, materializing it on first call.
+    pub fn full(&self) -> Result<&LineageGraph> {
+        if let Some(g) = self.full.get() {
+            return Ok(g);
+        }
+        let g = match &self.backend {
+            Backend::Eager => unreachable!("eager backend is always pre-materialized"),
+            Backend::Mapped(m) => m
+                .materialize()
+                .context("materializing binary lineage graph")?,
+        };
+        let _ = self.full.set(g);
+        if let Some(m) = self.mapped() {
+            GRAPH_RESIDENT_BYTES.set(m.file_len() as i64);
+        }
+        Ok(self.full.get().expect("just set"))
+    }
+
+    /// Mutable access to the full graph (materializes first).
+    pub fn full_mut(&mut self) -> Result<&mut LineageGraph> {
+        self.full()?;
+        Ok(self.full.get_mut().expect("materialized above"))
+    }
+
+    /// An owned clone of the full graph (the writable serving tier's
+    /// working copy).
+    pub fn clone_full(&self) -> Result<LineageGraph> {
+        Ok(self.full()?.clone())
+    }
+
+    // ------------------------------------------------------------------
+    // Lazy accessors: O(page) on the mapped backend, trivial delegation
+    // once materialized. These shadow the `LineageGraph` namesakes.
+    // ------------------------------------------------------------------
+
+    /// Number of nodes (tail commits included — a tailed graph is
+    /// materialized at open).
+    pub fn len(&self) -> usize {
+        match (self.full.get(), self.mapped()) {
+            (Some(g), _) => g.len(),
+            (None, Some(m)) => m.node_count(),
+            (None, None) => unreachable!("eager backend is always pre-materialized"),
+        }
+    }
+
+    /// Whether the graph has no nodes.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Index of the node named `name` (error if absent) — a fanout
+    /// binary search on the mapped backend, no materialization.
+    pub fn idx(&self, name: &str) -> Result<NodeIdx> {
+        match (self.full.get(), self.mapped()) {
+            (Some(g), _) => g.idx(name),
+            (None, Some(m)) => {
+                m.idx(name)?.ok_or_else(|| anyhow!("no node named `{name}`"))
+            }
+            (None, None) => unreachable!("eager backend is always pre-materialized"),
+        }
+    }
+
+    /// (provenance, versioning) edge counts — O(1) from the header on
+    /// the mapped backend.
+    pub fn edge_counts(&self) -> (usize, usize) {
+        match (self.full.get(), self.mapped()) {
+            (Some(g), _) => g.edge_counts(),
+            (None, Some(m)) => m.edge_counts(),
+            (None, None) => unreachable!("eager backend is always pre-materialized"),
+        }
+    }
+
+    /// Decode one node (owned): body + adjacency for the mapped
+    /// backend, a clone otherwise.
+    pub fn node_owned(&self, idx: NodeIdx) -> Result<Node> {
+        match (self.full.get(), self.mapped()) {
+            (Some(g), _) => {
+                if idx >= g.len() {
+                    bail!("node index {idx} out of range");
+                }
+                Ok(g.node(idx).clone())
+            }
+            (None, Some(m)) => m.node(idx),
+            (None, None) => unreachable!("eager backend is always pre-materialized"),
+        }
+    }
+
+    /// The name of node `idx` (one body decode on the mapped backend).
+    pub fn name_of(&self, idx: NodeIdx) -> Result<String> {
+        match (self.full.get(), self.mapped()) {
+            (Some(g), _) => {
+                if idx >= g.len() {
+                    bail!("node index {idx} out of range");
+                }
+                Ok(g.node(idx).name.clone())
+            }
+            (None, Some(m)) => m.name_of(idx),
+            (None, None) => unreachable!("eager backend is always pre-materialized"),
+        }
+    }
+
+    /// Look a node up by name and decode it (owned).
+    pub fn node_by_name(&self, name: &str) -> Result<Node> {
+        self.node_owned(self.idx(name)?)
+    }
+
+    /// Visit every node in index order, decoding one at a time — the
+    /// streaming walk fsck and pagination use (O(one node) resident on
+    /// the mapped backend, never the whole set).
+    pub fn each_node(&self, f: &mut dyn FnMut(NodeIdx, &Node) -> Result<()>) -> Result<()> {
+        match (self.full.get(), self.mapped()) {
+            (Some(g), _) => {
+                for (i, n) in g.nodes.iter().enumerate() {
+                    f(i, n)?;
+                }
+                Ok(())
+            }
+            (None, Some(m)) => {
+                for i in 0..m.node_count() {
+                    f(i, &m.node(i)?)?;
+                }
+                Ok(())
+            }
+            (None, None) => unreachable!("eager backend is always pre-materialized"),
+        }
+    }
+
+    /// Torn-tail status of the mapped backend, for fsck: byte offset +
+    /// reason of the first invalid tail record, if any.
+    pub fn tail_status(&self) -> Option<(u64, &str)> {
+        self.mapped()
+            .and_then(|m| m.tail_torn.as_ref())
+            .map(|t| (t.offset, t.reason.as_str()))
+    }
+
+    /// Structural integrity check through the seam. Materialized or
+    /// eager graphs delegate to [`LineageGraph::integrity_check`]; an
+    /// unmaterialized mapped graph is verified by streaming node
+    /// decodes against the name index and CSR blocks (O(nodes) index
+    /// memory, one node body resident at a time).
+    pub fn integrity_check(&self) -> Result<()> {
+        if let Some(g) = self.full.get() {
+            return g.integrity_check();
+        }
+        let m = self.mapped().expect("eager backend is always pre-materialized");
+        let n = m.node_count();
+        let mut indeg = vec![0usize; n];
+        let mut prov_children: Vec<Vec<NodeIdx>> = vec![Vec::new(); n];
+        for i in 0..n {
+            let node = m.node(i)?;
+            if m.idx(&node.name)? != Some(i) {
+                bail!("name index points to wrong node for `{}`", node.name);
+            }
+            for &c in &node.prov_children {
+                if c >= n || !m.adjacency(AdjBlock::ProvParents, c)?.contains(&i) {
+                    bail!("asymmetric provenance edge at {}", node.name);
+                }
+            }
+            for &p in &node.prov_parents {
+                if p >= n || !m.adjacency(AdjBlock::ProvChildren, p)?.contains(&i) {
+                    bail!("asymmetric provenance back-edge at {}", node.name);
+                }
+            }
+            for &c in &node.ver_children {
+                if c >= n || !m.adjacency(AdjBlock::VerParents, c)?.contains(&i) {
+                    bail!("asymmetric version edge at {}", node.name);
+                }
+                if m.body(c)?.req_str("model_type")? != node.model_type {
+                    bail!("version edge across model types at {}", node.name);
+                }
+            }
+            if node.ver_parents.len() > 1 {
+                bail!("node {} has multiple previous versions", node.name);
+            }
+            indeg[i] = node.prov_parents.len();
+            prov_children[i] = node.prov_children;
+        }
+        // Provenance acyclicity (Kahn) over the CSR image.
+        let mut queue: Vec<NodeIdx> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut seen = 0;
+        while let Some(i) = queue.pop() {
+            seen += 1;
+            for &c in &prov_children[i] {
+                indeg[c] -= 1;
+                if indeg[c] == 0 {
+                    queue.push(c);
+                }
+            }
+        }
+        if seen != n {
+            bail!("provenance cycle detected");
+        }
+        Ok(())
+    }
+
+    /// Persist the graph in its own format: eager repos rewrite
+    /// `graph.json` (the v0 behavior, byte-for-byte), binary repos
+    /// rewrite `graph.bin` as a compact image — which folds any append
+    /// tail in. A mapped graph that was never materialized cannot have
+    /// been mutated, so nothing is written.
+    pub fn persist(&self, mgit_dir: &Path) -> Result<()> {
+        match &self.backend {
+            Backend::Eager => self.full()?.save(&mgit_dir.join("graph.json")),
+            Backend::Mapped(_) => match self.full.get() {
+                Some(g) => binfmt::write_binary(g, &mgit_dir.join("graph.bin")),
+                None => Ok(()),
+            },
+        }
+    }
+}
+
+impl Deref for GraphStore {
+    type Target = LineageGraph;
+
+    /// Whole-graph access: materializes on first use. Materialization
+    /// only fails on a corrupt body/CSR section *past* the validated
+    /// header — at that point there is no graph to return, so this
+    /// panics (the same contract as `LineageGraph::node` on a bad
+    /// index). Open-time validation and fsck exist to catch it first.
+    fn deref(&self) -> &LineageGraph {
+        self.full()
+            .unwrap_or_else(|e| panic!("lineage graph materialization failed: {e:#}"))
+    }
+}
+
+impl DerefMut for GraphStore {
+    fn deref_mut(&mut self) -> &mut LineageGraph {
+        if let Err(e) = self.full() {
+            panic!("lineage graph materialization failed: {e:#}");
+        }
+        self.full.get_mut().expect("materialized above")
+    }
+}
+
+impl fmt::Debug for GraphStore {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("GraphStore")
+            .field("format", &self.format())
+            .field("materialized", &self.is_materialized())
+            .field("len", &self.len())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lineage::testutil;
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("mgit-graphstore-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn mapped_lazy_accessors_then_materialize() {
+        let g = testutil::diamondish();
+        let dir = tmpdir("lazy");
+        binfmt::write_binary(&g, &dir.join("graph.bin")).unwrap();
+        let gs = GraphStore::open(&dir).unwrap();
+        assert_eq!(gs.format(), "binary");
+        assert!(!gs.is_materialized());
+        assert_eq!(gs.len(), 5);
+        assert_eq!(gs.edge_counts(), (3, 1));
+        let b = gs.idx("b").unwrap();
+        assert_eq!(gs.name_of(b).unwrap(), "b");
+        assert_eq!(gs.node_by_name("b2").unwrap().ver_parents, vec![b]);
+        gs.integrity_check().unwrap();
+        assert!(!gs.is_materialized(), "lazy reads must not materialize");
+        // Deref kicks in for whole-graph APIs.
+        assert_eq!(gs.roots().len(), 1);
+        assert!(gs.is_materialized());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn json_fallback_unchanged() {
+        let g = testutil::diamondish();
+        let dir = tmpdir("json");
+        g.save(&dir.join("graph.json")).unwrap();
+        let gs = GraphStore::open(&dir).unwrap();
+        assert_eq!(gs.format(), "json");
+        assert!(gs.is_materialized());
+        assert_eq!(gs.len(), 5);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn tailed_graph_materializes_at_open() {
+        let g = testutil::diamondish();
+        let dir = tmpdir("tail");
+        let bin = dir.join("graph.bin");
+        binfmt::write_binary(&g, &bin).unwrap();
+        let op = crate::util::json::Json::obj()
+            .set("name", "e")
+            .set("model_type", "tx");
+        binfmt::append_commits(&bin, &[op]).unwrap();
+        let gs = GraphStore::open(&dir).unwrap();
+        assert!(gs.is_materialized(), "tail commits must be folded in at open");
+        assert_eq!(gs.len(), 6);
+        assert!(gs.idx("e").is_ok());
+        // Persist compacts: reopening is lazy again with the tail folded.
+        gs.persist(&dir).unwrap();
+        let gs = GraphStore::open(&dir).unwrap();
+        assert!(!gs.is_materialized());
+        assert_eq!(gs.len(), 6);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -22,7 +22,8 @@ use super::{Report, Repo};
 pub struct FsckRequest;
 
 /// One fsck finding. `kind` is a stable machine tag (`MISSING`,
-/// `UNREADABLE`, `DANGLING`, `BAD_PACK`, `TORN_WAL`).
+/// `UNREADABLE`, `DANGLING`, `BAD_PACK`, `TORN_WAL`,
+/// `TORN_GRAPH_TAIL`).
 pub struct FsckProblem {
     pub kind: &'static str,
     pub detail: String,
@@ -49,8 +50,19 @@ impl FsckRequest {
     pub fn run(&self, repo: &Repo) -> Result<FsckReport> {
         repo.graph.integrity_check()?;
         let mut problems = Vec::new();
+        // A binary graph with a torn segment tail lost the record(s)
+        // past the valid prefix — `Repo::open` already recovered what
+        // was durable; fsck must surface the loss.
+        if let Some((offset, reason)) = repo.graph.tail_status() {
+            problems.push(FsckProblem {
+                kind: "TORN_GRAPH_TAIL",
+                detail: format!("graph.bin segment tail torn at byte {offset}: {reason}"),
+            });
+        }
         // Every model parameter must be present (loose or packed).
-        for node in &repo.graph.nodes {
+        // Streamed through the graph seam: one node resident at a time
+        // on a mapped binary graph.
+        repo.graph.each_node(&mut |_, node| {
             if let Some(sm) = &node.stored {
                 for (pname, id) in &sm.params {
                     if !repo.store.has(id) {
@@ -66,7 +78,8 @@ impl FsckRequest {
                     }
                 }
             }
-        }
+            Ok(())
+        })?;
         // Cross-pack delta-chain integrity: every delta parent must
         // resolve somewhere in the store, whichever pack (or loose file)
         // holds it. The scan is metadata-only: objects sealed in v2

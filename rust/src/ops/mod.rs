@@ -8,7 +8,9 @@
 //! |--------------------------|---------------------------|----------------------|
 //! | [`InitRequest`]          | [`InitReport`]            | —                    |
 //! | [`LogRequest`]           | [`LogReport`]             | `&Repo`              |
+//! | [`LogPageRequest`]       | [`LogPageReport`]         | `&Repo`              |
 //! | [`ShowRequest`]          | [`ShowReport`]            | `&Repo`              |
+//! | [`SynthGraphRequest`]    | [`SynthGraphReport`]      | —                    |
 //! | [`StatsRequest`]         | [`StatsReport`]           | `&Repo`              |
 //! | [`FsckRequest`]          | [`FsckReport`]            | `&Repo`              |
 //! | [`VerifyPackRequest`]    | [`VerifyPackReport`]      | `&Repo`              |
@@ -38,6 +40,7 @@ pub mod query;
 pub mod render;
 mod repo;
 pub mod serve;
+pub mod synth;
 
 pub use exec::{
     merge_graphs, AutoInsertReport, AutoInsertRequest, BuildReport, BuildRequest,
@@ -50,10 +53,11 @@ pub use integrity::{
 pub use maintain::{CompressReport, CompressRequest, RepackReport, RepackRequest};
 pub use model::{DiffReport, DiffRequest, MergeReport, MergeRequest};
 pub use query::{
-    LogNode, LogReport, LogRequest, PackGeneration, ShowReport, ShowRequest, StatsReport,
-    StatsRequest,
+    LogNode, LogPageReport, LogPageRequest, LogReport, LogRequest, PackGeneration, ShowReport,
+    ShowRequest, StatsReport, StatsRequest,
 };
 pub use repo::{InitReport, InitRequest, Repo};
+pub use synth::{SynthGraphReport, SynthGraphRequest};
 
 use crate::util::json::Json;
 

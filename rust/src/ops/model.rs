@@ -1,4 +1,10 @@
 //! Model-to-model operations: `diff`, `merge`.
+//!
+//! Both take `repo.graph` through [`crate::lineage::GraphStore`]'s
+//! auto-deref: they need whole-graph access (node pairs, mutation), so
+//! on a mapped binary repo the first such access materializes the full
+//! in-memory graph — the lazy read seam is for the traversal-shaped
+//! paths (`log`/`show`/fsck/gc), not these.
 
 use anyhow::Result;
 

@@ -2,7 +2,7 @@
 
 use anyhow::Result;
 
-use crate::lineage::LineageGraph;
+use crate::lineage::{GraphStore, LineageGraph, Node};
 use crate::store::{ObjectId, Store};
 use crate::util::json::Json;
 
@@ -62,32 +62,126 @@ impl LogRequest {
     }
 }
 
+impl LogNode {
+    /// One row from a decoded node, resolving parent names through the
+    /// seam (one body decode per parent on a mapped graph).
+    fn from_node(graph: &GraphStore, node: &Node) -> Result<LogNode> {
+        Ok(LogNode {
+            name: node.name.clone(),
+            model_type: node.model_type.clone(),
+            stored: node.stored.is_some(),
+            creation: node.creation.as_ref().map(|c| c.kind().to_string()),
+            prov_parents: node
+                .prov_parents
+                .iter()
+                .map(|&p| graph.name_of(p))
+                .collect::<Result<_>>()?,
+        })
+    }
+
+    /// The per-node JSON shape. Shared by [`LogReport`] and
+    /// [`LogPageReport`] so paginated pages are byte-identical to the
+    /// corresponding full-log slices.
+    fn to_json(&self) -> Json {
+        Json::obj()
+            .set("name", self.name.as_str())
+            .set("model_type", self.model_type.as_str())
+            .set("stored", self.stored)
+            .set(
+                "creation",
+                self.creation.as_deref().map(Json::from).unwrap_or(Json::Null),
+            )
+            .set(
+                "prov_parents",
+                Json::Arr(
+                    self.prov_parents.iter().map(|p| Json::from(p.as_str())).collect(),
+                ),
+            )
+    }
+}
+
 impl Report for LogReport {
     fn to_json(&self) -> Json {
-        let nodes: Vec<Json> = self
-            .nodes
-            .iter()
-            .map(|n| {
-                Json::obj()
-                    .set("name", n.name.as_str())
-                    .set("model_type", n.model_type.as_str())
-                    .set("stored", n.stored)
-                    .set(
-                        "creation",
-                        n.creation.as_deref().map(Json::from).unwrap_or(Json::Null),
-                    )
-                    .set(
-                        "prov_parents",
-                        Json::Arr(
-                            n.prov_parents.iter().map(|p| Json::from(p.as_str())).collect(),
-                        ),
-                    )
-            })
-            .collect();
+        let nodes: Vec<Json> = self.nodes.iter().map(LogNode::to_json).collect();
         Json::obj()
             .set("nodes", Json::Arr(nodes))
             .set("prov_edges", self.prov_edges)
             .set("ver_edges", self.ver_edges)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// log (paginated)
+// ---------------------------------------------------------------------------
+
+/// `mgit log --limit N [--after NAME] [--type T]` and HTTP
+/// `/log?limit&after&type`: one page of the log, walking the graph
+/// index without materializing the full node set — page latency is
+/// independent of total node count on a binary (mapped) graph.
+pub struct LogPageRequest {
+    /// Maximum rows in the page (clamped to at least 1).
+    pub limit: usize,
+    /// Resume cursor: the last node name of the previous page; the
+    /// page starts at the node after it. Errors if the name is absent.
+    pub after: Option<String>,
+    /// Only include nodes of this model type.
+    pub model_type: Option<String>,
+}
+
+/// Typed result of [`LogPageRequest`].
+pub struct LogPageReport {
+    pub nodes: Vec<LogNode>,
+    /// Total node count (all pages, unfiltered).
+    pub total: usize,
+    /// Cursor for the next page; `None` when this page reached the end
+    /// of the graph.
+    pub next_after: Option<String>,
+}
+
+impl LogPageRequest {
+    pub fn run(&self, repo: &Repo) -> Result<LogPageReport> {
+        self.run_store(&repo.graph)
+    }
+
+    /// Seam-level entry point: on a mapped binary graph this decodes
+    /// only the visited nodes (plus one name per parent edge).
+    pub fn run_store(&self, graph: &GraphStore) -> Result<LogPageReport> {
+        let total = graph.len();
+        let limit = self.limit.max(1);
+        let mut i = match &self.after {
+            Some(name) => graph.idx(name)? + 1,
+            None => 0,
+        };
+        let mut nodes = Vec::new();
+        while i < total && nodes.len() < limit {
+            let node = graph.node_owned(i)?;
+            if self
+                .model_type
+                .as_deref()
+                .is_none_or(|t| t == node.model_type)
+            {
+                nodes.push(LogNode::from_node(graph, &node)?);
+            }
+            i += 1;
+        }
+        // The page filled before the end: the last collected row is at
+        // index i-1, so resuming after it continues exactly at i.
+        let next_after =
+            if i < total { nodes.last().map(|n| n.name.clone()) } else { None };
+        Ok(LogPageReport { nodes, total, next_after })
+    }
+}
+
+impl Report for LogPageReport {
+    fn to_json(&self) -> Json {
+        let nodes: Vec<Json> = self.nodes.iter().map(LogNode::to_json).collect();
+        Json::obj()
+            .set("nodes", Json::Arr(nodes))
+            .set("total", self.total)
+            .set(
+                "next_after",
+                self.next_after.as_deref().map(Json::from).unwrap_or(Json::Null),
+            )
     }
 }
 
@@ -114,12 +208,21 @@ pub struct ShowReport {
 
 impl ShowRequest {
     pub fn run(&self, repo: &Repo) -> Result<ShowReport> {
-        self.run_graph(&repo.graph)
+        self.run_store(&repo.graph)
+    }
+
+    /// Seam-level entry point: one node decode, no materialization on
+    /// a mapped binary graph.
+    pub fn run_store(&self, graph: &GraphStore) -> Result<ShowReport> {
+        Ok(Self::report_for(&graph.node_by_name(&self.node)?))
     }
 
     /// Graph-level entry point (see [`LogRequest::run_graph`]).
     pub fn run_graph(&self, graph: &LineageGraph) -> Result<ShowReport> {
-        let node = graph.by_name(&self.node)?;
+        Ok(Self::report_for(graph.by_name(&self.node)?))
+    }
+
+    fn report_for(node: &Node) -> ShowReport {
         let params = node
             .stored
             .as_ref()
@@ -130,13 +233,13 @@ impl ShowRequest {
                     .collect()
             })
             .unwrap_or_default();
-        Ok(ShowReport {
+        ShowReport {
             name: node.name.clone(),
             model_type: node.model_type.clone(),
             creation: node.creation.as_ref().map(|c| c.to_json()),
             metadata: node.metadata.clone(),
             params,
-        })
+        }
     }
 }
 

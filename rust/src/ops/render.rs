@@ -13,9 +13,10 @@ use super::exec::{AutoInsertReport, BuildReport, CascadeReport, TestReport};
 use super::integrity::{FsckReport, GcReport, VerifyPackReport};
 use super::maintain::{CompressReport, RepackReport};
 use super::model::{DiffReport, MergeReport};
-use super::query::{LogReport, ShowReport, StatsReport};
+use super::query::{LogPageReport, LogReport, ShowReport, StatsReport};
 use super::repo::InitReport;
 use super::serve::ServeReport;
+use super::synth::SynthGraphReport;
 
 fn join(f: &mut fmt::Formatter<'_>, lines: &[String]) -> fmt::Result {
     write!(f, "{}", lines.join("\n"))
@@ -35,6 +36,30 @@ impl fmt::Display for LogReport {
             self.prov_edges,
             self.ver_edges
         )];
+        for node in &self.nodes {
+            let stored = if node.stored { "" } else { " (no ckpt)" };
+            let cr = node
+                .creation
+                .as_ref()
+                .map(|c| format!(" cr={c}"))
+                .unwrap_or_default();
+            lines.push(format!(
+                "  {:<40} [{}]{}{} <- {:?}",
+                node.name, node.model_type, stored, cr, node.prov_parents
+            ));
+        }
+        join(f, &lines)
+    }
+}
+
+impl fmt::Display for LogPageReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let more = match &self.next_after {
+            Some(cursor) => format!(" (more: --after {cursor})"),
+            None => " (end)".to_string(),
+        };
+        let mut lines =
+            vec![format!("{} of {} nodes{}", self.nodes.len(), self.total, more)];
         for node in &self.nodes {
             let stored = if node.stored { "" } else { " (no ckpt)" };
             let cr = node
@@ -356,6 +381,22 @@ impl fmt::Display for AutoInsertReport {
         }
         lines.push(format!("avg per-model insertion time: {}", human_secs(self.avg_secs)));
         join(f, &lines)
+    }
+}
+
+impl fmt::Display for SynthGraphReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "synthesized {} `{}` graph: {} nodes / {} prov + {} ver edges -> {} in {}",
+            self.format,
+            self.shape,
+            self.nodes,
+            self.prov_edges,
+            self.ver_edges,
+            self.path,
+            human_secs(self.elapsed_secs)
+        )
     }
 }
 

@@ -14,16 +14,22 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::checkpoint::Checkpoint;
 use crate::delta::{self, DeltaKernel};
-use crate::lineage::LineageGraph;
+use crate::lineage::{GraphStore, LineageGraph};
 use crate::store::{wal, ObjectId, Store};
 use crate::util::json::Json;
 
 use super::Report;
 
 /// An on-disk MGit repository.
+///
+/// `graph` is a [`GraphStore`]: the v0 `graph.json` is parsed eagerly
+/// as before, while a binary `graph.bin` (MGGI) repo is only *mapped*
+/// here — node bodies and adjacency are decoded on demand, and the
+/// full in-memory graph materializes on first whole-graph access
+/// (auto-deref keeps every `repo.graph.…` call site working).
 pub struct Repo {
     pub root: PathBuf,
-    pub graph: LineageGraph,
+    pub graph: GraphStore,
     pub store: Store,
 }
 
@@ -34,6 +40,12 @@ impl Repo {
 
     pub fn graph_path(root: &Path) -> PathBuf {
         Self::mgit_dir(root).join("graph.json")
+    }
+
+    /// The binary (MGGI) graph index. When present it is authoritative
+    /// and `graph.json` is ignored.
+    pub fn graph_bin_path(root: &Path) -> PathBuf {
+        Self::mgit_dir(root).join("graph.bin")
     }
 
     fn stats_path(root: &Path) -> PathBuf {
@@ -49,7 +61,7 @@ impl Repo {
         let store = Store::open_packed(&dir.join("objects"))?;
         let graph = LineageGraph::new();
         graph.save(&Self::graph_path(root))?;
-        Ok(Repo { root: root.to_path_buf(), graph, store })
+        Ok(Repo { root: root.to_path_buf(), graph: GraphStore::from_graph(graph), store })
     }
 
     /// De-serialize at the start of an operation (paper §3.1). The store
@@ -64,7 +76,7 @@ impl Repo {
     /// truncates it, after folding it into `graph.json`. A torn tail is
     /// warned about here and diagnosed as a problem by `mgit fsck`.
     pub fn open(root: &Path) -> Result<Repo> {
-        let mut graph = LineageGraph::load(&Self::graph_path(root))?;
+        let mut graph = GraphStore::open(&Self::mgit_dir(root))?;
         let store = Store::open_packed(&Self::mgit_dir(root).join("objects"))?;
         let wal_file = wal::wal_path(root);
         if wal_file.exists() {
@@ -85,7 +97,9 @@ impl Repo {
                         store.put(*id, bytes)?;
                     }
                     wal::WalRecord::Commit { op } => {
-                        graph.apply_commit(op)?;
+                        // Materializes a mapped graph on the first
+                        // commit record — replay needs the full image.
+                        graph.full_mut()?.apply_commit(op)?;
                     }
                 }
                 replayed += 1;
@@ -99,7 +113,7 @@ impl Repo {
     /// this process's store counters into the persistent cumulative
     /// stats that `mgit stats` reports.
     pub fn save(&self) -> Result<()> {
-        self.graph.save(&Self::graph_path(&self.root))?;
+        self.graph.persist(&Self::mgit_dir(&self.root))?;
         self.persist_stats()
     }
 
@@ -180,7 +194,9 @@ impl Repo {
         kernel: &dyn DeltaKernel,
         zoo: &crate::checkpoint::ModelZoo,
     ) -> Result<Checkpoint> {
-        let n = self.graph.by_name(node)?;
+        // One lazy node decode — loading a checkpoint from a mapped
+        // graph never materializes the node set.
+        let n = self.graph.node_by_name(node)?;
         let sm = n
             .stored
             .as_ref()
@@ -192,7 +208,15 @@ impl Repo {
     /// references are strong and walked transitively; GC aborts rather
     /// than sweep if a live object is unreadable.
     pub fn gc(&self) -> Result<Vec<ObjectId>> {
-        let roots = self.graph.object_roots();
+        // Streamed through the seam: one node resident at a time on a
+        // mapped graph.
+        let mut roots = Vec::new();
+        self.graph.each_node(&mut |_, n| {
+            if let Some(sm) = &n.stored {
+                roots.extend(sm.refs());
+            }
+            Ok(())
+        })?;
         self.store.gc(&roots, |bytes| {
             crate::store::format::TensorObject::decode(bytes)
                 .map(|o| o.refs())

@@ -54,8 +54,13 @@
 //! record, then **one fsync**, then in-memory apply, then the snapshot
 //! swap — a crash at any byte boundary recovers to exactly the last
 //! durable commit ([`super::Repo::open`] replays the log). Every
-//! [`CHECKPOINT_EVERY`] commits (and at shutdown) the graph is folded
-//! into `graph.json` and the log truncated. Optional guards on the
+//! `--fold-every` commits ([`CHECKPOINT_EVERY`] by default, and at
+//! shutdown) the log is folded down and truncated: a JSON repo
+//! re-serializes the whole `graph.json`, while a binary (MGGI) repo
+//! *appends* the folded commit ops to `graph.bin`'s segment tail —
+//! O(batch), not O(graph) — compacting the tail into the base image
+//! only at shutdown, on admin repack, or once it exceeds
+//! [`MAX_TAIL_SEGMENT`] records. Optional guards on the
 //! write path: a bearer token (`--auth-token`, else `401`) and a
 //! token-bucket rate limit (`--write-rate`, else `429`).
 //!
@@ -94,7 +99,8 @@ use anyhow::{bail, Context, Result};
 
 use crate::checkpoint::{Checkpoint, ModelZoo};
 use crate::delta::{self, CompressConfig, NativeKernel, ResolveCache, StoredModel};
-use crate::lineage::LineageGraph;
+use crate::lineage::store::{GRAPH_FOLDS, GRAPH_FOLD_MICROS};
+use crate::lineage::{binfmt, GraphStore, LineageGraph};
 use crate::obs::{Counter, Gauge, Histogram, Registry};
 use crate::store::pack::RepackMode;
 use crate::store::{wal, ObjectId, Store};
@@ -107,10 +113,17 @@ use super::{Report, Repo};
 /// how long a single client can monopolize a pool worker.
 pub const MAX_REQUESTS_PER_CONN: u64 = 1000;
 
-/// Fold the WAL into `graph.json` (and truncate the log) every this
-/// many commits; also happens at shutdown. Bounds replay work after a
-/// crash without putting `graph.json` serialization on every commit.
+/// Default for `--fold-every`: fold the WAL into the on-disk graph
+/// (and truncate the log) every this many commits; also happens at
+/// shutdown. Bounds replay work after a crash without putting graph
+/// serialization on every commit.
 pub const CHECKPOINT_EVERY: u64 = 64;
+
+/// A binary graph folds by *appending* records to `graph.bin`'s
+/// segment tail; once the tail would exceed this many records it is
+/// compacted into the base image instead (bounds tail replay work at
+/// `Repo::open` time).
+pub const MAX_TAIL_SEGMENT: u64 = 1024;
 
 /// Largest request body accepted (matches the WAL's own record cap).
 pub const MAX_BODY: usize = 1 << 30;
@@ -286,7 +299,10 @@ impl Drop for InflightGuard<'_> {
 /// concurrent commit (which swaps the slot, never mutates a published
 /// snapshot) can't tear a response.
 struct Snapshot {
-    graph: Arc<LineageGraph>,
+    /// A [`GraphStore`] so a mapped binary repo serves paged `/log`
+    /// and `/show` without ever materializing the full node set; the
+    /// whole-graph routes reach the eager image through auto-deref.
+    graph: Arc<GraphStore>,
     /// Shared across snapshots except after an admin repack, which
     /// publishes a freshly opened store (old `Arc`s keep resolving:
     /// live repacks retain loose copies and never delete sealed packs).
@@ -304,8 +320,15 @@ struct Snapshot {
 struct WriteState {
     graph: LineageGraph,
     wal: wal::Wal,
-    /// Commits since the WAL was last folded into `graph.json`.
+    /// Commits since the WAL was last folded into the on-disk graph.
     since_checkpoint: u64,
+    /// Commit ops accumulated since the last fold, in apply order — a
+    /// binary graph folds by appending exactly these to its tail.
+    pending_ops: Vec<Json>,
+    /// Whether the on-disk graph is the binary (MGGI) `graph.bin`.
+    binary: bool,
+    /// Records currently in `graph.bin`'s segment tail.
+    tail_records: u64,
 }
 
 /// Options for [`Server::bind_writable`].
@@ -315,6 +338,10 @@ pub struct WriteConfig {
     /// Token-bucket rate limit on mutating requests (per second;
     /// `None`/0 disables).
     pub rate_per_sec: Option<u64>,
+    /// Fold the WAL into the on-disk graph every this many commits
+    /// (`--fold-every`; clamped to ≥ 1). [`CHECKPOINT_EVERY`] is the
+    /// conventional default.
+    pub fold_every: u64,
 }
 
 /// Minimal token bucket: refills continuously at `per_sec`, holds at
@@ -365,6 +392,8 @@ struct ServeState {
     writer: Option<Mutex<WriteState>>,
     auth_token: Option<String>,
     rate: Option<Mutex<TokenBucket>>,
+    /// Commits between WAL folds (from [`WriteConfig::fold_every`]).
+    fold_every: u64,
     epoch: AtomicU64,
     commits: AtomicU64,
     /// Emit a one-line JSON record per request on stderr.
@@ -437,18 +466,24 @@ impl Server {
             None => None,
             Some(_) => {
                 // `Repo::open` already replayed any leftover WAL into
-                // `graph`; persist that and start from an empty log so
-                // the bind snapshot and the log agree.
-                graph.save(&Repo::graph_path(&root))?;
+                // `graph`; persist that (a binary repo compacts its
+                // tail) and start from an empty log so the bind
+                // snapshot and the log agree.
+                graph.persist(&Repo::mgit_dir(&root))?;
                 let mut wal = wal::Wal::open_append(&root)?;
                 wal.truncate()?;
                 Some(Mutex::new(WriteState {
-                    graph: graph.clone(),
+                    graph: graph.clone_full()?,
                     wal,
                     since_checkpoint: 0,
+                    pending_ops: Vec::new(),
+                    binary: Repo::graph_bin_path(&root).exists(),
+                    tail_records: 0,
                 }))
             }
         };
+        let fold_every =
+            write.as_ref().map_or(CHECKPOINT_EVERY, |cfg| cfg.fold_every.max(1));
         let (auth_token, rate) = match write {
             None => (None, None),
             Some(cfg) => (
@@ -473,6 +508,7 @@ impl Server {
             writer,
             auth_token,
             rate,
+            fold_every,
             epoch: AtomicU64::new(1),
             commits: AtomicU64::new(0),
             log_requests: AtomicBool::new(false),
@@ -537,7 +573,7 @@ impl Server {
         });
         if let Some(wm) = &self.state.writer {
             let mut ws = wm.lock().unwrap();
-            if let Err(e) = checkpoint_writer(&self.state, &mut ws) {
+            if let Err(e) = checkpoint_writer(&self.state, &mut ws, true) {
                 eprintln!("warning: final WAL checkpoint failed: {e:#}");
             }
         }
@@ -552,14 +588,35 @@ impl Server {
     }
 }
 
-/// Fold the writer's graph into `graph.json`, then truncate the WAL.
-/// Crash-safe in that order: a crash between the two replays the log
-/// against an already-updated graph, which `apply_commit` treats as a
-/// no-op per record.
-fn checkpoint_writer(state: &ServeState, ws: &mut WriteState) -> Result<()> {
-    ws.graph.save(&Repo::graph_path(&state.root))?;
+/// Fold the writer's pending commits into the on-disk graph, then
+/// truncate the WAL. Crash-safe in that order: a crash between the two
+/// replays the log against an already-updated graph, which
+/// `apply_commit` treats as a no-op per record.
+///
+/// A JSON repo re-serializes the whole `graph.json` (O(graph)). A
+/// binary (MGGI) repo appends the pending ops to `graph.bin`'s segment
+/// tail (O(batch)) — unless `compact` is forced (shutdown, admin
+/// repack) or the tail would outgrow [`MAX_TAIL_SEGMENT`], in which
+/// case the base image is rewritten and the tail emptied.
+fn checkpoint_writer(state: &ServeState, ws: &mut WriteState, compact: bool) -> Result<()> {
+    let t = Instant::now();
+    if ws.binary {
+        let path = Repo::graph_bin_path(&state.root);
+        if compact || ws.tail_records + ws.pending_ops.len() as u64 > MAX_TAIL_SEGMENT {
+            binfmt::write_binary(&ws.graph, &path)?;
+            ws.tail_records = 0;
+        } else {
+            binfmt::append_commits(&path, &ws.pending_ops)?;
+            ws.tail_records += ws.pending_ops.len() as u64;
+        }
+    } else {
+        ws.graph.save(&Repo::graph_path(&state.root))?;
+    }
     ws.wal.truncate()?;
+    ws.pending_ops.clear();
     ws.since_checkpoint = 0;
+    GRAPH_FOLDS.inc();
+    GRAPH_FOLD_MICROS.observe(t.elapsed().as_micros() as u64);
     Ok(())
 }
 
@@ -567,7 +624,7 @@ fn checkpoint_writer(state: &ServeState, ws: &mut WriteState) -> Result<()> {
 fn publish_snapshot(state: &ServeState, graph: &LineageGraph, store: Arc<Store>) -> u64 {
     let epoch = state.epoch.fetch_add(1, Ordering::SeqCst) + 1;
     let snap = Arc::new(Snapshot {
-        graph: Arc::new(graph.clone()),
+        graph: Arc::new(GraphStore::from_graph(graph.clone())),
         store,
         epoch,
         stats: OnceLock::new(),
@@ -704,9 +761,10 @@ fn writer_commit(
     ws.wal.sync()?;
     let applied = ws.graph.apply_commit(op)?;
     debug_assert!(applied, "validated commit must apply");
+    ws.pending_ops.push(op.clone());
     ws.since_checkpoint += 1;
-    if ws.since_checkpoint >= CHECKPOINT_EVERY {
-        checkpoint_writer(state, &mut ws)?;
+    if ws.since_checkpoint >= state.fold_every {
+        checkpoint_writer(state, &mut ws, false)?;
     }
     let epoch = publish_snapshot(state, &ws.graph, store);
     state.commits.fetch_add(1, Ordering::Relaxed);
@@ -1118,8 +1176,53 @@ fn dispatch(state: &ServeState, rw: &mut ResponseWriter, req: &Request) -> Resul
     let snap = state.snapshot.read().unwrap().clone();
     match route {
         Route::Log => {
-            let report = super::LogRequest.run_graph(&snap.graph)?;
-            rw.respond_json(200, &report.to_json())
+            // Bare `/log` keeps its exact historical shape (and bytes);
+            // `?limit=<n>[&after=<node>][&type=<t>]` pages through the
+            // graph instead, decoding only the visited nodes on a
+            // mapped binary repo.
+            if req.query.is_empty() {
+                let report = super::LogRequest.run_graph(&snap.graph)?;
+                return rw.respond_json(200, &report.to_json());
+            }
+            let mut limit = None;
+            let mut after = None;
+            let mut model_type = None;
+            for kv in req.query.split('&').filter(|kv| !kv.is_empty()) {
+                match kv.split_once('=') {
+                    Some(("limit", v)) => match v.parse::<usize>() {
+                        Ok(n) if n > 0 => limit = Some(n),
+                        _ => {
+                            return rw.respond_json(
+                                400,
+                                &err_json("limit must be a positive integer"),
+                            )
+                        }
+                    },
+                    Some(("after", v)) => after = Some(percent_decode(v)),
+                    Some(("type", v)) => model_type = Some(percent_decode(v)),
+                    _ => {
+                        return rw.respond_json(
+                            400,
+                            &err_json(&format!(
+                                "unknown /log query parameter `{kv}` \
+                                 (want limit, after, type)"
+                            )),
+                        )
+                    }
+                }
+            }
+            let Some(limit) = limit else {
+                return rw.respond_json(
+                    400,
+                    &err_json("paged /log wants ?limit=<n>[&after=<node>][&type=<t>]"),
+                );
+            };
+            let page = super::LogPageRequest { limit, after, model_type };
+            match page.run_store(&snap.graph) {
+                Ok(report) => rw.respond_json(200, &report.to_json()),
+                // The only client-reachable failure is a bad cursor.
+                Err(e) => rw.respond_json(404, &err_json(&format!("{e:#}"))),
+            }
         }
         Route::Stats => {
             let stats = snapshot_stats(state, &snap)?;
@@ -1132,7 +1235,8 @@ fn dispatch(state: &ServeState, rw: &mut ResponseWriter, req: &Request) -> Resul
             if snap.graph.idx(&node).is_err() {
                 return rw.respond_json(404, &err_json(&format!("no node named `{node}`")));
             }
-            let report = super::ShowRequest { node }.run_graph(&snap.graph)?;
+            // One lazy node decode on a mapped binary graph.
+            let report = super::ShowRequest { node }.run_store(&snap.graph)?;
             rw.respond_json(200, &report.to_json())
         }
         Route::Checkpoint(rest) => {
@@ -1258,7 +1362,7 @@ fn serve_checkpoint(
     node: &str,
     range: Option<&str>,
 ) -> Result<()> {
-    let Ok(n) = snap.graph.by_name(node) else {
+    let Ok(n) = snap.graph.node_by_name(node) else {
         return rw.respond_json(404, &err_json(&format!("no node named `{node}`")));
     };
     let Some(sm) = &n.stored else {
@@ -1431,7 +1535,7 @@ fn post_checkpoint(
     let snap = state.snapshot.read().unwrap().clone();
     let (sm, objects, delta_params) = match &prev {
         Some(pname) => {
-            let pn = match snap.graph.by_name(pname) {
+            let pn = match snap.graph.node_by_name(pname) {
                 Ok(n) => n,
                 Err(_) => {
                     return rw
@@ -1510,9 +1614,9 @@ fn post_checkpoint(
 fn admin_repack(state: &ServeState, rw: &mut ResponseWriter) -> Result<()> {
     let wm = state.writer.as_ref().expect("dispatch gates writes on state.writer");
     let mut ws = wm.lock().unwrap();
-    // Fold outstanding commits into graph.json so the fresh Repo below
-    // sees them without a WAL replay.
-    checkpoint_writer(state, &mut ws)?;
+    // Fold outstanding commits into the on-disk graph (compacting a
+    // binary tail) so the fresh Repo below sees them without replay.
+    checkpoint_writer(state, &mut ws, true)?;
     let mut repo = Repo::open(&state.root)?;
     let request = super::RepackRequest {
         mode: RepackMode::Incremental,
@@ -1669,7 +1773,7 @@ mod tests {
         g1.add_node("a", "t").unwrap();
         let store = Arc::new(Store::in_memory());
         let slot = RwLock::new(Arc::new(Snapshot {
-            graph: Arc::new(g1.clone()),
+            graph: Arc::new(GraphStore::from_graph(g1.clone())),
             store: Arc::clone(&store),
             epoch: 1,
             stats: OnceLock::new(),
@@ -1682,7 +1786,7 @@ mod tests {
         let mut g2 = g1.clone();
         g2.add_node("b", "t").unwrap();
         *slot.write().unwrap() = Arc::new(Snapshot {
-            graph: Arc::new(g2),
+            graph: Arc::new(GraphStore::from_graph(g2)),
             store,
             epoch: 2,
             stats: OnceLock::new(),

@@ -1,0 +1,178 @@
+//! `mgit synth-graph`: deterministic synthetic lineage graphs for the
+//! graph-scale benchmarks and tests.
+//!
+//! Three shapes cover the traversal patterns that matter at scale:
+//! `chain` (one long version chain — deep versioning), `tree` (a
+//! binary provenance tree — wide derivation), and `mtl` (the paper's
+//! multi-task shape: one shared base, task heads hanging off it, each
+//! head a short version chain). Generation is pure and seed-free —
+//! the same `--nodes`/`--shape` always produce the same graph.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::lineage::{binfmt, LineageGraph};
+use crate::util::json::Json;
+
+use super::{Report, Repo};
+
+/// Length of each task head's version chain in the `mtl` shape (the
+/// head itself plus seven updates).
+const MTL_GROUP: usize = 8;
+
+/// Build a synthetic graph in memory. Node names are `n0000000`,
+/// `n0000001`, … in index order; every node carries one small metadata
+/// field so bodies are realistic but compact.
+pub fn build_graph(nodes: usize, shape: &str) -> Result<LineageGraph> {
+    let mut g = LineageGraph::new();
+    match shape {
+        // One version chain: n0 -> n1 -> … (versioning edges).
+        "chain" => {
+            for i in 0..nodes {
+                let idx = g.add_node(&format!("n{i:07}"), "tx")?;
+                g.nodes[idx].metadata = Json::obj().set("seed", i);
+                if i > 0 {
+                    g.add_version_edge(idx - 1, idx)?;
+                }
+            }
+        }
+        // Binary provenance tree: parent of node i is (i-1)/2.
+        "tree" => {
+            for i in 0..nodes {
+                let idx = g.add_node(&format!("n{i:07}"), "tx")?;
+                g.nodes[idx].metadata = Json::obj().set("seed", i);
+                if i > 0 {
+                    g.add_edge((i - 1) / 2, idx)?;
+                }
+            }
+        }
+        // Multi-task: n0 is the shared base; every group of MTL_GROUP
+        // nodes is a task head (provenance child of the base) followed
+        // by its version chain.
+        "mtl" => {
+            for i in 0..nodes {
+                let idx = g.add_node(&format!("n{i:07}"), "tx")?;
+                g.nodes[idx].metadata = Json::obj().set("seed", i);
+                if i == 0 {
+                    continue;
+                }
+                if (i - 1) % MTL_GROUP == 0 {
+                    g.add_edge(0, idx)?;
+                } else {
+                    g.add_version_edge(idx - 1, idx)?;
+                }
+            }
+        }
+        other => bail!("unknown shape `{other}` (expected chain|tree|mtl)"),
+    }
+    Ok(g)
+}
+
+/// `mgit synth-graph --nodes N [--shape S] [--format json|bin]`.
+pub struct SynthGraphRequest {
+    pub nodes: usize,
+    /// `chain`, `tree`, or `mtl`.
+    pub shape: String,
+    /// `json` (v0 `graph.json`) or `bin` (MGGI `graph.bin`).
+    pub format: String,
+}
+
+/// Typed result of [`SynthGraphRequest`].
+pub struct SynthGraphReport {
+    pub nodes: usize,
+    pub prov_edges: usize,
+    pub ver_edges: usize,
+    pub shape: String,
+    pub format: String,
+    /// The graph file that was written.
+    pub path: String,
+    pub elapsed_secs: f64,
+}
+
+impl SynthGraphRequest {
+    /// Initialize `root` if needed and write the synthetic graph in
+    /// the requested format. Refuses to clobber a non-empty repo.
+    pub fn run(&self, root: &Path) -> Result<SynthGraphReport> {
+        if !matches!(self.format.as_str(), "json" | "bin") {
+            bail!("unknown format `{}` (expected json|bin)", self.format);
+        }
+        let t = std::time::Instant::now();
+        let g = build_graph(self.nodes, &self.shape)?;
+        if Repo::graph_path(root).exists() || Repo::graph_bin_path(root).exists() {
+            let existing = Repo::open(root)?;
+            if !existing.graph.is_empty() {
+                bail!(
+                    "repository at {} already has {} nodes; refusing to overwrite",
+                    root.display(),
+                    existing.graph.len()
+                );
+            }
+        } else {
+            Repo::init(root)?;
+        }
+        let path = match self.format.as_str() {
+            "json" => {
+                let p = Repo::graph_path(root);
+                g.save(&p)?;
+                p
+            }
+            _ => {
+                let p = Repo::graph_bin_path(root);
+                binfmt::write_binary(&g, &p)?;
+                p
+            }
+        };
+        let (prov_edges, ver_edges) = g.edge_counts();
+        Ok(SynthGraphReport {
+            nodes: g.len(),
+            prov_edges,
+            ver_edges,
+            shape: self.shape.clone(),
+            format: self.format.clone(),
+            path: path.display().to_string(),
+            elapsed_secs: t.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+impl Report for SynthGraphReport {
+    fn to_json(&self) -> Json {
+        Json::obj()
+            .set("nodes", self.nodes)
+            .set("prov_edges", self.prov_edges)
+            .set("ver_edges", self.ver_edges)
+            .set("shape", self.shape.as_str())
+            .set("format", self.format.as_str())
+            .set("path", self.path.as_str())
+            .set("elapsed_secs", self.elapsed_secs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_are_valid_graphs() {
+        for shape in ["chain", "tree", "mtl"] {
+            let g = build_graph(100, shape).unwrap();
+            assert_eq!(g.len(), 100, "{shape}");
+            g.integrity_check().unwrap();
+            let (prov, ver) = g.edge_counts();
+            assert_eq!(prov + ver, 99, "{shape}: every non-root has one in-edge");
+        }
+        assert!(build_graph(10, "blob").is_err());
+    }
+
+    #[test]
+    fn mtl_shape_structure() {
+        let g = build_graph(18, "mtl").unwrap();
+        // Heads: n1 and n9 hang off the base; everything else chains.
+        let base = g.idx("n0000000").unwrap();
+        assert_eq!(g.node(g.idx("n0000001").unwrap()).prov_parents, vec![base]);
+        assert_eq!(g.node(g.idx("n0000009").unwrap()).prov_parents, vec![base]);
+        let (prov, ver) = g.edge_counts();
+        assert_eq!((prov, ver), (3, 14));
+    }
+}

@@ -6,6 +6,8 @@
 
 use std::collections::HashMap;
 use std::fs::File;
+#[cfg(feature = "zstd")]
+use std::io::Read;
 use std::io::Write;
 use std::path::PathBuf;
 
@@ -22,16 +24,20 @@ enum BodySink {
     /// Raw framing: written straight through to the temp file (and the
     /// physical hash) as they arrive.
     Raw,
-    /// Zstd framing: the uncompressed body accumulates in memory and is
-    /// compressed into one frame at `finish` (the `bulk` API is stable
-    /// across the zstd crate versions the offline registry carries).
-    /// Known cost: peak memory is the pack's full logical body — fine
-    /// for incremental packs (proportional to new data), expensive for
-    /// `--full --framing zstd` over a huge store. Streaming the frame
-    /// through to the temp file while feeding the running checksum is
-    /// the planned fix (ROADMAP).
+    /// Zstd framing: body bytes stream through a zstd encoder into a
+    /// side temp file as they arrive, so peak memory is the encoder's
+    /// window — not the pack's full logical body (`--full --framing
+    /// zstd` over a huge store stays flat). The v2 byte format is
+    /// unchanged: at `finish` the compressed frame is spliced into the
+    /// pack behind its `ulen` prefix, feeding the running checksum.
     #[cfg(feature = "zstd")]
-    Zstd(Vec<u8>),
+    Zstd {
+        enc: zstd::stream::write::Encoder<'static, File>,
+        /// The side temp file under the encoder (deleted after splice).
+        path: PathBuf,
+        /// Uncompressed body bytes fed so far (the `ulen` prefix).
+        ulen: u64,
+    },
 }
 
 pub struct PackWriter {
@@ -77,7 +83,14 @@ impl PackWriter {
         let sink = match framing {
             PackFraming::Raw => BodySink::Raw,
             #[cfg(feature = "zstd")]
-            PackFraming::Zstd => BodySink::Zstd(Vec::new()),
+            PackFraming::Zstd => {
+                let zpath = pack_dir.join(format!("tmp-{}.ztmp", std::process::id()));
+                let zfile = File::create(&zpath)
+                    .with_context(|| format!("creating {}", zpath.display()))?;
+                let enc = zstd::stream::write::Encoder::new(zfile, 6)
+                    .context("starting zstd pack frame")?;
+                BodySink::Zstd { enc, path: zpath, ulen: 0 }
+            }
             #[cfg(not(feature = "zstd"))]
             PackFraming::Zstd => {
                 let _ = std::fs::remove_file(&tmp_path);
@@ -120,8 +133,9 @@ impl PackWriter {
         match &mut self.sink {
             BodySink::Raw => {}
             #[cfg(feature = "zstd")]
-            BodySink::Zstd(body) => {
-                body.extend_from_slice(bytes);
+            BodySink::Zstd { enc, ulen, .. } => {
+                enc.write_all(bytes)?;
+                *ulen += bytes.len() as u64;
                 self.logical += bytes.len() as u64;
                 return Ok(());
             }
@@ -167,13 +181,24 @@ impl PackWriter {
         match std::mem::replace(&mut self.sink, BodySink::Raw) {
             BodySink::Raw => {}
             #[cfg(feature = "zstd")]
-            BodySink::Zstd(body) => {
-                let zbytes =
-                    zstd::bulk::compress(&body, 6).context("sealing zstd pack frame")?;
-                debug_assert_eq!(body.len() as u64, self.logical - header_len(VERSION));
-                let ulen = body.len() as u64;
+            BodySink::Zstd { enc, path, ulen } => {
+                debug_assert_eq!(ulen, self.logical - header_len(VERSION));
+                drop(enc.finish().context("sealing zstd pack frame")?);
                 self.write_physical(&ulen.to_le_bytes())?;
-                self.write_physical(&zbytes)?;
+                // Splice the compressed frame through the running
+                // checksum in bounded chunks.
+                let mut src = File::open(&path)
+                    .with_context(|| format!("reopening {}", path.display()))?;
+                let mut buf = vec![0u8; 1 << 20];
+                loop {
+                    let n = src.read(&mut buf)?;
+                    if n == 0 {
+                        break;
+                    }
+                    self.write_physical(&buf[..n])?;
+                }
+                drop(src);
+                let _ = std::fs::remove_file(&path);
             }
         }
         let count = self.entries.len() as u64;
@@ -197,7 +222,18 @@ impl PackWriter {
 
     /// Drop the partial pack without sealing it.
     pub fn abort(self) -> Result<()> {
-        drop(self.sink);
+        match self.sink {
+            BodySink::Raw => {}
+            #[cfg(feature = "zstd")]
+            BodySink::Zstd { enc, path, .. } => {
+                // Drop the encoder unfinished and clear its side temp
+                // file along with the pack's.
+                drop(enc);
+                if path.exists() {
+                    std::fs::remove_file(&path)?;
+                }
+            }
+        }
         drop(self.file);
         if self.tmp_path.exists() {
             std::fs::remove_file(&self.tmp_path)?;

@@ -1,0 +1,126 @@
+#!/usr/bin/env python3
+"""Generator for the committed MGGI v1 graph fixture (graph.bin).
+
+Mirrors rust/src/lineage/binfmt.rs byte-for-byte — the base image this
+writes must stay identical to what `binfmt::encode` produces for the
+same graph (tests/graph_binary.rs asserts exactly that), and the v1
+reader must keep opening this file forever, the same contract as the
+pack v1 fixture under tests/fixtures/v1/.
+
+Graph (4 nodes + 1 tail commit):
+
+    base --prov--> a --ver--> a2
+    base --prov--> b
+    tail: {"name":"c","model_type":"tx","prov_parents":["b"]}
+
+Run from this directory: python3 gen_fixture.py
+"""
+
+import struct
+import zlib
+
+HEADER_LEN = 96
+MAGIC = b"MGGI"
+VERSION = 1
+
+
+def fnv64(data: bytes) -> int:
+    h = 0xCBF29CE484222325
+    for b in data:
+        h ^= b
+        h = (h * 0x100000001B3) & 0xFFFFFFFFFFFFFFFF
+    return h
+
+
+# (name, body JSON) in node-index order. Compact serialization matches
+# Json::to_string_compact: no whitespace, insertion key order.
+BODIES = [
+    ("base", '{"name":"base","model_type":"tx","metadata":{}}'),
+    ("a", '{"name":"a","model_type":"tx","metadata":{"note":"hello"}}'),
+    ("a2", '{"name":"a2","model_type":"tx","metadata":{}}'),
+    ("b", '{"name":"b","model_type":"tx","metadata":{}}'),
+]
+
+# The four CSR blocks in on-disk order, one adjacency list per node.
+PROV_PARENTS = [[], [0], [], [0]]
+PROV_CHILDREN = [[1, 3], [], [], []]
+VER_PARENTS = [[], [], [1], []]
+VER_CHILDREN = [[], [2], [], []]
+
+TESTS = b"[]"
+
+TAIL_OPS = [b'{"name":"c","model_type":"tx","prov_parents":["b"]}']
+
+
+def csr_block(lists):
+    out = bytearray()
+    off = 0
+    for lst in lists:
+        out += struct.pack("<Q", off)
+        off += len(lst)
+    out += struct.pack("<Q", off)
+    for lst in lists:
+        for t in lst:
+            out += struct.pack("<I", t)
+    return bytes(out)
+
+
+def main():
+    n = len(BODIES)
+    prov = sum(len(l) for l in PROV_PARENTS)
+    ver = sum(len(l) for l in VER_PARENTS)
+    assert prov == sum(len(l) for l in PROV_CHILDREN)
+    assert ver == sum(len(l) for l in VER_CHILDREN)
+
+    names = sorted((fnv64(name.encode()), i) for i, (name, _) in enumerate(BODIES))
+    name_idx = b"".join(struct.pack("<QI", h, i) for h, i in names)
+
+    adj = b"".join(
+        csr_block(b) for b in (PROV_PARENTS, PROV_CHILDREN, VER_PARENTS, VER_CHILDREN)
+    )
+
+    bodies = b""
+    bodies_idx = b""
+    for _, body in BODIES:
+        raw = body.encode()
+        bodies_idx += struct.pack("<QI", len(bodies), len(raw))
+        bodies += raw
+
+    name_idx_off = HEADER_LEN
+    adj_off = name_idx_off + len(name_idx)
+    bodies_idx_off = adj_off + len(adj)
+    bodies_off = bodies_idx_off + len(bodies_idx)
+    tests_off = bodies_off + len(bodies)
+    base_len = tests_off + len(TESTS)
+
+    header = MAGIC + struct.pack(
+        "<IQQQQQQQQQQQ",
+        VERSION,
+        n,
+        prov,
+        ver,
+        name_idx_off,
+        adj_off,
+        bodies_idx_off,
+        bodies_off,
+        tests_off,
+        len(TESTS),
+        base_len,
+        0,
+    )
+    assert len(header) == HEADER_LEN
+
+    image = header + name_idx + adj + bodies_idx + bodies + TESTS
+    assert len(image) == base_len
+
+    tail = b""
+    for payload in TAIL_OPS:
+        tail += struct.pack("<II", len(payload), zlib.crc32(payload)) + payload
+
+    with open("graph.bin", "wb") as f:
+        f.write(image + tail)
+    print(f"graph.bin: {base_len} base bytes + {len(tail)} tail bytes")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,345 @@
+//! The binary graph tier (MGGI v1), end to end: the committed
+//! `tests/fixtures/graph_v1/graph.bin` fixture must stay readable
+//! forever (the pack-v1 fixture contract), a binary repo must be
+//! byte-identical to its JSON twin through `log`/`show`, pagination
+//! must chain to exactly the full log without materializing the mapped
+//! node set, and a torn segment tail must recover its durable prefix
+//! and surface in fsck.
+//!
+//! The fixture was written by `gen_fixture.py` (same directory), which
+//! mirrors the v1 byte layout frozen in `rust/src/lineage/binfmt.rs`;
+//! `fixture_matches_current_encoder` pins the encoder to those bytes.
+
+use std::path::PathBuf;
+
+use mgit::lineage::binfmt::{self, AdjBlock, MappedGraph};
+use mgit::lineage::LineageGraph;
+use mgit::ops::{self, Repo, Report};
+use mgit::util::json::Json;
+
+fn fixture_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/graph_v1/graph.bin")
+}
+
+fn tmp_root(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("mgit-graphbin-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// The graph the fixture encodes (see gen_fixture.py):
+/// base --prov--> a --ver--> a2, base --prov--> b.
+fn fixture_graph() -> LineageGraph {
+    let mut g = LineageGraph::new();
+    let base = g.add_node("base", "tx").unwrap();
+    let a = g.add_node("a", "tx").unwrap();
+    let a2 = g.add_node("a2", "tx").unwrap();
+    let b = g.add_node("b", "tx").unwrap();
+    g.nodes[a].metadata = Json::obj().set("note", "hello");
+    g.add_edge(base, a).unwrap();
+    g.add_edge(base, b).unwrap();
+    g.add_version_edge(a, a2).unwrap();
+    g
+}
+
+/// A deterministic mixed-shape graph: provenance tree + version edges
+/// every fourth node, two model types, per-node metadata.
+fn sample_graph(n: usize) -> LineageGraph {
+    let mut g = LineageGraph::new();
+    for i in 0..n {
+        let ty = if i % 4 == 0 { "cnn" } else { "tx" };
+        let idx = g.add_node(&format!("m{i:04}"), ty).unwrap();
+        g.nodes[idx].metadata = Json::obj().set("step", i);
+        if i > 0 {
+            g.add_edge((i - 1) / 2, idx).unwrap();
+        }
+        if i % 4 == 2 {
+            g.add_version_edge(idx - 1, idx).unwrap();
+        }
+    }
+    g
+}
+
+/// Init a repo whose graph is persisted as v0 `graph.json`.
+fn json_repo(tag: &str, g: &LineageGraph) -> PathBuf {
+    let root = tmp_root(tag);
+    Repo::init(&root).unwrap();
+    g.save(&Repo::graph_path(&root)).unwrap();
+    root
+}
+
+/// Init a repo whose graph is persisted as a binary `graph.bin`
+/// (authoritative over the empty `graph.json` that init wrote).
+fn bin_repo(tag: &str, g: &LineageGraph) -> PathBuf {
+    let root = tmp_root(tag);
+    Repo::init(&root).unwrap();
+    binfmt::write_binary(g, &Repo::graph_bin_path(&root)).unwrap();
+    root
+}
+
+// ---------------------------------------------------------------------------
+// Committed fixture: forever-readability + encoder stability
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fixture_v1_is_forever_readable() {
+    let m = MappedGraph::open(&fixture_path()).unwrap();
+    assert_eq!(m.node_count(), 4);
+    assert_eq!(m.edge_counts(), (2, 1));
+    assert_eq!(m.tail_ops.len(), 1, "fixture carries one tail commit");
+    assert!(m.tail_torn.is_none());
+
+    // Lazy reads against the frozen bytes.
+    assert_eq!(m.idx("base").unwrap(), Some(0));
+    assert_eq!(m.idx("a").unwrap(), Some(1));
+    assert_eq!(m.idx("b").unwrap(), Some(3));
+    assert_eq!(m.idx("missing").unwrap(), None);
+    assert_eq!(m.name_of(2).unwrap(), "a2");
+    assert_eq!(m.adjacency(AdjBlock::ProvChildren, 0).unwrap(), vec![1, 3]);
+    assert_eq!(m.adjacency(AdjBlock::VerParents, 2).unwrap(), vec![1]);
+    assert_eq!(
+        m.body(1).unwrap().get("metadata").unwrap().to_string_compact(),
+        r#"{"note":"hello"}"#
+    );
+
+    // Materialization applies the tail commit (node `c`, child of `b`).
+    let g = m.materialize().unwrap();
+    assert_eq!(g.len(), 5);
+    let c = g.by_name("c").unwrap();
+    assert_eq!(c.prov_parents, vec![3]);
+    g.integrity_check().unwrap();
+}
+
+#[test]
+fn fixture_matches_current_encoder() {
+    let encoded = binfmt::encode(&fixture_graph()).unwrap();
+    let committed = std::fs::read(fixture_path()).unwrap();
+    let base = MappedGraph::open(&fixture_path()).unwrap().base_len() as usize;
+    assert_eq!(
+        encoded,
+        &committed[..base],
+        "encoder output drifted from the committed v1 fixture — that is a \
+         format break; bump GRAPH_VERSION instead of changing v1"
+    );
+}
+
+#[test]
+fn fixture_repo_opens_with_tail_applied() {
+    let root = tmp_root("fixture-open");
+    Repo::init(&root).unwrap();
+    std::fs::copy(fixture_path(), Repo::graph_bin_path(&root)).unwrap();
+    let repo = Repo::open(&root).unwrap();
+    assert_eq!(repo.graph.format(), "binary");
+    // A non-empty tail is folded into the session image at open.
+    assert_eq!(repo.graph.len(), 5);
+    assert_eq!(repo.graph.node_by_name("c").unwrap().prov_parents, vec![3]);
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+// ---------------------------------------------------------------------------
+// JSON <-> binary output parity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn json_and_binary_reports_are_byte_identical() {
+    let g = sample_graph(40);
+    let jroot = json_repo("parity-json", &g);
+    let broot = bin_repo("parity-bin", &g);
+    let jrepo = Repo::open(&jroot).unwrap();
+    let brepo = Repo::open(&broot).unwrap();
+    assert_eq!(jrepo.graph.format(), "json");
+    assert_eq!(brepo.graph.format(), "binary");
+
+    // Lazy-path reports first: paged log + show decode only the visited
+    // nodes and must leave the mapped graph unmaterialized.
+    let page = ops::LogPageRequest {
+        limit: 7,
+        after: Some("m0012".to_string()),
+        model_type: None,
+    };
+    let (jp, bp) = (page.run(&jrepo).unwrap(), page.run(&brepo).unwrap());
+    assert_eq!(
+        jp.to_json().to_string_compact(),
+        bp.to_json().to_string_compact()
+    );
+    assert_eq!(jp.to_string(), bp.to_string());
+
+    let show = ops::ShowRequest { node: "m0017".to_string() };
+    let (js, bs) = (show.run(&jrepo).unwrap(), show.run(&brepo).unwrap());
+    assert_eq!(
+        js.to_json().to_string_compact(),
+        bs.to_json().to_string_compact()
+    );
+    assert_eq!(js.to_string(), bs.to_string());
+    assert!(
+        !brepo.graph.is_materialized(),
+        "paged log + show must not materialize the mapped graph"
+    );
+
+    // Full log (whole-graph path, materializes via auto-deref).
+    let (jl, bl) = (
+        ops::LogRequest.run(&jrepo).unwrap(),
+        ops::LogRequest.run(&brepo).unwrap(),
+    );
+    assert_eq!(
+        jl.to_json().to_string_compact(),
+        bl.to_json().to_string_compact()
+    );
+    assert_eq!(jl.to_string(), bl.to_string());
+    assert!(brepo.graph.is_materialized());
+
+    let _ = std::fs::remove_dir_all(&jroot);
+    let _ = std::fs::remove_dir_all(&broot);
+}
+
+#[test]
+fn paged_log_chains_to_exactly_the_full_log() {
+    let g = sample_graph(40);
+    let root = bin_repo("paging", &g);
+    let repo = Repo::open(&root).unwrap();
+
+    let chain = |model_type: Option<&str>| {
+        let mut names = Vec::new();
+        let mut after: Option<String> = None;
+        let mut pages = 0;
+        loop {
+            let req = ops::LogPageRequest {
+                limit: 7,
+                after: after.clone(),
+                model_type: model_type.map(String::from),
+            };
+            let page = req.run(&repo).unwrap();
+            assert_eq!(page.total, 40, "total is unfiltered");
+            assert!(page.nodes.len() <= 7);
+            names.extend(page.nodes.iter().map(|n| n.name.clone()));
+            pages += 1;
+            match page.next_after {
+                Some(cursor) => after = Some(cursor),
+                None => break,
+            }
+        }
+        (names, pages)
+    };
+
+    let (all, pages) = chain(None);
+    let want: Vec<String> = (0..40).map(|i| format!("m{i:04}")).collect();
+    assert_eq!(all, want);
+    assert_eq!(pages, 40usize.div_ceil(7));
+
+    let (cnn, _) = chain(Some("cnn"));
+    let want_cnn: Vec<String> = (0..40)
+        .filter(|i| i % 4 == 0)
+        .map(|i| format!("m{i:04}"))
+        .collect();
+    assert_eq!(cnn, want_cnn);
+
+    // Pagination never needs the full node set.
+    assert!(!repo.graph.is_materialized());
+
+    // A bogus cursor is an error, not an empty page.
+    let bad = ops::LogPageRequest {
+        limit: 7,
+        after: Some("no-such-node".to_string()),
+        model_type: None,
+    };
+    assert!(bad.run(&repo).is_err());
+
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+// ---------------------------------------------------------------------------
+// Torn tail: durable prefix + fsck + compaction
+// ---------------------------------------------------------------------------
+
+#[test]
+fn torn_tail_recovers_prefix_and_surfaces_in_fsck() {
+    let root = tmp_root("torn");
+    Repo::init(&root).unwrap();
+    std::fs::copy(fixture_path(), Repo::graph_bin_path(&root)).unwrap();
+    // Crash mid-append: a record header with no body after the valid
+    // tail record.
+    let bin = Repo::graph_bin_path(&root);
+    let mut bytes = std::fs::read(&bin).unwrap();
+    bytes.extend_from_slice(&[9, 0, 0, 0, 0xde, 0xad]);
+    std::fs::write(&bin, &bytes).unwrap();
+
+    // The durable prefix (base + 1 valid tail commit) still serves.
+    let repo = Repo::open(&root).unwrap();
+    assert_eq!(repo.graph.len(), 5);
+    let (offset, _) = repo.graph.tail_status().expect("torn tail must be reported");
+    assert_eq!(offset as usize, bytes.len() - 6);
+
+    // fsck names it.
+    let fsck = ops::FsckRequest.run(&repo).unwrap();
+    assert!(
+        fsck.problems.iter().any(|p| p.kind == "TORN_GRAPH_TAIL"),
+        "{:?}",
+        fsck.problems.iter().map(|p| p.kind).collect::<Vec<_>>()
+    );
+
+    // Persisting compacts: tail folded into the base image, torn bytes
+    // discarded, fsck clean again.
+    repo.save().unwrap();
+    let m = MappedGraph::open(&bin).unwrap();
+    assert_eq!(m.node_count(), 5);
+    assert!(m.tail_ops.is_empty() && m.tail_torn.is_none());
+    assert_eq!(m.base_len(), m.file_len());
+    let repo = Repo::open(&root).unwrap();
+    assert!(repo.graph.tail_status().is_none());
+    assert!(!ops::FsckRequest.run(&repo).unwrap().problems.iter().any(|p| p.kind
+        == "TORN_GRAPH_TAIL"));
+
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+// ---------------------------------------------------------------------------
+// v0 repos are untouched
+// ---------------------------------------------------------------------------
+
+#[test]
+fn v0_json_repo_stays_json() {
+    let g = sample_graph(12);
+    let root = json_repo("v0", &g);
+    let repo = Repo::open(&root).unwrap();
+    assert_eq!(repo.graph.format(), "json");
+    assert_eq!(repo.graph.len(), 12);
+    repo.save().unwrap();
+    assert!(
+        !Repo::graph_bin_path(&root).exists(),
+        "a v0 repo must never grow a graph.bin behind the user's back"
+    );
+    assert!(Repo::graph_path(&root).exists());
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+// ---------------------------------------------------------------------------
+// synth-graph: the scale harness entry point
+// ---------------------------------------------------------------------------
+
+#[test]
+fn synth_graph_builds_openable_repos() {
+    for (shape, format) in [("chain", "bin"), ("tree", "json"), ("mtl", "bin")] {
+        let root = tmp_root(&format!("synth-{shape}-{format}"));
+        let report = ops::SynthGraphRequest {
+            nodes: 300,
+            shape: shape.to_string(),
+            format: format.to_string(),
+        }
+        .run(&root)
+        .unwrap();
+        assert_eq!(report.nodes, 300);
+        let repo = Repo::open(&root).unwrap();
+        assert_eq!(repo.graph.len(), 300);
+        assert_eq!(
+            repo.graph.format(),
+            if format == "bin" { "binary" } else { "json" }
+        );
+        assert_eq!(
+            repo.graph.edge_counts(),
+            (report.prov_edges, report.ver_edges)
+        );
+        repo.graph.integrity_check().unwrap();
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}

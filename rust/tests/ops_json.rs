@@ -131,6 +131,43 @@ fn log_stats_fsck_json_byte_stable() {
     std::fs::remove_dir_all(&dir).unwrap();
 }
 
+/// Golden shape of the paged log: `{nodes, total, next_after}` is the
+/// documented `/log?limit` response (docs/API.md) and must not drift.
+#[test]
+fn log_page_json_golden() {
+    let dir = tmp_repo("logpage");
+    let z = zoo();
+    ops::Repo::init(&dir).unwrap();
+    build_chain(&dir, &z, 5);
+    let repo = ops::Repo::open(&dir).unwrap();
+
+    let page = ops::LogPageRequest { limit: 2, after: None, model_type: None }
+        .run(&repo)
+        .unwrap();
+    let j = page.to_json();
+    assert_eq!(j.req_arr("nodes").unwrap().len(), 2);
+    assert_eq!(j.req_usize("total").unwrap(), 5);
+    assert_eq!(j.get("next_after").unwrap().as_str(), Some("m/v2"));
+
+    // Resuming after the cursor continues exactly where the page ended;
+    // the final page carries a null cursor.
+    let last = ops::LogPageRequest {
+        limit: 10,
+        after: Some("m/v2".into()),
+        model_type: None,
+    }
+    .run(&repo)
+    .unwrap();
+    assert_eq!(last.nodes.len(), 3);
+    assert_eq!(last.nodes[0].name, "m/v3");
+    assert!(matches!(
+        last.to_json().get("next_after"),
+        Some(mgit::util::json::Json::Null)
+    ));
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
 #[test]
 fn diff_json_byte_stable() {
     let dir = tmp_repo("diff");
@@ -295,6 +332,7 @@ fn cli_json_flag_smoke() {
     let z = zoo();
     build_chain(&dir, &z, 2);
     cli(&["log", "--dir", d, "--json"]).unwrap();
+    cli(&["log", "--dir", d, "--json", "--limit", "1", "--type", "t"]).unwrap();
     cli(&["stats", "--dir", d, "--json"]).unwrap();
     cli(&["fsck", "--dir", d, "--json"]).unwrap();
     cli(&["gc", "--dir", d, "--json"]).unwrap();

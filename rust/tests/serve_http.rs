@@ -480,6 +480,77 @@ fn serve_without_manifest_degrades() {
     std::fs::remove_dir_all(&dir).unwrap();
 }
 
+/// `/log?limit&after&type`: chained pages reproduce exactly the bare
+/// `/log` node list (whose bytes are pinned elsewhere and must not
+/// change), cursors percent-decode, and bad parameters get typed 4xx.
+#[test]
+fn serve_log_pagination() {
+    let dir = tmp_repo("logpage");
+    let zoo = ModelZoo::from_json(&mgit::util::json::parse(MANIFEST).unwrap()).unwrap();
+    Repo::init(&dir).unwrap();
+    build_chain(&dir, &zoo);
+    let server = Server::bind(Repo::open(&dir).unwrap(), None, 0, 2).unwrap();
+    let addr = server.local_addr().unwrap();
+    let handle = server.handle().unwrap();
+    let srv = std::thread::spawn(move || server.serve().unwrap());
+
+    // Ground truth: the bare (unpaged) listing.
+    let (code, body) = http_get(addr, "/log");
+    assert_eq!(code, 200);
+    let names = |nodes: &[Json]| -> Vec<String> {
+        nodes.iter().map(|n| n.req_str("name").unwrap().to_string()).collect()
+    };
+    let want = names(parse_json(&body).req_arr("nodes").unwrap());
+    assert_eq!(want.len(), VERSIONS);
+
+    // Chain pages of 2 until the cursor runs out.
+    let mut got = Vec::new();
+    let mut cursor: Option<String> = None;
+    let mut pages = 0;
+    loop {
+        let path = match &cursor {
+            // Cursors are node names — percent-encode the slash.
+            Some(c) => format!("/log?limit=2&after={}", c.replace('/', "%2F")),
+            None => "/log?limit=2".to_string(),
+        };
+        let (code, body) = http_get(addr, &path);
+        assert_eq!(code, 200, "{path}");
+        let page = parse_json(&body);
+        assert_eq!(page.req_usize("total").unwrap(), VERSIONS);
+        let nodes = page.req_arr("nodes").unwrap();
+        assert!(nodes.len() <= 2);
+        got.extend(names(nodes));
+        pages += 1;
+        match page.get("next_after") {
+            Some(Json::Str(c)) => cursor = Some(c.clone()),
+            _ => break,
+        }
+    }
+    assert_eq!(got, want, "pages must chain to exactly the full log");
+    assert_eq!(pages, VERSIONS.div_ceil(2));
+
+    // Type filtering rides the same query.
+    let (code, body) = http_get(addr, &format!("/log?limit={VERSIONS}&type=t"));
+    assert_eq!(code, 200);
+    assert_eq!(names(parse_json(&body).req_arr("nodes").unwrap()), want);
+    let (code, body) = http_get(addr, &format!("/log?limit={VERSIONS}&type=ghost"));
+    assert_eq!(code, 200);
+    assert!(parse_json(&body).req_arr("nodes").unwrap().is_empty());
+
+    // Typed failures: bad limit and unknown params are 400s, a bogus
+    // cursor is a 404.
+    for bad in ["/log?limit=0", "/log?limit=x", "/log?after=m%2Fv1", "/log?limit=2&bogus=1"] {
+        let (code, _) = http_get(addr, bad);
+        assert_eq!(code, 400, "{bad}");
+    }
+    let (code, _) = http_get(addr, "/log?limit=2&after=ghost");
+    assert_eq!(code, 404);
+
+    handle.shutdown();
+    srv.join().unwrap();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
 // ---------------------------------------------------------------------------
 // Write tier
 // ---------------------------------------------------------------------------
@@ -553,7 +624,11 @@ fn serve_write_auth_and_commit_lifecycle() {
         Some(zoo.clone()),
         0,
         4,
-        WriteConfig { auth_token: Some("sekrit".to_string()), rate_per_sec: None },
+        WriteConfig {
+            auth_token: Some("sekrit".to_string()),
+            rate_per_sec: None,
+            fold_every: ops::serve::CHECKPOINT_EVERY,
+        },
     )
     .unwrap();
     let addr = server.local_addr().unwrap();
@@ -666,7 +741,11 @@ fn serve_write_rate_limit() {
         None,
         0,
         2,
-        WriteConfig { auth_token: None, rate_per_sec: Some(1) },
+        WriteConfig {
+            auth_token: None,
+            rate_per_sec: Some(1),
+            fold_every: ops::serve::CHECKPOINT_EVERY,
+        },
     )
     .unwrap();
     let addr = server.local_addr().unwrap();
@@ -717,7 +796,11 @@ fn serve_checkpoint_post_delta_and_range() {
         Some(zoo.clone()),
         0,
         2,
-        WriteConfig { auth_token: None, rate_per_sec: None },
+        WriteConfig {
+            auth_token: None,
+            rate_per_sec: None,
+            fold_every: ops::serve::CHECKPOINT_EVERY,
+        },
     )
     .unwrap();
     let addr = server.local_addr().unwrap();
@@ -834,7 +917,11 @@ fn serve_writable_concurrent_stress() {
         Some(zoo.clone()),
         0,
         CLIENTS + 2,
-        WriteConfig { auth_token: None, rate_per_sec: None },
+        WriteConfig {
+            auth_token: None,
+            rate_per_sec: None,
+            fold_every: ops::serve::CHECKPOINT_EVERY,
+        },
     )
     .unwrap();
     let addr = server.local_addr().unwrap();

@@ -287,6 +287,89 @@ fn bit_flip_inside_records() {
     }
 }
 
+/// The binary graph's append-only segment tail honors the same crash
+/// contract as the WAL: a cut at a record boundary recovers clean, a
+/// cut or bit flip inside a record keeps exactly the durable prefix
+/// (bit-exact log JSON against a never-crashed oracle) and is
+/// diagnosed as a `TORN_GRAPH_TAIL` fsck failure.
+#[test]
+fn graph_tail_crash_injection() {
+    use mgit::lineage::binfmt;
+
+    const TAIL: usize = 12;
+    let mut oracle = LineageGraph::new();
+    oracle.add_node("root", "t").unwrap();
+
+    // Template: a compact base image plus TAIL appended commit records,
+    // with every record's start offset and the oracle log after each.
+    let template = tmp_dir("graph-template");
+    Repo::init(&template).unwrap();
+    let bin = Repo::graph_bin_path(&template);
+    binfmt::write_binary(&oracle, &bin).unwrap();
+    let mut rec_starts = Vec::with_capacity(TAIL);
+    let mut oracle_logs = vec![log_json(&oracle)];
+    for k in 1..=TAIL {
+        let parent = if k == 1 { "root".to_string() } else { format!("g/{}", k - 1) };
+        let op = Json::obj()
+            .set("name", format!("g/{k}"))
+            .set("model_type", "t")
+            .set("prov_parents", Json::Arr(vec![Json::from(parent.as_str())]));
+        rec_starts.push(fs::metadata(&bin).unwrap().len() as usize);
+        binfmt::append_commits(&bin, &[op.clone()]).unwrap();
+        assert!(oracle.apply_commit(&op).unwrap());
+        oracle_logs.push(log_json(&oracle));
+    }
+    let full = fs::read(&bin).unwrap();
+    fs::remove_dir_all(&template).unwrap();
+
+    let assert_case = |bytes: &[u8], durable: usize, torn: bool| {
+        let dir = tmp_dir("graph-case");
+        Repo::init(&dir).unwrap();
+        fs::write(Repo::graph_bin_path(&dir), bytes).unwrap();
+        let repo = Repo::open(&dir).unwrap();
+        assert_eq!(
+            log_json(&repo.graph),
+            oracle_logs[durable],
+            "graph tail recovery at len {} ({durable} durable commits)",
+            bytes.len()
+        );
+        assert_eq!(repo.graph.tail_status().is_some(), torn, "at len {}", bytes.len());
+        let fsck = ops::FsckRequest.run(&repo).unwrap();
+        assert_eq!(
+            fsck.problems.iter().any(|p| p.kind == "TORN_GRAPH_TAIL"),
+            torn,
+            "fsck at len {}: {:?}",
+            bytes.len(),
+            fsck.problems.iter().map(|p| p.kind).collect::<Vec<_>>()
+        );
+        assert_eq!(fsck.failure().is_some(), torn, "exit status at len {}", bytes.len());
+        fs::remove_dir_all(&dir).unwrap();
+    };
+
+    // Every record boundary, including the bare base image and the
+    // never-crashed file: clean.
+    for (i, &start) in rec_starts.iter().enumerate() {
+        assert_case(&full[..start], i, false);
+    }
+    assert_case(&full, TAIL, false);
+    // Inside every record — mid-header and mid-payload: torn.
+    for i in 0..TAIL {
+        let start = rec_starts[i];
+        let end = if i + 1 < TAIL { rec_starts[i + 1] } else { full.len() };
+        assert_case(&full[..start + 1], i, true);
+        assert_case(&full[..start + 8 + (end - start - 8) / 2], i, true);
+    }
+    // Bit flips in the length, checksum, and payload of sampled records:
+    // the scan must stop there, never resynchronizing past damage.
+    for i in [0, TAIL / 2, TAIL - 1] {
+        for off in [0usize, 4, 9] {
+            let mut data = full.clone();
+            data[rec_starts[i] + off] ^= 0x40;
+            assert_case(&data, i, true);
+        }
+    }
+}
+
 /// After a torn-tail recovery the log keeps working: reopening for
 /// append truncates the damage, new commits land after the validated
 /// prefix, and the next cold open sees old + new.
