@@ -1,0 +1,222 @@
+//! Remote-tier bench: cold-fill and hot-hit latency of the tiered
+//! store, bulk fetch throughput, and chain materialization wall-clock
+//! with delta-parent prefetch on vs off.
+//!
+//! No runtime/artifacts needed: a synthetic lineage (delta-compressed
+//! versions of a 512 KiB model) is built inline and served read-only by
+//! an in-process `mgit serve` on a loopback ephemeral port. A fresh
+//! tiered store then pulls every object cold (per-object latency +
+//! aggregate MiB/s), re-reads them hot, and finally two more fresh
+//! stores each reconstruct the tip checkpoint end-to-end — one with
+//! prefetch disabled (every delta parent is a demand-driven round
+//! trip), one with prefetch enabled (the first fill warms the whole
+//! chain over the same pooled connection).
+//!
+//! Rows land in `$MGIT_BENCH_JSON` via `common::bench_json`;
+//! `MGIT_SCALE=small` shrinks the chain for CI smoke runs.
+
+mod common;
+
+use std::net::SocketAddr;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use mgit::checkpoint::{Checkpoint, ModelZoo};
+use mgit::delta::{self, CompressConfig, NativeKernel};
+use mgit::ops::serve::Server;
+use mgit::ops::{self, Repo};
+use mgit::store::remote::RemoteConfig;
+use mgit::store::tiered::TieredStore;
+use mgit::store::{ObjectStore, Store};
+use mgit::tensor::f32_to_bytes;
+use mgit::util::json;
+use mgit::util::rng::Rng;
+use mgit::util::timing::Timer;
+
+const N_TENSORS: usize = 4;
+const TENSOR_SIZE: usize = 32 * 1024;
+const POOL: usize = 4;
+
+fn versions() -> usize {
+    match std::env::var("MGIT_SCALE").as_deref() {
+        Ok("small") => 6,
+        _ => 12,
+    }
+}
+
+fn manifest() -> String {
+    let layout: Vec<String> = (0..N_TENSORS)
+        .map(|i| {
+            format!(
+                r#"{{"name":"w.t{i}","shape":[{TENSOR_SIZE}],"offset":{},"size":{TENSOR_SIZE},"init":"normal"}}"#,
+                i * TENSOR_SIZE
+            )
+        })
+        .collect();
+    format!(
+        r#"{{
+          "vocab": 16, "max_seq": 4, "n_classes": 2, "batch": 2,
+          "delta_chunk": 4096,
+          "special_tokens": {{"cls": 14, "mask": 15, "ignore_label": -100}},
+          "archs": {{"bench": {{
+              "d_model": 8, "n_layers": 1, "n_heads": 1, "d_ff": 16,
+              "param_count": {},
+              "layout": [{}],
+              "dag": {{"nodes": [], "edges": []}}
+          }}}},
+          "artifacts": {{"bench": {{}}}},
+          "delta_kernels": {{"quant": "q", "dequant": "d"}}
+        }}"#,
+        N_TENSORS * TENSOR_SIZE,
+        layout.join(",")
+    )
+}
+
+fn build_origin(dir: &Path, zoo: &ModelZoo, versions: usize) -> String {
+    let spec = zoo.arch("bench").unwrap();
+    Repo::init(dir).unwrap();
+    let mut repo = Repo::open(dir).unwrap();
+    let root = Checkpoint::init(spec, 7);
+    let (sm, _) = delta::store_raw(&repo.store, spec, &root).unwrap();
+    let idx = repo.graph.add_node("bench/v1", "bench").unwrap();
+    repo.graph.node_mut(idx).stored = Some(sm.clone());
+    let mut prev = (root, sm);
+    let mut prev_idx = idx;
+    let mut tip = "bench/v1".to_string();
+    for v in 1..versions as u64 {
+        let mut rng = Rng::new(v + 900);
+        let child = Checkpoint {
+            arch: prev.0.arch.clone(),
+            flat: prev.0.flat.iter().map(|&x| x + rng.normal_f32(0.0, 1e-4)).collect(),
+        };
+        let cand = delta::prepare_delta(
+            &repo.store,
+            spec,
+            &child,
+            spec,
+            &prev.0,
+            &prev.1,
+            CompressConfig::default(),
+            &NativeKernel,
+        )
+        .unwrap();
+        delta::commit(&repo.store, &cand).unwrap();
+        tip = format!("bench/v{}", v + 1);
+        let n = repo.graph.add_node(&tip, "bench").unwrap();
+        repo.graph.node_mut(n).stored = Some(cand.model.clone());
+        repo.graph.add_version_edge(prev_idx, n).unwrap();
+        prev = (cand.checkpoint, cand.model);
+        prev_idx = n;
+    }
+    repo.save().unwrap();
+    ops::RepackRequest::default().run(&mut Repo::open(dir).unwrap()).unwrap();
+    tip
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("mgit-rtier-bench-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn cfg_for(addr: SocketAddr, prefetch: bool) -> RemoteConfig {
+    let mut cfg = RemoteConfig::new(&format!("http://127.0.0.1:{}", addr.port()));
+    cfg.prefetch = prefetch;
+    cfg
+}
+
+/// The `q`-quantile of an already-sorted latency list (nearest-rank).
+fn pctile(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = ((q * sorted.len() as f64).ceil() as usize).max(1);
+    sorted[rank.min(sorted.len()) - 1]
+}
+
+fn main() {
+    let versions = versions();
+    let origin_dir = tmp_dir("origin");
+    let zoo = ModelZoo::from_json(&json::parse(&manifest()).unwrap()).unwrap();
+    let tip = build_origin(&origin_dir, &zoo, versions);
+
+    let origin = Repo::open(&origin_dir).unwrap();
+    let ids = origin.store.list().unwrap();
+    let tip_model = origin.graph.node_by_name(&tip).unwrap().stored.clone().unwrap();
+    let want = f32_to_bytes(
+        &delta::load(&origin.store, &zoo, &tip_model, &NativeKernel).unwrap().flat,
+    );
+    drop(origin);
+
+    let server =
+        Server::bind(Repo::open(&origin_dir).unwrap(), Some(zoo.clone()), 0, POOL).unwrap();
+    let addr = server.local_addr().unwrap();
+    let handle = server.handle().unwrap();
+    let srv = std::thread::spawn(move || server.serve().unwrap());
+
+    println!(
+        "remote tier: {} objects ({} versions x {N_TENSORS} tensors) over loopback origin {addr}",
+        ids.len(),
+        versions
+    );
+
+    // --- Cold fills: every object pulled over the wire, one get each. ---
+    let dir = tmp_dir("cold");
+    let ts = TieredStore::open(&dir.join("objects"), &cfg_for(addr, false)).unwrap();
+    let mut cold = Vec::with_capacity(ids.len());
+    let mut bytes = 0u64;
+    let t = Timer::start();
+    for id in &ids {
+        let t0 = Instant::now();
+        bytes += ts.get(id).unwrap().len() as u64;
+        cold.push(t0.elapsed().as_micros() as u64);
+    }
+    let cold_secs = t.elapsed_secs();
+    cold.sort_unstable();
+    let mib_s = bytes as f64 / (1024.0 * 1024.0) / cold_secs;
+    let (cp50, cp99) = (pctile(&cold, 0.50), pctile(&cold, 0.99));
+    println!(
+        "  cold: {} fills, {bytes} bytes in {cold_secs:.3}s ({mib_s:.1} MiB/s), \
+         p50 {cp50}µs p99 {cp99}µs",
+        ids.len()
+    );
+    common::bench_json("remote_tier", "cold_fetch_p50_micros", cp50 as f64);
+    common::bench_json("remote_tier", "cold_fetch_p99_micros", cp99 as f64);
+    common::bench_json("remote_tier", "cold_fetch_mib_per_s", mib_s);
+
+    // --- Hot hits: same objects again, now local pack/loose reads. ---
+    let mut warm = Vec::with_capacity(ids.len());
+    for id in &ids {
+        let t0 = Instant::now();
+        ts.get(id).unwrap();
+        warm.push(t0.elapsed().as_micros() as u64);
+    }
+    warm.sort_unstable();
+    let (wp50, wp99) = (pctile(&warm, 0.50), pctile(&warm, 0.99));
+    println!("  warm: p50 {wp50}µs p99 {wp99}µs (hot-tier hits, no wire)");
+    common::bench_json("remote_tier", "warm_hit_p50_micros", wp50 as f64);
+    common::bench_json("remote_tier", "warm_hit_p99_micros", wp99 as f64);
+
+    // --- Chain materialization: tip checkpoint from nothing, demand
+    //     path only vs delta-parent prefetch. ---
+    for (label, prefetch) in [("prefetch_off", false), ("prefetch_on", true)] {
+        let dir = tmp_dir(label);
+        let store = Store::open_tiered(&dir.join("objects"), &cfg_for(addr, prefetch)).unwrap();
+        let t = Timer::start();
+        let ck = delta::load(&store, &zoo, &tip_model, &NativeKernel).unwrap();
+        let secs = t.elapsed_secs();
+        assert_eq!(f32_to_bytes(&ck.flat), want, "remote chain load must be bit-exact");
+        println!("  chain ({label}): tip `{tip}` materialized in {secs:.3}s");
+        common::bench_json("remote_tier", &format!("chain_cold_secs_{label}"), secs);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    handle.shutdown();
+    let report = srv.join().unwrap();
+    assert_eq!(report.errors, 0, "bench run must be error-free");
+    println!("origin served {} requests, 0 errors", report.requests);
+
+    let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_dir_all(&origin_dir);
+}

@@ -32,6 +32,14 @@
 //! mgit synth-graph --nodes N [--shape chain|tree|mtl] [--format bin|json]
 //!                                # deterministic synthetic lineage graph
 //!                                # (graph-scale benchmarks)
+//! mgit graph pack                # convert graph.json to the binary
+//!                                # MGGI index (graph.bin)
+//! mgit remote set <url> [--auth-token TOK] [--hot-bytes N] [--no-prefetch]
+//! mgit remote get                # configured origin (token never echoed)
+//! mgit fetch <node>              # pin a node's checkpoint subtree hot
+//!                                # (then it serves entirely offline)
+//! mgit push <node>               # upload object closure + commit to a
+//!                                # --writable origin
 //! mgit serve [--port N] [--pool N|auto] [--log-requests]
 //!            [--writable [--auth-token TOK] [--write-rate N]
 //!             [--fold-every N]]
@@ -164,6 +172,34 @@ pub fn run(argv: Vec<String>) -> Result<()> {
                 format: args.flag_or("format", "bin").to_string(),
             };
             finish(json, &req.run(&root)?)
+        }
+        "graph" => match args.pos(0, "subcommand")? {
+            "pack" => finish(json, &ops::GraphPackRequest.run(&Repo::open(&root)?)?),
+            other => bail!("unknown graph subcommand `{other}` (try `mgit graph pack`)"),
+        },
+        "remote" => match args.pos(0, "subcommand")? {
+            "set" => {
+                let req = ops::RemoteSetRequest {
+                    url: args.pos(1, "url")?.to_string(),
+                    auth_token: args.flag("auth-token").map(String::from),
+                    hot_bytes: match args.flag("hot-bytes") {
+                        None => None,
+                        Some(_) => Some(args.flag_u64("hot-bytes", 0)?),
+                    },
+                    prefetch: !args.has("no-prefetch"),
+                };
+                finish(json, &req.run(&root)?)
+            }
+            "get" => finish(json, &ops::RemoteGetRequest.run(&root)?),
+            other => bail!("unknown remote subcommand `{other}` (try set|get)"),
+        },
+        "fetch" => {
+            let req = ops::FetchRequest { node: args.pos(0, "node")?.to_string() };
+            finish(json, &req.run(&mut Repo::open(&root)?)?)
+        }
+        "push" => {
+            let req = ops::PushRequest { node: args.pos(0, "node")?.to_string() };
+            finish(json, &req.run(&Repo::open(&root)?)?)
         }
         "serve" => cmd_serve(&root, &artifacts, &args, json),
         other => bail!("unknown command `{other}` (try `mgit help`)"),
@@ -332,6 +368,21 @@ usage: mgit <command> [args] [--flags]
                              into --dir (graph-scale benchmarks/tests)
                              --nodes N [--shape chain|tree|mtl]
                              [--format bin|json] (bin = MGGI graph.bin)
+  graph pack                 convert a JSON-graph repo to the binary MGGI
+                             index (graph.bin); no-op when already binary
+  remote set <url>           configure the origin this repo reads through
+                             (.mgit/remote; later opens become tiered)
+                             [--auth-token TOK] (bearer token for pushes)
+                             [--hot-bytes N] (evict read-through fills
+                             past this byte budget) [--no-prefetch]
+                             (disable delta-parent chain prefetch)
+  remote get                 show the configured origin (token not echoed)
+  fetch <node>               pin a node's checkpoint subtree into the hot
+                             tier so it serves entirely offline; unknown
+                             nodes are created from origin /show metadata
+  push <node>                upload a node to a --writable origin: object
+                             closure first (bases before deltas), then
+                             the graph commit (409 = already there, ok)
   serve                      HTTP front-end on the concurrent read tier
                              [--port 7421] [--pool N|auto]
                              [--log-requests] (JSON request log, stderr)

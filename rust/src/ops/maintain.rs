@@ -1,4 +1,4 @@
-//! Store-maintenance operations: `repack`, `compress`.
+//! Store-maintenance operations: `repack`, `compress`, `graph pack`.
 
 use anyhow::Result;
 
@@ -243,6 +243,68 @@ impl Report for CompressReport {
             .set("stored_bytes", self.stored_bytes)
             .set("ratio", self.ratio())
             .set("swept", self.swept)
+            .set("elapsed_secs", self.elapsed_secs)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// graph pack
+// ---------------------------------------------------------------------------
+
+/// `mgit graph pack`: explicitly convert a JSON-graph repository to the
+/// binary MGGI index (`graph.bin`). Until now the binary format was
+/// only produced by synthesis or the serving tier's fold path; this
+/// makes the conversion a first-class, reportable operation. Running it
+/// on an already-binary repo is a no-op (reported, not an error).
+pub struct GraphPackRequest;
+
+/// Typed result of [`GraphPackRequest`].
+pub struct GraphPackReport {
+    pub nodes: usize,
+    pub prov_edges: usize,
+    pub ver_edges: usize,
+    /// Path of the binary index (`.mgit/graph.bin`).
+    pub path: String,
+    /// Size of the binary index on disk.
+    pub bytes: u64,
+    /// The repo was already binary; nothing was written.
+    pub already_binary: bool,
+    pub elapsed_secs: f64,
+}
+
+impl GraphPackRequest {
+    pub fn run(&self, repo: &Repo) -> Result<GraphPackReport> {
+        let t = Timer::start();
+        let bin = Repo::graph_bin_path(&repo.root);
+        let already_binary = repo.graph.format() == "binary" || bin.exists();
+        let g = repo.graph.full()?;
+        if !already_binary {
+            // graph.json is left in place as a readable backup; once
+            // graph.bin exists it is authoritative (see Repo::open).
+            crate::lineage::binfmt::write_binary(g, &bin)?;
+        }
+        let (prov, ver) = g.edge_counts();
+        Ok(GraphPackReport {
+            nodes: g.len(),
+            prov_edges: prov,
+            ver_edges: ver,
+            path: bin.display().to_string(),
+            bytes: std::fs::metadata(&bin)?.len(),
+            already_binary,
+            elapsed_secs: t.elapsed_secs(),
+        })
+    }
+}
+
+impl Report for GraphPackReport {
+    fn to_json(&self) -> Json {
+        Json::obj()
+            .set("nodes", self.nodes)
+            .set("prov_edges", self.prov_edges)
+            .set("ver_edges", self.ver_edges)
+            .set("path", self.path.as_str())
+            .set("bytes", self.bytes)
+            .set("already_binary", self.already_binary)
             .set("elapsed_secs", self.elapsed_secs)
     }
 }

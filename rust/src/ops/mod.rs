@@ -23,6 +23,11 @@
 //! | [`TestRequest`]          | [`TestReport`]            | `&Repo` + backend    |
 //! | [`CascadeRequest`]       | [`CascadeReport`]         | repo root + runtime  |
 //! | [`AutoInsertRequest`]    | [`AutoInsertReport`]      | `&Repo` + runtime    |
+//! | [`GraphPackRequest`]     | [`GraphPackReport`]       | `&Repo`              |
+//! | [`RemoteSetRequest`]     | [`RemoteSetReport`]       | repo root            |
+//! | [`RemoteGetRequest`]     | [`RemoteGetReport`]       | repo root            |
+//! | [`FetchRequest`]         | [`FetchReport`]           | `&mut Repo`          |
+//! | [`PushRequest`]          | [`PushReport`]            | `&Repo`              |
 //! | [`serve::Server`]        | [`serve::ServeReport`]    | `Repo` (owned)       |
 //!
 //! Reports implement [`Report`]: `to_json()` for machine consumers (the
@@ -37,6 +42,7 @@ pub mod integrity;
 pub mod maintain;
 pub mod model;
 pub mod query;
+pub mod remote;
 pub mod render;
 mod repo;
 pub mod serve;
@@ -50,11 +56,18 @@ pub use integrity::{
     FsckProblem, FsckReport, FsckRequest, GcReport, GcRequest, PackCheck, VerifyPackReport,
     VerifyPackRequest,
 };
-pub use maintain::{CompressReport, CompressRequest, RepackReport, RepackRequest};
+pub use maintain::{
+    CompressReport, CompressRequest, GraphPackReport, GraphPackRequest, RepackReport,
+    RepackRequest,
+};
 pub use model::{DiffReport, DiffRequest, MergeReport, MergeRequest};
 pub use query::{
     LogNode, LogPageReport, LogPageRequest, LogReport, LogRequest, PackGeneration, ShowReport,
-    ShowRequest, StatsReport, StatsRequest,
+    ShowRequest, StatsReport, StatsRequest, TierInfo,
+};
+pub use remote::{
+    FetchReport, FetchRequest, PushReport, PushRequest, RemoteGetReport, RemoteGetRequest,
+    RemoteSetReport, RemoteSetRequest,
 };
 pub use repo::{InitReport, InitRequest, Repo};
 pub use synth::{SynthGraphReport, SynthGraphRequest};

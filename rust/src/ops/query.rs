@@ -290,6 +290,19 @@ pub struct PackGeneration {
     pub name: String,
 }
 
+/// Remote-tier state in a [`StatsReport`] (present when the store reads
+/// through a configured origin; see `store::tiered`).
+pub struct TierInfo {
+    /// Origin endpoint from `.mgit/remote`.
+    pub url: String,
+    /// Byte budget for evictable read-through fills (`None` = unbounded).
+    pub hot_budget: Option<u64>,
+    /// Whether cold fills prefetch the delta-parent chain.
+    pub prefetch: bool,
+    /// Bytes currently held by evictable fills (this process's view).
+    pub fill_resident_bytes: u64,
+}
+
 /// Typed result of [`StatsRequest`].
 pub struct StatsReport {
     pub objects: usize,
@@ -313,6 +326,8 @@ pub struct StatsReport {
     /// objects, plus packed entries whose index predates persisted
     /// numel). 0 means the whole report came from pack indexes alone.
     pub meta_fallback: usize,
+    /// Remote-tier state; `None` for purely local repositories.
+    pub tier: Option<TierInfo>,
 }
 
 impl StatsRequest {
@@ -441,6 +456,15 @@ impl StatsRequest {
                 depth_buckets.push((label.to_string(), n));
             }
         }
+        // Tier state (a tiered store's `list`/`stored_bytes` above are
+        // hot-tier-only, so everything in this report is local — the
+        // tier block says where misses would read through to).
+        let tier = store.as_tiered().map(|t| TierInfo {
+            url: t.remote().url().to_string(),
+            hot_budget: t.hot_budget(),
+            prefetch: t.prefetch_enabled(),
+            fill_resident_bytes: t.fill_resident_bytes(),
+        });
         Ok(StatsReport {
             objects: objects.len(),
             loose,
@@ -457,6 +481,7 @@ impl StatsRequest {
             chain_mean,
             depth_buckets,
             meta_fallback,
+            tier,
         })
     }
 }
@@ -519,6 +544,22 @@ impl Report for StatsReport {
             .set("chain_max", self.chain_max)
             .set("chain_mean", self.chain_mean)
             .set("meta_fallback", self.meta_fallback)
+            .set(
+                "tier",
+                self.tier
+                    .as_ref()
+                    .map(|t| {
+                        Json::obj()
+                            .set("url", t.url.as_str())
+                            .set(
+                                "hot_budget",
+                                t.hot_budget.map(Json::from).unwrap_or(Json::Null),
+                            )
+                            .set("prefetch", t.prefetch)
+                            .set("fill_resident_bytes", t.fill_resident_bytes)
+                    })
+                    .unwrap_or(Json::Null),
+            )
             .set(
                 "depth_buckets",
                 Json::Arr(

@@ -1,0 +1,359 @@
+//! Remote-tier operations: `remote set/get`, `fetch`, `push`.
+//!
+//! These are the fleet seam over [`crate::store::tiered`]: `remote set`
+//! writes `.mgit/remote` (after which every `Repo::open` reads through
+//! the origin), `fetch <node>` pins a node's checkpoint subtree hot so
+//! it serves offline, and `push <node>` uploads a locally-committed
+//! node — object closure first, then the graph commit — to a
+//! `--writable` origin. Like every operation here, each is a request
+//! struct returning a typed report (see [`super`]).
+
+use std::collections::HashSet;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::delta::StoredModel;
+use crate::store::remote::{CommitOutcome, RemoteConfig, RemoteError, RemoteStore};
+use crate::store::ObjectId;
+use crate::util::json::Json;
+
+use super::{Report, Repo};
+
+// ---------------------------------------------------------------------------
+// remote set / get
+// ---------------------------------------------------------------------------
+
+/// `mgit remote set <url>`: configure the origin this repository reads
+/// through. Takes effect on the next `Repo::open`.
+pub struct RemoteSetRequest {
+    pub url: String,
+    pub auth_token: Option<String>,
+    /// Byte budget for evictable read-through fills (`--hot-bytes`).
+    pub hot_bytes: Option<u64>,
+    /// Delta-parent chain prefetch on cold fills (`--no-prefetch` off).
+    pub prefetch: bool,
+}
+
+/// Typed result of [`RemoteSetRequest`].
+pub struct RemoteSetReport {
+    pub url: String,
+    /// Where the config was written (`.mgit/remote`).
+    pub path: String,
+}
+
+impl RemoteSetRequest {
+    pub fn run(&self, root: &Path) -> Result<RemoteSetReport> {
+        if !Repo::graph_path(root).exists() && !Repo::graph_bin_path(root).exists() {
+            bail!("no repository at {} (run `mgit init` first)", root.display());
+        }
+        let cfg = RemoteConfig {
+            url: self.url.clone(),
+            auth_token: self.auth_token.clone(),
+            hot_bytes: self.hot_bytes,
+            prefetch: self.prefetch,
+        };
+        // Validate the URL eagerly — a malformed endpoint would otherwise
+        // break every later `Repo::open`. (No dial: the origin may be
+        // offline right now and that's fine.)
+        RemoteStore::connect(&cfg)?;
+        let mgit = Repo::mgit_dir(root);
+        cfg.save(&mgit)?;
+        Ok(RemoteSetReport {
+            url: cfg.url,
+            path: RemoteConfig::path(&mgit).display().to_string(),
+        })
+    }
+}
+
+impl Report for RemoteSetReport {
+    fn to_json(&self) -> Json {
+        Json::obj()
+            .set("url", self.url.as_str())
+            .set("path", self.path.as_str())
+    }
+}
+
+/// `mgit remote get`: show the configured origin, if any.
+pub struct RemoteGetRequest;
+
+/// Typed result of [`RemoteGetRequest`]. `url == None` means no remote
+/// is configured (not a failure).
+pub struct RemoteGetReport {
+    pub url: Option<String>,
+    pub hot_bytes: Option<u64>,
+    pub prefetch: bool,
+    /// Whether an auth token is configured (the token itself is never
+    /// echoed).
+    pub auth: bool,
+}
+
+impl RemoteGetRequest {
+    pub fn run(&self, root: &Path) -> Result<RemoteGetReport> {
+        Ok(match RemoteConfig::load(&Repo::mgit_dir(root))? {
+            Some(cfg) => RemoteGetReport {
+                url: Some(cfg.url),
+                hot_bytes: cfg.hot_bytes,
+                prefetch: cfg.prefetch,
+                auth: cfg.auth_token.is_some(),
+            },
+            None => RemoteGetReport {
+                url: None,
+                hot_bytes: None,
+                prefetch: true,
+                auth: false,
+            },
+        })
+    }
+}
+
+impl Report for RemoteGetReport {
+    fn to_json(&self) -> Json {
+        Json::obj()
+            .set(
+                "url",
+                self.url.as_deref().map(Json::from).unwrap_or(Json::Null),
+            )
+            .set(
+                "hot_bytes",
+                self.hot_bytes.map(Json::from).unwrap_or(Json::Null),
+            )
+            .set("prefetch", self.prefetch)
+            .set("auth", self.auth)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// fetch
+// ---------------------------------------------------------------------------
+
+/// `mgit fetch <node>`: pin a node's checkpoint subtree into the hot
+/// tier. If the local graph has never seen the node, its metadata is
+/// pulled from the origin's `/show` endpoint and committed locally
+/// first, so a *fresh* repo with only `.mgit/remote` configured can
+/// fetch and then serve the node entirely offline.
+pub struct FetchRequest {
+    pub node: String,
+}
+
+/// Typed result of [`FetchRequest`].
+pub struct FetchReport {
+    pub node: String,
+    /// The node was unknown locally and was created from origin metadata.
+    pub created_node: bool,
+    /// Parameters in the node's stored checkpoint.
+    pub params: usize,
+    /// Objects pulled from the origin (params + delta-chain ancestors).
+    pub objects_fetched: usize,
+    /// Payload bytes transferred for those objects.
+    pub bytes_fetched: u64,
+    /// Chain objects that were already hot.
+    pub already_hot: usize,
+}
+
+impl FetchRequest {
+    pub fn run(&self, repo: &mut Repo) -> Result<FetchReport> {
+        if repo.store.as_tiered().is_none() {
+            bail!("no remote configured (run `mgit remote set <url>` first)");
+        }
+        let (sm, created) = self.resolve_model(repo)?;
+        let tiered = repo.store.as_tiered().expect("checked above");
+        let mut fetched = 0usize;
+        let mut bytes = 0u64;
+        let mut already = 0usize;
+        for (_, id) in &sm.params {
+            let pin = tiered.pin_chain(id)?;
+            fetched += pin.fetched;
+            bytes += pin.bytes;
+            already += pin.already_hot;
+        }
+        if created {
+            repo.save()?;
+        }
+        Ok(FetchReport {
+            node: self.node.clone(),
+            created_node: created,
+            params: sm.params.len(),
+            objects_fetched: fetched,
+            bytes_fetched: bytes,
+            already_hot: already,
+        })
+    }
+
+    /// The node's stored model: from the local graph when known, else
+    /// from the origin's `/show` (committing the node locally so later
+    /// offline opens still resolve it).
+    fn resolve_model(&self, repo: &mut Repo) -> Result<(StoredModel, bool)> {
+        if let Ok(node) = repo.graph.node_by_name(&self.node) {
+            let sm = node.stored.ok_or_else(|| {
+                anyhow!("node `{}` has no stored checkpoint to fetch", self.node)
+            })?;
+            return Ok((sm, false));
+        }
+        let show = repo
+            .store
+            .as_tiered()
+            .expect("caller checked")
+            .remote()
+            .fetch_show(&self.node)
+            .map_err(anyhow::Error::new)?;
+        let model_type = show.req_str("model_type")?.to_string();
+        let mut params = Vec::new();
+        for p in show.req_arr("params")? {
+            params.push((
+                p.req_str("name")?.to_string(),
+                ObjectId::from_hex(p.req_str("id")?)?,
+            ));
+        }
+        if params.is_empty() {
+            bail!(
+                "origin node `{}` has no stored checkpoint to fetch",
+                self.node
+            );
+        }
+        let sm = StoredModel { arch: model_type.clone(), params };
+        // Commit the node locally (no lineage edges: the origin's graph
+        // context is not replicated — `fetch` pins content, not history).
+        let op = Json::obj()
+            .set("name", self.node.as_str())
+            .set("model_type", model_type.as_str())
+            .set("stored", sm.to_json());
+        repo.graph.full_mut()?.apply_commit(&op)?;
+        Ok((sm, true))
+    }
+}
+
+impl Report for FetchReport {
+    fn to_json(&self) -> Json {
+        Json::obj()
+            .set("node", self.node.as_str())
+            .set("created_node", self.created_node)
+            .set("params", self.params)
+            .set("objects_fetched", self.objects_fetched)
+            .set("bytes_fetched", self.bytes_fetched)
+            .set("already_hot", self.already_hot)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// push
+// ---------------------------------------------------------------------------
+
+/// `mgit push <node>`: upload a node to a `--writable` origin — the full
+/// object closure first (delta-chain bases before the deltas that need
+/// them, so the origin never holds a dangling parent pointer), then the
+/// graph commit. Pushing an already-present node is idempotent.
+pub struct PushRequest {
+    pub node: String,
+}
+
+/// Typed result of [`PushRequest`].
+pub struct PushReport {
+    pub node: String,
+    /// Objects newly uploaded.
+    pub objects_pushed: usize,
+    /// Payload bytes those uploads transferred.
+    pub bytes_pushed: u64,
+    /// Closure objects the origin already had (dedup).
+    pub already_remote: usize,
+    /// `true` when the origin created the node; `false` when it already
+    /// had one of that name (409 — treated as success).
+    pub committed: bool,
+    /// Version-parent name sent with the commit, when the origin knew it.
+    pub ver_parent: Option<String>,
+}
+
+impl PushRequest {
+    pub fn run(&self, repo: &Repo) -> Result<PushReport> {
+        let Some(tiered) = repo.store.as_tiered() else {
+            bail!("no remote configured (run `mgit remote set <url>` first)");
+        };
+        let remote = tiered.remote();
+        let node = repo.graph.node_by_name(&self.node)?;
+        let sm = node.stored.as_ref().ok_or_else(|| {
+            anyhow!("node `{}` has no stored checkpoint to push", self.node)
+        })?;
+
+        // Full object closure: params plus transitive delta parents.
+        let mut closure: Vec<ObjectId> = Vec::new();
+        let mut seen: HashSet<ObjectId> = HashSet::new();
+        for (_, id) in &sm.params {
+            let mut cursor = Some(*id);
+            while let Some(id) = cursor {
+                if !seen.insert(id) {
+                    break;
+                }
+                closure.push(id);
+                cursor = repo.store.object_meta(&id)?.parent;
+            }
+        }
+        // Reverse order pushes each chain's base before its deltas.
+        let mut pushed = 0usize;
+        let mut bytes = 0u64;
+        let mut already = 0usize;
+        for id in closure.iter().rev() {
+            let payload = repo.store.get(id)?;
+            let new = remote
+                .put_remote(*id, &payload)
+                .map_err(|e| anyhow::Error::new(e).context(format!("pushing object {}", id.short())))?;
+            if new {
+                pushed += 1;
+                bytes += payload.len() as u64;
+            } else {
+                already += 1;
+            }
+        }
+
+        // Commit on the origin. Carry the local version parent when we
+        // have one; if the origin does not know that node (400), commit
+        // without lineage rather than fail the push.
+        let base_op = Json::obj()
+            .set("name", node.name.as_str())
+            .set("model_type", node.model_type.as_str())
+            .set("stored", sm.to_json())
+            .set("metadata", node.metadata.clone());
+        let ver_parent = match node.ver_parents.first() {
+            Some(&idx) => Some(repo.graph.name_of(idx)?),
+            None => None,
+        };
+        let (outcome, sent_parent) = match &ver_parent {
+            Some(vname) => {
+                let op = base_op.clone().set("ver_parent", vname.as_str());
+                match remote.commit(&op) {
+                    Ok(o) => (o, Some(vname.clone())),
+                    Err(RemoteError::Status { status: 400, .. }) => {
+                        (remote.commit(&base_op).map_err(anyhow::Error::new)?, None)
+                    }
+                    Err(e) => return Err(anyhow::Error::new(e)),
+                }
+            }
+            None => (remote.commit(&base_op).map_err(anyhow::Error::new)?, None),
+        };
+        Ok(PushReport {
+            node: self.node.clone(),
+            objects_pushed: pushed,
+            bytes_pushed: bytes,
+            already_remote: already,
+            committed: outcome == CommitOutcome::Created,
+            ver_parent: sent_parent,
+        })
+    }
+}
+
+impl Report for PushReport {
+    fn to_json(&self) -> Json {
+        Json::obj()
+            .set("node", self.node.as_str())
+            .set("objects_pushed", self.objects_pushed)
+            .set("bytes_pushed", self.bytes_pushed)
+            .set("already_remote", self.already_remote)
+            .set("committed", self.committed)
+            .set(
+                "ver_parent",
+                self.ver_parent
+                    .as_deref()
+                    .map(Json::from)
+                    .unwrap_or(Json::Null),
+            )
+    }
+}

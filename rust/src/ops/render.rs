@@ -11,9 +11,10 @@ use crate::util::{human_bytes, human_secs};
 
 use super::exec::{AutoInsertReport, BuildReport, CascadeReport, TestReport};
 use super::integrity::{FsckReport, GcReport, VerifyPackReport};
-use super::maintain::{CompressReport, RepackReport};
+use super::maintain::{CompressReport, GraphPackReport, RepackReport};
 use super::model::{DiffReport, MergeReport};
 use super::query::{LogPageReport, LogReport, ShowReport, StatsReport};
+use super::remote::{FetchReport, PushReport, RemoteGetReport, RemoteSetReport};
 use super::repo::InitReport;
 use super::serve::ServeReport;
 use super::synth::SynthGraphReport;
@@ -187,6 +188,22 @@ impl fmt::Display for StatsReport {
         for (label, n) in &self.depth_buckets {
             lines.push(format!("  depth {label:<9} {n}"));
         }
+        if let Some(t) = &self.tier {
+            let budget = t
+                .hot_budget
+                .map(human_bytes)
+                .unwrap_or_else(|| "unbounded".to_string());
+            lines.push(format!(
+                "remote tier:    {} (hot budget {}, prefetch {})",
+                t.url,
+                budget,
+                if t.prefetch { "on" } else { "off" }
+            ));
+            lines.push(format!(
+                "  evictable fills resident: {}",
+                human_bytes(t.fill_resident_bytes)
+            ));
+        }
         join(f, &lines)
     }
 }
@@ -281,6 +298,100 @@ impl fmt::Display for CompressReport {
             self.ratio(),
             self.swept,
             human_secs(self.elapsed_secs)
+        )
+    }
+}
+
+impl fmt::Display for GraphPackReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.already_binary {
+            return write!(
+                f,
+                "graph already binary: {} nodes / {} prov + {} ver edges in {} ({})",
+                self.nodes,
+                self.prov_edges,
+                self.ver_edges,
+                self.path,
+                human_bytes(self.bytes)
+            );
+        }
+        write!(
+            f,
+            "packed graph: {} nodes / {} prov + {} ver edges -> {} ({}) in {}",
+            self.nodes,
+            self.prov_edges,
+            self.ver_edges,
+            self.path,
+            human_bytes(self.bytes),
+            human_secs(self.elapsed_secs)
+        )
+    }
+}
+
+impl fmt::Display for RemoteSetReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "remote origin set to {} ({})", self.url, self.path)
+    }
+}
+
+impl fmt::Display for RemoteGetReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let Some(url) = &self.url else {
+            return write!(f, "no remote configured");
+        };
+        let budget = self
+            .hot_bytes
+            .map(human_bytes)
+            .unwrap_or_else(|| "unbounded".to_string());
+        write!(
+            f,
+            "remote: {url} (hot budget {budget}, prefetch {}, auth {})",
+            if self.prefetch { "on" } else { "off" },
+            if self.auth { "token" } else { "none" }
+        )
+    }
+}
+
+impl fmt::Display for FetchReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut lines = vec![format!(
+            "fetched {}: {} objects ({}) pulled, {} already hot, across {} params",
+            self.node,
+            self.objects_fetched,
+            human_bytes(self.bytes_fetched),
+            self.already_hot,
+            self.params
+        )];
+        if self.created_node {
+            lines.push(format!(
+                "  node `{}` created locally from origin metadata",
+                self.node
+            ));
+        }
+        join(f, &lines)
+    }
+}
+
+impl fmt::Display for PushReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let commit = if self.committed {
+            "committed on origin"
+        } else {
+            "origin already had the node"
+        };
+        let lineage = match &self.ver_parent {
+            Some(p) => format!(" (version of `{p}`)"),
+            None => String::new(),
+        };
+        write!(
+            f,
+            "pushed {}: {} objects ({}) uploaded, {} already on origin; {}{}",
+            self.node,
+            self.objects_pushed,
+            human_bytes(self.bytes_pushed),
+            self.already_remote,
+            commit,
+            lineage
         )
     }
 }

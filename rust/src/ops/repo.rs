@@ -65,7 +65,12 @@ impl Repo {
     }
 
     /// De-serialize at the start of an operation (paper §3.1). The store
-    /// is pack-capable: loose staging first, then pack indexes.
+    /// is pack-capable: loose staging first, then pack indexes. When
+    /// `.mgit/remote` is configured (`mgit remote set <url>`), the store
+    /// opens *tiered* instead: same local layout as the hot tier, with
+    /// misses read through to the configured origin
+    /// (see `store::tiered`). Opening never dials the origin, so a repo
+    /// whose origin is down still serves everything it holds hot.
     ///
     /// If a writable server left a write-ahead log behind (crash, or
     /// simply commits since the last checkpoint), its durable prefix is
@@ -76,8 +81,13 @@ impl Repo {
     /// truncates it, after folding it into `graph.json`. A torn tail is
     /// warned about here and diagnosed as a problem by `mgit fsck`.
     pub fn open(root: &Path) -> Result<Repo> {
-        let mut graph = GraphStore::open(&Self::mgit_dir(root))?;
-        let store = Store::open_packed(&Self::mgit_dir(root).join("objects"))?;
+        let mgit = Self::mgit_dir(root);
+        let mut graph = GraphStore::open(&mgit)?;
+        let objects = mgit.join("objects");
+        let store = match crate::store::remote::RemoteConfig::load(&mgit)? {
+            Some(cfg) => Store::open_tiered(&objects, &cfg)?,
+            None => Store::open_packed(&objects)?,
+        };
         let wal_file = wal::wal_path(root);
         if wal_file.exists() {
             let scan = wal::scan(&wal_file)?;

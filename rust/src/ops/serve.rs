@@ -23,7 +23,10 @@
 //! |                           | order), delta chains resolved through the shared |
 //! |                           | cache — bit-exact with [`crate::delta::load`];   |
 //! |                           | honors single-range `Range: bytes=…` (206/416)   |
-//! | `GET /object/<hex-id>`    | the stored object's exact bytes (`Store::get`)   |
+//! | `GET /object/<hex-id>`    | the stored object's exact bytes (`Store::get`);  |
+//! |                           | honors single-range `Range: bytes=…` (206/416)   |
+//! | `HEAD /object/<hex-id>`   | existence + `Content-Length`, no body — what the |
+//! |                           | remote tier's `contains` probe rides on          |
 //! | `GET /metrics`            | live metrics: per-server request counters and    |
 //! |                           | latency histograms plus the process registry     |
 //! |                           | (JSON; `?format=prom` for Prometheus text)       |
@@ -38,9 +41,11 @@
 //! `checkpoint` treat the whole remaining path as the name, and any
 //! segment may percent-encode reserved characters (`%2F`). Method
 //! dispatch is route-aware: a known route answers `405` with its own
-//! `Allow` header (`GET, POST` on `/object/…` and `/checkpoint/…`,
-//! `POST` on `/commit` and `/admin/repack`, `GET` elsewhere); unknown
-//! routes are `404` for every method. No external HTTP crate, matching
+//! `Allow` header (`GET, HEAD, POST` on `/object/…`, `GET, POST` on
+//! `/checkpoint/…`, `POST` on `/commit` and `/admin/repack`, `GET`
+//! elsewhere); unknown routes are `404` for every method. A `HEAD`
+//! response carries the full head (status, `Content-Length`) and no
+//! body. No external HTTP crate, matching
 //! the repo's no-new-deps style.
 //!
 //! ## Write tier
@@ -801,6 +806,9 @@ struct ResponseWriter<'a> {
     endpoint: &'static str,
     start: Instant,
     recorded: bool,
+    /// `HEAD` request: write every head (status, `Content-Length`,
+    /// extra headers) exactly as `GET` would, but no body bytes.
+    head_only: bool,
 }
 
 impl ResponseWriter<'_> {
@@ -864,7 +872,15 @@ impl ResponseWriter<'_> {
     ) -> Result<()> {
         let text = body.to_string_pretty();
         self.write_head_with(code, "application/json", text.len(), extra)?;
-        self.stream.write_all(text.as_bytes())?;
+        self.write_body(text.as_bytes())
+    }
+
+    /// Write a response body — skipped (head already advertised the
+    /// length) on a `HEAD` request.
+    fn write_body(&mut self, bytes: &[u8]) -> Result<()> {
+        if !self.head_only {
+            self.stream.write_all(bytes)?;
+        }
         self.stream.flush()?;
         Ok(())
     }
@@ -983,6 +999,7 @@ fn handle_http(state: &ServeState, mut stream: TcpStream) -> Result<()> {
             endpoint: "other",
             start: Instant::now(),
             recorded: false,
+            head_only: method == "HEAD",
         };
         // Framing errors close the connection: we can't locate the next
         // request boundary without a trustworthy body length.
@@ -1102,7 +1119,8 @@ impl Route<'_> {
     /// The `Allow:` header this route advertises on a 405.
     fn allow(&self) -> &'static str {
         match self {
-            Route::Checkpoint(_) | Route::Object(_) => "GET, POST",
+            Route::Object(_) => "GET, HEAD, POST",
+            Route::Checkpoint(_) => "GET, POST",
             Route::Commit | Route::AdminRepack => "POST",
             _ => "GET",
         }
@@ -1110,7 +1128,8 @@ impl Route<'_> {
 
     fn allows(&self, method: &str) -> bool {
         match self {
-            Route::Checkpoint(_) | Route::Object(_) => method == "GET" || method == "POST",
+            Route::Object(_) => method == "GET" || method == "HEAD" || method == "POST",
+            Route::Checkpoint(_) => method == "GET" || method == "POST",
             Route::Commit | Route::AdminRepack => method == "POST",
             _ => method == "GET",
         }
@@ -1242,7 +1261,7 @@ fn dispatch(state: &ServeState, rw: &mut ResponseWriter, req: &Request) -> Resul
         Route::Checkpoint(rest) => {
             serve_checkpoint(state, &snap, rw, &percent_decode(rest), req.range)
         }
-        Route::Object(hex) => serve_object(&snap, rw, hex),
+        Route::Object(hex) => serve_object(&snap, rw, hex, req.range),
         Route::Diff(rest) => {
             let segs: Vec<&str> = rest.split('/').collect();
             if segs.len() != 2 {
@@ -1419,8 +1438,16 @@ fn serve_checkpoint(
 }
 
 /// Serve one stored object's exact bytes — byte-identical to
-/// `Store::get`, whichever pack or loose file holds it.
-fn serve_object(snap: &Snapshot, rw: &mut ResponseWriter, hex: &str) -> Result<()> {
+/// `Store::get`, whichever pack or loose file holds it. `HEAD` answers
+/// the same heads with no body (the remote tier's cheap existence
+/// probe), and a single `Range: bytes=…` header yields a 206 window
+/// (416 when unsatisfiable) — resumable cold fills ride on this.
+fn serve_object(
+    snap: &Snapshot,
+    rw: &mut ResponseWriter,
+    hex: &str,
+    range: Option<&str>,
+) -> Result<()> {
     let Ok(id) = ObjectId::from_hex(hex) else {
         return rw.respond_json(400, &err_json("object id must be 64 hex chars"));
     };
@@ -1428,10 +1455,36 @@ fn serve_object(snap: &Snapshot, rw: &mut ResponseWriter, hex: &str) -> Result<(
         return rw.respond_json(404, &err_json(&format!("object {hex} not found")));
     }
     let bytes = snap.store.get(&id)?;
-    rw.write_head(200, "application/octet-stream", bytes.len())?;
-    rw.stream.write_all(&bytes)?;
-    rw.stream.flush()?;
-    Ok(())
+    if let Some(header) = range {
+        match parse_range(header, bytes.len()) {
+            RangeParse::Ignore => {}
+            RangeParse::Unsatisfiable => {
+                let content_range = format!("bytes */{}", bytes.len());
+                return rw.respond_json_with(
+                    416,
+                    &err_json("range not satisfiable"),
+                    &[("Content-Range", content_range.as_str())],
+                );
+            }
+            RangeParse::Bytes(start, end) => {
+                let content_range = format!("bytes {}-{}/{}", start, end - 1, bytes.len());
+                rw.write_head_with(
+                    206,
+                    "application/octet-stream",
+                    end - start,
+                    &[("Content-Range", content_range.as_str()), ("Accept-Ranges", "bytes")],
+                )?;
+                return rw.write_body(&bytes[start..end]);
+            }
+        }
+    }
+    rw.write_head_with(
+        200,
+        "application/octet-stream",
+        bytes.len(),
+        &[("Accept-Ranges", "bytes")],
+    )?;
+    rw.write_body(&bytes)
 }
 
 // ---------------------------------------------------------------------------

@@ -20,7 +20,14 @@
 //!   across packs are value-identical by content addressing); writes
 //!   always land loose (packs are produced by [`pack::repack()`],
 //!   incrementally by default, so a long-lived store accumulates
-//!   generations of packs).
+//!   generations of packs);
+//! * [`remote::RemoteStore`] — a remote origin (`mgit serve`) reached
+//!   over HTTP/1.1 with a dependency-free blocking client;
+//! * [`tiered::TieredStore`] — a hot local [`PackedStore`] layered over
+//!   a cold [`remote::RemoteStore`], with read-through fill, a byte
+//!   budget with LRU eviction of fills, negative-lookup caching and
+//!   delta-parent prefetch. Selected by [`Store::open_tiered`] when
+//!   `.mgit/remote` is configured.
 //!
 //! The [`Store`] façade wraps one backend behind a stable API so the
 //! `lineage`, `delta`, `checkpoint` and `workloads` layers are
@@ -52,6 +59,8 @@
 
 pub mod format;
 pub mod pack;
+pub mod remote;
+pub mod tiered;
 pub mod wal;
 
 use std::collections::{HashMap, HashSet};
@@ -474,6 +483,8 @@ fn _assert_store_types_send_sync() {
     check::<MemStore>();
     check::<DiskStore>();
     check::<PackedStore>();
+    check::<remote::RemoteStore>();
+    check::<tiered::TieredStore>();
     check::<Store>();
 }
 
@@ -564,6 +575,7 @@ enum BackendImpl {
     Mem(MemStore),
     Disk(DiskStore),
     Packed(PackedStore),
+    Tiered(tiered::TieredStore),
 }
 
 /// Backend-agnostic handle used by all higher layers.
@@ -608,6 +620,17 @@ impl Store {
         })
     }
 
+    /// Open (creating if needed) a tiered store: the hot tier is the
+    /// ordinary pack-capable layout at `dir`, misses read through to
+    /// `cfg`'s origin (see [`tiered::TieredStore`]). Chosen by
+    /// `Repo::open` when `.mgit/remote` exists.
+    pub fn open_tiered(dir: &Path, cfg: &remote::RemoteConfig) -> Result<Store> {
+        Ok(Store {
+            backend: BackendImpl::Tiered(tiered::TieredStore::open(dir, cfg)?),
+            stats: StoreStats::default(),
+        })
+    }
+
     /// Volatile in-memory store (tests, benches).
     pub fn in_memory() -> Store {
         Store { backend: BackendImpl::Mem(MemStore::new()), stats: StoreStats::default() }
@@ -618,12 +641,17 @@ impl Store {
             BackendImpl::Mem(s) => s,
             BackendImpl::Disk(s) => s,
             BackendImpl::Packed(s) => s,
+            BackendImpl::Tiered(s) => s,
         }
     }
 
+    /// The pack-capable local store, if this backend has one. For a
+    /// tiered store this is the *hot* tier, so pack-level operations
+    /// (stats, repack, fsck) work unchanged against tiered repos.
     pub fn as_packed(&self) -> Option<&PackedStore> {
         match &self.backend {
             BackendImpl::Packed(s) => Some(s),
+            BackendImpl::Tiered(s) => Some(s.hot()),
             _ => None,
         }
     }
@@ -631,9 +659,19 @@ impl Store {
     pub(crate) fn as_packed_mut(&mut self) -> Option<&mut PackedStore> {
         match &mut self.backend {
             BackendImpl::Packed(s) => Some(s),
+            BackendImpl::Tiered(s) => Some(s.hot_mut()),
             _ => None,
         }
     }
+
+    /// The tiered backend, if this store reads through a remote origin.
+    pub fn as_tiered(&self) -> Option<&tiered::TieredStore> {
+        match &self.backend {
+            BackendImpl::Tiered(s) => Some(s),
+            _ => None,
+        }
+    }
+
 
     /// Store `bytes` under `id`. Returns `true` if newly written, `false`
     /// on a dedup hit (content already present).
@@ -692,7 +730,12 @@ impl Store {
     /// what makes repack marking, `fsck`'s orphan scan and the
     /// chain-depth statistics metadata-walks instead of store scans.
     pub fn object_meta(&self, id: &ObjectId) -> Result<format::ObjectMeta> {
-        if let BackendImpl::Packed(ps) = &self.backend {
+        let packed = match &self.backend {
+            BackendImpl::Packed(ps) => Some(ps),
+            BackendImpl::Tiered(ts) => Some(ts.hot()),
+            _ => None,
+        };
+        if let Some(ps) = packed {
             if !ps.loose.contains(id) {
                 if let Some(m) = ps.indexed_meta(id) {
                     return Ok(m);

@@ -1,0 +1,724 @@
+//! Remote object backend: [`ObjectStore`] over the `mgit serve` wire.
+//!
+//! A [`RemoteStore`] speaks to an *origin* — another mgit process running
+//! `mgit serve` — re-using the existing HTTP/1.1 surface instead of
+//! inventing a transfer protocol:
+//!
+//! | method                  | used for                                  |
+//! |-------------------------|-------------------------------------------|
+//! | `GET  /object/<hex-id>` | [`RemoteStore::fetch`] (exact bytes)      |
+//! | `HEAD /object/<hex-id>` | [`RemoteStore::contains_remote`]          |
+//! | `POST /object/<hex-id>` | [`RemoteStore::put_remote`] (`--writable`)|
+//! | `POST /commit`          | [`RemoteStore::commit`] (`--writable`)    |
+//! | `GET  /show/<node>`     | [`RemoteStore::fetch_show`] (fetch seam)  |
+//! | `GET  /healthz`         | [`RemoteStore::healthz`]                  |
+//!
+//! The client is dependency-free and blocking: std [`TcpStream`], a
+//! keep-alive connection pool (dead pooled connections are replaced
+//! transparently — an origin idle-closing a socket never surfaces as an
+//! error), per-request read/write timeouts, and bounded retry with
+//! exponential backoff + jitter. `429 Too Many Requests` answers wait a
+//! backoff step like a transport failure would, so a rate-limited writer
+//! spreads its attempts across the origin's token-refill window instead
+//! of burning its whole retry budget in microseconds.
+//!
+//! Failures surface as typed [`RemoteError`]s (inspect with
+//! `err.downcast_ref::<RemoteError>()` through `anyhow`): a read-only
+//! origin's `403` carries the server's own explanation, `401`/`404`/
+//! `429` and transport exhaustion are distinct variants — callers such
+//! as [`super::tiered::TieredStore`] key caching decisions off them
+//! (only a definitive `NotFound` may enter the negative cache).
+//!
+//! A `RemoteStore` holds no local state besides its socket pool; the
+//! hot/cold layering, read-through fill and eviction policy live in
+//! [`super::tiered`]. Configuration (`.mgit/remote`) is a tiny JSON file
+//! managed by [`RemoteConfig`] and the `mgit remote set/get` commands.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::{ObjectId, ObjectStore};
+use crate::util::json::{self, Json};
+
+// Wire telemetry, served by `GET /metrics` on whichever process embeds
+// this client (a tiered repo may itself be an origin for others).
+static OBS_REQUESTS: crate::obs::LazyCounter =
+    crate::obs::LazyCounter::new("remote.requests");
+static OBS_RETRIES: crate::obs::LazyCounter =
+    crate::obs::LazyCounter::new("remote.retries");
+static OBS_FETCH_BYTES: crate::obs::LazyCounter =
+    crate::obs::LazyCounter::new("remote.fetch_bytes");
+static OBS_FETCH_MICROS: crate::obs::LazyHistogram =
+    crate::obs::LazyHistogram::new("remote.fetch_micros");
+
+/// Max idle keep-alive sockets retained per origin.
+const MAX_IDLE_CONNS: usize = 4;
+
+/// Contents of `.mgit/remote`: where this repository reads through to.
+#[derive(Debug, Clone)]
+pub struct RemoteConfig {
+    /// Origin endpoint, `http://host:port` (the dependency-free client
+    /// speaks plain HTTP/1.1 only).
+    pub url: String,
+    /// Bearer token forwarded on every request (origins started with
+    /// `--auth-token` require it for writes).
+    pub auth_token: Option<String>,
+    /// Byte budget for evictable read-through fills in the hot tier;
+    /// `None` = unbounded (every fill stays until repack/GC).
+    pub hot_bytes: Option<u64>,
+    /// Whether a cold fill also pulls the object's delta-parent chain
+    /// (see `TieredStore::prefetch_parents`). Defaults on.
+    pub prefetch: bool,
+}
+
+impl RemoteConfig {
+    pub fn new(url: &str) -> RemoteConfig {
+        RemoteConfig {
+            url: url.to_string(),
+            auth_token: None,
+            hot_bytes: None,
+            prefetch: true,
+        }
+    }
+
+    /// `.mgit/remote` under the given `.mgit` directory.
+    pub fn path(mgit_dir: &Path) -> PathBuf {
+        mgit_dir.join("remote")
+    }
+
+    /// Load the remote config if one is present (`Ok(None)` = no remote
+    /// configured; the repo opens as a plain packed store).
+    pub fn load(mgit_dir: &Path) -> Result<Option<RemoteConfig>> {
+        let path = Self::path(mgit_dir);
+        if !path.exists() {
+            return Ok(None);
+        }
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = json::parse(&text)
+            .with_context(|| format!("parsing {}", path.display()))?;
+        Ok(Some(RemoteConfig {
+            url: j.req_str("url")?.to_string(),
+            auth_token: j
+                .get("auth_token")
+                .and_then(|v| v.as_str())
+                .map(String::from),
+            hot_bytes: j.get("hot_bytes").and_then(|v| v.as_f64()).map(|n| n as u64),
+            prefetch: j.get("prefetch").and_then(|v| v.as_bool()).unwrap_or(true),
+        }))
+    }
+
+    /// Persist atomically (write-then-rename, like every other `.mgit`
+    /// metadata file).
+    pub fn save(&self, mgit_dir: &Path) -> Result<()> {
+        let j = Json::obj()
+            .set("url", self.url.as_str())
+            .set(
+                "auth_token",
+                match &self.auth_token {
+                    Some(t) => Json::from(t.as_str()),
+                    None => Json::Null,
+                },
+            )
+            .set(
+                "hot_bytes",
+                match self.hot_bytes {
+                    Some(n) => Json::from(n),
+                    None => Json::Null,
+                },
+            )
+            .set("prefetch", self.prefetch);
+        let path = Self::path(mgit_dir);
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, j.to_string_pretty())
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)?;
+        Ok(())
+    }
+}
+
+/// Typed failure modes of the remote client. Reaches callers wrapped in
+/// `anyhow::Error`; recover the variant with `downcast_ref`.
+#[derive(Debug)]
+pub enum RemoteError {
+    /// The origin refused a write with `403` — it was started without
+    /// `--writable`. `server` is the origin's own error message.
+    ReadOnly { url: String, server: String },
+    /// `401`: the origin requires a Bearer token this client does not
+    /// have (or has wrong).
+    Unauthorized { url: String },
+    /// The retry budget ran out while the origin kept answering `429`;
+    /// every attempt honored a backoff delay first.
+    RateLimited { url: String, attempts: u32 },
+    /// Definitive `404`: the origin does not hold this object/node.
+    NotFound { what: String, url: String },
+    /// Transport failure (dial, timeout, connection reset) on every
+    /// attempt — the origin is down or unreachable.
+    Unreachable { url: String, attempts: u32, detail: String },
+    /// Any other HTTP status.
+    Status { url: String, status: u16, server: String },
+}
+
+impl std::fmt::Display for RemoteError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RemoteError::ReadOnly { url, server } => {
+                write!(f, "origin {url} refused the write (403 read-only): {server}")
+            }
+            RemoteError::Unauthorized { url } => {
+                write!(
+                    f,
+                    "origin {url} requires Bearer auth (401); configure \
+                     `mgit remote set {url} --auth-token <token>`"
+                )
+            }
+            RemoteError::RateLimited { url, attempts } => {
+                write!(
+                    f,
+                    "origin {url} still rate-limiting (429) after {attempts} \
+                     backed-off attempts"
+                )
+            }
+            RemoteError::NotFound { what, url } => {
+                write!(f, "{what} not found on origin {url} (404)")
+            }
+            RemoteError::Unreachable { url, attempts, detail } => {
+                write!(f, "origin {url} unreachable after {attempts} attempts: {detail}")
+            }
+            RemoteError::Status { url, status, server } => {
+                write!(f, "origin {url} answered HTTP {status}: {server}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RemoteError {}
+
+/// One parsed origin response.
+struct Response {
+    status: u16,
+    body: Vec<u8>,
+    /// Origin asked to close the connection (don't pool it).
+    close: bool,
+}
+
+/// Whether a node committed by [`RemoteStore::commit`] was new.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommitOutcome {
+    Created,
+    /// The origin already has a node of that name (`409`) — idempotent
+    /// pushes treat this as success.
+    AlreadyExists,
+}
+
+/// Parse `http://host:port` into a dialable address.
+fn parse_endpoint(url: &str) -> Result<(String, u16)> {
+    let rest = url
+        .strip_prefix("http://")
+        .ok_or_else(|| anyhow!("remote url must start with http:// (got `{url}`)"))?;
+    let rest = rest.trim_end_matches('/');
+    if rest.contains('/') {
+        bail!("remote url must be just http://host:port, no path (got `{url}`)");
+    }
+    let (host, port) = match rest.rsplit_once(':') {
+        Some((h, p)) => (
+            h.to_string(),
+            p.parse::<u16>()
+                .map_err(|_| anyhow!("bad port in remote url `{url}`"))?,
+        ),
+        None => (rest.to_string(), 80),
+    };
+    if host.is_empty() {
+        bail!("empty host in remote url `{url}`");
+    }
+    Ok((host, port))
+}
+
+/// Percent-encode one path segment (node names may hold spaces etc.).
+fn encode_segment(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for b in s.bytes() {
+        match b {
+            b'a'..=b'z' | b'A'..=b'Z' | b'0'..=b'9' | b'-' | b'_' | b'.' | b'~' => {
+                out.push(b as char)
+            }
+            _ => out.push_str(&format!("%{b:02X}")),
+        }
+    }
+    out
+}
+
+/// Backoff delay before retry `attempt` (1-based): exponential base with
+/// half-range jitter, capped at ~2s. Jitter comes from a splitmix-style
+/// atomic sequence — good enough to de-synchronize a fleet without an
+/// RNG dependency.
+fn backoff_delay(attempt: u32) -> Duration {
+    static SEQ: AtomicU64 = AtomicU64::new(0x9E37_79B9_7F4A_7C15);
+    let base_ms = 50u64.saturating_mul(1u64 << attempt.min(5));
+    let mut x = SEQ.fetch_add(0x9E37_79B9_7F4A_7C15, Ordering::Relaxed);
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    let jitter_ms = x % (base_ms / 2 + 1);
+    Duration::from_millis(base_ms / 2 + jitter_ms)
+}
+
+/// Best human-readable message from an origin error body (the serve
+/// tier answers errors as `{"error": "..."}`).
+fn body_message(body: &[u8]) -> String {
+    if let Ok(text) = std::str::from_utf8(body) {
+        if let Ok(j) = json::parse(text) {
+            if let Some(msg) = j.get("error").and_then(|v| v.as_str()) {
+                return msg.to_string();
+            }
+        }
+        let trimmed = text.trim();
+        if !trimmed.is_empty() {
+            return trimmed.chars().take(200).collect();
+        }
+    }
+    format!("{} body bytes", body.len())
+}
+
+/// Blocking HTTP client for one origin, implementing [`ObjectStore`].
+///
+/// Reads ([`fetch`](RemoteStore::fetch)) work against any origin; writes
+/// need the origin started `--writable`. `list`/`stored_bytes` are
+/// unsupported — the wire has no enumeration endpoint, and the tiered
+/// layer answers both from the hot tier instead.
+pub struct RemoteStore {
+    url: String,
+    host: String,
+    port: u16,
+    auth: Option<String>,
+    timeout: Duration,
+    /// Retries *after* the first attempt; each waits a backoff first.
+    max_retries: u32,
+    /// Idle keep-alive connections. Buffered so response read-ahead
+    /// survives across requests on the same socket.
+    pool: Mutex<Vec<BufReader<TcpStream>>>,
+}
+
+impl RemoteStore {
+    /// Build a client for `cfg`. Validates the URL shape but does not
+    /// dial — opening a repo whose origin is down must still work for
+    /// hot-tier reads.
+    pub fn connect(cfg: &RemoteConfig) -> Result<RemoteStore> {
+        let (host, port) = parse_endpoint(&cfg.url)?;
+        Ok(RemoteStore {
+            url: cfg.url.trim_end_matches('/').to_string(),
+            host,
+            port,
+            auth: cfg.auth_token.clone(),
+            timeout: Duration::from_secs(10),
+            max_retries: 5,
+            pool: Mutex::new(Vec::new()),
+        })
+    }
+
+    pub fn url(&self) -> &str {
+        &self.url
+    }
+
+    /// Override the per-request timeout (tests, impatient tooling).
+    pub fn set_timeout(&mut self, t: Duration) {
+        self.timeout = t;
+    }
+
+    /// Override the retry budget (0 = single attempt).
+    pub fn set_max_retries(&mut self, n: u32) {
+        self.max_retries = n;
+    }
+
+    fn checkout(&self) -> Option<BufReader<TcpStream>> {
+        self.pool.lock().unwrap().pop()
+    }
+
+    fn checkin(&self, conn: BufReader<TcpStream>) {
+        let mut pool = self.pool.lock().unwrap();
+        if pool.len() < MAX_IDLE_CONNS {
+            pool.push(conn);
+        }
+    }
+
+    fn dial(&self) -> std::io::Result<TcpStream> {
+        let stream = TcpStream::connect((self.host.as_str(), self.port))?;
+        stream.set_read_timeout(Some(self.timeout))?;
+        stream.set_write_timeout(Some(self.timeout))?;
+        let _ = stream.set_nodelay(true);
+        Ok(stream)
+    }
+
+    /// One request/response over one connection.
+    fn exchange(
+        &self,
+        conn: &mut BufReader<TcpStream>,
+        method: &str,
+        path: &str,
+        body: Option<&[u8]>,
+    ) -> std::io::Result<Response> {
+        let mut head = format!(
+            "{method} {path} HTTP/1.1\r\nHost: {}:{}\r\nConnection: keep-alive\r\n",
+            self.host, self.port
+        );
+        if let Some(token) = &self.auth {
+            head.push_str(&format!("Authorization: Bearer {token}\r\n"));
+        }
+        if let Some(b) = body {
+            head.push_str(&format!(
+                "Content-Type: application/octet-stream\r\nContent-Length: {}\r\n",
+                b.len()
+            ));
+        }
+        head.push_str("\r\n");
+        let stream = conn.get_mut();
+        stream.write_all(head.as_bytes())?;
+        if let Some(b) = body {
+            stream.write_all(b)?;
+        }
+        stream.flush()?;
+        read_response(conn, method == "HEAD")
+    }
+
+    /// One attempt: prefer a pooled connection; a pooled socket failing
+    /// mid-exchange is routine (origin idle-close) and falls through to
+    /// one fresh dial without consuming the caller's retry budget.
+    fn attempt(&self, method: &str, path: &str, body: Option<&[u8]>) -> std::io::Result<Response> {
+        if let Some(mut conn) = self.checkout() {
+            OBS_REQUESTS.inc();
+            if let Ok(resp) = self.exchange(&mut conn, method, path, body) {
+                if !resp.close && !(method == "HEAD" && resp.status == 405) {
+                    self.checkin(conn);
+                }
+                return Ok(resp);
+            }
+        }
+        let mut conn = BufReader::new(self.dial()?);
+        OBS_REQUESTS.inc();
+        let resp = self.exchange(&mut conn, method, path, body)?;
+        if !resp.close && !(method == "HEAD" && resp.status == 405) {
+            // Exception: an origin predating HEAD support answers a HEAD
+            // with `405` *and* a JSON body we never read — its framing
+            // can't be trusted, so that connection is not pooled.
+            self.checkin(conn);
+        }
+        Ok(resp)
+    }
+
+    /// Issue a request with bounded retry. Transport errors and `429`
+    /// responses retry after [`backoff_delay`]; any other HTTP status is
+    /// returned to the caller for interpretation.
+    fn request(
+        &self,
+        method: &str,
+        path: &str,
+        body: Option<&[u8]>,
+    ) -> Result<Response, RemoteError> {
+        let start = Instant::now();
+        let mut rate_limited = false;
+        let mut detail = String::new();
+        for attempt in 0..=self.max_retries {
+            if attempt > 0 {
+                OBS_RETRIES.inc();
+                std::thread::sleep(backoff_delay(attempt));
+            }
+            match self.attempt(method, path, body) {
+                Ok(resp) if resp.status == 429 => {
+                    rate_limited = true;
+                    detail = body_message(&resp.body);
+                }
+                Ok(resp) => {
+                    OBS_FETCH_MICROS.observe(start.elapsed().as_micros() as u64);
+                    return Ok(resp);
+                }
+                Err(e) => {
+                    rate_limited = false;
+                    detail = e.to_string();
+                }
+            }
+        }
+        let attempts = self.max_retries + 1;
+        Err(if rate_limited {
+            RemoteError::RateLimited { url: self.url.clone(), attempts }
+        } else {
+            RemoteError::Unreachable { url: self.url.clone(), attempts, detail }
+        })
+    }
+
+    /// `GET /healthz`.
+    pub fn healthz(&self) -> Result<(), RemoteError> {
+        let resp = self.request("GET", "/healthz", None)?;
+        match resp.status {
+            200 => Ok(()),
+            s => Err(RemoteError::Status {
+                url: self.url.clone(),
+                status: s,
+                server: body_message(&resp.body),
+            }),
+        }
+    }
+
+    /// Fetch the exact stored bytes of `id` from the origin.
+    pub fn fetch(&self, id: &ObjectId) -> Result<Vec<u8>, RemoteError> {
+        let resp = self.request("GET", &format!("/object/{}", id.hex()), None)?;
+        match resp.status {
+            200 => {
+                OBS_FETCH_BYTES.add(resp.body.len() as u64);
+                Ok(resp.body)
+            }
+            404 => Err(RemoteError::NotFound {
+                what: format!("object {}", id.short()),
+                url: self.url.clone(),
+            }),
+            s => Err(RemoteError::Status {
+                url: self.url.clone(),
+                status: s,
+                server: body_message(&resp.body),
+            }),
+        }
+    }
+
+    /// Existence probe via `HEAD` (no payload transfer). Origins predating
+    /// HEAD support answer `405`; fall back to a full GET for those.
+    pub fn contains_remote(&self, id: &ObjectId) -> Result<bool, RemoteError> {
+        let resp = self.request("HEAD", &format!("/object/{}", id.hex()), None)?;
+        match resp.status {
+            200 => Ok(true),
+            404 => Ok(false),
+            405 => match self.fetch(id) {
+                Ok(_) => Ok(true),
+                Err(RemoteError::NotFound { .. }) => Ok(false),
+                Err(e) => Err(e),
+            },
+            s => Err(RemoteError::Status {
+                url: self.url.clone(),
+                status: s,
+                server: body_message(&resp.body),
+            }),
+        }
+    }
+
+    /// Upload `bytes` as object `id` (`POST /object/<hex>`, origin must
+    /// be `--writable`). `Ok(true)` = newly written, `Ok(false)` = the
+    /// origin already had it (dedup).
+    pub fn put_remote(&self, id: ObjectId, bytes: &[u8]) -> Result<bool, RemoteError> {
+        let resp = self.request("POST", &format!("/object/{}", id.hex()), Some(bytes))?;
+        match resp.status {
+            200 => {
+                let new = std::str::from_utf8(&resp.body)
+                    .ok()
+                    .and_then(|t| json::parse(t).ok())
+                    .and_then(|j| j.get("new").and_then(|v| v.as_bool()))
+                    .unwrap_or(true);
+                Ok(new)
+            }
+            403 => Err(RemoteError::ReadOnly {
+                url: self.url.clone(),
+                server: body_message(&resp.body),
+            }),
+            401 => Err(RemoteError::Unauthorized { url: self.url.clone() }),
+            s => Err(RemoteError::Status {
+                url: self.url.clone(),
+                status: s,
+                server: body_message(&resp.body),
+            }),
+        }
+    }
+
+    /// Commit a node on the origin (`POST /commit`, JSON op body). A
+    /// `409` (name already present) is reported as
+    /// [`CommitOutcome::AlreadyExists`], not an error — pushes are
+    /// idempotent.
+    pub fn commit(&self, op: &Json) -> Result<CommitOutcome, RemoteError> {
+        let body = op.to_string_compact();
+        let resp = self.request("POST", "/commit", Some(body.as_bytes()))?;
+        match resp.status {
+            200 => Ok(CommitOutcome::Created),
+            409 => Ok(CommitOutcome::AlreadyExists),
+            403 => Err(RemoteError::ReadOnly {
+                url: self.url.clone(),
+                server: body_message(&resp.body),
+            }),
+            401 => Err(RemoteError::Unauthorized { url: self.url.clone() }),
+            s => Err(RemoteError::Status {
+                url: self.url.clone(),
+                status: s,
+                server: body_message(&resp.body),
+            }),
+        }
+    }
+
+    /// `GET /show/<node>`: the origin's node report (model type + stored
+    /// parameter ids) — how `mgit fetch` learns what to pin when the
+    /// local graph has never seen the node.
+    pub fn fetch_show(&self, node: &str) -> Result<Json, RemoteError> {
+        let resp = self.request("GET", &format!("/show/{}", encode_segment(node)), None)?;
+        match resp.status {
+            200 => std::str::from_utf8(&resp.body)
+                .map_err(|_| ())
+                .and_then(|t| json::parse(t).map_err(|_| ()))
+                .map_err(|_| RemoteError::Status {
+                    url: self.url.clone(),
+                    status: 200,
+                    server: "unparseable /show body".to_string(),
+                }),
+            404 => Err(RemoteError::NotFound {
+                what: format!("node `{node}`"),
+                url: self.url.clone(),
+            }),
+            s => Err(RemoteError::Status {
+                url: self.url.clone(),
+                status: s,
+                server: body_message(&resp.body),
+            }),
+        }
+    }
+}
+
+/// Parse one HTTP/1.1 response off `conn`. `head_only` skips the body
+/// (HEAD responses advertise Content-Length without sending bytes).
+fn read_response(
+    conn: &mut BufReader<TcpStream>,
+    head_only: bool,
+) -> std::io::Result<Response> {
+    use std::io::{Error, ErrorKind};
+    let mut line = String::new();
+    if conn.read_line(&mut line)? == 0 {
+        return Err(Error::new(
+            ErrorKind::UnexpectedEof,
+            "connection closed before status line",
+        ));
+    }
+    let status: u16 = line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|code| code.parse().ok())
+        .ok_or_else(|| {
+            Error::new(ErrorKind::InvalidData, format!("bad status line `{}`", line.trim()))
+        })?;
+    let mut content_len = 0usize;
+    let mut close = false;
+    loop {
+        let mut header = String::new();
+        if conn.read_line(&mut header)? == 0 {
+            return Err(Error::new(ErrorKind::UnexpectedEof, "connection closed in headers"));
+        }
+        if header == "\r\n" || header == "\n" {
+            break;
+        }
+        let lower = header.to_ascii_lowercase();
+        if let Some(v) = lower.strip_prefix("content-length:") {
+            content_len = v
+                .trim()
+                .parse()
+                .map_err(|_| Error::new(ErrorKind::InvalidData, "bad Content-Length"))?;
+        } else if let Some(v) = lower.strip_prefix("connection:") {
+            close = v.trim() == "close";
+        }
+    }
+    let mut body = Vec::new();
+    if !head_only && content_len > 0 {
+        body = vec![0u8; content_len];
+        conn.read_exact(&mut body)?;
+    }
+    Ok(Response { status, body, close })
+}
+
+impl ObjectStore for RemoteStore {
+    fn get(&self, id: &ObjectId) -> Result<Vec<u8>> {
+        self.fetch(id).map_err(anyhow::Error::new)
+    }
+
+    fn put(&self, id: ObjectId, bytes: &[u8]) -> Result<bool> {
+        self.put_remote(id, bytes).map_err(anyhow::Error::new)
+    }
+
+    fn contains(&self, id: &ObjectId) -> bool {
+        self.contains_remote(id).unwrap_or(false)
+    }
+
+    fn list(&self) -> Result<Vec<ObjectId>> {
+        bail!(
+            "remote store {} does not enumerate objects (no wire endpoint); \
+             list the hot tier instead",
+            self.url
+        )
+    }
+
+    fn remove(&self, _id: &ObjectId) -> Result<bool> {
+        // Origins never delete over the wire; nothing mutable here.
+        Ok(false)
+    }
+
+    fn stored_bytes(&self) -> Result<u64> {
+        bail!("remote store {} does not report stored bytes", self.url)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn endpoint_parsing() {
+        assert_eq!(
+            parse_endpoint("http://127.0.0.1:7070").unwrap(),
+            ("127.0.0.1".to_string(), 7070)
+        );
+        assert_eq!(
+            parse_endpoint("http://origin.internal:80/").unwrap(),
+            ("origin.internal".to_string(), 80)
+        );
+        assert_eq!(parse_endpoint("http://host").unwrap().1, 80);
+        assert!(parse_endpoint("https://host:1").is_err());
+        assert!(parse_endpoint("http://host:1/path").is_err());
+        assert!(parse_endpoint("http://:7070").is_err());
+    }
+
+    #[test]
+    fn segment_encoding() {
+        assert_eq!(encode_segment("v1"), "v1");
+        assert_eq!(encode_segment("a b/c"), "a%20b%2Fc");
+    }
+
+    #[test]
+    fn backoff_grows_and_is_bounded() {
+        for attempt in 1..=8 {
+            let d = backoff_delay(attempt);
+            let base = 50u64 * (1 << attempt.min(5));
+            assert!(d.as_millis() as u64 >= base / 2);
+            assert!(d.as_millis() as u64 <= base);
+        }
+    }
+
+    #[test]
+    fn config_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("mgit-remote-cfg-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(RemoteConfig::load(&dir).unwrap().is_none());
+        let mut cfg = RemoteConfig::new("http://127.0.0.1:9999");
+        cfg.hot_bytes = Some(1 << 20);
+        cfg.auth_token = Some("sekrit".to_string());
+        cfg.prefetch = false;
+        cfg.save(&dir).unwrap();
+        let back = RemoteConfig::load(&dir).unwrap().unwrap();
+        assert_eq!(back.url, cfg.url);
+        assert_eq!(back.auth_token.as_deref(), Some("sekrit"));
+        assert_eq!(back.hot_bytes, Some(1 << 20));
+        assert!(!back.prefetch);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn error_body_extraction() {
+        assert_eq!(body_message(br#"{"error": "server is read-only"}"#), "server is read-only");
+        assert_eq!(body_message(b"plain text"), "plain text");
+    }
+}

@@ -1,0 +1,329 @@
+//! Hot/cold tiered backend: local [`PackedStore`] over a remote origin.
+//!
+//! A [`TieredStore`] serves reads from the *hot* tier — the ordinary
+//! local loose + pack layout, mmap fast path and all — and fills misses
+//! from the *cold* tier, a [`RemoteStore`] speaking to an origin `mgit
+//! serve`. Writes always land hot (pushing to an origin is an explicit
+//! `mgit push`, not a write-through).
+//!
+//! Policy, in order, on a `get`:
+//!
+//! 1. **Hot hit** — present loose or packed: served locally, zero
+//!    network (`tier.hot_hits`).
+//! 2. **Negative hit** — the origin previously answered a definitive
+//!    `404` for this id: fail immediately without re-asking
+//!    (`tier.negative_hits`). Transport errors never populate the
+//!    negative cache, and a local `put` of the id clears its entry.
+//! 3. **Cold fill** — fetch from the origin, write the bytes into the
+//!    hot loose tier (`tier.cold_fills`), and return them. Fills are
+//!    tracked in an LRU; when a byte budget is configured
+//!    (`hot_bytes` in `.mgit/remote`), the oldest fills are evicted
+//!    (`tier.evictions`) until the tracked total fits. Only loose
+//!    *fills* are candidates — locally-authored objects and anything
+//!    sealed into a pack are never evicted (pack immutability), and a
+//!    fill that a later repack seals simply drops out of the
+//!    evictable set.
+//!
+//! A successful fill also **prefetches the delta-parent chain**: the
+//! fetched bytes' MGTF header names the parent object, so the resolve
+//! chain a checkpoint load is about to walk is pulled in the same warm
+//! pass (bounded depth, best-effort — the demand path surfaces real
+//! errors). Already-hot ancestors are traversed through pack-index
+//! metadata without refetching.
+//!
+//! See `docs/ARCHITECTURE.md` ("Remote tier") for the protocol and
+//! failure semantics, and [`super::remote`] for the wire client.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::format::{self, ObjectMeta};
+use super::remote::{RemoteConfig, RemoteError, RemoteStore};
+use super::{ObjectId, ObjectStore, PackedStore};
+
+static OBS_HOT_HITS: crate::obs::LazyCounter =
+    crate::obs::LazyCounter::new("tier.hot_hits");
+static OBS_COLD_FILLS: crate::obs::LazyCounter =
+    crate::obs::LazyCounter::new("tier.cold_fills");
+static OBS_EVICTIONS: crate::obs::LazyCounter =
+    crate::obs::LazyCounter::new("tier.evictions");
+static OBS_NEGATIVE_HITS: crate::obs::LazyCounter =
+    crate::obs::LazyCounter::new("tier.negative_hits");
+static OBS_RESIDENT_BYTES: crate::obs::LazyGauge =
+    crate::obs::LazyGauge::new("tier.resident_bytes");
+
+/// How far a single fill's parent-chain prefetch may walk.
+const PREFETCH_DEPTH: usize = 64;
+
+/// Evictable read-through fills, LRU order (front = coldest).
+#[derive(Default)]
+struct FillLru {
+    order: VecDeque<ObjectId>,
+    sizes: HashMap<ObjectId, u64>,
+    resident: u64,
+}
+
+impl FillLru {
+    fn forget(&mut self, id: &ObjectId) {
+        if let Some(size) = self.sizes.remove(id) {
+            self.resident = self.resident.saturating_sub(size);
+            if let Some(pos) = self.order.iter().position(|x| x == id) {
+                self.order.remove(pos);
+            }
+        }
+    }
+}
+
+/// What one [`TieredStore::pin_chain`] walk did.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct PinOutcome {
+    /// Objects pulled from the origin.
+    pub fetched: usize,
+    /// Payload bytes those fetches transferred.
+    pub bytes: u64,
+    /// Chain objects that were already hot.
+    pub already_hot: usize,
+}
+
+/// Hot local store layered over a cold remote origin.
+pub struct TieredStore {
+    hot: PackedStore,
+    cold: RemoteStore,
+    hot_budget: Option<u64>,
+    prefetch: bool,
+    fills: Mutex<FillLru>,
+    /// Ids the origin definitively does not hold (404).
+    negative: Mutex<HashSet<ObjectId>>,
+}
+
+impl TieredStore {
+    /// Open the hot tier at `dir` (same layout as [`PackedStore::open`])
+    /// reading through to `cfg`'s origin. Does not dial the origin.
+    pub fn open(dir: &Path, cfg: &RemoteConfig) -> Result<TieredStore> {
+        Ok(TieredStore {
+            hot: PackedStore::open(dir)?,
+            cold: RemoteStore::connect(cfg)?,
+            hot_budget: cfg.hot_bytes,
+            prefetch: cfg.prefetch,
+            fills: Mutex::new(FillLru::default()),
+            negative: Mutex::new(HashSet::new()),
+        })
+    }
+
+    /// The hot local tier (loose + packs) — what stats, fsck and repack
+    /// operate on.
+    pub fn hot(&self) -> &PackedStore {
+        &self.hot
+    }
+
+    pub(crate) fn hot_mut(&mut self) -> &mut PackedStore {
+        &mut self.hot
+    }
+
+    /// The cold-tier wire client.
+    pub fn remote(&self) -> &RemoteStore {
+        &self.cold
+    }
+
+    /// Mutable wire client (tests tune timeout/retry budget).
+    pub fn remote_mut(&mut self) -> &mut RemoteStore {
+        &mut self.cold
+    }
+
+    /// Configured fill budget in bytes (`None` = unbounded).
+    pub fn hot_budget(&self) -> Option<u64> {
+        self.hot_budget
+    }
+
+    /// Whether cold fills prefetch the delta-parent chain.
+    pub fn prefetch_enabled(&self) -> bool {
+        self.prefetch
+    }
+
+    /// Bytes currently held by evictable read-through fills.
+    pub fn fill_resident_bytes(&self) -> u64 {
+        self.fills.lock().unwrap().resident
+    }
+
+    /// Fetch `id` from the origin and admit it into the hot tier.
+    /// A definitive origin `404` enters the negative cache.
+    fn fill_one(&self, id: &ObjectId) -> Result<Vec<u8>> {
+        let bytes = self.cold.fetch(id).map_err(|e| {
+            if matches!(e, RemoteError::NotFound { .. }) {
+                self.negative.lock().unwrap().insert(*id);
+            }
+            anyhow::Error::new(e)
+        })?;
+        OBS_COLD_FILLS.inc();
+        self.admit(*id, &bytes)?;
+        Ok(bytes)
+    }
+
+    /// Write a cold fill loose and enforce the byte budget, evicting the
+    /// oldest fills first. The fill being admitted is never its own
+    /// victim — over-budget single objects stay (budget is a target for
+    /// the cache, not a hard cap on one object).
+    fn admit(&self, id: ObjectId, bytes: &[u8]) -> Result<()> {
+        if !self.hot.put(id, bytes)? {
+            return Ok(()); // raced with another filler; already accounted
+        }
+        let mut lru = self.fills.lock().unwrap();
+        lru.forget(&id);
+        lru.order.push_back(id);
+        lru.sizes.insert(id, bytes.len() as u64);
+        lru.resident += bytes.len() as u64;
+        if let Some(budget) = self.hot_budget {
+            while lru.resident > budget {
+                let Some(&victim) = lru.order.front() else { break };
+                if victim == id {
+                    break;
+                }
+                lru.forget(&victim);
+                if self.hot.remove(&victim)? {
+                    OBS_EVICTIONS.inc();
+                }
+            }
+        }
+        OBS_RESIDENT_BYTES.set(lru.resident as i64);
+        Ok(())
+    }
+
+    /// Move a re-read fill to the warm end of the LRU.
+    fn touch(&self, id: &ObjectId) {
+        let mut lru = self.fills.lock().unwrap();
+        if lru.sizes.contains_key(id) {
+            if let Some(pos) = lru.order.iter().position(|x| x == id) {
+                if let Some(v) = lru.order.remove(pos) {
+                    lru.order.push_back(v);
+                }
+            }
+        }
+    }
+
+    /// Header metadata for a hot object: loose header parse, or the pack
+    /// index for sealed objects (mirrors [`super::Store::object_meta`]).
+    fn hot_meta(&self, id: &ObjectId) -> Option<ObjectMeta> {
+        if !self.hot.loose().contains(id) {
+            if let Some(m) = self.hot.indexed_meta(id) {
+                return Some(m);
+            }
+        }
+        self.hot
+            .get(id)
+            .ok()
+            .map(|bytes| format::TensorObject::decode_meta(&bytes))
+    }
+
+    /// Best-effort warm pass over the delta-parent chain of a just-filled
+    /// object: fetching one checkpoint tensor pulls the ancestors its
+    /// resolve is about to demand, over the same pooled connection.
+    fn prefetch_parents(&self, first: &[u8]) {
+        let mut meta = format::TensorObject::decode_meta(first);
+        for _ in 0..PREFETCH_DEPTH {
+            let Some(parent) = meta.parent else { break };
+            if self.hot.contains(&parent) {
+                match self.hot_meta(&parent) {
+                    Some(m) => {
+                        meta = m;
+                        continue;
+                    }
+                    None => break,
+                }
+            }
+            if self.negative.lock().unwrap().contains(&parent) {
+                break;
+            }
+            match self.fill_one(&parent) {
+                Ok(bytes) => meta = format::TensorObject::decode_meta(&bytes),
+                Err(_) => break, // the demand path will surface real errors
+            }
+        }
+    }
+
+    /// Pin `id` and its entire delta-parent chain into the hot tier
+    /// (`mgit fetch`). Unlike the read path this is not best-effort: any
+    /// unreachable chain object is an error, so a successful pin
+    /// guarantees the subtree resolves offline.
+    pub fn pin_chain(&self, id: &ObjectId) -> Result<PinOutcome> {
+        let mut out = PinOutcome::default();
+        let mut cursor = Some(*id);
+        let mut depth = 0usize;
+        while let Some(id) = cursor {
+            depth += 1;
+            if depth > 100_000 {
+                bail!("delta chain too deep (or cyclic) at {}", id.short());
+            }
+            let meta = if self.hot.contains(&id) {
+                out.already_hot += 1;
+                self.hot_meta(&id)
+                    .ok_or_else(|| anyhow!("hot object {} is unreadable", id.short()))?
+            } else {
+                let bytes = self.fill_one(&id)?;
+                out.fetched += 1;
+                out.bytes += bytes.len() as u64;
+                format::TensorObject::decode_meta(&bytes)
+            };
+            cursor = meta.parent;
+        }
+        Ok(out)
+    }
+}
+
+impl ObjectStore for TieredStore {
+    fn get(&self, id: &ObjectId) -> Result<Vec<u8>> {
+        if self.hot.contains(id) {
+            OBS_HOT_HITS.inc();
+            self.touch(id);
+            return self.hot.get(id);
+        }
+        if self.negative.lock().unwrap().contains(id) {
+            OBS_NEGATIVE_HITS.inc();
+            bail!(
+                "object {} is not in the hot tier and origin {} previously \
+                 answered 404 for it (negative cache)",
+                id.short(),
+                self.cold.url()
+            );
+        }
+        let bytes = self.fill_one(id)?;
+        if self.prefetch {
+            self.prefetch_parents(&bytes);
+        }
+        Ok(bytes)
+    }
+
+    fn put(&self, id: ObjectId, bytes: &[u8]) -> Result<bool> {
+        // A local write supersedes any stale negative knowledge.
+        self.negative.lock().unwrap().remove(&id);
+        self.hot.put(id, bytes)
+    }
+
+    fn contains(&self, id: &ObjectId) -> bool {
+        if self.hot.contains(id) {
+            return true;
+        }
+        if self.negative.lock().unwrap().contains(id) {
+            return false;
+        }
+        self.cold.contains_remote(id).unwrap_or(false)
+    }
+
+    /// Hot tier only: the wire has no enumeration endpoint, and every
+    /// caller of `list` (GC, fsck, stats) operates on local state.
+    fn list(&self) -> Result<Vec<ObjectId>> {
+        self.hot.list()
+    }
+
+    fn remove(&self, id: &ObjectId) -> Result<bool> {
+        self.fills.lock().unwrap().forget(id);
+        self.hot.remove(id)
+    }
+
+    /// Hot tier only (what this machine is spending).
+    fn stored_bytes(&self) -> Result<u64> {
+        self.hot.stored_bytes()
+    }
+}

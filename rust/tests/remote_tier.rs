@@ -1,0 +1,705 @@
+//! Integration: the tiered remote store against a loopback origin.
+//!
+//! Spins up real `mgit serve` origins on ephemeral ports and drives the
+//! remote/tiered stack end-to-end: a *fresh* repo with only
+//! `.mgit/remote` configured fetches a node, pins its delta chain hot,
+//! and then serves it bit-exactly **offline** (the acceptance scenario);
+//! LRU eviction under a byte budget; the negative-lookup cache; bounded
+//! retry with backoff against an origin that drops connections; 429
+//! rate-limit backoff against a token-bucketed writable origin; `mgit
+//! push` closure upload + commit (with the ver-parent 400 fallback and
+//! the typed 403/401 errors); `HEAD` + `Range:` on `/object/<id>`; and
+//! `mgit graph pack`.
+//!
+//! Origin-side request counts are asserted through each server's
+//! *private* `/metrics` registry, so concurrently running tests never
+//! bleed into each other; process-global tier counters are only ever
+//! asserted as deltas that other tests can't decrease.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::{Path, PathBuf};
+
+use mgit::checkpoint::{Checkpoint, ModelZoo};
+use mgit::delta::{self, CompressConfig, NativeKernel};
+use mgit::obs;
+use mgit::ops::serve::{Server, ServerHandle, WriteConfig};
+use mgit::ops::{self, Repo, Report};
+use mgit::store::remote::{RemoteConfig, RemoteError, RemoteStore};
+use mgit::store::tiered::TieredStore;
+use mgit::store::{hash_bytes, ObjectId};
+use mgit::tensor::f32_to_bytes;
+use mgit::util::json;
+use mgit::util::rng::Rng;
+
+const MANIFEST: &str = r#"{
+  "vocab": 16, "max_seq": 4, "n_classes": 2, "batch": 2,
+  "delta_chunk": 1024,
+  "special_tokens": {"cls": 14, "mask": 15, "ignore_label": -100},
+  "archs": {"t": {
+      "d_model": 4, "n_layers": 1, "n_heads": 1, "d_ff": 8,
+      "param_count": 4096,
+      "layout": [
+        {"name":"w.a","shape":[4096],"offset":0,"size":4096,"init":"normal"}
+      ],
+      "dag": {"nodes": [], "edges": []}
+  }},
+  "artifacts": {"t": {}},
+  "delta_kernels": {"quant": "q", "dequant": "d"}
+}"#;
+
+const VERSIONS: usize = 4;
+
+fn zoo() -> ModelZoo {
+    ModelZoo::from_json(&json::parse(MANIFEST).unwrap()).unwrap()
+}
+
+fn tmp_repo(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("mgit-rtier-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// `m/v1 -> m/v2 -> ...` delta chain (version edges), like the serve
+/// tests build.
+fn build_chain(dir: &Path, zoo: &ModelZoo) {
+    let spec = zoo.arch("t").unwrap();
+    let mut repo = Repo::open(dir).unwrap();
+    let root_ck = Checkpoint::init(spec, 1);
+    let (sm, _) = delta::store_raw(&repo.store, spec, &root_ck).unwrap();
+    let idx = repo.graph.add_node("m/v1", "t").unwrap();
+    repo.graph.node_mut(idx).stored = Some(sm.clone());
+    let mut prev = (root_ck, sm);
+    let mut prev_idx = idx;
+    for v in 1..VERSIONS as u64 {
+        let mut rng = Rng::new(v + 70);
+        let child = Checkpoint {
+            arch: prev.0.arch.clone(),
+            flat: prev.0.flat.iter().map(|&x| x + rng.normal_f32(0.0, 3e-4)).collect(),
+        };
+        let cand = delta::prepare_delta(
+            &repo.store,
+            spec,
+            &child,
+            spec,
+            &prev.0,
+            &prev.1,
+            CompressConfig::default(),
+            &NativeKernel,
+        )
+        .unwrap();
+        delta::commit(&repo.store, &cand).unwrap();
+        let name = format!("m/v{}", v + 1);
+        let n = repo.graph.add_node(&name, "t").unwrap();
+        repo.graph.node_mut(n).stored = Some(cand.model.clone());
+        repo.graph.add_version_edge(prev_idx, n).unwrap();
+        prev = (cand.checkpoint, cand.model);
+        prev_idx = n;
+    }
+    repo.save().unwrap();
+}
+
+/// N independent raw-stored nodes (`r1`, `r2`, …) — every stored object
+/// is the same size, which the eviction test leans on.
+fn build_raw_nodes(dir: &Path, zoo: &ModelZoo, n: usize) -> Vec<ObjectId> {
+    let spec = zoo.arch("t").unwrap();
+    let mut repo = Repo::open(dir).unwrap();
+    let mut ids = Vec::new();
+    for i in 0..n {
+        let ck = Checkpoint::init(spec, 100 + i as u64);
+        let (sm, _) = delta::store_raw(&repo.store, spec, &ck).unwrap();
+        ids.push(sm.params[0].1);
+        let idx = repo.graph.add_node(&format!("r{}", i + 1), "t").unwrap();
+        repo.graph.node_mut(idx).stored = Some(sm);
+    }
+    repo.save().unwrap();
+    ids
+}
+
+fn start_origin(
+    dir: &Path,
+    zoo: Option<ModelZoo>,
+) -> (SocketAddr, ServerHandle, std::thread::JoinHandle<()>) {
+    let server = Server::bind(Repo::open(dir).unwrap(), zoo, 0, 4).unwrap();
+    let addr = server.local_addr().unwrap();
+    let handle = server.handle().unwrap();
+    let join = std::thread::spawn(move || {
+        server.serve().unwrap();
+    });
+    (addr, handle, join)
+}
+
+fn start_writable_origin(
+    dir: &Path,
+    zoo: Option<ModelZoo>,
+    cfg: WriteConfig,
+) -> (SocketAddr, ServerHandle, std::thread::JoinHandle<()>) {
+    let server = Server::bind_writable(Repo::open(dir).unwrap(), zoo, 0, 4, cfg).unwrap();
+    let addr = server.local_addr().unwrap();
+    let handle = server.handle().unwrap();
+    let join = std::thread::spawn(move || {
+        server.serve().unwrap();
+    });
+    (addr, handle, join)
+}
+
+fn url_of(addr: SocketAddr) -> String {
+    format!("http://127.0.0.1:{}", addr.port())
+}
+
+/// Raw one-shot HTTP exchange (`Connection: close` framing): returns
+/// (status code, head text, body).
+fn http_request(addr: SocketAddr, request: &str) -> (u16, String, Vec<u8>) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(request.as_bytes()).unwrap();
+    s.flush().unwrap();
+    let mut buf = Vec::new();
+    s.read_to_end(&mut buf).unwrap();
+    let head_end =
+        buf.windows(4).position(|w| w == b"\r\n\r\n").expect("malformed response") + 4;
+    let head = String::from_utf8_lossy(&buf[..head_end]).into_owned();
+    let status: u16 = head
+        .split_whitespace()
+        .nth(1)
+        .and_then(|c| c.parse().ok())
+        .expect("bad status line");
+    (status, head, buf[head_end..].to_vec())
+}
+
+fn http_get(addr: SocketAddr, path: &str) -> (u16, Vec<u8>) {
+    let (status, _head, body) = http_request(
+        addr,
+        &format!("GET {path} HTTP/1.1\r\nHost: localhost\r\nConnection: close\r\n\r\n"),
+    );
+    (status, body)
+}
+
+fn http_get_with(
+    addr: SocketAddr,
+    path: &str,
+    headers: &[(&str, &str)],
+) -> (u16, String, Vec<u8>) {
+    let mut req = format!("GET {path} HTTP/1.1\r\nHost: localhost\r\nConnection: close\r\n");
+    for (k, v) in headers {
+        req.push_str(&format!("{k}: {v}\r\n"));
+    }
+    req.push_str("\r\n");
+    http_request(addr, &req)
+}
+
+fn http_head(addr: SocketAddr, path: &str) -> (u16, String, Vec<u8>) {
+    http_request(
+        addr,
+        &format!("HEAD {path} HTTP/1.1\r\nHost: localhost\r\nConnection: close\r\n\r\n"),
+    )
+}
+
+/// This origin's private `requests_total` — the isolation-safe way to
+/// prove "no wire traffic happened" (the scrape itself is excluded from
+/// its own count, so consecutive scrapes with nothing in between differ
+/// by exactly 1: the previous scrape).
+fn origin_requests(addr: SocketAddr) -> u64 {
+    let (status, body) = http_get(addr, "/metrics");
+    assert_eq!(status, 200);
+    let j = json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+    j.req("server")
+        .unwrap()
+        .req("counters")
+        .unwrap()
+        .req_usize("requests_total")
+        .unwrap() as u64
+}
+
+fn set_remote(dir: &Path, addr: SocketAddr) {
+    ops::RemoteSetRequest {
+        url: url_of(addr),
+        auth_token: None,
+        hot_bytes: None,
+        prefetch: true,
+    }
+    .run(dir)
+    .unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Acceptance: fetch on a fresh repo, then serve everything offline
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fetch_pins_chain_then_serves_offline() {
+    let zoo = zoo();
+    let origin_dir = tmp_repo("accept-origin");
+    Repo::init(&origin_dir).unwrap();
+    build_chain(&origin_dir, &zoo);
+
+    // Library-side ground truth from the origin repo.
+    let origin_repo = Repo::open(&origin_dir).unwrap();
+    let mut expected = Vec::new();
+    for node in &origin_repo.graph.nodes {
+        let ck = delta::load(
+            &origin_repo.store,
+            &zoo,
+            node.stored.as_ref().unwrap(),
+            &NativeKernel,
+        )
+        .unwrap();
+        expected.push((node.name.clone(), f32_to_bytes(&ck.flat)));
+    }
+    drop(origin_repo);
+    let (addr, handle, join) = start_origin(&origin_dir, Some(zoo.clone()));
+
+    // A fresh repo that has never seen these models: only `.mgit/remote`.
+    let local_dir = tmp_repo("accept-local");
+    Repo::init(&local_dir).unwrap();
+    let before_get = ops::RemoteGetRequest.run(&local_dir).unwrap();
+    assert!(before_get.url.is_none());
+    set_remote(&local_dir, addr);
+    let after_get = ops::RemoteGetRequest.run(&local_dir).unwrap();
+    assert_eq!(after_get.url.as_deref(), Some(url_of(addr).as_str()));
+    assert!(!after_get.auth);
+
+    let cold_fills = obs::global().counter("tier.cold_fills");
+    let hot_hits = obs::global().counter("tier.hot_hits");
+    let fills_before = cold_fills.get();
+
+    // Fetch the tip: node metadata comes from origin /show, and the
+    // whole delta chain under it is pinned hot.
+    let mut repo = Repo::open(&local_dir).unwrap();
+    let report =
+        ops::FetchRequest { node: format!("m/v{VERSIONS}") }.run(&mut repo).unwrap();
+    assert!(report.created_node);
+    assert_eq!(report.params, 1);
+    assert_eq!(report.objects_fetched, VERSIONS, "tip chain = 1 delta per version + raw root");
+    assert!(report.bytes_fetched > 0);
+    assert!(cold_fills.get() >= fills_before + VERSIONS as u64);
+
+    // Fetch every other node: their chains are suffixes of the tip's,
+    // so everything is already hot.
+    for v in 1..VERSIONS {
+        let mut repo = Repo::open(&local_dir).unwrap();
+        let r = ops::FetchRequest { node: format!("m/v{v}") }.run(&mut repo).unwrap();
+        assert!(r.created_node);
+        assert_eq!(r.objects_fetched, 0, "m/v{v} chain was pinned by the tip fetch");
+        assert!(r.already_hot > 0);
+    }
+
+    // Second read is pure hot tier: the origin sees zero object
+    // requests between these two scrapes.
+    let r0 = origin_requests(addr);
+    {
+        let repo = Repo::open(&local_dir).unwrap();
+        let hits_before = hot_hits.get();
+        for (name, want) in &expected {
+            let node = repo.graph.node_by_name(name).unwrap();
+            let ck =
+                delta::load(&repo.store, &zoo, node.stored.as_ref().unwrap(), &NativeKernel)
+                    .unwrap();
+            assert_eq!(&f32_to_bytes(&ck.flat), want, "{name} not bit-exact");
+        }
+        assert!(hot_hits.get() > hits_before);
+    }
+    let r1 = origin_requests(addr);
+    assert_eq!(r1 - r0, 1, "only the previous /metrics scrape, no object traffic");
+
+    // Stats surfaces the tier and stays offline-safe.
+    handle.shutdown();
+    join.join().unwrap();
+    {
+        let repo = Repo::open(&local_dir).unwrap();
+        let stats = ops::StatsRequest.run(&repo).unwrap();
+        let tier = stats.tier.as_ref().expect("tiered repo reports its tier");
+        assert_eq!(tier.url, url_of(addr));
+        assert!(tier.prefetch);
+        assert!(stats.to_json().req("tier").unwrap().req_str("url").is_ok());
+
+        // Everything fetched still loads bit-exactly with the origin gone.
+        for (name, want) in &expected {
+            let node = repo.graph.node_by_name(name).unwrap();
+            let ck =
+                delta::load(&repo.store, &zoo, node.stored.as_ref().unwrap(), &NativeKernel)
+                    .unwrap();
+            assert_eq!(&f32_to_bytes(&ck.flat), want, "{name} offline load");
+        }
+        let fsck = ops::FsckRequest.run(&repo).unwrap();
+        assert!(fsck.failure().is_none(), "offline fsck must stay green");
+    }
+
+    // A cold miss with the origin down fails descriptively, fast.
+    {
+        let cfg = RemoteConfig::new(&url_of(addr));
+        let mut ts =
+            TieredStore::open(&local_dir.join(".mgit").join("objects"), &cfg).unwrap();
+        ts.remote_mut().set_max_retries(0);
+        let missing = hash_bytes(b"never stored anywhere");
+        let err = mgit::store::ObjectStore::get(&ts, &missing).unwrap_err();
+        assert!(
+            err.to_string().contains("unreachable"),
+            "offline cold miss should name the origin problem, got: {err:#}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Eviction order + negative cache (direct TieredStore)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn budget_evicts_lru_fills_and_negative_cache_suppresses_misses() {
+    let zoo = zoo();
+    let origin_dir = tmp_repo("evict-origin");
+    Repo::init(&origin_dir).unwrap();
+    let ids = build_raw_nodes(&origin_dir, &zoo, 3);
+    let (addr, handle, join) = start_origin(&origin_dir, None);
+
+    // Phase 1: measure one fill's size with an unbounded scratch tier.
+    let mut cfg = RemoteConfig::new(&url_of(addr));
+    cfg.prefetch = false;
+    let scratch = tmp_repo("evict-scratch");
+    let one = {
+        let ts = TieredStore::open(&scratch.join("objects"), &cfg).unwrap();
+        mgit::store::ObjectStore::get(&ts, &ids[0]).unwrap();
+        ts.fill_resident_bytes()
+    };
+    assert!(one > 0);
+
+    // Phase 2: budget = exactly two fills. Raw objects of the same arch
+    // are the same size, so the arithmetic below is exact.
+    cfg.hot_bytes = Some(2 * one);
+    let dir = tmp_repo("evict-hot");
+    let ts = TieredStore::open(&dir.join("objects"), &cfg).unwrap();
+    use mgit::store::ObjectStore;
+    ts.get(&ids[0]).unwrap();
+    ts.get(&ids[1]).unwrap();
+    assert_eq!(ts.fill_resident_bytes(), 2 * one, "two fills fit the budget");
+    // Re-reading ids[0] warms it: ids[1] is now the LRU victim.
+    ts.get(&ids[0]).unwrap();
+    ts.get(&ids[2]).unwrap();
+    assert!(ts.hot().contains(&ids[0]), "touched fill survives");
+    assert!(!ts.hot().contains(&ids[1]), "coldest fill evicted");
+    assert!(ts.hot().contains(&ids[2]), "a fill is never its own victim");
+    assert_eq!(ts.fill_resident_bytes(), 2 * one);
+
+    // Negative cache: the first miss asks the origin, the second does
+    // not touch the wire at all.
+    let missing = hash_bytes(b"no such object");
+    let e1 = ts.get(&missing).unwrap_err();
+    assert!(e1.to_string().contains("not found"), "first miss is the origin's 404: {e1:#}");
+    let r0 = origin_requests(addr);
+    let e2 = ts.get(&missing).unwrap_err();
+    assert!(
+        e2.to_string().contains("negative cache"),
+        "second miss answered locally: {e2:#}"
+    );
+    assert!(!ts.contains(&missing), "contains consults the negative cache");
+    let r1 = origin_requests(addr);
+    assert_eq!(r1 - r0, 1, "only the previous scrape; the repeat miss sent nothing");
+
+    // A local put supersedes the negative entry.
+    let payload = b"locally authored".to_vec();
+    let new_id = hash_bytes(&payload);
+    // (different id than `missing`, so insert a negative entry for it first)
+    assert!(!ts.contains(&new_id));
+    assert!(ts.put(new_id, &payload).unwrap());
+    assert!(ts.contains(&new_id));
+    assert_eq!(ts.get(&new_id).unwrap(), payload);
+
+    handle.shutdown();
+    join.join().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Retry / backoff against a flaky origin
+// ---------------------------------------------------------------------------
+
+/// A raw TCP origin that closes the first `drop_first` connections
+/// without answering, then serves one canned 200 and exits.
+fn flaky_origin(
+    drop_first: usize,
+    payload: Vec<u8>,
+) -> (SocketAddr, std::thread::JoinHandle<()>) {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let join = std::thread::spawn(move || {
+        let mut dropped = 0usize;
+        loop {
+            let Ok((mut s, _)) = listener.accept() else { return };
+            if dropped < drop_first {
+                dropped += 1;
+                drop(s);
+                continue;
+            }
+            let mut buf = [0u8; 4096];
+            let mut head = Vec::new();
+            loop {
+                match s.read(&mut buf) {
+                    Ok(0) | Err(_) => break,
+                    Ok(n) => {
+                        head.extend_from_slice(&buf[..n]);
+                        if head.windows(4).any(|w| w == b"\r\n\r\n") {
+                            break;
+                        }
+                    }
+                }
+            }
+            let resp = format!(
+                "HTTP/1.1 200 OK\r\nContent-Type: application/octet-stream\r\n\
+                 Content-Length: {}\r\nConnection: close\r\n\r\n",
+                payload.len()
+            );
+            let _ = s.write_all(resp.as_bytes());
+            let _ = s.write_all(&payload);
+            return;
+        }
+    });
+    (addr, join)
+}
+
+#[test]
+fn retry_survives_dropped_connections_and_reports_exhaustion() {
+    let payload = b"the object bytes".to_vec();
+    let (addr, join) = flaky_origin(2, payload.clone());
+    let retries = obs::global().counter("remote.retries");
+    let retries_before = retries.get();
+    let remote = RemoteStore::connect(&RemoteConfig::new(&url_of(addr))).unwrap();
+    let id = hash_bytes(&payload);
+    let got = remote.fetch(&id).unwrap();
+    assert_eq!(got, payload, "third attempt served the bytes");
+    assert!(retries.get() >= retries_before + 2, "two dropped connections = two retries");
+    join.join().unwrap();
+
+    // Exhaustion: nothing listening at all.
+    let dead = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let dead_addr = dead.local_addr().unwrap();
+    drop(dead);
+    let mut remote = RemoteStore::connect(&RemoteConfig::new(&url_of(dead_addr))).unwrap();
+    remote.set_max_retries(1);
+    match remote.fetch(&id) {
+        Err(RemoteError::Unreachable { attempts, .. }) => assert_eq!(attempts, 2),
+        other => panic!("expected Unreachable, got {other:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 429 backoff, push closure + commit, typed 403/401
+// ---------------------------------------------------------------------------
+
+#[test]
+fn rate_limited_put_backs_off_until_a_token_refills() {
+    let origin_dir = tmp_repo("rate-origin");
+    Repo::init(&origin_dir).unwrap();
+    let (addr, handle, join) = start_writable_origin(
+        &origin_dir,
+        None,
+        WriteConfig { auth_token: None, rate_per_sec: Some(2), fold_every: 64 },
+    );
+    let remote = RemoteStore::connect(&RemoteConfig::new(&url_of(addr))).unwrap();
+    // Drain the 2-token burst, then the third put must ride the backoff
+    // loop until the bucket refills (min cumulative backoff by the 4th
+    // retry comfortably covers the 0.5 s refill).
+    let payloads: Vec<Vec<u8>> = (0..3).map(|i| vec![i as u8 + 1; 64]).collect();
+    for p in &payloads {
+        assert!(remote.put_remote(hash_bytes(p), p).unwrap(), "put of {} bytes", p.len());
+    }
+    handle.shutdown();
+    join.join().unwrap();
+}
+
+#[test]
+fn push_uploads_closure_then_commits_with_lineage() {
+    let zoo = zoo();
+    // Local repo with a delta chain, origin starts empty + writable.
+    let local_dir = tmp_repo("push-local");
+    Repo::init(&local_dir).unwrap();
+    build_chain(&local_dir, &zoo);
+    let origin_dir = tmp_repo("push-origin");
+    Repo::init(&origin_dir).unwrap();
+    let (addr, handle, join) = start_writable_origin(
+        &origin_dir,
+        Some(zoo.clone()),
+        WriteConfig {
+            auth_token: Some("sekrit".to_string()),
+            rate_per_sec: None,
+            fold_every: 64,
+        },
+    );
+    ops::RemoteSetRequest {
+        url: url_of(addr),
+        auth_token: Some("sekrit".to_string()),
+        hot_bytes: None,
+        prefetch: true,
+    }
+    .run(&local_dir)
+    .unwrap();
+
+    let repo = Repo::open(&local_dir).unwrap();
+    let r1 = ops::PushRequest { node: "m/v1".to_string() }.run(&repo).unwrap();
+    assert!(r1.committed);
+    assert_eq!(r1.objects_pushed, 1, "v1 is one raw object");
+    assert_eq!(r1.ver_parent, None);
+
+    // v2's closure shares v1's base object — dedup on the origin.
+    let r2 = ops::PushRequest { node: "m/v2".to_string() }.run(&repo).unwrap();
+    assert!(r2.committed);
+    assert_eq!(r2.objects_pushed, 1, "only the delta is new");
+    assert_eq!(r2.already_remote, 1, "the shared base was already there");
+    assert_eq!(r2.ver_parent.as_deref(), Some("m/v1"), "origin knew the parent");
+
+    // Idempotent re-push: everything deduped, commit answers 409.
+    let r2b = ops::PushRequest { node: "m/v2".to_string() }.run(&repo).unwrap();
+    assert!(!r2b.committed);
+    assert_eq!(r2b.objects_pushed, 0);
+    assert_eq!(r2b.already_remote, 2);
+
+    // The origin now serves v2 bit-exactly.
+    let want = {
+        let node = repo.graph.node_by_name("m/v2").unwrap();
+        let ck =
+            delta::load(&repo.store, &zoo, node.stored.as_ref().unwrap(), &NativeKernel)
+                .unwrap();
+        f32_to_bytes(&ck.flat)
+    };
+    let (status, body) = http_get(addr, "/checkpoint/m%2Fv2");
+    assert_eq!(status, 200);
+    assert_eq!(body, want, "pushed checkpoint not bit-exact on the origin");
+
+    // Wrong token → typed Unauthorized.
+    let bad = RemoteStore::connect(&RemoteConfig::new(&url_of(addr))).unwrap();
+    match bad.put_remote(hash_bytes(b"x"), b"x") {
+        Err(RemoteError::Unauthorized { .. }) => {}
+        other => panic!("expected Unauthorized, got {other:?}"),
+    }
+    handle.shutdown();
+    join.join().unwrap();
+
+    // Pushing to an origin that does not know the ver parent: the 400
+    // answer falls back to a commit without lineage.
+    let bare_dir = tmp_repo("push-bare-origin");
+    Repo::init(&bare_dir).unwrap();
+    let (addr2, handle2, join2) = start_writable_origin(
+        &bare_dir,
+        None,
+        WriteConfig { auth_token: None, rate_per_sec: None, fold_every: 64 },
+    );
+    ops::RemoteSetRequest {
+        url: url_of(addr2),
+        auth_token: None,
+        hot_bytes: None,
+        prefetch: true,
+    }
+    .run(&local_dir)
+    .unwrap();
+    let repo = Repo::open(&local_dir).unwrap();
+    let r = ops::PushRequest { node: "m/v2".to_string() }.run(&repo).unwrap();
+    assert!(r.committed);
+    assert_eq!(r.ver_parent, None, "unknown parent on the origin → no lineage sent");
+    assert_eq!(r.objects_pushed, 2, "full closure: delta + base");
+    handle2.shutdown();
+    join2.join().unwrap();
+
+    // A read-only origin refuses the object upload with the server's own
+    // message in the typed error.
+    let ro_dir = tmp_repo("push-ro-origin");
+    Repo::init(&ro_dir).unwrap();
+    let (addr3, handle3, join3) = start_origin(&ro_dir, None);
+    let ro = RemoteStore::connect(&RemoteConfig::new(&url_of(addr3))).unwrap();
+    match ro.put_remote(hash_bytes(b"y"), b"y") {
+        Err(RemoteError::ReadOnly { server, .. }) => {
+            assert!(server.contains("read-only"), "server body surfaced: {server}");
+        }
+        other => panic!("expected ReadOnly, got {other:?}"),
+    }
+    handle3.shutdown();
+    join3.join().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// HEAD + Range on /object (satellite)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn object_endpoint_head_and_range() {
+    let zoo = zoo();
+    let origin_dir = tmp_repo("headrange-origin");
+    Repo::init(&origin_dir).unwrap();
+    let ids = build_raw_nodes(&origin_dir, &zoo, 1);
+    let repo = Repo::open(&origin_dir).unwrap();
+    let bytes = repo.store.get(&ids[0]).unwrap();
+    drop(repo);
+    let (addr, handle, join) = start_origin(&origin_dir, None);
+    let path = format!("/object/{}", ids[0].hex());
+
+    // HEAD known object: full head, zero body bytes.
+    let (status, head, body) = http_head(addr, &path);
+    assert_eq!(status, 200);
+    assert!(body.is_empty(), "HEAD must not carry a body");
+    assert!(
+        head.to_ascii_lowercase().contains(&format!("content-length: {}", bytes.len())),
+        "HEAD advertises the full length:\n{head}"
+    );
+
+    // HEAD unknown object: 404, still no body.
+    let missing = hash_bytes(b"absent");
+    let (status, _head, body) = http_head(addr, &format!("/object/{}", missing.hex()));
+    assert_eq!(status, 404);
+    assert!(body.is_empty());
+
+    // HEAD elsewhere stays 405 with the route's own Allow set.
+    let (status, head, body) = http_head(addr, "/log");
+    assert_eq!(status, 405);
+    assert!(body.is_empty());
+    assert!(head.contains("Allow: GET"), "Allow header present:\n{head}");
+
+    // Range: a 4-byte window, with Content-Range bookkeeping.
+    let (status, head, body) = http_get_with(addr, &path, &[("Range", "bytes=0-3")]);
+    assert_eq!(status, 206);
+    assert_eq!(body, &bytes[..4]);
+    assert!(head.contains(&format!("Content-Range: bytes 0-3/{}", bytes.len())), "{head}");
+
+    // Out-of-range → 416 with the total.
+    let spec = format!("bytes={}-", bytes.len());
+    let (status, head, _body) = http_get_with(addr, &path, &[("Range", spec.as_str())]);
+    assert_eq!(status, 416);
+    assert!(head.contains(&format!("Content-Range: bytes */{}", bytes.len())), "{head}");
+
+    // Plain GET still advertises range support.
+    let (status, head, body) = http_get_with(addr, &path, &[]);
+    assert_eq!(status, 200);
+    assert_eq!(body, bytes);
+    assert!(head.contains("Accept-Ranges: bytes"), "{head}");
+
+    handle.shutdown();
+    join.join().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// graph pack (satellite)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn graph_pack_converts_json_repo_to_binary() {
+    let zoo = zoo();
+    let dir = tmp_repo("graphpack");
+    Repo::init(&dir).unwrap();
+    build_chain(&dir, &zoo);
+    let bin = Repo::graph_bin_path(&dir);
+    assert!(!bin.exists());
+
+    let report = ops::GraphPackRequest.run(&Repo::open(&dir).unwrap()).unwrap();
+    assert!(!report.already_binary);
+    assert_eq!(report.nodes, VERSIONS);
+    assert_eq!(report.ver_edges, VERSIONS - 1);
+    assert!(report.bytes > 0);
+    assert!(bin.exists());
+    assert_eq!(report.to_json().req_usize("nodes").unwrap(), VERSIONS);
+
+    // The repo reopens through the binary index with everything intact.
+    let repo = Repo::open(&dir).unwrap();
+    assert_eq!(repo.graph.format(), "binary");
+    assert!(repo.graph.node_by_name(&format!("m/v{VERSIONS}")).unwrap().stored.is_some());
+
+    // Second run is a reported no-op.
+    let again = ops::GraphPackRequest.run(&repo).unwrap();
+    assert!(again.already_binary);
+    assert_eq!(again.nodes, VERSIONS);
+}
