@@ -157,8 +157,99 @@ fn pack_framing_section() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Chunk dedup — on-disk footprint with and without `--similarity` on
+/// synthetic *cross-lineage* shared tensors: eight raw tensors that
+/// share most of their bytes but none of their ids (each carries a
+/// sparse per-tensor perturbation, so CAS never collapses them and no
+/// lineage edge links them). The lineage-only repack stores every byte
+/// eight times; the chunked repack stores shared ranges once and must
+/// come out strictly smaller.
+fn chunk_dedup_section() -> anyhow::Result<()> {
+    use mgit::store::format::TensorObject;
+    use mgit::store::hash_tensor;
+    use mgit::store::ObjectId;
+    use mgit::tensor::{f32_to_bytes, DType};
+    use mgit::util::rng::Rng;
+
+    println!("Chunk dedup — cross-lineage shared tensors (repack --similarity)");
+    common::hr();
+    let dir = std::env::temp_dir().join(format!("mgit-t4-cdedup-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = Store::open_packed(&dir)?;
+
+    let mut rng = Rng::new(7);
+    let len = 16 * 1024usize;
+    let base: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let mut roots: Vec<ObjectId> = Vec::new();
+    for i in 0..8u32 {
+        let mut vals = base.clone();
+        for v in vals.iter_mut().step_by(512) {
+            *v += 0.5 + i as f32;
+        }
+        let payload = f32_to_bytes(&vals);
+        let id = hash_tensor(DType::F32, &[len], &payload);
+        store.put(
+            id,
+            &TensorObject::Raw { dtype: DType::F32, shape: vec![len], payload }.encode(),
+        )?;
+        roots.push(id);
+    }
+    drop(store);
+
+    let mut sizes: Vec<u64> = Vec::new();
+    for chunked in [false, true] {
+        let mut store = Store::open_packed(&dir)?;
+        let cfg = RepackConfig {
+            mode: RepackMode::Full,
+            similarity: if chunked { Some(0.5) } else { None },
+            chunk_dedup: chunked,
+            ..RepackConfig::default()
+        };
+        let t = Timer::start();
+        let report = repack(&mut store, &roots, &cfg, &NativeKernel)?;
+        let size = std::fs::metadata(report.pack_path.as_ref().unwrap())?.len();
+        let label = if chunked { "chunked (v3)" } else { "plain (v2)" };
+        println!(
+            "{:<12}: pack {:>10} on disk ({} objects, {} recipes, {} chunks shared, \
+             repack {})",
+            label,
+            human_bytes(size),
+            report.packed,
+            report.recipes,
+            report.chunks_shared,
+            mgit::util::human_secs(t.elapsed_secs()),
+        );
+        common::bench_json(
+            "table4_compression",
+            if chunked { "chunk_dedup_on_bytes" } else { "chunk_dedup_off_bytes" },
+            size as f64,
+        );
+        if chunked {
+            common::bench_json("table4_compression", "chunk_recipes", report.recipes as f64);
+            assert!(
+                report.recipes > 0,
+                "cross-lineage shared tensors must produce chunk recipes"
+            );
+        }
+        sizes.push(size);
+    }
+    let ratio = sizes[0] as f64 / sizes[1].max(1) as f64;
+    println!("plain/chunked pack-size ratio: {ratio:.3}x");
+    common::bench_json("table4_compression", "chunk_dedup_ratio", ratio);
+    assert!(
+        sizes[1] < sizes[0],
+        "chunk dedup must shrink the pack ({} >= {})",
+        sizes[1],
+        sizes[0]
+    );
+    common::hr();
+    std::fs::remove_dir_all(&dir)?;
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     pack_framing_section()?;
+    chunk_dedup_section()?;
 
     let Some(rt) = common::runtime_opt() else {
         println!(

@@ -17,9 +17,12 @@
 //! mgit merge <base> <m1> <m2> [--out name]
 //! mgit gc                        # sweep unreachable loose objects
 //! mgit repack [--max-chain-depth N] [--prune] [--full|--incremental]
-//!             [--framing raw|zstd]
+//!             [--framing raw|zstd] [--similarity T] [--min-savings F]
+//!             [--chunk-dedup]
 //!                                # pack new loose objects (incremental,
-//!                                # the default) or rewrite every pack
+//!                                # the default) or rewrite every pack;
+//!                                # --similarity turns on similarity-driven
+//!                                # base selection + chunk dedup
 //! mgit verify-pack               # pack checksums + content hashes
 //! mgit build <g1|g2|g3|g4|g5>    # train + register a workload graph
 //! mgit compress --codec <rle|lzma|zstd> [--eps E]  # re-store with deltas
@@ -254,6 +257,10 @@ fn repack_request(args: &Args) -> Result<ops::RepackRequest> {
             Some(r)
         }
     };
+    let similarity = match args.flag("similarity") {
+        None => None,
+        Some(_) => Some(args.flag_f64("similarity", 0.0)?),
+    };
     Ok(ops::RepackRequest {
         max_chain_depth: args.flag_usize("max-chain-depth", 8)?,
         prune: args.has("prune"),
@@ -262,6 +269,11 @@ fn repack_request(args: &Args) -> Result<ops::RepackRequest> {
         max_dead_ratio,
         framing,
         keep_loose: args.has("keep-loose"),
+        similarity,
+        min_savings: args.flag_f64("min-savings", 0.1)?,
+        // --similarity implies the chunked pack format: both halves of
+        // the compression model ship together (docs/COMPRESSION.md).
+        chunk_dedup: args.has("chunk-dedup") || similarity.is_some(),
     })
 }
 
@@ -349,6 +361,16 @@ usage: mgit <command> [args] [--flags]
                              byte trigger fires only with --prune)
                              [--keep-loose] (keep loose copies of newly
                              packed objects — live-server repacks)
+                             [--similarity T] (similarity-driven delta
+                             base selection: score candidate bases by
+                             min-hash sketch, keep the smallest bit-exact
+                             encoding, or none below --min-savings;
+                             implies --chunk-dedup)
+                             [--min-savings 0.1] (minimum fractional
+                             saving a delta must achieve over raw bytes)
+                             [--chunk-dedup] (write a chunked v3 pack:
+                             byte ranges shared across objects are
+                             stored once, replayed via MGCR recipes)
   verify-pack                verify pack checksums + object content hashes
                              (exits nonzero on bad packs)
   diff <a> <b>               divergence scores between two models

@@ -1,0 +1,217 @@
+//! Content-defined chunking (CDC) over raw tensor bytes.
+//!
+//! Splits a byte stream into variable-sized chunks whose boundaries are
+//! decided by a Gear rolling hash over the *content*, not by fixed
+//! offsets. Inserting or deleting a byte therefore shifts boundaries
+//! only locally: the hash resynchronises within one chunk, and every
+//! chunk after the edit keeps its fingerprint. That resilience is what
+//! lets the pack writer dedup byte ranges shared across *unrelated*
+//! objects (no lineage edge required) — see
+//! [`crate::store::pack::recipe`] and `docs/COMPRESSION.md`.
+//!
+//! Invariants:
+//!
+//! * **Deterministic.** The gear table is a compile-time constant
+//!   (splitmix64-filled), so the same bytes under the same
+//!   [`ChunkConfig`] always produce the same chunk list — across runs,
+//!   platforms and versions. Fingerprints are SHA-256 over the chunk
+//!   bytes, matching the store's content-addressing hash.
+//! * **Bounded.** Every chunk length `l` satisfies
+//!   `min ≤ l ≤ max`, except the final chunk which may be shorter than
+//!   `min`. Expected length is `min + 2^avg_bits`.
+//! * **Complete.** Chunks tile the input exactly: they are contiguous,
+//!   non-overlapping, and their lengths sum to the input length.
+//!
+//! ```
+//! use mgit::delta::chunk::{chunk_bytes, ChunkConfig};
+//!
+//! let data = vec![42u8; 10_000];
+//! let a = chunk_bytes(&data, &ChunkConfig::default());
+//! let b = chunk_bytes(&data, &ChunkConfig::default());
+//! assert_eq!(a, b); // fully deterministic
+//! // chunks tile the input exactly
+//! assert_eq!(a.iter().map(|c| c.len as usize).sum::<usize>(), data.len());
+//! ```
+
+use sha2::{Digest, Sha256};
+
+/// Chunking bounds. The defaults (64 B min, 512 B average target,
+/// 4 KiB max) are tuned for f32 tensor payloads: fine enough that a
+/// shared sub-tensor region spans several chunks, coarse enough that
+/// per-chunk bookkeeping (32-byte fingerprint + 13-byte copy op) stays
+/// well under 10% of the data it describes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChunkConfig {
+    /// Minimum chunk length in bytes; boundaries are not considered
+    /// before this many bytes have been consumed.
+    pub min: usize,
+    /// Boundary mask width: a boundary fires when the low `avg_bits`
+    /// bits of the rolling hash are zero, giving an expected chunk
+    /// length of `min + 2^avg_bits`.
+    pub avg_bits: u32,
+    /// Hard cap: a boundary is forced at this length even if the hash
+    /// never fires (e.g. on constant input).
+    pub max: usize,
+}
+
+impl Default for ChunkConfig {
+    fn default() -> ChunkConfig {
+        ChunkConfig { min: 64, avg_bits: 9, max: 4096 }
+    }
+}
+
+/// One chunk of the input: its position, length and content
+/// fingerprint (SHA-256 of the chunk bytes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Chunk {
+    /// Byte offset of the chunk within the input.
+    pub start: usize,
+    /// Chunk length in bytes.
+    pub len: u32,
+    /// SHA-256 of the chunk bytes.
+    pub hash: [u8; 32],
+}
+
+/// splitmix64 step — the standard 64-bit finalizer used to fill the
+/// gear table deterministically at compile time.
+const fn splitmix64(seed: u64) -> u64 {
+    let mut z = seed.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Per-byte gear values. `h = (h << 1) + GEAR[b]` gives every input
+/// byte a ~64-byte window of influence (after 64 shifts a byte's
+/// contribution has left the accumulator), which is what makes the
+/// chunker resynchronise after an insert or delete.
+const GEAR: [u64; 256] = {
+    let mut t = [0u64; 256];
+    let mut i = 0;
+    while i < 256 {
+        t[i] = splitmix64(0x6D67_6974_2D63_6463 ^ (i as u64)); // "mgit-cdc"
+        i += 1;
+    }
+    t
+};
+
+/// Split `data` into content-defined chunks under `cfg`.
+///
+/// Returns chunks in input order; see the module docs for the
+/// determinism / bounds / tiling invariants. Empty input yields an
+/// empty list.
+pub fn chunk_bytes(data: &[u8], cfg: &ChunkConfig) -> Vec<Chunk> {
+    let min = cfg.min.max(1);
+    let max = cfg.max.max(min);
+    let mask: u64 = (1u64 << cfg.avg_bits.min(63)) - 1;
+    let mut chunks = Vec::new();
+    let mut start = 0usize;
+    let mut h = 0u64;
+    for (pos, &b) in data.iter().enumerate() {
+        h = (h << 1).wrapping_add(GEAR[b as usize]);
+        let filled = pos + 1 - start;
+        if (filled >= min && (h & mask) == 0) || filled >= max {
+            chunks.push(fingerprint(data, start, pos + 1));
+            start = pos + 1;
+            h = 0;
+        }
+    }
+    if start < data.len() {
+        chunks.push(fingerprint(data, start, data.len()));
+    }
+    chunks
+}
+
+fn fingerprint(data: &[u8], start: usize, end: usize) -> Chunk {
+    let mut h = Sha256::new();
+    h.update(&data[start..end]);
+    Chunk { start, len: (end - start) as u32, hash: h.finalize().into() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic byte stream with enough entropy that gear
+    /// boundaries actually fire.
+    fn noise(n: usize, seed: u64) -> Vec<u8> {
+        let mut out = Vec::with_capacity(n);
+        let mut s = seed;
+        while out.len() < n {
+            s = splitmix64(s);
+            out.extend_from_slice(&s.to_le_bytes());
+        }
+        out.truncate(n);
+        out
+    }
+
+    #[test]
+    fn chunks_tile_input_and_respect_bounds() {
+        let cfg = ChunkConfig::default();
+        let data = noise(64 * 1024, 7);
+        let chunks = chunk_bytes(&data, &cfg);
+        assert!(chunks.len() > 32, "expected many chunks, got {}", chunks.len());
+        let mut pos = 0usize;
+        for (i, c) in chunks.iter().enumerate() {
+            assert_eq!(c.start, pos, "chunk {i} not contiguous");
+            let last = i + 1 == chunks.len();
+            assert!(c.len as usize <= cfg.max);
+            if !last {
+                assert!(c.len as usize >= cfg.min, "chunk {i} under min");
+            }
+            pos += c.len as usize;
+        }
+        assert_eq!(pos, data.len());
+    }
+
+    #[test]
+    fn determinism_across_calls() {
+        let cfg = ChunkConfig::default();
+        let data = noise(16 * 1024, 99);
+        assert_eq!(chunk_bytes(&data, &cfg), chunk_bytes(&data, &cfg));
+    }
+
+    #[test]
+    fn constant_input_forces_max_size_chunks() {
+        let cfg = ChunkConfig::default();
+        let data = vec![0u8; 3 * cfg.max + 100];
+        let chunks = chunk_bytes(&data, &cfg);
+        assert_eq!(chunks.len(), 4);
+        for c in &chunks[..3] {
+            assert_eq!(c.len as usize, cfg.max);
+        }
+        assert_eq!(chunks[3].len as usize, 100);
+        // identical content => identical fingerprints
+        assert_eq!(chunks[0].hash, chunks[1].hash);
+    }
+
+    #[test]
+    fn boundary_shift_resilience_on_insert() {
+        // Insert one byte mid-stream: boundaries resynchronise, so the
+        // overwhelming majority of chunk fingerprints survive.
+        let cfg = ChunkConfig::default();
+        let data = noise(64 * 1024, 1234);
+        let mut edited = data.clone();
+        edited.insert(data.len() / 3, 0xA5);
+
+        let a: std::collections::HashSet<[u8; 32]> =
+            chunk_bytes(&data, &cfg).iter().map(|c| c.hash).collect();
+        let b: std::collections::HashSet<[u8; 32]> =
+            chunk_bytes(&edited, &cfg).iter().map(|c| c.hash).collect();
+        let common = a.intersection(&b).count();
+        assert!(
+            common * 2 > a.len(),
+            "only {common} of {} chunks survived a 1-byte insert",
+            a.len()
+        );
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        let cfg = ChunkConfig::default();
+        assert!(chunk_bytes(&[], &cfg).is_empty());
+        let one = chunk_bytes(&[7u8], &cfg);
+        assert_eq!(one.len(), 1);
+        assert_eq!(one[0].len, 1);
+    }
+}

@@ -4,6 +4,21 @@
 //! so DEFLATE (zlib) stands in as the "slow, high-ratio dictionary codec"
 //! and zstd is provided as an ablation point (see DESIGN.md §2). Codec ids
 //! are persisted inside MGTF objects — do not renumber.
+//!
+//! Invariants: `decompress(compress(x), x.len()) == x` for every codec
+//! and every byte string (lossless by contract — the delta pipeline's
+//! bit-exactness depends on it), and `decompress` fails rather than
+//! return data of the wrong length.
+//!
+//! ```
+//! use mgit::delta::Codec;
+//!
+//! let data: Vec<u8> = (0..100u8).flat_map(|b| [b, 0, 0, 0]).collect();
+//! let packed = Codec::Rle.compress(&data).unwrap();
+//! assert_eq!(Codec::Rle.decompress(&packed, data.len()).unwrap(), data);
+//! // persisted ids round-trip and never change
+//! assert_eq!(Codec::from_code(Codec::Rle.code()).unwrap(), Codec::Rle);
+//! ```
 
 use std::io::{Read, Write};
 

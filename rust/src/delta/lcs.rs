@@ -3,6 +3,18 @@
 //! so deltas are only computed between parameters matched by an LCS over
 //! their shape sequences. For identical architectures this reduces to the
 //! identity mapping of corresponding layers.
+//!
+//! Invariant: the returned pairs are strictly increasing in *both*
+//! coordinates (a valid common subsequence — matches never cross) and
+//! each pair's keys compare equal; for identical sequences every index
+//! maps to itself.
+//!
+//! ```
+//! use mgit::delta::lcs::lcs_pairs;
+//!
+//! assert_eq!(lcs_pairs(&[1, 2, 3], &[2, 3, 4]), vec![(1, 0), (2, 1)]);
+//! assert_eq!(lcs_pairs(&[7, 8], &[7, 8]), vec![(0, 0), (1, 1)]);
+//! ```
 
 use crate::checkpoint::ParamEntry;
 

@@ -16,6 +16,32 @@
 //! Chains are recursive: a parent may itself be delta-compressed; loading
 //! resolves the chain up to the first raw ancestor ([`load`]).
 //!
+//! ## Invariants
+//!
+//! * **Bit-exactness.** Decoding is the inverse of encoding down to
+//!   the f32 bit pattern: `resolve(delta(child, parent)) == child` for
+//!   every bit, not merely within `eps`. The quantizer bounds the
+//!   *reconstruction* error during `prepare_delta` (the lossy step is
+//!   taken once, before hashing), and all stored encodings of an id —
+//!   raw, parent-delta, or a re-based delta chosen by `repack
+//!   --similarity` — reproduce exactly the bytes that id was hashed
+//!   from. [`reencode_exact`] enforces this when the repacker re-bases
+//!   a chain: a candidate encoding that fails bitwise comparison is
+//!   discarded.
+//! * **Chain-depth bounds.** Every delta chain resolves in at most
+//!   `max_chain_depth` parent hops (default 8; see
+//!   [`crate::store::pack::RepackConfig`]). The repacker restores the
+//!   bound by re-basing over-deep tails onto nearer ancestors,
+//!   preserving ids.
+//! * **Acyclicity.** Parent edges always point at previously-stored
+//!   objects, and similarity-driven re-basing only selects bases that
+//!   were processed earlier in the repack order, so chains can never
+//!   form a cycle.
+//!
+//! The byte-level formats and the chunk-dedup layer built on top of
+//! this pipeline ([`chunk`], [`similarity`]) are documented in
+//! `docs/COMPRESSION.md`.
+//!
 //! ## Concurrent reconstruction
 //!
 //! The store tier is `Send + Sync` with lock-free pack reads, so chain
@@ -25,10 +51,12 @@
 //! re-materializing the same raw ancestors (branches in a lineage graph
 //! share base tensors by construction).
 
+pub mod chunk;
 pub mod codec;
 pub mod lcs;
 pub mod quant;
 pub mod rle;
+pub mod similarity;
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};

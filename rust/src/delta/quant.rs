@@ -14,6 +14,20 @@
 //!
 //! Guarantee: `|Δp − q·step| ≤ step/2 = ln(1+ε)` for all finite inputs
 //! within i32 range, which bounds the per-element reconstruction error.
+//!
+//! ```
+//! use mgit::delta::{DeltaKernel, NativeKernel};
+//! use mgit::delta::quant::step;
+//!
+//! let parent = vec![1.0f32, 2.0, -3.0];
+//! let child = vec![1.5f32, 1.875, -3.25];
+//! let eps = 1e-3f32;
+//! let q = NativeKernel.quantize(&parent, &child, eps).unwrap();
+//! let rec = NativeKernel.dequantize(&parent, &q, eps).unwrap();
+//! for (r, c) in rec.iter().zip(&child) {
+//!     assert!((r - c).abs() <= step(eps)); // within the error bound
+//! }
+//! ```
 
 use anyhow::Result;
 

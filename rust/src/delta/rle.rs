@@ -8,6 +8,17 @@
 //!
 //! Quantized deltas are dominated by zero bytes, RLE's best case; worst
 //! case expansion on incompressible data is 1/128 overhead.
+//!
+//! Invariant: `decode(encode(x)) == x` for every byte string, and
+//! `decode` rejects truncated input instead of producing partial
+//! output.
+//!
+//! ```
+//! let zeros = vec![0u8; 1024];
+//! let enc = mgit::delta::rle::encode(&zeros);
+//! assert!(enc.len() < zeros.len() / 16); // long runs collapse
+//! assert_eq!(mgit::delta::rle::decode(&enc).unwrap(), zeros);
+//! ```
 
 use anyhow::{bail, Result};
 

@@ -1,0 +1,167 @@
+//! Min-hash similarity sketches over chunk fingerprints.
+//!
+//! A [`Sketch`] is a bottom-k min-hash of an object's
+//! [chunk](crate::delta::chunk) fingerprint set: the `k` smallest
+//! 64-bit keys drawn from the chunk hashes. Two sketches estimate the
+//! Jaccard similarity of the underlying chunk sets without touching
+//! the data — O(k) memory per object, O(k) comparison time — which is
+//! what lets the repacker rank *every* previously-packed object as a
+//! candidate delta base in one pass (`repack --similarity`, see
+//! `docs/COMPRESSION.md`).
+//!
+//! Invariants:
+//!
+//! * **Deterministic.** Keys are the first 8 bytes of each SHA-256
+//!   chunk fingerprint (already uniform), so the same chunk set always
+//!   yields the same sketch.
+//! * **Mergeable estimate.** `similarity(a, b)` is the classic
+//!   bottom-k estimator: the fraction of the k smallest keys of
+//!   `A ∪ B` that appear in both sets. It is symmetric, in `[0, 1]`,
+//!   exactly 1.0 for identical non-empty sets and 0.0 for disjoint
+//!   ones.
+//!
+//! ```
+//! use mgit::delta::chunk::{chunk_bytes, ChunkConfig};
+//! use mgit::delta::similarity::Sketch;
+//!
+//! let cfg = ChunkConfig::default();
+//! let base: Vec<u8> = (0..20_000u32).flat_map(|i| i.to_le_bytes()).collect();
+//! let mut near = base.clone();
+//! near[0] ^= 0xFF; // a single byte differs
+//! let far = vec![9u8; 20_000]; // unrelated content
+//!
+//! let a = Sketch::of_chunks(&chunk_bytes(&base, &cfg));
+//! let b = Sketch::of_chunks(&chunk_bytes(&near, &cfg));
+//! let c = Sketch::of_chunks(&chunk_bytes(&far, &cfg));
+//! assert_eq!(a.similarity(&a), 1.0);
+//! assert!(a.similarity(&b) > a.similarity(&c));
+//! ```
+
+use super::chunk::Chunk;
+
+/// Sketch size: the `k` in bottom-k. 16 keys give a Jaccard estimate
+/// with standard error ≈ 1/√k ≈ 0.25 — coarse, but base selection only
+/// needs to *rank* candidates and gate on a threshold, and every
+/// candidate that passes is verified bit-exactly before use.
+pub const SKETCH_K: usize = 16;
+
+/// Bottom-k min-hash sketch of a chunk fingerprint set.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Sketch {
+    /// The k smallest distinct keys, sorted ascending.
+    keys: Vec<u64>,
+}
+
+impl Sketch {
+    /// Sketch a chunk list (as produced by
+    /// [`chunk_bytes`](crate::delta::chunk::chunk_bytes)).
+    pub fn of_chunks(chunks: &[Chunk]) -> Sketch {
+        Sketch::from_keys(chunks.iter().map(|c| {
+            u64::from_le_bytes([
+                c.hash[0], c.hash[1], c.hash[2], c.hash[3], c.hash[4], c.hash[5], c.hash[6],
+                c.hash[7],
+            ])
+        }))
+    }
+
+    /// Sketch an arbitrary key stream (already uniformly distributed).
+    pub fn from_keys(keys: impl IntoIterator<Item = u64>) -> Sketch {
+        let mut all: Vec<u64> = keys.into_iter().collect();
+        all.sort_unstable();
+        all.dedup();
+        all.truncate(SKETCH_K);
+        Sketch { keys: all }
+    }
+
+    /// Number of keys retained (`min(k, distinct chunks)`).
+    pub fn len(&self) -> usize {
+        self.keys.len()
+    }
+
+    /// True when the sketched chunk set was empty.
+    pub fn is_empty(&self) -> bool {
+        self.keys.is_empty()
+    }
+
+    /// Bottom-k Jaccard similarity estimate in `[0, 1]`.
+    ///
+    /// Merges the two sorted key lists, keeps the k smallest distinct
+    /// keys of the union, and returns the fraction present in both
+    /// sketches. Empty-vs-anything compares as 0.0.
+    pub fn similarity(&self, other: &Sketch) -> f64 {
+        if self.keys.is_empty() || other.keys.is_empty() {
+            return 0.0;
+        }
+        let k = SKETCH_K.min(self.keys.len().max(other.keys.len()));
+        let (mut i, mut j) = (0usize, 0usize);
+        let (mut taken, mut both) = (0usize, 0usize);
+        while taken < k && (i < self.keys.len() || j < other.keys.len()) {
+            let a = self.keys.get(i).copied();
+            let b = other.keys.get(j).copied();
+            match (a, b) {
+                (Some(x), Some(y)) if x == y => {
+                    both += 1;
+                    i += 1;
+                    j += 1;
+                }
+                (Some(x), Some(y)) if x < y => i += 1,
+                (Some(_), Some(_)) => j += 1,
+                (Some(_), None) => i += 1,
+                (None, Some(_)) => j += 1,
+                (None, None) => break,
+            }
+            taken += 1;
+        }
+        if taken == 0 {
+            return 0.0;
+        }
+        both as f64 / taken as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_sets_score_one() {
+        let s = Sketch::from_keys(1..=100u64);
+        assert_eq!(s.similarity(&s), 1.0);
+    }
+
+    #[test]
+    fn disjoint_sets_score_zero() {
+        let a = Sketch::from_keys((0..100u64).map(|i| i * 2));
+        let b = Sketch::from_keys((0..100u64).map(|i| i * 2 + 1));
+        assert_eq!(a.similarity(&b), 0.0);
+    }
+
+    #[test]
+    fn empty_scores_zero() {
+        let e = Sketch::from_keys(std::iter::empty());
+        let s = Sketch::from_keys(1..=10u64);
+        assert!(e.is_empty());
+        assert_eq!(e.similarity(&s), 0.0);
+        assert_eq!(e.similarity(&e), 0.0);
+    }
+
+    #[test]
+    fn overlap_ranks_monotonically() {
+        // 75% overlap must score higher than 25% overlap against the
+        // same reference.
+        let base = Sketch::from_keys(0..64u64);
+        let hi = Sketch::from_keys((0..48u64).chain(1000..1016));
+        let lo = Sketch::from_keys((0..16u64).chain(1000..1048));
+        assert!(base.similarity(&hi) > base.similarity(&lo));
+        // symmetry
+        assert_eq!(base.similarity(&hi), hi.similarity(&base));
+    }
+
+    #[test]
+    fn dedup_and_truncation() {
+        let s = Sketch::from_keys([5u64, 5, 5, 1, 2, 2].into_iter());
+        assert_eq!(s.len(), 3);
+        let big = Sketch::from_keys(0..10_000u64);
+        assert_eq!(big.len(), SKETCH_K);
+    }
+}

@@ -236,7 +236,8 @@ pub struct VerifyPackRequest;
 pub struct PackCheck {
     pub path: String,
     pub objects: usize,
-    /// Pack format version (1 = legacy, 2 = framed + index metadata).
+    /// Pack format version (1 = legacy, 2 = framed + index metadata,
+    /// 3 = chunked with `MGCR` recipes).
     pub version: u8,
     /// Outer framing (`raw`/`zstd`).
     pub framing: &'static str,

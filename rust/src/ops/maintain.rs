@@ -36,6 +36,15 @@ pub struct RepackRequest {
     /// writable serving tier repacks live with this on so readers still
     /// holding a pre-repack store snapshot keep resolving.
     pub keep_loose: bool,
+    /// Similarity-driven delta base selection threshold
+    /// (`--similarity <t>`, None disables; see `docs/COMPRESSION.md`).
+    pub similarity: Option<f64>,
+    /// Minimum fractional saving a delta must achieve over raw bytes
+    /// (`--min-savings`, only consulted with `similarity` on).
+    pub min_savings: f64,
+    /// Write the new pack in chunked v3 format with cross-object chunk
+    /// dedup (`--chunk-dedup`; implied by `--similarity`).
+    pub chunk_dedup: bool,
 }
 
 impl Default for RepackRequest {
@@ -48,6 +57,9 @@ impl Default for RepackRequest {
             max_dead_ratio: Some(0.5),
             framing: PackFraming::Raw,
             keep_loose: false,
+            similarity: None,
+            min_savings: 0.1,
+            chunk_dedup: false,
         }
     }
 }
@@ -71,6 +83,9 @@ impl RepackRequest {
             max_dead_ratio: self.max_dead_ratio,
             framing: self.framing,
             keep_loose: self.keep_loose,
+            similarity: self.similarity,
+            min_savings: self.min_savings,
+            chunk_dedup: self.chunk_dedup,
             ..RepackConfig::default()
         };
         let roots = repo.graph.object_roots();
@@ -108,6 +123,11 @@ impl Report for RepackReport {
             .set("max_depth_after", p.max_depth_after)
             .set("rebased_delta", p.rebased_delta)
             .set("new_bases", p.new_bases)
+            .set("base_rewrites", p.base_rewrites)
+            .set("delta_skipped", p.delta_skipped)
+            .set("chunks_shared", p.chunks_shared)
+            .set("chunk_bytes_saved", p.chunk_bytes_saved)
+            .set("recipes", p.recipes)
             .set("bytes_before", p.bytes_before)
             .set("bytes_after", p.bytes_after)
             .set("loose_demoted", p.loose_demoted)

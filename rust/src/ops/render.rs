@@ -274,6 +274,21 @@ impl fmt::Display for RepackReport {
             "chains: max depth {} -> {} ({} re-based onto nearer ancestors, {} new bases)",
             p.max_depth_before, p.max_depth_after, p.rebased_delta, p.new_bases
         ));
+        if p.base_rewrites > 0 || p.delta_skipped > 0 {
+            lines.push(format!(
+                "bases:  {} re-based onto similar non-parents, {} deltas dropped (below \
+                 min-savings)",
+                p.base_rewrites, p.delta_skipped
+            ));
+        }
+        if p.recipes > 0 {
+            lines.push(format!(
+                "dedup:  {} chunk recipes ({} shared chunks, {} saved)",
+                p.recipes,
+                p.chunks_shared,
+                human_bytes(p.chunk_bytes_saved)
+            ));
+        }
         lines.push(format!(
             "store:  {} -> {} ({} loose demoted, {} pruned)",
             human_bytes(p.bytes_before),

@@ -1,0 +1,233 @@
+//! `MGCR` chunk-ref recipes: the pack v3 entry payload that stores an
+//! object as a copy/literal program over earlier bytes of the same
+//! pack.
+//!
+//! When the chunk-dedup writer ([`super::PackWriter`], `repack
+//! --similarity`) sees an object whose content-defined chunks
+//! ([`crate::delta::chunk`]) already exist earlier in the pack being
+//! written, it stores a recipe instead of the bytes: shared ranges
+//! become `copy` ops referencing the pack's *logical* image, novel
+//! ranges become inline `literal` ops. Reassembly
+//! ([`Recipe::reassemble`]) is a single forward pass — every copy
+//! source lies strictly before the recipe's own entry, so there is no
+//! recursion and no cycle — and reproduces the original object bytes
+//! exactly.
+//!
+//! On-disk layout (little-endian), stored where an inline object would
+//! be, behind the usual `len u64` entry prefix:
+//!
+//! ```text
+//! magic "MGCR"                  4 bytes
+//! ulen  u64                     reconstructed object byte length
+//! nops  u32                     number of ops
+//! ops nops ×:
+//!     kind u8                   0 = copy, 1 = literal
+//!     -- copy --
+//!     src  u64                  logical offset in this pack's image
+//!     len  u32
+//!     -- literal --
+//!     len  u32
+//!     bytes [len]
+//! ```
+
+use anyhow::{bail, Result};
+
+use super::ByteReader;
+
+/// Recipe payload magic.
+pub const RECIPE_MAGIC: &[u8; 4] = b"MGCR";
+
+/// One step of a recipe program.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RecipeOp {
+    /// Copy `len` bytes from logical offset `src` of the same pack.
+    Copy { src: u64, len: u32 },
+    /// Append these bytes verbatim.
+    Literal(Vec<u8>),
+}
+
+/// A decoded chunk-ref recipe: the reconstructed length plus the op
+/// program that produces it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Recipe {
+    /// Exact byte length of the reconstructed object.
+    pub ulen: u64,
+    pub ops: Vec<RecipeOp>,
+}
+
+/// Serialized size of the fixed recipe header (magic + ulen + nops).
+pub const HEADER_LEN: usize = 4 + 8 + 4;
+/// Serialized size of one copy op (kind + src + len).
+pub const COPY_OP_LEN: usize = 1 + 8 + 4;
+/// Serialized overhead of one literal op before its data (kind + len).
+pub const LITERAL_OP_OVERHEAD: usize = 1 + 4;
+
+impl Recipe {
+    /// Quick sniff: do these stored bytes look like a recipe?
+    pub fn is_recipe(bytes: &[u8]) -> bool {
+        bytes.len() >= 4 && &bytes[..4] == RECIPE_MAGIC
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.encoded_len());
+        out.extend_from_slice(RECIPE_MAGIC);
+        out.extend_from_slice(&self.ulen.to_le_bytes());
+        out.extend_from_slice(&(self.ops.len() as u32).to_le_bytes());
+        for op in &self.ops {
+            match op {
+                RecipeOp::Copy { src, len } => {
+                    out.push(0);
+                    out.extend_from_slice(&src.to_le_bytes());
+                    out.extend_from_slice(&len.to_le_bytes());
+                }
+                RecipeOp::Literal(data) => {
+                    out.push(1);
+                    out.extend_from_slice(&(data.len() as u32).to_le_bytes());
+                    out.extend_from_slice(data);
+                }
+            }
+        }
+        out
+    }
+
+    /// Exact serialized length of [`Recipe::encode`]'s output, without
+    /// materializing it — the writer uses this to decide whether a
+    /// recipe actually saves bytes before committing to one.
+    pub fn encoded_len(&self) -> usize {
+        HEADER_LEN
+            + self
+                .ops
+                .iter()
+                .map(|op| match op {
+                    RecipeOp::Copy { .. } => COPY_OP_LEN,
+                    RecipeOp::Literal(d) => LITERAL_OP_OVERHEAD + d.len(),
+                })
+                .sum::<usize>()
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<Recipe> {
+        let mut r = ByteReader { b: bytes, pos: 0 };
+        if r.take(4)? != RECIPE_MAGIC {
+            bail!("not an MGCR chunk recipe");
+        }
+        let ulen = r.u64()?;
+        let nops = r.u32()? as usize;
+        let mut ops = Vec::with_capacity(nops.min(1024));
+        for _ in 0..nops {
+            match r.u8()? {
+                0 => {
+                    let src = r.u64()?;
+                    let len = r.u32()?;
+                    ops.push(RecipeOp::Copy { src, len });
+                }
+                1 => {
+                    let len = r.u32()? as usize;
+                    ops.push(RecipeOp::Literal(r.take(len)?.to_vec()));
+                }
+                other => bail!("unknown recipe op kind {other}"),
+            }
+        }
+        if r.pos != bytes.len() {
+            bail!("trailing bytes in chunk recipe");
+        }
+        Ok(Recipe { ulen, ops })
+    }
+
+    /// The (src, len) pair of every copy op, for bounds validation.
+    pub fn copy_ranges(&self) -> impl Iterator<Item = (u64, u64)> + '_ {
+        self.ops.iter().filter_map(|op| match op {
+            RecipeOp::Copy { src, len } => Some((*src, *len as u64)),
+            RecipeOp::Literal(_) => None,
+        })
+    }
+
+    /// Run the program: `read` serves copy ops from the pack's logical
+    /// image. Fails if the output length disagrees with `ulen` — a
+    /// recipe must reproduce its object exactly or not at all.
+    pub fn reassemble(
+        &self,
+        read: impl Fn(u64, usize) -> Result<Vec<u8>>,
+    ) -> Result<Vec<u8>> {
+        let mut out = Vec::with_capacity(self.ulen as usize);
+        for op in &self.ops {
+            match op {
+                RecipeOp::Copy { src, len } => {
+                    out.extend_from_slice(&read(*src, *len as usize)?);
+                }
+                RecipeOp::Literal(data) => out.extend_from_slice(data),
+            }
+        }
+        if out.len() as u64 != self.ulen {
+            bail!(
+                "chunk recipe reassembled to {} bytes, header says {}",
+                out.len(),
+                self.ulen
+            );
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Recipe {
+        Recipe {
+            ulen: 10,
+            ops: vec![
+                RecipeOp::Copy { src: 100, len: 4 },
+                RecipeOp::Literal(vec![9, 8, 7]),
+                RecipeOp::Copy { src: 200, len: 3 },
+            ],
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let r = sample();
+        let bytes = r.encode();
+        assert_eq!(bytes.len(), r.encoded_len());
+        assert!(Recipe::is_recipe(&bytes));
+        assert_eq!(Recipe::decode(&bytes).unwrap(), r);
+    }
+
+    #[test]
+    fn reassemble_runs_the_program() {
+        let r = sample();
+        let out = r
+            .reassemble(|src, len| {
+                // Pretend the logical image holds `src % 256` repeated.
+                Ok(vec![(src % 256) as u8; len])
+            })
+            .unwrap();
+        assert_eq!(out, vec![100, 100, 100, 100, 9, 8, 7, 200, 200, 200]);
+    }
+
+    #[test]
+    fn length_mismatch_rejected() {
+        let mut r = sample();
+        r.ulen = 11;
+        assert!(r.reassemble(|src, len| Ok(vec![(src % 256) as u8; len])).is_err());
+    }
+
+    #[test]
+    fn truncation_and_garbage_rejected() {
+        let bytes = sample().encode();
+        assert!(Recipe::decode(&bytes[..bytes.len() - 1]).is_err());
+        assert!(Recipe::decode(b"NOPE").is_err());
+        let mut trailing = bytes.clone();
+        trailing.push(0);
+        assert!(Recipe::decode(&trailing).is_err());
+        let mut bad_op = bytes;
+        bad_op[HEADER_LEN] = 7; // first op kind
+        assert!(Recipe::decode(&bad_op).is_err());
+    }
+
+    #[test]
+    fn copy_ranges_lists_only_copies() {
+        let r = sample();
+        let ranges: Vec<_> = r.copy_ranges().collect();
+        assert_eq!(ranges, vec![(100, 4), (200, 3)]);
+    }
+}

@@ -57,6 +57,22 @@
 //! Either way every previously readable id stays readable and resolves
 //! to identical bytes, and no live chain exceeds `max_chain_depth`.
 //!
+//! ## Similarity-driven base selection (`repack --similarity`)
+//!
+//! With [`RepackConfig::similarity`] set, the delta pass stops trusting
+//! lineage alone. Every processed tensor contributes a min-hash sketch
+//! ([`crate::delta::similarity`]) over its content-defined chunks, and
+//! each delta is scored against the lineage parent, the depth-repair
+//! ancestor, and the best sketch-similar non-parents. The smallest
+//! bit-exact encoding wins; if none saves at least
+//! [`RepackConfig::min_savings`] of the raw f32 bytes, the object is
+//! stored raw instead (no delta at all). Candidates are restricted to
+//! objects processed *earlier* in the depth-sorted order, so the
+//! re-based parent graph is acyclic by construction. Pairing the pass
+//! with [`RepackConfig::chunk_dedup`] writes the pack in chunked v3
+//! format so byte ranges shared across unrelated objects are stored
+//! once. The full model lives in `docs/COMPRESSION.md`.
+//!
 //! After the new pack is sealed, old packs are deleted (full mode only),
 //! loose copies of packed objects are removed (the loose directory
 //! becomes a pure write-staging area), and with [`RepackConfig::prune`]
@@ -70,10 +86,32 @@ use std::path::PathBuf;
 use anyhow::{anyhow, bail, Context, Result};
 
 use super::{EntryMeta, PackFile, PackFraming, PackWriter};
+use crate::delta::chunk::{chunk_bytes, ChunkConfig};
+use crate::delta::similarity::Sketch;
 use crate::delta::{self, Codec, DeltaKernel};
 use crate::store::format::{payload_decodes, ObjectKind, TensorObject};
 use crate::store::{ObjectId, ObjectStore, Store};
 use crate::tensor::f32_to_bytes;
+
+/// Deltas re-based onto a similar non-parent during repack
+/// (`delta.base_rewrites`).
+static OBS_BASE_REWRITES: crate::obs::LazyCounter =
+    crate::obs::LazyCounter::new("delta.base_rewrites");
+
+/// How many sketch-ranked candidates get a bit-exact re-encode trial
+/// per object. Trials are the expensive step (full resolve + quantize +
+/// compress), so only the best-scoring few are attempted.
+const MAX_BASE_TRIALS: usize = 4;
+
+/// Which candidate won similarity-driven base selection for one delta.
+enum BasePick {
+    /// The lineage parent's existing encoding (kept verbatim).
+    Parent,
+    /// The depth-repair ancestor (counts as `rebased_delta`).
+    Ancestor,
+    /// A sketch-ranked non-parent (counts as `base_rewrites`).
+    Similar,
+}
 
 /// Whether a repack rewrites everything or only packs new loose objects.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -123,6 +161,25 @@ pub struct RepackConfig {
     /// only path to the data. A later offline `mgit repack` (default:
     /// off) demotes them.
     pub keep_loose: bool,
+    /// Similarity-driven delta base selection. `Some(t)` turns the
+    /// repack's delta pass into a candidate scorer: for each delta it
+    /// considers the lineage parent, the depth-repair ancestor, and any
+    /// already-processed object whose min-hash sketch scores ≥ `t`
+    /// (0..=1), keeping whichever bit-exact encoding is smallest — or no
+    /// delta at all when none beats [`RepackConfig::min_savings`].
+    /// `None` (default) keeps the classic lineage-only pass byte-exact.
+    pub similarity: Option<f64>,
+    /// Minimum fractional saving a delta must achieve over raw f32 bytes
+    /// to be kept (0..1). A delta whose encoding is larger than
+    /// `(1 - min_savings) × raw` is dropped and the object stored raw —
+    /// mediagit's "similar enough *and* saves enough" rule. Only
+    /// consulted when [`RepackConfig::similarity`] is on.
+    pub min_savings: f64,
+    /// Write the new pack in chunked v3 format: content-defined chunks
+    /// shared with earlier objects in the same pack are stored once and
+    /// replayed through `MGCR` recipes. Reads stay bit-exact; old packs
+    /// are untouched.
+    pub chunk_dedup: bool,
 }
 
 impl Default for RepackConfig {
@@ -139,6 +196,9 @@ impl Default for RepackConfig {
             framing: PackFraming::Raw,
             decode_mark: false,
             keep_loose: false,
+            similarity: None,
+            min_savings: 0.1,
+            chunk_dedup: false,
         }
     }
 }
@@ -191,6 +251,21 @@ pub struct RepackReport {
     pub mark_meta_fallback: usize,
     /// Outer framing of the pack this run wrote.
     pub framing: PackFraming,
+    /// Deltas re-based onto a sketch-similar *non-parent* (similarity
+    /// pass only; re-bases onto a lineage ancestor stay in
+    /// [`RepackReport::rebased_delta`]).
+    pub base_rewrites: usize,
+    /// Deltas dropped because no candidate base met
+    /// [`RepackConfig::min_savings`]; the object was stored raw even
+    /// though its chain depth was fine.
+    pub delta_skipped: usize,
+    /// Content-defined chunks served from earlier pack bytes instead of
+    /// being stored again ([`RepackConfig::chunk_dedup`]).
+    pub chunks_shared: u64,
+    /// Bytes saved by chunk dedup (shared bytes minus recipe overhead).
+    pub chunk_bytes_saved: u64,
+    /// Objects stored as `MGCR` recipes in the new pack.
+    pub recipes: usize,
 }
 
 /// Chain depth of every object in the store (0 = raw/opaque base).
@@ -266,6 +341,14 @@ pub fn repack(
 ) -> Result<RepackReport> {
     if cfg.max_chain_depth == 0 {
         bail!("max_chain_depth must be >= 1");
+    }
+    if let Some(t) = cfg.similarity {
+        if !(0.0..=1.0).contains(&t) {
+            bail!("similarity threshold must be within 0..=1, got {t}");
+        }
+    }
+    if !(0.0..1.0).contains(&cfg.min_savings) {
+        bail!("min_savings must be within 0..1, got {}", cfg.min_savings);
     }
     let packed = store
         .as_packed()
@@ -436,6 +519,12 @@ pub fn repack(
     // this loop knows the global chain structure).
     let mut new_meta: HashMap<ObjectId, EntryMeta> = HashMap::with_capacity(order.len());
     let mut resolve_cache: HashMap<ObjectId, Vec<f32>> = HashMap::new();
+    // Similarity pass state: every freshly processed tensor contributes
+    // (id, numel, sketch) so *later* objects in the depth-sorted order
+    // can consider it as a delta base. Earlier-only candidates make the
+    // re-based graph acyclic by construction.
+    let sketch_cfg = ChunkConfig::default();
+    let mut cand_pool: Vec<(ObjectId, usize, Sketch)> = Vec::new();
     for &id in &order {
         if incremental && in_pack.contains(&id) {
             // Already sealed in a pack: retained as-is. Its depth still
@@ -460,8 +549,12 @@ pub fn repack(
             Ok(o) => o,
         };
         match obj {
-            TensorObject::Raw { ref shape, .. } => {
+            TensorObject::Raw { ref shape, ref payload, .. } => {
                 let numel = Some(shape.iter().product::<usize>() as u64);
+                if cfg.similarity.is_some() {
+                    let sk = Sketch::of_chunks(&chunk_bytes(payload, &sketch_cfg));
+                    cand_pool.push((id, payload.len() / 4, sk));
+                }
                 new_depth.insert(id, 0);
                 new_bytes.insert(id, bytes);
                 new_meta.insert(
@@ -478,7 +571,8 @@ pub fn repack(
                         id.short()
                     )
                 })?;
-                if pd + 1 <= cfg.max_chain_depth {
+                let depth_ok = pd + 1 <= cfg.max_chain_depth;
+                if depth_ok && cfg.similarity.is_none() {
                     // Parent kept (or re-based value-exactly): the stored
                     // delta still reconstructs the identical content.
                     new_depth.insert(id, pd + 1);
@@ -494,9 +588,139 @@ pub fn repack(
                     );
                     continue;
                 }
+                let values = delta::resolve_tensor(store, id, kernel, &mut resolve_cache, 0)?;
+                if let Some(threshold) = cfg.similarity {
+                    // Similarity-driven base selection: score candidate
+                    // bases, keep the smallest bit-exact encoding, or no
+                    // delta at all when nothing meets `min_savings`.
+                    let numel_n = values.len();
+                    let raw_len = (numel_n * 4) as f64;
+                    let payload = f32_to_bytes(&values);
+                    let sketch = Sketch::of_chunks(&chunk_bytes(&payload, &sketch_cfg));
+                    let budget_ok =
+                        |encoded: usize| encoded as f64 <= (1.0 - cfg.min_savings) * raw_len;
+
+                    // Baseline: what the classic pass would have done.
+                    let mut best: Option<(Vec<u8>, ObjectId, usize, BasePick)> = None;
+                    if depth_ok && budget_ok(bytes.len()) {
+                        best = Some((bytes, parent, pd + 1, BasePick::Parent));
+                    } else if !depth_ok {
+                        let mut anc = parent;
+                        loop {
+                            if new_depth[&anc] + 1 <= cfg.max_chain_depth {
+                                break;
+                            }
+                            match parent_of.get(&anc).copied().flatten() {
+                                Some(p) => anc = p,
+                                None => break, // raw base always admits a child
+                            }
+                        }
+                        let anc_values =
+                            delta::resolve_tensor(store, anc, kernel, &mut resolve_cache, 0)?;
+                        if let Some(obj) = delta::reencode_exact(
+                            &values,
+                            &anc_values,
+                            anc,
+                            &shape,
+                            eps,
+                            Codec::from_code(codec)?,
+                            grid,
+                            kernel,
+                        )? {
+                            let enc = obj.encode();
+                            if budget_ok(enc.len()) {
+                                best = Some((enc, anc, new_depth[&anc] + 1, BasePick::Ancestor));
+                            }
+                        }
+                    }
+                    // Rank already-processed tensors by sketch score and
+                    // give the best few a bit-exact re-encode trial.
+                    let mut scored: Vec<(f64, ObjectId)> = cand_pool
+                        .iter()
+                        .filter(|(cid, n, _)| {
+                            *cid != id
+                                && *cid != parent
+                                && *n == numel_n
+                                && new_depth
+                                    .get(cid)
+                                    .is_some_and(|d| d + 1 <= cfg.max_chain_depth)
+                        })
+                        .map(|(cid, _, sk)| (sketch.similarity(sk), *cid))
+                        .filter(|(score, _)| *score >= threshold)
+                        .collect();
+                    scored.sort_by(|a, b| b.0.total_cmp(&a.0));
+                    for &(_, cid) in scored.iter().take(MAX_BASE_TRIALS) {
+                        let cand_values =
+                            delta::resolve_tensor(store, cid, kernel, &mut resolve_cache, 0)?;
+                        if let Some(obj) = delta::reencode_exact(
+                            &values,
+                            &cand_values,
+                            cid,
+                            &shape,
+                            eps,
+                            Codec::from_code(codec)?,
+                            grid,
+                            kernel,
+                        )? {
+                            let enc = obj.encode();
+                            let smaller =
+                                best.as_ref().map_or(true, |(b, ..)| enc.len() < b.len());
+                            if budget_ok(enc.len()) && smaller {
+                                best = Some((enc, cid, new_depth[&cid] + 1, BasePick::Similar));
+                            }
+                        }
+                    }
+                    match best {
+                        Some((enc, base, d, pick)) => {
+                            match pick {
+                                BasePick::Parent => {}
+                                BasePick::Ancestor => report.rebased_delta += 1,
+                                BasePick::Similar => {
+                                    report.base_rewrites += 1;
+                                    OBS_BASE_REWRITES.inc();
+                                }
+                            }
+                            new_depth.insert(id, d);
+                            new_bytes.insert(id, enc);
+                            new_meta.insert(
+                                id,
+                                EntryMeta {
+                                    kind: ObjectKind::Delta,
+                                    parent: Some(base),
+                                    depth: d as u32,
+                                    numel,
+                                },
+                            );
+                        }
+                        None => {
+                            // No base pays its way (mediagit's "similar
+                            // enough AND saves enough" rule): store raw.
+                            // The payload is the logical content, so the
+                            // id is unchanged.
+                            if depth_ok {
+                                report.delta_skipped += 1;
+                            } else {
+                                report.new_bases += 1;
+                            }
+                            let raw = TensorObject::Raw { dtype, shape, payload };
+                            new_depth.insert(id, 0);
+                            new_bytes.insert(id, raw.encode());
+                            new_meta.insert(
+                                id,
+                                EntryMeta {
+                                    kind: ObjectKind::Raw,
+                                    parent: None,
+                                    depth: 0,
+                                    numel,
+                                },
+                            );
+                        }
+                    }
+                    cand_pool.push((id, numel_n, sketch));
+                    continue;
+                }
                 // Chain too deep: re-base against the nearest ancestor
                 // that can still take a child without busting the limit.
-                let values = delta::resolve_tensor(store, id, kernel, &mut resolve_cache, 0)?;
                 let mut anc = parent;
                 loop {
                     if new_depth[&anc] + 1 <= cfg.max_chain_depth {
@@ -586,7 +810,11 @@ pub fn repack(
     //    incremental mode only freshly encoded (former loose) objects
     //    are in `new_bytes`; in full mode every live object is.
     // ------------------------------------------------------------------
-    let mut writer = PackWriter::create_with(&pack_dir, cfg.framing)?;
+    let mut writer = if cfg.chunk_dedup {
+        PackWriter::create_chunked(&pack_dir, cfg.framing)?
+    } else {
+        PackWriter::create_with(&pack_dir, cfg.framing)?
+    };
     for &id in &order {
         if let Some(bytes) = new_bytes.get(&id) {
             writer.add_with_meta(id, bytes, new_meta[&id])?;
@@ -600,6 +828,10 @@ pub fn repack(
         writer.add(id, &store.get(&id)?)?;
         report.carried_dead += 1;
     }
+    let (chunks_shared, chunk_bytes_saved, recipes) = writer.dedup_stats();
+    report.chunks_shared = chunks_shared;
+    report.chunk_bytes_saved = chunk_bytes_saved;
+    report.recipes = recipes;
     let new_pack: Option<PackFile> = if writer.object_count() > 0 {
         Some(writer.finish()?)
     } else {
@@ -1137,6 +1369,172 @@ mod tests {
         assert_eq!(r.packs_after, 1);
         assert!(store.has(&ids[0]));
         assert!(!store.has(&tip), "pruned full rewrite drops packed garbage");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// Store a raw tensor whose values sit exactly on the `k·step(eps)`
+    /// grid (so any later grid re-encode is bit-exact). Returns its id.
+    fn put_grid_raw(store: &Store, ks: &[i32], eps: f32) -> (ObjectId, Vec<f32>) {
+        use crate::delta::quant;
+        use crate::store::hash_tensor;
+        use crate::tensor::DType;
+        let s = quant::step(eps);
+        let vals: Vec<f32> = ks.iter().map(|&k| k as f32 * s).collect();
+        let payload = f32_to_bytes(&vals);
+        let id = hash_tensor(DType::F32, &[vals.len()], &payload);
+        store
+            .put(
+                id,
+                &TensorObject::Raw { dtype: DType::F32, shape: vec![vals.len()], payload }
+                    .encode(),
+            )
+            .unwrap();
+        (id, vals)
+    }
+
+    /// Store a grid-mode delta of `child_ks` against `parent`. Returns
+    /// the child's id and resolved values.
+    fn put_grid_delta(
+        store: &Store,
+        parent: ObjectId,
+        parent_ks: &[i32],
+        child_ks: &[i32],
+        eps: f32,
+    ) -> (ObjectId, Vec<f32>) {
+        use crate::delta::quant;
+        use crate::store::hash_tensor;
+        use crate::tensor::{i32_to_bytes, DType};
+        let s = quant::step(eps);
+        let codec = Codec::Deflate;
+        let q: Vec<i32> = parent_ks.iter().zip(child_ks).map(|(&p, &c)| p - c).collect();
+        let vals: Vec<f32> = child_ks.iter().map(|&k| k as f32 * s).collect();
+        let payload = f32_to_bytes(&vals);
+        let id = hash_tensor(DType::F32, &[vals.len()], &payload);
+        let obj = TensorObject::Delta {
+            dtype: DType::F32,
+            shape: vec![vals.len()],
+            parent,
+            eps,
+            codec: codec.code(),
+            n_quant: vals.len(),
+            grid: true,
+            payload: codec.compress(&i32_to_bytes(&q)).unwrap(),
+        };
+        store.put(id, &obj.encode()).unwrap();
+        (id, vals)
+    }
+
+    /// Deterministic pseudo-random grid coefficients.
+    fn grid_ks(n: usize, seed: u64) -> Vec<i32> {
+        let mut x = seed | 1;
+        (0..n)
+            .map(|_| {
+                x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                ((x >> 33) % 2000) as i32 - 1000
+            })
+            .collect()
+    }
+
+    #[test]
+    fn similarity_rebases_onto_similar_non_parent() {
+        let (dir, mut store) = tmp_store("sim-golden");
+        let len = 4096usize;
+        let eps = 1e-4f32;
+        // A: the lineage parent, content unrelated to the child.
+        let ka = grid_ks(len, 7);
+        // C: an unrelated raw object that happens to share almost all of
+        // the child's content (cross-lineage near-duplicate).
+        let kc = grid_ks(len, 99);
+        // D: child of A by lineage, but nearly identical to C.
+        let mut kd = kc.clone();
+        for k in kd.iter_mut().take(16) {
+            *k += 3;
+        }
+        let (a_id, _) = put_grid_raw(&store, &ka, eps);
+        let (c_id, _) = put_grid_raw(&store, &kc, eps);
+        let (d_id, d_vals) = put_grid_delta(&store, a_id, &ka, &kd, eps);
+
+        let cfg = RepackConfig {
+            mode: RepackMode::Full,
+            similarity: Some(0.5),
+            ..RepackConfig::default()
+        };
+        let report =
+            repack(&mut store, &[d_id, c_id, a_id], &cfg, &NativeKernel).unwrap();
+        assert_eq!(report.base_rewrites, 1, "report: {report:?}");
+
+        // D now hangs off C, and still resolves bit-exactly.
+        let meta = store.object_meta(&d_id).unwrap();
+        assert_eq!(meta.parent, Some(c_id), "delta must re-base onto the similar object");
+        let mut cache = HashMap::new();
+        let got = delta::resolve_tensor(&store, d_id, &NativeKernel, &mut cache, 0).unwrap();
+        assert_eq!(got.len(), d_vals.len());
+        for (x, y) in d_vals.iter().zip(&got) {
+            assert_eq!(x.to_bits(), y.to_bits(), "re-based delta changed content");
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn similarity_drops_deltas_below_min_savings() {
+        let (dir, mut store) = tmp_store("sim-skip");
+        let ids = build_chain(&store, 3, 21);
+        let before = resolve_all(&store, &ids);
+        let cfg = RepackConfig {
+            mode: RepackMode::Full,
+            similarity: Some(0.0),
+            min_savings: 0.99, // no real delta saves 99%
+            ..RepackConfig::default()
+        };
+        let roots = vec![*ids.last().unwrap()];
+        let report = repack(&mut store, &roots, &cfg, &NativeKernel).unwrap();
+        assert_eq!(report.delta_skipped, 3, "report: {report:?}");
+        assert_eq!(report.max_depth_after, 0, "every delta must be stored raw");
+        let after = resolve_all(&store, &ids);
+        for (b, a) in before.iter().zip(&after) {
+            for (x, y) in b.iter().zip(a) {
+                assert_eq!(x.to_bits(), y.to_bits(), "raw promotion changed content");
+            }
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn similarity_pass_preserves_content_and_depth_cap() {
+        let (dir, mut store) = tmp_store("sim-cap");
+        let ids = build_chain(&store, 12, 5);
+        let before = resolve_all(&store, &ids);
+        let cfg = RepackConfig {
+            max_chain_depth: 4,
+            mode: RepackMode::Full,
+            similarity: Some(0.9),
+            ..RepackConfig::default()
+        };
+        let roots = vec![*ids.last().unwrap()];
+        let report = repack(&mut store, &roots, &cfg, &NativeKernel).unwrap();
+        assert!(report.max_depth_after <= 4);
+        let after = resolve_all(&store, &ids);
+        for (b, a) in before.iter().zip(&after) {
+            for (x, y) in b.iter().zip(a) {
+                assert_eq!(x.to_bits(), y.to_bits(), "similarity pass changed content");
+            }
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn similarity_config_is_validated() {
+        let (dir, mut store) = tmp_store("sim-val");
+        let ids = build_chain(&store, 1, 3);
+        let roots = vec![*ids.last().unwrap()];
+        let bad_t = RepackConfig { similarity: Some(1.5), ..RepackConfig::default() };
+        assert!(repack(&mut store, &roots, &bad_t, &NativeKernel).is_err());
+        let bad_s = RepackConfig {
+            similarity: Some(0.5),
+            min_savings: 1.0,
+            ..RepackConfig::default()
+        };
+        assert!(repack(&mut store, &roots, &bad_s, &NativeKernel).is_err());
         std::fs::remove_dir_all(&dir).unwrap();
     }
 }

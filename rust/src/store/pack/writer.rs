@@ -3,6 +3,15 @@
 //! `finish` seals the trailer, renames the pack to its content hash, and
 //! writes the sidecar v2 index (delta-parent/kind/depth metadata per
 //! entry).
+//!
+//! [`PackWriter::create_chunked`] additionally runs every object
+//! through the content-defined chunker ([`crate::delta::chunk`]) and
+//! keeps an in-memory chunk table (fingerprint → logical offset) for
+//! the pack being written. An object whose chunks largely already
+//! exist earlier in the pack is stored as an `MGCR` copy/literal
+//! [`recipe`](super::recipe) — cross-object byte dedup with no lineage
+//! edge required — and the pack is sealed as version 3 so old readers
+//! never misparse a recipe as object bytes.
 
 use std::collections::HashMap;
 use std::fs::File;
@@ -14,10 +23,121 @@ use std::path::PathBuf;
 use anyhow::{Context, Result};
 use sha2::{Digest, Sha256};
 
+use super::recipe::{self, Recipe, RecipeOp};
 use super::{
     header_len, EntryMeta, IdxEntry, PackFile, PackFraming, PackIndex, PACK_MAGIC, VERSION,
+    VERSION_CHUNKED,
 };
+use crate::delta::chunk::{chunk_bytes, Chunk, ChunkConfig};
 use crate::store::ObjectId;
+
+/// Shared chunk copies written as recipe ops (`dedup.chunks_shared`).
+static OBS_CHUNKS_SHARED: crate::obs::LazyCounter =
+    crate::obs::LazyCounter::new("dedup.chunks_shared");
+/// Bytes saved by storing recipes instead of inline objects
+/// (`dedup.bytes_saved`).
+static OBS_BYTES_SAVED: crate::obs::LazyCounter =
+    crate::obs::LazyCounter::new("dedup.bytes_saved");
+
+/// A recipe must beat the inline encoding by at least this many bytes;
+/// marginal recipes are not worth the indirection on the read path.
+const RECIPE_MIN_GAIN: usize = 32;
+
+/// Chunk-dedup state for one pack being written.
+struct ChunkDedup {
+    cfg: ChunkConfig,
+    /// Chunk fingerprint → (logical offset, length) of the first place
+    /// those bytes were physically written in this pack (inline entry
+    /// bytes or a recipe literal).
+    table: HashMap<[u8; 32], (u64, u32)>,
+    shared: u64,
+    bytes_saved: u64,
+    recipes: usize,
+}
+
+/// How one object will be stored, decided before any byte is written.
+enum Plan {
+    /// Chunking disabled: the classic path, untouched.
+    Passthrough,
+    /// Store inline and register these chunks for later objects.
+    Inline(Vec<Chunk>),
+    /// Store a recipe.
+    Recipe {
+        bytes: Vec<u8>,
+        /// (fingerprint, offset within the recipe bytes, len) of each
+        /// literal-carried chunk — registered post-write so later
+        /// objects can copy from this entry's literals too.
+        literals: Vec<([u8; 32], u64, u32)>,
+        hits: u64,
+        saved: u64,
+    },
+}
+
+/// Chunk `bytes` against the table and decide inline vs. recipe.
+fn plan_entry(bytes: &[u8], d: &ChunkDedup) -> Plan {
+    let chunks = chunk_bytes(bytes, &d.cfg);
+    let mut ops: Vec<RecipeOp> = Vec::new();
+    // (fingerprint, op index, offset within that literal's data, len)
+    let mut lits: Vec<([u8; 32], usize, usize, u32)> = Vec::new();
+    let mut hits = 0u64;
+    for c in &chunks {
+        match d.table.get(&c.hash) {
+            Some(&(src, len)) if len == c.len => {
+                hits += 1;
+                if let Some(RecipeOp::Copy { src: psrc, len: plen }) = ops.last_mut() {
+                    if *psrc + *plen as u64 == src
+                        && (*plen as u64 + c.len as u64) <= u32::MAX as u64
+                    {
+                        *plen += c.len;
+                        continue;
+                    }
+                }
+                ops.push(RecipeOp::Copy { src, len: c.len });
+            }
+            _ => {
+                let data = &bytes[c.start..c.start + c.len as usize];
+                if let Some(RecipeOp::Literal(buf)) = ops.last_mut() {
+                    lits.push((c.hash, ops.len() - 1, buf.len(), c.len));
+                    buf.extend_from_slice(data);
+                } else {
+                    ops.push(RecipeOp::Literal(data.to_vec()));
+                    lits.push((c.hash, ops.len() - 1, 0, c.len));
+                }
+            }
+        }
+    }
+    if hits == 0 {
+        return Plan::Inline(chunks);
+    }
+    let r = Recipe { ulen: bytes.len() as u64, ops };
+    let rlen = r.encoded_len();
+    if rlen + RECIPE_MIN_GAIN >= bytes.len() {
+        return Plan::Inline(chunks);
+    }
+    // Literal data positions within the serialized recipe, so literal
+    // chunks can be registered at their final logical offsets.
+    let mut op_data_start = vec![0u64; r.ops.len()];
+    let mut pos = recipe::HEADER_LEN as u64;
+    for (i, op) in r.ops.iter().enumerate() {
+        match op {
+            RecipeOp::Copy { .. } => pos += recipe::COPY_OP_LEN as u64,
+            RecipeOp::Literal(data) => {
+                op_data_start[i] = pos + recipe::LITERAL_OP_OVERHEAD as u64;
+                pos += (recipe::LITERAL_OP_OVERHEAD + data.len()) as u64;
+            }
+        }
+    }
+    let literals = lits
+        .into_iter()
+        .map(|(h, opi, within, len)| (h, op_data_start[opi] + within as u64, len))
+        .collect();
+    Plan::Recipe {
+        bytes: r.encode(),
+        literals,
+        hits,
+        saved: (bytes.len() - rlen) as u64,
+    }
+}
 
 /// Where body bytes go between `add` and `finish`.
 enum BodySink {
@@ -57,6 +177,11 @@ pub struct PackWriter {
     /// Logical offset: equal to `physical` for raw framing; tracks the
     /// *decoded* image for zstd framing (what index offsets refer to).
     logical: u64,
+    /// Pack format version being written: [`VERSION`] normally,
+    /// [`VERSION_CHUNKED`] when chunk dedup is on.
+    version: u8,
+    /// Chunk-dedup state; `None` for plain packs.
+    dedup: Option<ChunkDedup>,
 }
 
 impl PackWriter {
@@ -72,6 +197,34 @@ impl PackWriter {
     pub fn create_with(
         pack_dir: &std::path::Path,
         framing: PackFraming,
+    ) -> Result<PackWriter> {
+        Self::create_impl(pack_dir, framing, VERSION, None)
+    }
+
+    /// Start a chunk-dedup (pack v3) writer: objects whose
+    /// content-defined chunks already occur earlier in this pack are
+    /// stored as `MGCR` recipes. Reads stay bit-exact
+    /// ([`PackFile::get`] reassembles transparently); the sidecar index
+    /// becomes v4 when any recipe is actually written.
+    pub fn create_chunked(
+        pack_dir: &std::path::Path,
+        framing: PackFraming,
+    ) -> Result<PackWriter> {
+        let dedup = ChunkDedup {
+            cfg: ChunkConfig::default(),
+            table: HashMap::new(),
+            shared: 0,
+            bytes_saved: 0,
+            recipes: 0,
+        };
+        Self::create_impl(pack_dir, framing, VERSION_CHUNKED, Some(dedup))
+    }
+
+    fn create_impl(
+        pack_dir: &std::path::Path,
+        framing: PackFraming,
+        version: u8,
+        dedup: Option<ChunkDedup>,
     ) -> Result<PackWriter> {
         std::fs::create_dir_all(pack_dir)
             .with_context(|| format!("creating pack dir {}", pack_dir.display()))?;
@@ -110,11 +263,13 @@ impl PackWriter {
             sink,
             physical: 0,
             logical: 0,
+            version,
+            dedup,
         };
         w.write_physical(PACK_MAGIC)?;
-        w.write_physical(&[VERSION])?;
+        w.write_physical(&[version])?;
         w.write_physical(&[framing.code()])?;
-        w.logical = header_len(VERSION);
+        w.logical = header_len(version);
         Ok(w)
     }
 
@@ -155,23 +310,70 @@ impl PackWriter {
     }
 
     /// Append one object with caller-supplied index metadata (the
-    /// repacker passes globally exact chain depths).
+    /// repacker passes globally exact chain depths). Under a chunked
+    /// writer the stored bytes may be an `MGCR` recipe; the index entry
+    /// records which, and `len`/`offset` always describe the bytes as
+    /// stored.
     pub fn add_with_meta(&mut self, id: ObjectId, bytes: &[u8], meta: EntryMeta) -> Result<()> {
-        self.write_body(&(bytes.len() as u64).to_le_bytes())?;
-        let offset = self.logical;
-        self.write_body(bytes)?;
-        self.depths.insert(id, meta.depth);
-        self.entries.push(IdxEntry {
-            id,
-            offset,
-            len: bytes.len() as u64,
-            meta: Some(meta),
-        });
+        let plan = match &self.dedup {
+            Some(d) => plan_entry(bytes, d),
+            None => Plan::Passthrough,
+        };
+        match plan {
+            Plan::Passthrough => {
+                self.write_body(&(bytes.len() as u64).to_le_bytes())?;
+                let offset = self.logical;
+                self.write_body(bytes)?;
+                self.push_entry(id, offset, bytes.len() as u64, meta, false);
+            }
+            Plan::Inline(chunks) => {
+                self.write_body(&(bytes.len() as u64).to_le_bytes())?;
+                let offset = self.logical;
+                self.write_body(bytes)?;
+                if let Some(d) = &mut self.dedup {
+                    for c in &chunks {
+                        d.table.entry(c.hash).or_insert((offset + c.start as u64, c.len));
+                    }
+                }
+                self.push_entry(id, offset, bytes.len() as u64, meta, false);
+            }
+            Plan::Recipe { bytes: rbytes, literals, hits, saved } => {
+                self.write_body(&(rbytes.len() as u64).to_le_bytes())?;
+                let offset = self.logical;
+                self.write_body(&rbytes)?;
+                if let Some(d) = &mut self.dedup {
+                    for (h, rel, len) in &literals {
+                        d.table.entry(*h).or_insert((offset + rel, *len));
+                    }
+                    d.shared += hits;
+                    d.bytes_saved += saved;
+                    d.recipes += 1;
+                }
+                OBS_CHUNKS_SHARED.add(hits);
+                OBS_BYTES_SAVED.add(saved);
+                self.push_entry(id, offset, rbytes.len() as u64, meta, true);
+            }
+        }
         Ok(())
+    }
+
+    fn push_entry(&mut self, id: ObjectId, offset: u64, len: u64, meta: EntryMeta, recipe: bool) {
+        self.depths.insert(id, meta.depth);
+        self.entries.push(IdxEntry { id, offset, len, meta: Some(meta), recipe });
     }
 
     pub fn object_count(&self) -> usize {
         self.entries.len()
+    }
+
+    /// Chunk-dedup totals so far: (shared chunk copies, bytes saved vs.
+    /// inline storage, recipe entries written). All zero for plain
+    /// writers.
+    pub fn dedup_stats(&self) -> (u64, u64, usize) {
+        match &self.dedup {
+            Some(d) => (d.shared, d.bytes_saved, d.recipes),
+            None => (0, 0, 0),
+        }
     }
 
     /// Seal the pack: flush the framed body (zstd), write the count
@@ -182,7 +384,7 @@ impl PackWriter {
             BodySink::Raw => {}
             #[cfg(feature = "zstd")]
             BodySink::Zstd { enc, path, ulen } => {
-                debug_assert_eq!(ulen, self.logical - header_len(VERSION));
+                debug_assert_eq!(ulen, self.logical - header_len(self.version));
                 drop(enc.finish().context("sealing zstd pack frame")?);
                 self.write_physical(&ulen.to_le_bytes())?;
                 // Splice the compressed frame through the running

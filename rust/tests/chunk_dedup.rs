@@ -1,0 +1,287 @@
+//! Integration: similarity-driven repack + content-defined chunk dedup
+//! (`mgit repack --similarity`, pack v3, `MGCR` recipes).
+//!
+//! Two model lineages whose checkpoints share most of their bytes but
+//! none of their object ids (every tensor is perturbed, so CAS dedup
+//! never fires) are repacked twice: once with the classic lineage-only
+//! pass and once with `--similarity`/chunk dedup. The chunked pack must
+//! be strictly smaller, every checkpoint must stay bit-exact — including
+//! when read back through `mgit serve` — and `verify-pack` must accept
+//! the v3 pack. A later default incremental repack writes a v2 pack next
+//! to the v3 one, pinning mixed-generation readability.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::{Path, PathBuf};
+
+use mgit::checkpoint::{Checkpoint, ModelZoo};
+use mgit::delta::{self, CompressConfig, NativeKernel};
+use mgit::ops::serve::Server;
+use mgit::ops::{self, Repo};
+use mgit::store::pack::RepackMode;
+use mgit::tensor::f32_to_bytes;
+use mgit::util::rng::Rng;
+
+const MANIFEST: &str = r#"{
+  "vocab": 16, "max_seq": 4, "n_classes": 2, "batch": 2,
+  "delta_chunk": 1024,
+  "special_tokens": {"cls": 14, "mask": 15, "ignore_label": -100},
+  "archs": {"t": {
+      "d_model": 4, "n_layers": 1, "n_heads": 1, "d_ff": 8,
+      "param_count": 4096,
+      "layout": [
+        {"name":"w.a","shape":[4096],"offset":0,"size":4096,"init":"normal"}
+      ],
+      "dag": {"nodes": [], "edges": []}
+  }},
+  "artifacts": {"t": {}},
+  "delta_kernels": {"quant": "q", "dequant": "d"}
+}"#;
+
+const VERSIONS: usize = 3;
+
+fn tmp_repo(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("mgit-cdedup-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn zoo() -> ModelZoo {
+    ModelZoo::from_json(&mgit::util::json::parse(MANIFEST).unwrap()).unwrap()
+}
+
+/// Append a lineage `<family>/v1..vN` rooted at `root_ck` (stored raw,
+/// deltas for the rest).
+fn add_lineage(repo: &mut Repo, zoo: &ModelZoo, family: &str, root_ck: Checkpoint, seed: u64) {
+    let spec = zoo.arch("t").unwrap();
+    let (sm, _) = delta::store_raw(&repo.store, spec, &root_ck).unwrap();
+    let idx = repo.graph.add_node(&format!("{family}/v1"), "t").unwrap();
+    repo.graph.node_mut(idx).stored = Some(sm.clone());
+    let mut prev = (root_ck, sm);
+    let mut prev_idx = idx;
+    for v in 1..VERSIONS as u64 {
+        let mut rng = Rng::new(seed + v);
+        let child = Checkpoint {
+            arch: prev.0.arch.clone(),
+            flat: prev.0.flat.iter().map(|&x| x + rng.normal_f32(0.0, 3e-4)).collect(),
+        };
+        let cand = delta::prepare_delta(
+            &repo.store,
+            spec,
+            &child,
+            spec,
+            &prev.0,
+            &prev.1,
+            CompressConfig::default(),
+            &NativeKernel,
+        )
+        .unwrap();
+        delta::commit(&repo.store, &cand).unwrap();
+        let n = repo.graph.add_node(&format!("{family}/v{}", v + 1), "t").unwrap();
+        repo.graph.node_mut(n).stored = Some(cand.model.clone());
+        repo.graph.add_version_edge(prev_idx, n).unwrap();
+        prev = (cand.checkpoint, cand.model);
+        prev_idx = n;
+    }
+}
+
+/// Two lineages with heavy cross-lineage byte sharing but no identical
+/// objects: lineage `b`'s root is lineage `a`'s root with a sparse
+/// perturbation touching every 1024-element storage chunk.
+fn build_repo(dir: &Path, zoo: &ModelZoo) {
+    let spec = zoo.arch("t").unwrap();
+    Repo::init(dir).unwrap();
+    let mut repo = Repo::open(dir).unwrap();
+    let a_root = Checkpoint::init(spec, 1);
+    let mut b_flat = a_root.flat.clone();
+    for i in (0..b_flat.len()).step_by(512) {
+        b_flat[i] += 0.25;
+    }
+    let b_root = Checkpoint { arch: a_root.arch.clone(), flat: b_flat };
+    add_lineage(&mut repo, zoo, "a", a_root, 100);
+    add_lineage(&mut repo, zoo, "b", b_root, 200);
+    repo.save().unwrap();
+}
+
+/// Every node's resolved flat checkpoint, as bytes.
+fn checkpoints(dir: &Path, zoo: &ModelZoo) -> HashMap<String, Vec<u8>> {
+    let repo = Repo::open(dir).unwrap();
+    let mut out = HashMap::new();
+    for node in &repo.graph.nodes {
+        let ck =
+            delta::load(&repo.store, zoo, node.stored.as_ref().unwrap(), &NativeKernel).unwrap();
+        out.insert(node.name.clone(), f32_to_bytes(&ck.flat));
+    }
+    out
+}
+
+fn full_repack(dir: &Path, similarity: Option<f64>) -> ops::RepackReport {
+    let req = ops::RepackRequest {
+        mode: RepackMode::Full,
+        similarity,
+        chunk_dedup: similarity.is_some(),
+        ..Default::default()
+    };
+    req.run(&mut Repo::open(dir).unwrap()).unwrap()
+}
+
+fn http_get(addr: SocketAddr, path: &str) -> (u16, Vec<u8>) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(
+        format!("GET {path} HTTP/1.1\r\nHost: localhost\r\nConnection: close\r\n\r\n")
+            .as_bytes(),
+    )
+    .unwrap();
+    s.flush().unwrap();
+    let mut buf = Vec::new();
+    s.read_to_end(&mut buf).unwrap();
+    let head_end =
+        buf.windows(4).position(|w| w == b"\r\n\r\n").expect("malformed response") + 4;
+    let head = String::from_utf8_lossy(&buf[..head_end]).into_owned();
+    let status: u16 =
+        head.split_whitespace().nth(1).and_then(|c| c.parse().ok()).expect("bad status line");
+    (status, buf[head_end..].to_vec())
+}
+
+/// The tentpole acceptance check: on cross-lineage shared tensors a
+/// `--similarity` repack packs strictly fewer bytes than the classic
+/// lineage-only pass, while every checkpoint stays bit-exact and the v3
+/// pack verifies.
+#[test]
+fn chunked_repack_reduces_packed_bytes_bit_exactly() {
+    let zoo = zoo();
+    let dir = tmp_repo("size");
+    build_repo(&dir, &zoo);
+    let want = checkpoints(&dir, &zoo);
+
+    // Classic lineage-only full repack first.
+    let r1 = full_repack(&dir, None);
+    let size_plain = std::fs::metadata(r1.pack.pack_path.as_ref().unwrap()).unwrap().len();
+    assert_eq!(r1.pack.recipes, 0, "plain repack must not write recipes");
+
+    // Similarity + chunk-dedup full rewrite of the same object set.
+    let r2 = full_repack(&dir, Some(0.5));
+    let size_chunked = std::fs::metadata(r2.pack.pack_path.as_ref().unwrap()).unwrap().len();
+    assert!(r2.pack.recipes > 0, "cross-lineage sharing must produce recipes: {:?}", {
+        (r2.pack.recipes, r2.pack.chunks_shared)
+    });
+    assert!(r2.pack.chunks_shared > 0);
+    assert!(r2.pack.chunk_bytes_saved > 0);
+    assert!(
+        size_chunked < size_plain,
+        "chunk dedup must shrink the pack: {size_chunked} >= {size_plain}"
+    );
+
+    // Bit-exact content after both rewrites.
+    let got = checkpoints(&dir, &zoo);
+    assert_eq!(got.len(), want.len());
+    for (name, bytes) in &want {
+        assert_eq!(&got[name], bytes, "checkpoint {name} changed");
+    }
+
+    // verify-pack accepts the v3 pack end-to-end.
+    let repo = Repo::open(&dir).unwrap();
+    let vp = ops::VerifyPackRequest.run(&repo).unwrap();
+    assert!(vp.packs.iter().all(|p| p.structure_ok), "{:?}", vp.object_problems);
+    assert!(vp.object_problems.is_empty(), "{:?}", vp.object_problems);
+    assert!(vp.packs.iter().any(|p| p.version == 3), "expected a v3 pack");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// `mgit serve` reads recipe-backed objects transparently: every
+/// `/checkpoint/<node>` stream off a chunked pack is byte-identical to
+/// the library reconstruction, and `/object/<id>` to `Store::get`.
+#[test]
+fn chunked_pack_serves_checkpoints_bit_exactly() {
+    let zoo = zoo();
+    let dir = tmp_repo("serve");
+    build_repo(&dir, &zoo);
+    let want = checkpoints(&dir, &zoo);
+    let r = full_repack(&dir, Some(0.5));
+    assert!(r.pack.recipes > 0, "serve test needs actual recipes in the pack");
+
+    let repo = Repo::open(&dir).unwrap();
+    let object_id = repo.graph.by_name("b/v1").unwrap().stored.as_ref().unwrap().params[0].1;
+    let object_bytes = repo.store.get(&object_id).unwrap();
+
+    let server = Server::bind(Repo::open(&dir).unwrap(), Some(zoo.clone()), 0, 2).unwrap();
+    let addr = server.local_addr().unwrap();
+    let handle = server.handle().unwrap();
+    let srv = std::thread::spawn(move || server.serve().unwrap());
+
+    for (name, bytes) in &want {
+        let (code, body) = http_get(addr, &format!("/checkpoint/{name}"));
+        assert_eq!(code, 200, "checkpoint {name}");
+        assert_eq!(&body, bytes, "checkpoint {name} not bit-exact over HTTP");
+    }
+    let (code, body) = http_get(addr, &format!("/object/{}", object_id.hex()));
+    assert_eq!(code, 200);
+    assert_eq!(body, object_bytes, "/object body differs from Store::get");
+
+    handle.shutdown();
+    srv.join().unwrap();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// A default incremental repack after a chunked full rewrite seals new
+/// objects into a v2 pack next to the v3 pack; both generations stay
+/// readable and verifiable.
+#[test]
+fn mixed_pack_generations_stay_readable() {
+    let zoo = zoo();
+    let dir = tmp_repo("mixed");
+    build_repo(&dir, &zoo);
+    full_repack(&dir, Some(0.5));
+
+    // Grow lineage `a` past the chunked pack, then pack the new loose
+    // objects with the default (plain v2) incremental repack.
+    {
+        let spec = zoo.arch("t").unwrap();
+        let mut repo = Repo::open(&dir).unwrap();
+        let tip_name = format!("a/v{VERSIONS}");
+        let tip = repo.graph.by_name(&tip_name).unwrap().clone();
+        let tip_ck =
+            delta::load(&repo.store, &zoo, tip.stored.as_ref().unwrap(), &NativeKernel).unwrap();
+        let mut rng = Rng::new(77);
+        let child = Checkpoint {
+            arch: tip_ck.arch.clone(),
+            flat: tip_ck.flat.iter().map(|&x| x + rng.normal_f32(0.0, 3e-4)).collect(),
+        };
+        let cand = delta::prepare_delta(
+            &repo.store,
+            spec,
+            &child,
+            spec,
+            &tip_ck,
+            tip.stored.as_ref().unwrap(),
+            CompressConfig::default(),
+            &NativeKernel,
+        )
+        .unwrap();
+        delta::commit(&repo.store, &cand).unwrap();
+        let tip_idx = repo.graph.idx(&tip_name).unwrap();
+        let n = repo.graph.add_node(&format!("a/v{}", VERSIONS + 1), "t").unwrap();
+        repo.graph.node_mut(n).stored = Some(cand.model.clone());
+        repo.graph.add_version_edge(tip_idx, n).unwrap();
+        repo.save().unwrap();
+        ops::RepackRequest::default().run(&mut repo).unwrap();
+    }
+
+    let repo = Repo::open(&dir).unwrap();
+    let vp = ops::VerifyPackRequest.run(&repo).unwrap();
+    assert!(vp.packs.len() >= 2, "expected v3 + v2 pack generations");
+    assert!(vp.packs.iter().any(|p| p.version == 3));
+    assert!(vp.packs.iter().any(|p| p.version == 2));
+    assert!(vp.packs.iter().all(|p| p.structure_ok));
+    assert!(vp.object_problems.is_empty(), "{:?}", vp.object_problems);
+
+    // Every checkpoint — across both pack generations — still resolves.
+    let all = checkpoints(&dir, &zoo);
+    assert_eq!(all.len(), 2 * VERSIONS + 1);
+    for (name, bytes) in &all {
+        assert_eq!(bytes.len(), 4096 * 4, "checkpoint {name} has wrong size");
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}

@@ -1,0 +1,128 @@
+#!/usr/bin/env python3
+"""Dependency-free markdown link checker for this repository.
+
+Walks every tracked ``*.md`` file and verifies that
+
+* relative markdown links ``[text](path)`` point at files or directories
+  that exist (query strings are rejected, ``#anchors`` are split off),
+* intra-document and cross-document ``#anchor`` fragments resolve to a
+  heading in the target file (GitHub slug rules: lowercase, spaces to
+  dashes, punctuation dropped),
+
+and exits nonzero listing every broken link. External links
+(``http://``, ``https://``, ``mailto:``) and code spans are ignored.
+Used by CI (see ``.github/workflows/ci.yml``) so stale cross-references
+in README/docs fail the build instead of rotting silently.
+"""
+
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SKIP_DIRS = {".git", "target", "node_modules", ".github"}
+
+# [text](target) — but not images' alt brackets (images are links too,
+# same rules apply) and not footnote refs.
+LINK_RE = re.compile(r"\[[^\]^\[]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+HEADING_RE = re.compile(r"^(#{1,6})\s+(.*)$")
+CODE_FENCE_RE = re.compile(r"^(```|~~~)")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: strip markup, lowercase, spaces to dashes."""
+    text = re.sub(r"`([^`]*)`", r"\1", heading)  # inline code
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)  # links
+    text = text.strip().lower()
+    text = re.sub(r"[^\w\- ]", "", text)  # drop punctuation
+    return text.replace(" ", "-")
+
+
+def md_files():
+    for dirpath, dirnames, filenames in os.walk(ROOT):
+        dirnames[:] = [d for d in dirnames if d not in SKIP_DIRS]
+        for f in filenames:
+            if f.endswith(".md"):
+                yield os.path.join(dirpath, f)
+
+
+def headings_of(path: str):
+    """Set of anchor slugs in a markdown file (fenced code excluded)."""
+    slugs: dict = {}
+    in_fence = False
+    with open(path, encoding="utf-8") as fh:
+        for line in fh:
+            if CODE_FENCE_RE.match(line.strip()):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            m = HEADING_RE.match(line)
+            if not m:
+                continue
+            slug = github_slug(m.group(2))
+            # Duplicate headings get -1, -2... suffixes on GitHub.
+            n = slugs.get(slug, 0)
+            slugs[slug] = n + 1
+    out = set()
+    for slug, count in slugs.items():
+        out.add(slug)
+        for i in range(1, count):
+            out.add(f"{slug}-{i}")
+    return out
+
+
+def links_of(path: str):
+    """(line_no, target) for every markdown link, fenced code excluded."""
+    out = []
+    in_fence = False
+    with open(path, encoding="utf-8") as fh:
+        for ln, line in enumerate(fh, 1):
+            if CODE_FENCE_RE.match(line.strip()):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            # Drop inline code spans before matching links.
+            stripped = re.sub(r"`[^`]*`", "", line)
+            for m in LINK_RE.finditer(stripped):
+                out.append((ln, m.group(1)))
+    return out
+
+
+def main() -> int:
+    heading_cache = {}
+    problems = []
+    for md in md_files():
+        rel_md = os.path.relpath(md, ROOT)
+        for ln, target in links_of(md):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            if target.startswith("#"):
+                dest, frag = md, target[1:]
+            else:
+                path_part, _, frag = target.partition("#")
+                dest = os.path.normpath(os.path.join(os.path.dirname(md), path_part))
+                if not os.path.exists(dest):
+                    problems.append(f"{rel_md}:{ln}: broken link -> {target}")
+                    continue
+                if frag and os.path.isdir(dest):
+                    problems.append(f"{rel_md}:{ln}: anchor on a directory -> {target}")
+                    continue
+            if frag and dest.endswith(".md"):
+                if dest not in heading_cache:
+                    heading_cache[dest] = headings_of(dest)
+                if frag.lower() not in heading_cache[dest]:
+                    problems.append(f"{rel_md}:{ln}: missing anchor -> {target}")
+    if problems:
+        print(f"{len(problems)} broken markdown link(s):")
+        for p in problems:
+            print(f"  {p}")
+        return 1
+    print("all markdown links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
